@@ -1,0 +1,68 @@
+//! Accelerated parameter sweep through the coordinator: many benchmark
+//! instances batched through the AOT-compiled XLA fabric kernel, with
+//! the native-ALU path as the baseline — the three-layer system working
+//! end to end (Rust router/batcher → PJRT → Pallas-lowered HLO).
+//!
+//! ```sh
+//! cargo run --release --example accel_sweep -- \
+//!     [--requests 48] [--n 12] [--workers 2] [--batch 8]
+//! ```
+
+use dataflow_accel::bench_defs::BenchId;
+use dataflow_accel::coordinator::{Coordinator, Engine, Request};
+use dataflow_accel::util::args::Args;
+use std::time::Instant;
+
+fn sweep(engine: Engine, requests: usize, n: usize, workers: usize, batch: usize) -> (f64, u64) {
+    let c = Coordinator::start(workers, engine, Some("artifacts"), batch)
+        .expect("coordinator start");
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            c.submit(Request {
+                bench: BenchId::ALL[i % BenchId::ALL.len()],
+                n,
+                seed: i as u64,
+            })
+        })
+        .collect();
+    let mut verified = 0u64;
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        assert!(
+            resp.verified,
+            "{:?} failed verification on {:?} engine",
+            resp.request, engine
+        );
+        verified += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "  {:?}: {}",
+        engine,
+        c.metrics.summary()
+    );
+    c.shutdown();
+    (requests as f64 / dt, verified)
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &[]);
+    let requests = args.get_usize("requests", 48);
+    let n = args.get_usize("n", 12);
+    let workers = args.get_usize("workers", 2);
+    let batch = args.get_usize("batch", 8);
+
+    println!("== sweep: {requests} requests over all 6 benchmarks, n={n} ==");
+    let (native_rps, v1) = sweep(Engine::Native, requests, n, workers, batch);
+    let (xla_rps, v2) = sweep(Engine::Xla, requests, n, workers, batch);
+    assert_eq!(v1, requests as u64);
+    assert_eq!(v2, requests as u64);
+    println!();
+    println!("  native ALU : {native_rps:>8.1} req/s");
+    println!("  XLA fabric : {xla_rps:>8.1} req/s");
+    println!(
+        "  note: on CPU-PJRT the XLA path pays per-tick dispatch; its win \
+         condition is large batches of wide graphs (see EXPERIMENTS.md §offload)."
+    );
+}

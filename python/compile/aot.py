@@ -1,0 +1,69 @@
+"""AOT export: lower `fabric_step` to HLO text for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts \
+        --shapes 8x128,64x128,8x256
+
+Each shape BxN produces `fabric_step_b{B}_n{N}.hlo.txt` plus a
+`manifest.txt` the Rust artifact registry reads (one `B N filename` row
+per line).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_shape(out_dir: str, batch: int, nodes: int) -> str:
+    fn = lambda op, a, b, f: (model.fabric_step(op, a, b, f),)
+    lowered = jax.jit(fn).lower(*model.example_args(batch, nodes))
+    text = to_hlo_text(lowered)
+    name = f"fabric_step_b{batch}_n{nodes}.hlo.txt"
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    return name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default="8x128,64x128,8x256",
+        help="comma-separated BxN artifact shapes",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    rows = []
+    for spec in args.shapes.split(","):
+        b, n = spec.lower().split("x")
+        batch, nodes = int(b), int(n)
+        name = export_shape(args.out_dir, batch, nodes)
+        rows.append(f"{batch} {nodes} {name}")
+        print(f"wrote {name}")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(rows) + "\n")
+    print(f"manifest: {len(rows)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

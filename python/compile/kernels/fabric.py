@@ -1,0 +1,139 @@
+"""Layer 1 — the Pallas fabric-ALU kernel.
+
+The paper's FPGA evaluates every operator's function unit in parallel on
+each clock edge. On a TPU-shaped target that spatial parallelism becomes
+SIMD batch parallelism: one fabric tick is a dense elementwise update over
+a ``(batch, nodes)`` block of operator state (see DESIGN.md
+§Hardware-Adaptation).
+
+This kernel computes, for every (instance, node) slot::
+
+    z[i, n] = fire[i, n] ? alu(opcode[n], a[i, n], b[i, n]) : 0
+
+with 16-bit two's-complement wrap-around semantics carried in int32 lanes
+(int32 is the VPU-native width; the wrap keeps numerics identical to the
+Rust coordinator's ``i16`` arithmetic — property-tested on both sides).
+
+Tiling: the grid is ``(B/BLOCK_B, N/BLOCK_N)``; each program instance
+loads one ``(BLOCK_B, BLOCK_N)`` tile of ``a``/``b``/``fire`` plus the
+matching ``(BLOCK_N,)`` opcode row into VMEM, applies a branch-free
+``jnp.select`` over the opcode lanes (the VPU has no divergent branches;
+select lanes are the TPU idiom for the paper's per-operator function
+decode), and stores the result tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU numbers are estimated structurally in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Opcode table — must match `Op::fabric_opcode` in rust/src/dfg/op.rs.
+OP_ADD = 0
+OP_SUB = 1
+OP_MUL = 2
+OP_DIV = 3
+OP_AND = 4
+OP_OR = 5
+OP_XOR = 6
+OP_SHL = 7
+OP_SHR = 8
+OP_GT = 9
+OP_GE = 10
+OP_LT = 11
+OP_LE = 12
+OP_EQ = 13
+OP_DF = 14
+OP_NOT = 15
+OP_PASS = 16
+OP_CONST = 17
+N_OPCODES = 18
+
+# Default VMEM tile: 8×128 is the VPU lane layout; a (8, 128) int32 tile
+# is 4 KiB, and the kernel touches 4 input tiles + 1 output tile ≈ 20 KiB
+# per grid step — far under the ~16 MiB VMEM budget, leaving room for
+# double-buffering (see DESIGN.md §Perf).
+BLOCK_B = 8
+BLOCK_N = 128
+
+
+def wrap16(x):
+    """Wrap an int32 lane to 16-bit two's-complement."""
+    return ((x + 0x8000) & 0xFFFF) - 0x8000
+
+
+def alu_lanes(opcode, a, b):
+    """Branch-free ALU: compute every opcode lane, select by opcode.
+
+    `opcode` broadcasts over the batch dimension. Shift counts are masked
+    to 4 bits, division by zero yields 0, and every arithmetic result is
+    wrapped to 16 bits — identical to `Op::eval2` on the Rust side.
+    """
+    shift = b & 0xF
+    safe_b = jnp.where(b == 0, 1, b)
+    # Truncating division (C semantics), not floor division.
+    q = jnp.where(b == 0, 0, jnp.trunc(a / safe_b).astype(jnp.int32))
+    lanes = [
+        wrap16(a + b),                         # ADD
+        wrap16(a - b),                         # SUB
+        wrap16(a * b),                         # MUL
+        wrap16(q),                             # DIV
+        a & b,                                 # AND
+        a | b,                                 # OR
+        a ^ b,                                 # XOR
+        wrap16(a << shift),                    # SHL
+        a >> shift,                            # SHR (arithmetic)
+        (a > b).astype(jnp.int32),             # GT
+        (a >= b).astype(jnp.int32),            # GE
+        (a < b).astype(jnp.int32),             # LT
+        (a <= b).astype(jnp.int32),            # LE
+        (a == b).astype(jnp.int32),            # EQ
+        (a != b).astype(jnp.int32),            # DF
+        wrap16(~a),                            # NOT
+        a,                                     # PASS
+        a,                                     # CONST (value pre-loaded in a)
+    ]
+    return jnp.select([opcode == k for k in range(N_OPCODES)], lanes, 0)
+
+
+def _fabric_kernel(op_ref, a_ref, b_ref, fire_ref, z_ref):
+    """Pallas kernel body: one (BLOCK_B, BLOCK_N) tile."""
+    opcode = op_ref[...][None, :]  # (1, BLOCK_N) broadcast over batch
+    a = a_ref[...]
+    b = b_ref[...]
+    fire = fire_ref[...]
+    z = alu_lanes(opcode, a, b)
+    z_ref[...] = jnp.where(fire != 0, z, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n"))
+def fabric_alu_step(opcode, a, b, fire, *, block_b=BLOCK_B, block_n=BLOCK_N):
+    """One fabric ALU tick over a (batch, nodes) state block.
+
+    Args:
+      opcode: int32[N] per-node opcode (see table above).
+      a, b: int32[B, N] operand registers (``dadoa``/``dadob``).
+      fire: int32[B, N] fire mask (1 where the operator's FSM is in S2).
+
+    Returns:
+      int32[B, N] result registers (``dadoz``), 0 where not fired.
+    """
+    bsz, n = a.shape
+    assert n % block_n == 0 and bsz % block_b == 0, (bsz, n, block_b, block_n)
+    grid = (bsz // block_b, n // block_n)
+    return pl.pallas_call(
+        _fabric_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.int32),
+        interpret=True,  # CPU-PJRT cannot execute Mosaic custom-calls
+    )(opcode, a, b, fire)

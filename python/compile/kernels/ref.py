@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the fabric ALU kernel.
+
+Deliberately written without Pallas and without lane tricks: a
+straightforward per-opcode computation that the kernel must match
+bit-for-bit. pytest + hypothesis drive the comparison across shapes,
+edge values and opcodes.
+"""
+
+import jax.numpy as jnp
+
+from . import fabric as F
+
+
+def wrap16(x):
+    return ((x + 0x8000) & 0xFFFF) - 0x8000
+
+
+def ref_alu(opcode, a, b):
+    """Reference ALU on int32 arrays; opcode broadcasts over batch."""
+    opcode = jnp.broadcast_to(opcode[None, :], a.shape)
+    shift = b & 0xF
+    safe_b = jnp.where(b == 0, 1, b)
+    q = jnp.where(b == 0, 0, jnp.trunc(a / safe_b).astype(jnp.int32))
+    out = jnp.zeros_like(a)
+    table = {
+        F.OP_ADD: wrap16(a + b),
+        F.OP_SUB: wrap16(a - b),
+        F.OP_MUL: wrap16(a * b),
+        F.OP_DIV: wrap16(q),
+        F.OP_AND: a & b,
+        F.OP_OR: a | b,
+        F.OP_XOR: a ^ b,
+        F.OP_SHL: wrap16(a << shift),
+        F.OP_SHR: a >> shift,
+        F.OP_GT: (a > b).astype(jnp.int32),
+        F.OP_GE: (a >= b).astype(jnp.int32),
+        F.OP_LT: (a < b).astype(jnp.int32),
+        F.OP_LE: (a <= b).astype(jnp.int32),
+        F.OP_EQ: (a == b).astype(jnp.int32),
+        F.OP_DF: (a != b).astype(jnp.int32),
+        F.OP_NOT: wrap16(~a),
+        F.OP_PASS: a,
+        F.OP_CONST: a,
+    }
+    for code, val in table.items():
+        out = jnp.where(opcode == code, val, out)
+    return out
+
+
+def ref_step(opcode, a, b, fire):
+    """Reference for `fabric_alu_step`."""
+    z = ref_alu(opcode, a, b)
+    return jnp.where(fire != 0, z, 0)

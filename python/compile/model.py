@@ -1,0 +1,56 @@
+"""Layer 2 — the JAX fabric-step computation graph.
+
+`fabric_step` is the computation the Rust coordinator AOT-loads and calls
+on its hot path: one synchronous tick of the whole operator fabric for a
+batch of graph instances. It wraps the Layer-1 Pallas kernel
+(`kernels.fabric`) so the kernel lowers into the same HLO module.
+
+`fabric_step_k` additionally rolls K ALU ticks into one XLA call with
+`lax.scan`, consuming pre-gathered operand sequences — used by the
+offload benchmark to amortize host↔PJRT round trips when the coordinator
+can batch several deterministic ticks (pure pipeline segments).
+
+Python in this package runs only at build time (`make artifacts`); the
+request path is pure Rust + PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fabric
+
+
+def fabric_step(opcode, a, b, fire):
+    """One fabric tick. See `kernels.fabric.fabric_alu_step`."""
+    return fabric.fabric_alu_step(opcode, a, b, fire)
+
+
+def fabric_step_k(opcode, a_seq, b_seq, fire_seq):
+    """K pre-gathered fabric ticks in one call.
+
+    Args:
+      opcode: int32[N].
+      a_seq, b_seq, fire_seq: int32[K, B, N].
+
+    Returns:
+      int32[K, B, N] results, one slice per tick.
+    """
+
+    def body(carry, xs):
+        a, b, fire = xs
+        z = fabric.fabric_alu_step(opcode, a, b, fire)
+        return carry, z
+
+    _, zs = jax.lax.scan(body, 0, (a_seq, b_seq, fire_seq))
+    return zs
+
+
+def example_args(batch, nodes):
+    """ShapeDtypeStructs for AOT lowering of `fabric_step`."""
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((nodes,), i32),
+        jax.ShapeDtypeStruct((batch, nodes), i32),
+        jax.ShapeDtypeStruct((batch, nodes), i32),
+        jax.ShapeDtypeStruct((batch, nodes), i32),
+    )

@@ -1,0 +1,59 @@
+"""L2 model shape checks and the AOT export path."""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import fabric as F
+from compile.kernels import ref
+
+
+def test_fabric_step_shapes():
+    B, N = F.BLOCK_B, F.BLOCK_N
+    op = jnp.zeros((N,), jnp.int32)
+    a = jnp.ones((B, N), jnp.int32)
+    b = jnp.ones((B, N), jnp.int32)
+    fire = jnp.ones((B, N), jnp.int32)
+    z = model.fabric_step(op, a, b, fire)
+    assert z.shape == (B, N)
+    assert z.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(z), 2)
+
+
+def test_fabric_step_k_matches_loop():
+    rng = np.random.default_rng(3)
+    K, B, N = 4, F.BLOCK_B, F.BLOCK_N
+    op = rng.integers(0, F.N_OPCODES, size=(N,)).astype(np.int32)
+    a = rng.integers(-1000, 1000, size=(K, B, N)).astype(np.int32)
+    b = rng.integers(-1000, 1000, size=(K, B, N)).astype(np.int32)
+    fire = np.ones((K, B, N), dtype=np.int32)
+    zs = model.fabric_step_k(jnp.asarray(op), jnp.asarray(a), jnp.asarray(b), jnp.asarray(fire))
+    for k in range(K):
+        want = ref.ref_step(jnp.asarray(op), jnp.asarray(a[k]), jnp.asarray(b[k]), jnp.asarray(fire[k]))
+        np.testing.assert_array_equal(np.asarray(zs[k]), np.asarray(want))
+
+
+def test_aot_export_emits_hlo_text():
+    with tempfile.TemporaryDirectory() as d:
+        name = aot.export_shape(d, 8, 128)
+        path = os.path.join(d, name)
+        text = open(path).read()
+        assert "HloModule" in text
+        assert "s32[8,128]" in text
+
+
+def test_aot_cli_writes_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", d, "--shapes", "8x128"],
+            check=True,
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+        )
+        manifest = open(os.path.join(d, "manifest.txt")).read().strip().splitlines()
+        assert manifest == ["8 128 fabric_step_b8_n128.hlo.txt"]
+        assert os.path.exists(os.path.join(d, "fabric_step_b8_n128.hlo.txt"))

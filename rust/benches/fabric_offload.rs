@@ -1,0 +1,81 @@
+//! Bench: the XLA fabric-offload path — raw PJRT step latency per
+//! artifact shape, and batched-sweep throughput of the XLA engine vs the
+//! native ALU engine. §Perf's offload numbers come from here.
+
+use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::coordinator::{run_batch_native, run_batch_xla};
+use dataflow_accel::runtime::{FabricBatch, FabricRuntime};
+use dataflow_accel::util::bench::{report, run, BenchCfg};
+use dataflow_accel::util::Rng;
+
+fn main() {
+    println!("=== fabric offload ===");
+    let Ok(rt) = FabricRuntime::load("artifacts") else {
+        println!("artifacts not built (run `make artifacts`); skipping");
+        return;
+    };
+    let cfg = BenchCfg {
+        warmup_iters: 5,
+        samples: 25,
+        iters_per_sample: 4,
+    };
+
+    // Raw PJRT dispatch+execute latency per artifact shape.
+    for (b, n) in rt.shapes() {
+        let mut rng = Rng::new(1);
+        let mut fb = FabricBatch::zeroed(b, n);
+        for i in 0..n {
+            fb.opcode[i] = (i % 15) as i32;
+        }
+        for s in 0..b * n {
+            fb.a[s] = rng.word(-1000, 1000) as i32;
+            fb.b[s] = rng.word(-1000, 1000) as i32;
+            fb.fire[s] = 1;
+        }
+        let m = run(&format!("pjrt_step/{b}x{n}"), cfg, || {
+            rt.step(&fb).unwrap().len()
+        });
+        let slots = (b * n) as f64;
+        println!(
+            "    → {:.1} M ALU slots/s",
+            slots / (m.median_ns * 1e-9) / 1e6
+        );
+        report(&m);
+    }
+
+    // Batched benchmark sweep: native vs XLA engine, same workloads.
+    for bench in [BenchId::Fibonacci, BenchId::DotProd, BenchId::VectorSum] {
+        let g = bench_defs::build(bench);
+        for batch in [8usize, 64] {
+            let cfgs: Vec<_> = (0..batch)
+                .map(|s| bench_defs::workload(bench, 12, s as u64).sim_config())
+                .collect();
+            let mn = run(
+                &format!("batch_native/{}/b{}", bench.slug(), batch),
+                BenchCfg {
+                    warmup_iters: 2,
+                    samples: 10,
+                    iters_per_sample: 1,
+                },
+                || run_batch_native(&g, &cfgs).len(),
+            );
+            report(&mn);
+            let mx = run(
+                &format!("batch_xla/{}/b{}", bench.slug(), batch),
+                BenchCfg {
+                    warmup_iters: 2,
+                    samples: 10,
+                    iters_per_sample: 1,
+                },
+                || run_batch_xla(&g, &cfgs, &rt).unwrap().len(),
+            );
+            report(&mx);
+            println!(
+                "    → xla/native ratio {:.2}× (instances {}, graph {} nodes)",
+                mx.median_ns / mn.median_ns,
+                batch,
+                g.n_nodes()
+            );
+        }
+    }
+}

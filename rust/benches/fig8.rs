@@ -1,0 +1,52 @@
+//! Bench: the four Fig. 8 panels (FF / LUT / Slices / Fmax bar series)
+//! plus the latency-cycles comparison that backs the paper's
+//! "acceleration" claim — execution cycles of the dataflow fabric
+//! (measured on the cycle-accurate FSM engine) against the sequential
+//! C-to-Verilog schedule and the LALP pipeline models, across workload
+//! sizes. Absolute winners follow each system's Fmax × cycles.
+
+use dataflow_accel::baselines::{ctv, kernel_spec, lalp};
+use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::estimate::estimate;
+use dataflow_accel::report;
+use dataflow_accel::sim::run_fsm;
+
+fn main() {
+    println!("=== Fig. 8 panels (CSV) ===");
+    print!("{}", report::fig8_csv());
+
+    println!();
+    println!("=== latency series: cycles (and µs at each system's Fmax) ===");
+    println!("benchmark,n,ours_cycles,ctv_cycles,lalp_cycles,ours_us,ctv_us,lalp_us");
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let ours_fmax = estimate(&g).fmax_mhz;
+        let spec = kernel_spec(b);
+        let c_est = ctv::estimate(&spec);
+        let l_est = lalp::estimate(&spec);
+        for n in [4usize, 8, 16, 32] {
+            let wl = bench_defs::workload(b, n, 11);
+            let mut cfg = wl.sim_config();
+            cfg.max_cycles *= 8;
+            let out = run_fsm(&g, &cfg);
+            let ctv_cycles = ctv::latency_cycles(&spec, n as u64);
+            let lalp_cycles = lalp::latency_cycles(&spec, n as u64);
+            let ours_us = out.cycles as f64 / ours_fmax;
+            let ctv_us = ctv_cycles as f64 / c_est.fmax_mhz;
+            let lalp_us = l_est
+                .map(|l| lalp_cycles as f64 / l.fmax_mhz)
+                .unwrap_or(f64::NAN);
+            println!(
+                "{},{},{},{},{},{:.3},{:.3},{:.3}",
+                b.slug(),
+                n,
+                out.cycles,
+                ctv_cycles,
+                lalp_cycles,
+                ours_us,
+                ctv_us,
+                lalp_us
+            );
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Bench: the L3 hot path — operator-firing throughput of the token
+//! engine and clock-edge throughput of the cycle-accurate FSM engine.
+//! §Perf targets in DESIGN.md are measured here.
+
+use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::sim::{run_fsm, run_token, FsmSim, TokenSim};
+use dataflow_accel::util::bench::{fmt_ns, report, run, BenchCfg};
+
+fn main() {
+    println!("=== simulation hot path ===");
+    let cfg = BenchCfg {
+        warmup_iters: 3,
+        samples: 20,
+        iters_per_sample: 1,
+    };
+
+    // Token engine: firings/sec on each benchmark at a fixed size.
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let n = if b == BenchId::BubbleSort { 16 } else { 64 };
+        let wl = bench_defs::workload(b, n, 5);
+        let scfg = wl.sim_config();
+        let mut firings = 0u64;
+        let m = run(&format!("token/{}/n{}", b.slug(), n), cfg, || {
+            let out = run_token(&g, &scfg);
+            firings = out.firings;
+            out.cycles
+        });
+        println!(
+            "    → {:.1} M firings/s ({} firings/run)",
+            firings as f64 / (m.median_ns * 1e-9) / 1e6,
+            firings
+        );
+        report(&m);
+    }
+
+    // FSM engine: clock edges/sec — every operator FSM + every handshake
+    // wire evaluated per edge, the software analogue of the fabric clock.
+    for b in [BenchId::Fibonacci, BenchId::DotProd] {
+        let g = bench_defs::build(b);
+        let wl = bench_defs::workload(b, 32, 5);
+        let mut scfg = wl.sim_config();
+        scfg.max_cycles *= 8;
+        let mut cycles = 0u64;
+        let m = run(&format!("fsm/{}/n32", b.slug()), cfg, || {
+            let out = run_fsm(&g, &scfg);
+            cycles = out.cycles;
+            cycles
+        });
+        let edges_per_sec = cycles as f64 / (m.median_ns * 1e-9);
+        let node_evals = edges_per_sec * g.n_nodes() as f64;
+        println!(
+            "    → {:.2} M clock edges/s × {} operators = {:.1} M operator-FSM evals/s",
+            edges_per_sec / 1e6,
+            g.n_nodes(),
+            node_evals / 1e6
+        );
+        report(&m);
+    }
+
+    // Raw step cost: one token-engine round on the biggest graph.
+    let g = bench_defs::build(BenchId::BubbleSort);
+    let wl = bench_defs::workload(BenchId::BubbleSort, 24, 3);
+    let scfg = wl.sim_config();
+    let m = run(
+        "token/bubble_sort/single_round",
+        BenchCfg {
+            warmup_iters: 1,
+            samples: 30,
+            iters_per_sample: 1,
+        },
+        || {
+            let mut sim = TokenSim::new(&g, &scfg);
+            for _ in 0..1000 {
+                sim.step();
+            }
+        },
+    );
+    println!(
+        "    → {} per round ({} nodes)",
+        fmt_ns(m.median_ns / 1000.0),
+        g.n_nodes()
+    );
+    report(&m);
+
+    let m = run(
+        "fsm/bubble_sort/single_edge",
+        BenchCfg {
+            warmup_iters: 1,
+            samples: 30,
+            iters_per_sample: 1,
+        },
+        || {
+            let mut sim = FsmSim::new(&g, &scfg);
+            for _ in 0..1000 {
+                sim.step();
+            }
+        },
+    );
+    println!("    → {} per clock edge", fmt_ns(m.median_ns / 1000.0));
+    report(&m);
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate every Table-1 row and time the full pipeline
+//! (C compile → graph → resource estimate) per benchmark — the paper's
+//! entire Table 1, one harness.
+
+use dataflow_accel::baselines::{ctv, kernel_spec, lalp};
+use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::estimate::{estimate, estimate_trimmed};
+use dataflow_accel::frontend;
+use dataflow_accel::report;
+use dataflow_accel::util::bench::{report as breport, run, BenchCfg};
+
+fn main() {
+    println!("=== Table 1 regeneration bench ===");
+    let cfg = BenchCfg {
+        warmup_iters: 2,
+        samples: 15,
+        iters_per_sample: 1,
+    };
+
+    for b in BenchId::ALL {
+        let m = run(&format!("table1/{}/pipeline", b.slug()), cfg, || {
+            let g = frontend::compile(b.slug(), bench_defs::c_source(b)).unwrap();
+            let ours = estimate(&g);
+            let trimmed = estimate_trimmed(&g);
+            let c = ctv::estimate(&kernel_spec(b));
+            let l = lalp::estimate(&kernel_spec(b));
+            (ours.ff, trimmed.ff, c.ff, l.map(|r| r.ff).unwrap_or(0))
+        });
+        breport(&m);
+    }
+
+    let m = run("table1/full_table_render", cfg, report::table1);
+    breport(&m);
+
+    println!();
+    print!("{}", report::table1());
+}

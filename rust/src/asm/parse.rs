@@ -1,0 +1,182 @@
+//! Assembler parser.
+
+use crate::dfg::{Arc, ArcId, Graph, Node, NodeId, Op};
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum AsmError {
+    #[error("line {line}: unknown operator `{op}`")]
+    UnknownOp { line: usize, op: String },
+    #[error("line {line}: `{op}` takes {expected} arguments, found {found}")]
+    BadArity {
+        line: usize,
+        op: String,
+        expected: usize,
+        found: usize,
+    },
+    #[error("line {line}: arc `{label}` already has a driver")]
+    DoubleDriver { line: usize, label: String },
+    #[error("line {line}: arc `{label}` already has a consumer")]
+    DoubleConsumer { line: usize, label: String },
+    #[error("line {line}: `{op}` requires an immediate first argument (e.g. `#42`)")]
+    MissingImmediate { line: usize, op: String },
+    #[error("line {line}: bad immediate `{imm}`")]
+    BadImmediate { line: usize, imm: String },
+    #[error("line {line}: statement missing terminating `;`")]
+    MissingSemicolon { line: usize },
+    #[error("line {line}: empty statement")]
+    Empty { line: usize },
+    #[error("graph validation failed: {0}")]
+    Invalid(#[from] crate::dfg::ValidateError),
+}
+
+/// Strip `# ...` and `// ...` comments.
+fn strip_comment(line: &str) -> &str {
+    let mut end = line.len();
+    if let Some(i) = line.find('#') {
+        // `#` inside an immediate like `#42` is preceded by a comma/space
+        // and followed by a digit or `-`; a comment `#` is not. Disambiguate
+        // by checking the next char.
+        let rest = &line[i + 1..];
+        if !rest.starts_with(|c: char| c.is_ascii_digit() || c == '-') {
+            end = end.min(i);
+        }
+    }
+    if let Some(i) = line.find("//") {
+        end = end.min(i);
+    }
+    &line[..end]
+}
+
+/// Parse assembler `src` into a graph named `name`.
+pub fn parse(name: &str, src: &str) -> Result<Graph, AsmError> {
+    let mut g = Graph::new(name);
+    let mut labels: HashMap<String, ArcId> = HashMap::new();
+
+    let mut intern = |g: &mut Graph, label: &str| -> ArcId {
+        if let Some(&a) = labels.get(label) {
+            return a;
+        }
+        let id = ArcId(g.arcs.len() as u32);
+        g.arcs.push(Arc {
+            id,
+            src: None,
+            dst: None,
+            name: label.to_string(),
+        });
+        labels.insert(label.to_string(), id);
+        id
+    };
+
+    // Statements are `;`-terminated and may span lines; split on `;` but
+    // report errors with the 1-based line of the statement start.
+    let clean: String = src
+        .lines()
+        .map(strip_comment)
+        .collect::<Vec<_>>()
+        .join("\n");
+    let mut offset = 0usize;
+    for raw_stmt in clean.split(';') {
+        let lead_ws = raw_stmt.len() - raw_stmt.trim_start().len();
+        let stmt_start = offset + lead_ws;
+        let stmt_line = clean[..stmt_start.min(clean.len())]
+            .chars()
+            .filter(|&c| c == '\n')
+            .count()
+            + 1;
+        offset += raw_stmt.len() + 1; // +1 for the consumed `;`
+        let stmt = raw_stmt.trim();
+        if stmt.is_empty() {
+            continue;
+        }
+        // Optional leading `N.` line number.
+        let stmt = match stmt.split_once('.') {
+            Some((n, rest)) if n.trim().chars().all(|c| c.is_ascii_digit()) => rest.trim(),
+            _ => stmt,
+        };
+        let (mnem, args_str) = match stmt.split_once(char::is_whitespace) {
+            Some((m, a)) => (m.trim(), a.trim()),
+            None => (stmt, ""),
+        };
+        let mut args: Vec<&str> = args_str
+            .split(',')
+            .map(|a| a.trim())
+            .filter(|a| !a.is_empty())
+            .collect();
+
+        // Parameterized substrate ops: immediate first argument.
+        let op = if mnem == "const" || mnem == "fifo" {
+            let imm_str = args
+                .first()
+                .filter(|a| a.starts_with('#'))
+                .ok_or(AsmError::MissingImmediate {
+                    line: stmt_line,
+                    op: mnem.to_string(),
+                })?
+                .to_string();
+            args.remove(0);
+            let imm: i32 = imm_str[1..]
+                .parse()
+                .map_err(|_| AsmError::BadImmediate {
+                    line: stmt_line,
+                    imm: imm_str.clone(),
+                })?;
+            if mnem == "const" {
+                Op::Const(imm as i16)
+            } else {
+                Op::Fifo(imm as u16)
+            }
+        } else {
+            Op::from_mnemonic(mnem).ok_or(AsmError::UnknownOp {
+                line: stmt_line,
+                op: mnem.to_string(),
+            })?
+        };
+
+        let (n_in, n_out) = (op.n_in(), op.n_out());
+        if args.len() != n_in + n_out {
+            return Err(AsmError::BadArity {
+                line: stmt_line,
+                op: mnem.to_string(),
+                expected: n_in + n_out,
+                found: args.len(),
+            });
+        }
+
+        let nid = NodeId(g.nodes.len() as u32);
+        let mut ins = Vec::with_capacity(n_in);
+        let mut outs = Vec::with_capacity(n_out);
+        for (i, &label) in args.iter().enumerate() {
+            let a = intern(&mut g, label);
+            if i < n_in {
+                if g.arcs[a.0 as usize].dst.is_some() {
+                    return Err(AsmError::DoubleConsumer {
+                        line: stmt_line,
+                        label: label.to_string(),
+                    });
+                }
+                g.arcs[a.0 as usize].dst = Some((nid, i as u8));
+                ins.push(a);
+            } else {
+                if g.arcs[a.0 as usize].src.is_some() {
+                    return Err(AsmError::DoubleDriver {
+                        line: stmt_line,
+                        label: label.to_string(),
+                    });
+                }
+                g.arcs[a.0 as usize].src = Some((nid, (i - n_in) as u8));
+                outs.push(a);
+            }
+        }
+        g.nodes.push(Node {
+            id: nid,
+            op,
+            ins,
+            outs,
+        });
+    }
+
+    crate::dfg::validate(&g)?;
+    Ok(g)
+}

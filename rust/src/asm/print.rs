@@ -1,0 +1,32 @@
+//! Assembler printer — the inverse of [`super::parse`].
+
+use crate::dfg::{Graph, Op};
+use std::fmt::Write;
+
+/// Render a graph in Listing-1 syntax (numbered statements, inputs first
+/// then outputs). `parse(print(g))` reproduces the graph up to arc-id
+/// renumbering, and `print` is a fixpoint over that round trip.
+pub fn print(g: &Graph) -> String {
+    let mut out = String::new();
+    for (i, n) in g.nodes.iter().enumerate() {
+        let mut args: Vec<&str> = Vec::with_capacity(n.ins.len() + n.outs.len());
+        for &a in n.ins.iter().chain(n.outs.iter()) {
+            args.push(&g.arc(a).name);
+        }
+        let imm = match n.op {
+            Op::Const(v) => format!("#{v}, "),
+            Op::Fifo(k) => format!("#{k}, "),
+            _ => String::new(),
+        };
+        writeln!(
+            out,
+            "{}. {} {}{};",
+            i + 1,
+            n.op.mnemonic(),
+            imm,
+            args.join(", ")
+        )
+        .unwrap();
+    }
+    out
+}

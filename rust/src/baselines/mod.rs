@@ -1,0 +1,112 @@
+//! Models of the two comparison systems in Table 1.
+//!
+//! The paper compares its dataflow accelerator against two HLS flows it
+//! did not publish sources for:
+//!
+//! * **C-to-Verilog** (c-to-verilog.com, Ben-Asher & Rotem) — a classic
+//!   *sequential datapath* generator: one finite-state schedule per loop
+//!   body, a central register file, shared ALUs behind operand mux trees.
+//!   [`ctv`] models its resource/timing signature: FF grows with the
+//!   pipelined schedule (live values × stages), LUTs are mux-dominated,
+//!   and Fmax suffers from mux→ALU→mux paths and chained operations.
+//! * **LALP** (Menotti & Cardoso 2010) — *aggressive loop pipelining* on
+//!   a minimal counter-driven datapath: one ALU lane per loop, address
+//!   generators, almost no control. [`lalp`] models its signature: the
+//!   smallest FF/LUT of the three systems, mid-range Fmax.
+//!
+//! Both models consume a per-benchmark [`KernelSpec`] (loop structure,
+//! live variables, per-iteration operations, array ports) — the same
+//! abstract kernel our dataflow graphs implement — so the three columns
+//! of Table 1 are generated from one benchmark description. The paper's
+//! LALP column has no Pop count row (LALP's published suite lacks it);
+//! [`lalp::estimate`] returns `None` there to match.
+
+pub mod ctv;
+pub mod lalp;
+mod spec;
+
+pub use spec::{kernel_spec, KernelSpec};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::BenchId;
+    use crate::estimate::{estimate, estimate_trimmed};
+
+    /// Fig. 8's headline qualitative claims, asserted across the suite.
+    #[test]
+    fn fig8_fmax_ours_is_fastest() {
+        for b in BenchId::ALL {
+            let ours = estimate(&crate::bench_defs::build(b)).fmax_mhz;
+            let c = ctv::estimate(&kernel_spec(b)).fmax_mhz;
+            assert!(ours > c, "{}: ours {ours:.0} ≤ CtV {c:.0}", b.slug());
+            if let Some(l) = lalp::estimate(&kernel_spec(b)) {
+                assert!(ours > l.fmax_mhz, "{}: ours ≤ LALP", b.slug());
+            }
+        }
+    }
+
+    #[test]
+    fn fig8_lalp_occupies_least() {
+        for b in BenchId::ALL {
+            let Some(l) = lalp::estimate(&kernel_spec(b)) else {
+                continue;
+            };
+            let c = ctv::estimate(&kernel_spec(b));
+            let ours = estimate_trimmed(&crate::bench_defs::build(b));
+            assert!(l.ff < c.ff, "{}: LALP FF ≥ CtV FF", b.slug());
+            assert!(l.ff < ours.ff, "{}: LALP FF ≥ ours FF", b.slug());
+            assert!(l.lut < c.lut, "{}: LALP LUT ≥ CtV LUT", b.slug());
+            assert!(l.lut < ours.lut, "{}: LALP LUT ≥ ours LUT", b.slug());
+        }
+    }
+
+    #[test]
+    fn fig8_ours_ff_below_ctv_on_loop_heavy_benchmarks() {
+        // The paper's FF claim ("ours < C-to-Verilog for all benchmarks")
+        // holds under the control-trimmed measurement; the big sequential
+        // schedules (bubble, popcount-unrolled, dot) show it strongest.
+        for b in [BenchId::BubbleSort, BenchId::PopCount, BenchId::DotProd] {
+            let ours = estimate_trimmed(&crate::bench_defs::build(b));
+            let c = ctv::estimate(&kernel_spec(b));
+            assert!(ours.ff < c.ff, "{}: ours {} ≥ CtV {}", b.slug(), ours.ff, c.ff);
+        }
+    }
+
+    #[test]
+    fn fig8_slices_ours_highest_for_most() {
+        // "the Acceleration Algorithms occupy more slices than the
+        // C-to-Verilog and the LALP system" — routing-dominated fabric.
+        let mut ours_higher = 0;
+        let mut total = 0;
+        for b in BenchId::ALL {
+            let ours = estimate(&crate::bench_defs::build(b));
+            let c = ctv::estimate(&kernel_spec(b));
+            total += 1;
+            if ours.slices > c.slices {
+                ours_higher += 1;
+            }
+        }
+        assert!(
+            ours_higher * 2 > total,
+            "ours wins slices on only {ours_higher}/{total}"
+        );
+    }
+
+    #[test]
+    fn ctv_latency_scales_with_schedule() {
+        let fib = ctv::latency_cycles(&kernel_spec(BenchId::Fibonacci), 32);
+        let bub = ctv::latency_cycles(&kernel_spec(BenchId::BubbleSort), 32);
+        // n² trips dominate even after the 8× unrolled inner chain.
+        assert!(bub > fib * 4, "nested loop must dominate: {bub} vs {fib}");
+    }
+
+    #[test]
+    fn lalp_latency_is_ii1_after_fill() {
+        let s = kernel_spec(BenchId::VectorSum);
+        let l64 = lalp::latency_cycles(&s, 64);
+        let l128 = lalp::latency_cycles(&s, 128);
+        // Slope 1 element/cycle.
+        assert_eq!(l128 - l64, 64);
+    }
+}

@@ -1,0 +1,121 @@
+//! Abstract kernel descriptions shared by the baseline models.
+
+use crate::bench_defs::BenchId;
+use crate::dfg::Op;
+
+/// What an HLS compiler sees of a benchmark: loop structure, live scalar
+/// variables, the per-iteration operation list, and memory ports.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    pub bench: BenchId,
+    /// Live scalar variables across the loop body.
+    pub vars: u32,
+    /// Operations executed per (innermost) iteration.
+    pub body_ops: Vec<(Op, u32)>,
+    /// Schedule states per iteration in a sequential (CtV-style) schedule.
+    pub states: u32,
+    /// Longest chain of dependent ops scheduled in one state (hurts Fmax).
+    pub chain: u32,
+    /// Arrays / streams touched (each costs address generation + a port).
+    pub arrays: u32,
+    /// Datapath replication the HLS flow applies (CtV unrolls Pop count's
+    /// fixed 16-bit loop and Bubble sort's inner compare-exchange chain).
+    pub unroll: u32,
+    /// True for doubly-nested iteration spaces (n² trip count).
+    pub nested: bool,
+}
+
+/// Per-benchmark kernel description. The numbers are what the respective
+/// C sources (bench_defs::c_source) imply: variable counts and op lists
+/// are read off the source; `unroll` follows each tool's documented
+/// behaviour on fixed-bound inner loops.
+pub fn kernel_spec(b: BenchId) -> KernelSpec {
+    match b {
+        BenchId::Fibonacci => KernelSpec {
+            bench: b,
+            vars: 4, // first, second, tmp, i
+            body_ops: vec![(Op::Add, 2)],
+            states: 2,
+            chain: 2, // tmp = first+second then i+1 chained with copy-back
+            arrays: 0,
+            unroll: 1,
+            nested: false,
+        },
+        BenchId::Max => KernelSpec {
+            bench: b,
+            vars: 3, // m, v, i
+            body_ops: vec![(Op::IfGt, 1), (Op::Add, 1)],
+            states: 3, // load, compare, select/writeback
+            chain: 1,
+            arrays: 1,
+            unroll: 1,
+            nested: false,
+        },
+        BenchId::DotProd => KernelSpec {
+            bench: b,
+            vars: 3, // acc, i, prod
+            body_ops: vec![(Op::Mul, 1), (Op::Add, 2)],
+            states: 3, // load, mul, acc
+            chain: 2,  // mul feeding add
+            arrays: 2,
+            unroll: 1,
+            nested: false,
+        },
+        BenchId::VectorSum => KernelSpec {
+            bench: b,
+            vars: 2, // i and the sum temporary
+            body_ops: vec![(Op::Add, 2)],
+            states: 2,
+            chain: 1,
+            arrays: 3,
+            unroll: 1,
+            nested: false,
+        },
+        BenchId::BubbleSort => KernelSpec {
+            bench: b,
+            vars: 5, // i, j, a[j], a[j+1], tmp
+            body_ops: vec![(Op::IfGt, 1), (Op::Add, 2)],
+            states: 4, // read, read, cmp, writeback
+            chain: 2,
+            arrays: 1,
+            // CtV pipelines/unrolls the inner compare-exchange chain.
+            unroll: 8,
+            nested: true,
+        },
+        BenchId::PopCount => KernelSpec {
+            bench: b,
+            vars: 3, // w, cnt, bit
+            body_ops: vec![(Op::And, 1), (Op::Shr, 1), (Op::Add, 2)],
+            states: 2,
+            chain: 2,
+            arrays: 0,
+            // The 16-bit width is a compile-time constant: CtV fully
+            // unrolls the bit loop.
+            unroll: 16,
+            nested: false,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_exist_for_all_benchmarks() {
+        for b in BenchId::ALL {
+            let s = kernel_spec(b);
+            assert!(s.vars > 0);
+            assert!(!s.body_ops.is_empty());
+            assert!(s.states > 0);
+            assert!(s.unroll >= 1);
+        }
+    }
+
+    #[test]
+    fn only_bubble_is_nested() {
+        for b in BenchId::ALL {
+            assert_eq!(kernel_spec(b).nested, b == BenchId::BubbleSort);
+        }
+    }
+}

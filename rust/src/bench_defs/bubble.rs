@@ -1,0 +1,211 @@
+//! Bubble sort — n selection passes over a recirculating FIFO.
+//!
+//! The hardware structure (all in the paper's operator set plus the FIFO
+//! substrate node):
+//!
+//! 1. **Fill phase** — the input stream is copied: one copy flows into
+//!    the recirculation FIFO, the other drives a counting loop that
+//!    raises a `go` token only after all `n` elements are stored. This
+//!    gate is what makes recirculation order-safe: no pass output can
+//!    overtake a not-yet-arrived input element.
+//! 2. **Pass loop (outer, k = 0..n)** — each pass scans the FIFO once.
+//! 3. **Scan loop (inner, j = 0..n)** — a compare-exchange cell: keeps
+//!    the running maximum in `carry`, returns the loser to the FIFO. The
+//!    pass's carry exit is the k-th largest element → output `sorted`
+//!    (descending). The bottom sentinel −32768 seeds each pass's carry
+//!    and accumulates harmlessly in the FIFO.
+//!
+//! Inner-loop re-initialization per outer iteration is the nesting
+//! feature of [`build_loop`]; this graph is its stress test.
+
+use crate::dfg::{build_loop, Graph, GraphBuilder, Op, Word};
+
+pub const C_SOURCE: &str = "\
+in int n;
+in stream x;
+out stream sorted;
+fifo buf;
+int f = 0;
+while (f < n) {
+    int v = next(x);
+    push(buf, v);
+    f = f + 1 + (v & 0);   // (v & 0) joins the count to the element:
+}                          // the fill counter cannot outrun the stream
+int k = 0;
+while (k < n) {
+    int carry = -32768;
+    int j = 0;
+    while (j < n) {
+        int v = pop(buf);
+        if (v > carry) {
+            push(buf, carry);
+            carry = v;
+        } else {
+            push(buf, v);
+        }
+        j = j + 1;
+    }
+    emit(sorted, carry);
+    k = k + 1;
+}
+";
+
+/// Descending sort (the selection-pass fabric emits largest first).
+pub fn reference(xs: &[Word]) -> Vec<Word> {
+    let mut v = xs.to_vec();
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    v
+}
+
+/// FIFO capacity: bounds the largest sortable vector.
+pub const FIFO_DEPTH: u16 = 1024;
+
+/// Ports: `n`, stream `x` in; stream `sorted` (descending) and `pf` out.
+pub fn build() -> Graph {
+    let mut b = GraphBuilder::new("bubble_sort");
+    let n_port = b.input_port("n");
+    let x = b.input_port("x");
+
+    // The FIFO's output arc is pre-created; the FIFO node itself is wired
+    // last, once its input (the recirculation merge) exists.
+    let fifo_out = b.wire();
+
+    // ---- Fill phase -------------------------------------------------
+    // x is duplicated: one copy into the FIFO, one into the fill counter
+    // (the counter "joins" with the data copy so it cannot run ahead).
+    let (x_data, x_count) = b.copy(x);
+
+    let f0 = b.constant(0);
+    let fill_one0 = b.constant(1);
+    let fill_zero0 = b.constant(0);
+    // vars: [f, n, one, zero]
+    let fill_exits = build_loop(
+        &mut b,
+        &[f0, n_port, fill_one0, fill_zero0],
+        &[0, 1],
+        |b, c| b.op2(Op::IfLt, c[0], c[1]),
+        |b, g| {
+            // t = x_count & 0 — consumes one stream element, value 0.
+            let (z_use, z_back) = b.copy(g[3]);
+            let t = b.op2(Op::And, x_count, z_use);
+            let (one_use, one_back) = b.copy(g[2]);
+            let f_inc = b.op2(Op::Add, g[0], one_use);
+            let f_next = b.op2(Op::Add, f_inc, t); // join: waits for the element
+            vec![f_next, g[1], one_back, z_back]
+        },
+    );
+    // go = final f (== n); k0 = go * 0 — the outer loop cannot start
+    // before the fill loop finishes.
+    let go = fill_exits[0];
+    let k0 = b.op2(Op::Mul, go, fill_exits[3]);
+
+    // ---- Pass + scan loops -------------------------------------------
+    let outer_zero0 = b.constant(0);
+    let minv0 = b.constant(i16::MIN);
+    let mut lo_to_fifo: Option<crate::dfg::ArcId> = None;
+
+    // outer vars: [k, n, one, zero, minv]
+    let outer_exits = build_loop(
+        &mut b,
+        &[k0, fill_exits[1], fill_exits[2], outer_zero0, minv0],
+        &[0, 1],
+        |b, c| b.op2(Op::IfLt, c[0], c[1]),
+        |b, g| {
+            let (one_k, one_inner) = b.copy(g[2]);
+            let (zero_inner, zero_back) = b.copy(g[3]);
+            let (minv_inner, minv_back) = b.copy(g[4]);
+
+            // inner vars: [j, n, one, carry]
+            let inner_exits = build_loop(
+                b,
+                &[zero_inner, g[1], one_inner, minv_inner],
+                &[0, 1],
+                |b, c| b.op2(Op::IfLt, c[0], c[1]),
+                |b, gi| {
+                    // v = pop(buf); compare-exchange with carry. The
+                    // branch/ndmerge idiom routes winner and loser so
+                    // every token is consumed every iteration (a dmerge
+                    // select would strand the unselected candidate).
+                    let (v_cmp, v_data) = b.copy(fifo_out);
+                    let (c_cmp, c_data) = b.copy(gi[3]);
+                    let c = b.op2(Op::IfGt, v_cmp, c_cmp); // v > carry
+                    let (c_v, c_c) = b.copy(c);
+                    let bv = b.node(Op::Branch, &[c_v, v_data], &[]);
+                    let (v_win, v_lose) = (b.out_arc(bv, 0), b.out_arc(bv, 1));
+                    let bc = b.node(Op::Branch, &[c_c, c_data], &[]);
+                    let (carry_lose, carry_win) = (b.out_arc(bc, 0), b.out_arc(bc, 1));
+                    let hi_n = b.node(Op::NdMerge, &[v_win, carry_win], &[]);
+                    let hi = b.out_arc(hi_n, 0);
+                    let lo_n = b.node(Op::NdMerge, &[v_lose, carry_lose], &[]);
+                    let lo = b.out_arc(lo_n, 0);
+                    lo_to_fifo = Some(lo);
+                    let (onei_use, onei_back) = b.copy(gi[2]);
+                    let j_next = b.op2(Op::Add, gi[0], onei_use);
+                    vec![j_next, gi[1], onei_back, hi]
+                },
+            );
+            // The pass's carry exit is this pass's maximum → `sorted`.
+            b.rename_arc(inner_exits[3], "sorted");
+
+            let k_next = b.op2(Op::Add, g[0], one_k);
+            vec![
+                k_next,
+                inner_exits[1],
+                inner_exits[2],
+                zero_back,
+                minv_back,
+            ]
+        },
+    );
+    b.rename_arc(outer_exits[0], "pf");
+
+    // ---- Recirculation FIFO ------------------------------------------
+    // fifo input = merge(fill stream, pass losers).
+    let lo = lo_to_fifo.expect("inner body ran");
+    let nm = b.node(Op::NdMerge, &[x_data, lo], &[]);
+    let fifo_in = b.out_arc(nm, 0);
+    b.node(Op::Fifo(FIFO_DEPTH), &[fifo_in], &[fifo_out]);
+
+    b.finish().expect("bubble-sort graph is structurally valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{run_token, SimConfig};
+
+    fn sort_via_fabric(xs: &[Word]) -> Vec<Word> {
+        let g = build();
+        let cfg = SimConfig::new()
+            .inject("n", vec![xs.len() as Word])
+            .inject("x", xs.to_vec())
+            .max_cycles(20_000 * (xs.len() as u64 * xs.len() as u64 + 4));
+        let out = run_token(&g, &cfg);
+        out.stream("sorted").to_vec()
+    }
+
+    #[test]
+    fn sorts_small_vector() {
+        assert_eq!(sort_via_fabric(&[3, 1, 2]), vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn sorts_with_duplicates_and_negatives() {
+        let xs = [5, -2, 5, 0, -2, 9];
+        assert_eq!(sort_via_fabric(&xs), reference(&xs));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(sort_via_fabric(&[]), Vec::<Word>::new());
+        assert_eq!(sort_via_fabric(&[42]), vec![42]);
+    }
+
+    #[test]
+    fn already_sorted_and_reversed() {
+        let asc: Vec<Word> = (1..=8).collect();
+        let desc: Vec<Word> = (1..=8).rev().collect();
+        assert_eq!(sort_via_fabric(&asc), desc);
+        assert_eq!(sort_via_fabric(&desc), desc);
+    }
+}

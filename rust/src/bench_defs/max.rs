@@ -1,0 +1,117 @@
+//! Max vector — running maximum over a stream of `n` elements.
+//!
+//! The compare-and-select idiom is the paper's `gtdecider` + `dmerge`
+//! pair: the decider produces the control token, the deterministic merge
+//! picks the winner (§3.2 items 3 and 5).
+
+use crate::dfg::{build_loop, Graph, GraphBuilder, Op, Word};
+
+pub const C_SOURCE: &str = "\
+in int n;
+in stream x;
+out int max;
+int m = -32768;
+int i = 0;
+while (i < n) {
+    int v = next(x);
+    if (v > m) {
+        m = v;
+    }
+    i = i + 1;
+}
+max = m;
+";
+
+/// Running maximum (identity −32768 on the empty stream).
+pub fn reference(xs: &[Word]) -> Word {
+    xs.iter().copied().fold(i16::MIN, Word::max)
+}
+
+/// Ports: `n`, stream `x` in; `max` out.
+pub fn build() -> Graph {
+    let mut b = GraphBuilder::new("max_vector");
+    let n = b.input_port("n");
+    let x = b.input_port("x");
+    let i0 = b.constant(0);
+    let one0 = b.constant(1);
+    let m0 = b.constant(i16::MIN);
+
+    // vars: [i, n, one, m]
+    let exits = build_loop(
+        &mut b,
+        &[i0, n, one0, m0],
+        &[0, 1],
+        |b, c| b.op2(Op::IfLt, c[0], c[1]),
+        |b, g| {
+            // v = next(x); m' = v > m ? v : m.
+            //
+            // Conditional select is the branch/ndmerge idiom: both
+            // candidates are *routed* (winner side / loser side) so every
+            // token is consumed every iteration. A dmerge-based select
+            // would strand the unselected token on its arc and deadlock
+            // the copy tree on the next iteration.
+            let (v_cmp, v_data) = b.copy(x);
+            let (m_cmp, m_data) = b.copy(g[3]);
+            let c = b.op2(Op::IfGt, v_cmp, m_cmp);
+            let (c_v, c_m) = b.copy(c);
+            let bv = b.node(Op::Branch, &[c_v, v_data], &[]);
+            let (v_win, _v_lose) = (b.out_arc(bv, 0), b.out_arc(bv, 1));
+            let bm = b.node(Op::Branch, &[c_m, m_data], &[]);
+            let (_m_lose, m_win) = (b.out_arc(bm, 0), b.out_arc(bm, 1));
+            // Exactly one of the two winner arcs carries a token.
+            let mn = b.node(Op::NdMerge, &[v_win, m_win], &[]);
+            let m_next = b.out_arc(mn, 0);
+            // Losers drain to anonymous output ports (hardware: a sink).
+            let (one_use, one_back) = b.copy(g[2]);
+            let i_next = b.op2(Op::Add, g[0], one_use);
+            vec![i_next, g[1], one_back, m_next]
+        },
+    );
+    b.rename_arc(exits[3], "max");
+    b.finish().expect("max graph is structurally valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{run_token, SimConfig};
+
+    #[test]
+    fn finds_maximum() {
+        let g = build();
+        let xs = vec![3, -5, 42, 7, 42, -1000, 12];
+        let cfg = SimConfig::new()
+            .inject("n", vec![xs.len() as Word])
+            .inject("x", xs.clone());
+        let out = run_token(&g, &cfg);
+        assert_eq!(out.last("max"), Some(reference(&xs)));
+    }
+
+    #[test]
+    fn empty_stream_yields_identity() {
+        let g = build();
+        let cfg = SimConfig::new().inject("n", vec![0]);
+        let out = run_token(&g, &cfg);
+        assert_eq!(out.last("max"), Some(i16::MIN));
+    }
+
+    #[test]
+    fn consumes_exactly_n_elements() {
+        // Extra stream tokens must be left untouched (count-controlled
+        // consumption).
+        let g = build();
+        let cfg = SimConfig::new()
+            .inject("n", vec![3])
+            .inject("x", vec![5, 9, 2, 777, 888]);
+        let out = run_token(&g, &cfg);
+        assert_eq!(out.last("max"), Some(9));
+        assert!(!out.quiescent); // leftover stream tokens keep it non-quiescent
+    }
+
+    #[test]
+    fn single_element() {
+        let g = build();
+        let cfg = SimConfig::new().inject("n", vec![1]).inject("x", vec![-7]);
+        assert_eq!(run_token(&g, &cfg).last("max"), Some(-7));
+    }
+}

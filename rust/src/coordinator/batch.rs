@@ -1,0 +1,243 @@
+//! Lockstep batch simulation of B graph instances.
+//!
+//! Every tick: each instance's `TokenSim` runs offload phase 1 (fires
+//! structural operators locally, extracts ALU firings), the extracted
+//! requests are packed into one dense `(B, N)` fabric batch, evaluated in
+//! a single PJRT call, and scattered back. Instances finish independently
+//! (the fire mask simply goes quiet for drained instances).
+
+use crate::dfg::Graph;
+use crate::runtime::{FabricBatch, FabricRuntime};
+use crate::sim::{AluReq, SimConfig, SimOutcome, TokenSim};
+use anyhow::{bail, Result};
+
+/// How a batch evaluates its operator ALUs.
+pub enum BatchEngine<'rt> {
+    /// In-process Rust ALU (baseline; used for differential testing).
+    Native,
+    /// One PJRT fabric-kernel call per tick for the whole batch.
+    Xla(&'rt FabricRuntime),
+}
+
+/// Run `cfgs.len()` instances of `g` in lockstep.
+pub fn run_batch(g: &Graph, cfgs: &[SimConfig], engine: &BatchEngine) -> Result<Vec<SimOutcome>> {
+    let b = cfgs.len();
+    if b == 0 {
+        return Ok(Vec::new());
+    }
+    let n_nodes = g.n_nodes();
+
+    // Pick + pad the artifact shape for the XLA path.
+    let (mut fb, opcode_ready) = match engine {
+        BatchEngine::Xla(rt) => {
+            let Some((ab, an)) = rt.fit(b, n_nodes) else {
+                bail!(
+                    "no fabric artifact fits batch {b} × nodes {n_nodes} \
+                     (available: {:?})",
+                    rt.shapes()
+                );
+            };
+            let mut fb = FabricBatch::zeroed(ab, an);
+            for (ni, node) in g.nodes.iter().enumerate() {
+                fb.opcode[ni] = node.op.fabric_opcode();
+            }
+            (Some(fb), true)
+        }
+        BatchEngine::Native => (None, false),
+    };
+    let _ = opcode_ready;
+
+    let mut sims: Vec<TokenSim> = cfgs.iter().map(|c| TokenSim::new(g, c)).collect();
+    let mut reqs: Vec<Vec<AluReq>> = vec![Vec::new(); b];
+    let mut zbuf: Vec<Vec<i32>> = vec![Vec::new(); b];
+    let max_cycles = cfgs.iter().map(|c| c.max_cycles).max().unwrap();
+
+    let mut cycles = 0u64;
+    let mut idle_rounds = 0u32;
+    while cycles < max_cycles {
+        let mut fired = 0u64;
+        let mut total_reqs = 0usize;
+        for (i, sim) in sims.iter_mut().enumerate() {
+            reqs[i].clear();
+            fired += sim.step_offload(&mut reqs[i]);
+            total_reqs += reqs[i].len();
+        }
+        if total_reqs > 0 {
+            match engine {
+                BatchEngine::Native => {
+                    for (i, sim) in sims.iter_mut().enumerate() {
+                        if reqs[i].is_empty() {
+                            continue;
+                        }
+                        zbuf[i].clear();
+                        zbuf[i].extend(reqs[i].iter().map(|r| {
+                            if r.opcode == crate::dfg::Op::Not.fabric_opcode() {
+                                (!r.a) as i32
+                            } else {
+                                op_from_code(r.opcode).eval2(r.a, r.b) as i32
+                            }
+                        }));
+                        sim.apply_alu(&reqs[i], &zbuf[i]);
+                    }
+                }
+                BatchEngine::Xla(rt) => {
+                    let fb = fb.as_mut().unwrap();
+                    fb.a.fill(0);
+                    fb.b.fill(0);
+                    fb.fire.fill(0);
+                    for (i, rs) in reqs.iter().enumerate() {
+                        for r in rs {
+                            let s = fb.slot(i, r.node as usize);
+                            fb.a[s] = r.a as i32;
+                            fb.b[s] = r.b as i32;
+                            fb.fire[s] = 1;
+                        }
+                    }
+                    let z = rt.step(fb)?;
+                    for (i, (sim, rs)) in sims.iter_mut().zip(&reqs).enumerate() {
+                        if rs.is_empty() {
+                            continue;
+                        }
+                        zbuf[i].clear();
+                        zbuf[i].extend(rs.iter().map(|r| z[i * fb.nodes + r.node as usize]));
+                        sim.apply_alu(rs, &zbuf[i]);
+                    }
+                }
+            }
+        }
+        cycles += 1;
+        if fired == 0 && total_reqs == 0 {
+            idle_rounds += 1;
+            // Two idle rounds: one to drain output ports, one to confirm.
+            if idle_rounds >= 2 {
+                break;
+            }
+        } else {
+            idle_rounds = 0;
+        }
+    }
+
+    Ok(sims
+        .into_iter()
+        .map(|s| {
+            let quiescent = s.idle();
+            s.into_outcome(cycles, quiescent)
+        })
+        .collect())
+}
+
+fn op_from_code(code: i32) -> crate::dfg::Op {
+    use crate::dfg::Op;
+    match code {
+        0 => Op::Add,
+        1 => Op::Sub,
+        2 => Op::Mul,
+        3 => Op::Div,
+        4 => Op::And,
+        5 => Op::Or,
+        6 => Op::Xor,
+        7 => Op::Shl,
+        8 => Op::Shr,
+        9 => Op::IfGt,
+        10 => Op::IfGe,
+        11 => Op::IfLt,
+        12 => Op::IfLe,
+        13 => Op::IfEq,
+        14 => Op::IfDf,
+        other => panic!("not a 2-input fabric opcode: {other}"),
+    }
+}
+
+/// Convenience: batch with the native ALU.
+pub fn run_batch_native(g: &Graph, cfgs: &[SimConfig]) -> Vec<SimOutcome> {
+    run_batch(g, cfgs, &BatchEngine::Native).expect("native engine is infallible")
+}
+
+/// Convenience: batch through the PJRT fabric kernel.
+pub fn run_batch_xla(
+    g: &Graph,
+    cfgs: &[SimConfig],
+    rt: &FabricRuntime,
+) -> Result<Vec<SimOutcome>> {
+    run_batch(g, cfgs, &BatchEngine::Xla(rt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{self, BenchId};
+    use crate::sim::run_token;
+
+    #[test]
+    fn native_batch_matches_single_instance() {
+        for bench in [BenchId::Fibonacci, BenchId::DotProd, BenchId::PopCount] {
+            let g = bench_defs::build(bench);
+            let cfgs: Vec<_> = (0..5)
+                .map(|s| bench_defs::workload(bench, 4 + s, s as u64).sim_config())
+                .collect();
+            let batch = run_batch_native(&g, &cfgs);
+            for (i, cfg) in cfgs.iter().enumerate() {
+                let single = run_token(&g, cfg);
+                assert_eq!(
+                    batch[i].outputs,
+                    single.outputs,
+                    "{} instance {i}",
+                    bench.slug()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn offload_phases_equal_plain_step() {
+        // step_offload + native apply == step, per benchmark workload.
+        for bench in BenchId::ALL {
+            let g = bench_defs::build(bench);
+            let wl = bench_defs::workload(bench, 5, 3);
+            let cfg = wl.sim_config();
+            let plain = run_token(&g, &cfg);
+            let batch = run_batch_native(&g, std::slice::from_ref(&cfg));
+            assert_eq!(batch[0].outputs, plain.outputs, "{}", bench.slug());
+            assert_eq!(batch[0].firings, plain.firings, "{}", bench.slug());
+        }
+    }
+
+    #[test]
+    fn xla_batch_matches_native_batch() {
+        let Ok(rt) = FabricRuntime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for bench in [BenchId::Fibonacci, BenchId::Max, BenchId::VectorSum] {
+            let g = bench_defs::build(bench);
+            let cfgs: Vec<_> = (0..8)
+                .map(|s| bench_defs::workload(bench, 3 + s % 4, s as u64).sim_config())
+                .collect();
+            let nat = run_batch_native(&g, &cfgs);
+            let xla = run_batch_xla(&g, &cfgs, &rt).unwrap();
+            for i in 0..cfgs.len() {
+                assert_eq!(nat[i].outputs, xla[i].outputs, "{} #{i}", bench.slug());
+            }
+        }
+    }
+
+    #[test]
+    fn xla_batch_verifies_workload_expectations() {
+        let Ok(rt) = FabricRuntime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let bench = BenchId::DotProd;
+        let g = bench_defs::build(bench);
+        let wls: Vec<_> = (0..6).map(|s| bench_defs::workload(bench, 8, s)).collect();
+        let cfgs: Vec<_> = wls.iter().map(|w| w.sim_config()).collect();
+        let outs = run_batch_xla(&g, &cfgs, &rt).unwrap();
+        for (wl, out) in wls.iter().zip(&outs) {
+            for (port, want) in &wl.expect {
+                assert_eq!(out.stream(port), want.as_slice());
+            }
+        }
+    }
+}

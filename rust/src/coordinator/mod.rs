@@ -1,0 +1,21 @@
+//! The Layer-3 coordinator: request routing, batching, and the
+//! XLA-offloaded batch fabric engine.
+//!
+//! The paper's FPGA runs one graph instance in hardware. The acceleration
+//! story at system level is *throughput over many instances* (parameter
+//! sweeps, benchmark suites, multi-tenant requests): the coordinator
+//! batches simulation requests per benchmark and runs B instances in
+//! lockstep, evaluating all B×N operator ALUs per tick through the
+//! AOT-compiled fabric kernel (`runtime`) — Rust keeps the token and
+//! handshake state (branchy, irregular), the kernel does the dense math.
+//!
+//! * [`batch`] — the lockstep batch engine (native and XLA ALU paths).
+//! * [`router`] — request router / dynamic batcher / worker pool with
+//!   metrics, in the vLLM-router mould (std::thread + mpsc; the vendored
+//!   environment has no tokio).
+
+pub mod batch;
+pub mod router;
+
+pub use batch::{run_batch_native, run_batch_xla, BatchEngine};
+pub use router::{Coordinator, Engine, Metrics, Request, Response};

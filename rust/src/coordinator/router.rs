@@ -1,0 +1,325 @@
+//! Request router / dynamic batcher / worker pool.
+//!
+//! The serving shape (vllm-router style, scaled to this system): clients
+//! submit [`Request`]s (benchmark + workload parameters); a dispatcher
+//! thread groups them **per benchmark graph** into dynamic batches (a
+//! batch closes when it reaches `max_batch` or when the queue drains);
+//! worker threads execute whole batches on the batch fabric engine and
+//! deliver [`Response`]s through per-request channels. Metrics count
+//! requests, fabric ticks and end-to-end latency.
+//!
+//! No tokio in the vendored environment: std::thread + mpsc. The PJRT
+//! runtime is shared behind a mutex — batches (not ticks) amortize it.
+
+use super::batch::{run_batch, BatchEngine};
+use crate::bench_defs::{self, BenchId};
+use crate::runtime::FabricRuntime;
+use crate::sim::SimOutcome;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Which ALU engine the workers use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Native,
+    Xla,
+}
+
+/// One simulation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub bench: BenchId,
+    /// Workload size (vector length / fib argument).
+    pub n: usize,
+    pub seed: u64,
+}
+
+/// The result of one request.
+#[derive(Debug)]
+pub struct Response {
+    pub request: Request,
+    pub outcome: SimOutcome,
+    /// Outputs matched the benchmark's software reference.
+    pub verified: bool,
+    pub latency: Duration,
+}
+
+/// Aggregate counters (lock-free reads).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub verified: AtomicU64,
+    pub batches: AtomicU64,
+    pub fabric_cycles: AtomicU64,
+    pub total_latency_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn summary(&self) -> String {
+        let completed = self.completed.load(Ordering::Relaxed).max(1);
+        format!(
+            "requests {}/{} verified {} | batches {} | fabric cycles {} | mean latency {:.1} ms",
+            self.completed.load(Ordering::Relaxed),
+            self.submitted.load(Ordering::Relaxed),
+            self.verified.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.fabric_cycles.load(Ordering::Relaxed),
+            self.total_latency_us.load(Ordering::Relaxed) as f64 / completed as f64 / 1000.0,
+        )
+    }
+}
+
+struct Job {
+    request: Request,
+    submitted: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// The router + batcher + worker pool.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    dispatcher: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start a coordinator with `workers` worker threads. `artifact_dir`
+    /// is only needed for [`Engine::Xla`].
+    pub fn start(
+        workers: usize,
+        engine: Engine,
+        artifact_dir: Option<&str>,
+        max_batch: usize,
+    ) -> anyhow::Result<Self> {
+        let metrics = Arc::new(Metrics::default());
+        // PJRT handles are not Send: each XLA worker creates its own
+        // client + executables inside its thread. Validate the artifact
+        // directory up front so a bad path fails fast on the caller.
+        let dir = artifact_dir.unwrap_or("artifacts").to_string();
+        if engine == Engine::Xla {
+            FabricRuntime::load(&dir)?;
+        }
+
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Job>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        // Workers: execute whole batches.
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let batch_rx = Arc::clone(&batch_rx);
+            let metrics = Arc::clone(&metrics);
+            let dir = dir.clone();
+            handles.push(std::thread::spawn(move || {
+                let runtime = match engine {
+                    Engine::Xla => FabricRuntime::load(&dir).ok(),
+                    Engine::Native => None,
+                };
+                loop {
+                    let jobs = {
+                        let rx = batch_rx.lock().unwrap();
+                        rx.recv()
+                    };
+                    let Ok(jobs) = jobs else { break };
+                    run_jobs(jobs, &metrics, runtime.as_ref());
+                }
+            }));
+        }
+
+        // Dispatcher: group by benchmark into dynamic batches.
+        let metrics_d = Arc::clone(&metrics);
+        let dispatcher = std::thread::spawn(move || {
+            let mut queues: BTreeMap<BenchId, Vec<Job>> = BTreeMap::new();
+            let mut running = true;
+            while running {
+                // Block for one message, then drain opportunistically —
+                // the dynamic-batching window.
+                match rx.recv() {
+                    Ok(Msg::Job(j)) => {
+                        metrics_d.submitted.fetch_add(1, Ordering::Relaxed);
+                        queues.entry(j.request.bench).or_default().push(j);
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => running = false,
+                }
+                loop {
+                    match rx.try_recv() {
+                        Ok(Msg::Job(j)) => {
+                            metrics_d.submitted.fetch_add(1, Ordering::Relaxed);
+                            queues.entry(j.request.bench).or_default().push(j);
+                        }
+                        Ok(Msg::Shutdown) => {
+                            running = false;
+                            break;
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            running = false;
+                            break;
+                        }
+                    }
+                }
+                // Flush every queue in max_batch chunks.
+                for (_, q) in queues.iter_mut() {
+                    while !q.is_empty() {
+                        let take = q.len().min(max_batch);
+                        let chunk: Vec<Job> = q.drain(..take).collect();
+                        if batch_tx.send(chunk).is_err() {
+                            running = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            // Dropping batch_tx stops the workers.
+            drop(batch_tx);
+            for h in handles {
+                let _ = h.join();
+            }
+        });
+
+        Ok(Coordinator {
+            tx,
+            dispatcher: Some(dispatcher),
+            metrics,
+        })
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, request: Request) -> mpsc::Receiver<Response> {
+        let (reply, rx) = mpsc::channel();
+        let job = Job {
+            request,
+            submitted: Instant::now(),
+            reply,
+        };
+        self.tx.send(Msg::Job(job)).expect("coordinator running");
+        rx
+    }
+
+    /// Drain and stop.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+fn run_jobs(jobs: Vec<Job>, metrics: &Metrics, runtime: Option<&FabricRuntime>) {
+    if jobs.is_empty() {
+        return;
+    }
+    let bench = jobs[0].request.bench;
+    debug_assert!(jobs.iter().all(|j| j.request.bench == bench));
+    let g = bench_defs::build(bench);
+    let workloads: Vec<_> = jobs
+        .iter()
+        .map(|j| bench_defs::workload(bench, j.request.n, j.request.seed))
+        .collect();
+    let cfgs: Vec<_> = workloads.iter().map(|w| w.sim_config()).collect();
+
+    let outcomes = match runtime {
+        Some(rt) => run_batch(&g, &cfgs, &BatchEngine::Xla(rt))
+            .unwrap_or_else(|_| super::batch::run_batch_native(&g, &cfgs)),
+        None => super::batch::run_batch_native(&g, &cfgs),
+    };
+
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    for ((job, wl), outcome) in jobs.into_iter().zip(workloads).zip(outcomes) {
+        let verified = wl
+            .expect
+            .iter()
+            .all(|(port, want)| outcome.stream(port) == want.as_slice());
+        metrics.completed.fetch_add(1, Ordering::Relaxed);
+        if verified {
+            metrics.verified.fetch_add(1, Ordering::Relaxed);
+        }
+        metrics
+            .fabric_cycles
+            .fetch_add(outcome.cycles, Ordering::Relaxed);
+        let latency = job.submitted.elapsed();
+        metrics
+            .total_latency_us
+            .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+        let _ = job.reply.send(Response {
+            request: job.request,
+            outcome,
+            verified,
+            latency,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_mixed_requests_native() {
+        let c = Coordinator::start(2, Engine::Native, None, 8).unwrap();
+        let mut rxs = Vec::new();
+        for (i, bench) in BenchId::ALL.iter().cycle().take(18).enumerate() {
+            rxs.push(c.submit(Request {
+                bench: *bench,
+                n: 3 + i % 5,
+                seed: i as u64,
+            }));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert!(resp.verified, "{:?} failed verification", resp.request);
+        }
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 18);
+        assert_eq!(c.metrics.verified.load(Ordering::Relaxed), 18);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batches_group_same_benchmark() {
+        let c = Coordinator::start(1, Engine::Native, None, 16).unwrap();
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                c.submit(Request {
+                    bench: BenchId::Fibonacci,
+                    n: 5,
+                    seed: i,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        }
+        // 16 same-bench requests in ≤ a handful of batches (timing-
+        // dependent, but far fewer than 16 if batching works at all).
+        let batches = c.metrics.batches.load(Ordering::Relaxed);
+        assert!(batches <= 16);
+        assert!(batches >= 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn metrics_summary_renders() {
+        let m = Metrics::default();
+        m.submitted.store(4, Ordering::Relaxed);
+        m.completed.store(4, Ordering::Relaxed);
+        assert!(m.summary().contains("requests 4/4"));
+    }
+}

@@ -1,0 +1,215 @@
+//! Ergonomic graph construction.
+//!
+//! The builder lets callers create arcs lazily: `node(op, ins, outs)` wires
+//! the given arcs; output slots not supplied are created as fresh internal
+//! arcs retrievable with [`GraphBuilder::out_arc`]. `finish` runs
+//! [`validate`](super::validate::validate).
+
+use super::graph::{Arc, ArcId, Graph, Node, NodeId};
+use super::op::Op;
+use super::validate::{validate, ValidateError};
+
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    g: Graph,
+    next_label: u32,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        GraphBuilder {
+            g: Graph::new(name),
+            next_label: 1,
+        }
+    }
+
+    fn fresh_arc(&mut self, name: Option<String>) -> ArcId {
+        let id = ArcId(self.g.arcs.len() as u32);
+        let name = name.unwrap_or_else(|| {
+            let n = self.next_label;
+            self.next_label += 1;
+            format!("s{n}")
+        });
+        self.g.arcs.push(Arc {
+            id,
+            src: None,
+            dst: None,
+            name,
+        });
+        id
+    }
+
+    /// Create a named environment→fabric port arc.
+    pub fn input_port(&mut self, name: &str) -> ArcId {
+        self.fresh_arc(Some(name.to_string()))
+    }
+
+    /// Create a named fabric→environment port arc.
+    pub fn output_port(&mut self, name: &str) -> ArcId {
+        self.fresh_arc(Some(name.to_string()))
+    }
+
+    /// Create an anonymous internal arc (label `sN`).
+    pub fn wire(&mut self) -> ArcId {
+        self.fresh_arc(None)
+    }
+
+    /// Add an operator. `ins` must supply exactly `op.n_in()` arcs; `outs`
+    /// may supply up to `op.n_out()` arcs — missing outputs become fresh
+    /// internal wires.
+    pub fn node(&mut self, op: Op, ins: &[ArcId], outs: &[ArcId]) -> NodeId {
+        assert_eq!(
+            ins.len(),
+            op.n_in(),
+            "{op:?} takes {} inputs, got {}",
+            op.n_in(),
+            ins.len()
+        );
+        assert!(
+            outs.len() <= op.n_out(),
+            "{op:?} drives {} outputs, got {}",
+            op.n_out(),
+            outs.len()
+        );
+        let id = NodeId(self.g.nodes.len() as u32);
+        let mut all_outs = outs.to_vec();
+        while all_outs.len() < op.n_out() {
+            let w = self.wire();
+            all_outs.push(w);
+        }
+        for (port, &a) in ins.iter().enumerate() {
+            let arc = &mut self.g.arcs[a.0 as usize];
+            assert!(
+                arc.dst.is_none(),
+                "arc {} already has a consumer",
+                arc.name
+            );
+            arc.dst = Some((id, port as u8));
+        }
+        for (port, &a) in all_outs.iter().enumerate() {
+            let arc = &mut self.g.arcs[a.0 as usize];
+            assert!(arc.src.is_none(), "arc {} already has a driver", arc.name);
+            arc.src = Some((id, port as u8));
+        }
+        self.g.nodes.push(Node {
+            id,
+            op,
+            ins: ins.to_vec(),
+            outs: all_outs,
+        });
+        id
+    }
+
+    /// Convenience: a 2-input operator with a fresh output wire; returns
+    /// the output arc.
+    pub fn op2(&mut self, op: Op, a: ArcId, b: ArcId) -> ArcId {
+        let n = self.node(op, &[a, b], &[]);
+        self.out_arc(n, 0)
+    }
+
+    /// Convenience: copy an arc into two fresh wires.
+    pub fn copy(&mut self, a: ArcId) -> (ArcId, ArcId) {
+        let n = self.node(Op::Copy, &[a], &[]);
+        (self.out_arc(n, 0), self.out_arc(n, 1))
+    }
+
+    /// Convenience: copy an arc into `k ≥ 1` wires via a copy chain (the
+    /// paper's copy duplicates to exactly two consumers, so wider fan-out
+    /// is a tree of copies, as in Fig. 7).
+    pub fn copy_n(&mut self, a: ArcId, k: usize) -> Vec<ArcId> {
+        assert!(k >= 1);
+        let mut leaves = vec![a];
+        while leaves.len() < k {
+            let head = leaves.remove(0);
+            let (x, y) = self.copy(head);
+            leaves.push(x);
+            leaves.push(y);
+        }
+        leaves
+    }
+
+    /// Convenience: a constant-token source feeding a fresh wire.
+    pub fn constant(&mut self, v: i16) -> ArcId {
+        let n = self.node(Op::Const(v), &[], &[]);
+        self.out_arc(n, 0)
+    }
+
+    /// The arc driven by output port `port` of node `n`.
+    pub fn out_arc(&self, n: NodeId, port: usize) -> ArcId {
+        self.g.nodes[n.0 as usize].outs[port]
+    }
+
+    /// Rename an arc (used to give loop-exit wires their port names, e.g.
+    /// the paper's `fibo` / `pf` output signals).
+    pub fn rename_arc(&mut self, a: ArcId, name: &str) {
+        self.g.arcs[a.0 as usize].name = name.to_string();
+    }
+
+    /// Validate and return the finished graph.
+    pub fn finish(self) -> Result<Graph, ValidateError> {
+        validate(&self.g)?;
+        Ok(self.g)
+    }
+
+    /// Access the graph under construction (used by the frontend's loop
+    /// schema generator for diagnostics).
+    pub fn graph(&self) -> &Graph {
+        &self.g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_simple_adder() {
+        let mut b = GraphBuilder::new("adder");
+        let a = b.input_port("a");
+        let bb = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, bb], &[z]);
+        let g = b.finish().unwrap();
+        assert_eq!(g.n_nodes(), 1);
+        assert_eq!(g.n_arcs(), 3);
+    }
+
+    #[test]
+    fn copy_n_builds_tree() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let leaves = b.copy_n(a, 5);
+        assert_eq!(leaves.len(), 5);
+        // 5 leaves needs 4 copy nodes (binary tree).
+        assert_eq!(b.graph().nodes.len(), 4);
+        // Terminate leaves so the graph validates.
+        let mut leaves = leaves.into_iter();
+        let first = leaves.next().unwrap();
+        let mut acc = first;
+        for l in leaves {
+            acc = b.op2(Op::Add, acc, l);
+        }
+        let z = b.output_port("z");
+        b.node(Op::Not, &[acc], &[z]);
+        b.finish().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "already has a consumer")]
+    fn rejects_double_consumer() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let z1 = b.output_port("z1");
+        let z2 = b.output_port("z2");
+        b.node(Op::Not, &[a], &[z1]);
+        b.node(Op::Not, &[a], &[z2]); // `a` consumed twice → panic
+    }
+
+    #[test]
+    #[should_panic(expected = "takes 2 inputs")]
+    fn rejects_bad_arity() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        b.node(Op::Add, &[a], &[]);
+    }
+}

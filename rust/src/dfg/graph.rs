@@ -1,0 +1,175 @@
+//! Graph storage: nodes, arcs, ports.
+
+use super::op::Op;
+
+use std::collections::BTreeMap;
+
+/// Index of a node in a [`Graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// Index of an arc in a [`Graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ArcId(pub u32);
+
+/// Direction of an external port.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PortDir {
+    /// Environment → fabric (the paper's `dadoa..dadoj` signals).
+    Input,
+    /// Fabric → environment (the paper's `fibo` / `pf` signals).
+    Output,
+}
+
+/// One operator instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+    /// Input arcs, in operator-port order. For [`Op::DMerge`] port 0 is the
+    /// control input; for [`Op::Branch`] port 0 is the control input.
+    pub ins: Vec<ArcId>,
+    /// Output arcs, in operator-port order. For [`Op::Branch`] port 0 is
+    /// the true output and port 1 the false output.
+    pub outs: Vec<ArcId>,
+}
+
+/// One point-to-point connection: a 16-bit data bus + `str`/`ack` pair.
+///
+/// `src == None` makes this an input port (driven by the environment);
+/// `dst == None` makes it an output port (read by the environment). The
+/// paper's channels allow exactly one sender and one receiver (§3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arc {
+    pub id: ArcId,
+    /// Driving node and its output-port index.
+    pub src: Option<(NodeId, u8)>,
+    /// Consuming node and its input-port index.
+    pub dst: Option<(NodeId, u8)>,
+    /// Label: `sN` for internal arcs, a signal name for ports.
+    pub name: String,
+}
+
+impl Arc {
+    pub fn is_input_port(&self) -> bool {
+        self.src.is_none()
+    }
+    pub fn is_output_port(&self) -> bool {
+        self.dst.is_none()
+    }
+}
+
+/// A static dataflow graph.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub arcs: Vec<Arc>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Graph {
+            name: name.into(),
+            nodes: Vec::new(),
+            arcs: Vec::new(),
+        }
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn arc(&self, id: ArcId) -> &Arc {
+        &self.arcs[id.0 as usize]
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_arcs(&self) -> usize {
+        self.arcs.len()
+    }
+
+    /// Arcs with no driving node, in id order (environment injects here).
+    pub fn input_ports(&self) -> Vec<ArcId> {
+        self.arcs
+            .iter()
+            .filter(|a| a.is_input_port())
+            .map(|a| a.id)
+            .collect()
+    }
+
+    /// Arcs with no consuming node, in id order (environment collects here).
+    pub fn output_ports(&self) -> Vec<ArcId> {
+        self.arcs
+            .iter()
+            .filter(|a| a.is_output_port())
+            .map(|a| a.id)
+            .collect()
+    }
+
+    /// Look up an arc by label.
+    pub fn arc_by_name(&self, name: &str) -> Option<ArcId> {
+        self.arcs.iter().find(|a| a.name == name).map(|a| a.id)
+    }
+
+    /// Operator census by mnemonic — the input to the resource estimator.
+    pub fn op_census(&self) -> BTreeMap<&'static str, usize> {
+        let mut m = BTreeMap::new();
+        for n in &self.nodes {
+            *m.entry(n.op.mnemonic()).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::GraphBuilder;
+
+    use crate::dfg::Op;
+
+    #[test]
+    fn ports_are_classified() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let bb = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, bb], &[z]);
+        let g = b.finish().unwrap();
+        assert_eq!(g.input_ports().len(), 2);
+        assert_eq!(g.output_ports().len(), 1);
+        assert!(g.arc(a).is_input_port());
+        assert!(g.arc(z).is_output_port());
+        assert!(!g.arc(z).is_input_port());
+    }
+
+    #[test]
+    fn census_counts_ops() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let (x, y) = {
+            let c = b.node(Op::Copy, &[a], &[]);
+            (b.out_arc(c, 0), b.out_arc(c, 1))
+        };
+        let z = b.output_port("z");
+        b.node(Op::Add, &[x, y], &[z]);
+        let g = b.finish().unwrap();
+        assert_eq!(g.op_census()["copy"], 1);
+        assert_eq!(g.op_census()["add"], 1);
+    }
+
+    #[test]
+    fn arc_by_name_finds_ports() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("north");
+        let z = b.output_port("south");
+        b.node(Op::Not, &[a], &[z]);
+        let g = b.finish().unwrap();
+        assert_eq!(g.arc_by_name("north"), Some(a));
+        assert_eq!(g.arc_by_name("south"), Some(z));
+        assert_eq!(g.arc_by_name("missing"), None);
+    }
+}

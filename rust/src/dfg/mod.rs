@@ -1,0 +1,23 @@
+//! Dataflow-graph IR.
+//!
+//! A graph is a set of operator [`Node`]s connected by [`Arc`]s. An arc is
+//! the paper's 16-bit parallel data bus plus its `str`/`ack` control pair
+//! (Fig. 2); under the **static** dataflow rule it can hold at most one
+//! token at any time. Arcs with no producer are *input ports* (data is
+//! injected from the environment) and arcs with no consumer are *output
+//! ports* (tokens are collected by the environment), matching the paper's
+//! `dadoa..dadoj` / `fibo` / `pf` signals.
+
+mod builder;
+mod graph;
+mod op;
+pub mod optimize;
+pub mod schema;
+mod validate;
+
+pub use builder::GraphBuilder;
+pub use optimize::eliminate_dead_copies;
+pub use graph::{Arc, ArcId, Graph, Node, NodeId, PortDir};
+pub use op::{Op, OpClass, Word};
+pub use schema::build_loop;
+pub use validate::{validate, ValidateError};

@@ -1,0 +1,320 @@
+//! The operator set.
+//!
+//! These are Veen's classic static-dataflow operators as the paper lists
+//! them (§3.2): `copy`, deterministic merge, non-deterministic merge,
+//! `branch`, the relational *deciders*, and the primitive ALU operators.
+//! We add two substrate operators the paper's benchmarks imply but do not
+//! name — a constant source and a k-bounded FIFO (for stream recirculation
+//! in bubble sort) — and document them as extensions in DESIGN.md.
+
+
+
+/// The machine word travelling on every data bus: the paper uses 16-bit
+/// buses, so all arithmetic is two's-complement 16-bit with wrap-around.
+pub type Word = i16;
+
+/// Operator opcode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    // ---- structural operators --------------------------------------
+    /// Duplicate one token to two consumers (1 in, 2 out).
+    Copy,
+    /// Non-deterministic two-way merge: first token to arrive on either
+    /// input is forwarded (2 in, 1 out).
+    NdMerge,
+    /// Deterministic (controlled) merge: a boolean control token selects
+    /// which data input is consumed and forwarded (ctl + 2 data in, 1 out).
+    DMerge,
+    /// Controlled branch: a boolean control token routes the data token to
+    /// the true or the false output (ctl + 1 data in, 2 out).
+    Branch,
+
+    // ---- primitive ALU operators (2 in, 1 out) ---------------------
+    Add,
+    Sub,
+    Mul,
+    Div,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+
+    // ---- unary (1 in, 1 out) ---------------------------------------
+    Not,
+
+    // ---- relational deciders (2 in, 1 boolean out) ------------------
+    /// `a > b` — the paper's `gtdecider` / `IFgt`.
+    IfGt,
+    IfGe,
+    IfLt,
+    IfLe,
+    IfEq,
+    /// `a != b` — the paper's `IFdf` ("different").
+    IfDf,
+
+    // ---- substrate extensions (documented in DESIGN.md §2) ----------
+    /// Emits one constant token at reset, then never again. Used for the
+    /// initial tokens the paper wires through `dadoX` init ports.
+    Const(Word),
+    /// k-bounded FIFO queue (1 in, 1 out). Breaks the single-token rule
+    /// *internally* (it is a chain of k arcs in the paper's model); used
+    /// for stream recirculation (bubble-sort passes).
+    Fifo(u16),
+}
+
+/// Coarse operator classes — used by the resource estimator, the VHDL
+/// backend (one entity template per class) and the vectorized fabric
+/// kernel (fire-rule selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    Copy,
+    NdMerge,
+    DMerge,
+    Branch,
+    Alu2,
+    Alu1,
+    Decider,
+    Const,
+    Fifo,
+}
+
+impl Op {
+    /// Number of input arcs this operator requires.
+    pub fn n_in(self) -> usize {
+        match self {
+            Op::Const(_) => 0,
+            Op::Copy | Op::Not | Op::Fifo(_) => 1,
+            Op::DMerge => 3,
+            _ => 2,
+        }
+    }
+
+    /// Number of output arcs this operator drives.
+    pub fn n_out(self) -> usize {
+        match self {
+            Op::Copy | Op::Branch => 2,
+            _ => 1,
+        }
+    }
+
+    pub fn class(self) -> OpClass {
+        match self {
+            Op::Copy => OpClass::Copy,
+            Op::NdMerge => OpClass::NdMerge,
+            Op::DMerge => OpClass::DMerge,
+            Op::Branch => OpClass::Branch,
+            Op::Not => OpClass::Alu1,
+            Op::Add
+            | Op::Sub
+            | Op::Mul
+            | Op::Div
+            | Op::And
+            | Op::Or
+            | Op::Xor
+            | Op::Shl
+            | Op::Shr => OpClass::Alu2,
+            Op::IfGt | Op::IfGe | Op::IfLt | Op::IfLe | Op::IfEq | Op::IfDf => OpClass::Decider,
+            Op::Const(_) => OpClass::Const,
+            Op::Fifo(_) => OpClass::Fifo,
+        }
+    }
+
+    /// The assembler mnemonic (Listing 1 of the paper).
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            Op::Copy => "copy",
+            Op::NdMerge => "ndmerge",
+            Op::DMerge => "dmerge",
+            Op::Branch => "branch",
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::Mul => "mul",
+            Op::Div => "div",
+            Op::And => "and",
+            Op::Or => "or",
+            Op::Xor => "xor",
+            Op::Shl => "shl",
+            Op::Shr => "shr",
+            Op::Not => "not",
+            Op::IfGt => "gtdecider",
+            Op::IfGe => "gedecider",
+            Op::IfLt => "ltdecider",
+            Op::IfLe => "ledecider",
+            Op::IfEq => "eqdecider",
+            Op::IfDf => "dfdecider",
+            Op::Const(_) => "const",
+            Op::Fifo(_) => "fifo",
+        }
+    }
+
+    /// Parse an assembler mnemonic (the inverse of [`Op::mnemonic`] for all
+    /// parameter-free operators; `const`/`fifo` carry their parameter as a
+    /// trailing `#imm` argument handled by the parser).
+    pub fn from_mnemonic(s: &str) -> Option<Op> {
+        Some(match s {
+            "copy" => Op::Copy,
+            "ndmerge" => Op::NdMerge,
+            "dmerge" => Op::DMerge,
+            "branch" => Op::Branch,
+            "add" => Op::Add,
+            "sub" => Op::Sub,
+            "mul" => Op::Mul,
+            "div" => Op::Div,
+            "and" => Op::And,
+            "or" => Op::Or,
+            "xor" => Op::Xor,
+            "shl" => Op::Shl,
+            "shr" => Op::Shr,
+            "not" => Op::Not,
+            "gtdecider" | "ifgt" => Op::IfGt,
+            "gedecider" | "ifge" => Op::IfGe,
+            "ltdecider" | "iflt" => Op::IfLt,
+            "ledecider" | "ifle" => Op::IfLe,
+            "eqdecider" | "ifeq" => Op::IfEq,
+            "dfdecider" | "ifdf" => Op::IfDf,
+            _ => return None,
+        })
+    }
+
+    /// Evaluate a 2-input ALU / decider opcode on 16-bit words with the
+    /// paper's wrap-around semantics. Division by zero yields 0 (the
+    /// hardware's divider is documented to saturate low). Shift counts are
+    /// masked to 4 bits (a 16-bit barrel shifter).
+    pub fn eval2(self, a: Word, b: Word) -> Word {
+        match self {
+            Op::Add => a.wrapping_add(b),
+            Op::Sub => a.wrapping_sub(b),
+            Op::Mul => a.wrapping_mul(b),
+            Op::Div => {
+                if b == 0 {
+                    0
+                } else {
+                    a.wrapping_div(b)
+                }
+            }
+            Op::And => a & b,
+            Op::Or => a | b,
+            Op::Xor => a ^ b,
+            Op::Shl => a.wrapping_shl((b & 0xf) as u32),
+            Op::Shr => a.wrapping_shr((b & 0xf) as u32),
+            Op::IfGt => (a > b) as Word,
+            Op::IfGe => (a >= b) as Word,
+            Op::IfLt => (a < b) as Word,
+            Op::IfLe => (a <= b) as Word,
+            Op::IfEq => (a == b) as Word,
+            Op::IfDf => (a != b) as Word,
+            _ => panic!("eval2 on non-binary operator {self:?}"),
+        }
+    }
+
+    /// Evaluate a unary opcode.
+    pub fn eval1(self, a: Word) -> Word {
+        match self {
+            Op::Not => !a,
+            _ => panic!("eval1 on non-unary operator {self:?}"),
+        }
+    }
+
+    /// A stable small integer id for the vectorized fabric kernel; must
+    /// match `OPCODES` in `python/compile/kernels/fabric.py`.
+    pub fn fabric_opcode(self) -> i32 {
+        match self {
+            Op::Add => 0,
+            Op::Sub => 1,
+            Op::Mul => 2,
+            Op::Div => 3,
+            Op::And => 4,
+            Op::Or => 5,
+            Op::Xor => 6,
+            Op::Shl => 7,
+            Op::Shr => 8,
+            Op::IfGt => 9,
+            Op::IfGe => 10,
+            Op::IfLt => 11,
+            Op::IfLe => 12,
+            Op::IfEq => 13,
+            Op::IfDf => 14,
+            Op::Not => 15,
+            // Structural ops pass their (selected) input through the ALU
+            // unchanged so one kernel covers the whole operator array.
+            Op::Copy | Op::NdMerge | Op::DMerge | Op::Branch | Op::Fifo(_) => 16,
+            Op::Const(_) => 17,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_matches_paper() {
+        // §3.2.1: primitive/relational/ndmerge are 2-in 1-out, dmerge is
+        // 3-in 1-out, branch is 2-in 2-out, copy is 1-in 2-out.
+        assert_eq!((Op::Add.n_in(), Op::Add.n_out()), (2, 1));
+        assert_eq!((Op::IfGt.n_in(), Op::IfGt.n_out()), (2, 1));
+        assert_eq!((Op::NdMerge.n_in(), Op::NdMerge.n_out()), (2, 1));
+        assert_eq!((Op::DMerge.n_in(), Op::DMerge.n_out()), (3, 1));
+        assert_eq!((Op::Branch.n_in(), Op::Branch.n_out()), (2, 2));
+        assert_eq!((Op::Copy.n_in(), Op::Copy.n_out()), (1, 2));
+    }
+
+    #[test]
+    fn eval2_wraps_16bit() {
+        assert_eq!(Op::Add.eval2(i16::MAX, 1), i16::MIN);
+        assert_eq!(Op::Mul.eval2(256, 256), 0);
+        assert_eq!(Op::Sub.eval2(i16::MIN, 1), i16::MAX);
+    }
+
+    #[test]
+    fn div_by_zero_is_zero() {
+        assert_eq!(Op::Div.eval2(123, 0), 0);
+        assert_eq!(Op::Div.eval2(-7, 2), -3);
+    }
+
+    #[test]
+    fn deciders_are_boolean() {
+        for op in [Op::IfGt, Op::IfGe, Op::IfLt, Op::IfLe, Op::IfEq, Op::IfDf] {
+            for (a, b) in [(3, 5), (5, 3), (4, 4), (-1, 1)] {
+                let v = op.eval2(a, b);
+                assert!(v == 0 || v == 1, "{op:?}({a},{b}) = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn mnemonic_roundtrip() {
+        for op in [
+            Op::Copy,
+            Op::NdMerge,
+            Op::DMerge,
+            Op::Branch,
+            Op::Add,
+            Op::Sub,
+            Op::Mul,
+            Op::Div,
+            Op::And,
+            Op::Or,
+            Op::Xor,
+            Op::Shl,
+            Op::Shr,
+            Op::Not,
+            Op::IfGt,
+            Op::IfGe,
+            Op::IfLt,
+            Op::IfLe,
+            Op::IfEq,
+            Op::IfDf,
+        ] {
+            assert_eq!(Op::from_mnemonic(op.mnemonic()), Some(op));
+        }
+    }
+
+    #[test]
+    fn shifts_mask_to_4_bits() {
+        assert_eq!(Op::Shl.eval2(1, 16), 1); // 16 & 0xf == 0
+        assert_eq!(Op::Shl.eval2(1, 4), 16);
+        assert_eq!(Op::Shr.eval2(-16, 2), -4); // arithmetic shift
+    }
+}

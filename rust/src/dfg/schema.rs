@@ -1,0 +1,237 @@
+//! The canonical loop schema.
+//!
+//! Every benchmark in the paper is (at heart) a counted or conditional
+//! loop, and its dataflow graph is the classic Dennis *while-schema* the
+//! Fibonacci graph (Fig. 7) instantiates: per loop variable a merge node
+//! re-admits either the initial value or the back-edge value, copies feed
+//! the loop condition, a decider produces the control token, a copy tree
+//! fans the control out, and one branch per variable routes it back into
+//! the body (TRUE) or out to the exit (FALSE).
+//!
+//! [`build_loop`] generates that schema. It is used both by the hand-built
+//! benchmark graphs in [`crate::bench_defs`] and by the mini-C frontend's
+//! loop lowering, and it nests: an inner loop's init arcs may come from an
+//! outer loop's body, in which case the inner loop re-initializes on every
+//! outer iteration (see the bubble-sort graph).
+
+use super::builder::GraphBuilder;
+use super::graph::ArcId;
+use super::op::Op;
+
+/// Build a `while cond(vars) { vars = body(vars) }` schema.
+///
+/// * `inits` — one arc per loop variable carrying its initial token
+///   (a `Const`, an input port, or an arc produced by an enclosing loop).
+/// * `cond_uses` — indices of the variables the condition reads; those are
+///   copied so both the condition and the body see them.
+/// * `cond` — receives one arc per `cond_uses` entry (same order) and must
+///   return a boolean (0/1) arc, typically from a decider.
+/// * `body` — receives the gated variable arcs (TRUE side of the branches)
+///   and must return exactly one *next-value* arc per variable. Returning
+///   a gated arc unchanged makes that variable loop-invariant.
+///
+/// Returns the exit arcs (FALSE side of the branches), one per variable,
+/// in variable order. Unused exits dangle as anonymous output ports; name
+/// the interesting ones with [`GraphBuilder::rename_arc`].
+pub fn build_loop(
+    b: &mut GraphBuilder,
+    inits: &[ArcId],
+    cond_uses: &[usize],
+    cond: impl FnOnce(&mut GraphBuilder, &[ArcId]) -> ArcId,
+    body: impl FnOnce(&mut GraphBuilder, &[ArcId]) -> Vec<ArcId>,
+) -> Vec<ArcId> {
+    let n = inits.len();
+    assert!(n > 0, "a loop needs at least one variable");
+    assert!(cond_uses.iter().all(|&i| i < n), "cond_uses out of range");
+
+    // Merged values: pre-created wires, driven by the merge nodes at the
+    // end (the builder allows using an arc before its driver exists).
+    let merged: Vec<ArcId> = (0..n).map(|_| b.wire()).collect();
+
+    // Condition taps: vars the condition reads are copied; the branch-data
+    // side uses the other copy. Everything else goes straight to a branch.
+    let mut branch_data: Vec<ArcId> = Vec::with_capacity(n);
+    let mut cond_args: Vec<ArcId> = Vec::with_capacity(cond_uses.len());
+    for (i, &m) in merged.iter().enumerate() {
+        if cond_uses.contains(&i) {
+            let (c_arc, d_arc) = b.copy(m);
+            cond_args.push(c_arc);
+            branch_data.push(d_arc);
+        } else {
+            branch_data.push(m);
+        }
+    }
+    // `cond_args` was filled in ascending variable order (one tap per
+    // distinct variable); hand them to `cond` in `cond_uses` order. A
+    // condition reading the same variable twice must copy it itself.
+    let mut sorted: Vec<usize> = cond_uses.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(
+        sorted.len(),
+        cond_uses.len(),
+        "cond_uses must be distinct; copy inside `cond` to reuse a variable"
+    );
+    let ordered: Vec<ArcId> = cond_uses
+        .iter()
+        .map(|&u| cond_args[sorted.iter().position(|&v| v == u).unwrap()])
+        .collect();
+
+    let ctl = cond(b, &ordered);
+
+    // Fan the control token out to one branch per variable.
+    let ctl_taps = b.copy_n(ctl, n);
+
+    // Branches: TRUE → gated (into body), FALSE → exit.
+    let mut gated = Vec::with_capacity(n);
+    let mut exits = Vec::with_capacity(n);
+    for i in 0..n {
+        let nid = b.node(Op::Branch, &[ctl_taps[i], branch_data[i]], &[]);
+        gated.push(b.out_arc(nid, 0));
+        exits.push(b.out_arc(nid, 1));
+    }
+
+    // Body computes next values.
+    let next = body(b, &gated);
+    assert_eq!(
+        next.len(),
+        n,
+        "body must return one next-value arc per loop variable"
+    );
+
+    // Merges close the cycle: NdMerge(init, back) → merged wire. The init
+    // token always arrives before the first back-edge token, so the
+    // non-determinism is benign (§3.2 item 4).
+    for i in 0..n {
+        b.node(Op::NdMerge, &[inits[i], next[i]], &[merged[i]]);
+    }
+
+    exits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::Op;
+    use crate::sim::{run_dynamic, run_fsm, run_token, SimConfig};
+
+    /// sum = Σ_{i<n} i, the smallest interesting counted loop.
+    fn sum_graph() -> crate::dfg::Graph {
+        let mut b = GraphBuilder::new("sum");
+        let n = b.input_port("n");
+        let i0 = b.constant(0);
+        let one0 = b.constant(1);
+        let acc0 = b.constant(0);
+        let exits = build_loop(
+            &mut b,
+            &[i0, n, one0, acc0],
+            &[0, 1],
+            |b, c| b.op2(Op::IfLt, c[0], c[1]),
+            |b, g| {
+                // i' = i + 1 (uses a copy of `one`); acc' = acc + i.
+                let (one_use, one_back) = b.copy(g[2]);
+                let (i_use, i_acc) = b.copy(g[0]);
+                let i_next = b.op2(Op::Add, i_use, one_use);
+                let acc_next = b.op2(Op::Add, g[3], i_acc);
+                vec![i_next, g[1], one_back, acc_next]
+            },
+        );
+        b.rename_arc(exits[3], "sum");
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn counted_loop_sums() {
+        let g = sum_graph();
+        for n in [0i16, 1, 5, 10, 100] {
+            let cfg = SimConfig::new().inject("n", vec![n]);
+            let out = run_token(&g, &cfg);
+            let expect: i16 = (0..n).sum();
+            assert_eq!(out.last("sum"), Some(expect), "n={n}");
+            assert!(out.quiescent, "n={n} must quiesce");
+        }
+    }
+
+    #[test]
+    fn all_three_engines_agree_on_loop() {
+        let g = sum_graph();
+        let cfg = SimConfig::new().inject("n", vec![7]);
+        let tok = run_token(&g, &cfg);
+        let fsm = run_fsm(&g, &cfg);
+        let dy = run_dynamic(&g, &cfg, 4);
+        assert_eq!(tok.last("sum"), Some(21));
+        assert_eq!(fsm.outputs.get("sum"), tok.outputs.get("sum"));
+        assert_eq!(dy.outputs.get("sum"), tok.outputs.get("sum"));
+    }
+
+    #[test]
+    fn nested_loops_reinitialize() {
+        // total = Σ_{k<m} Σ_{i<n} 1  == m*n
+        let mut b = GraphBuilder::new("nest");
+        let m = b.input_port("m");
+        let n = b.input_port("n");
+        let k0 = b.constant(0);
+        let one0 = b.constant(1);
+        let zero0 = b.constant(0);
+        let tot0 = b.constant(0);
+        let exits = build_loop(
+            &mut b,
+            &[k0, m, one0, zero0, tot0, n],
+            &[0, 1],
+            |b, c| b.op2(Op::IfLt, c[0], c[1]),
+            |b, g| {
+                // inner: for i in 0..n { t += 1 }
+                let (one_k, one_in) = b.copy(g[2]);
+                let (zero_in, zero_back) = b.copy(g[3]);
+                let (n_in_0, _n_unused) = (g[5], ());
+                let inner_exits = build_loop(
+                    b,
+                    &[zero_in, n_in_0, one_in, g[4]],
+                    &[0, 1],
+                    |b, c| b.op2(Op::IfLt, c[0], c[1]),
+                    |b, g| {
+                        let (one_use, one_back) = b.copy(g[2]);
+                        let i_next = b.op2(Op::Add, g[0], one_use);
+                        let (one_use2, one_back2) = b.copy(one_back);
+                        let t_next = b.op2(Op::Add, g[3], one_use2);
+                        vec![i_next, g[1], one_back2, t_next]
+                    },
+                );
+                let k_next = b.op2(Op::Add, g[0], one_k);
+                // inner exits: [i_f, n_f, one_f, t_f]
+                vec![
+                    k_next,
+                    g[1],
+                    inner_exits[2],
+                    zero_back,
+                    inner_exits[3],
+                    inner_exits[1],
+                ]
+            },
+        );
+        b.rename_arc(exits[4], "total");
+        let g = b.finish().unwrap();
+        for (m_v, n_v) in [(0, 5), (3, 0), (2, 3), (4, 4)] {
+            let cfg = SimConfig::new()
+                .inject("m", vec![m_v])
+                .inject("n", vec![n_v])
+                .max_cycles(200_000);
+            let out = run_token(&g, &cfg);
+            assert_eq!(out.last("total"), Some(m_v * n_v), "m={m_v} n={n_v}");
+        }
+    }
+
+    #[test]
+    fn single_token_invariant_holds_during_loop() {
+        let g = sum_graph();
+        let cfg = SimConfig::new().inject("n", vec![12]);
+        let mut sim = crate::sim::TokenSim::new(&g, &cfg);
+        for _ in 0..5000 {
+            sim.step();
+            // occupancy() counts arcs holding a token; by construction an
+            // arc can never hold two (Option<Word>), but the invariant we
+            // check is global sanity: never more tokens than arcs.
+            assert!(sim.occupancy() <= g.n_arcs());
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Structural validation.
+//!
+//! Enforces the paper's channel discipline (§3: each channel has exactly
+//! one sender and one receiver) and operator arities (§3.2.1).
+
+use super::graph::{Graph, NodeId};
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ValidateError {
+    #[error("node {0:?} ({1}): expected {2} inputs, found {3}")]
+    BadInArity(NodeId, String, usize, usize),
+    #[error("node {0:?} ({1}): expected {2} outputs, found {3}")]
+    BadOutArity(NodeId, String, usize, usize),
+    #[error("anonymous wire `{0}` has no driver and no consumer")]
+    Dangling(String),
+    #[error("arc `{0}` driver/consumer bookkeeping is inconsistent")]
+    Inconsistent(String),
+    #[error("duplicate arc label `{0}`")]
+    DuplicateLabel(String),
+    #[error("graph has no nodes")]
+    Empty,
+}
+
+/// Check structural invariants. The builder maintains most of these by
+/// construction; the assembler parser and deserialized graphs rely on this
+/// as their only line of defence.
+pub fn validate(g: &Graph) -> Result<(), ValidateError> {
+    if g.nodes.is_empty() {
+        return Err(ValidateError::Empty);
+    }
+    let mut seen = std::collections::HashSet::new();
+    for a in &g.arcs {
+        if !seen.insert(a.name.as_str()) {
+            return Err(ValidateError::DuplicateLabel(a.name.clone()));
+        }
+        if a.src.is_none() && a.dst.is_none() {
+            // A named port with no connection is legal hardware (an
+            // unused top-level pin, e.g. a declared-but-unread input);
+            // an unconnected anonymous wire (`sN`) is a builder bug.
+            let is_wire = a.name.starts_with('s')
+                && a.name.len() > 1
+                && a.name[1..].chars().all(|c| c.is_ascii_digit());
+            if is_wire {
+                return Err(ValidateError::Dangling(a.name.clone()));
+            }
+        }
+        if let Some((nid, port)) = a.src {
+            let n = g.node(nid);
+            if n.outs.get(port as usize) != Some(&a.id) {
+                return Err(ValidateError::Inconsistent(a.name.clone()));
+            }
+        }
+        if let Some((nid, port)) = a.dst {
+            let n = g.node(nid);
+            if n.ins.get(port as usize) != Some(&a.id) {
+                return Err(ValidateError::Inconsistent(a.name.clone()));
+            }
+        }
+    }
+    for n in &g.nodes {
+        if n.ins.len() != n.op.n_in() {
+            return Err(ValidateError::BadInArity(
+                n.id,
+                n.op.mnemonic().to_string(),
+                n.op.n_in(),
+                n.ins.len(),
+            ));
+        }
+        if n.outs.len() != n.op.n_out() {
+            return Err(ValidateError::BadOutArity(
+                n.id,
+                n.op.mnemonic().to_string(),
+                n.op.n_out(),
+                n.outs.len(),
+            ));
+        }
+        for (port, &a) in n.ins.iter().enumerate() {
+            if g.arc(a).dst != Some((n.id, port as u8)) {
+                return Err(ValidateError::Inconsistent(g.arc(a).name.clone()));
+            }
+        }
+        for (port, &a) in n.outs.iter().enumerate() {
+            if g.arc(a).src != Some((n.id, port as u8)) {
+                return Err(ValidateError::Inconsistent(g.arc(a).name.clone()));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{GraphBuilder, Op};
+    use super::*;
+
+    #[test]
+    fn valid_graph_passes() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, c], &[z]);
+        assert!(b.finish().is_ok());
+    }
+
+    #[test]
+    fn empty_graph_fails() {
+        let g = Graph::new("empty");
+        assert_eq!(validate(&g), Err(ValidateError::Empty));
+    }
+
+    #[test]
+    fn corrupted_bookkeeping_fails() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, c], &[z]);
+        let mut g = b.finish().unwrap();
+        // Corrupt: point the node's input somewhere else.
+        g.nodes[0].ins[0] = z;
+        assert!(validate(&g).is_err());
+    }
+
+    #[test]
+    fn duplicate_labels_fail() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("x");
+        let c = b.input_port("x");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, c], &[z]);
+        assert_eq!(
+            b.finish().unwrap_err(),
+            ValidateError::DuplicateLabel("x".into())
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Structural resource + timing estimation.
+//!
+//! The paper reports post-synthesis FF / LUT / Slice counts and maximum
+//! frequency from Xilinx ISE 13.1 on a Virtex-7 (7v285tffg1157-3). We have
+//! no synthesis toolchain, so this module computes the same quantities
+//! *structurally* from the RTL inventory the VHDL backend emits — the
+//! registers of Fig. 5, the ASM-chart FSM of Fig. 6, and the per-class ALU
+//! logic — using per-primitive costs for a Virtex-class 6-input-LUT
+//! fabric.
+//!
+//! Two models are reported:
+//!
+//! * [`estimate_raw`] — every register the RTL declares (three 16-bit data
+//!   registers per binary operator, presence bits, FSM). This is what the
+//!   paper's Fig. 5 datapath literally instantiates.
+//! * [`estimate`] — the *post-synthesis* model: cross-operator register
+//!   retiming merges each consumer input register into the producer output
+//!   register (one register per arc), and arcs that only ever carry
+//!   booleans (decider outputs feeding `branch`/`dmerge` control ports)
+//!   are trimmed to 1 bit. This mirrors what ISE's retiming/trimming does
+//!   and is the model Table 1 is reproduced with.
+//!
+//! The paper's own Table 1 FF counts are smaller than its Fig. 5 datapath
+//! can possibly synthesize to (e.g. Fibonacci: 20 operators × 3 × 16-bit
+//! registers ≫ 72 FF), so absolute matching is impossible by
+//! construction; EXPERIMENTS.md compares *orderings and ratios*, which is
+//! what Fig. 8 argues from. DESIGN.md §2 discusses this discrepancy.
+
+mod fmax;
+mod model;
+
+pub use fmax::{critical_path_ns, fmax_mhz, op_delay_ns};
+pub use model::{estimate, estimate_raw, estimate_trimmed, op_cost, OpCost, Resources, WORD_BITS};

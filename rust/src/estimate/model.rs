@@ -1,0 +1,260 @@
+//! FF/LUT/slice models.
+
+use crate::dfg::{Graph, Op, OpClass};
+
+/// Data-bus width (the paper's 16-bit parallel buses, §3.1).
+pub const WORD_BITS: u32 = 16;
+
+/// Estimated resources for one design.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub ff: u32,
+    pub lut: u32,
+    pub slices: u32,
+    /// Block-RAM bits (FIFO substrate only; the paper's operator set has
+    /// no memory, so this is zero for all Table-1 graphs except the
+    /// bubble-sort recirculation buffer).
+    pub bram_bits: u32,
+    pub fmax_mhz: f64,
+}
+
+impl Resources {
+    pub fn add(&mut self, o: &Resources) {
+        self.ff += o.ff;
+        self.lut += o.lut;
+        self.slices += o.slices;
+        self.bram_bits += o.bram_bits;
+    }
+}
+
+/// Per-operator primitive costs (Virtex-class fabric, 6-input LUTs).
+#[derive(Debug, Clone, Copy)]
+pub struct OpCost {
+    /// ALU/datapath LUTs for the operator's combinational function.
+    pub alu_lut: u32,
+    /// Extra control LUTs beyond the standard FSM decode.
+    pub ctl_lut: u32,
+}
+
+/// Combinational cost of each operator class/opcode.
+pub fn op_cost(op: Op) -> OpCost {
+    let w = WORD_BITS;
+    match op {
+        // 16-bit ripple/carry-chain adder or subtractor: 1 LUT/bit.
+        Op::Add | Op::Sub => OpCost { alu_lut: w, ctl_lut: 0 },
+        // LUT-mapped 16×16 multiplier (no DSP on the paper's flow is
+        // stated; a Booth-ish LUT array is ≈ w²/2 + w).
+        Op::Mul => OpCost { alu_lut: w * w / 2 + w, ctl_lut: 4 },
+        // Iterative restoring divider: subtractor + shifter + control.
+        Op::Div => OpCost { alu_lut: w * 3 + 24, ctl_lut: 8 },
+        // Bitwise: 1 LUT per bit (two operands fit one 6-LUT).
+        Op::And | Op::Or | Op::Xor => OpCost { alu_lut: w, ctl_lut: 0 },
+        Op::Not => OpCost { alu_lut: w, ctl_lut: 0 },
+        // 16-bit barrel shifter: log2(w) mux stages ≈ w·4/2.
+        Op::Shl | Op::Shr => OpCost { alu_lut: w * 2, ctl_lut: 0 },
+        // Comparator: carry-chain compare, ~1 LUT per 2 bits + sign.
+        Op::IfGt | Op::IfGe | Op::IfLt | Op::IfLe | Op::IfEq | Op::IfDf => OpCost {
+            alu_lut: w / 2 + 2,
+            ctl_lut: 0,
+        },
+        // Structural operators: muxes / demux enables.
+        Op::Copy => OpCost { alu_lut: 0, ctl_lut: 2 },
+        Op::NdMerge => OpCost { alu_lut: w, ctl_lut: 3 }, // 2:1 mux + arbiter
+        Op::DMerge => OpCost { alu_lut: w, ctl_lut: 2 },  // 2:1 mux
+        Op::Branch => OpCost { alu_lut: 0, ctl_lut: 4 },  // demux enables
+        Op::Const(_) => OpCost { alu_lut: 0, ctl_lut: 1 },
+        Op::Fifo(_) => OpCost { alu_lut: 8, ctl_lut: 6 }, // pointers + full/empty
+    }
+}
+
+/// FSM + handshake cost shared by every operator (Fig. 6): 2 state FF,
+/// ~3 LUTs of next-state decode, plus 1 FF + 1 LUT per port of strobe /
+/// acknowledge logic (Fig. 3).
+fn fsm_cost(op: Op) -> (u32, u32) {
+    let ports = (op.n_in() + op.n_out()) as u32;
+    let ff = 2 + ports; // state + bita/bitb/bitz presence bits
+    let lut = 3 + ports;
+    (ff, lut)
+}
+
+/// Is this arc's payload a 1-bit boolean? True when it is driven by a
+/// decider and/or consumed by a control port (branch/dmerge port 0) —
+/// synthesis trims such buses to one bit.
+fn arc_is_control(g: &Graph, arc: crate::dfg::ArcId) -> bool {
+    let a = g.arc(arc);
+    let driven_by_decider = a
+        .src
+        .map(|(n, _)| g.node(n).op.class() == OpClass::Decider)
+        .unwrap_or(false);
+    let consumed_as_ctl = a
+        .dst
+        .map(|(n, p)| {
+            matches!(g.node(n).op, Op::Branch | Op::DMerge) && p == 0
+        })
+        .unwrap_or(false);
+    driven_by_decider || consumed_as_ctl
+}
+
+/// Slice packing: Virtex-7 slices hold 4 LUTs + 8 FF; real packers
+/// achieve ~60-70% LUT packing on control-heavy designs, and the
+/// paper's netlists are extremely routing-dominated (every operator has
+/// its own handshake nets), which is why Table 1's slice counts exceed
+/// its LUT counts. We model that with a routing-expansion term
+/// proportional to arc count.
+fn pack_slices(ff: u32, lut: u32, n_arcs: u32) -> u32 {
+    let by_lut = (lut as f64 / 2.6).ceil() as u32; // poor packing
+    let by_ff = (ff as f64 / 8.0).ceil() as u32;
+    by_lut.max(by_ff) + n_arcs // routing-only slices, one per channel
+}
+
+/// Post-synthesis model: one data register per *arc* (producer output
+/// register; consumer input registers retimed away), boolean arcs trimmed
+/// to 1 bit, FSM + handshake per node, ALU logic per opcode.
+pub fn estimate(g: &Graph) -> Resources {
+    let mut r = Resources::default();
+    for n in &g.nodes {
+        let (fsm_ff, fsm_lut) = fsm_cost(n.op);
+        let c = op_cost(n.op);
+        r.ff += fsm_ff;
+        r.lut += fsm_lut + c.alu_lut + c.ctl_lut;
+        if let Op::Fifo(depth) = n.op {
+            // FIFO storage maps to BRAM; pointers are fabric FF.
+            r.bram_bits += depth as u32 * WORD_BITS;
+            r.ff += 2 * 11; // read/write pointers up to 2^11 entries
+        }
+    }
+    for a in &g.arcs {
+        // One register per arc, at the payload's trimmed width.
+        let width = if arc_is_control(g, a.id) { 1 } else { WORD_BITS };
+        r.ff += width;
+    }
+    r.slices = pack_slices(r.ff, r.lut, g.n_arcs() as u32);
+    r.fmax_mhz = super::fmax_mhz(g);
+    r
+}
+
+/// Control-only ("as the paper synthesized") model.
+///
+/// Table 1's FF counts for the paper's own system are far below what its
+/// Fig. 5 datapath can synthesize to (Fibonacci: 72 FF for ~20 operators,
+/// i.e. ~3.5 FF per operator — just the FSM state and presence bits).
+/// The only consistent explanation is that ISE trimmed the entire 16-bit
+/// datapath (top-level data buses left unconnected), keeping the control
+/// plane: FSMs, presence bits, handshake nets — which also explains why
+/// the LUT and slice counts stay high while FF collapses. This model
+/// reproduces that measurement so the paper's FF/LUT *orderings* can be
+/// checked; [`estimate`] remains the honest full-datapath model.
+pub fn estimate_trimmed(g: &Graph) -> Resources {
+    let mut r = Resources::default();
+    for n in &g.nodes {
+        let (fsm_ff, fsm_lut) = fsm_cost(n.op);
+        let c = op_cost(n.op);
+        r.ff += fsm_ff;
+        r.lut += fsm_lut + c.alu_lut + c.ctl_lut;
+    }
+    // One presence bit per arc survives (the token is control state).
+    r.ff += g.n_arcs() as u32;
+    r.slices = pack_slices(r.ff, r.lut, g.n_arcs() as u32);
+    r.fmax_mhz = super::fmax_mhz(g);
+    r
+}
+
+/// Raw RTL model: every register Fig. 5 declares (input + output data
+/// registers at full width, presence bits, FSM), no trimming.
+pub fn estimate_raw(g: &Graph) -> Resources {
+    let mut r = Resources::default();
+    for n in &g.nodes {
+        let (fsm_ff, fsm_lut) = fsm_cost(n.op);
+        let c = op_cost(n.op);
+        let data_regs = (n.op.n_in() + n.op.n_out()) as u32 * WORD_BITS;
+        r.ff += fsm_ff + data_regs;
+        r.lut += fsm_lut + c.alu_lut + c.ctl_lut;
+        if let Op::Fifo(depth) = n.op {
+            r.bram_bits += depth as u32 * WORD_BITS;
+            r.ff += 2 * 11;
+        }
+    }
+    r.slices = pack_slices(r.ff, r.lut, g.n_arcs() as u32);
+    r.fmax_mhz = super::fmax_mhz(g);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{build, BenchId};
+    use crate::dfg::{GraphBuilder, Op};
+
+    fn adder_graph() -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, c], &[z]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn single_adder_costs_are_sane() {
+        let r = estimate(&adder_graph());
+        // 3 arcs × 16 FF + FSM(2 + 3 ports) = 48 + 5 = 53 FF.
+        assert_eq!(r.ff, 53);
+        // FSM decode (3+3) + 16 ALU LUTs.
+        assert_eq!(r.lut, 22);
+        assert!(r.slices > 0);
+        assert!(r.fmax_mhz > 100.0);
+    }
+
+    #[test]
+    fn raw_model_is_strictly_larger() {
+        for b in BenchId::ALL {
+            let g = build(b);
+            let post = estimate(&g);
+            let raw = estimate_raw(&g);
+            assert!(raw.ff > post.ff, "{}: raw {} ≤ post {}", b.slug(), raw.ff, post.ff);
+            assert_eq!(raw.lut, post.lut); // trimming only affects FF here
+        }
+    }
+
+    #[test]
+    fn multiplier_dominates_dot_prod_luts() {
+        // The paper's Dot prod row is its FF/LUT outlier; our model must
+        // reproduce that the multiplier makes dot_prod the most
+        // LUT-expensive of the loop benchmarks (bubble sort aside).
+        let dot = estimate(&build(BenchId::DotProd));
+        let fib = estimate(&build(BenchId::Fibonacci));
+        let max = estimate(&build(BenchId::Max));
+        assert!(dot.lut > fib.lut);
+        assert!(dot.lut > max.lut);
+    }
+
+    #[test]
+    fn bubble_sort_is_biggest() {
+        let bubble = estimate(&build(BenchId::BubbleSort));
+        for b in [BenchId::Fibonacci, BenchId::Max, BenchId::VectorSum] {
+            let r = estimate(&build(b));
+            assert!(bubble.ff > r.ff, "bubble vs {}", b.slug());
+            assert!(bubble.lut > r.lut, "bubble vs {}", b.slug());
+        }
+        assert!(bubble.bram_bits > 0);
+    }
+
+    #[test]
+    fn control_arcs_are_trimmed() {
+        // decider → branch ctl: that arc costs 1 FF, not 16.
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let c0 = b.input_port("c0");
+        let d = b.input_port("d");
+        let cond = b.op2(Op::IfGt, a, c0);
+        let t = b.output_port("t");
+        let f = b.output_port("f");
+        b.node(Op::Branch, &[cond, d], &[t, f]);
+        let g = b.finish().unwrap();
+        let r = estimate(&g);
+        // arcs: a,c0,d,t,f = 16×5; cond = 1.
+        let arc_ff: u32 = 16 * 5 + 1;
+        let fsm_ff = (2 + 3) + (2 + 4); // decider ports=3, branch ports=4
+        assert_eq!(r.ff, arc_ff + fsm_ff);
+    }
+}

@@ -1,0 +1,261 @@
+//! Abstract syntax of the mini-C subset.
+
+/// Binary operators, mapped 1:1 onto dataflow ALU/decider opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl BinOp {
+    pub fn to_op(self) -> crate::dfg::Op {
+        use crate::dfg::Op;
+        match self {
+            BinOp::Add => Op::Add,
+            BinOp::Sub => Op::Sub,
+            BinOp::Mul => Op::Mul,
+            BinOp::Div => Op::Div,
+            BinOp::And => Op::And,
+            BinOp::Or => Op::Or,
+            BinOp::Xor => Op::Xor,
+            BinOp::Shl => Op::Shl,
+            BinOp::Shr => Op::Shr,
+            BinOp::Lt => Op::IfLt,
+            BinOp::Le => Op::IfLe,
+            BinOp::Gt => Op::IfGt,
+            BinOp::Ge => Op::IfGe,
+            BinOp::Eq => Op::IfEq,
+            BinOp::Ne => Op::IfDf,
+        }
+    }
+
+    pub fn eval(self, a: i16, b: i16) -> i16 {
+        self.to_op().eval2(a, b)
+    }
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    /// Arithmetic negation (lowered as `0 - e`).
+    Neg,
+    /// Bitwise complement (the dataflow `not`).
+    Not,
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Lit(i16),
+    Var(String),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    Un(UnOp, Box<Expr>),
+    /// `next(stream)` — consume one token from a stream input port.
+    Next(String),
+    /// `pop(fifo)` — consume one token from an on-fabric FIFO.
+    Pop(String),
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `int x = e;`
+    Decl(String, Expr),
+    /// `x = e;`
+    Assign(String, Expr),
+    /// `while (e) { ... }`
+    While(Expr, Vec<Stmt>),
+    /// `if (e) { ... } else { ... }`
+    If(Expr, Vec<Stmt>, Vec<Stmt>),
+    /// `emit(port, e);`
+    Emit(String, Expr),
+    /// `push(fifo, e);`
+    Push(String, Expr),
+}
+
+/// A whole program: port/fifo declarations plus top-level statements.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Program {
+    pub in_ints: Vec<String>,
+    pub in_streams: Vec<String>,
+    pub out_ints: Vec<String>,
+    pub out_streams: Vec<String>,
+    pub fifos: Vec<String>,
+    pub body: Vec<Stmt>,
+}
+
+impl Expr {
+    /// Visit every sub-expression.
+    pub fn walk(&self, f: &mut impl FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Bin(_, a, b) => {
+                a.walk(f);
+                b.walk(f);
+            }
+            Expr::Un(_, a) => a.walk(f),
+            _ => {}
+        }
+    }
+}
+
+impl Stmt {
+    /// Visit every statement (depth-first) and every expression in it.
+    pub fn walk(&self, sf: &mut impl FnMut(&Stmt), ef: &mut impl FnMut(&Expr)) {
+        sf(self);
+        match self {
+            Stmt::Decl(_, e) | Stmt::Assign(_, e) | Stmt::Emit(_, e) | Stmt::Push(_, e) => {
+                e.walk(ef)
+            }
+            Stmt::While(c, body) => {
+                c.walk(ef);
+                for s in body {
+                    s.walk(sf, ef);
+                }
+            }
+            Stmt::If(c, t, e) => {
+                c.walk(ef);
+                for s in t.iter().chain(e) {
+                    s.walk(sf, ef);
+                }
+            }
+        }
+    }
+}
+
+/// All variable names read or written in the statements (not literals,
+/// not stream/fifo names).
+pub fn vars_of(stmts: &[Stmt], cond: Option<&Expr>) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    let mut push = |n: &str| {
+        if !out.iter().any(|v| v == n) {
+            out.push(n.to_string());
+        }
+    };
+    let mut ef = |e: &Expr| {
+        if let Expr::Var(n) = e {
+            push(n);
+        }
+    };
+    if let Some(c) = cond {
+        c.walk(&mut ef);
+    }
+    let mut out2: Vec<String> = Vec::new();
+    for s in stmts {
+        s.walk(
+            &mut |s| match s {
+                Stmt::Decl(n, _) | Stmt::Assign(n, _) => {
+                    if !out2.iter().any(|v| v == n) {
+                        out2.push(n.clone());
+                    }
+                }
+                _ => {}
+            },
+            &mut ef,
+        );
+    }
+    for n in out2 {
+        if !out.iter().any(|v| *v == n) {
+            out.push(n);
+        }
+    }
+    out
+}
+
+/// Variables *assigned* in the statements (excluding fresh `Decl`s, which
+/// are scoped to the block).
+pub fn mutated_of(stmts: &[Stmt]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut declared = Vec::new();
+    for s in stmts {
+        s.walk(
+            &mut |s| match s {
+                Stmt::Decl(n, _) => declared.push(n.clone()),
+                Stmt::Assign(n, _) => {
+                    if !out.contains(n) {
+                        out.push(n.clone());
+                    }
+                }
+                _ => {}
+            },
+            &mut |_| {},
+        );
+    }
+    out.retain(|n| !declared.contains(n));
+    out
+}
+
+/// All integer literals appearing in the statements + condition.
+pub fn literals_of(stmts: &[Stmt], cond: Option<&Expr>) -> Vec<i16> {
+    let mut out = Vec::new();
+    let mut ef = |e: &Expr| {
+        if let Expr::Lit(v) = e {
+            if !out.contains(v) {
+                out.push(*v);
+            }
+        }
+    };
+    if let Some(c) = cond {
+        c.walk(&mut ef);
+    }
+    for s in stmts {
+        s.walk(&mut |_| {}, &mut ef);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(n: &str) -> Expr {
+        Expr::Var(n.into())
+    }
+
+    #[test]
+    fn vars_of_collects_reads_and_writes() {
+        let body = vec![
+            Stmt::Assign("x".into(), Expr::Bin(BinOp::Add, Box::new(v("y")), Box::new(Expr::Lit(1)))),
+            Stmt::While(v("z"), vec![Stmt::Assign("w".into(), Expr::Lit(0))]),
+        ];
+        let vs = vars_of(&body, Some(&v("c")));
+        for n in ["c", "x", "y", "z", "w"] {
+            assert!(vs.iter().any(|s| s == n), "missing {n}");
+        }
+    }
+
+    #[test]
+    fn mutated_excludes_block_locals() {
+        let body = vec![
+            Stmt::Decl("t".into(), Expr::Lit(0)),
+            Stmt::Assign("t".into(), Expr::Lit(1)),
+            Stmt::Assign("x".into(), Expr::Lit(2)),
+        ];
+        let m = mutated_of(&body);
+        assert_eq!(m, vec!["x".to_string()]);
+    }
+
+    #[test]
+    fn literals_dedup() {
+        let body = vec![
+            Stmt::Assign("x".into(), Expr::Bin(BinOp::Add, Box::new(Expr::Lit(1)), Box::new(Expr::Lit(1)))),
+            Stmt::Assign("y".into(), Expr::Lit(2)),
+        ];
+        let mut l = literals_of(&body, None);
+        l.sort();
+        assert_eq!(l, vec![1, 2]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Reference interpreter for the mini-C subset — the oracle for
+//! differential tests against the dataflow lowering.
+
+use super::ast::{Expr, Program, Stmt, UnOp};
+use crate::dfg::Word;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// Interpreter outcome: tokens per output port (scalars are single-token
+/// streams) in emission order.
+#[derive(Debug, Clone, Default)]
+pub struct InterpResult {
+    pub outputs: BTreeMap<String, Vec<Word>>,
+}
+
+struct I<'p> {
+    prog: &'p Program,
+    env: HashMap<String, Word>,
+    streams: HashMap<String, VecDeque<Word>>,
+    fifos: HashMap<String, VecDeque<Word>>,
+    out: InterpResult,
+    fuel: u64,
+}
+
+impl<'p> I<'p> {
+    fn eval(&mut self, e: &Expr) -> Result<Word, String> {
+        Ok(match e {
+            Expr::Lit(v) => *v,
+            Expr::Var(n) => *self
+                .env
+                .get(n)
+                .ok_or_else(|| format!("undefined variable `{n}`"))?,
+            Expr::Bin(op, a, b) => {
+                let va = self.eval(a)?;
+                let vb = self.eval(b)?;
+                op.eval(va, vb)
+            }
+            Expr::Un(UnOp::Neg, a) => 0i16.wrapping_sub(self.eval(a)?),
+            Expr::Un(UnOp::Not, a) => !self.eval(a)?,
+            Expr::Next(s) => self
+                .streams
+                .get_mut(s)
+                .ok_or_else(|| format!("unknown stream `{s}`"))?
+                .pop_front()
+                .ok_or_else(|| format!("stream `{s}` exhausted"))?,
+            Expr::Pop(f) => self
+                .fifos
+                .get_mut(f)
+                .ok_or_else(|| format!("unknown fifo `{f}`"))?
+                .pop_front()
+                .ok_or_else(|| format!("fifo `{f}` empty"))?,
+        })
+    }
+
+    fn exec(&mut self, stmts: &[Stmt]) -> Result<(), String> {
+        for s in stmts {
+            self.fuel = self
+                .fuel
+                .checked_sub(1)
+                .ok_or_else(|| "interpreter fuel exhausted".to_string())?;
+            match s {
+                Stmt::Decl(n, e) | Stmt::Assign(n, e) => {
+                    let v = self.eval(e)?;
+                    if self.prog.out_ints.contains(n) {
+                        self.out.outputs.entry(n.clone()).or_default().push(v);
+                    } else {
+                        self.env.insert(n.clone(), v);
+                    }
+                }
+                Stmt::While(c, body) => {
+                    while self.eval(c)? != 0 {
+                        self.fuel = self
+                            .fuel
+                            .checked_sub(1)
+                            .ok_or_else(|| "interpreter fuel exhausted".to_string())?;
+                        self.exec(body)?;
+                    }
+                }
+                Stmt::If(c, t, e) => {
+                    if self.eval(c)? != 0 {
+                        self.exec(t)?;
+                    } else {
+                        self.exec(e)?;
+                    }
+                }
+                Stmt::Emit(p, e) => {
+                    let v = self.eval(e)?;
+                    self.out.outputs.entry(p.clone()).or_default().push(v);
+                }
+                Stmt::Push(f, e) => {
+                    let v = self.eval(e)?;
+                    self.fifos
+                        .get_mut(f)
+                        .ok_or_else(|| format!("unknown fifo `{f}`"))?
+                        .push_back(v);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run a program on the given input streams (scalar inputs are
+/// single-token streams, matching [`crate::sim::SimConfig::inject`]).
+pub fn interpret(
+    prog: &Program,
+    inject: &BTreeMap<String, Vec<Word>>,
+    fuel: u64,
+) -> Result<InterpResult, String> {
+    let mut i = I {
+        prog,
+        env: HashMap::new(),
+        streams: HashMap::new(),
+        fifos: prog
+            .fifos
+            .iter()
+            .map(|f| (f.clone(), VecDeque::new()))
+            .collect(),
+        out: InterpResult::default(),
+        fuel,
+    };
+    for n in &prog.in_ints {
+        let v = inject
+            .get(n)
+            .and_then(|s| s.first())
+            .copied()
+            .ok_or_else(|| format!("no input for scalar port `{n}`"))?;
+        i.env.insert(n.clone(), v);
+    }
+    for s in &prog.in_streams {
+        let stream = inject.get(s).cloned().unwrap_or_default();
+        i.streams.insert(s.clone(), stream.into());
+    }
+    for p in prog.out_ints.iter().chain(&prog.out_streams) {
+        i.out.outputs.entry(p.clone()).or_default();
+    }
+    i.exec(&prog.body)?;
+    Ok(i.out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lex, parse_program};
+    use super::*;
+
+    fn run(src: &str, inject: &[(&str, Vec<Word>)]) -> InterpResult {
+        let prog = parse_program(&lex(src).unwrap()).unwrap();
+        let inj: BTreeMap<String, Vec<Word>> = inject
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect();
+        interpret(&prog, &inj, 1_000_000).unwrap()
+    }
+
+    #[test]
+    fn interprets_fibonacci() {
+        let r = run(
+            crate::bench_defs::c_source(crate::bench_defs::BenchId::Fibonacci),
+            &[("n", vec![10])],
+        );
+        assert_eq!(r.outputs["fibo"], vec![55]);
+    }
+
+    #[test]
+    fn interprets_streams_and_fifos() {
+        let src = "
+            in stream x;
+            out stream y;
+            fifo q;
+            int i = 0;
+            while (i < 3) {
+                push(q, next(x) * 2);
+                i = i + 1;
+            }
+            int j = 0;
+            while (j < 3) {
+                emit(y, pop(q));
+                j = j + 1;
+            }
+        ";
+        let r = run(src, &[("x", vec![1, 2, 3])]);
+        assert_eq!(r.outputs["y"], vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn fuel_bounds_infinite_loops() {
+        let prog = parse_program(&lex("out int r; int i = 1; while (i > 0) { i = 1; } r = i;").unwrap()).unwrap();
+        assert!(interpret(&prog, &BTreeMap::new(), 10_000).is_err());
+    }
+
+    #[test]
+    fn stream_exhaustion_is_an_error() {
+        let prog =
+            parse_program(&lex("in stream x; out int r; r = next(x);").unwrap()).unwrap();
+        let mut inj = BTreeMap::new();
+        inj.insert("x".to_string(), vec![]);
+        assert!(interpret(&prog, &inj, 1000).is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! Tokenizer for the mini-C subset.
+
+use super::CError;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Token {
+    // keywords
+    In,
+    Out,
+    Int,
+    Stream,
+    Fifo,
+    While,
+    If,
+    Else,
+    Next,
+    Pop,
+    Push,
+    Emit,
+    // punctuation
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    Semi,
+    Comma,
+    Assign,
+    // operators
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Amp,
+    Pipe,
+    Caret,
+    Tilde,
+    Shl,
+    Shr,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    EqEq,
+    Ne,
+    // atoms
+    Ident(String),
+    Num(i32),
+    /// line number marker (internal; lets the parser report lines)
+    Line(usize),
+}
+
+/// Tokenize; interleaves `Token::Line` markers at line starts.
+pub fn lex(src: &str) -> Result<Vec<Token>, CError> {
+    let mut out = Vec::new();
+    for (ln, line) in src.lines().enumerate() {
+        let line_no = ln + 1;
+        out.push(Token::Line(line_no));
+        let line = match line.find("//") {
+            Some(i) => &line[..i],
+            None => line,
+        };
+        let mut it = line.chars().peekable();
+        while let Some(&c) = it.peek() {
+            match c {
+                ' ' | '\t' | '\r' => {
+                    it.next();
+                }
+                '(' => { it.next(); out.push(Token::LParen); }
+                ')' => { it.next(); out.push(Token::RParen); }
+                '{' => { it.next(); out.push(Token::LBrace); }
+                '}' => { it.next(); out.push(Token::RBrace); }
+                ';' => { it.next(); out.push(Token::Semi); }
+                ',' => { it.next(); out.push(Token::Comma); }
+                '+' => { it.next(); out.push(Token::Plus); }
+                '-' => { it.next(); out.push(Token::Minus); }
+                '*' => { it.next(); out.push(Token::Star); }
+                '/' => { it.next(); out.push(Token::Slash); }
+                '&' => { it.next(); out.push(Token::Amp); }
+                '|' => { it.next(); out.push(Token::Pipe); }
+                '^' => { it.next(); out.push(Token::Caret); }
+                '~' => { it.next(); out.push(Token::Tilde); }
+                '<' => {
+                    it.next();
+                    match it.peek() {
+                        Some('=') => { it.next(); out.push(Token::Le); }
+                        Some('<') => { it.next(); out.push(Token::Shl); }
+                        _ => out.push(Token::Lt),
+                    }
+                }
+                '>' => {
+                    it.next();
+                    match it.peek() {
+                        Some('=') => { it.next(); out.push(Token::Ge); }
+                        Some('>') => { it.next(); out.push(Token::Shr); }
+                        _ => out.push(Token::Gt),
+                    }
+                }
+                '=' => {
+                    it.next();
+                    if it.peek() == Some(&'=') {
+                        it.next();
+                        out.push(Token::EqEq);
+                    } else {
+                        out.push(Token::Assign);
+                    }
+                }
+                '!' => {
+                    it.next();
+                    if it.peek() == Some(&'=') {
+                        it.next();
+                        out.push(Token::Ne);
+                    } else {
+                        return Err(CError::Lex(line_no, "`!` without `=`".into()));
+                    }
+                }
+                '0'..='9' => {
+                    let mut n = 0i64;
+                    while let Some(&d) = it.peek() {
+                        if let Some(v) = d.to_digit(10) {
+                            n = n * 10 + v as i64;
+                            it.next();
+                            if n > i32::MAX as i64 {
+                                return Err(CError::Lex(line_no, "number too large".into()));
+                            }
+                        } else {
+                            break;
+                        }
+                    }
+                    out.push(Token::Num(n as i32));
+                }
+                c if c.is_ascii_alphabetic() || c == '_' => {
+                    let mut s = String::new();
+                    while let Some(&d) = it.peek() {
+                        if d.is_ascii_alphanumeric() || d == '_' {
+                            s.push(d);
+                            it.next();
+                        } else {
+                            break;
+                        }
+                    }
+                    out.push(match s.as_str() {
+                        "in" => Token::In,
+                        "out" => Token::Out,
+                        "int" => Token::Int,
+                        "stream" => Token::Stream,
+                        "fifo" => Token::Fifo,
+                        "while" => Token::While,
+                        "if" => Token::If,
+                        "else" => Token::Else,
+                        "next" => Token::Next,
+                        "pop" => Token::Pop,
+                        "push" => Token::Push,
+                        "emit" => Token::Emit,
+                        _ => Token::Ident(s),
+                    });
+                }
+                other => {
+                    return Err(CError::Lex(line_no, format!("unexpected `{other}`")));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Token> {
+        lex(src)
+            .unwrap()
+            .into_iter()
+            .filter(|t| !matches!(t, Token::Line(_)))
+            .collect()
+    }
+
+    #[test]
+    fn lexes_declaration() {
+        assert_eq!(
+            toks("in int n;"),
+            vec![Token::In, Token::Int, Token::Ident("n".into()), Token::Semi]
+        );
+    }
+
+    #[test]
+    fn lexes_operators() {
+        assert_eq!(
+            toks("a <= b >> 2 != c"),
+            vec![
+                Token::Ident("a".into()),
+                Token::Le,
+                Token::Ident("b".into()),
+                Token::Shr,
+                Token::Num(2),
+                Token::Ne,
+                Token::Ident("c".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_are_stripped() {
+        assert_eq!(toks("x // the whole rest ; = 5"), vec![Token::Ident("x".into())]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(lex("a $ b").is_err());
+        assert!(lex("a ! b").is_err());
+    }
+}

@@ -1,0 +1,449 @@
+//! AST → static dataflow graph lowering.
+//!
+//! Invariants the lowering maintains (the module doc of
+//! [`super`] explains why each exists):
+//!
+//! * **lazy copy** — every variable *use* consumes a fresh copy of the
+//!   variable's current arc; the remainder arc stays in the environment.
+//!   Superseded remainders dangle as anonymous output ports, which the
+//!   simulation environment (and, in hardware, a sink) drains.
+//! * **literal hoisting** — entering a loop, every literal that appears
+//!   inside it becomes a circulating loop variable `#lit_<v>` (constants
+//!   fire once; loop bodies need them every iteration).
+//! * **if-diamond** — the condition token is fanned out; every variable
+//!   (and hoisted literal) an arm touches is routed by a `branch`, each
+//!   arm is lowered against its side, and `ndmerge` rejoins.
+//! * **while-schema** — loops lower through [`crate::dfg::build_loop`];
+//!   loop variables are exactly the environment variables the loop
+//!   touches plus its hoisted literals.
+
+use super::ast::{literals_of, vars_of, Expr, Program, Stmt, UnOp};
+use super::CError;
+use crate::dfg::{build_loop, ArcId, Graph, GraphBuilder, Op};
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+
+type Env = HashMap<String, ArcId>;
+/// Shared lowering context: a `RefCell` because the while-schema's cond
+/// and body closures both need access while `build_loop` holds them.
+type Cx<'p> = RefCell<Ctx<'p>>;
+
+/// Lowering context: everything but the builder (so closures can borrow
+/// the context and the builder disjointly).
+struct Ctx<'p> {
+    prog: &'p Program,
+    /// Stream input port arcs (consumed at their unique `next` site).
+    streams: HashMap<String, ArcId>,
+    /// Pre-created FIFO output wires (consumed at the unique `pop` site).
+    fifo_out: HashMap<String, ArcId>,
+    /// Arcs feeding each FIFO (one per `push` site).
+    fifo_pushes: HashMap<String, Vec<ArcId>>,
+    /// Output ports already bound.
+    outs_bound: HashSet<String>,
+}
+
+fn lit_var(v: i16) -> String {
+    format!("#lit_{v}")
+}
+
+/// One variable use: copy the current arc, keep the remainder.
+fn use_var(b: &mut GraphBuilder, env: &mut Env, name: &str) -> ArcId {
+    let arc = *env
+        .get(name)
+        .unwrap_or_else(|| panic!("internal: `{name}` not in env (semantic check missed it)"));
+    let (u, rest) = b.copy(arc);
+    env.insert(name.to_string(), rest);
+    u
+}
+
+fn eval(b: &mut GraphBuilder, ctx: &Cx, env: &mut Env, e: &Expr) -> ArcId {
+    match e {
+        Expr::Lit(v) => {
+            let lv = lit_var(*v);
+            if env.contains_key(&lv) {
+                use_var(b, env, &lv)
+            } else {
+                b.constant(*v)
+            }
+        }
+        Expr::Var(n) => use_var(b, env, n),
+        Expr::Bin(op, x, y) => {
+            let ax = eval(b, ctx, env, x);
+            let ay = eval(b, ctx, env, y);
+            b.op2(op.to_op(), ax, ay)
+        }
+        Expr::Un(UnOp::Neg, x) => {
+            let zero = eval(b, ctx, env, &Expr::Lit(0));
+            let ax = eval(b, ctx, env, x);
+            b.op2(Op::Sub, zero, ax)
+        }
+        Expr::Un(UnOp::Not, x) => {
+            let ax = eval(b, ctx, env, x);
+            let n = b.node(Op::Not, &[ax], &[]);
+            b.out_arc(n, 0)
+        }
+        Expr::Next(s) => *ctx
+            .borrow()
+            .streams
+            .get(s)
+            .unwrap_or_else(|| panic!("internal: stream `{s}`")),
+        Expr::Pop(f) => *ctx
+            .borrow()
+            .fifo_out
+            .get(f)
+            .unwrap_or_else(|| panic!("internal: fifo `{f}`")),
+    }
+}
+
+/// Bind an evaluated arc to a named output port. Wraps in a copy when the
+/// arc is not a fresh internal wire (e.g. `emit(z, next(x))`).
+fn bind_output(b: &mut GraphBuilder, arc: ArcId, port: &str) {
+    let needs_wrap = b.graph().arc(arc).is_input_port();
+    if needs_wrap {
+        let (out, _spill) = b.copy(arc);
+        b.rename_arc(out, port);
+    } else {
+        b.rename_arc(arc, port);
+    }
+}
+
+fn lower_stmts(b: &mut GraphBuilder, ctx: &Cx, env: &mut Env, stmts: &[Stmt]) {
+    for s in stmts {
+        match s {
+            Stmt::Decl(n, e) | Stmt::Assign(n, e) => {
+                let arc = eval(b, ctx, env, e);
+                if ctx.borrow().prog.out_ints.contains(n) {
+                    bind_output(b, arc, n);
+                    ctx.borrow_mut().outs_bound.insert(n.clone());
+                } else {
+                    env.insert(n.clone(), arc);
+                }
+            }
+            Stmt::Emit(p, e) => {
+                let arc = eval(b, ctx, env, e);
+                bind_output(b, arc, p);
+                ctx.borrow_mut().outs_bound.insert(p.clone());
+            }
+            Stmt::Push(f, e) => {
+                let arc = eval(b, ctx, env, e);
+                ctx.borrow_mut().fifo_pushes.get_mut(f).unwrap().push(arc);
+            }
+            Stmt::If(c, t, e) => lower_if(b, ctx, env, c, t, e),
+            Stmt::While(c, body) => lower_while(b, ctx, env, c, body),
+        }
+    }
+}
+
+/// The branch/route/ndmerge diamond.
+fn lower_if(b: &mut GraphBuilder, ctx: &Cx, env: &mut Env, c: &Expr, t: &[Stmt], e: &[Stmt]) {
+    let arms: Vec<Stmt> = t.iter().chain(e).cloned().collect();
+    // Route every env-resident variable the arms touch, plus hoisted
+    // literals the arms use (they are circulating tokens and must be
+    // consumed on exactly one side per execution).
+    let mut routed: Vec<String> = vars_of(&arms, None)
+        .into_iter()
+        .filter(|v| env.contains_key(v))
+        .collect();
+    for l in literals_of(&arms, None) {
+        let lv = lit_var(l);
+        if env.contains_key(&lv) && !routed.contains(&lv) {
+            routed.push(lv);
+        }
+    }
+
+    let ctl = eval(b, ctx, env, c);
+    if routed.is_empty() {
+        // Top-level conditional over constants only: evaluate arms
+        // unconditionally is wrong, so this is rejected by the semantic
+        // checker; reaching here is a bug.
+        panic!("internal: if-statement with nothing to route");
+    }
+    let taps = b.copy_n(ctl, routed.len());
+    let mut then_env = env.clone();
+    let mut else_env = env.clone();
+    for (i, v) in routed.iter().enumerate() {
+        let cur = *env.get(v).unwrap();
+        let bn = b.node(Op::Branch, &[taps[i], cur], &[]);
+        then_env.insert(v.clone(), b.out_arc(bn, 0));
+        else_env.insert(v.clone(), b.out_arc(bn, 1));
+    }
+    lower_stmts(b, ctx, &mut then_env, t);
+    lower_stmts(b, ctx, &mut else_env, e);
+    for v in &routed {
+        let ta = *then_env.get(v).unwrap();
+        let ea = *else_env.get(v).unwrap();
+        let m = b.node(Op::NdMerge, &[ta, ea], &[]);
+        env.insert(v.clone(), b.out_arc(m, 0));
+    }
+}
+
+/// The while-schema (via [`build_loop`]), with literal hoisting.
+fn lower_while(b: &mut GraphBuilder, ctx: &Cx, env: &mut Env, c: &Expr, body: &[Stmt]) {
+    // Hoist literals not already circulating (top-level loops; nested
+    // loops inherit their enclosing loop's hoists).
+    for l in literals_of(body, Some(c)) {
+        let lv = lit_var(l);
+        if !env.contains_key(&lv) {
+            let arc = b.constant(l);
+            env.insert(lv, arc);
+        }
+    }
+    // Loop variables: env-resident vars the loop touches + its literals.
+    let mut loop_vars: Vec<String> = vars_of(body, Some(c))
+        .into_iter()
+        .filter(|v| env.contains_key(v))
+        .collect();
+    for l in literals_of(body, Some(c)) {
+        let lv = lit_var(l);
+        if !loop_vars.contains(&lv) {
+            loop_vars.push(lv);
+        }
+    }
+    assert!(!loop_vars.is_empty(), "internal: loop with no variables");
+
+    // Which loop variables does the condition read (vars + literals)?
+    let mut cond_vars: Vec<String> = Vec::new();
+    c.walk(&mut |e| match e {
+        Expr::Var(n) => {
+            if loop_vars.contains(n) && !cond_vars.contains(n) {
+                cond_vars.push(n.clone());
+            }
+        }
+        Expr::Lit(v) => {
+            let lv = lit_var(*v);
+            if loop_vars.contains(&lv) && !cond_vars.contains(&lv) {
+                cond_vars.push(lv);
+            }
+        }
+        _ => {}
+    });
+    let cond_uses: Vec<usize> = cond_vars
+        .iter()
+        .map(|v| loop_vars.iter().position(|x| x == v).unwrap())
+        .collect();
+
+    let inits: Vec<ArcId> = loop_vars.iter().map(|v| env[v]).collect();
+
+    let cond_vars_c = cond_vars.clone();
+    let loop_vars_c = loop_vars.clone();
+    let exits = build_loop(
+        b,
+        &inits,
+        &cond_uses,
+        |b, taps| {
+            // Condition env: the tapped copies, under their names.
+            let mut cenv: Env = cond_vars_c
+                .iter()
+                .cloned()
+                .zip(taps.iter().copied())
+                .collect();
+            eval(b, ctx, &mut cenv, c)
+            // Leftover remainders in cenv dangle; drained by the env.
+        },
+        |b, gated| {
+            let mut benv: Env = loop_vars_c
+                .iter()
+                .cloned()
+                .zip(gated.iter().copied())
+                .collect();
+            lower_stmts(b, ctx, &mut benv, body);
+            loop_vars_c.iter().map(|v| benv[v]).collect()
+        },
+    );
+    for (v, x) in loop_vars.iter().zip(exits) {
+        env.insert(v.clone(), x);
+    }
+}
+
+// ---- semantic checking ------------------------------------------------
+
+fn count_sites(stmts: &[Stmt], f: &mut impl FnMut(&Expr), sf: &mut impl FnMut(&Stmt)) {
+    for s in stmts {
+        s.walk(sf, f);
+    }
+}
+
+fn semantic_check(prog: &Program) -> Result<(), CError> {
+    let err = |m: String| Err(CError::Semantic(m));
+
+    // Unique next/pop/emit/out-assignment sites.
+    let mut next_sites: HashMap<String, u32> = HashMap::new();
+    let mut pop_sites: HashMap<String, u32> = HashMap::new();
+    let mut emit_sites: HashMap<String, u32> = HashMap::new();
+    let mut out_assigns: HashMap<String, u32> = HashMap::new();
+    count_sites(
+        &prog.body,
+        &mut |e| match e {
+            Expr::Next(s) => *next_sites.entry(s.clone()).or_insert(0) += 1,
+            Expr::Pop(f) => *pop_sites.entry(f.clone()).or_insert(0) += 1,
+            _ => {}
+        },
+        &mut |s| match s {
+            Stmt::Emit(p, _) => *emit_sites.entry(p.clone()).or_insert(0) += 1,
+            Stmt::Assign(n, _) | Stmt::Decl(n, _) if prog.out_ints.contains(n) => {
+                *out_assigns.entry(n.clone()).or_insert(0) += 1
+            }
+            _ => {}
+        },
+    );
+    for (s, n) in &next_sites {
+        if !prog.in_streams.contains(s) {
+            return err(format!("next() on undeclared stream `{s}`"));
+        }
+        if *n > 1 {
+            return err(format!(
+                "stream `{s}` is read at {n} sites; a dataflow channel has one \
+                 consumer — bind it to a variable instead"
+            ));
+        }
+    }
+    for (f, n) in &pop_sites {
+        if !prog.fifos.contains(f) {
+            return err(format!("pop() on undeclared fifo `{f}`"));
+        }
+        if *n > 1 {
+            return err(format!("fifo `{f}` is popped at {n} sites; only one allowed"));
+        }
+    }
+    for (p, n) in &emit_sites {
+        if !prog.out_streams.contains(p) {
+            return err(format!("emit() to undeclared output stream `{p}`"));
+        }
+        if *n > 1 {
+            return err(format!("output stream `{p}` has {n} emit sites; only one allowed"));
+        }
+    }
+    for o in &prog.out_ints {
+        match out_assigns.get(o) {
+            Some(1) => {}
+            Some(n) => return err(format!("output `{o}` assigned {n} times")),
+            None => return err(format!("output `{o}` never assigned")),
+        }
+    }
+
+    // Variables defined before use; no next/pop inside if-arms; if-arms
+    // must reference a variable or literal (so routing can gate them).
+    fn check_stmts(
+        prog: &Program,
+        stmts: &[Stmt],
+        defined: &mut HashSet<String>,
+        in_if_arm: bool,
+    ) -> Result<(), CError> {
+        let err = |m: String| Err(CError::Semantic(m));
+        for s in stmts {
+            // expression-level checks
+            let mut bad: Option<String> = None;
+            let check_expr = |e: &Expr, defined: &HashSet<String>, bad: &mut Option<String>| {
+                e.walk(&mut |e| match e {
+                    Expr::Var(n) => {
+                        if !defined.contains(n) && bad.is_none() {
+                            *bad = Some(format!("variable `{n}` used before definition"));
+                        }
+                    }
+                    Expr::Next(_) | Expr::Pop(_) if in_if_arm => {
+                        if bad.is_none() {
+                            *bad = Some(
+                                "next()/pop() inside a conditional arm is not \
+                                 gateable; read into a variable first"
+                                    .to_string(),
+                            );
+                        }
+                    }
+                    _ => {}
+                });
+            };
+            match s {
+                Stmt::Decl(n, e) => {
+                    check_expr(e, defined, &mut bad);
+                    defined.insert(n.clone());
+                }
+                Stmt::Assign(n, e) => {
+                    check_expr(e, defined, &mut bad);
+                    if !defined.contains(n) && !prog.out_ints.contains(n) {
+                        return err(format!("assignment to undeclared variable `{n}`"));
+                    }
+                }
+                Stmt::Emit(_, e) | Stmt::Push(_, e) => check_expr(e, defined, &mut bad),
+                Stmt::While(c, body) => {
+                    check_expr(c, defined, &mut bad);
+                    let mut inner = defined.clone();
+                    check_stmts(prog, body, &mut inner, in_if_arm)?;
+                }
+                Stmt::If(c, t, el) => {
+                    check_expr(c, defined, &mut bad);
+                    for arm in [t, el] {
+                        if !arm.is_empty() {
+                            let arm_vars = vars_of(arm, None);
+                            let has_ref = arm_vars.iter().any(|v| defined.contains(v))
+                                || !literals_of(arm, None).is_empty();
+                            if !has_ref {
+                                return err(
+                                    "conditional arm references no variable or literal; \
+                                     it cannot be gated"
+                                        .to_string(),
+                                );
+                            }
+                        }
+                        let mut inner = defined.clone();
+                        check_stmts(prog, arm, &mut inner, true)?;
+                    }
+                }
+            }
+            if let Some(m) = bad {
+                return err(m);
+            }
+        }
+        Ok(())
+    }
+
+    let mut defined: HashSet<String> = prog.in_ints.iter().cloned().collect();
+    check_stmts(prog, &prog.body, &mut defined, false)
+}
+
+/// Lower a checked program to a dataflow graph.
+pub fn lower(name: &str, prog: &Program) -> Result<Graph, CError> {
+    semantic_check(prog)?;
+
+    let mut b = GraphBuilder::new(name);
+    let mut env: Env = Env::new();
+    let ctx = RefCell::new(Ctx {
+        prog,
+        streams: HashMap::new(),
+        fifo_out: HashMap::new(),
+        fifo_pushes: prog.fifos.iter().map(|f| (f.clone(), Vec::new())).collect(),
+        outs_bound: HashSet::new(),
+    });
+
+    for n in &prog.in_ints {
+        let arc = b.input_port(n);
+        env.insert(n.clone(), arc);
+    }
+    for s in &prog.in_streams {
+        let arc = b.input_port(s);
+        ctx.borrow_mut().streams.insert(s.clone(), arc);
+    }
+    for f in &prog.fifos {
+        let w = b.wire();
+        ctx.borrow_mut().fifo_out.insert(f.clone(), w);
+    }
+
+    lower_stmts(&mut b, &ctx, &mut env, &prog.body);
+
+    // Close the FIFOs: merge push sites, instantiate the node.
+    let mut ctx = ctx.into_inner();
+    for f in &prog.fifos {
+        let pushes = ctx.fifo_pushes.remove(f).unwrap();
+        let out = ctx.fifo_out[f];
+        if pushes.is_empty() {
+            return Err(CError::Semantic(format!("fifo `{f}` is never pushed")));
+        }
+        let mut merged = pushes[0];
+        for &p in &pushes[1..] {
+            let m = b.node(Op::NdMerge, &[merged, p], &[]);
+            merged = b.out_arc(m, 0);
+        }
+        b.node(Op::Fifo(crate::bench_defs::bubble::FIFO_DEPTH), &[merged], &[out]);
+    }
+
+    Ok(b.finish()?)
+}

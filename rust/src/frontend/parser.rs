@@ -1,0 +1,345 @@
+//! Recursive-descent parser.
+
+use super::ast::{BinOp, Expr, Program, Stmt, UnOp};
+use super::lexer::Token;
+use super::CError;
+
+struct P<'t> {
+    toks: &'t [Token],
+    pos: usize,
+    line: usize,
+}
+
+impl<'t> P<'t> {
+    fn peek(&mut self) -> Option<&'t Token> {
+        while let Some(Token::Line(l)) = self.toks.get(self.pos) {
+            self.line = *l;
+            self.pos += 1;
+        }
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<&'t Token> {
+        let t = self.peek()?;
+        self.pos += 1;
+        Some(t)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> CError {
+        CError::Parse(self.line, msg.into())
+    }
+
+    fn expect(&mut self, t: &Token, what: &str) -> Result<(), CError> {
+        match self.next() {
+            Some(x) if x == t => Ok(()),
+            other => Err(self.err(format!("expected {what}, found {other:?}"))),
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, CError> {
+        match self.next() {
+            Some(Token::Ident(s)) => Ok(s.clone()),
+            other => Err(self.err(format!("expected identifier, found {other:?}"))),
+        }
+    }
+
+    // ---- expressions, precedence climbing --------------------------
+    // lowest: | ^ &  then == !=  then < <= > >=  then << >>  then + -
+    // then * /  then unary.
+    fn expr(&mut self) -> Result<Expr, CError> {
+        self.bin_or()
+    }
+
+    fn bin_level(
+        &mut self,
+        next: fn(&mut Self) -> Result<Expr, CError>,
+        table: &[(Token, BinOp)],
+    ) -> Result<Expr, CError> {
+        let mut lhs = next(self)?;
+        loop {
+            let Some(tok) = self.peek() else { break };
+            let Some((_, op)) = table.iter().find(|(t, _)| t == tok) else {
+                break;
+            };
+            let op = *op;
+            self.next();
+            let rhs = next(self)?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn bin_or(&mut self) -> Result<Expr, CError> {
+        self.bin_level(Self::bin_xor, &[(Token::Pipe, BinOp::Or)])
+    }
+    fn bin_xor(&mut self) -> Result<Expr, CError> {
+        self.bin_level(Self::bin_and, &[(Token::Caret, BinOp::Xor)])
+    }
+    fn bin_and(&mut self) -> Result<Expr, CError> {
+        self.bin_level(Self::bin_eq, &[(Token::Amp, BinOp::And)])
+    }
+    fn bin_eq(&mut self) -> Result<Expr, CError> {
+        self.bin_level(
+            Self::bin_rel,
+            &[(Token::EqEq, BinOp::Eq), (Token::Ne, BinOp::Ne)],
+        )
+    }
+    fn bin_rel(&mut self) -> Result<Expr, CError> {
+        self.bin_level(
+            Self::bin_shift,
+            &[
+                (Token::Lt, BinOp::Lt),
+                (Token::Le, BinOp::Le),
+                (Token::Gt, BinOp::Gt),
+                (Token::Ge, BinOp::Ge),
+            ],
+        )
+    }
+    fn bin_shift(&mut self) -> Result<Expr, CError> {
+        self.bin_level(
+            Self::bin_add,
+            &[(Token::Shl, BinOp::Shl), (Token::Shr, BinOp::Shr)],
+        )
+    }
+    fn bin_add(&mut self) -> Result<Expr, CError> {
+        self.bin_level(
+            Self::bin_mul,
+            &[(Token::Plus, BinOp::Add), (Token::Minus, BinOp::Sub)],
+        )
+    }
+    fn bin_mul(&mut self) -> Result<Expr, CError> {
+        self.bin_level(
+            Self::unary,
+            &[(Token::Star, BinOp::Mul), (Token::Slash, BinOp::Div)],
+        )
+    }
+
+    fn unary(&mut self) -> Result<Expr, CError> {
+        match self.peek() {
+            Some(Token::Minus) => {
+                self.next();
+                // constant-fold negative literals so `-32768` lexes fine
+                let e = self.unary()?;
+                Ok(match e {
+                    Expr::Lit(v) => Expr::Lit(v.wrapping_neg()),
+                    e => Expr::Un(UnOp::Neg, Box::new(e)),
+                })
+            }
+            Some(Token::Tilde) => {
+                self.next();
+                Ok(Expr::Un(UnOp::Not, Box::new(self.unary()?)))
+            }
+            _ => self.primary(),
+        }
+    }
+
+    fn primary(&mut self) -> Result<Expr, CError> {
+        match self.next() {
+            Some(Token::Num(n)) => Ok(Expr::Lit(*n as i16)),
+            Some(Token::Ident(s)) => Ok(Expr::Var(s.clone())),
+            Some(Token::Next) => {
+                self.expect(&Token::LParen, "`(`")?;
+                let s = self.ident()?;
+                self.expect(&Token::RParen, "`)`")?;
+                Ok(Expr::Next(s))
+            }
+            Some(Token::Pop) => {
+                self.expect(&Token::LParen, "`(`")?;
+                let s = self.ident()?;
+                self.expect(&Token::RParen, "`)`")?;
+                Ok(Expr::Pop(s))
+            }
+            Some(Token::LParen) => {
+                let e = self.expr()?;
+                self.expect(&Token::RParen, "`)`")?;
+                Ok(e)
+            }
+            other => Err(self.err(format!("expected expression, found {other:?}"))),
+        }
+    }
+
+    // ---- statements -------------------------------------------------
+    fn block(&mut self) -> Result<Vec<Stmt>, CError> {
+        self.expect(&Token::LBrace, "`{`")?;
+        let mut out = Vec::new();
+        loop {
+            if self.peek() == Some(&Token::RBrace) {
+                self.next();
+                return Ok(out);
+            }
+            out.push(self.stmt()?);
+        }
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, CError> {
+        match self.peek() {
+            Some(Token::Int) => {
+                self.next();
+                let name = self.ident()?;
+                self.expect(&Token::Assign, "`=`")?;
+                let e = self.expr()?;
+                self.expect(&Token::Semi, "`;`")?;
+                Ok(Stmt::Decl(name, e))
+            }
+            Some(Token::While) => {
+                self.next();
+                self.expect(&Token::LParen, "`(`")?;
+                let c = self.expr()?;
+                self.expect(&Token::RParen, "`)`")?;
+                let body = self.block()?;
+                Ok(Stmt::While(c, body))
+            }
+            Some(Token::If) => {
+                self.next();
+                self.expect(&Token::LParen, "`(`")?;
+                let c = self.expr()?;
+                self.expect(&Token::RParen, "`)`")?;
+                let t = self.block()?;
+                let e = if self.peek() == Some(&Token::Else) {
+                    self.next();
+                    self.block()?
+                } else {
+                    Vec::new()
+                };
+                Ok(Stmt::If(c, t, e))
+            }
+            Some(Token::Emit) => {
+                self.next();
+                self.expect(&Token::LParen, "`(`")?;
+                let p = self.ident()?;
+                self.expect(&Token::Comma, "`,`")?;
+                let e = self.expr()?;
+                self.expect(&Token::RParen, "`)`")?;
+                self.expect(&Token::Semi, "`;`")?;
+                Ok(Stmt::Emit(p, e))
+            }
+            Some(Token::Push) => {
+                self.next();
+                self.expect(&Token::LParen, "`(`")?;
+                let p = self.ident()?;
+                self.expect(&Token::Comma, "`,`")?;
+                let e = self.expr()?;
+                self.expect(&Token::RParen, "`)`")?;
+                self.expect(&Token::Semi, "`;`")?;
+                Ok(Stmt::Push(p, e))
+            }
+            Some(Token::Ident(_)) => {
+                let name = self.ident()?;
+                self.expect(&Token::Assign, "`=`")?;
+                let e = self.expr()?;
+                self.expect(&Token::Semi, "`;`")?;
+                Ok(Stmt::Assign(name, e))
+            }
+            other => Err(self.err(format!("expected statement, found {other:?}"))),
+        }
+    }
+}
+
+/// Parse a whole program.
+pub fn parse_program(toks: &[Token]) -> Result<Program, CError> {
+    let mut p = P {
+        toks,
+        pos: 0,
+        line: 1,
+    };
+    let mut prog = Program::default();
+    loop {
+        match p.peek() {
+            None => break,
+            Some(Token::In) => {
+                p.next();
+                match p.next() {
+                    Some(Token::Int) => {
+                        let n = p.ident()?;
+                        prog.in_ints.push(n);
+                    }
+                    Some(Token::Stream) => {
+                        let n = p.ident()?;
+                        prog.in_streams.push(n);
+                    }
+                    other => return Err(p.err(format!("expected int/stream, found {other:?}"))),
+                }
+                p.expect(&Token::Semi, "`;`")?;
+            }
+            Some(Token::Out) => {
+                p.next();
+                match p.next() {
+                    Some(Token::Int) => {
+                        let n = p.ident()?;
+                        prog.out_ints.push(n);
+                    }
+                    Some(Token::Stream) => {
+                        let n = p.ident()?;
+                        prog.out_streams.push(n);
+                    }
+                    other => return Err(p.err(format!("expected int/stream, found {other:?}"))),
+                }
+                p.expect(&Token::Semi, "`;`")?;
+            }
+            Some(Token::Fifo) => {
+                p.next();
+                let n = p.ident()?;
+                prog.fifos.push(n);
+                p.expect(&Token::Semi, "`;`")?;
+            }
+            _ => prog.body.push(p.stmt()?),
+        }
+    }
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn parse(src: &str) -> Program {
+        parse_program(&lex(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parses_ports_and_body() {
+        let p = parse("in int n; out int r; int x = 1; r = x + n;");
+        assert_eq!(p.in_ints, vec!["n"]);
+        assert_eq!(p.out_ints, vec!["r"]);
+        assert_eq!(p.body.len(), 2);
+    }
+
+    #[test]
+    fn precedence_mul_over_add() {
+        let p = parse("out int r; r = 1 + 2 * 3;");
+        match &p.body[0] {
+            Stmt::Assign(_, Expr::Bin(BinOp::Add, a, b)) => {
+                assert_eq!(**a, Expr::Lit(1));
+                assert!(matches!(**b, Expr::Bin(BinOp::Mul, _, _)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_literal_folds() {
+        let p = parse("out int r; r = -32768;");
+        assert!(matches!(&p.body[0], Stmt::Assign(_, Expr::Lit(v)) if *v == i16::MIN));
+    }
+
+    #[test]
+    fn nested_blocks() {
+        let p = parse(
+            "in int n; out int r;
+             int i = 0;
+             while (i < n) { if (i > 2) { i = i + 2; } else { i = i + 1; } }
+             r = i;",
+        );
+        assert!(matches!(&p.body[1], Stmt::While(_, body) if body.len() == 1));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let toks = lex("in int n;\nout int r;\nr = ;\n").unwrap();
+        match parse_program(&toks) {
+            Err(CError::Parse(line, _)) => assert_eq!(line, 3),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! # dataflow-accel
+//!
+//! A production-grade reproduction of *"Accelerating Algorithms using a
+//! Dataflow Graph in a Reconfigurable System"* (Silva, Silva, Lopes &
+//! da Silva, 2011).
+//!
+//! The paper prototypes a **static dataflow architecture** on an FPGA:
+//! fine-grain operators (add/sub/merge/branch/...) connected by 16-bit data
+//! buses with a 2-wire `str`/`ack` handshake, assembled from a tiny
+//! dataflow-assembler language into a VHDL netlist, and evaluated on six
+//! benchmarks against the C-to-Verilog and LALP HLS systems (Table 1 /
+//! Fig. 8 of the paper).
+//!
+//! This crate rebuilds the whole system in software:
+//!
+//! * [`dfg`] — the dataflow-graph IR (operators, arcs, validation).
+//! * [`asm`] — the paper's dataflow assembler language (Listing 1 syntax).
+//! * [`frontend`] — the paper's named future work: a mini-C compiler that
+//!   lowers a C subset to static dataflow graphs.
+//! * [`sim`] — cycle-accurate simulation of the paper's operator FSMs
+//!   (Figs. 5/6) and handshake protocol (Fig. 3), plus a fast token engine
+//!   and a dynamic (tagged-token) extension.
+//! * [`vhdl`] — the VHDL backend the paper's assembler targeted.
+//! * [`estimate`] — structural FF/LUT/slice/Fmax models replacing the
+//!   Xilinx ISE synthesis flow we do not have.
+//! * [`baselines`] — resource/latency models of the two comparison systems
+//!   (C-to-Verilog and LALP).
+//! * [`bench_defs`] — the six paper benchmarks (C source, assembler source,
+//!   programmatic builders, software references).
+//! * [`runtime`] + [`coordinator`] — the acceleration path: batched fabric
+//!   simulation through AOT-compiled XLA artifacts (JAX/Pallas, loaded over
+//!   PJRT; Python never runs at simulation time).
+//! * [`report`] — Table 1 / Fig. 8 renderers.
+//!
+//! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for
+//! paper-vs-measured numbers.
+
+pub mod asm;
+pub mod util;
+pub mod baselines;
+pub mod bench_defs;
+pub mod coordinator;
+pub mod dfg;
+pub mod estimate;
+pub mod frontend;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod vhdl;
+
+pub use dfg::{Arc, ArcId, Graph, Node, NodeId, Op};
+pub use sim::{FsmSim, SimConfig, SimOutcome, TokenSim};

@@ -1,0 +1,184 @@
+//! `dataflow-accel` — CLI for the static dataflow accelerator.
+//!
+//! ```text
+//! dataflow-accel run <bench> [--n 16] [--seed 7] [--engine token|fsm|dynamic]
+//! dataflow-accel compile <bench> [--emit asm|vhdl|c|resources]
+//! dataflow-accel table1 [--fig8]
+//! dataflow-accel sweep [--bench all] [--requests 64] [--n 16] [--engine native|xla]
+//!                      [--workers 4] [--batch 8]
+//! dataflow-accel info
+//! ```
+
+use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::coordinator::{Coordinator, Engine, Request};
+use dataflow_accel::util::args::Args;
+use dataflow_accel::{estimate, frontend, report, sim, vhdl};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &["fig8", "verbose"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "compile" => cmd_compile(&args),
+        "table1" => {
+            if args.has("fig8") {
+                print!("{}", report::fig8_csv());
+            } else {
+                print!("{}", report::table1());
+            }
+        }
+        "sweep" => cmd_sweep(&args),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: dataflow-accel <run|compile|table1|sweep|info> [options]\n\
+                 benchmarks: {}",
+                BenchId::ALL.map(|b| b.slug()).join(" ")
+            );
+        }
+    }
+}
+
+fn bench_arg(args: &Args) -> BenchId {
+    let name = args
+        .positional
+        .get(1)
+        .unwrap_or_else(|| panic!("missing benchmark name"));
+    BenchId::from_slug(name).unwrap_or_else(|| panic!("unknown benchmark `{name}`"))
+}
+
+fn cmd_run(args: &Args) {
+    let bench = bench_arg(args);
+    let n = args.get_usize("n", 16);
+    let seed = args.get_u64("seed", 7);
+    let g = bench_defs::build(bench);
+    let wl = bench_defs::workload(bench, n, seed);
+    let cfg = wl.sim_config();
+    let out = match args.get_or("engine", "token").as_str() {
+        "token" => sim::run_token(&g, &cfg),
+        "fsm" => {
+            let mut cfg = cfg.clone();
+            cfg.max_cycles *= 4;
+            sim::run_fsm(&g, &cfg)
+        }
+        "dynamic" => sim::run_dynamic(&g, &cfg, 4),
+        other => panic!("unknown engine `{other}`"),
+    };
+    println!(
+        "{}: {} nodes, {} arcs | {} cycles, {} firings, quiescent={}",
+        bench.slug(),
+        g.n_nodes(),
+        g.n_arcs(),
+        out.cycles,
+        out.firings,
+        out.quiescent
+    );
+    for (port, want) in &wl.expect {
+        let got = out.stream(port);
+        let ok = got == want.as_slice();
+        println!(
+            "  {port}: {got:?} {}",
+            if ok { "(verified)" } else { "(MISMATCH)" }
+        );
+    }
+}
+
+fn cmd_compile(args: &Args) {
+    let bench = bench_arg(args);
+    match args.get_or("emit", "asm").as_str() {
+        "asm" => print!("{}", bench_defs::asm_source(bench)),
+        "c" => print!("{}", bench_defs::c_source(bench)),
+        "vhdl" => {
+            // Compile the C source through the frontend, then emit VHDL —
+            // the paper's full future-work chain.
+            let g = frontend::compile(bench.slug(), bench_defs::c_source(bench))
+                .expect("benchmark C source compiles");
+            print!("{}", vhdl::generate(&g).render());
+        }
+        "resources" => {
+            let g = bench_defs::build(bench);
+            let r = estimate::estimate(&g);
+            let t = estimate::estimate_trimmed(&g);
+            println!(
+                "{}: FF {} (trimmed {}), LUT {}, slices {}, bram {} bits, fmax {:.1} MHz",
+                bench.slug(),
+                r.ff,
+                t.ff,
+                r.lut,
+                r.slices,
+                r.bram_bits,
+                r.fmax_mhz
+            );
+        }
+        other => panic!("unknown --emit `{other}`"),
+    }
+}
+
+fn cmd_sweep(args: &Args) {
+    let engine = match args.get_or("engine", "native").as_str() {
+        "native" => Engine::Native,
+        "xla" => Engine::Xla,
+        other => panic!("unknown engine `{other}`"),
+    };
+    let workers = args.get_usize("workers", 4);
+    let batch = args.get_usize("batch", 8);
+    let requests = args.get_usize("requests", 64);
+    let n = args.get_usize("n", 16);
+    let which = args.get_or("bench", "all");
+    let benches: Vec<BenchId> = if which == "all" {
+        BenchId::ALL.to_vec()
+    } else {
+        vec![BenchId::from_slug(&which).expect("benchmark")]
+    };
+
+    let c = Coordinator::start(workers, engine, Some("artifacts"), batch)
+        .expect("coordinator start");
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            c.submit(Request {
+                bench: benches[i % benches.len()],
+                n,
+                seed: i as u64,
+            })
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        if resp.verified {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!("{}", c.metrics.summary());
+    println!(
+        "sweep: {requests} requests ({ok} verified) in {:.2}s = {:.1} req/s",
+        dt.as_secs_f64(),
+        requests as f64 / dt.as_secs_f64()
+    );
+    c.shutdown();
+}
+
+fn cmd_info() {
+    println!("dataflow-accel — Silva et al. 2011 static dataflow architecture");
+    println!("benchmarks (graph size / resources / fmax):");
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let r = estimate::estimate(&g);
+        println!(
+            "  {:<12} {:>3} nodes {:>3} arcs | FF {:>5} LUT {:>5} slices {:>5} | {:.1} MHz",
+            b.slug(),
+            g.n_nodes(),
+            g.n_arcs(),
+            r.ff,
+            r.lut,
+            r.slices,
+            r.fmax_mhz
+        );
+    }
+    match dataflow_accel::runtime::FabricRuntime::load("artifacts") {
+        Ok(rt) => println!("fabric artifacts: {:?}", rt.shapes()),
+        Err(e) => println!("fabric artifacts: unavailable ({e})"),
+    }
+}

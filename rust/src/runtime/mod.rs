@@ -1,0 +1,241 @@
+//! PJRT runtime — loads and executes the AOT-compiled fabric kernels.
+//!
+//! `make artifacts` (build time, Python) lowers the Layer-2 `fabric_step`
+//! to HLO **text** per `(batch, nodes)` shape and writes
+//! `artifacts/manifest.txt`. At run time this module:
+//!
+//! 1. creates one `PjRtClient` (CPU in this environment),
+//! 2. parses each HLO text file (`HloModuleProto::from_text_file` — text,
+//!    not serialized proto: jax ≥ 0.5 emits 64-bit instruction ids that
+//!    xla_extension 0.5.1 rejects),
+//! 3. compiles one executable per artifact shape,
+//! 4. serves `step` calls from the coordinator's hot path.
+//!
+//! Python never runs on this path; the Rust binary is self-contained once
+//! `artifacts/` exists.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One fabric tick's worth of dense operator state (see
+/// `python/compile/model.py::fabric_step`).
+#[derive(Debug, Clone)]
+pub struct FabricBatch {
+    pub batch: usize,
+    pub nodes: usize,
+    /// `i32[nodes]` per-node opcode.
+    pub opcode: Vec<i32>,
+    /// `i32[batch * nodes]`, row-major.
+    pub a: Vec<i32>,
+    pub b: Vec<i32>,
+    pub fire: Vec<i32>,
+}
+
+impl FabricBatch {
+    pub fn zeroed(batch: usize, nodes: usize) -> Self {
+        FabricBatch {
+            batch,
+            nodes,
+            opcode: vec![0; nodes],
+            a: vec![0; batch * nodes],
+            b: vec![0; batch * nodes],
+            fire: vec![0; batch * nodes],
+        }
+    }
+
+    #[inline]
+    pub fn slot(&self, instance: usize, node: usize) -> usize {
+        instance * self.nodes + node
+    }
+}
+
+/// A compiled fabric executable for one artifact shape.
+struct Exe {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    nodes: usize,
+}
+
+/// The artifact registry + PJRT client.
+pub struct FabricRuntime {
+    _client: xla::PjRtClient,
+    exes: BTreeMap<(usize, usize), Exe>,
+}
+
+impl FabricRuntime {
+    /// Load every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut exes = BTreeMap::new();
+        for line in text.lines() {
+            let mut parts = line.split_whitespace();
+            let (Some(b), Some(n), Some(file)) = (parts.next(), parts.next(), parts.next())
+            else {
+                bail!("malformed manifest line: `{line}`");
+            };
+            let batch: usize = b.parse()?;
+            let nodes: usize = n.parse()?;
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+            exes.insert((batch, nodes), Exe { exe, batch, nodes });
+        }
+        if exes.is_empty() {
+            bail!("no artifacts in {manifest:?}");
+        }
+        Ok(FabricRuntime {
+            _client: client,
+            exes,
+        })
+    }
+
+    /// Artifact shapes available, sorted.
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.exes.keys().copied().collect()
+    }
+
+    /// Smallest artifact that fits `batch` instances of `nodes` nodes.
+    pub fn fit(&self, batch: usize, nodes: usize) -> Option<(usize, usize)> {
+        self.exes
+            .keys()
+            .copied()
+            .filter(|&(b, n)| b >= batch && n >= nodes)
+            .min_by_key(|&(b, n)| b * n)
+    }
+
+    /// Execute one fabric tick. The batch must exactly match an artifact
+    /// shape (use [`FabricRuntime::fit`] + [`FabricBatch::zeroed`] padding).
+    pub fn step(&self, fb: &FabricBatch) -> Result<Vec<i32>> {
+        let exe = self
+            .exes
+            .get(&(fb.batch, fb.nodes))
+            .ok_or_else(|| anyhow!("no artifact for shape {}x{}", fb.batch, fb.nodes))?;
+        let dims = [exe.batch as i64, exe.nodes as i64];
+        let op = xla::Literal::vec1(&fb.opcode);
+        let a = xla::Literal::vec1(&fb.a)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let b = xla::Literal::vec1(&fb.b)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let fire = xla::Literal::vec1(&fb.fire)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&[op, a, b, fire])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        // aot.py lowers with return_tuple=True → a 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::Op;
+
+    fn runtime() -> Option<FabricRuntime> {
+        // Tests are skipped gracefully when artifacts are not built.
+        FabricRuntime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
+    }
+
+    #[test]
+    fn loads_manifest_and_fits_shapes() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(!rt.shapes().is_empty());
+        let (b, n) = rt.fit(4, 100).expect("a shape fits 4x100");
+        assert!(b >= 4 && n >= 100);
+    }
+
+    #[test]
+    fn xla_alu_matches_rust_eval2_exhaustively_per_opcode() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (bsz, nodes) = rt.fit(8, 128).unwrap();
+        let ops = [
+            Op::Add,
+            Op::Sub,
+            Op::Mul,
+            Op::Div,
+            Op::And,
+            Op::Or,
+            Op::Xor,
+            Op::Shl,
+            Op::Shr,
+            Op::IfGt,
+            Op::IfGe,
+            Op::IfLt,
+            Op::IfLe,
+            Op::IfEq,
+            Op::IfDf,
+        ];
+        let mut rng = crate::util::Rng::new(99);
+        let mut fb = FabricBatch::zeroed(bsz, nodes);
+        let mut want = vec![0i32; bsz * nodes];
+        for i in 0..bsz {
+            for n in 0..nodes {
+                let op = ops[rng.below(ops.len())];
+                let a = rng.word(-32768, 32768);
+                let b = rng.word(-32768, 32768);
+                let s = fb.slot(i, n);
+                fb.opcode[n] = op.fabric_opcode(); // overwritten per row; see below
+                fb.a[s] = a as i32;
+                fb.b[s] = b as i32;
+                fb.fire[s] = 1;
+            }
+        }
+        // opcode is per-node (shared across batch): recompute expectations
+        // against the final opcode row.
+        for i in 0..bsz {
+            for n in 0..nodes {
+                let s = fb.slot(i, n);
+                let op = ops
+                    .iter()
+                    .copied()
+                    .find(|o| o.fabric_opcode() == fb.opcode[n])
+                    .unwrap();
+                want[s] = op.eval2(fb.a[s] as i16, fb.b[s] as i16) as i32;
+            }
+        }
+        let got = rt.step(&fb).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fire_mask_is_respected() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (bsz, nodes) = rt.fit(8, 128).unwrap();
+        let mut fb = FabricBatch::zeroed(bsz, nodes);
+        for n in 0..nodes {
+            fb.opcode[n] = Op::Add.fabric_opcode();
+        }
+        let s = fb.slot(0, 0);
+        fb.a[s] = 20;
+        fb.b[s] = 22;
+        fb.fire[s] = 1;
+        let got = rt.step(&fb).unwrap();
+        assert_eq!(got[s], 42);
+        assert!(got.iter().enumerate().all(|(i, &v)| i == s || v == 0));
+    }
+}

@@ -1,0 +1,314 @@
+//! The dynamic dataflow extension (the paper's §6 future work).
+//!
+//! Arcs are k-bounded FIFO queues instead of one-place buffers, so an
+//! operator can fire again before its previous result is consumed — the
+//! tagged-token model restricted to well-ordered (FIFO) tags. For acyclic
+//! stream pipelines this recovers full pipelining; the ablation bench
+//! (`benches/ablation_dynamic.rs`) measures the gap against the static
+//! rule the paper implemented.
+
+use super::{SimConfig, SimOutcome};
+use crate::dfg::{ArcId, Graph, Op, Word};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Queue-per-arc simulator.
+pub struct DynamicSim<'g> {
+    g: &'g Graph,
+    /// FIFO per arc, bounded by `bound`.
+    q: Vec<VecDeque<Word>>,
+    bound: usize,
+    fifos: Vec<VecDeque<Word>>,
+    const_done: Vec<bool>,
+    pending: Vec<(ArcId, VecDeque<Word>)>,
+    out_ports: Vec<ArcId>,
+    collected: BTreeMap<String, Vec<Word>>,
+    firings: u64,
+}
+
+impl<'g> DynamicSim<'g> {
+    /// `bound` is the per-arc queue capacity (the paper's static model is
+    /// exactly `bound == 1`).
+    pub fn new(g: &'g Graph, cfg: &SimConfig, bound: usize) -> Self {
+        assert!(bound >= 1);
+        let mut pending = Vec::new();
+        for a in g.input_ports() {
+            let stream = cfg
+                .inject
+                .get(&g.arc(a).name)
+                .map(|v| v.iter().copied().collect())
+                .unwrap_or_default();
+            pending.push((a, stream));
+        }
+        let out_ports = g.output_ports();
+        let mut collected = BTreeMap::new();
+        for &p in &out_ports {
+            collected.insert(g.arc(p).name.clone(), Vec::new());
+        }
+        DynamicSim {
+            g,
+            q: vec![VecDeque::new(); g.n_arcs()],
+            bound,
+            fifos: g.nodes.iter().map(|_| VecDeque::new()).collect(),
+            const_done: vec![false; g.n_nodes()],
+            pending,
+            out_ports,
+            collected,
+            firings: 0,
+        }
+    }
+
+    #[inline]
+    fn has(&self, a: ArcId) -> bool {
+        !self.q[a.0 as usize].is_empty()
+    }
+
+    #[inline]
+    fn front(&self, a: ArcId) -> Option<Word> {
+        self.q[a.0 as usize].front().copied()
+    }
+
+    #[inline]
+    fn pop(&mut self, a: ArcId) -> Word {
+        self.q[a.0 as usize].pop_front().expect("token present")
+    }
+
+    /// One synchronous round; every enabled node fires once (snapshot
+    /// occupancies, staged pushes). Returns firings this round.
+    pub fn step(&mut self) -> u64 {
+        for (arc, stream) in &mut self.pending {
+            if !stream.is_empty() && self.q[arc.0 as usize].len() < self.bound {
+                let v = stream.pop_front().unwrap();
+                self.q[arc.0 as usize].push_back(v);
+            }
+        }
+        for &p in &self.out_ports {
+            while let Some(v) = self.q[p.0 as usize].pop_front() {
+                let name = &self.g.arc(p).name;
+                self.collected.get_mut(name).unwrap().push(v);
+            }
+        }
+
+        // Snapshot head-room so all decisions see round-start state.
+        let room: Vec<usize> = self.q.iter().map(|q| self.bound - q.len()).collect();
+        let mut staged: Vec<(ArcId, Word)> = Vec::new();
+        let mut fired = 0u64;
+        for ni in 0..self.g.nodes.len() {
+            let node = &self.g.nodes[ni];
+            let op = node.op;
+            let can_out = |a: ArcId| room[a.0 as usize] > 0;
+            let ok = match op {
+                Op::Const(v) => {
+                    if !self.const_done[ni] && can_out(node.outs[0]) {
+                        self.const_done[ni] = true;
+                        staged.push((node.outs[0], v));
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Op::Copy => {
+                    if self.has(node.ins[0]) && can_out(node.outs[0]) && can_out(node.outs[1]) {
+                        let (o0, o1) = (node.outs[0], node.outs[1]);
+                        let v = self.pop(node.ins[0]);
+                        staged.push((o0, v));
+                        staged.push((o1, v));
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Op::Not => {
+                    if self.has(node.ins[0]) && can_out(node.outs[0]) {
+                        let o = node.outs[0];
+                        let v = self.pop(node.ins[0]);
+                        staged.push((o, op.eval1(v)));
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Op::NdMerge => {
+                    if can_out(node.outs[0]) && (self.has(node.ins[0]) || self.has(node.ins[1])) {
+                        let o = node.outs[0];
+                        let src = if self.has(node.ins[0]) {
+                            node.ins[0]
+                        } else {
+                            node.ins[1]
+                        };
+                        let v = self.pop(src);
+                        staged.push((o, v));
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Op::DMerge => {
+                    if let Some(c) = self.front(node.ins[0]) {
+                        let sel = if c != 0 { node.ins[1] } else { node.ins[2] };
+                        if self.has(sel) && can_out(node.outs[0]) {
+                            let o = node.outs[0];
+                            self.pop(node.ins[0]);
+                            let v = self.pop(sel);
+                            staged.push((o, v));
+                            true
+                        } else {
+                            false
+                        }
+                    } else {
+                        false
+                    }
+                }
+                Op::Branch => {
+                    if let Some(c) = self.front(node.ins[0]) {
+                        let out = if c != 0 { node.outs[0] } else { node.outs[1] };
+                        if self.has(node.ins[1]) && can_out(out) {
+                            self.pop(node.ins[0]);
+                            let v = self.pop(node.ins[1]);
+                            staged.push((out, v));
+                            true
+                        } else {
+                            false
+                        }
+                    } else {
+                        false
+                    }
+                }
+                Op::Fifo(k) => {
+                    let mut acted = false;
+                    if self.has(node.ins[0]) && self.fifos[ni].len() < k as usize {
+                        let v = self.pop(node.ins[0]);
+                        self.fifos[ni].push_back(v);
+                        acted = true;
+                    }
+                    if can_out(node.outs[0]) {
+                        if let Some(v) = self.fifos[ni].pop_front() {
+                            staged.push((node.outs[0], v));
+                            acted = true;
+                        }
+                    }
+                    acted
+                }
+                _ => {
+                    if self.has(node.ins[0]) && self.has(node.ins[1]) && can_out(node.outs[0]) {
+                        let o = node.outs[0];
+                        let a = self.pop(node.ins[0]);
+                        let b = self.pop(node.ins[1]);
+                        staged.push((o, op.eval2(a, b)));
+                        true
+                    } else {
+                        false
+                    }
+                }
+            };
+            if ok {
+                fired += 1;
+            }
+        }
+        for (a, v) in staged {
+            self.q[a.0 as usize].push_back(v);
+        }
+        self.firings += fired;
+        fired
+    }
+
+    /// Run to quiescence or the round limit.
+    pub fn run(mut self, cfg: &SimConfig) -> SimOutcome {
+        let mut cycles = 0u64;
+        let mut quiescent = false;
+        while cycles < cfg.max_cycles {
+            let fired = self.step();
+            cycles += 1;
+            if fired == 0 && self.pending.iter().all(|(_, s)| s.is_empty()) {
+                self.step();
+                cycles += 1;
+                if self.q.iter().all(|q| q.is_empty())
+                    && self.fifos.iter().all(|q| q.is_empty())
+                {
+                    quiescent = true;
+                }
+                break;
+            }
+        }
+        SimOutcome {
+            outputs: self.collected,
+            cycles,
+            firings: self.firings,
+            quiescent,
+        }
+    }
+}
+
+/// Convenience: build + run in one call.
+pub fn run_dynamic(g: &Graph, cfg: &SimConfig, bound: usize) -> SimOutcome {
+    DynamicSim::new(g, cfg, bound).run(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::GraphBuilder;
+    use crate::sim::token::run_token;
+
+    /// A 3-stage pipeline: ((a+b)*c among streams).
+    fn pipeline() -> Graph {
+        let mut b = GraphBuilder::new("pipe");
+        let a = b.input_port("a");
+        let x = b.input_port("x");
+        let c = b.input_port("c");
+        let s = b.op2(Op::Add, a, x);
+        let m = b.op2(Op::Mul, s, c);
+        let z = b.output_port("z");
+        b.node(Op::Not, &[m], &[z]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn bound_one_equals_static_engine() {
+        let g = pipeline();
+        let cfg = SimConfig::new()
+            .inject("a", vec![1, 2, 3, 4])
+            .inject("x", vec![5, 6, 7, 8])
+            .inject("c", vec![2, 2, 2, 2]);
+        let dyn1 = run_dynamic(&g, &cfg, 1);
+        let tok = run_token(&g, &cfg);
+        assert_eq!(dyn1.outputs, tok.outputs);
+    }
+
+    #[test]
+    fn deeper_queues_never_change_results_on_pipelines() {
+        let g = pipeline();
+        let cfg = SimConfig::new()
+            .inject("a", (0..32).collect::<Vec<_>>())
+            .inject("x", (0..32).map(|v| v * 3).collect::<Vec<_>>())
+            .inject("c", vec![5; 32]);
+        let d1 = run_dynamic(&g, &cfg, 1);
+        let d4 = run_dynamic(&g, &cfg, 4);
+        let d16 = run_dynamic(&g, &cfg, 16);
+        assert_eq!(d1.outputs, d4.outputs);
+        assert_eq!(d4.outputs, d16.outputs);
+        // Deeper queues can only help round count.
+        assert!(d16.cycles <= d1.cycles);
+    }
+
+    #[test]
+    fn dynamic_pipelines_faster_than_static() {
+        // With per-arc queues a new (a,x,c) triple enters every round;
+        // static needs the whole handshake to drain. On long streams the
+        // dynamic engine should finish in fewer rounds.
+        let g = pipeline();
+        let n = 128i16;
+        let cfg = SimConfig::new()
+            .inject("a", (0..n).collect::<Vec<_>>())
+            .inject("x", (0..n).collect::<Vec<_>>())
+            .inject("c", vec![1; n as usize]);
+        let stat = run_token(&g, &cfg);
+        let dynb = run_dynamic(&g, &cfg, 8);
+        assert_eq!(stat.outputs, dynb.outputs);
+        assert!(
+            dynb.cycles <= stat.cycles,
+            "dynamic {} vs static {}",
+            dynb.cycles,
+            stat.cycles
+        );
+    }
+}

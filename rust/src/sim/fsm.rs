@@ -1,0 +1,499 @@
+//! The cycle-accurate FSM engine.
+//!
+//! Every operator runs the paper's ASM chart (Fig. 6):
+//!
+//! * `S0` — reset: clear registers (done once at construction),
+//! * `S1` — receive: latch arriving items into `dadoa`/`dadob`, set
+//!   `bita`/`bitb`, pulse `ack`,
+//! * `S2` — execute: compute `dadoz`, set `bitz`,
+//! * `S3` — send: assert `strz` until the consumer's `ack` arrives, then
+//!   clear status bits and return to `S1`.
+//!
+//! Arcs carry explicit per-cycle `str` (data strobe) and `ack` wires
+//! (Fig. 3). One firing therefore costs ≥3 clock edges — exactly the
+//! latency the paper's VHDL pays — and communication is "asynchronous"
+//! in the paper's sense: nobody knows in advance when a neighbour fires.
+
+use super::{SimConfig, SimOutcome};
+use crate::dfg::{Graph, Op, Word};
+use std::collections::{BTreeMap, VecDeque};
+
+/// FSM state per the ASM chart. `S0` happens at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Receive, // S1
+    Execute, // S2
+    Send,    // S3
+}
+
+/// What happened on an arc this cycle (recorded when tracing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandshakeKind {
+    /// Sender drove `str` with data.
+    Str(Word),
+    /// Receiver pulsed `ack`.
+    Ack,
+}
+
+/// A traced handshake event: (cycle, arc index, what).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HandshakeEvent {
+    pub cycle: u64,
+    pub arc: u32,
+    pub kind: HandshakeKind,
+}
+
+/// Cycle-accurate simulator.
+pub struct FsmSim<'g> {
+    g: &'g Graph,
+    state: Vec<State>,
+    in_regs: Vec<Vec<Option<Word>>>,  // dadoa/dadob + bita/bitb
+    out_regs: Vec<Vec<Option<Word>>>, // dadoz + bitz, per output port
+    fifo_q: Vec<VecDeque<Word>>,
+    const_spent: Vec<bool>,
+    pending: Vec<VecDeque<Word>>, // per arc: env injection stream (input ports)
+    collected: BTreeMap<String, Vec<Word>>,
+    cycle: u64,
+    firings: u64,
+    /// When `Some`, records every `str`/`ack` for protocol property tests.
+    pub trace: Option<Vec<HandshakeEvent>>,
+    // scratch wires, one slot per arc, rebuilt every cycle
+    str_wire: Vec<Option<Word>>,
+    ack_wire: Vec<bool>,
+    // §Perf: precomputed port arc lists (the environment's side of the
+    // handshake) — avoids two full-arc classification scans per edge.
+    in_port_arcs: Vec<usize>,
+    out_port_arcs: Vec<usize>,
+}
+
+impl<'g> FsmSim<'g> {
+    pub fn new(g: &'g Graph, cfg: &SimConfig) -> Self {
+        let mut pending = vec![VecDeque::new(); g.n_arcs()];
+        for a in g.input_ports() {
+            if let Some(stream) = cfg.inject.get(&g.arc(a).name) {
+                pending[a.0 as usize] = stream.iter().copied().collect();
+            }
+        }
+        let mut collected = BTreeMap::new();
+        for p in g.output_ports() {
+            collected.insert(g.arc(p).name.clone(), Vec::new());
+        }
+        let mut state = Vec::with_capacity(g.n_nodes());
+        let mut out_regs = Vec::with_capacity(g.n_nodes());
+        for n in &g.nodes {
+            // S0: Const nodes come out of reset with their token already in
+            // dadoz (bitz set) and go straight to S3; everyone else clears
+            // registers and enters S1.
+            match n.op {
+                Op::Const(v) => {
+                    state.push(State::Send);
+                    out_regs.push(vec![Some(v)]);
+                }
+                _ => {
+                    state.push(State::Receive);
+                    out_regs.push(vec![None; n.op.n_out()]);
+                }
+            }
+        }
+        FsmSim {
+            g,
+            state,
+            in_regs: g.nodes.iter().map(|n| vec![None; n.op.n_in()]).collect(),
+            out_regs,
+            fifo_q: g.nodes.iter().map(|_| VecDeque::new()).collect(),
+            const_spent: vec![false; g.n_nodes()],
+            pending,
+            collected,
+            cycle: 0,
+            firings: 0,
+            trace: None,
+            str_wire: vec![None; g.n_arcs()],
+            ack_wire: vec![false; g.n_arcs()],
+            in_port_arcs: g.input_ports().iter().map(|a| a.0 as usize).collect(),
+            out_port_arcs: g.output_ports().iter().map(|a| a.0 as usize).collect(),
+        }
+    }
+
+    fn trace_str(&mut self, arc: u32, v: Word) {
+        let c = self.cycle;
+        if let Some(t) = &mut self.trace {
+            t.push(HandshakeEvent {
+                cycle: c,
+                arc,
+                kind: HandshakeKind::Str(v),
+            });
+        }
+    }
+
+    fn trace_ack(&mut self, arc: u32) {
+        let c = self.cycle;
+        if let Some(t) = &mut self.trace {
+            t.push(HandshakeEvent {
+                cycle: c,
+                arc,
+                kind: HandshakeKind::Ack,
+            });
+        }
+    }
+
+    /// Is node `ni`'s fire rule satisfied by its latched registers?
+    fn fire_ready(&self, ni: usize) -> bool {
+        let n = &self.g.nodes[ni];
+        let regs = &self.in_regs[ni];
+        match n.op {
+            Op::Const(_) => false, // fires only from reset
+            Op::Fifo(_) => false,  // handled outside the FSM
+            Op::NdMerge => regs[0].is_some() || regs[1].is_some(),
+            Op::DMerge => match regs[0] {
+                Some(c) => {
+                    if c != 0 {
+                        regs[1].is_some()
+                    } else {
+                        regs[2].is_some()
+                    }
+                }
+                None => false,
+            },
+            _ => regs.iter().all(|r| r.is_some()),
+        }
+    }
+
+    /// Execute node `ni` (state S2): consume registers, fill `dadoz`.
+    fn execute(&mut self, ni: usize) {
+        let op = self.g.nodes[ni].op;
+        self.firings += 1;
+        match op {
+            Op::Copy => {
+                let v = self.in_regs[ni][0].take().unwrap();
+                self.out_regs[ni][0] = Some(v);
+                self.out_regs[ni][1] = Some(v);
+            }
+            Op::Not => {
+                let v = self.in_regs[ni][0].take().unwrap();
+                self.out_regs[ni][0] = Some(op.eval1(v));
+            }
+            Op::NdMerge => {
+                let v = if self.in_regs[ni][0].is_some() {
+                    self.in_regs[ni][0].take().unwrap()
+                } else {
+                    self.in_regs[ni][1].take().unwrap()
+                };
+                self.out_regs[ni][0] = Some(v);
+            }
+            Op::DMerge => {
+                let c = self.in_regs[ni][0].take().unwrap();
+                let sel = if c != 0 { 1 } else { 2 };
+                let v = self.in_regs[ni][sel].take().unwrap();
+                self.out_regs[ni][0] = Some(v);
+            }
+            Op::Branch => {
+                let c = self.in_regs[ni][0].take().unwrap();
+                let v = self.in_regs[ni][1].take().unwrap();
+                let port = if c != 0 { 0 } else { 1 };
+                self.out_regs[ni][port] = Some(v);
+            }
+            Op::Const(_) | Op::Fifo(_) => unreachable!("not FSM-executed"),
+            _ => {
+                let a = self.in_regs[ni][0].take().unwrap();
+                let b = self.in_regs[ni][1].take().unwrap();
+                self.out_regs[ni][0] = Some(op.eval2(a, b));
+            }
+        }
+    }
+
+    /// Advance one clock edge. Returns the number of `ack` pulses plus
+    /// operator executions this cycle — the liveness measure `run` uses:
+    /// any sustained progress implies acks (see `run`).
+    pub fn step(&mut self) -> u64 {
+        let n_arcs = self.g.n_arcs();
+        self.str_wire[..n_arcs].fill(None);
+        self.ack_wire[..n_arcs].fill(false);
+        let mut acks = 0u64;
+
+        // ---- Phase A: drive `str` wires -----------------------------
+        // Environment drives input ports that still have tokens queued.
+        for pi in 0..self.in_port_arcs.len() {
+            let a = self.in_port_arcs[pi];
+            if let Some(&v) = self.pending[a].front() {
+                self.str_wire[a] = Some(v);
+                self.trace_str(a as u32, v);
+            }
+        }
+        // Nodes in S3 drive every pending output register.
+        for ni in 0..self.g.nodes.len() {
+            match self.g.nodes[ni].op {
+                Op::Fifo(_) => {
+                    if let Some(&v) = self.fifo_q[ni].front() {
+                        let a = self.g.nodes[ni].outs[0].0 as usize;
+                        self.str_wire[a] = Some(v);
+                        self.trace_str(a as u32, v);
+                    }
+                }
+                _ => {
+                    if self.state[ni] == State::Send {
+                        for p in 0..self.out_regs[ni].len() {
+                            if let Some(v) = self.out_regs[ni][p] {
+                                let a = self.g.nodes[ni].outs[p].0 as usize;
+                                self.str_wire[a] = Some(v);
+                                self.trace_str(a as u32, v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- Phase B: receivers latch + pulse `ack` ------------------
+        // Environment always acks output ports (the testbench is ready).
+        for pi in 0..self.out_port_arcs.len() {
+            let a = self.out_port_arcs[pi];
+            if let Some(v) = self.str_wire[a] {
+                let name = self.g.arcs[a].name.clone();
+                self.collected.get_mut(&name).unwrap().push(v);
+                self.ack_wire[a] = true;
+                acks += 1;
+                self.trace_ack(a as u32);
+            }
+        }
+        for ni in 0..self.g.nodes.len() {
+            let op = self.g.nodes[ni].op;
+            match op {
+                Op::Fifo(k) => {
+                    let a = self.g.nodes[ni].ins[0].0 as usize;
+                    if self.fifo_q[ni].len() < k as usize {
+                        if let Some(v) = self.str_wire[a] {
+                            self.fifo_q[ni].push_back(v);
+                            self.ack_wire[a] = true;
+                            acks += 1;
+                            self.trace_ack(a as u32);
+                        }
+                    }
+                }
+                _ => {
+                    if self.state[ni] == State::Receive {
+                        for p in 0..self.g.nodes[ni].ins.len() {
+                            let a = self.g.nodes[ni].ins[p].0 as usize;
+                            if self.in_regs[ni][p].is_none() {
+                                if let Some(v) = self.str_wire[a] {
+                                    self.in_regs[ni][p] = Some(v);
+                                    self.ack_wire[a] = true;
+                                    acks += 1;
+                                    self.trace_ack(a as u32);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- Phase C: retire acks, advance FSMs ----------------------
+        let mut progress = acks;
+        // Environment pops an injected token when its port got acked.
+        for pi in 0..self.in_port_arcs.len() {
+            let a = self.in_port_arcs[pi];
+            if self.ack_wire[a] {
+                self.pending[a].pop_front();
+            }
+        }
+        for ni in 0..self.g.nodes.len() {
+            let op = self.g.nodes[ni].op;
+            if let Op::Fifo(_) = op {
+                let a = self.g.nodes[ni].outs[0].0 as usize;
+                if self.ack_wire[a] {
+                    self.fifo_q[ni].pop_front();
+                }
+                continue;
+            }
+            match self.state[ni] {
+                State::Send => {
+                    let mut all_clear = true;
+                    for p in 0..self.out_regs[ni].len() {
+                        let a = self.g.nodes[ni].outs[p].0 as usize;
+                        if self.out_regs[ni][p].is_some() {
+                            if self.ack_wire[a] {
+                                self.out_regs[ni][p] = None;
+                            } else {
+                                all_clear = false;
+                            }
+                        }
+                    }
+                    if all_clear {
+                        if let Op::Const(_) = op {
+                            self.const_spent[ni] = true;
+                            // Spent const idles in S1 forever (no inputs).
+                        }
+                        self.state[ni] = State::Receive;
+                    }
+                }
+                State::Receive => {
+                    if self.fire_ready(ni) {
+                        self.state[ni] = State::Execute;
+                    }
+                }
+                State::Execute => {
+                    self.execute(ni);
+                    progress += 1;
+                    self.state[ni] = State::Send;
+                }
+            }
+        }
+        self.cycle += 1;
+        progress
+    }
+
+    fn busy(&self) -> bool {
+        // Anything queued, latched, pending, or mid-FSM?
+        self.pending.iter().any(|q| !q.is_empty())
+            || self.fifo_q.iter().any(|q| !q.is_empty())
+            || (0..self.g.nodes.len()).any(|ni| {
+                match self.g.nodes[ni].op {
+                    // A spent const parked in S1/S3-done is not busy.
+                    Op::Const(_) => !self.const_spent[ni],
+                    _ => {
+                        self.state[ni] != State::Receive
+                            || self.in_regs[ni].iter().any(|r| r.is_some())
+                    }
+                }
+            })
+    }
+
+    /// Run until quiescent or `max_cycles`.
+    ///
+    /// Liveness argument: any sustained activity in the fabric produces an
+    /// `ack` or an execution within a bounded window (an FSM can spend at
+    /// most one cycle in S2 and needs an ack to leave S3; a FIFO hop is an
+    /// ack), so eight consecutive zero-progress cycles means the fabric is
+    /// either finished or deadlocked — `busy()` distinguishes the two.
+    pub fn run(mut self, cfg: &SimConfig) -> SimOutcome {
+        let mut idle = 0u32;
+        while self.cycle < cfg.max_cycles {
+            let progress = self.step();
+            if progress == 0 {
+                idle += 1;
+                if idle >= 2 && !self.busy() {
+                    break;
+                }
+                if idle >= 8 {
+                    break; // deadlock / starvation
+                }
+            } else {
+                idle = 0;
+            }
+        }
+        let quiescent = !self.busy();
+        SimOutcome {
+            outputs: self.collected,
+            cycles: self.cycle,
+            firings: self.firings,
+            quiescent,
+        }
+    }
+
+    /// Clock count so far.
+    pub fn cycles(&self) -> u64 {
+        self.cycle
+    }
+}
+
+/// Convenience: build + run in one call.
+pub fn run_fsm(g: &Graph, cfg: &SimConfig) -> SimOutcome {
+    FsmSim::new(g, cfg).run(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::GraphBuilder;
+    use crate::sim::token::run_token;
+
+    fn adder() -> Graph {
+        let mut b = GraphBuilder::new("adder");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, c], &[z]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn add_matches_token_engine() {
+        let g = adder();
+        let cfg = SimConfig::new()
+            .inject("a", vec![1, 2, 3])
+            .inject("b", vec![10, 20, 30]);
+        let fsm = run_fsm(&g, &cfg);
+        let tok = run_token(&g, &cfg);
+        assert_eq!(fsm.outputs, tok.outputs);
+        assert!(fsm.quiescent);
+        // The FSM engine pays handshake cycles: strictly more cycles than
+        // the token engine's rounds.
+        assert!(fsm.cycles > tok.cycles / 2);
+    }
+
+    #[test]
+    fn firing_costs_at_least_three_cycles() {
+        let g = adder();
+        let cfg = SimConfig::new().inject("a", vec![7]).inject("b", vec![8]);
+        let out = run_fsm(&g, &cfg);
+        assert_eq!(out.stream("z"), &[15]);
+        // S1 latch → S2 execute → S3 send: ≥3 edges.
+        assert!(out.cycles >= 3, "cycles = {}", out.cycles);
+    }
+
+    #[test]
+    fn handshake_trace_is_well_formed() {
+        let g = adder();
+        let cfg = SimConfig::new()
+            .inject("a", vec![1, 2])
+            .inject("b", vec![3, 4]);
+        let mut sim = FsmSim::new(&g, &cfg);
+        sim.trace = Some(Vec::new());
+        for _ in 0..200 {
+            sim.step();
+        }
+        let trace = sim.trace.take().unwrap();
+        // Every ack on an arc must be preceded (same cycle) by a str.
+        for e in trace.iter().filter(|e| e.kind == HandshakeKind::Ack) {
+            assert!(
+                trace.iter().any(|s| s.arc == e.arc
+                    && s.cycle == e.cycle
+                    && matches!(s.kind, HandshakeKind::Str(_))),
+                "ack without str on arc {} at cycle {}",
+                e.arc,
+                e.cycle
+            );
+        }
+    }
+
+    #[test]
+    fn dmerge_parks_unselected_token() {
+        let mut b = GraphBuilder::new("t");
+        let ctl = b.input_port("ctl");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::DMerge, &[ctl, a, c], &[z]);
+        let g = b.finish().unwrap();
+        let cfg = SimConfig::new()
+            .inject("ctl", vec![0, 1])
+            .inject("a", vec![7])
+            .inject("b", vec![9]);
+        let out = run_fsm(&g, &cfg);
+        assert_eq!(out.stream("z"), &[9, 7]);
+    }
+
+    #[test]
+    fn const_fires_exactly_once() {
+        let mut b = GraphBuilder::new("t");
+        let k = b.constant(5);
+        let a = b.input_port("a");
+        let z = b.output_port("z");
+        b.node(Op::Mul, &[k, a], &[z]);
+        let g = b.finish().unwrap();
+        let cfg = SimConfig::new().inject("a", vec![8, 9]);
+        let out = run_fsm(&g, &cfg);
+        assert_eq!(out.stream("z"), &[40]);
+        assert!(!out.quiescent); // second `a` token is latched, starved
+    }
+}

@@ -1,0 +1,92 @@
+//! Simulation of the static dataflow fabric.
+//!
+//! Three engines, one semantics:
+//!
+//! * [`TokenSim`] — the fast engine. Arcs are one-place token buffers (the
+//!   static rule, §3.1); every fireable operator fires once per synchronous
+//!   round. This is the engine benchmarks and the coordinator use.
+//! * [`FsmSim`] — the cycle-accurate engine. Every operator runs the
+//!   paper's four-state ASM chart (Fig. 6) and every arc carries the
+//!   explicit `str`/`ack` handshake (Fig. 3); a firing costs the same
+//!   number of clock edges the VHDL implementation pays. Used for latency
+//!   numbers and for property-testing the handshake protocol itself.
+//! * [`DynamicSim`] — the paper's *future work*: a tagged-token engine with
+//!   k-bounded FIFO arcs, used by the ablation bench to quantify how much
+//!   the static single-token rule costs.
+//!
+//! All three must agree on final port outputs; integration tests and
+//! proptests enforce this.
+
+mod dynamic;
+mod fsm;
+mod token;
+
+pub use dynamic::{run_dynamic, DynamicSim};
+pub use fsm::{run_fsm, FsmSim, HandshakeEvent, HandshakeKind};
+pub use token::{run_token, AluReq, TokenSim};
+
+use crate::dfg::Word;
+use std::collections::BTreeMap;
+
+/// Per-run configuration: what to inject and how long to wait.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Token streams to feed each input port, by arc label. Tokens are
+    /// injected in order, one at a time, as the fabric accepts them — the
+    /// environment behaves like one more handshaking sender per port.
+    pub inject: BTreeMap<String, Vec<Word>>,
+    /// Hard cycle limit (deadlock/livelock guard).
+    pub max_cycles: u64,
+}
+
+impl SimConfig {
+    pub fn new() -> Self {
+        SimConfig {
+            inject: BTreeMap::new(),
+            max_cycles: 1_000_000,
+        }
+    }
+
+    pub fn inject(mut self, port: &str, tokens: impl Into<Vec<Word>>) -> Self {
+        self.inject.insert(port.to_string(), tokens.into());
+        self
+    }
+
+    pub fn max_cycles(mut self, c: u64) -> Self {
+        self.max_cycles = c;
+        self
+    }
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// What a run produced.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimOutcome {
+    /// Tokens collected at each output port, in arrival order.
+    pub outputs: BTreeMap<String, Vec<Word>>,
+    /// Clock cycles (FsmSim) or synchronous rounds (TokenSim/DynamicSim)
+    /// until quiescence or the cycle limit.
+    pub cycles: u64,
+    /// Total operator firings.
+    pub firings: u64,
+    /// True iff the run reached quiescence (no fireable operator, no
+    /// pending injection) before `max_cycles`.
+    pub quiescent: bool,
+}
+
+impl SimOutcome {
+    /// The last token seen on `port` (most benchmarks' "result" signal).
+    pub fn last(&self, port: &str) -> Option<Word> {
+        self.outputs.get(port).and_then(|v| v.last().copied())
+    }
+
+    /// All tokens seen on `port`.
+    pub fn stream(&self, port: &str) -> &[Word] {
+        self.outputs.get(port).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}

@@ -1,0 +1,582 @@
+//! The fast token engine.
+//!
+//! Arcs are `Option<Word>` one-place buffers (the static dataflow rule: at
+//! most one token per arc, §3.1). Execution proceeds in synchronous
+//! rounds; within a round every operator that is fireable *in the
+//! beginning-of-round snapshot* fires exactly once. This is the elastic-
+//! pipeline semantics of the paper's clocked implementation (Fig. 1c)
+//! with the handshake cycles abstracted away — `FsmSim` charges those.
+
+use super::{SimConfig, SimOutcome};
+use crate::dfg::{ArcId, Graph, Op, OpClass, Word};
+use std::collections::{BTreeMap, VecDeque};
+
+/// An ALU/decider firing extracted from the fabric for external (XLA)
+/// evaluation — the offload hook the coordinator's batch engine uses.
+#[derive(Debug, Clone, Copy)]
+pub struct AluReq {
+    /// Node index in the graph (the per-node slot in the fabric batch).
+    pub node: u32,
+    /// Arc the result must be staged on.
+    pub out: ArcId,
+    /// `Op::fabric_opcode` value.
+    pub opcode: i32,
+    pub a: Word,
+    pub b: Word,
+}
+
+/// Fast single-token-per-arc simulator.
+pub struct TokenSim<'g> {
+    g: &'g Graph,
+    /// One-place buffer per arc.
+    tokens: Vec<Option<Word>>,
+    /// Per-node FIFO state (only `Op::Fifo` nodes use theirs).
+    fifos: Vec<VecDeque<Word>>,
+    /// Const nodes that have already emitted their reset token.
+    const_done: Vec<bool>,
+    /// Pending environment injections per input port.
+    pending: Vec<(ArcId, VecDeque<Word>)>,
+    /// Output ports (collected every round).
+    out_ports: Vec<ArcId>,
+    collected: BTreeMap<String, Vec<Word>>,
+    firings: u64,
+    // scratch: staged writes for the current round
+    staged: Vec<(ArcId, Word)>,
+    // ---- event-driven scheduling (§Perf) ---------------------------
+    // Only nodes whose inputs gained a token or whose outputs were freed
+    // since their last examination are re-examined. `arc_src`/`arc_dst`
+    // are the producing/consuming node per arc (-1 = environment).
+    arc_src: Vec<i32>,
+    arc_dst: Vec<i32>,
+    marked: Vec<bool>,
+    worklist: Vec<u32>,
+    scratch_list: Vec<u32>,
+}
+
+impl<'g> TokenSim<'g> {
+    pub fn new(g: &'g Graph, cfg: &SimConfig) -> Self {
+        let mut pending = Vec::new();
+        for a in g.input_ports() {
+            let name = &g.arc(a).name;
+            let stream = cfg
+                .inject
+                .get(name)
+                .map(|v| v.iter().copied().collect())
+                .unwrap_or_default();
+            pending.push((a, stream));
+        }
+        let out_ports = g.output_ports();
+        let mut collected = BTreeMap::new();
+        for &p in &out_ports {
+            collected.insert(g.arc(p).name.clone(), Vec::new());
+        }
+        TokenSim {
+            g,
+            tokens: vec![None; g.n_arcs()],
+            fifos: g
+                .nodes
+                .iter()
+                .map(|n| match n.op {
+                    Op::Fifo(k) => VecDeque::with_capacity(k as usize),
+                    _ => VecDeque::new(),
+                })
+                .collect(),
+            const_done: vec![false; g.n_nodes()],
+            pending,
+            out_ports,
+            collected,
+            firings: 0,
+            staged: Vec::new(),
+            arc_src: g
+                .arcs
+                .iter()
+                .map(|a| a.src.map(|(n, _)| n.0 as i32).unwrap_or(-1))
+                .collect(),
+            arc_dst: g
+                .arcs
+                .iter()
+                .map(|a| a.dst.map(|(n, _)| n.0 as i32).unwrap_or(-1))
+                .collect(),
+            marked: vec![true; g.n_nodes()],
+            worklist: (0..g.n_nodes() as u32).collect(),
+            scratch_list: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn mark(&mut self, ni: i32) {
+        if ni >= 0 && !self.marked[ni as usize] {
+            self.marked[ni as usize] = true;
+            self.worklist.push(ni as u32);
+        }
+    }
+
+    #[inline]
+    fn full(&self, a: ArcId) -> bool {
+        self.tokens[a.0 as usize].is_some()
+    }
+
+    #[inline]
+    fn peek(&self, a: ArcId) -> Option<Word> {
+        self.tokens[a.0 as usize]
+    }
+
+    #[inline]
+    fn take(&mut self, a: ArcId) -> Word {
+        // Freeing the arc may re-enable its producer.
+        self.mark(self.arc_src[a.0 as usize]);
+        self.tokens[a.0 as usize].take().expect("token present")
+    }
+
+    /// Run one synchronous round. Returns the number of firings.
+    pub fn step(&mut self) -> u64 {
+        self.step_inner(None)
+    }
+
+    /// Offload phase 1: like [`TokenSim::step`], but ALU/decider/not
+    /// firings are *extracted* into `reqs` (inputs consumed, outputs not
+    /// yet produced) instead of being evaluated locally. The caller
+    /// evaluates the batch (e.g. through the PJRT fabric kernel) and
+    /// completes the round with [`TokenSim::apply_alu`].
+    pub fn step_offload(&mut self, reqs: &mut Vec<AluReq>) -> u64 {
+        self.step_inner(Some(reqs))
+    }
+
+    /// Offload phase 2: stage the externally computed results.
+    pub fn apply_alu(&mut self, reqs: &[AluReq], z: &[i32]) {
+        assert_eq!(reqs.len(), z.len());
+        for (r, &v) in reqs.iter().zip(z) {
+            debug_assert!(
+                self.tokens[r.out.0 as usize].is_none(),
+                "ALU result overwrites a token"
+            );
+            self.tokens[r.out.0 as usize] = Some(v as Word);
+            self.mark(self.arc_dst[r.out.0 as usize]);
+        }
+        self.firings += reqs.len() as u64;
+    }
+
+    /// True when nothing further can ever happen without new injections.
+    pub fn idle(&self) -> bool {
+        !self.injections_pending() && !self.tokens_in_flight()
+    }
+
+    /// Finalize into an outcome (offload driver use).
+    pub fn into_outcome(self, cycles: u64, quiescent: bool) -> SimOutcome {
+        SimOutcome {
+            outputs: self.collected,
+            cycles,
+            firings: self.firings,
+            quiescent,
+        }
+    }
+
+    fn step_inner(&mut self, mut reqs: Option<&mut Vec<AluReq>>) -> u64 {
+        let mut fired = 0u64;
+
+        // 1. Environment: inject pending tokens into empty input ports and
+        //    collect tokens from output ports (the environment is always
+        //    ready, like the always-acking testbench the paper describes).
+        for pi in 0..self.pending.len() {
+            let (arc, _) = self.pending[pi];
+            if self.tokens[arc.0 as usize].is_none() && !self.pending[pi].1.is_empty() {
+                self.tokens[arc.0 as usize] = self.pending[pi].1.pop_front();
+                self.mark(self.arc_dst[arc.0 as usize]);
+            }
+        }
+        for pi in 0..self.out_ports.len() {
+            let p = self.out_ports[pi];
+            if let Some(v) = self.tokens[p.0 as usize].take() {
+                self.mark(self.arc_src[p.0 as usize]);
+                let name = &self.g.arc(p).name;
+                self.collected.get_mut(name).unwrap().push(v);
+            }
+        }
+
+        // 2. Snapshot-fire every *marked* operator (a node is marked when
+        //    an input arc gained a token or an output arc was freed since
+        //    its last examination — the event-driven schedule, §Perf).
+        //    Writes are staged so fire decisions see round-start state.
+        debug_assert!(self.staged.is_empty());
+        let mut staged = std::mem::take(&mut self.staged);
+        // This round's list; marks made while firing land in the (empty,
+        // capacity-recycled) `worklist` for the next round.
+        let list = std::mem::replace(&mut self.worklist, std::mem::take(&mut self.scratch_list));
+        for &ni in &list {
+            self.marked[ni as usize] = false;
+        }
+        for &ni in &list {
+            let ni = ni as usize;
+            // Extract ALU-class firings when offloading.
+            if let Some(reqs) = reqs.as_deref_mut() {
+                let op = self.g.nodes[ni].op;
+                match op.class() {
+                    OpClass::Alu2 | OpClass::Decider => {
+                        let node = &self.g.nodes[ni];
+                        if self.full(node.ins[0])
+                            && self.full(node.ins[1])
+                            && !self.full(node.outs[0])
+                        {
+                            let (out, i0, i1) = (node.outs[0], node.ins[0], node.ins[1]);
+                            let a = self.take(i0);
+                            let b = self.take(i1);
+                            reqs.push(AluReq {
+                                node: ni as u32,
+                                out,
+                                opcode: op.fabric_opcode(),
+                                a,
+                                b,
+                            });
+                        }
+                        continue;
+                    }
+                    OpClass::Alu1 => {
+                        let node = &self.g.nodes[ni];
+                        if self.full(node.ins[0]) && !self.full(node.outs[0]) {
+                            let (out, i0) = (node.outs[0], node.ins[0]);
+                            let a = self.take(i0);
+                            reqs.push(AluReq {
+                                node: ni as u32,
+                                out,
+                                opcode: op.fabric_opcode(),
+                                a,
+                                b: 0,
+                            });
+                        }
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+            if self.try_fire(ni, &mut staged) {
+                fired += 1;
+            }
+        }
+        for i in 0..staged.len() {
+            let (a, v) = staged[i];
+            debug_assert!(self.tokens[a.0 as usize].is_none(), "token overwrite");
+            self.tokens[a.0 as usize] = Some(v);
+            // New token may enable the consumer next round.
+            self.mark(self.arc_dst[a.0 as usize]);
+        }
+        staged.clear();
+        self.staged = staged;
+        // Recycle this round's list capacity.
+        let mut list = list;
+        list.clear();
+        self.scratch_list = list;
+
+        self.firings += fired;
+        fired
+    }
+
+    /// Fire node `ni` if enabled; consume inputs now, stage outputs.
+    fn try_fire(&mut self, ni: usize, staged: &mut Vec<(ArcId, Word)>) -> bool {
+        let node = &self.g.nodes[ni];
+        let op = node.op;
+        // `staged` writes land after the round, so checking `full` here is
+        // the snapshot check. An output already staged this round belongs
+        // to another node (single-driver invariant) — cannot collide.
+        match op {
+            Op::Const(v) => {
+                if self.const_done[ni] || self.full(node.outs[0]) {
+                    return false;
+                }
+                self.const_done[ni] = true;
+                staged.push((node.outs[0], v));
+                true
+            }
+            Op::Copy => {
+                if !self.full(node.ins[0]) || self.full(node.outs[0]) || self.full(node.outs[1]) {
+                    return false;
+                }
+                let (o0, o1) = (node.outs[0], node.outs[1]);
+                let v = self.take(node.ins[0]);
+                staged.push((o0, v));
+                staged.push((o1, v));
+                true
+            }
+            Op::Not => {
+                if !self.full(node.ins[0]) || self.full(node.outs[0]) {
+                    return false;
+                }
+                let out = node.outs[0];
+                let v = self.take(node.ins[0]);
+                staged.push((out, op.eval1(v)));
+                true
+            }
+            Op::NdMerge => {
+                if self.full(node.outs[0]) {
+                    return false;
+                }
+                // First-come-first-served; on a tie, port 0 wins (the
+                // hardware arbiter's fixed priority).
+                let (i0, i1, out) = (node.ins[0], node.ins[1], node.outs[0]);
+                let v = if self.full(i0) {
+                    self.take(i0)
+                } else if self.full(i1) {
+                    self.take(i1)
+                } else {
+                    return false;
+                };
+                staged.push((out, v));
+                true
+            }
+            Op::DMerge => {
+                // Port 0 is the TRUE/FALSE control; TRUE selects port 1
+                // (`a`), FALSE selects port 2 (`b`). The unselected token,
+                // if any, stays put (§3.2 item 3: "conditionally read").
+                if self.full(node.outs[0]) {
+                    return false;
+                }
+                let ctl = match self.peek(node.ins[0]) {
+                    Some(c) => c,
+                    None => return false,
+                };
+                let sel = if ctl != 0 { node.ins[1] } else { node.ins[2] };
+                if !self.full(sel) {
+                    return false;
+                }
+                let out = node.outs[0];
+                self.take(node.ins[0]);
+                let v = self.take(sel);
+                staged.push((out, v));
+                true
+            }
+            Op::Branch => {
+                // Port 0 is control, port 1 is data; output 0 is the TRUE
+                // side, output 1 the FALSE side. Only the selected output
+                // must be free (§3.2 item 5).
+                let ctl = match self.peek(node.ins[0]) {
+                    Some(c) => c,
+                    None => return false,
+                };
+                if !self.full(node.ins[1]) {
+                    return false;
+                }
+                let out = if ctl != 0 { node.outs[0] } else { node.outs[1] };
+                if self.full(out) {
+                    return false;
+                }
+                self.take(node.ins[0]);
+                let v = self.take(node.ins[1]);
+                staged.push((out, v));
+                true
+            }
+            Op::Fifo(k) => {
+                // A FIFO both accepts and emits in the same round.
+                let mut acted = false;
+                if self.full(node.ins[0]) && self.fifos[ni].len() < k as usize {
+                    let v = self.take(node.ins[0]);
+                    self.fifos[ni].push_back(v);
+                    acted = true;
+                }
+                if !self.full(node.outs[0]) {
+                    if let Some(v) = self.fifos[ni].pop_front() {
+                        staged.push((node.outs[0], v));
+                        acted = true;
+                    }
+                }
+                if acted {
+                    // Queue state is internal (not arc events): the FIFO
+                    // must re-examine itself while it holds tokens.
+                    self.mark(ni as i32);
+                }
+                acted
+            }
+            // All remaining ops are 2-in/1-out ALU or decider nodes.
+            _ => {
+                if !self.full(node.ins[0]) || !self.full(node.ins[1]) || self.full(node.outs[0]) {
+                    return false;
+                }
+                let out = node.outs[0];
+                let a = self.take(node.ins[0]);
+                let b = self.take(node.ins[1]);
+                staged.push((out, op.eval2(a, b)));
+                true
+            }
+        }
+    }
+
+    fn injections_pending(&self) -> bool {
+        self.pending.iter().any(|(_, s)| !s.is_empty())
+    }
+
+    fn tokens_in_flight(&self) -> bool {
+        self.tokens.iter().any(|t| t.is_some())
+            || self.fifos.iter().any(|f| !f.is_empty())
+    }
+
+    /// Run to quiescence or the cycle limit.
+    pub fn run(mut self, cfg: &SimConfig) -> SimOutcome {
+        let mut cycles = 0u64;
+        let mut quiescent = false;
+        while cycles < cfg.max_cycles {
+            let fired = self.step();
+            cycles += 1;
+            if fired == 0 && !self.injections_pending() {
+                // One more round may still drain output ports.
+                self.step();
+                cycles += 1;
+                if !self.tokens_in_flight() {
+                    quiescent = true;
+                }
+                break;
+            }
+        }
+        SimOutcome {
+            outputs: self.collected,
+            cycles,
+            firings: self.firings,
+            quiescent,
+        }
+    }
+
+    /// Current arc occupancy (for invariant checks in tests).
+    pub fn occupancy(&self) -> usize {
+        self.tokens.iter().filter(|t| t.is_some()).count()
+    }
+}
+
+/// Convenience: build + run in one call.
+pub fn run_token(g: &Graph, cfg: &SimConfig) -> SimOutcome {
+    TokenSim::new(g, cfg).run(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::GraphBuilder;
+
+    fn adder() -> Graph {
+        let mut b = GraphBuilder::new("adder");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, c], &[z]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn single_add_fires_once() {
+        let g = adder();
+        let cfg = SimConfig::new().inject("a", vec![2]).inject("b", vec![3]);
+        let out = TokenSim::new(&g, &cfg).run(&cfg);
+        assert_eq!(out.stream("z"), &[5]);
+        assert_eq!(out.firings, 1);
+        assert!(out.quiescent);
+    }
+
+    #[test]
+    fn add_streams_elementwise() {
+        let g = adder();
+        let cfg = SimConfig::new()
+            .inject("a", vec![1, 2, 3, 4])
+            .inject("b", vec![10, 20, 30, 40]);
+        let out = TokenSim::new(&g, &cfg).run(&cfg);
+        assert_eq!(out.stream("z"), &[11, 22, 33, 44]);
+        assert_eq!(out.firings, 4);
+    }
+
+    #[test]
+    fn copy_duplicates() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let (x, y) = b.copy(a);
+        let z = b.output_port("z");
+        b.node(Op::Add, &[x, y], &[z]);
+        let g = b.finish().unwrap();
+        let cfg = SimConfig::new().inject("a", vec![21]);
+        let out = TokenSim::new(&g, &cfg).run(&cfg);
+        assert_eq!(out.stream("z"), &[42]);
+    }
+
+    #[test]
+    fn branch_routes_by_control() {
+        let mut b = GraphBuilder::new("t");
+        let ctl = b.input_port("ctl");
+        let data = b.input_port("data");
+        let t = b.output_port("t");
+        let f = b.output_port("f");
+        b.node(Op::Branch, &[ctl, data], &[t, f]);
+        let g = b.finish().unwrap();
+        let cfg = SimConfig::new()
+            .inject("ctl", vec![1, 0, 1])
+            .inject("data", vec![10, 20, 30]);
+        let out = TokenSim::new(&g, &cfg).run(&cfg);
+        assert_eq!(out.stream("t"), &[10, 30]);
+        assert_eq!(out.stream("f"), &[20]);
+    }
+
+    #[test]
+    fn dmerge_keeps_unselected_token() {
+        let mut b = GraphBuilder::new("t");
+        let ctl = b.input_port("ctl");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::DMerge, &[ctl, a, c], &[z]);
+        let g = b.finish().unwrap();
+        // ctl TRUE selects `a`; the token on `b` must survive for the
+        // second (FALSE) control token.
+        let cfg = SimConfig::new()
+            .inject("ctl", vec![1, 0])
+            .inject("a", vec![7])
+            .inject("b", vec![9]);
+        let out = TokenSim::new(&g, &cfg).run(&cfg);
+        assert_eq!(out.stream("z"), &[7, 9]);
+        assert!(out.quiescent);
+    }
+
+    #[test]
+    fn ndmerge_forwards_everything() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::NdMerge, &[a, c], &[z]);
+        let g = b.finish().unwrap();
+        let cfg = SimConfig::new().inject("a", vec![1, 2]).inject("b", vec![3]);
+        let out = TokenSim::new(&g, &cfg).run(&cfg);
+        let mut got = out.stream("z").to_vec();
+        got.sort();
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn const_emits_once() {
+        let mut b = GraphBuilder::new("t");
+        let k = b.constant(42);
+        let a = b.input_port("a");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[k, a], &[z]);
+        let g = b.finish().unwrap();
+        let cfg = SimConfig::new().inject("a", vec![1, 2]);
+        let out = TokenSim::new(&g, &cfg).run(&cfg);
+        // Only one const token: the second `a` token can never pair.
+        assert_eq!(out.stream("z"), &[43]);
+        assert!(!out.quiescent); // token stuck on `a`-side register
+    }
+
+    #[test]
+    fn fifo_buffers_stream() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let z = b.output_port("z");
+        b.node(Op::Fifo(8), &[a], &[z]);
+        let g = b.finish().unwrap();
+        let cfg = SimConfig::new().inject("a", vec![5, 6, 7]);
+        let out = TokenSim::new(&g, &cfg).run(&cfg);
+        assert_eq!(out.stream("z"), &[5, 6, 7]);
+    }
+
+    #[test]
+    fn cycle_limit_catches_deadlock() {
+        // add with only one operand ever arriving → never fires.
+        let g = adder();
+        let cfg = SimConfig::new().inject("a", vec![1]).max_cycles(100);
+        let out = TokenSim::new(&g, &cfg).run(&cfg);
+        assert_eq!(out.stream("z"), &[] as &[i16]);
+        assert!(!out.quiescent);
+    }
+}

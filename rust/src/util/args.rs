@@ -1,0 +1,98 @@
+//! A minimal `--flag value` / `--switch` argument parser for the CLI and
+//! the example binaries (no clap in the vendored environment).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positional arguments plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator (normally `std::env::args().skip(1)`).
+    /// `switch_names` lists flags that take no value.
+    pub fn parse(raw: impl Iterator<Item = String>, switch_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if let Some(v) = iter.peek() {
+                    if v.starts_with("--") {
+                        out.switches.push(name.to_string());
+                    } else {
+                        let v = iter.next().unwrap();
+                        out.options.insert(name.to_string(), v);
+                    }
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, switches: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), switches)
+    }
+
+    #[test]
+    fn parses_options_and_positionals() {
+        let a = parse("run --n 64 --seed=7 fibonacci --verbose", &["verbose"]);
+        assert_eq!(a.positional, vec!["run", "fibonacci"]);
+        assert_eq!(a.get_usize("n", 0), 64);
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn trailing_switch_without_value() {
+        let a = parse("--fig8", &[]);
+        assert!(a.has("fig8"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("", &[]);
+        assert_eq!(a.get_usize("n", 16), 16);
+        assert_eq!(a.get_or("mode", "token"), "token");
+    }
+}

@@ -1,0 +1,133 @@
+//! A small criterion-style benchmark harness.
+//!
+//! Used by every `[[bench]]` target (the vendored environment has no
+//! criterion). Methodology: warm up for `warmup_iters`, then take
+//! `samples` timed samples of `iters_per_sample` iterations each and
+//! report min / median / mean / p95 wall time per iteration plus derived
+//! throughput.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Nanoseconds per iteration: (min, median, mean, p95).
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+/// Configuration for [`run`].
+#[derive(Debug, Clone, Copy)]
+pub struct BenchCfg {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg {
+            warmup_iters: 3,
+            samples: 20,
+            iters_per_sample: 1,
+        }
+    }
+}
+
+/// Time `f`, returning per-iteration statistics.
+pub fn run<T>(name: &str, cfg: BenchCfg, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        black_box(f());
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..cfg.iters_per_sample {
+            black_box(f());
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / cfg.iters_per_sample as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = per_iter.len();
+    let mean = per_iter.iter().sum::<f64>() / n as f64;
+    Measurement {
+        name: name.to_string(),
+        min_ns: per_iter[0],
+        median_ns: per_iter[n / 2],
+        mean_ns: mean,
+        p95_ns: per_iter[((n as f64 * 0.95) as usize).min(n - 1)],
+        samples: n,
+    }
+}
+
+/// Pretty time.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print a measurement row in a stable, greppable format.
+pub fn report(m: &Measurement) {
+    println!(
+        "bench {:<42} median {:>12}  mean {:>12}  min {:>12}  p95 {:>12}  ({} samples)",
+        m.name,
+        fmt_ns(m.median_ns),
+        fmt_ns(m.mean_ns),
+        fmt_ns(m.min_ns),
+        fmt_ns(m.p95_ns),
+        m.samples
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let m = run(
+            "spin",
+            BenchCfg {
+                warmup_iters: 1,
+                samples: 5,
+                iters_per_sample: 10,
+            },
+            || {
+                let mut s = 0u64;
+                for i in 0..1000u64 {
+                    s = s.wrapping_add(i * i);
+                }
+                s
+            },
+        );
+        assert!(m.min_ns > 0.0);
+        assert!(m.median_ns >= m.min_ns);
+        assert!(m.p95_ns >= m.median_ns);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

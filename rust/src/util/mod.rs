@@ -1,0 +1,19 @@
+//! Offline-environment stand-ins for the usual crates.
+//!
+//! This build environment has no network and no vendored copies of
+//! `rand`, `criterion`, `proptest` or `clap`, so this module provides the
+//! minimal, well-tested subset the rest of the crate needs:
+//!
+//! * [`Rng`] — SplitMix64, a tiny, high-quality deterministic PRNG.
+//! * [`bench`] — a criterion-style measurement loop (warmup, N samples,
+//!   median/mean/stddev) used by all `rust/benches/*` harnesses.
+//! * [`proptest`] — a seeded random-input property-test driver with
+//!   failure reporting (seed + shrunken case where applicable).
+//! * [`args`] — a `--flag value` parser for the CLI and examples.
+
+pub mod args;
+pub mod bench;
+pub mod proptest;
+mod rng;
+
+pub use rng::Rng;

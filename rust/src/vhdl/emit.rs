@@ -1,0 +1,651 @@
+//! VHDL text generation.
+
+use crate::dfg::{Graph, Op, OpClass};
+use std::collections::BTreeSet;
+use std::fmt::Write;
+
+/// A generated design: shared operator entities plus the top netlist.
+#[derive(Debug, Clone)]
+pub struct VhdlDesign {
+    /// `(entity_name, vhdl_text)` for every operator class the graph uses.
+    pub entities: Vec<(String, String)>,
+    /// Top-level entity + architecture instantiating the graph.
+    pub top: String,
+}
+
+impl VhdlDesign {
+    /// The whole design as one compilation unit (entities first).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (_, e) in &self.entities {
+            out.push_str(e);
+            out.push('\n');
+        }
+        out.push_str(&self.top);
+        out
+    }
+}
+
+fn class_entity_name(c: OpClass) -> &'static str {
+    match c {
+        OpClass::Copy => "dfop_copy",
+        OpClass::NdMerge => "dfop_ndmerge",
+        OpClass::DMerge => "dfop_dmerge",
+        OpClass::Branch => "dfop_branch",
+        OpClass::Alu2 => "dfop_alu2",
+        OpClass::Alu1 => "dfop_alu1",
+        OpClass::Decider => "dfop_decider",
+        OpClass::Const => "dfop_const",
+        OpClass::Fifo => "dfop_fifo",
+    }
+}
+
+/// Opcode generic value for shared ALU / decider entities.
+fn opcode_generic(op: Op) -> Option<&'static str> {
+    Some(match op {
+        Op::Add => "OP_ADD",
+        Op::Sub => "OP_SUB",
+        Op::Mul => "OP_MUL",
+        Op::Div => "OP_DIV",
+        Op::And => "OP_AND",
+        Op::Or => "OP_OR",
+        Op::Xor => "OP_XOR",
+        Op::Shl => "OP_SHL",
+        Op::Shr => "OP_SHR",
+        Op::IfGt => "OP_GT",
+        Op::IfGe => "OP_GE",
+        Op::IfLt => "OP_LT",
+        Op::IfLe => "OP_LE",
+        Op::IfEq => "OP_EQ",
+        Op::IfDf => "OP_DF",
+        _ => return None,
+    })
+}
+
+const HEADER: &str = "\
+library ieee;
+use ieee.std_logic_1164.all;
+use ieee.numeric_std.all;
+";
+
+/// The shared package of opcode constants.
+fn package() -> String {
+    let mut s = String::from(HEADER);
+    s.push_str(
+        "
+package dfop_pkg is
+  constant OP_ADD : integer := 0;  constant OP_SUB : integer := 1;
+  constant OP_MUL : integer := 2;  constant OP_DIV : integer := 3;
+  constant OP_AND : integer := 4;  constant OP_OR  : integer := 5;
+  constant OP_XOR : integer := 6;  constant OP_SHL : integer := 7;
+  constant OP_SHR : integer := 8;  constant OP_GT  : integer := 9;
+  constant OP_GE  : integer := 10; constant OP_LT  : integer := 11;
+  constant OP_LE  : integer := 12; constant OP_EQ  : integer := 13;
+  constant OP_DF  : integer := 14;
+end package;
+",
+    );
+    s
+}
+
+/// Emit the two-input operator entity (primitive ALU / decider / shared
+/// datapath of Fig. 5 driven by the ASM chart of Fig. 6).
+fn entity_alu2(name: &str, boolean_out: bool) -> String {
+    let result = if boolean_out {
+        "dadoz <= (0 => result_bit, others => '0');"
+    } else {
+        "dadoz <= result_word;"
+    };
+    format!(
+        "{HEADER}use work.dfop_pkg.all;
+
+entity {name} is
+  generic (OPCODE : integer := OP_ADD);
+  port (
+    clk, rst : in std_logic;
+    a    : in  std_logic_vector(15 downto 0);
+    stra : in  std_logic;
+    acka : out std_logic;
+    b    : in  std_logic_vector(15 downto 0);
+    strb : in  std_logic;
+    ackb : out std_logic;
+    z    : out std_logic_vector(15 downto 0);
+    strz : out std_logic;
+    ackz : in  std_logic);
+end entity;
+
+architecture rtl of {name} is
+  type state_t is (S0, S1, S2, S3);
+  signal state : state_t;
+  signal dadoa, dadob, dadoz : std_logic_vector(15 downto 0);
+  signal bita, bitb, bitz : std_logic;
+  signal result_word : std_logic_vector(15 downto 0);
+  signal result_bit : std_logic;
+begin
+  -- Fig. 6 ASM chart: S0 reset, S1 receive, S2 execute, S3 send.
+  process (clk)
+  begin
+    if rising_edge(clk) then
+      if rst = '1' then
+        state <= S0;
+        bita <= '0'; bitb <= '0'; bitz <= '0';
+        acka <= '0'; ackb <= '0'; strz <= '0';
+      else
+        case state is
+          when S0 =>
+            state <= S1;
+          when S1 =>
+            if stra = '1' and bita = '0' then
+              dadoa <= a; bita <= '1'; acka <= '1';
+            else
+              acka <= '0';
+            end if;
+            if strb = '1' and bitb = '0' then
+              dadob <= b; bitb <= '1'; ackb <= '1';
+            else
+              ackb <= '0';
+            end if;
+            if bita = '1' and bitb = '1' then
+              state <= S2;
+            end if;
+          when S2 =>
+            {result}
+            bitz <= '1';
+            state <= S3;
+          when S3 =>
+            strz <= '1';
+            if ackz = '1' then
+              strz <= '0'; bitz <= '0';
+              bita <= '0'; bitb <= '0';
+              state <= S1;
+            end if;
+        end case;
+      end if;
+    end if;
+  end process;
+
+  z <= dadoz;
+
+  -- Combinational function unit, selected by the OPCODE generic.
+  alu : process (dadoa, dadob)
+    variable va, vb : signed(15 downto 0);
+  begin
+    va := signed(dadoa); vb := signed(dadob);
+    result_word <= (others => '0'); result_bit <= '0';
+    case OPCODE is
+      when OP_ADD => result_word <= std_logic_vector(va + vb);
+      when OP_SUB => result_word <= std_logic_vector(va - vb);
+      when OP_MUL => result_word <= std_logic_vector(resize(va * vb, 16));
+      when OP_DIV =>
+        if vb /= 0 then
+          result_word <= std_logic_vector(va / vb);
+        end if;
+      when OP_AND => result_word <= dadoa and dadob;
+      when OP_OR  => result_word <= dadoa or dadob;
+      when OP_XOR => result_word <= dadoa xor dadob;
+      when OP_SHL =>
+        result_word <= std_logic_vector(shift_left(va, to_integer(vb(3 downto 0))));
+      when OP_SHR =>
+        result_word <= std_logic_vector(shift_right(va, to_integer(vb(3 downto 0))));
+      when OP_GT => if va >  vb then result_bit <= '1'; end if;
+      when OP_GE => if va >= vb then result_bit <= '1'; end if;
+      when OP_LT => if va <  vb then result_bit <= '1'; end if;
+      when OP_LE => if va <= vb then result_bit <= '1'; end if;
+      when OP_EQ => if va =  vb then result_bit <= '1'; end if;
+      when OP_DF => if va /= vb then result_bit <= '1'; end if;
+      when others => null;
+    end case;
+  end process;
+
+  {assign}
+end architecture;
+",
+        assign = result
+    )
+}
+
+/// Structural entities whose bodies differ from the ALU template only in
+/// the receive/execute rules; emitted as compact hand templates.
+fn entity_fixed(name: &str) -> String {
+    let body: &str = match name {
+        "dfop_copy" => "\
+entity dfop_copy is
+  port (
+    clk, rst : in std_logic;
+    a : in std_logic_vector(15 downto 0); stra : in std_logic; acka : out std_logic;
+    z0 : out std_logic_vector(15 downto 0); strz0 : out std_logic; ackz0 : in std_logic;
+    z1 : out std_logic_vector(15 downto 0); strz1 : out std_logic; ackz1 : in std_logic);
+end entity;
+architecture rtl of dfop_copy is
+  type state_t is (S0, S1, S2, S3);
+  signal state : state_t;
+  signal dadoa, dadoz : std_logic_vector(15 downto 0);
+  signal bita, bitz : std_logic;
+  signal sent0, sent1 : std_logic;
+begin
+  process (clk) begin
+    if rising_edge(clk) then
+      if rst = '1' then
+        state <= S0; bita <= '0'; bitz <= '0';
+        acka <= '0'; strz0 <= '0'; strz1 <= '0'; sent0 <= '0'; sent1 <= '0';
+      else
+        case state is
+          when S0 => state <= S1;
+          when S1 =>
+            if stra = '1' and bita = '0' then
+              dadoa <= a; bita <= '1'; acka <= '1';
+            else acka <= '0'; end if;
+            if bita = '1' then state <= S2; end if;
+          when S2 =>
+            dadoz <= dadoa; bitz <= '1'; state <= S3;
+          when S3 =>
+            if sent0 = '0' then strz0 <= '1'; end if;
+            if sent1 = '0' then strz1 <= '1'; end if;
+            if ackz0 = '1' then strz0 <= '0'; sent0 <= '1'; end if;
+            if ackz1 = '1' then strz1 <= '0'; sent1 <= '1'; end if;
+            if (sent0 = '1' or ackz0 = '1') and (sent1 = '1' or ackz1 = '1') then
+              bitz <= '0'; bita <= '0'; sent0 <= '0'; sent1 <= '0';
+              strz0 <= '0'; strz1 <= '0';
+              state <= S1;
+            end if;
+        end case;
+      end if;
+    end if;
+  end process;
+  z0 <= dadoz; z1 <= dadoz;
+end architecture;
+",
+        "dfop_alu1" => "\
+entity dfop_alu1 is
+  port (
+    clk, rst : in std_logic;
+    a : in std_logic_vector(15 downto 0); stra : in std_logic; acka : out std_logic;
+    z : out std_logic_vector(15 downto 0); strz : out std_logic; ackz : in std_logic);
+end entity;
+architecture rtl of dfop_alu1 is
+  type state_t is (S0, S1, S2, S3);
+  signal state : state_t;
+  signal dadoa, dadoz : std_logic_vector(15 downto 0);
+  signal bita, bitz : std_logic;
+begin
+  process (clk) begin
+    if rising_edge(clk) then
+      if rst = '1' then
+        state <= S0; bita <= '0'; bitz <= '0'; acka <= '0'; strz <= '0';
+      else
+        case state is
+          when S0 => state <= S1;
+          when S1 =>
+            if stra = '1' and bita = '0' then
+              dadoa <= a; bita <= '1'; acka <= '1';
+            else acka <= '0'; end if;
+            if bita = '1' then state <= S2; end if;
+          when S2 => dadoz <= not dadoa; bitz <= '1'; state <= S3;
+          when S3 =>
+            strz <= '1';
+            if ackz = '1' then
+              strz <= '0'; bitz <= '0'; bita <= '0'; state <= S1;
+            end if;
+        end case;
+      end if;
+    end if;
+  end process;
+  z <= dadoz;
+end architecture;
+",
+        "dfop_ndmerge" => "\
+entity dfop_ndmerge is
+  port (
+    clk, rst : in std_logic;
+    a : in std_logic_vector(15 downto 0); stra : in std_logic; acka : out std_logic;
+    b : in std_logic_vector(15 downto 0); strb : in std_logic; ackb : out std_logic;
+    z : out std_logic_vector(15 downto 0); strz : out std_logic; ackz : in std_logic);
+end entity;
+architecture rtl of dfop_ndmerge is
+  type state_t is (S0, S1, S2, S3);
+  signal state : state_t;
+  signal dadoa, dadob, dadoz : std_logic_vector(15 downto 0);
+  signal bita, bitb, bitz : std_logic;
+  signal take_a : std_logic;
+begin
+  process (clk) begin
+    if rising_edge(clk) then
+      if rst = '1' then
+        state <= S0; bita <= '0'; bitb <= '0'; bitz <= '0';
+        acka <= '0'; ackb <= '0'; strz <= '0';
+      else
+        case state is
+          when S0 => state <= S1;
+          when S1 =>
+            if stra = '1' and bita = '0' then
+              dadoa <= a; bita <= '1'; acka <= '1';
+            else acka <= '0'; end if;
+            if strb = '1' and bitb = '0' then
+              dadob <= b; bitb <= '1'; ackb <= '1';
+            else ackb <= '0'; end if;
+            -- fixed-priority arbiter: port a wins ties
+            if bita = '1' then take_a <= '1'; state <= S2;
+            elsif bitb = '1' then take_a <= '0'; state <= S2;
+            end if;
+          when S2 =>
+            if take_a = '1' then dadoz <= dadoa; bita <= '0';
+            else dadoz <= dadob; bitb <= '0'; end if;
+            bitz <= '1'; state <= S3;
+          when S3 =>
+            strz <= '1';
+            if ackz = '1' then
+              strz <= '0'; bitz <= '0'; state <= S1;
+            end if;
+        end case;
+      end if;
+    end if;
+  end process;
+  z <= dadoz;
+end architecture;
+",
+        "dfop_dmerge" => "\
+entity dfop_dmerge is
+  port (
+    clk, rst : in std_logic;
+    c : in std_logic_vector(15 downto 0); strc : in std_logic; ackc : out std_logic;
+    a : in std_logic_vector(15 downto 0); stra : in std_logic; acka : out std_logic;
+    b : in std_logic_vector(15 downto 0); strb : in std_logic; ackb : out std_logic;
+    z : out std_logic_vector(15 downto 0); strz : out std_logic; ackz : in std_logic);
+end entity;
+architecture rtl of dfop_dmerge is
+  type state_t is (S0, S1, S2, S3);
+  signal state : state_t;
+  signal dadoc, dadoa, dadob, dadoz : std_logic_vector(15 downto 0);
+  signal bitc, bita, bitb, bitz : std_logic;
+begin
+  process (clk) begin
+    if rising_edge(clk) then
+      if rst = '1' then
+        state <= S0; bitc <= '0'; bita <= '0'; bitb <= '0'; bitz <= '0';
+        ackc <= '0'; acka <= '0'; ackb <= '0'; strz <= '0';
+      else
+        case state is
+          when S0 => state <= S1;
+          when S1 =>
+            if strc = '1' and bitc = '0' then
+              dadoc <= c; bitc <= '1'; ackc <= '1';
+            else ackc <= '0'; end if;
+            if stra = '1' and bita = '0' then
+              dadoa <= a; bita <= '1'; acka <= '1';
+            else acka <= '0'; end if;
+            if strb = '1' and bitb = '0' then
+              dadob <= b; bitb <= '1'; ackb <= '1';
+            else ackb <= '0'; end if;
+            -- TRUE selects a, FALSE selects b; the other register parks.
+            if bitc = '1' and dadoc /= x\"0000\" and bita = '1' then state <= S2; end if;
+            if bitc = '1' and dadoc = x\"0000\" and bitb = '1' then state <= S2; end if;
+          when S2 =>
+            if dadoc /= x\"0000\" then dadoz <= dadoa; bita <= '0';
+            else dadoz <= dadob; bitb <= '0'; end if;
+            bitc <= '0'; bitz <= '1'; state <= S3;
+          when S3 =>
+            strz <= '1';
+            if ackz = '1' then
+              strz <= '0'; bitz <= '0'; state <= S1;
+            end if;
+        end case;
+      end if;
+    end if;
+  end process;
+  z <= dadoz;
+end architecture;
+",
+        "dfop_branch" => "\
+entity dfop_branch is
+  port (
+    clk, rst : in std_logic;
+    c : in std_logic_vector(15 downto 0); strc : in std_logic; ackc : out std_logic;
+    a : in std_logic_vector(15 downto 0); stra : in std_logic; acka : out std_logic;
+    t : out std_logic_vector(15 downto 0); strt : out std_logic; ackt : in std_logic;
+    f : out std_logic_vector(15 downto 0); strf : out std_logic; ackf : in std_logic);
+end entity;
+architecture rtl of dfop_branch is
+  type state_t is (S0, S1, S2, S3);
+  signal state : state_t;
+  signal dadoc, dadoa, dadoz : std_logic_vector(15 downto 0);
+  signal bitc, bita, bitz : std_logic;
+  signal to_t : std_logic;
+begin
+  process (clk) begin
+    if rising_edge(clk) then
+      if rst = '1' then
+        state <= S0; bitc <= '0'; bita <= '0'; bitz <= '0';
+        ackc <= '0'; acka <= '0'; strt <= '0'; strf <= '0';
+      else
+        case state is
+          when S0 => state <= S1;
+          when S1 =>
+            if strc = '1' and bitc = '0' then
+              dadoc <= c; bitc <= '1'; ackc <= '1';
+            else ackc <= '0'; end if;
+            if stra = '1' and bita = '0' then
+              dadoa <= a; bita <= '1'; acka <= '1';
+            else acka <= '0'; end if;
+            if bitc = '1' and bita = '1' then state <= S2; end if;
+          when S2 =>
+            dadoz <= dadoa;
+            if dadoc /= x\"0000\" then to_t <= '1'; else to_t <= '0'; end if;
+            bitz <= '1'; state <= S3;
+          when S3 =>
+            if to_t = '1' then
+              strt <= '1';
+              if ackt = '1' then
+                strt <= '0'; bitz <= '0'; bitc <= '0'; bita <= '0'; state <= S1;
+              end if;
+            else
+              strf <= '1';
+              if ackf = '1' then
+                strf <= '0'; bitz <= '0'; bitc <= '0'; bita <= '0'; state <= S1;
+              end if;
+            end if;
+        end case;
+      end if;
+    end if;
+  end process;
+  t <= dadoz; f <= dadoz;
+end architecture;
+",
+        "dfop_const" => "\
+entity dfop_const is
+  generic (VALUE : integer := 0);
+  port (
+    clk, rst : in std_logic;
+    z : out std_logic_vector(15 downto 0); strz : out std_logic; ackz : in std_logic);
+end entity;
+architecture rtl of dfop_const is
+  signal spent : std_logic;
+begin
+  process (clk) begin
+    if rising_edge(clk) then
+      if rst = '1' then
+        spent <= '0'; strz <= '0';
+      else
+        if spent = '0' then
+          strz <= '1';
+          if ackz = '1' then strz <= '0'; spent <= '1'; end if;
+        end if;
+      end if;
+    end if;
+  end process;
+  z <= std_logic_vector(to_signed(VALUE, 16));
+end architecture;
+",
+        "dfop_fifo" => "\
+entity dfop_fifo is
+  generic (DEPTH : integer := 16);
+  port (
+    clk, rst : in std_logic;
+    a : in std_logic_vector(15 downto 0); stra : in std_logic; acka : out std_logic;
+    z : out std_logic_vector(15 downto 0); strz : out std_logic; ackz : in std_logic);
+end entity;
+architecture rtl of dfop_fifo is
+  type mem_t is array (0 to DEPTH - 1) of std_logic_vector(15 downto 0);
+  signal mem : mem_t;
+  signal rd, wr : integer range 0 to DEPTH - 1;
+  signal count : integer range 0 to DEPTH;
+begin
+  process (clk) begin
+    if rising_edge(clk) then
+      if rst = '1' then
+        rd <= 0; wr <= 0; count <= 0; acka <= '0'; strz <= '0';
+      else
+        acka <= '0';
+        if stra = '1' and count < DEPTH then
+          mem(wr) <= a; wr <= (wr + 1) mod DEPTH;
+          count <= count + 1; acka <= '1';
+        end if;
+        if count > 0 then
+          strz <= '1';
+          if ackz = '1' then
+            rd <= (rd + 1) mod DEPTH; count <= count - 1; strz <= '0';
+          end if;
+        else
+          strz <= '0';
+        end if;
+      end if;
+    end if;
+  end process;
+  z <= mem(rd);
+end architecture;
+",
+        other => panic!("no fixed template for {other}"),
+    };
+    format!("{HEADER}use work.dfop_pkg.all;\n\n{body}")
+}
+
+fn entity_text(c: OpClass) -> String {
+    match c {
+        OpClass::Alu2 => entity_alu2("dfop_alu2", false),
+        OpClass::Decider => entity_alu2("dfop_decider", true),
+        other => entity_fixed(class_entity_name(other)),
+    }
+}
+
+/// Port names of each entity, in node-port order (ins then outs).
+fn port_names(c: OpClass) -> (&'static [&'static str], &'static [&'static str]) {
+    match c {
+        OpClass::Copy => (&["a"], &["z0", "z1"]),
+        OpClass::NdMerge => (&["a", "b"], &["z"]),
+        OpClass::DMerge => (&["c", "a", "b"], &["z"]),
+        OpClass::Branch => (&["c", "a"], &["t", "f"]),
+        OpClass::Alu2 | OpClass::Decider => (&["a", "b"], &["z"]),
+        OpClass::Alu1 => (&["a"], &["z"]),
+        OpClass::Const => (&[], &["z"]),
+        OpClass::Fifo => (&["a"], &["z"]),
+    }
+}
+
+/// Strobe/ack suffixes mirror the data port names.
+fn hs(port: &str) -> (String, String) {
+    (format!("str{port}"), format!("ack{port}"))
+}
+
+/// Generate the complete design for a graph.
+pub fn generate(g: &Graph) -> VhdlDesign {
+    // Entities: package + one entity per used class, in stable order.
+    let used: BTreeSet<&'static str> = g
+        .nodes
+        .iter()
+        .map(|n| class_entity_name(n.op.class()))
+        .collect();
+    let mut entities = vec![("dfop_pkg".to_string(), package())];
+    for n in &g.nodes {
+        let c = n.op.class();
+        let name = class_entity_name(c);
+        if used.contains(name) && !entities.iter().any(|(en, _)| en == name) {
+            entities.push((name.to_string(), entity_text(c)));
+        }
+    }
+
+    // Top level.
+    let mut top = String::from(HEADER);
+    let _ = writeln!(top, "use work.dfop_pkg.all;\n");
+    let _ = writeln!(top, "entity {} is", g.name);
+    let _ = writeln!(top, "  port (");
+    let _ = writeln!(top, "    clk, rst : in std_logic;");
+    let mut port_lines = Vec::new();
+    for a in &g.arcs {
+        if a.is_input_port() {
+            port_lines.push(format!(
+                "    {0}_data : in  std_logic_vector(15 downto 0);\n    \
+                 {0}_str : in std_logic;\n    {0}_ack : out std_logic",
+                a.name
+            ));
+        } else if a.is_output_port() {
+            port_lines.push(format!(
+                "    {0}_data : out std_logic_vector(15 downto 0);\n    \
+                 {0}_str : out std_logic;\n    {0}_ack : in std_logic",
+                a.name
+            ));
+        }
+    }
+    top.push_str(&port_lines.join(";\n"));
+    let _ = writeln!(top, ");");
+    let _ = writeln!(top, "end entity;\n");
+    let _ = writeln!(top, "architecture structural of {} is", g.name);
+    for a in &g.arcs {
+        if a.src.is_some() && a.dst.is_some() {
+            let _ = writeln!(
+                top,
+                "  signal {0}_data : std_logic_vector(15 downto 0);\n  \
+                 signal {0}_str : std_logic;\n  signal {0}_ack : std_logic;",
+                a.name
+            );
+        }
+    }
+    let _ = writeln!(top, "begin");
+    for n in &g.nodes {
+        let c = n.op.class();
+        let ent = class_entity_name(c);
+        let (in_ports, out_ports) = port_names(c);
+        let mut maps = vec![
+            "clk => clk".to_string(),
+            "rst => rst".to_string(),
+        ];
+        match n.op {
+            Op::Const(v) => maps.insert(0, format!("VALUE => {v}")),
+            Op::Fifo(d) => maps.insert(0, format!("DEPTH => {d}")),
+            _ => {
+                if let Some(oc) = opcode_generic(n.op) {
+                    maps.insert(0, format!("OPCODE => {oc}"));
+                }
+            }
+        }
+        let generic_split = matches!(n.op, Op::Const(_) | Op::Fifo(_))
+            || opcode_generic(n.op).is_some();
+        for (p, &arc) in n.ins.iter().enumerate() {
+            let pname = in_ports[p];
+            let (s, k) = hs(pname);
+            let a = g.arc(arc);
+            maps.push(format!("{pname} => {}_data", a.name));
+            maps.push(format!("{s} => {}_str", a.name));
+            maps.push(format!("{k} => {}_ack", a.name));
+        }
+        for (p, &arc) in n.outs.iter().enumerate() {
+            let pname = out_ports[p];
+            let (s, k) = hs(pname);
+            let a = g.arc(arc);
+            maps.push(format!("{pname} => {}_data", a.name));
+            maps.push(format!("{s} => {}_str", a.name));
+            maps.push(format!("{k} => {}_ack", a.name));
+        }
+        let (generics, ports): (Vec<_>, Vec<_>) = if generic_split {
+            (vec![maps.remove(0)], maps)
+        } else {
+            (vec![], maps)
+        };
+        let _ = write!(top, "  n{} : entity work.{ent}", n.id.0);
+        if !generics.is_empty() {
+            let _ = write!(top, " generic map ({})", generics.join(", "));
+        }
+        let _ = writeln!(top, "\n    port map ({});", ports.join(", "));
+    }
+    let _ = writeln!(top, "end architecture;");
+
+    VhdlDesign { entities, top }
+}

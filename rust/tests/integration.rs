@@ -1,0 +1,262 @@
+//! Cross-module integration tests: the full C → graph → {asm, VHDL,
+//! simulation, estimation, offload} pipeline, plus property tests over
+//! randomly generated programs and graphs.
+
+use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::frontend::{self, interpret, lex, parse_program};
+use dataflow_accel::sim::{run_dynamic, run_fsm, run_token, SimConfig, TokenSim};
+use dataflow_accel::util::proptest::{check, PropCfg};
+use dataflow_accel::util::Rng;
+use dataflow_accel::{asm, estimate, vhdl};
+
+/// Every benchmark, full chain: C → graph → asm → graph → sim, compared
+/// against the interpreter and the hand-built graph on three engines.
+#[test]
+fn full_chain_every_benchmark() {
+    for b in BenchId::ALL {
+        let src = bench_defs::c_source(b);
+        let g = frontend::compile(b.slug(), src).unwrap();
+
+        // asm round trip preserves structure and semantics
+        let text = asm::print(&g);
+        let g2 = asm::parse(b.slug(), &text).unwrap();
+        assert_eq!(g.n_nodes(), g2.n_nodes());
+
+        // VHDL generates deterministically
+        let d1 = vhdl::generate(&g).render();
+        let d2 = vhdl::generate(&g).render();
+        assert_eq!(d1, d2);
+
+        // workload agreement: interpreter == token == fsm == dynamic
+        let wl = bench_defs::workload(b, 7, 99);
+        let prog = parse_program(&lex(src).unwrap()).unwrap();
+        let interp = interpret(&prog, &wl.inject, 10_000_000).unwrap();
+        let mut cfg = wl.sim_config();
+        cfg.max_cycles *= 8;
+        let tok = run_token(&g2, &cfg);
+        let fsm = run_fsm(&g2, &cfg);
+        let dy = run_dynamic(&g2, &cfg, 2);
+        for (port, want) in &wl.expect {
+            assert_eq!(interp.outputs.get(port), Some(want), "{} interp", b.slug());
+            assert_eq!(tok.stream(port), want.as_slice(), "{} token", b.slug());
+            assert_eq!(fsm.stream(port), want.as_slice(), "{} fsm", b.slug());
+            assert_eq!(dy.stream(port), want.as_slice(), "{} dynamic", b.slug());
+        }
+    }
+}
+
+/// Property: random straight-line expression programs — interpreter and
+/// dataflow lowering agree bit-for-bit.
+#[test]
+fn prop_random_expression_programs() {
+    fn gen_expr(r: &mut Rng, depth: usize, vars: &[&str]) -> String {
+        if depth == 0 || r.below(4) == 0 {
+            match r.below(3) {
+                0 => format!("{}", r.word(-100, 100)),
+                _ => vars[r.below(vars.len())].to_string(),
+            }
+        } else {
+            let ops = ["+", "-", "*", "/", "&", "|", "^", "<<", ">>", "<", ">", "=="];
+            let op = ops[r.below(ops.len())];
+            format!(
+                "({} {} {})",
+                gen_expr(r, depth - 1, vars),
+                op,
+                gen_expr(r, depth - 1, vars)
+            )
+        }
+    }
+
+    check(
+        "random expression programs: interp == dataflow",
+        PropCfg {
+            cases: 40,
+            base_seed: 0xC0FFEE,
+        },
+        |r| {
+            let e1 = gen_expr(r, 3, &["a", "b"]);
+            let e2 = gen_expr(r, 2, &["a", "b", "t"]);
+            let src = format!(
+                "in int a;\nin int b;\nout int r;\nint t = {e1};\nr = {e2};\n"
+            );
+            let a = r.word(-500, 500);
+            let b = r.word(-500, 500);
+            (src, a, b)
+        },
+        |(src, a, b)| {
+            let g = frontend::compile("prop", src).map_err(|e| e.to_string())?;
+            let prog = parse_program(&lex(src).unwrap()).unwrap();
+            let mut inject = std::collections::BTreeMap::new();
+            inject.insert("a".to_string(), vec![*a]);
+            inject.insert("b".to_string(), vec![*b]);
+            let want = interpret(&prog, &inject, 100_000)
+                .map_err(|e| e.to_string())?
+                .outputs["r"]
+                .clone();
+            let cfg = SimConfig::new().inject("a", vec![*a]).inject("b", vec![*b]);
+            let got = run_token(&g, &cfg);
+            if got.stream("r") != want.as_slice() {
+                return Err(format!("dataflow {:?} != interp {:?}", got.stream("r"), want));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: random counted-loop programs with an accumulator and an
+/// if/else in the body.
+#[test]
+fn prop_random_loop_programs() {
+    check(
+        "random loop programs: interp == dataflow",
+        PropCfg {
+            cases: 20,
+            base_seed: 0xBEEF,
+        },
+        |r| {
+            let add = r.word(1, 20);
+            let mul = r.word(2, 5);
+            let thr = r.word(-50, 50);
+            let n = r.word(0, 12);
+            let src = format!(
+                "in int n;\nout int r;\nint acc = 0;\nint i = 0;\n\
+                 while (i < n) {{\n\
+                   if (acc > {thr}) {{ acc = acc - {add}; }} else {{ acc = acc * {mul} + {add}; }}\n\
+                   i = i + 1;\n\
+                 }}\nr = acc;\n"
+            );
+            (src, n)
+        },
+        |(src, n)| {
+            let g = frontend::compile("prop_loop", src).map_err(|e| e.to_string())?;
+            let prog = parse_program(&lex(src).unwrap()).unwrap();
+            let mut inject = std::collections::BTreeMap::new();
+            inject.insert("n".to_string(), vec![*n]);
+            let want = interpret(&prog, &inject, 1_000_000)
+                .map_err(|e| e.to_string())?
+                .outputs["r"]
+                .clone();
+            let cfg = SimConfig::new()
+                .inject("n", vec![*n])
+                .max_cycles(2_000_000);
+            let got = run_token(&g, &cfg);
+            if got.stream("r") != want.as_slice() {
+                return Err(format!(
+                    "n={n}: dataflow {:?} != interp {:?}",
+                    got.stream("r"),
+                    want
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: token conservation in the fast engine — the number of
+/// tokens in flight never exceeds arcs, and outputs are produced only
+/// while tokens exist.
+#[test]
+fn prop_token_occupancy_bounded() {
+    check(
+        "token occupancy ≤ arcs",
+        PropCfg {
+            cases: 12,
+            base_seed: 0xA11CE,
+        },
+        |r| {
+            let b = BenchId::ALL[r.below(6)];
+            (b, 2 + r.below(8), r.next_u64())
+        },
+        |&(b, n, seed)| {
+            let g = bench_defs::build(b);
+            let wl = bench_defs::workload(b, n, seed);
+            let cfg = wl.sim_config();
+            let mut sim = TokenSim::new(&g, &cfg);
+            for _ in 0..20_000 {
+                sim.step();
+                if sim.occupancy() > g.n_arcs() {
+                    return Err(format!(
+                        "{}: occupancy {} > arcs {}",
+                        b.slug(),
+                        sim.occupancy(),
+                        g.n_arcs()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: the dynamic engine with any bound reproduces static results
+/// on every benchmark (the paper's future-work extension is semantics-
+/// preserving).
+#[test]
+fn prop_dynamic_bound_semantics_preserving() {
+    check(
+        "dynamic(k) == static for all k",
+        PropCfg {
+            cases: 12,
+            base_seed: 0xD1CE,
+        },
+        |r| {
+            let b = BenchId::ALL[r.below(6)];
+            (b, 2 + r.below(6), r.next_u64(), 1 + r.below(8))
+        },
+        |&(b, n, seed, bound)| {
+            let g = bench_defs::build(b);
+            let wl = bench_defs::workload(b, n, seed);
+            let cfg = wl.sim_config();
+            let stat = run_token(&g, &cfg);
+            let dy = run_dynamic(&g, &cfg, bound);
+            if stat.outputs != dy.outputs {
+                return Err(format!("{} bound {bound} diverged", b.slug()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Resource model sanity across every benchmark + the paper's headline
+/// cross-system orderings (Fig. 8 narrative).
+#[test]
+fn estimates_reproduce_fig8_narrative() {
+    use dataflow_accel::baselines::{ctv, kernel_spec, lalp};
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let ours = estimate::estimate(&g);
+        let spec = kernel_spec(b);
+        let c = ctv::estimate(&spec);
+        // (1) max frequency: ours beats both baselines on every benchmark
+        assert!(ours.fmax_mhz > c.fmax_mhz, "{}", b.slug());
+        if let Some(l) = lalp::estimate(&spec) {
+            assert!(ours.fmax_mhz > l.fmax_mhz, "{}", b.slug());
+            // (2) LALP smallest
+            assert!(l.ff < c.ff && l.lut < c.lut, "{}", b.slug());
+        }
+        // (3) ours ≈ 613 MHz, flat across benchmarks (paper's signature)
+        assert!((560.0..660.0).contains(&ours.fmax_mhz), "{}", b.slug());
+    }
+}
+
+/// Offloaded batch execution equals per-instance execution for every
+/// benchmark (native ALU; the XLA path has its own tests in-module).
+#[test]
+fn batch_engine_matches_singletons() {
+    use dataflow_accel::coordinator::run_batch_native;
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let cfgs: Vec<_> = (0..4)
+            .map(|s| bench_defs::workload(b, 3 + s, s as u64).sim_config())
+            .collect();
+        let batch = run_batch_native(&g, &cfgs);
+        for (i, cfg) in cfgs.iter().enumerate() {
+            assert_eq!(
+                batch[i].outputs,
+                run_token(&g, cfg).outputs,
+                "{} #{i}",
+                b.slug()
+            );
+        }
+    }
+}
