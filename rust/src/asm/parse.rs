@@ -2,33 +2,94 @@
 
 use crate::dfg::{Arc, ArcId, Graph, Node, NodeId, Op};
 use std::collections::HashMap;
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum AsmError {
-    #[error("line {line}: unknown operator `{op}`")]
-    UnknownOp { line: usize, op: String },
-    #[error("line {line}: `{op}` takes {expected} arguments, found {found}")]
+    UnknownOp {
+        line: usize,
+        op: String,
+    },
     BadArity {
         line: usize,
         op: String,
         expected: usize,
         found: usize,
     },
-    #[error("line {line}: arc `{label}` already has a driver")]
-    DoubleDriver { line: usize, label: String },
-    #[error("line {line}: arc `{label}` already has a consumer")]
-    DoubleConsumer { line: usize, label: String },
-    #[error("line {line}: `{op}` requires an immediate first argument (e.g. `#42`)")]
-    MissingImmediate { line: usize, op: String },
-    #[error("line {line}: bad immediate `{imm}`")]
-    BadImmediate { line: usize, imm: String },
-    #[error("line {line}: statement missing terminating `;`")]
-    MissingSemicolon { line: usize },
-    #[error("line {line}: empty statement")]
-    Empty { line: usize },
-    #[error("graph validation failed: {0}")]
-    Invalid(#[from] crate::dfg::ValidateError),
+    DoubleDriver {
+        line: usize,
+        label: String,
+    },
+    DoubleConsumer {
+        line: usize,
+        label: String,
+    },
+    MissingImmediate {
+        line: usize,
+        op: String,
+    },
+    BadImmediate {
+        line: usize,
+        imm: String,
+    },
+    MissingSemicolon {
+        line: usize,
+    },
+    Empty {
+        line: usize,
+    },
+    Invalid(crate::dfg::ValidateError),
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AsmError::UnknownOp { line, op } => {
+                write!(f, "line {line}: unknown operator `{op}`")
+            }
+            AsmError::BadArity {
+                line,
+                op,
+                expected,
+                found,
+            } => write!(
+                f,
+                "line {line}: `{op}` takes {expected} arguments, found {found}"
+            ),
+            AsmError::DoubleDriver { line, label } => {
+                write!(f, "line {line}: arc `{label}` already has a driver")
+            }
+            AsmError::DoubleConsumer { line, label } => {
+                write!(f, "line {line}: arc `{label}` already has a consumer")
+            }
+            AsmError::MissingImmediate { line, op } => write!(
+                f,
+                "line {line}: `{op}` requires an immediate first argument (e.g. `#42`)"
+            ),
+            AsmError::BadImmediate { line, imm } => {
+                write!(f, "line {line}: bad immediate `{imm}`")
+            }
+            AsmError::MissingSemicolon { line } => {
+                write!(f, "line {line}: statement missing terminating `;`")
+            }
+            AsmError::Empty { line } => write!(f, "line {line}: empty statement"),
+            AsmError::Invalid(e) => write!(f, "graph validation failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AsmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AsmError::Invalid(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::dfg::ValidateError> for AsmError {
+    fn from(e: crate::dfg::ValidateError) -> Self {
+        AsmError::Invalid(e)
+    }
 }
 
 /// Strip `# ...` and `// ...` comments.

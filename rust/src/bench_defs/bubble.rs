@@ -57,8 +57,10 @@ pub fn reference(xs: &[Word]) -> Vec<Word> {
     v
 }
 
-/// FIFO capacity: bounds the largest sortable vector.
-pub const FIFO_DEPTH: u16 = 1024;
+/// FIFO capacity: bounds the largest sortable vector. Pinned to the
+/// fabric slot provisioning so the physical model's BRAM estimate
+/// covers this graph exactly.
+pub const FIFO_DEPTH: u16 = crate::dfg::MAX_FIFO_DEPTH;
 
 /// Ports: `n`, stream `x` in; stream `sorted` (descending) and `pf` out.
 pub fn build() -> Graph {

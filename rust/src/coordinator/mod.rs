@@ -12,7 +12,10 @@
 //! * [`batch`] — the lockstep batch engine (native and XLA ALU paths).
 //! * [`router`] — request router / dynamic batcher / worker pool with
 //!   metrics, in the vLLM-router mould (std::thread + mpsc; the vendored
-//!   environment has no tokio).
+//!   environment has no tokio). Batches are routed round-robin over a
+//!   [`crate::fabric::FabricPool`] of physical fabric instances; graphs
+//!   that exceed one instance are partitioned and served by the sharded
+//!   executor ([`crate::fabric::shard`]).
 
 pub mod batch;
 pub mod router;

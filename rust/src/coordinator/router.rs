@@ -13,6 +13,7 @@
 
 use super::batch::{run_batch, BatchEngine};
 use crate::bench_defs::{self, BenchId};
+use crate::fabric::{self, FabricPool, FabricTopology};
 use crate::runtime::FabricRuntime;
 use crate::sim::SimOutcome;
 use std::collections::BTreeMap;
@@ -56,17 +57,28 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub fabric_cycles: AtomicU64,
     pub total_latency_us: AtomicU64,
+    /// Batches whose graph placed whole on one fabric instance.
+    pub placed: AtomicU64,
+    /// Batches whose graph exceeded one instance and ran sharded.
+    pub sharded: AtomicU64,
+    /// Batches whose graph fit no partition of the pool's topology and
+    /// fell back to the infinite-fabric simulation.
+    pub fallback: AtomicU64,
 }
 
 impl Metrics {
     pub fn summary(&self) -> String {
         let completed = self.completed.load(Ordering::Relaxed).max(1);
         format!(
-            "requests {}/{} verified {} | batches {} | fabric cycles {} | mean latency {:.1} ms",
+            "requests {}/{} verified {} | batches {} (placed {}, sharded {}, fallback {}) | \
+             fabric cycles {} | mean latency {:.1} ms",
             self.completed.load(Ordering::Relaxed),
             self.submitted.load(Ordering::Relaxed),
             self.verified.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
+            self.placed.load(Ordering::Relaxed),
+            self.sharded.load(Ordering::Relaxed),
+            self.fallback.load(Ordering::Relaxed),
             self.fabric_cycles.load(Ordering::Relaxed),
             self.total_latency_us.load(Ordering::Relaxed) as f64 / completed as f64 / 1000.0,
         )
@@ -89,18 +101,36 @@ pub struct Coordinator {
     tx: mpsc::Sender<Msg>,
     dispatcher: Option<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    /// The spatially sharded fabric rack batches are routed onto.
+    pub pool: Arc<FabricPool>,
 }
 
 impl Coordinator {
-    /// Start a coordinator with `workers` worker threads. `artifact_dir`
-    /// is only needed for [`Engine::Xla`].
+    /// Start a coordinator with `workers` worker threads and a fabric
+    /// pool of one paper-scale instance per worker. `artifact_dir` is
+    /// only needed for [`Engine::Xla`].
     pub fn start(
         workers: usize,
         engine: Engine,
         artifact_dir: Option<&str>,
         max_batch: usize,
     ) -> anyhow::Result<Self> {
+        let topo = FabricTopology::paper();
+        Self::start_with_fabric(workers, engine, artifact_dir, max_batch, topo)
+    }
+
+    /// Start with an explicit fabric topology (the pool holds one
+    /// instance per worker). Graphs that do not place on one instance
+    /// are partitioned and served by the sharded executor.
+    pub fn start_with_fabric(
+        workers: usize,
+        engine: Engine,
+        artifact_dir: Option<&str>,
+        max_batch: usize,
+        topo: FabricTopology,
+    ) -> anyhow::Result<Self> {
         let metrics = Arc::new(Metrics::default());
+        let pool = Arc::new(FabricPool::new(topo, workers.max(1)));
         // PJRT handles are not Send: each XLA worker creates its own
         // client + executables inside its thread. Validate the artifact
         // directory up front so a bad path fails fast on the caller.
@@ -113,24 +143,29 @@ impl Coordinator {
         let (batch_tx, batch_rx) = mpsc::channel::<Vec<Job>>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
 
-        // Workers: execute whole batches.
+        // Workers: execute whole batches. The fabric route per benchmark
+        // (placed / partitioned / fallback) depends only on the graph and
+        // the pool topology, both fixed for the coordinator's lifetime,
+        // so each worker memoizes it instead of re-partitioning per batch.
         let mut handles = Vec::new();
         for _ in 0..workers.max(1) {
             let batch_rx = Arc::clone(&batch_rx);
             let metrics = Arc::clone(&metrics);
+            let pool = Arc::clone(&pool);
             let dir = dir.clone();
             handles.push(std::thread::spawn(move || {
                 let runtime = match engine {
                     Engine::Xla => FabricRuntime::load(&dir).ok(),
                     Engine::Native => None,
                 };
+                let mut routes: BTreeMap<BenchId, FabricRoute> = BTreeMap::new();
                 loop {
                     let jobs = {
                         let rx = batch_rx.lock().unwrap();
                         rx.recv()
                     };
                     let Ok(jobs) = jobs else { break };
-                    run_jobs(jobs, &metrics, runtime.as_ref());
+                    run_jobs(jobs, &metrics, runtime.as_ref(), &pool, &mut routes);
                 }
             }));
         }
@@ -190,6 +225,7 @@ impl Coordinator {
             tx,
             dispatcher: Some(dispatcher),
             metrics,
+            pool,
         })
     }
 
@@ -223,7 +259,25 @@ impl Drop for Coordinator {
     }
 }
 
-fn run_jobs(jobs: Vec<Job>, metrics: &Metrics, runtime: Option<&FabricRuntime>) {
+/// How a benchmark graph maps onto the pool's fabric topology. Computed
+/// once per (worker, benchmark) and reused for every subsequent batch.
+enum FabricRoute {
+    /// Fits one instance whole: run on the (batched) engines.
+    Placed,
+    /// Exceeds one instance: serve through the sharded executor.
+    Sharded(fabric::PartitionPlan),
+    /// Fits no partition of this topology: serve on the infinite-fabric
+    /// simulation rather than failing the batch.
+    Fallback,
+}
+
+fn run_jobs(
+    jobs: Vec<Job>,
+    metrics: &Metrics,
+    runtime: Option<&FabricRuntime>,
+    pool: &FabricPool,
+    routes: &mut BTreeMap<BenchId, FabricRoute>,
+) {
     if jobs.is_empty() {
         return;
     }
@@ -236,10 +290,50 @@ fn run_jobs(jobs: Vec<Job>, metrics: &Metrics, runtime: Option<&FabricRuntime>) 
         .collect();
     let cfgs: Vec<_> = workloads.iter().map(|w| w.sim_config()).collect();
 
-    let outcomes = match runtime {
-        Some(rt) => run_batch(&g, &cfgs, &BatchEngine::Xla(rt))
-            .unwrap_or_else(|_| super::batch::run_batch_native(&g, &cfgs)),
-        None => super::batch::run_batch_native(&g, &cfgs),
+    // Spatial sharding: a graph that places whole occupies one fabric
+    // instance; one that exceeds a single instance is partitioned and
+    // occupies one instance per shard, cut arcs riding the inter-fabric
+    // channels.
+    let route = routes.entry(bench).or_insert_with(|| {
+        if pool.topology().fits(&g) {
+            FabricRoute::Placed
+        } else {
+            match fabric::partition(&g, pool.topology()) {
+                Ok(plan) => FabricRoute::Sharded(plan),
+                Err(e) => {
+                    eprintln!(
+                        "fabric: `{}` is unpartitionable on `{}` ({e}); \
+                         falling back to infinite-fabric simulation",
+                        g.name,
+                        pool.topology().name
+                    );
+                    FabricRoute::Fallback
+                }
+            }
+        }
+    });
+    let outcomes = match route {
+        FabricRoute::Placed => {
+            metrics.placed.fetch_add(1, Ordering::Relaxed);
+            pool.route();
+            match runtime {
+                Some(rt) => run_batch(&g, &cfgs, &BatchEngine::Xla(rt))
+                    .unwrap_or_else(|_| super::batch::run_batch_native(&g, &cfgs)),
+                None => super::batch::run_batch_native(&g, &cfgs),
+            }
+        }
+        FabricRoute::Sharded(plan) => {
+            metrics.sharded.fetch_add(1, Ordering::Relaxed);
+            // A sharded batch occupies one instance per shard.
+            for _ in 0..plan.n_shards() {
+                pool.route();
+            }
+            cfgs.iter().map(|c| fabric::run_sharded(plan, c)).collect()
+        }
+        FabricRoute::Fallback => {
+            metrics.fallback.fetch_add(1, Ordering::Relaxed);
+            super::batch::run_batch_native(&g, &cfgs)
+        }
     };
 
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -321,5 +415,53 @@ mod tests {
         m.submitted.store(4, Ordering::Relaxed);
         m.completed.store(4, Ordering::Relaxed);
         assert!(m.summary().contains("requests 4/4"));
+    }
+
+    #[test]
+    fn tiny_fabric_serves_via_sharded_executor() {
+        // A half-size fabric fits none of the benchmarks whole, so every
+        // batch must take the partition + sharded-execution path — and
+        // still verify against the software references.
+        let g = crate::bench_defs::build(BenchId::DotProd);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let c = Coordinator::start_with_fabric(2, Engine::Native, None, 4, topo).unwrap();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                c.submit(Request {
+                    bench: BenchId::DotProd,
+                    n: 4 + i % 3,
+                    seed: i as u64,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert!(resp.verified, "{:?} failed on sharded path", resp.request);
+        }
+        assert!(c.metrics.sharded.load(Ordering::Relaxed) >= 1);
+        assert_eq!(c.metrics.placed.load(Ordering::Relaxed), 0);
+        assert!(c.pool.summary().contains("2 instance(s)"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn default_pool_places_all_benchmarks() {
+        let c = Coordinator::start(2, Engine::Native, None, 8).unwrap();
+        let rxs: Vec<_> = BenchId::ALL
+            .iter()
+            .map(|b| {
+                c.submit(Request {
+                    bench: *b,
+                    n: 4,
+                    seed: 9,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(60)).unwrap().verified);
+        }
+        assert_eq!(c.metrics.sharded.load(Ordering::Relaxed), 0);
+        assert!(c.metrics.placed.load(Ordering::Relaxed) >= 1);
+        c.shutdown();
     }
 }

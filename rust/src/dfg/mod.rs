@@ -18,6 +18,6 @@ mod validate;
 pub use builder::GraphBuilder;
 pub use optimize::eliminate_dead_copies;
 pub use graph::{Arc, ArcId, Graph, Node, NodeId, PortDir};
-pub use op::{Op, OpClass, Word};
+pub use op::{Op, OpClass, Word, MAX_FIFO_DEPTH};
 pub use schema::build_loop;
 pub use validate::{validate, ValidateError};

@@ -13,6 +13,11 @@
 /// buses, so all arithmetic is two's-complement 16-bit with wrap-around.
 pub type Word = i16;
 
+/// The deepest FIFO a physical fabric slot is provisioned for — and
+/// therefore the deepest FIFO any hosted graph may instantiate (the
+/// bubble-sort recirculation buffer uses exactly this depth).
+pub const MAX_FIFO_DEPTH: u16 = 1024;
+
 /// Operator opcode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Op {
@@ -64,9 +69,10 @@ pub enum Op {
 }
 
 /// Coarse operator classes — used by the resource estimator, the VHDL
-/// backend (one entity template per class) and the vectorized fabric
-/// kernel (fire-rule selection).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// backend (one entity template per class), the vectorized fabric kernel
+/// (fire-rule selection), and the physical fabric topology (per-class
+/// operator slot pools in [`crate::fabric`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum OpClass {
     Copy,
     NdMerge,
@@ -77,6 +83,52 @@ pub enum OpClass {
     Decider,
     Const,
     Fifo,
+}
+
+impl OpClass {
+    /// Every class, in declaration order (fabric slot-table order).
+    pub const ALL: [OpClass; 9] = [
+        OpClass::Copy,
+        OpClass::NdMerge,
+        OpClass::DMerge,
+        OpClass::Branch,
+        OpClass::Alu2,
+        OpClass::Alu1,
+        OpClass::Decider,
+        OpClass::Const,
+        OpClass::Fifo,
+    ];
+
+    /// Display name (fabric utilization tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Copy => "copy",
+            OpClass::NdMerge => "ndmerge",
+            OpClass::DMerge => "dmerge",
+            OpClass::Branch => "branch",
+            OpClass::Alu2 => "alu2",
+            OpClass::Alu1 => "alu1",
+            OpClass::Decider => "decider",
+            OpClass::Const => "const",
+            OpClass::Fifo => "fifo",
+        }
+    }
+
+    /// The widest (most resource-hungry) member opcode — what a physical
+    /// fabric slot of this class must be provisioned for.
+    pub fn widest_member(self) -> Op {
+        match self {
+            OpClass::Copy => Op::Copy,
+            OpClass::NdMerge => Op::NdMerge,
+            OpClass::DMerge => Op::DMerge,
+            OpClass::Branch => Op::Branch,
+            OpClass::Alu2 => Op::Mul,
+            OpClass::Alu1 => Op::Not,
+            OpClass::Decider => Op::IfGt,
+            OpClass::Const => Op::Const(0),
+            OpClass::Fifo => Op::Fifo(MAX_FIFO_DEPTH),
+        }
+    }
 }
 
 impl Op {

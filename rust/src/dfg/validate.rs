@@ -4,23 +4,39 @@
 //! one sender and one receiver) and operator arities (§3.2.1).
 
 use super::graph::{Graph, NodeId};
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ValidateError {
-    #[error("node {0:?} ({1}): expected {2} inputs, found {3}")]
     BadInArity(NodeId, String, usize, usize),
-    #[error("node {0:?} ({1}): expected {2} outputs, found {3}")]
     BadOutArity(NodeId, String, usize, usize),
-    #[error("anonymous wire `{0}` has no driver and no consumer")]
     Dangling(String),
-    #[error("arc `{0}` driver/consumer bookkeeping is inconsistent")]
     Inconsistent(String),
-    #[error("duplicate arc label `{0}`")]
     DuplicateLabel(String),
-    #[error("graph has no nodes")]
     Empty,
 }
+
+impl std::fmt::Display for ValidateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValidateError::BadInArity(id, op, want, found) => {
+                write!(f, "node {id:?} ({op}): expected {want} inputs, found {found}")
+            }
+            ValidateError::BadOutArity(id, op, want, found) => {
+                write!(f, "node {id:?} ({op}): expected {want} outputs, found {found}")
+            }
+            ValidateError::Dangling(name) => {
+                write!(f, "anonymous wire `{name}` has no driver and no consumer")
+            }
+            ValidateError::Inconsistent(name) => {
+                write!(f, "arc `{name}` driver/consumer bookkeeping is inconsistent")
+            }
+            ValidateError::DuplicateLabel(name) => write!(f, "duplicate arc label `{name}`"),
+            ValidateError::Empty => write!(f, "graph has no nodes"),
+        }
+    }
+}
+
+impl std::error::Error for ValidateError {}
 
 /// Check structural invariants. The builder maintains most of these by
 /// construction; the assembler parser and deserialized graphs rely on this

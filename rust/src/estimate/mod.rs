@@ -30,4 +30,7 @@ mod fmax;
 mod model;
 
 pub use fmax::{critical_path_ns, fmax_mhz, op_delay_ns};
-pub use model::{estimate, estimate_raw, estimate_trimmed, op_cost, OpCost, Resources, WORD_BITS};
+pub use model::{
+    estimate, estimate_raw, estimate_shards, estimate_trimmed, op_cost, op_resources, OpCost,
+    Resources, WORD_BITS,
+};

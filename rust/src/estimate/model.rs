@@ -107,21 +107,55 @@ fn pack_slices(ff: u32, lut: u32, n_arcs: u32) -> u32 {
     by_lut.max(by_ff) + n_arcs // routing-only slices, one per channel
 }
 
+/// Resources of a single operator instance (FSM + handshake + ALU) —
+/// the unit a fabric topology provisions per operator slot. `fmax_mhz`
+/// is zero: one operator has no netlist-level critical path of its own.
+pub fn op_resources(op: Op) -> Resources {
+    let (fsm_ff, fsm_lut) = fsm_cost(op);
+    let c = op_cost(op);
+    let mut r = Resources {
+        ff: fsm_ff,
+        lut: fsm_lut + c.alu_lut + c.ctl_lut,
+        ..Resources::default()
+    };
+    if let Op::Fifo(depth) = op {
+        r.bram_bits += depth as u32 * WORD_BITS;
+        r.ff += 2 * 11;
+    }
+    r
+}
+
+/// Per-shard resource estimates plus the pool total for a partitioned
+/// graph. The total's `fmax_mhz` is the *slowest* shard's — in a
+/// multi-fabric deployment every instance runs the same clock domain
+/// discipline, so the critical shard bounds the system.
+pub fn estimate_shards<'a>(
+    shards: impl IntoIterator<Item = &'a Graph>,
+) -> (Vec<Resources>, Resources) {
+    let mut per = Vec::new();
+    let mut total = Resources::default();
+    for g in shards {
+        let r = estimate(g);
+        total.add(&r);
+        per.push(r);
+    }
+    total.fmax_mhz = per
+        .iter()
+        .map(|r| r.fmax_mhz)
+        .fold(f64::INFINITY, f64::min);
+    if per.is_empty() {
+        total.fmax_mhz = 0.0;
+    }
+    (per, total)
+}
+
 /// Post-synthesis model: one data register per *arc* (producer output
 /// register; consumer input registers retimed away), boolean arcs trimmed
 /// to 1 bit, FSM + handshake per node, ALU logic per opcode.
 pub fn estimate(g: &Graph) -> Resources {
     let mut r = Resources::default();
     for n in &g.nodes {
-        let (fsm_ff, fsm_lut) = fsm_cost(n.op);
-        let c = op_cost(n.op);
-        r.ff += fsm_ff;
-        r.lut += fsm_lut + c.alu_lut + c.ctl_lut;
-        if let Op::Fifo(depth) = n.op {
-            // FIFO storage maps to BRAM; pointers are fabric FF.
-            r.bram_bits += depth as u32 * WORD_BITS;
-            r.ff += 2 * 11; // read/write pointers up to 2^11 entries
-        }
+        r.add(&op_resources(n.op));
     }
     for a in &g.arcs {
         // One register per arc, at the payload's trimmed width.
@@ -164,15 +198,9 @@ pub fn estimate_trimmed(g: &Graph) -> Resources {
 pub fn estimate_raw(g: &Graph) -> Resources {
     let mut r = Resources::default();
     for n in &g.nodes {
-        let (fsm_ff, fsm_lut) = fsm_cost(n.op);
-        let c = op_cost(n.op);
-        let data_regs = (n.op.n_in() + n.op.n_out()) as u32 * WORD_BITS;
-        r.ff += fsm_ff + data_regs;
-        r.lut += fsm_lut + c.alu_lut + c.ctl_lut;
-        if let Op::Fifo(depth) = n.op {
-            r.bram_bits += depth as u32 * WORD_BITS;
-            r.ff += 2 * 11;
-        }
+        r.add(&op_resources(n.op));
+        // Input AND output data registers at full width (no retiming).
+        r.ff += (n.op.n_in() + n.op.n_out()) as u32 * WORD_BITS;
     }
     r.slices = pack_slices(r.ff, r.lut, g.n_arcs() as u32);
     r.fmax_mhz = super::fmax_mhz(g);

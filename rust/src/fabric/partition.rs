@@ -1,0 +1,415 @@
+//! The partitioner: split a DFG that exceeds one fabric instance into
+//! shards that each fit, minimizing cut arcs.
+//!
+//! The approach mirrors the classic two-step used by reconfigurable-array
+//! schedulers (and the GraphyFlow DFG-IR mapping stage): seed with
+//! balanced contiguous blocks in node-creation order (the builder emits
+//! nodes in rough dataflow order, so contiguous blocks already cut few
+//! arcs on loop-schema graphs), then run bounded Kernighan–Lin-style
+//! refinement passes that move boundary nodes to a neighboring shard
+//! whenever that strictly reduces the cut and per-class slot capacity
+//! allows it.
+//!
+//! A cut arc keeps its original label in both shards: the producing
+//! shard gets an *output port* half, the consuming shard an *input
+//! port* half, and the sharded executor ([`super::shard`]) forwards
+//! tokens between the halves — the software analogue of the paper's
+//! inter-fabric bus channels.
+
+use super::place::PlaceError;
+use super::topology::FabricTopology;
+use crate::dfg::{Arc, ArcId, Graph, Node, NodeId, OpClass};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// An arc severed by the partition: produced in shard `from`, consumed
+/// in shard `to`, carried between them under its original `name`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CutArc {
+    /// Arc id in the original graph.
+    pub arc: ArcId,
+    /// Label shared by the output-port half (shard `from`) and the
+    /// input-port half (shard `to`).
+    pub name: String,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// One shard: a self-contained, valid [`Graph`] plus the bookkeeping
+/// back to the original graph.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub index: usize,
+    pub graph: Graph,
+    /// Original node id per shard node index.
+    pub orig_nodes: Vec<NodeId>,
+    /// Original arc id per shard arc index (cut arcs appear in both of
+    /// their home shards).
+    pub orig_arcs: Vec<ArcId>,
+}
+
+/// The full partition: every shard fits the topology it was built for.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub graph_name: String,
+    pub shards: Vec<Shard>,
+    pub cuts: Vec<CutArc>,
+}
+
+impl PartitionPlan {
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Labels of all cut arcs (the forwarding table's key set).
+    pub fn cut_names(&self) -> BTreeSet<String> {
+        self.cuts.iter().map(|c| c.name.clone()).collect()
+    }
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Split `g` into shards that each fit `topo`. A graph that already fits
+/// yields a single shard. Fails only when no shard count can ever work:
+/// a used operator class with zero slots, or a channel pool smaller than
+/// some single node's arc degree.
+pub fn partition(g: &Graph, topo: &FabricTopology) -> Result<PartitionPlan, PlaceError> {
+    assert!(!g.nodes.is_empty(), "cannot partition an empty graph");
+    let demand = FabricTopology::demand(g);
+    // Feasibility independent of shard count.
+    for (&class, &need) in &demand {
+        if need > 0 && topo.slot_count(class) == 0 {
+            return Err(PlaceError::InsufficientSlots {
+                class,
+                need,
+                have: 0,
+            });
+        }
+    }
+    let max_node_degree = g
+        .nodes
+        .iter()
+        .map(|n| n.ins.len() + n.outs.len())
+        .max()
+        .unwrap_or(0);
+    if topo.channels < max_node_degree {
+        return Err(PlaceError::InsufficientChannels {
+            need: max_node_degree,
+            have: topo.channels,
+        });
+    }
+
+    if topo.fits(g) {
+        let assign = vec![0usize; g.n_nodes()];
+        return Ok(build_plan(g, &assign, 1));
+    }
+
+    // Lower bound on the shard count from slot pressure and channel
+    // pressure; grow until the per-shard channel budget holds.
+    let slot_bound = demand
+        .iter()
+        .map(|(&c, &need)| ceil_div(need, topo.slot_count(c)))
+        .max()
+        .unwrap_or(1);
+    let chan_bound = ceil_div(g.n_arcs(), topo.channels.max(1));
+    let mut k = slot_bound.max(chan_bound).max(2);
+    while k <= g.n_nodes() {
+        let (mut assign, n_shards) = assign_contiguous(g, topo, k, &demand);
+        refine(g, topo, &mut assign, n_shards);
+        let counts = shard_arc_counts(g, &assign, n_shards);
+        if counts.iter().all(|&c| c <= topo.channels) {
+            return Ok(build_plan(g, &assign, n_shards));
+        }
+        k += 1;
+    }
+    // Last resort: one node per shard. Slot capacity holds (every used
+    // class has ≥ 1 slot) and so does the channel budget (≥ the largest
+    // node degree, checked above).
+    let assign: Vec<usize> = (0..g.n_nodes()).collect();
+    Ok(build_plan(g, &assign, g.n_nodes()))
+}
+
+/// Seed assignment: contiguous blocks in node order, each limited to a
+/// balanced per-class quota (`ceil(demand / k)`, clamped to capacity).
+fn assign_contiguous(
+    g: &Graph,
+    topo: &FabricTopology,
+    k: usize,
+    demand: &BTreeMap<OpClass, usize>,
+) -> (Vec<usize>, usize) {
+    let quota: BTreeMap<OpClass, usize> = demand
+        .iter()
+        .map(|(&c, &need)| {
+            let cap = topo.slot_count(c);
+            (c, ceil_div(need, k).min(cap).max(1))
+        })
+        .collect();
+    let mut shard = 0usize;
+    let mut counts: BTreeMap<OpClass, usize> = BTreeMap::new();
+    let mut assign = Vec::with_capacity(g.n_nodes());
+    for n in &g.nodes {
+        let class = n.op.class();
+        if counts.get(&class).copied().unwrap_or(0) >= quota[&class] {
+            shard += 1;
+            counts.clear();
+        }
+        *counts.entry(class).or_insert(0) += 1;
+        assign.push(shard);
+    }
+    (assign, shard + 1)
+}
+
+/// Bounded KL-style refinement: move a node to a neighboring shard when
+/// that strictly reduces its incident cut and the target shard has a
+/// free slot of its class.
+fn refine(g: &Graph, topo: &FabricTopology, assign: &mut [usize], n_shards: usize) {
+    let mut counts: Vec<BTreeMap<OpClass, usize>> = vec![BTreeMap::new(); n_shards];
+    for (ni, &s) in assign.iter().enumerate() {
+        *counts[s].entry(g.nodes[ni].op.class()).or_insert(0) += 1;
+    }
+    let mut others = Vec::new();
+    for _pass in 0..4 {
+        let mut improved = false;
+        for ni in 0..g.n_nodes() {
+            let s = assign[ni];
+            let node = &g.nodes[ni];
+            let class = node.op.class();
+            // Graph neighbors (skip environment endpoints and self-loops).
+            others.clear();
+            for &a in &node.ins {
+                if let Some((src, _)) = g.arc(a).src {
+                    if src.0 as usize != ni {
+                        others.push(src.0 as usize);
+                    }
+                }
+            }
+            for &a in &node.outs {
+                if let Some((dst, _)) = g.arc(a).dst {
+                    if dst.0 as usize != ni {
+                        others.push(dst.0 as usize);
+                    }
+                }
+            }
+            let cur_cut = others.iter().filter(|&&o| assign[o] != s).count();
+            if cur_cut == 0 {
+                continue;
+            }
+            let mut best: Option<(usize, usize)> = None; // (cut after move, target)
+            for idx in 0..others.len() {
+                let t = assign[others[idx]];
+                if t == s {
+                    continue;
+                }
+                let cut_t = others.iter().filter(|&&o| assign[o] != t).count();
+                let has_slot =
+                    counts[t].get(&class).copied().unwrap_or(0) < topo.slot_count(class);
+                if cut_t < cur_cut && has_slot && best.map_or(true, |(bc, _)| cut_t < bc) {
+                    best = Some((cut_t, t));
+                }
+            }
+            if let Some((_, t)) = best {
+                *counts[s].get_mut(&class).unwrap() -= 1;
+                *counts[t].entry(class).or_insert(0) += 1;
+                assign[ni] = t;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+/// Bus channels each shard would occupy under `assign`: internal arcs
+/// once, cut arcs once in each home shard, environment ports in their
+/// node's shard (fully disconnected arcs live in shard 0).
+fn shard_arc_counts(g: &Graph, assign: &[usize], n_shards: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; n_shards];
+    for a in &g.arcs {
+        let s = a.src.map(|(n, _)| assign[n.0 as usize]);
+        let d = a.dst.map(|(n, _)| assign[n.0 as usize]);
+        match (s, d) {
+            (Some(x), Some(y)) if x == y => counts[x] += 1,
+            (Some(x), Some(y)) => {
+                counts[x] += 1;
+                counts[y] += 1;
+            }
+            (Some(x), None) | (None, Some(x)) => counts[x] += 1,
+            (None, None) => counts[0] += 1,
+        }
+    }
+    counts
+}
+
+/// Materialize shard graphs and the cut list from a node→shard map.
+/// Empty shards are compacted away; shard ids are renumbered in first-
+/// appearance order.
+fn build_plan(g: &Graph, assign: &[usize], n_shards: usize) -> PartitionPlan {
+    // Compact empty shards.
+    let mut node_count = vec![0usize; n_shards];
+    for &s in assign {
+        node_count[s] += 1;
+    }
+    let mut remap = vec![usize::MAX; n_shards];
+    let mut used = 0usize;
+    for s in 0..n_shards {
+        if node_count[s] > 0 {
+            remap[s] = used;
+            used += 1;
+        }
+    }
+    let assign: Vec<usize> = assign.iter().map(|&s| remap[s]).collect();
+    let n_shards = used;
+
+    let mut node_map = vec![0usize; g.n_nodes()];
+    let mut shard_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); n_shards];
+    for (ni, &s) in assign.iter().enumerate() {
+        node_map[ni] = shard_nodes[s].len();
+        shard_nodes[s].push(NodeId(ni as u32));
+    }
+
+    let mut cuts = Vec::new();
+    for a in &g.arcs {
+        if let (Some((sn, _)), Some((dn, _))) = (a.src, a.dst) {
+            let (x, y) = (assign[sn.0 as usize], assign[dn.0 as usize]);
+            if x != y {
+                cuts.push(CutArc {
+                    arc: a.id,
+                    name: a.name.clone(),
+                    from: x,
+                    to: y,
+                });
+            }
+        }
+    }
+
+    let mut shards = Vec::new();
+    for si in 0..n_shards {
+        let mut graph = Graph::new(format!("{}.s{si}", g.name));
+        let mut orig_arcs = Vec::new();
+        let mut amap: BTreeMap<u32, ArcId> = BTreeMap::new();
+        for a in &g.arcs {
+            let s = a.src.map(|(n, _)| assign[n.0 as usize]);
+            let d = a.dst.map(|(n, _)| assign[n.0 as usize]);
+            let here =
+                s == Some(si) || d == Some(si) || (s.is_none() && d.is_none() && si == 0);
+            if !here {
+                continue;
+            }
+            let new_id = ArcId(graph.arcs.len() as u32);
+            amap.insert(a.id.0, new_id);
+            graph.arcs.push(Arc {
+                id: new_id,
+                src: a.src.and_then(|(n, p)| {
+                    (assign[n.0 as usize] == si)
+                        .then(|| (NodeId(node_map[n.0 as usize] as u32), p))
+                }),
+                dst: a.dst.and_then(|(n, p)| {
+                    (assign[n.0 as usize] == si)
+                        .then(|| (NodeId(node_map[n.0 as usize] as u32), p))
+                }),
+                name: a.name.clone(),
+            });
+            orig_arcs.push(a.id);
+        }
+        for &orig in &shard_nodes[si] {
+            let n = g.node(orig);
+            graph.nodes.push(Node {
+                id: NodeId(graph.nodes.len() as u32),
+                op: n.op,
+                ins: n.ins.iter().map(|a| amap[&a.0]).collect(),
+                outs: n.outs.iter().map(|a| amap[&a.0]).collect(),
+            });
+        }
+        debug_assert!(
+            crate::dfg::validate(&graph).is_ok(),
+            "shard {si} of `{}` is structurally invalid: {:?}",
+            g.name,
+            crate::dfg::validate(&graph)
+        );
+        shards.push(Shard {
+            index: si,
+            graph,
+            orig_nodes: shard_nodes[si].clone(),
+            orig_arcs,
+        });
+    }
+    PartitionPlan {
+        graph_name: g.name.clone(),
+        shards,
+        cuts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{build, BenchId};
+    use crate::fabric::place;
+
+    #[test]
+    fn fitting_graph_yields_one_shard() {
+        let g = build(BenchId::Fibonacci);
+        let topo = FabricTopology::paper();
+        let plan = partition(&g, &topo).unwrap();
+        assert_eq!(plan.n_shards(), 1);
+        assert!(plan.cuts.is_empty());
+        assert_eq!(plan.shards[0].graph.n_nodes(), g.n_nodes());
+        assert_eq!(plan.shards[0].graph.n_arcs(), g.n_arcs());
+    }
+
+    #[test]
+    fn oversized_graph_splits_and_each_shard_places() {
+        for b in BenchId::ALL {
+            let g = build(b);
+            let topo = FabricTopology::sized_for_shards(&g, 2);
+            let plan = partition(&g, &topo).unwrap_or_else(|e| panic!("{}: {e}", b.slug()));
+            assert!(plan.n_shards() >= 2, "{}: expected ≥2 shards", b.slug());
+            for sh in &plan.shards {
+                place::place(&sh.graph, &topo)
+                    .unwrap_or_else(|e| panic!("{} shard {}: {e}", b.slug(), sh.index));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_slot_class_is_unpartitionable() {
+        let g = build(BenchId::DotProd);
+        let mut topo = FabricTopology::sized_for_shards(&g, 2);
+        topo.slots.remove(&OpClass::Alu2);
+        let err = partition(&g, &topo).unwrap_err();
+        assert!(matches!(
+            err,
+            PlaceError::InsufficientSlots {
+                class: OpClass::Alu2,
+                have: 0,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn starving_channels_is_unpartitionable() {
+        let g = build(BenchId::Max);
+        let mut topo = FabricTopology::sized_for_shards(&g, 2);
+        topo.channels = 1; // below any node's arc degree
+        let err = partition(&g, &topo).unwrap_err();
+        assert!(matches!(err, PlaceError::InsufficientChannels { have: 1, .. }));
+    }
+
+    #[test]
+    fn cut_labels_match_port_halves() {
+        let g = build(BenchId::VectorSum);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = partition(&g, &topo).unwrap();
+        for cut in &plan.cuts {
+            let from = &plan.shards[cut.from].graph;
+            let to = &plan.shards[cut.to].graph;
+            let out_half = from.arc_by_name(&cut.name).expect("output half exists");
+            let in_half = to.arc_by_name(&cut.name).expect("input half exists");
+            assert!(from.arc(out_half).is_output_port());
+            assert!(to.arc(in_half).is_input_port());
+        }
+    }
+}

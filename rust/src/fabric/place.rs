@@ -1,0 +1,200 @@
+//! The placer: DFG nodes → operator slots, arcs → bus channels.
+//!
+//! Placement on the paper's fabric is a pure capacity problem: operators
+//! are interchangeable within a class (every `add` slot is the same
+//! hardware) and every channel is a point-to-point 16-bit bus, so a
+//! valid placement exists iff per-class demand fits the slot table and
+//! the arc count fits the channel pool. The placer checks both and
+//! produces the concrete slot/channel assignment the report layer and
+//! the VHDL floorplan annotations consume; graphs that do not fit are
+//! rejected with a descriptive [`PlaceError`] (the partitioner's cue).
+
+use super::topology::FabricTopology;
+use crate::dfg::{Graph, OpClass};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Why a graph cannot be placed on a topology.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlaceError {
+    /// Demand for one operator class exceeds the slot pool.
+    InsufficientSlots {
+        class: OpClass,
+        need: usize,
+        have: usize,
+    },
+    /// The graph has more arcs than the fabric has bus channels.
+    InsufficientChannels { need: usize, have: usize },
+}
+
+impl fmt::Display for PlaceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlaceError::InsufficientSlots { class, need, have } => write!(
+                f,
+                "graph needs {need} `{}` operator slots but the fabric provides only {have}",
+                class.name()
+            ),
+            PlaceError::InsufficientChannels { need, have } => write!(
+                f,
+                "graph needs {need} bus channels but the fabric provides only {have}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlaceError {}
+
+/// A concrete assignment of one graph onto one fabric instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    /// Name of the topology placed onto.
+    pub fabric: String,
+    /// Per node (graph index order): its class and the physical slot
+    /// index within that class's pool.
+    pub slots: Vec<(OpClass, usize)>,
+    /// Per arc (graph index order): the physical bus channel.
+    pub channels: Vec<usize>,
+}
+
+impl Placement {
+    /// Per-class `(class, used, provisioned)` rows, provisioned classes
+    /// first — the utilization table.
+    pub fn utilization(&self, topo: &FabricTopology) -> Vec<(OpClass, usize, usize)> {
+        let mut used: BTreeMap<OpClass, usize> = BTreeMap::new();
+        for (c, _) in &self.slots {
+            *used.entry(*c).or_insert(0) += 1;
+        }
+        let mut rows = Vec::new();
+        for &class in OpClass::ALL.iter() {
+            let u = used.get(&class).copied().unwrap_or(0);
+            let total = topo.slot_count(class);
+            if u > 0 || total > 0 {
+                rows.push((class, u, total));
+            }
+        }
+        rows
+    }
+
+    /// `(used, provisioned)` bus channels.
+    pub fn channel_utilization(&self, topo: &FabricTopology) -> (usize, usize) {
+        (self.channels.len(), topo.channels)
+    }
+}
+
+/// Assign every node of `g` to an operator slot and every arc to a bus
+/// channel of `topo`, or explain why that is impossible.
+pub fn place(g: &Graph, topo: &FabricTopology) -> Result<Placement, PlaceError> {
+    let demand = FabricTopology::demand(g);
+    for (&class, &need) in &demand {
+        let have = topo.slot_count(class);
+        if need > have {
+            return Err(PlaceError::InsufficientSlots { class, need, have });
+        }
+    }
+    if g.n_arcs() > topo.channels {
+        return Err(PlaceError::InsufficientChannels {
+            need: g.n_arcs(),
+            have: topo.channels,
+        });
+    }
+    // Greedy is optimal here: slots within a class are interchangeable,
+    // so "next free slot of the class, in node order" is a valid (and
+    // deterministic) placement; likewise channels in arc order.
+    let mut next: BTreeMap<OpClass, usize> = BTreeMap::new();
+    let slots = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let class = n.op.class();
+            let e = next.entry(class).or_insert(0);
+            let slot = *e;
+            *e += 1;
+            (class, slot)
+        })
+        .collect();
+    let channels = (0..g.n_arcs()).collect();
+    Ok(Placement {
+        fabric: topo.name.clone(),
+        slots,
+        channels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{build, BenchId};
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn paper_fabric_places_every_benchmark() {
+        let topo = FabricTopology::paper();
+        for b in BenchId::ALL {
+            let g = build(b);
+            let p = place(&g, &topo).unwrap_or_else(|e| panic!("{}: {e}", b.slug()));
+            assert_eq!(p.slots.len(), g.n_nodes());
+            assert_eq!(p.channels.len(), g.n_arcs());
+            // Slot indices stay inside each class pool and never repeat.
+            let mut seen: BTreeMap<_, Vec<usize>> = BTreeMap::new();
+            for (c, s) in &p.slots {
+                assert!(*s < topo.slot_count(*c), "{}: slot overflow", b.slug());
+                let v = seen.entry(*c).or_default();
+                assert!(!v.contains(s), "{}: duplicate slot", b.slug());
+                v.push(*s);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_missing_class_with_descriptive_error() {
+        let g = build(BenchId::DotProd);
+        let topo = FabricTopology::new(
+            "no-alu",
+            BTreeMap::from([(crate::dfg::OpClass::Copy, 100)]),
+            1000,
+            0,
+        );
+        let err = place(&g, &topo).unwrap_err();
+        match err {
+            PlaceError::InsufficientSlots { have, need, .. } => {
+                assert_eq!(have, 0);
+                assert!(need > 0);
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        let msg = err.to_string();
+        assert!(msg.contains("operator slots"), "{msg}");
+        assert!(msg.contains("provides only 0"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_channel_exhaustion() {
+        let g = build(BenchId::Fibonacci);
+        let mut topo = FabricTopology::paper();
+        topo.channels = 1;
+        let err = place(&g, &topo).unwrap_err();
+        assert_eq!(
+            err,
+            PlaceError::InsufficientChannels {
+                need: g.n_arcs(),
+                have: 1
+            }
+        );
+        assert!(err.to_string().contains("bus channels"));
+    }
+
+    #[test]
+    fn utilization_rows_cover_demand() {
+        let topo = FabricTopology::paper();
+        let g = build(BenchId::Max);
+        let p = place(&g, &topo).unwrap();
+        let rows = p.utilization(&topo);
+        let used: usize = rows.iter().map(|(_, u, _)| u).sum();
+        assert_eq!(used, g.n_nodes());
+        for (_, u, total) in rows {
+            assert!(u <= total);
+        }
+        assert_eq!(p.channel_utilization(&topo).0, g.n_arcs());
+    }
+}

@@ -1,0 +1,164 @@
+//! Time-multiplexed execution: one physical fabric, many shard contexts.
+//!
+//! When only a single fabric instance is available, an oversized graph
+//! can still run by treating each shard as an FPGA *context*: load shard
+//! A, run it until it stalls, swap in shard B (charging the partial-
+//! reconfiguration cost), and so on — the classic area/time tradeoff the
+//! paper motivates for reconfigurable systems. Tokens crossing a cut
+//! while a shard is swapped out wait in the inter-context buffers
+//! exactly as they would in external FIFOs next to the FPGA.
+//!
+//! The scheduler is round-robin over non-idle contexts, which is
+//! deadlock-free for the same confluence reason `shard::run_sharded` is:
+//! any globally enabled firing belongs to some shard, and that shard is
+//! eventually activated. Output streams remain byte-identical to
+//! whole-graph [`crate::sim::TokenSim`].
+
+use super::partition::PartitionPlan;
+use super::shard::{merge_outcomes, shard_configs};
+use super::topology::FabricTopology;
+use crate::sim::{SimConfig, SimOutcome, TokenSim};
+
+/// What time-multiplexing cost on top of the pure dataflow rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReconfigStats {
+    /// Context loads, including the initial configuration.
+    pub swaps: u64,
+    /// Cycles charged for those loads (`swaps × topo.reconfig_cycles`).
+    pub reconfig_cycles: u64,
+    /// Dataflow rounds actually executed on the fabric.
+    pub active_cycles: u64,
+}
+
+/// Run every shard of `plan` on ONE fabric by context swapping. The
+/// returned outcome's `cycles` includes the reconfiguration charge.
+pub fn run_reconfig(
+    plan: &PartitionPlan,
+    topo: &FabricTopology,
+    cfg: &SimConfig,
+) -> (SimOutcome, ReconfigStats) {
+    let cut_names = plan.cut_names();
+    let shard_cfgs = shard_configs(plan, cfg);
+    let mut sims: Vec<TokenSim> = plan
+        .shards
+        .iter()
+        .zip(&shard_cfgs)
+        .map(|(sh, c)| TokenSim::new(&sh.graph, c))
+        .collect();
+    let n = sims.len();
+
+    let mut active = 0usize;
+    let mut swaps = 1u64; // the initial context load
+    let mut active_cycles = 0u64;
+    let mut stalled_rotation = 0usize;
+
+    loop {
+        // Run the active context until it stops firing; the final zero-
+        // firing step also drains its output ports.
+        let mut shard_fired = 0u64;
+        while active_cycles < cfg.max_cycles {
+            let f = sims[active].step();
+            active_cycles += 1;
+            shard_fired += f;
+            if f == 0 {
+                break;
+            }
+        }
+        // Flush this context's cut outputs into the inter-context buffers.
+        for cut in &plan.cuts {
+            if cut.from != active {
+                continue;
+            }
+            for v in sims[cut.from].take_stream(&cut.name) {
+                let ok = sims[cut.to].enqueue(&cut.name, v);
+                debug_assert!(ok, "cut arc `{}` has no input half", cut.name);
+            }
+        }
+        if shard_fired == 0 {
+            stalled_rotation += 1;
+        } else {
+            stalled_rotation = 0;
+        }
+        // A context has work when it is non-idle OR still holds unfired
+        // const reset tokens (idle() cannot see those).
+        let has_work = |s: &TokenSim| !s.idle() || s.consts_pending();
+        if active_cycles >= cfg.max_cycles
+            || stalled_rotation >= n
+            || !sims.iter().any(has_work)
+        {
+            break;
+        }
+        // Next context with work, round-robin.
+        match (1..=n)
+            .map(|d| (active + d) % n)
+            .find(|&i| has_work(&sims[i]))
+        {
+            Some(i) => {
+                if i != active {
+                    swaps += 1;
+                    active = i;
+                }
+            }
+            None => break,
+        }
+    }
+
+    let quiescent = sims.iter().all(|s| s.idle() && !s.consts_pending());
+    let stats = ReconfigStats {
+        swaps,
+        reconfig_cycles: swaps * topo.reconfig_cycles,
+        active_cycles,
+    };
+    let total_cycles = active_cycles + stats.reconfig_cycles;
+    let outcome = merge_outcomes(sims, &cut_names, total_cycles, quiescent);
+    (outcome, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{self, BenchId};
+    use crate::fabric::{partition, FabricTopology};
+    use crate::sim::run_token;
+
+    #[test]
+    fn reconfig_agrees_with_whole_graph_on_dot_prod() {
+        let g = bench_defs::build(BenchId::DotProd);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = partition(&g, &topo).unwrap();
+        assert!(plan.n_shards() >= 2);
+        let wl = bench_defs::workload(BenchId::DotProd, 5, 17);
+        let cfg = wl.sim_config();
+        let whole = run_token(&g, &cfg);
+        let (out, stats) = run_reconfig(&plan, &topo, &cfg);
+        assert_eq!(out.outputs, whole.outputs);
+        assert!(out.quiescent);
+        assert!(stats.swaps >= 2);
+        assert_eq!(stats.reconfig_cycles, stats.swaps * topo.reconfig_cycles);
+        assert_eq!(out.cycles, stats.active_cycles + stats.reconfig_cycles);
+    }
+
+    #[test]
+    fn reconfig_cost_scales_with_swap_price() {
+        let g = bench_defs::build(BenchId::PopCount);
+        let mut topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = partition(&g, &topo).unwrap();
+        let cfg = bench_defs::workload(BenchId::PopCount, 4, 1).sim_config();
+        let (_, cheap) = run_reconfig(&plan, &topo, &cfg);
+        topo.reconfig_cycles *= 10;
+        let (_, dear) = run_reconfig(&plan, &topo, &cfg);
+        assert_eq!(cheap.swaps, dear.swaps, "schedule must not depend on price");
+        assert_eq!(dear.reconfig_cycles, cheap.reconfig_cycles * 10);
+    }
+
+    #[test]
+    fn single_context_needs_one_load() {
+        let g = bench_defs::build(BenchId::Fibonacci);
+        let topo = FabricTopology::paper();
+        let plan = partition(&g, &topo).unwrap();
+        let cfg = bench_defs::workload(BenchId::Fibonacci, 7, 0).sim_config();
+        let (out, stats) = run_reconfig(&plan, &topo, &cfg);
+        assert_eq!(stats.swaps, 1);
+        assert!(out.quiescent);
+    }
+}

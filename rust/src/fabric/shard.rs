@@ -1,0 +1,172 @@
+//! The sharded executor: run a [`PartitionPlan`] across multiple fabric
+//! instances in lockstep, forwarding tokens over cut arcs.
+//!
+//! Each shard runs its own [`TokenSim`]. After every synchronous round,
+//! tokens that surfaced on a cut arc's output-port half are drained and
+//! enqueued onto the matching input-port half in the consuming shard —
+//! the software model of the paper's inter-fabric bus channels, which
+//! are ordinary 16-bit `str`/`ack` buses and therefore preserve FIFO
+//! order per channel.
+//!
+//! Forwarding adds latency (a cut token spends extra rounds in flight)
+//! but cannot change what the graph computes: token-by-token outputs are
+//! confluent under any scheduling because every operator's firing rule
+//! is deterministic and the loop schema's `ndmerge` nodes never hold
+//! two competing tokens (`dfg::schema` documents why). The property
+//! tests in `tests/fabric.rs` enforce byte-identical output streams
+//! against whole-graph [`TokenSim`] on all six paper benchmarks.
+
+use super::partition::PartitionPlan;
+use crate::sim::{SimConfig, SimOutcome, TokenSim};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Per-shard simulation configs: each shard receives the injection
+/// streams for the true input ports it owns; cut-arc input halves start
+/// empty (the executor feeds them).
+pub(crate) fn shard_configs(plan: &PartitionPlan, cfg: &SimConfig) -> Vec<SimConfig> {
+    let cut_names = plan.cut_names();
+    plan.shards
+        .iter()
+        .map(|sh| {
+            let mut c = SimConfig::new().max_cycles(cfg.max_cycles);
+            for a in sh.graph.input_ports() {
+                let name = sh.graph.arc(a).name.clone();
+                if cut_names.contains(&name) {
+                    continue;
+                }
+                if let Some(stream) = cfg.inject.get(&name) {
+                    c = c.inject(&name, stream.clone());
+                }
+            }
+            c
+        })
+        .collect()
+}
+
+/// Merge per-shard outcomes into one whole-graph outcome, dropping the
+/// cut-arc port halves (they are internal wiring, not real outputs).
+pub(crate) fn merge_outcomes(
+    sims: Vec<TokenSim>,
+    cut_names: &BTreeSet<String>,
+    cycles: u64,
+    quiescent: bool,
+) -> SimOutcome {
+    let mut outputs = BTreeMap::new();
+    let mut firings = 0u64;
+    for sim in sims {
+        let o = sim.into_outcome(cycles, quiescent);
+        firings += o.firings;
+        for (name, stream) in o.outputs {
+            if cut_names.contains(&name) {
+                continue;
+            }
+            outputs.insert(name, stream);
+        }
+    }
+    SimOutcome {
+        outputs,
+        cycles,
+        firings,
+        quiescent,
+    }
+}
+
+/// Execute a partitioned graph to quiescence (or the round budget),
+/// forwarding cut-arc tokens between shards after every round. Output
+/// streams are byte-identical to whole-graph `TokenSim` on the same
+/// `cfg`.
+pub fn run_sharded(plan: &PartitionPlan, cfg: &SimConfig) -> SimOutcome {
+    let cut_names = plan.cut_names();
+    let shard_cfgs = shard_configs(plan, cfg);
+    let mut sims: Vec<TokenSim> = plan
+        .shards
+        .iter()
+        .zip(&shard_cfgs)
+        .map(|(sh, c)| TokenSim::new(&sh.graph, c))
+        .collect();
+
+    let mut rounds = 0u64;
+    let mut idle_rounds = 0u32;
+    while rounds < cfg.max_cycles {
+        let mut fired = 0u64;
+        for sim in &mut sims {
+            fired += sim.step();
+        }
+        let mut moved = 0usize;
+        for cut in &plan.cuts {
+            let vals = sims[cut.from].take_stream(&cut.name);
+            moved += vals.len();
+            for v in vals {
+                let ok = sims[cut.to].enqueue(&cut.name, v);
+                debug_assert!(ok, "cut arc `{}` has no input half", cut.name);
+            }
+        }
+        rounds += 1;
+        if fired == 0 && moved == 0 {
+            idle_rounds += 1;
+            // One extra round drains output ports, one confirms silence.
+            if idle_rounds >= 2 {
+                break;
+            }
+        } else {
+            idle_rounds = 0;
+        }
+    }
+    let quiescent = sims.iter().all(|s| s.idle());
+    merge_outcomes(sims, &cut_names, rounds, quiescent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{self, BenchId};
+    use crate::fabric::{partition, FabricTopology};
+    use crate::sim::run_token;
+
+    #[test]
+    fn single_shard_plan_matches_plain_run() {
+        let g = bench_defs::build(BenchId::Fibonacci);
+        let topo = FabricTopology::paper();
+        let plan = partition(&g, &topo).unwrap();
+        assert_eq!(plan.n_shards(), 1);
+        let wl = bench_defs::workload(BenchId::Fibonacci, 9, 3);
+        let cfg = wl.sim_config();
+        let whole = run_token(&g, &cfg);
+        let sharded = run_sharded(&plan, &cfg);
+        assert_eq!(sharded.outputs, whole.outputs);
+        assert_eq!(sharded.firings, whole.firings);
+        assert!(sharded.quiescent);
+    }
+
+    #[test]
+    fn two_shards_agree_on_vector_sum() {
+        let g = bench_defs::build(BenchId::VectorSum);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = partition(&g, &topo).unwrap();
+        assert!(plan.n_shards() >= 2);
+        let wl = bench_defs::workload(BenchId::VectorSum, 6, 11);
+        let cfg = wl.sim_config();
+        let whole = run_token(&g, &cfg);
+        let sharded = run_sharded(&plan, &cfg);
+        assert_eq!(sharded.outputs, whole.outputs);
+        assert!(sharded.quiescent);
+        for (port, want) in &wl.expect {
+            assert_eq!(sharded.stream(port), want.as_slice());
+        }
+    }
+
+    #[test]
+    fn cut_ports_are_not_reported_as_outputs() {
+        let g = bench_defs::build(BenchId::Max);
+        let topo = FabricTopology::sized_for_shards(&g, 3);
+        let plan = partition(&g, &topo).unwrap();
+        let wl = bench_defs::workload(BenchId::Max, 5, 2);
+        let sharded = run_sharded(&plan, &wl.sim_config());
+        for name in plan.cut_names() {
+            assert!(
+                !sharded.outputs.contains_key(&name),
+                "cut `{name}` leaked into outputs"
+            );
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! The physical fabric model.
+//!
+//! The paper's prototype is a *finite* reconfigurable fabric: a pool of
+//! operator instances (one FSM + datapath each, Figs. 5/6) wired through
+//! parallel 16-bit buses with `str`/`ack` pairs (Fig. 3). A
+//! [`FabricTopology`] captures that finiteness: how many operator slots
+//! of each [`OpClass`] one fabric instance provides, how many physical
+//! bus channels it can route, and how many cycles a full context swap
+//! (FPGA partial reconfiguration) costs. The placer ([`super::place`])
+//! maps a DFG onto these slots; graphs that do not fit are split by the
+//! partitioner ([`super::partition`]) and run sharded
+//! ([`super::shard`]) or time-multiplexed ([`super::reconfig`]).
+
+use crate::dfg::{Graph, OpClass};
+use crate::estimate::{op_resources, Resources, WORD_BITS};
+use std::collections::BTreeMap;
+
+/// One reconfigurable fabric instance: per-class operator slot counts, a
+/// bounded pool of parallel bus channels, and a context-swap cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricTopology {
+    pub name: String,
+    /// Operator slots per class. A class missing from the map has zero
+    /// slots.
+    pub slots: BTreeMap<OpClass, usize>,
+    /// Physical 16-bit bus channels (each arc of a placed graph occupies
+    /// one: the paper's channels are point-to-point, §3).
+    pub channels: usize,
+    /// Cycles charged per context swap by the time-multiplexing
+    /// scheduler (FPGA partial-reconfiguration cost).
+    pub reconfig_cycles: u64,
+}
+
+impl FabricTopology {
+    pub fn new(
+        name: impl Into<String>,
+        slots: BTreeMap<OpClass, usize>,
+        channels: usize,
+        reconfig_cycles: u64,
+    ) -> Self {
+        FabricTopology {
+            name: name.into(),
+            slots,
+            channels,
+            reconfig_cycles,
+        }
+    }
+
+    /// Slots provisioned for `class` (zero when absent).
+    pub fn slot_count(&self, class: OpClass) -> usize {
+        self.slots.get(&class).copied().unwrap_or(0)
+    }
+
+    /// Total operator slots across all classes.
+    pub fn total_slots(&self) -> usize {
+        self.slots.values().sum()
+    }
+
+    /// Per-class operator demand of a graph — what the placer matches
+    /// against the slot table.
+    pub fn demand(g: &Graph) -> BTreeMap<OpClass, usize> {
+        let mut m = BTreeMap::new();
+        for n in &g.nodes {
+            *m.entry(n.op.class()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Whether `g` fits on a single instance (slots and channels).
+    pub fn fits(&self, g: &Graph) -> bool {
+        g.n_arcs() <= self.channels
+            && Self::demand(g)
+                .iter()
+                .all(|(c, need)| *need <= self.slot_count(*c))
+    }
+
+    /// The silicon a fully provisioned instance occupies, from the
+    /// `estimate` resource model: every slot is charged the cost of its
+    /// class's widest member opcode, and every bus channel one
+    /// word-wide register. `fmax_mhz` is zero — a topology has no
+    /// netlist, hence no critical path.
+    pub fn resources(&self) -> Resources {
+        let mut r = Resources::default();
+        for (&class, &count) in &self.slots {
+            let unit = op_resources(class.widest_member());
+            for _ in 0..count {
+                r.add(&unit);
+            }
+        }
+        r.ff += self.channels as u32 * WORD_BITS;
+        r
+    }
+
+    /// The default production fabric: provisioned from the estimate
+    /// resource model so every paper benchmark places on one instance,
+    /// with ~25% headroom per class and on the channel pool.
+    pub fn paper() -> FabricTopology {
+        let mut slots: BTreeMap<OpClass, usize> = BTreeMap::new();
+        let mut channels = 0usize;
+        for b in crate::bench_defs::BenchId::ALL {
+            let g = crate::bench_defs::build(b);
+            for (c, n) in Self::demand(&g) {
+                let e = slots.entry(c).or_insert(0);
+                *e = (*e).max(n);
+            }
+            channels = channels.max(g.n_arcs());
+        }
+        for v in slots.values_mut() {
+            *v += (*v + 3) / 4;
+        }
+        channels += (channels + 3) / 4;
+        FabricTopology::new("paper-virtex7", slots, channels, 256)
+    }
+
+    /// A topology sized so `g` needs roughly `k` shards: each class gets
+    /// `ceil(demand / k)` slots and the channel pool is left unbounded
+    /// (equal to the arc count plus cut headroom), so partitioning is
+    /// driven by operator capacity alone. Used by tests and by the
+    /// `place --shards` CLI path to study the reconfiguration tradeoff.
+    pub fn sized_for_shards(g: &Graph, k: usize) -> FabricTopology {
+        let k = k.max(1);
+        let slots: BTreeMap<OpClass, usize> = Self::demand(g)
+            .into_iter()
+            .map(|(c, need)| (c, ((need + k - 1) / k).max(1)))
+            .collect();
+        // Generous channel pool: every shard may carry its internal arcs
+        // plus both halves of every cut, so the original arc count always
+        // suffices per shard.
+        FabricTopology::new(
+            format!("{}-k{}", g.name, k),
+            slots,
+            g.n_arcs(),
+            256,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{build, BenchId};
+
+    #[test]
+    fn paper_fabric_fits_all_benchmarks() {
+        let topo = FabricTopology::paper();
+        for b in BenchId::ALL {
+            assert!(topo.fits(&build(b)), "{} must fit the paper fabric", b.slug());
+        }
+    }
+
+    #[test]
+    fn demand_matches_census_total() {
+        for b in BenchId::ALL {
+            let g = build(b);
+            let total: usize = FabricTopology::demand(&g).values().sum();
+            assert_eq!(total, g.n_nodes(), "{}", b.slug());
+        }
+    }
+
+    #[test]
+    fn sized_for_shards_rejects_whole_graph() {
+        // A k=2 topology must NOT fit the whole graph in one instance.
+        for b in BenchId::ALL {
+            let g = build(b);
+            let topo = FabricTopology::sized_for_shards(&g, 2);
+            assert!(!topo.fits(&g), "{} should not fit a half fabric", b.slug());
+        }
+    }
+
+    #[test]
+    fn resources_scale_with_slots() {
+        let g = build(BenchId::Fibonacci);
+        let small = FabricTopology::sized_for_shards(&g, 2);
+        let big = FabricTopology::sized_for_shards(&g, 1);
+        let rs = small.resources();
+        let rb = big.resources();
+        assert!(rb.ff > rs.ff);
+        assert!(rb.lut >= rs.lut);
+    }
+
+    #[test]
+    fn empty_class_has_zero_slots() {
+        let topo = FabricTopology::new("t", BTreeMap::new(), 4, 0);
+        assert_eq!(topo.slot_count(crate::dfg::OpClass::Alu2), 0);
+        assert_eq!(topo.total_slots(), 0);
+    }
+}

@@ -47,18 +47,39 @@ pub use lower::lower;
 pub use parser::parse_program;
 
 use crate::dfg::Graph;
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CError {
-    #[error("lex error at line {0}: {1}")]
     Lex(usize, String),
-    #[error("parse error at line {0}: {1}")]
     Parse(usize, String),
-    #[error("semantic error: {0}")]
     Semantic(String),
-    #[error("graph construction failed: {0}")]
-    Graph(#[from] crate::dfg::ValidateError),
+    Graph(crate::dfg::ValidateError),
+}
+
+impl std::fmt::Display for CError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CError::Lex(line, msg) => write!(f, "lex error at line {line}: {msg}"),
+            CError::Parse(line, msg) => write!(f, "parse error at line {line}: {msg}"),
+            CError::Semantic(msg) => write!(f, "semantic error: {msg}"),
+            CError::Graph(e) => write!(f, "graph construction failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CError::Graph(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::dfg::ValidateError> for CError {
+    fn from(e: crate::dfg::ValidateError) -> Self {
+        CError::Graph(e)
+    }
 }
 
 /// Compile mini-C source into a static dataflow graph.

@@ -23,6 +23,13 @@
 //! * [`vhdl`] — the VHDL backend the paper's assembler targeted.
 //! * [`estimate`] — structural FF/LUT/slice/Fmax models replacing the
 //!   Xilinx ISE synthesis flow we do not have.
+//! * [`fabric`] — the *physical* fabric layer: finite per-class operator
+//!   slot pools and bounded bus channels ([`fabric::FabricTopology`]), a
+//!   placer, a min-cut partitioner for oversized graphs, a sharded
+//!   executor (multi-fabric, cut arcs forwarded over inter-fabric
+//!   channels), and a time-multiplexing reconfiguration scheduler. The
+//!   CLI's `place` subcommand and the coordinator's fabric pool sit on
+//!   top of this.
 //! * [`baselines`] — resource/latency models of the two comparison systems
 //!   (C-to-Verilog and LALP).
 //! * [`bench_defs`] — the six paper benchmarks (C source, assembler source,
@@ -42,6 +49,7 @@ pub mod bench_defs;
 pub mod coordinator;
 pub mod dfg;
 pub mod estimate;
+pub mod fabric;
 pub mod frontend;
 pub mod report;
 pub mod runtime;
@@ -49,4 +57,5 @@ pub mod sim;
 pub mod vhdl;
 
 pub use dfg::{Arc, ArcId, Graph, Node, NodeId, Op};
+pub use fabric::FabricTopology;
 pub use sim::{FsmSim, SimConfig, SimOutcome, TokenSim};

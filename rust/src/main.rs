@@ -3,6 +3,7 @@
 //! ```text
 //! dataflow-accel run <bench> [--n 16] [--seed 7] [--engine token|fsm|dynamic]
 //! dataflow-accel compile <bench> [--emit asm|vhdl|c|resources]
+//! dataflow-accel place <bench> [--shards K] [--channels N] [--check] [--reconfig]
 //! dataflow-accel table1 [--fig8]
 //! dataflow-accel sweep [--bench all] [--requests 64] [--n 16] [--engine native|xla]
 //!                      [--workers 4] [--batch 8]
@@ -11,15 +12,20 @@
 
 use dataflow_accel::bench_defs::{self, BenchId};
 use dataflow_accel::coordinator::{Coordinator, Engine, Request};
+use dataflow_accel::fabric::{self, FabricTopology};
 use dataflow_accel::util::args::Args;
 use dataflow_accel::{estimate, frontend, report, sim, vhdl};
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1), &["fig8", "verbose"]);
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["fig8", "verbose", "check", "reconfig"],
+    );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
         "compile" => cmd_compile(&args),
+        "place" => cmd_place(&args),
         "table1" => {
             if args.has("fig8") {
                 print!("{}", report::fig8_csv());
@@ -31,7 +37,12 @@ fn main() {
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dataflow-accel <run|compile|table1|sweep|info> [options]\n\
+                "usage: dataflow-accel <run|compile|place|table1|sweep|info> [options]\n\
+                 place: map a benchmark onto the physical fabric model \n\
+                 \x20 --shards K    size the fabric to ~1/K of the graph (forces partitioning)\n\
+                 \x20 --channels N  override the bus-channel pool\n\
+                 \x20 --check       run sharded + whole-graph sims and compare outputs\n\
+                 \x20 --reconfig    time-multiplex the shards on one fabric, report swap cost\n\
                  benchmarks: {}",
                 BenchId::ALL.map(|b| b.slug()).join(" ")
             );
@@ -114,6 +125,56 @@ fn cmd_compile(args: &Args) {
     }
 }
 
+fn cmd_place(args: &Args) {
+    let bench = bench_arg(args);
+    let g = bench_defs::build(bench);
+    let mut topo = match args.get("shards") {
+        Some(k) => {
+            let k: usize = k.parse().unwrap_or_else(|_| panic!("--shards wants a number"));
+            FabricTopology::sized_for_shards(&g, k)
+        }
+        None => FabricTopology::paper(),
+    };
+    if let Some(ch) = args.get("channels") {
+        topo.channels = ch.parse().unwrap_or_else(|_| panic!("--channels wants a number"));
+    }
+    print!("{}", report::placement_table(&g, &topo));
+
+    if args.has("check") || args.has("reconfig") {
+        let n = args.get_usize("n", 8);
+        let seed = args.get_u64("seed", 7);
+        let wl = bench_defs::workload(bench, n, seed);
+        let cfg = wl.sim_config();
+        let whole = sim::run_token(&g, &cfg);
+        match fabric::partition(&g, &topo) {
+            Ok(plan) => {
+                if args.has("check") {
+                    let sharded = fabric::run_sharded(&plan, &cfg);
+                    let ok = sharded.outputs == whole.outputs;
+                    println!(
+                        "check: {} shard(s), outputs {} whole-graph TokenSim",
+                        plan.n_shards(),
+                        if ok { "MATCH" } else { "DIFFER from" }
+                    );
+                }
+                if args.has("reconfig") {
+                    let (out, stats) = fabric::run_reconfig(&plan, &topo, &cfg);
+                    let ok = out.outputs == whole.outputs;
+                    println!(
+                        "reconfig: {} context load(s), {} reconfig + {} active cycles, \
+                         outputs {}",
+                        stats.swaps,
+                        stats.reconfig_cycles,
+                        stats.active_cycles,
+                        if ok { "MATCH" } else { "DIFFER" }
+                    );
+                }
+            }
+            Err(e) => println!("check: unpartitionable ({e})"),
+        }
+    }
+}
+
 fn cmd_sweep(args: &Args) {
     let engine = match args.get_or("engine", "native").as_str() {
         "native" => Engine::Native,
@@ -152,6 +213,7 @@ fn cmd_sweep(args: &Args) {
     }
     let dt = t0.elapsed();
     println!("{}", c.metrics.summary());
+    println!("{}", c.pool.summary());
     println!(
         "sweep: {requests} requests ({ok} verified) in {:.2}s = {:.1} req/s",
         dt.as_secs_f64(),

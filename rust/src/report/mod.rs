@@ -8,7 +8,9 @@
 
 use crate::baselines::{ctv, kernel_spec, lalp};
 use crate::bench_defs::{build, BenchId};
-use crate::estimate::{estimate, estimate_trimmed, Resources};
+use crate::dfg::Graph;
+use crate::estimate::{estimate, estimate_shards, estimate_trimmed, Resources};
+use crate::fabric::{self, FabricTopology};
 use std::fmt::Write;
 
 /// The paper's published Table 1 numbers (FF, LUT, Slices, Fmax MHz).
@@ -174,6 +176,115 @@ pub fn fig8_csv() -> String {
     out
 }
 
+/// Placement / utilization report for one graph on one fabric topology.
+///
+/// A graph that fits prints the per-class slot utilization and channel
+/// occupancy of its placement. A graph that does not fit prints the
+/// placer's rejection, then the partition: one row per shard with node /
+/// arc / cut counts and the per-shard FF/LUT/slice estimate.
+pub fn placement_table(g: &Graph, topo: &FabricTopology) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Placement: `{}` ({} nodes, {} arcs) on fabric `{}` \
+         ({} slots, {} channels, reconfig {} cy)",
+        g.name,
+        g.n_nodes(),
+        g.n_arcs(),
+        topo.name,
+        topo.total_slots(),
+        topo.channels,
+        topo.reconfig_cycles
+    )
+    .unwrap();
+    match fabric::place(g, topo) {
+        Ok(p) => {
+            writeln!(out, "{:<10} {:>6} {:>6} {:>6}", "class", "used", "total", "util").unwrap();
+            for (class, used, total) in p.utilization(topo) {
+                let pct = if total > 0 {
+                    100.0 * used as f64 / total as f64
+                } else {
+                    0.0
+                };
+                writeln!(
+                    out,
+                    "{:<10} {:>6} {:>6} {:>5.0}%",
+                    class.name(),
+                    used,
+                    total,
+                    pct
+                )
+                .unwrap();
+            }
+            let (cu, ct) = p.channel_utilization(topo);
+            writeln!(
+                out,
+                "{:<10} {:>6} {:>6} {:>5.0}%",
+                "channels",
+                cu,
+                ct,
+                100.0 * cu as f64 / ct.max(1) as f64
+            )
+            .unwrap();
+        }
+        Err(e) => {
+            writeln!(out, "does not fit one instance: {e}").unwrap();
+            match fabric::partition(g, topo) {
+                Ok(plan) => {
+                    let (per, total) =
+                        estimate_shards(plan.shards.iter().map(|s| &s.graph));
+                    writeln!(
+                        out,
+                        "partitioned into {} shards, {} cut arcs",
+                        plan.n_shards(),
+                        plan.cuts.len()
+                    )
+                    .unwrap();
+                    writeln!(
+                        out,
+                        "{:<8} {:>6} {:>6} {:>6} {:>8} {:>8} {:>8}",
+                        "shard", "nodes", "arcs", "cuts", "FF", "LUT", "slices"
+                    )
+                    .unwrap();
+                    for (sh, r) in plan.shards.iter().zip(&per) {
+                        let cuts = plan
+                            .cuts
+                            .iter()
+                            .filter(|c| c.from == sh.index || c.to == sh.index)
+                            .count();
+                        writeln!(
+                            out,
+                            "{:<8} {:>6} {:>6} {:>6} {:>8} {:>8} {:>8}",
+                            sh.index,
+                            sh.graph.n_nodes(),
+                            sh.graph.n_arcs(),
+                            cuts,
+                            r.ff,
+                            r.lut,
+                            r.slices
+                        )
+                        .unwrap();
+                    }
+                    writeln!(
+                        out,
+                        "{:<8} {:>6} {:>6} {:>6} {:>8} {:>8} {:>8}",
+                        "total",
+                        g.n_nodes(),
+                        g.n_arcs(),
+                        plan.cuts.len(),
+                        total.ff,
+                        total.lut,
+                        total.slices
+                    )
+                    .unwrap();
+                }
+                Err(e) => writeln!(out, "unpartitionable on this fabric: {e}").unwrap(),
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,6 +313,21 @@ mod tests {
         assert_eq!(csv.matches("fmax_mhz,").count(), 6);
         // LALP pop_count cell is empty.
         assert!(csv.contains("ff,pop_count,") && csv.contains(",,"));
+    }
+
+    #[test]
+    fn placement_table_renders_fit_and_split() {
+        let g = build(BenchId::Max);
+        let topo = FabricTopology::paper();
+        let t = placement_table(&g, &topo);
+        assert!(t.contains("class"), "{t}");
+        assert!(t.contains("channels"), "{t}");
+
+        let half = FabricTopology::sized_for_shards(&g, 2);
+        let t2 = placement_table(&g, &half);
+        assert!(t2.contains("does not fit one instance"), "{t2}");
+        assert!(t2.contains("partitioned into"), "{t2}");
+        assert!(t2.contains("shard"), "{t2}");
     }
 
     #[test]

@@ -13,10 +13,16 @@
 //!
 //! Python never runs on this path; the Rust binary is self-contained once
 //! `artifacts/` exists.
-
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+//!
+//! The `xla` bindings crate (xla_extension) is not vendored in this build
+//! environment, so the PJRT-backed implementation is gated behind the
+//! off-by-default `xla` cargo feature. Without it [`FabricRuntime`] is a
+//! stub whose `load` always fails. Workers holding a runtime fall back
+//! to the native ALU engine per batch when a call fails, but explicitly
+//! requesting `Engine::Xla` is a *startup* error by design
+//! (`Coordinator::start` validates the artifact load up front), so
+//! `sweep --engine xla` reports the stub's message and exits rather than
+//! silently serving native results.
 
 /// One fabric tick's worth of dense operator state (see
 /// `python/compile/model.py::fabric_step`).
@@ -50,97 +56,154 @@ impl FabricBatch {
     }
 }
 
-/// A compiled fabric executable for one artifact shape.
-struct Exe {
-    exe: xla::PjRtLoadedExecutable,
-    batch: usize,
-    nodes: usize,
-}
+// The real PJRT path references the external `xla` crate, which is not
+// vendored here; fail the build with an instructive message instead of
+// E0433 if someone enables the feature without supplying it. Remove this
+// guard once an `xla` dependency is added to Cargo.toml.
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` cargo feature requires the external `xla` (xla_extension) bindings crate, \
+     which is not vendored in this offline build environment; add it to rust/Cargo.toml \
+     and delete this compile_error! before enabling the feature"
+);
 
-/// The artifact registry + PJRT client.
-pub struct FabricRuntime {
-    _client: xla::PjRtClient,
-    exes: BTreeMap<(usize, usize), Exe>,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::FabricBatch;
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
 
-impl FabricRuntime {
-    /// Load every artifact listed in `<dir>/manifest.txt`.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        let manifest = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        let mut exes = BTreeMap::new();
-        for line in text.lines() {
-            let mut parts = line.split_whitespace();
-            let (Some(b), Some(n), Some(file)) = (parts.next(), parts.next(), parts.next())
-            else {
-                bail!("malformed manifest line: `{line}`");
-            };
-            let batch: usize = b.parse()?;
-            let nodes: usize = n.parse()?;
-            let path: PathBuf = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
-            exes.insert((batch, nodes), Exe { exe, batch, nodes });
+    /// A compiled fabric executable for one artifact shape.
+    struct Exe {
+        exe: xla::PjRtLoadedExecutable,
+        batch: usize,
+        nodes: usize,
+    }
+
+    /// The artifact registry + PJRT client.
+    pub struct FabricRuntime {
+        _client: xla::PjRtClient,
+        exes: BTreeMap<(usize, usize), Exe>,
+    }
+
+    impl FabricRuntime {
+        /// Load every artifact listed in `<dir>/manifest.txt`.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref();
+            let manifest = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+            let mut exes = BTreeMap::new();
+            for line in text.lines() {
+                let mut parts = line.split_whitespace();
+                let (Some(b), Some(n), Some(file)) = (parts.next(), parts.next(), parts.next())
+                else {
+                    bail!("malformed manifest line: `{line}`");
+                };
+                let batch: usize = b.parse()?;
+                let nodes: usize = n.parse()?;
+                let path: PathBuf = dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+                exes.insert((batch, nodes), Exe { exe, batch, nodes });
+            }
+            if exes.is_empty() {
+                bail!("no artifacts in {manifest:?}");
+            }
+            Ok(FabricRuntime {
+                _client: client,
+                exes,
+            })
         }
-        if exes.is_empty() {
-            bail!("no artifacts in {manifest:?}");
+
+        /// Artifact shapes available, sorted.
+        pub fn shapes(&self) -> Vec<(usize, usize)> {
+            self.exes.keys().copied().collect()
         }
-        Ok(FabricRuntime {
-            _client: client,
-            exes,
-        })
-    }
 
-    /// Artifact shapes available, sorted.
-    pub fn shapes(&self) -> Vec<(usize, usize)> {
-        self.exes.keys().copied().collect()
-    }
+        /// Smallest artifact that fits `batch` instances of `nodes` nodes.
+        pub fn fit(&self, batch: usize, nodes: usize) -> Option<(usize, usize)> {
+            self.exes
+                .keys()
+                .copied()
+                .filter(|&(b, n)| b >= batch && n >= nodes)
+                .min_by_key(|&(b, n)| b * n)
+        }
 
-    /// Smallest artifact that fits `batch` instances of `nodes` nodes.
-    pub fn fit(&self, batch: usize, nodes: usize) -> Option<(usize, usize)> {
-        self.exes
-            .keys()
-            .copied()
-            .filter(|&(b, n)| b >= batch && n >= nodes)
-            .min_by_key(|&(b, n)| b * n)
-    }
-
-    /// Execute one fabric tick. The batch must exactly match an artifact
-    /// shape (use [`FabricRuntime::fit`] + [`FabricBatch::zeroed`] padding).
-    pub fn step(&self, fb: &FabricBatch) -> Result<Vec<i32>> {
-        let exe = self
-            .exes
-            .get(&(fb.batch, fb.nodes))
-            .ok_or_else(|| anyhow!("no artifact for shape {}x{}", fb.batch, fb.nodes))?;
-        let dims = [exe.batch as i64, exe.nodes as i64];
-        let op = xla::Literal::vec1(&fb.opcode);
-        let a = xla::Literal::vec1(&fb.a)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let b = xla::Literal::vec1(&fb.b)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let fire = xla::Literal::vec1(&fb.fire)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let result = exe
-            .exe
-            .execute::<xla::Literal>(&[op, a, b, fire])
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        // aot.py lowers with return_tuple=True → a 1-tuple.
-        let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
-        out.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))
+        /// Execute one fabric tick. The batch must exactly match an artifact
+        /// shape (use [`FabricRuntime::fit`] + [`FabricBatch::zeroed`] padding).
+        pub fn step(&self, fb: &FabricBatch) -> Result<Vec<i32>> {
+            let exe = self
+                .exes
+                .get(&(fb.batch, fb.nodes))
+                .ok_or_else(|| anyhow!("no artifact for shape {}x{}", fb.batch, fb.nodes))?;
+            let dims = [exe.batch as i64, exe.nodes as i64];
+            let op = xla::Literal::vec1(&fb.opcode);
+            let a = xla::Literal::vec1(&fb.a)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let b = xla::Literal::vec1(&fb.b)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let fire = xla::Literal::vec1(&fb.fire)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let result = exe
+                .exe
+                .execute::<xla::Literal>(&[op, a, b, fire])
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            // aot.py lowers with return_tuple=True → a 1-tuple.
+            let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+            out.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    use super::FabricBatch;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Stub runtime: the crate was built without the `xla` feature, so no
+    /// PJRT client exists. `load` always fails and callers fall back to
+    /// the native ALU engine.
+    pub struct FabricRuntime {
+        _unconstructable: std::convert::Infallible,
+    }
+
+    impl FabricRuntime {
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            bail!(
+                "PJRT fabric runtime unavailable: built without the `xla` feature \
+                 (artifact dir {:?} ignored)",
+                dir.as_ref()
+            );
+        }
+
+        pub fn shapes(&self) -> Vec<(usize, usize)> {
+            Vec::new()
+        }
+
+        pub fn fit(&self, _batch: usize, _nodes: usize) -> Option<(usize, usize)> {
+            None
+        }
+
+        pub fn step(&self, _fb: &FabricBatch) -> Result<Vec<i32>> {
+            bail!("PJRT fabric runtime unavailable: built without the `xla` feature");
+        }
+    }
+}
+
+pub use pjrt::FabricRuntime;
 
 #[cfg(test)]
 mod tests {

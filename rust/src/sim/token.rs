@@ -161,6 +161,44 @@ impl<'g> TokenSim<'g> {
         !self.injections_pending() && !self.tokens_in_flight()
     }
 
+    /// True while some `Const` node has not yet emitted its reset token —
+    /// enabled work that [`TokenSim::idle`] cannot see (a freshly loaded
+    /// context has no tokens in flight yet, but its consts will fire on
+    /// the first round). The reconfiguration scheduler uses this to avoid
+    /// retiring a context that never ran.
+    pub fn consts_pending(&self) -> bool {
+        self.g
+            .nodes
+            .iter()
+            .zip(&self.const_done)
+            .any(|(n, &done)| matches!(n.op, Op::Const(_)) && !done)
+    }
+
+    /// Append a token to the pending injection stream of input port
+    /// `port`. This is the sharded executor's forwarding hook: tokens
+    /// collected on a cut arc's output half are enqueued onto its input
+    /// half in the consuming shard. Returns `false` when the graph has no
+    /// input port with that label.
+    pub fn enqueue(&mut self, port: &str, v: Word) -> bool {
+        for (arc, stream) in self.pending.iter_mut() {
+            if self.g.arcs[arc.0 as usize].name == port {
+                stream.push_back(v);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Drain every token collected so far on output port `port` (arrival
+    /// order). The other half of the forwarding hook; the port's stream
+    /// is left empty. Unknown ports yield an empty vec.
+    pub fn take_stream(&mut self, port: &str) -> Vec<Word> {
+        self.collected
+            .get_mut(port)
+            .map(std::mem::take)
+            .unwrap_or_default()
+    }
+
     /// Finalize into an outcome (offload driver use).
     pub fn into_outcome(self, cycles: u64, quiescent: bool) -> SimOutcome {
         SimOutcome {

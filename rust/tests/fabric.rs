@@ -1,0 +1,297 @@
+//! Property tests for the physical fabric layer (`fabric` module):
+//!
+//! 1. **Partition soundness** — for every benchmark and shard pressure,
+//!    the union of all shards equals the original graph: every node in
+//!    exactly one shard, every arc in exactly one shard except cut arcs,
+//!    which appear in exactly their two home shards; every shard is a
+//!    structurally valid graph that places on the topology it was split
+//!    for.
+//! 2. **Sharded-execution equivalence** — on all six paper benchmarks
+//!    under random workloads, running the partition on multiple fabric
+//!    instances (and time-multiplexed on one instance) produces output
+//!    streams byte-identical to whole-graph `TokenSim`.
+//! 3. **Capacity rejection** — the placer rejects any graph whose
+//!    operator-class demand or arc count exceeds the topology with a
+//!    descriptive error naming the class and the shortfall.
+
+use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::dfg::validate;
+use dataflow_accel::fabric::{self, FabricTopology, PlaceError};
+use dataflow_accel::sim::run_token;
+use dataflow_accel::util::proptest::{check, PropCfg};
+use dataflow_accel::util::Rng;
+use std::collections::BTreeMap;
+
+/// Shard pressures exercised everywhere below: `sized_for_shards(g, 2)`
+/// never fits a whole benchmark graph (forcing a real split), 3 forces a
+/// finer one.
+const PRESSURES: [usize; 2] = [2, 3];
+
+#[test]
+fn partition_union_equals_original_graph() {
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        for k in PRESSURES {
+            let topo = FabricTopology::sized_for_shards(&g, k);
+            let plan = fabric::partition(&g, &topo)
+                .unwrap_or_else(|e| panic!("{} k={k}: {e}", b.slug()));
+
+            // Nodes: every original node in exactly one shard, same op.
+            let mut node_seen = vec![0usize; g.n_nodes()];
+            for sh in &plan.shards {
+                assert_eq!(
+                    sh.orig_nodes.len(),
+                    sh.graph.n_nodes(),
+                    "{} k={k} shard {}: node map length",
+                    b.slug(),
+                    sh.index
+                );
+                for (si, &orig) in sh.orig_nodes.iter().enumerate() {
+                    node_seen[orig.0 as usize] += 1;
+                    assert_eq!(
+                        sh.graph.nodes[si].op,
+                        g.node(orig).op,
+                        "{} k={k} shard {}: op preserved",
+                        b.slug(),
+                        sh.index
+                    );
+                }
+            }
+            assert!(
+                node_seen.iter().all(|&c| c == 1),
+                "{} k={k}: every node in exactly one shard ({node_seen:?})",
+                b.slug()
+            );
+
+            // Arcs: cut arcs live in exactly their two home shards, all
+            // others in exactly one; nothing missing, nothing duplicated.
+            let mut arc_seen: BTreeMap<u32, usize> = BTreeMap::new();
+            for sh in &plan.shards {
+                assert_eq!(
+                    sh.orig_arcs.len(),
+                    sh.graph.n_arcs(),
+                    "{} k={k} shard {}: arc map length",
+                    b.slug(),
+                    sh.index
+                );
+                for &orig in &sh.orig_arcs {
+                    *arc_seen.entry(orig.0).or_insert(0) += 1;
+                }
+            }
+            let cut_ids: Vec<u32> = plan.cuts.iter().map(|c| c.arc.0).collect();
+            for a in &g.arcs {
+                let want = if cut_ids.contains(&a.id.0) { 2 } else { 1 };
+                assert_eq!(
+                    arc_seen.get(&a.id.0).copied().unwrap_or(0),
+                    want,
+                    "{} k={k}: arc `{}` copies",
+                    b.slug(),
+                    a.name
+                );
+            }
+
+            // Every shard is a valid graph and places on the topology.
+            for sh in &plan.shards {
+                validate(&sh.graph)
+                    .unwrap_or_else(|e| panic!("{} k={k} shard {}: {e:?}", b.slug(), sh.index));
+                fabric::place(&sh.graph, &topo)
+                    .unwrap_or_else(|e| panic!("{} k={k} shard {}: {e}", b.slug(), sh.index));
+            }
+
+            // Cut bookkeeping is internally consistent.
+            for cut in &plan.cuts {
+                assert_ne!(cut.from, cut.to, "{} k={k}: self-cut", b.slug());
+                assert!(cut.from < plan.n_shards() && cut.to < plan.n_shards());
+                assert_eq!(g.arc(cut.arc).name, cut.name, "{} k={k}", b.slug());
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_execution_matches_whole_graph_on_all_benchmarks() {
+    let mut rng = Rng::new(0xFAB51C);
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        for k in PRESSURES {
+            let topo = FabricTopology::sized_for_shards(&g, k);
+            let plan = fabric::partition(&g, &topo)
+                .unwrap_or_else(|e| panic!("{} k={k}: {e}", b.slug()));
+            if k == 2 {
+                assert!(
+                    plan.n_shards() >= 2,
+                    "{}: half-size fabric must force a split",
+                    b.slug()
+                );
+            }
+            for _ in 0..3 {
+                let n = 1 + rng.below(8);
+                let seed = rng.next_u64();
+                let wl = bench_defs::workload(b, n, seed);
+                let cfg = wl.sim_config();
+                let whole = run_token(&g, &cfg);
+                let sharded = fabric::run_sharded(&plan, &cfg);
+                assert_eq!(
+                    sharded.outputs,
+                    whole.outputs,
+                    "{} k={k} n={n} seed={seed}: sharded != whole-graph",
+                    b.slug()
+                );
+                // The workload's software reference agrees too.
+                for (port, want) in &wl.expect {
+                    assert_eq!(
+                        sharded.stream(port),
+                        want.as_slice(),
+                        "{} k={k} n={n} seed={seed}: port `{port}`",
+                        b.slug()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn reconfig_execution_matches_whole_graph_on_all_benchmarks() {
+    let mut rng = Rng::new(0x5EC0F16);
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan =
+            fabric::partition(&g, &topo).unwrap_or_else(|e| panic!("{}: {e}", b.slug()));
+        let n = 1 + rng.below(6);
+        let seed = rng.next_u64();
+        let wl = bench_defs::workload(b, n, seed);
+        let cfg = wl.sim_config();
+        let whole = run_token(&g, &cfg);
+        let (out, stats) = fabric::run_reconfig(&plan, &topo, &cfg);
+        assert_eq!(
+            out.outputs,
+            whole.outputs,
+            "{} n={n} seed={seed}: reconfig != whole-graph",
+            b.slug()
+        );
+        assert!(stats.swaps >= 1, "{}", b.slug());
+        assert_eq!(
+            stats.reconfig_cycles,
+            stats.swaps * topo.reconfig_cycles,
+            "{}",
+            b.slug()
+        );
+    }
+}
+
+/// The same equivalence as a seeded property: a random benchmark, shard
+/// pressure and workload every case, replayable from the reported seed.
+#[test]
+fn prop_sharded_equivalence_random() {
+    check(
+        "sharded execution == whole-graph TokenSim",
+        PropCfg {
+            cases: 24,
+            base_seed: 0xD0FAB,
+        },
+        |r: &mut Rng| {
+            let b = BenchId::ALL[r.below(6)];
+            let k = 2 + r.below(3);
+            let n = 1 + r.below(8);
+            let seed = r.next_u64();
+            (b, k, n, seed)
+        },
+        |&(b, k, n, seed)| {
+            let g = bench_defs::build(b);
+            let topo = FabricTopology::sized_for_shards(&g, k);
+            let plan = fabric::partition(&g, &topo)
+                .map_err(|e| format!("{}: unpartitionable: {e}", b.slug()))?;
+            let wl = bench_defs::workload(b, n, seed);
+            let cfg = wl.sim_config();
+            let whole = run_token(&g, &cfg);
+            let sharded = fabric::run_sharded(&plan, &cfg);
+            if sharded.outputs != whole.outputs {
+                return Err(format!(
+                    "{} k={k}: {:?} != {:?}",
+                    b.slug(),
+                    sharded.outputs,
+                    whole.outputs
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn placer_rejects_over_capacity_demand_with_descriptive_error() {
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let full = FabricTopology::paper();
+        // Starve each used class in turn: the placer must name the class
+        // and both counts in its error.
+        for &class in FabricTopology::demand(&g).keys() {
+            let mut topo = full.clone();
+            topo.slots.remove(&class);
+            let err = match fabric::place(&g, &topo) {
+                Err(e) => e,
+                Ok(_) => panic!("{}: missing {} slots must reject", b.slug(), class.name()),
+            };
+            match &err {
+                PlaceError::InsufficientSlots {
+                    class: c,
+                    need,
+                    have,
+                } => {
+                    assert_eq!(*c, class, "{}", b.slug());
+                    assert!(*need > 0 && *have == 0, "{}", b.slug());
+                }
+                other => panic!("{}: wrong error {other:?}", b.slug()),
+            }
+            let msg = err.to_string();
+            assert!(
+                msg.contains(class.name()) && msg.contains("operator slots"),
+                "{}: undescriptive error `{msg}`",
+                b.slug()
+            );
+        }
+        // Starve the channel pool.
+        let mut topo = full.clone();
+        topo.channels = 0;
+        let err = match fabric::place(&g, &topo) {
+            Err(e) => e,
+            Ok(_) => panic!("{}: no channels must reject", b.slug()),
+        };
+        assert!(
+            matches!(err, PlaceError::InsufficientChannels { have: 0, .. }),
+            "{}: {err:?}",
+            b.slug()
+        );
+        assert!(err.to_string().contains("bus channels"), "{}", b.slug());
+    }
+}
+
+#[test]
+fn paper_topology_places_every_benchmark_with_headroom() {
+    let topo = FabricTopology::paper();
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let p = fabric::place(&g, &topo).unwrap_or_else(|e| panic!("{}: {e}", b.slug()));
+        // Placement covers the whole graph.
+        assert_eq!(p.slots.len(), g.n_nodes(), "{}", b.slug());
+        assert_eq!(p.channels.len(), g.n_arcs(), "{}", b.slug());
+        // Utilization never exceeds provisioning.
+        for (class, used, total) in p.utilization(&topo) {
+            assert!(
+                used <= total,
+                "{}: class {} over-subscribed ({used}/{total})",
+                b.slug(),
+                class.name()
+            );
+        }
+        let (cu, ct) = p.channel_utilization(&topo);
+        assert!(cu <= ct, "{}", b.slug());
+    }
+    // Slot entries come straight from benchmark demand plus headroom, so
+    // none may be zero.
+    for (class, &slots) in &topo.slots {
+        assert!(slots > 0, "empty slot entry for {}", class.name());
+    }
+}

@@ -1,0 +1,194 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network and no vendored crates.io
+//! registry, so this is the minimal API-compatible subset `dataflow-accel`
+//! uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros, and
+//! the [`Context`] extension trait. Like the real crate, [`Error`] does
+//! *not* implement `std::error::Error` itself — that is what makes the
+//! blanket `From<E: std::error::Error>` conversion (and therefore the `?`
+//! operator on arbitrary error types) possible on stable Rust.
+
+use std::fmt;
+
+/// A type-erased error: a display message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (what `anyhow!` expands
+    /// to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap a concrete error value, keeping it as the source.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Prepend a context line, `anyhow`-style (`context: cause`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+            source: self.source,
+        }
+    }
+
+    /// The root cause, when the error wraps a concrete source.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source
+            .as_deref()
+            .map(|e| e as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error side of a `Result` (or turn an `Option`'s
+/// `None` into an error).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (inline captures work
+/// because the literal token reaches `format!` unchanged).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse()?; // From<ParseIntError> via the blanket impl
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = e.map_err(|e| e.context("outer"));
+        assert_eq!(e.unwrap_err().to_string(), "outer: inner 7");
+    }
+
+    #[test]
+    fn with_context_on_result() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let msg = r.with_context(|| format!("reading {}", "x")).unwrap_err();
+        assert!(msg.to_string().starts_with("reading x: "));
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> Result<i32> {
+            if flag {
+                bail!("flagged {flag}");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged true");
+    }
+
+    #[test]
+    fn source_is_kept() {
+        let e = Error::new(std::io::Error::new(std::io::ErrorKind::Other, "root"));
+        assert!(e.source().is_some());
+        assert!(Error::msg("plain").source().is_none());
+    }
+}
