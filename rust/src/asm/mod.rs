@@ -94,6 +94,51 @@ mod tests {
     }
 
     #[test]
+    fn rejects_bad_immediate() {
+        assert!(matches!(
+            parse("t", "const #x2, s1; add s1, a, z;"),
+            Err(AsmError::BadImmediate { .. })
+        ));
+        assert!(matches!(
+            parse("t", "fifo #99999999, a, z;"),
+            Err(AsmError::BadImmediate { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_double_consumer() {
+        assert!(matches!(
+            parse("t", "not a, s1; not a, s2;"),
+            Err(AsmError::DoubleConsumer { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_missing_semicolon() {
+        let err = parse("t", "add a, b, z;\nnot z2, q").unwrap_err();
+        match err {
+            AsmError::MissingSemicolon { line } => assert_eq!(line, 2),
+            other => panic!("wrong error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_empty_numbered_statement() {
+        assert!(matches!(
+            parse("t", "1. ;\n2. add a, b, z;"),
+            Err(AsmError::Empty { .. })
+        ));
+    }
+
+    #[test]
+    fn error_messages_carry_line_numbers() {
+        let err = parse("t", "add a, b, z;\nfrobnicate c, d, e;").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        let err = parse("t", "copy a, s1, s2;\ncopy b, s1, s3;").unwrap_err();
+        assert!(err.to_string().contains("s1"), "{err}");
+    }
+
+    #[test]
     fn print_parse_fixpoint() {
         let mut b = GraphBuilder::new("fix");
         let a = b.input_port("a");

@@ -138,7 +138,9 @@ pub fn parse(name: &str, src: &str) -> Result<Graph, AsmError> {
         .collect::<Vec<_>>()
         .join("\n");
     let mut offset = 0usize;
-    for raw_stmt in clean.split(';') {
+    let chunks: Vec<&str> = clean.split(';').collect();
+    let n_chunks = chunks.len();
+    for (ci, raw_stmt) in chunks.into_iter().enumerate() {
         let lead_ws = raw_stmt.len() - raw_stmt.trim_start().len();
         let stmt_start = offset + lead_ws;
         let stmt_line = clean[..stmt_start.min(clean.len())]
@@ -151,11 +153,22 @@ pub fn parse(name: &str, src: &str) -> Result<Graph, AsmError> {
         if stmt.is_empty() {
             continue;
         }
+        // Everything after the final `;` must be whitespace — a trailing
+        // statement with no terminator is an error, not a statement.
+        if ci == n_chunks - 1 {
+            return Err(AsmError::MissingSemicolon { line: stmt_line });
+        }
         // Optional leading `N.` line number.
         let stmt = match stmt.split_once('.') {
-            Some((n, rest)) if n.trim().chars().all(|c| c.is_ascii_digit()) => rest.trim(),
+            Some((n, rest)) if !n.trim().is_empty() && n.trim().chars().all(|c| c.is_ascii_digit()) => {
+                rest.trim()
+            }
             _ => stmt,
         };
+        if stmt.is_empty() {
+            // A numbered statement with no body, e.g. `3. ;`.
+            return Err(AsmError::Empty { line: stmt_line });
+        }
         let (mnem, args_str) = match stmt.split_once(char::is_whitespace) {
             Some((m, a)) => (m.trim(), a.trim()),
             None => (stmt, ""),
@@ -183,10 +196,20 @@ pub fn parse(name: &str, src: &str) -> Result<Graph, AsmError> {
                     line: stmt_line,
                     imm: imm_str.clone(),
                 })?;
+            let bad = AsmError::BadImmediate {
+                line: stmt_line,
+                imm: imm_str.clone(),
+            };
             if mnem == "const" {
-                Op::Const(imm as i16)
+                // Must fit the 16-bit data bus.
+                Op::Const(i16::try_from(imm).map_err(|_| bad)?)
             } else {
-                Op::Fifo(imm as u16)
+                // A FIFO must hold at least one token and no more than
+                // the physical slot provisioning allows.
+                match u16::try_from(imm) {
+                    Ok(k) if (1..=crate::dfg::MAX_FIFO_DEPTH).contains(&k) => Op::Fifo(k),
+                    _ => return Err(bad),
+                }
             }
         } else {
             Op::from_mnemonic(mnem).ok_or(AsmError::UnknownOp {

@@ -20,6 +20,7 @@ pub mod dotprod;
 pub mod fib;
 pub mod max;
 pub mod popcount;
+pub mod saxpy;
 pub mod vecsum;
 
 use crate::dfg::{Graph, Word};
@@ -208,6 +209,15 @@ pub fn workload(bench: BenchId, n: usize, seed: u64) -> Workload {
             }
         }
     }
+}
+
+/// `count` successive independent workloads — the *waves* the streaming
+/// tier admits one after another — deterministically derived from
+/// `seed` (wave `i` uses `seed + i`).
+pub fn wave_workloads(bench: BenchId, count: usize, n: usize, seed: u64) -> Vec<Workload> {
+    (0..count)
+        .map(|i| workload(bench, n, seed.wrapping_add(i as u64)))
+        .collect()
 }
 
 /// Run a workload on the fast engine and check expectations.

@@ -20,5 +20,5 @@
 pub mod batch;
 pub mod router;
 
-pub use batch::{run_batch_native, run_batch_xla, BatchEngine};
-pub use router::{Coordinator, Engine, Metrics, Request, Response};
+pub use batch::{run_batch_native, run_batch_streamed, run_batch_xla, BatchEngine};
+pub use router::{BatchMode, Coordinator, Engine, Metrics, Request, Response};

@@ -29,6 +29,17 @@ pub enum Engine {
     Xla,
 }
 
+/// How a worker executes a batch on its fabric route.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// One run-to-completion execution per request (lockstep across the
+    /// batch on the placed path).
+    RunToCompletion,
+    /// Pipeline the whole batch as successive waves through one
+    /// resident fabric/session (see [`crate::sim::StreamSession`]).
+    Streamed,
+}
+
 /// One simulation request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -61,24 +72,31 @@ pub struct Metrics {
     pub placed: AtomicU64,
     /// Batches whose graph exceeded one instance and ran sharded.
     pub sharded: AtomicU64,
+    /// Batches whose graph exceeded one instance on a single-instance
+    /// pool and ran time-multiplexed (context swapping).
+    pub reconfig: AtomicU64,
     /// Batches whose graph fit no partition of the pool's topology and
     /// fell back to the infinite-fabric simulation.
     pub fallback: AtomicU64,
+    /// Waves pipelined through resident sessions (streamed mode only).
+    pub streamed_waves: AtomicU64,
 }
 
 impl Metrics {
     pub fn summary(&self) -> String {
         let completed = self.completed.load(Ordering::Relaxed).max(1);
         format!(
-            "requests {}/{} verified {} | batches {} (placed {}, sharded {}, fallback {}) | \
-             fabric cycles {} | mean latency {:.1} ms",
+            "requests {}/{} verified {} | batches {} (placed {}, sharded {}, reconfig {}, \
+             fallback {}) | streamed waves {} | fabric cycles {} | mean latency {:.1} ms",
             self.completed.load(Ordering::Relaxed),
             self.submitted.load(Ordering::Relaxed),
             self.verified.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.placed.load(Ordering::Relaxed),
             self.sharded.load(Ordering::Relaxed),
+            self.reconfig.load(Ordering::Relaxed),
             self.fallback.load(Ordering::Relaxed),
+            self.streamed_waves.load(Ordering::Relaxed),
             self.fabric_cycles.load(Ordering::Relaxed),
             self.total_latency_us.load(Ordering::Relaxed) as f64 / completed as f64 / 1000.0,
         )
@@ -129,6 +147,48 @@ impl Coordinator {
         max_batch: usize,
         topo: FabricTopology,
     ) -> anyhow::Result<Self> {
+        Self::start_inner(
+            workers,
+            engine,
+            artifact_dir,
+            max_batch,
+            topo,
+            BatchMode::RunToCompletion,
+        )
+    }
+
+    /// Start a streaming coordinator: workers pipeline each batch as
+    /// successive waves through one resident session/rack instead of
+    /// running each request to completion (native ALU only — the
+    /// streaming path keeps all state in-process).
+    pub fn start_streamed(workers: usize, max_batch: usize) -> anyhow::Result<Self> {
+        Self::start_streamed_with_fabric(workers, max_batch, FabricTopology::paper())
+    }
+
+    /// Streaming coordinator over an explicit fabric topology.
+    pub fn start_streamed_with_fabric(
+        workers: usize,
+        max_batch: usize,
+        topo: FabricTopology,
+    ) -> anyhow::Result<Self> {
+        Self::start_inner(
+            workers,
+            Engine::Native,
+            None,
+            max_batch,
+            topo,
+            BatchMode::Streamed,
+        )
+    }
+
+    fn start_inner(
+        workers: usize,
+        engine: Engine,
+        artifact_dir: Option<&str>,
+        max_batch: usize,
+        topo: FabricTopology,
+        mode: BatchMode,
+    ) -> anyhow::Result<Self> {
         let metrics = Arc::new(Metrics::default());
         let pool = Arc::new(FabricPool::new(topo, workers.max(1)));
         // PJRT handles are not Send: each XLA worker creates its own
@@ -165,7 +225,7 @@ impl Coordinator {
                         rx.recv()
                     };
                     let Ok(jobs) = jobs else { break };
-                    run_jobs(jobs, &metrics, runtime.as_ref(), &pool, &mut routes);
+                    run_jobs(jobs, &metrics, runtime.as_ref(), &pool, &mut routes, mode);
                 }
             }));
         }
@@ -259,13 +319,18 @@ impl Drop for Coordinator {
     }
 }
 
-/// How a benchmark graph maps onto the pool's fabric topology. Computed
+/// How a benchmark graph maps onto the pool's fabric topology — the
+/// fallback lattice: placed → sharded → reconfig → fallback. Computed
 /// once per (worker, benchmark) and reused for every subsequent batch.
 enum FabricRoute {
     /// Fits one instance whole: run on the (batched) engines.
     Placed,
-    /// Exceeds one instance: serve through the sharded executor.
+    /// Exceeds one instance and the pool can host one instance per
+    /// shard: serve through the sharded executor.
     Sharded(fabric::PartitionPlan),
+    /// Exceeds one instance but the pool has a single instance: serve
+    /// time-multiplexed (context swapping) on that one instance.
+    Reconfig(fabric::PartitionPlan),
     /// Fits no partition of this topology: serve on the infinite-fabric
     /// simulation rather than failing the batch.
     Fallback,
@@ -277,6 +342,7 @@ fn run_jobs(
     runtime: Option<&FabricRuntime>,
     pool: &FabricPool,
     routes: &mut BTreeMap<BenchId, FabricRoute>,
+    mode: BatchMode,
 ) {
     if jobs.is_empty() {
         return;
@@ -292,14 +358,18 @@ fn run_jobs(
 
     // Spatial sharding: a graph that places whole occupies one fabric
     // instance; one that exceeds a single instance is partitioned and
-    // occupies one instance per shard, cut arcs riding the inter-fabric
+    // occupies one instance per shard (or time-multiplexes one instance
+    // when the pool has no spare), cut arcs riding the inter-fabric
     // channels.
     let route = routes.entry(bench).or_insert_with(|| {
         if pool.topology().fits(&g) {
             FabricRoute::Placed
         } else {
             match fabric::partition(&g, pool.topology()) {
-                Ok(plan) => FabricRoute::Sharded(plan),
+                // Spatial sharding needs one instance per shard; a pool
+                // too small for that time-multiplexes one instance.
+                Ok(plan) if pool.size() >= plan.n_shards() => FabricRoute::Sharded(plan),
+                Ok(plan) => FabricRoute::Reconfig(plan),
                 Err(e) => {
                     eprintln!(
                         "fabric: `{}` is unpartitionable on `{}` ({e}); \
@@ -312,14 +382,28 @@ fn run_jobs(
             }
         }
     });
+    let streamed = mode == BatchMode::Streamed;
+    if streamed {
+        metrics
+            .streamed_waves
+            .fetch_add(cfgs.len() as u64, Ordering::Relaxed);
+    }
+    let max_wave_cycles = cfgs.iter().map(|c| c.max_cycles).max().unwrap();
+    let waves = || -> Vec<crate::sim::WaveInput> {
+        cfgs.iter().map(|c| c.inject.clone()).collect()
+    };
     let outcomes = match route {
         FabricRoute::Placed => {
             metrics.placed.fetch_add(1, Ordering::Relaxed);
             pool.route();
-            match runtime {
-                Some(rt) => run_batch(&g, &cfgs, &BatchEngine::Xla(rt))
-                    .unwrap_or_else(|_| super::batch::run_batch_native(&g, &cfgs)),
-                None => super::batch::run_batch_native(&g, &cfgs),
+            if streamed {
+                super::batch::run_batch_streamed(&g, &cfgs)
+            } else {
+                match runtime {
+                    Some(rt) => run_batch(&g, &cfgs, &BatchEngine::Xla(rt))
+                        .unwrap_or_else(|_| super::batch::run_batch_native(&g, &cfgs)),
+                    None => super::batch::run_batch_native(&g, &cfgs),
+                }
             }
         }
         FabricRoute::Sharded(plan) => {
@@ -328,11 +412,30 @@ fn run_jobs(
             for _ in 0..plan.n_shards() {
                 pool.route();
             }
-            cfgs.iter().map(|c| fabric::run_sharded(plan, c)).collect()
+            if streamed {
+                fabric::run_sharded_waves(plan, &waves(), max_wave_cycles)
+            } else {
+                cfgs.iter().map(|c| fabric::run_sharded(plan, c)).collect()
+            }
+        }
+        FabricRoute::Reconfig(plan) => {
+            metrics.reconfig.fetch_add(1, Ordering::Relaxed);
+            pool.route();
+            if streamed {
+                fabric::run_reconfig_waves(plan, pool.topology(), &waves(), max_wave_cycles).0
+            } else {
+                cfgs.iter()
+                    .map(|c| fabric::run_reconfig(plan, pool.topology(), c).0)
+                    .collect()
+            }
         }
         FabricRoute::Fallback => {
             metrics.fallback.fetch_add(1, Ordering::Relaxed);
-            super::batch::run_batch_native(&g, &cfgs)
+            if streamed {
+                super::batch::run_batch_streamed(&g, &cfgs)
+            } else {
+                super::batch::run_batch_native(&g, &cfgs)
+            }
         }
     };
 
@@ -421,10 +524,14 @@ mod tests {
     fn tiny_fabric_serves_via_sharded_executor() {
         // A half-size fabric fits none of the benchmarks whole, so every
         // batch must take the partition + sharded-execution path — and
-        // still verify against the software references.
+        // still verify against the software references. The pool must
+        // hold one instance per shard, so give it as many workers as the
+        // partition produces shards.
         let g = crate::bench_defs::build(BenchId::DotProd);
         let topo = FabricTopology::sized_for_shards(&g, 2);
-        let c = Coordinator::start_with_fabric(2, Engine::Native, None, 4, topo).unwrap();
+        let plan = crate::fabric::partition(&g, &topo).unwrap();
+        let workers = plan.n_shards().max(2);
+        let c = Coordinator::start_with_fabric(workers, Engine::Native, None, 4, topo).unwrap();
         let rxs: Vec<_> = (0..6)
             .map(|i| {
                 c.submit(Request {
@@ -440,7 +547,114 @@ mod tests {
         }
         assert!(c.metrics.sharded.load(Ordering::Relaxed) >= 1);
         assert_eq!(c.metrics.placed.load(Ordering::Relaxed), 0);
-        assert!(c.pool.summary().contains("2 instance(s)"));
+        assert!(c
+            .pool
+            .summary()
+            .contains(&format!("{workers} instance(s)")));
+        c.shutdown();
+    }
+
+    #[test]
+    fn single_instance_pool_takes_reconfig_route() {
+        // One worker = one fabric instance; an oversized graph cannot
+        // shard spatially, so it must time-multiplex — and still verify.
+        let g = crate::bench_defs::build(BenchId::Max);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let c = Coordinator::start_with_fabric(1, Engine::Native, None, 4, topo).unwrap();
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                c.submit(Request {
+                    bench: BenchId::Max,
+                    n: 3 + i,
+                    seed: i as u64,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert!(resp.verified, "{:?} failed on reconfig path", resp.request);
+        }
+        assert!(c.metrics.reconfig.load(Ordering::Relaxed) >= 1);
+        assert_eq!(c.metrics.sharded.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.placed.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.fallback.load(Ordering::Relaxed), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unpartitionable_topology_takes_fallback_route() {
+        // A channel pool smaller than any node's arc degree defeats the
+        // partitioner outright (placement rejection), so the router must
+        // fall back to the infinite-fabric engine — and still verify.
+        let topo = FabricTopology::new(
+            "undersized",
+            FabricTopology::paper().slots,
+            1, // below every operator's arc degree
+            64,
+        );
+        let c = Coordinator::start_with_fabric(2, Engine::Native, None, 4, topo).unwrap();
+        let rxs: Vec<_> = (0..3)
+            .map(|i| {
+                c.submit(Request {
+                    bench: BenchId::Fibonacci,
+                    n: 5 + i,
+                    seed: i as u64,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert!(resp.verified, "{:?} failed on fallback path", resp.request);
+        }
+        assert!(c.metrics.fallback.load(Ordering::Relaxed) >= 1);
+        assert_eq!(c.metrics.placed.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.sharded.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.reconfig.load(Ordering::Relaxed), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn streamed_coordinator_serves_and_verifies() {
+        let c = Coordinator::start_streamed(2, 8).unwrap();
+        let mut rxs = Vec::new();
+        for (i, bench) in BenchId::ALL.iter().cycle().take(12).enumerate() {
+            rxs.push(c.submit(Request {
+                bench: *bench,
+                n: 3 + i % 4,
+                seed: i as u64,
+            }));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert!(resp.verified, "{:?} failed streamed", resp.request);
+        }
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 12);
+        assert_eq!(c.metrics.streamed_waves.load(Ordering::Relaxed), 12);
+        assert!(c.metrics.summary().contains("streamed waves 12"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn streamed_sharded_route_verifies() {
+        let g = crate::bench_defs::build(BenchId::VectorSum);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let workers = crate::fabric::partition(&g, &topo).unwrap().n_shards().max(2);
+        let c = Coordinator::start_streamed_with_fabric(workers, 4, topo).unwrap();
+        let rxs: Vec<_> = (0..5)
+            .map(|i| {
+                c.submit(Request {
+                    bench: BenchId::VectorSum,
+                    n: 3 + i % 3,
+                    seed: i as u64,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert!(resp.verified, "{:?} failed streamed+sharded", resp.request);
+        }
+        assert!(c.metrics.sharded.load(Ordering::Relaxed) >= 1);
+        assert!(c.metrics.streamed_waves.load(Ordering::Relaxed) >= 5);
         c.shutdown();
     }
 

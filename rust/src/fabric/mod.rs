@@ -34,8 +34,8 @@ pub mod topology;
 
 pub use partition::{partition, CutArc, PartitionPlan, Shard};
 pub use place::{place, PlaceError, Placement};
-pub use reconfig::{run_reconfig, ReconfigStats};
-pub use shard::run_sharded;
+pub use reconfig::{run_reconfig, run_reconfig_waves, ReconfigStats};
+pub use shard::{run_sharded, run_sharded_waves};
 pub use topology::FabricTopology;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};

@@ -30,25 +30,19 @@ pub struct ReconfigStats {
     pub active_cycles: u64,
 }
 
-/// Run every shard of `plan` on ONE fabric by context swapping. The
-/// returned outcome's `cycles` includes the reconfiguration charge.
-pub fn run_reconfig(
+/// Drive the round-robin context scheduler until every context is out
+/// of work or `cycle_budget` active cycles have been spent. `active`
+/// and `swaps` persist across calls so a resident rack keeps its loaded
+/// context between waves (no gratuitous reload at a wave boundary).
+/// Returns the active cycles consumed by this call.
+fn drive_contexts(
+    sims: &mut [TokenSim],
     plan: &PartitionPlan,
-    topo: &FabricTopology,
-    cfg: &SimConfig,
-) -> (SimOutcome, ReconfigStats) {
-    let cut_names = plan.cut_names();
-    let shard_cfgs = shard_configs(plan, cfg);
-    let mut sims: Vec<TokenSim> = plan
-        .shards
-        .iter()
-        .zip(&shard_cfgs)
-        .map(|(sh, c)| TokenSim::new(&sh.graph, c))
-        .collect();
+    cycle_budget: u64,
+    active: &mut usize,
+    swaps: &mut u64,
+) -> u64 {
     let n = sims.len();
-
-    let mut active = 0usize;
-    let mut swaps = 1u64; // the initial context load
     let mut active_cycles = 0u64;
     let mut stalled_rotation = 0usize;
 
@@ -56,8 +50,8 @@ pub fn run_reconfig(
         // Run the active context until it stops firing; the final zero-
         // firing step also drains its output ports.
         let mut shard_fired = 0u64;
-        while active_cycles < cfg.max_cycles {
-            let f = sims[active].step();
+        while active_cycles < cycle_budget {
+            let f = sims[*active].step();
             active_cycles += 1;
             shard_fired += f;
             if f == 0 {
@@ -66,7 +60,7 @@ pub fn run_reconfig(
         }
         // Flush this context's cut outputs into the inter-context buffers.
         for cut in &plan.cuts {
-            if cut.from != active {
+            if cut.from != *active {
                 continue;
             }
             for v in sims[cut.from].take_stream(&cut.name) {
@@ -82,7 +76,7 @@ pub fn run_reconfig(
         // A context has work when it is non-idle OR still holds unfired
         // const reset tokens (idle() cannot see those).
         let has_work = |s: &TokenSim| !s.idle() || s.consts_pending();
-        if active_cycles >= cfg.max_cycles
+        if active_cycles >= cycle_budget
             || stalled_rotation >= n
             || !sims.iter().any(has_work)
         {
@@ -90,18 +84,40 @@ pub fn run_reconfig(
         }
         // Next context with work, round-robin.
         match (1..=n)
-            .map(|d| (active + d) % n)
+            .map(|d| (*active + d) % n)
             .find(|&i| has_work(&sims[i]))
         {
             Some(i) => {
-                if i != active {
-                    swaps += 1;
-                    active = i;
+                if i != *active {
+                    *swaps += 1;
+                    *active = i;
                 }
             }
             None => break,
         }
     }
+    active_cycles
+}
+
+/// Run every shard of `plan` on ONE fabric by context swapping. The
+/// returned outcome's `cycles` includes the reconfiguration charge.
+pub fn run_reconfig(
+    plan: &PartitionPlan,
+    topo: &FabricTopology,
+    cfg: &SimConfig,
+) -> (SimOutcome, ReconfigStats) {
+    let cut_names = plan.cut_names();
+    let shard_cfgs = shard_configs(plan, cfg);
+    let mut sims: Vec<TokenSim> = plan
+        .shards
+        .iter()
+        .zip(&shard_cfgs)
+        .map(|(sh, c)| TokenSim::new(&sh.graph, c))
+        .collect();
+
+    let mut active = 0usize;
+    let mut swaps = 1u64; // the initial context load
+    let active_cycles = drive_contexts(&mut sims, plan, cfg.max_cycles, &mut active, &mut swaps);
 
     let quiescent = sims.iter().all(|s| s.idle() && !s.consts_pending());
     let stats = ReconfigStats {
@@ -112,6 +128,62 @@ pub fn run_reconfig(
     let total_cycles = active_cycles + stats.reconfig_cycles;
     let outcome = merge_outcomes(sims, &cut_names, total_cycles, quiescent);
     (outcome, stats)
+}
+
+/// Streamed injection for the time-multiplexed executor: run every wave
+/// of `waves` through ONE resident context rack, re-arming const reset
+/// tokens and purging residue at wave boundaries. The rack keeps its
+/// currently loaded context across the boundary, so a wave whose first
+/// enabled shard is already resident costs no swap. Returns one outcome
+/// per wave plus the cumulative swap statistics; each outcome's
+/// `cycles` includes its share of the reconfiguration charge.
+pub fn run_reconfig_waves(
+    plan: &PartitionPlan,
+    topo: &FabricTopology,
+    waves: &[crate::sim::WaveInput],
+    max_cycles_per_wave: u64,
+) -> (Vec<SimOutcome>, ReconfigStats) {
+    let cut_names = plan.cut_names();
+    let empty = SimConfig::new();
+    let mut sims: Vec<TokenSim> = plan
+        .shards
+        .iter()
+        .map(|sh| TokenSim::new(&sh.graph, &empty))
+        .collect();
+    let out_ports = super::shard::true_out_ports(plan, &cut_names);
+
+    let mut active = 0usize;
+    let mut swaps = 1u64; // the initial context load
+    let mut total_active = 0u64;
+    let mut firings_before = 0u64;
+    let mut outcomes = Vec::with_capacity(waves.len());
+    for wave in waves {
+        let swaps_before = swaps;
+        super::shard::reset_and_route_wave(&mut sims, &cut_names, wave);
+        let spent = drive_contexts(&mut sims, plan, max_cycles_per_wave, &mut active, &mut swaps);
+        total_active += spent;
+
+        let quiescent = sims.iter().all(|s| s.idle() && !s.consts_pending());
+        let outputs = super::shard::collect_wave_outputs(&mut sims, &out_ports);
+        let firings_now: u64 = sims.iter().map(|s| s.firings()).sum();
+        // The initial context load is billed to the first wave; later
+        // waves pay only for the swaps they themselves trigger.
+        let loads_this_wave = (swaps - swaps_before) + u64::from(outcomes.is_empty());
+        outcomes.push(SimOutcome {
+            outputs,
+            cycles: spent + loads_this_wave * topo.reconfig_cycles,
+            firings: firings_now - firings_before,
+            quiescent,
+        });
+        firings_before = firings_now;
+    }
+
+    let stats = ReconfigStats {
+        swaps,
+        reconfig_cycles: swaps * topo.reconfig_cycles,
+        active_cycles: total_active,
+    };
+    (outcomes, stats)
 }
 
 #[cfg(test)]
@@ -149,6 +221,33 @@ mod tests {
         let (_, dear) = run_reconfig(&plan, &topo, &cfg);
         assert_eq!(cheap.swaps, dear.swaps, "schedule must not depend on price");
         assert_eq!(dear.reconfig_cycles, cheap.reconfig_cycles * 10);
+    }
+
+    #[test]
+    fn streamed_waves_match_whole_graph_under_reconfig() {
+        let g = bench_defs::build(BenchId::Max);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = partition(&g, &topo).unwrap();
+        let wls: Vec<_> = (0..3)
+            .map(|i| bench_defs::workload(BenchId::Max, 2 + i, 7 + i as u64))
+            .collect();
+        let waves: Vec<crate::sim::WaveInput> =
+            wls.iter().map(|w| w.inject.clone()).collect();
+        let max = wls.iter().map(|w| w.max_cycles).max().unwrap();
+        let (outs, stats) = run_reconfig_waves(&plan, &topo, &waves, max);
+        assert_eq!(outs.len(), waves.len());
+        for (i, wl) in wls.iter().enumerate() {
+            let whole = run_token(&g, &wl.sim_config());
+            assert_eq!(outs[i].outputs, whole.outputs, "wave {i}");
+            for (port, want) in &wl.expect {
+                assert_eq!(outs[i].stream(port), want.as_slice(), "wave {i} `{port}`");
+            }
+        }
+        assert!(stats.swaps >= 2, "multi-shard waves must swap contexts");
+        assert_eq!(stats.reconfig_cycles, stats.swaps * topo.reconfig_cycles);
+        // Per-wave reconfig charges sum to the cumulative charge.
+        let charged: u64 = outs.iter().map(|o| o.cycles).sum();
+        assert_eq!(charged, stats.active_cycles + stats.reconfig_cycles);
     }
 
     #[test]

@@ -71,25 +71,17 @@ pub(crate) fn merge_outcomes(
     }
 }
 
-/// Execute a partitioned graph to quiescence (or the round budget),
-/// forwarding cut-arc tokens between shards after every round. Output
-/// streams are byte-identical to whole-graph `TokenSim` on the same
-/// `cfg`.
-pub fn run_sharded(plan: &PartitionPlan, cfg: &SimConfig) -> SimOutcome {
-    let cut_names = plan.cut_names();
-    let shard_cfgs = shard_configs(plan, cfg);
-    let mut sims: Vec<TokenSim> = plan
-        .shards
-        .iter()
-        .zip(&shard_cfgs)
-        .map(|(sh, c)| TokenSim::new(&sh.graph, c))
-        .collect();
-
+/// Run the shard rack in lockstep — one synchronous round per shard,
+/// then cut-arc forwarding — until two consecutive idle rounds (one
+/// drains output ports, one confirms silence) or the round budget.
+/// Returns the rounds consumed. Shared by [`run_sharded`] and
+/// [`run_sharded_waves`] so the forwarding/stop rules cannot diverge.
+pub(crate) fn drive_lockstep(sims: &mut [TokenSim], plan: &PartitionPlan, budget: u64) -> u64 {
     let mut rounds = 0u64;
     let mut idle_rounds = 0u32;
-    while rounds < cfg.max_cycles {
+    while rounds < budget {
         let mut fired = 0u64;
-        for sim in &mut sims {
+        for sim in sims.iter_mut() {
             fired += sim.step();
         }
         let mut moved = 0usize;
@@ -104,7 +96,6 @@ pub fn run_sharded(plan: &PartitionPlan, cfg: &SimConfig) -> SimOutcome {
         rounds += 1;
         if fired == 0 && moved == 0 {
             idle_rounds += 1;
-            // One extra round drains output ports, one confirms silence.
             if idle_rounds >= 2 {
                 break;
             }
@@ -112,8 +103,119 @@ pub fn run_sharded(plan: &PartitionPlan, cfg: &SimConfig) -> SimOutcome {
             idle_rounds = 0;
         }
     }
+    rounds
+}
+
+/// True output ports of the partitioned graph: `(owning shard, label)`
+/// for every output-port arc that is not a cut half.
+pub(crate) fn true_out_ports(
+    plan: &PartitionPlan,
+    cut_names: &BTreeSet<String>,
+) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (si, sh) in plan.shards.iter().enumerate() {
+        for a in sh.graph.output_ports() {
+            let name = sh.graph.arc(a).name.clone();
+            if !cut_names.contains(&name) {
+                out.push((si, name));
+            }
+        }
+    }
+    out
+}
+
+/// Wave boundary on a resident rack: purge residue, re-arm const reset
+/// tokens, and route the wave's streams to the shards owning each true
+/// input port.
+pub(crate) fn reset_and_route_wave(
+    sims: &mut [TokenSim],
+    cut_names: &BTreeSet<String>,
+    wave: &crate::sim::WaveInput,
+) {
+    for sim in sims.iter_mut() {
+        sim.purge();
+        sim.rearm_consts();
+    }
+    for (port, stream) in wave {
+        if cut_names.contains(port) {
+            continue;
+        }
+        for sim in sims.iter_mut() {
+            if stream.iter().all(|&v| sim.enqueue(port, v)) {
+                break;
+            }
+        }
+    }
+}
+
+/// Drain each true output port's collected stream into one map.
+pub(crate) fn collect_wave_outputs(
+    sims: &mut [TokenSim],
+    out_ports: &[(usize, String)],
+) -> BTreeMap<String, Vec<crate::dfg::Word>> {
+    let mut outputs = BTreeMap::new();
+    for (si, name) in out_ports {
+        outputs.insert(name.clone(), sims[*si].take_stream(name));
+    }
+    outputs
+}
+
+/// Execute a partitioned graph to quiescence (or the round budget),
+/// forwarding cut-arc tokens between shards after every round. Output
+/// streams are byte-identical to whole-graph `TokenSim` on the same
+/// `cfg`.
+pub fn run_sharded(plan: &PartitionPlan, cfg: &SimConfig) -> SimOutcome {
+    let cut_names = plan.cut_names();
+    let shard_cfgs = shard_configs(plan, cfg);
+    let mut sims: Vec<TokenSim> = plan
+        .shards
+        .iter()
+        .zip(&shard_cfgs)
+        .map(|(sh, c)| TokenSim::new(&sh.graph, c))
+        .collect();
+    let rounds = drive_lockstep(&mut sims, plan, cfg.max_cycles);
     let quiescent = sims.iter().all(|s| s.idle());
     merge_outcomes(sims, &cut_names, rounds, quiescent)
+}
+
+/// Streamed injection over a resident shard rack: run every wave of
+/// `waves` through ONE set of per-shard `TokenSim`s, re-arming const
+/// reset tokens and purging residue at wave boundaries instead of
+/// tearing the rack down and rebuilding it per input set. Returns one
+/// outcome per wave; output streams are byte-identical to running each
+/// wave alone through [`run_sharded`] (and therefore through whole-
+/// graph `TokenSim`).
+pub fn run_sharded_waves(
+    plan: &PartitionPlan,
+    waves: &[crate::sim::WaveInput],
+    max_cycles_per_wave: u64,
+) -> Vec<SimOutcome> {
+    let cut_names = plan.cut_names();
+    let empty = SimConfig::new();
+    let mut sims: Vec<TokenSim> = plan
+        .shards
+        .iter()
+        .map(|sh| TokenSim::new(&sh.graph, &empty))
+        .collect();
+    let out_ports = true_out_ports(plan, &cut_names);
+
+    let mut outcomes = Vec::with_capacity(waves.len());
+    let mut firings_before = 0u64;
+    for wave in waves {
+        reset_and_route_wave(&mut sims, &cut_names, wave);
+        let rounds = drive_lockstep(&mut sims, plan, max_cycles_per_wave);
+        let quiescent = sims.iter().all(|s| s.idle());
+        let outputs = collect_wave_outputs(&mut sims, &out_ports);
+        let firings_now: u64 = sims.iter().map(|s| s.firings()).sum();
+        outcomes.push(SimOutcome {
+            outputs,
+            cycles: rounds,
+            firings: firings_now - firings_before,
+            quiescent,
+        });
+        firings_before = firings_now;
+    }
+    outcomes
 }
 
 #[cfg(test)]
@@ -152,6 +254,29 @@ mod tests {
         assert!(sharded.quiescent);
         for (port, want) in &wl.expect {
             assert_eq!(sharded.stream(port), want.as_slice());
+        }
+    }
+
+    #[test]
+    fn streamed_waves_match_isolated_sharded_runs() {
+        let g = bench_defs::build(BenchId::DotProd);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = partition(&g, &topo).unwrap();
+        let wls: Vec<_> = (0..4)
+            .map(|i| bench_defs::workload(BenchId::DotProd, 3 + i, i as u64))
+            .collect();
+        let waves: Vec<crate::sim::WaveInput> =
+            wls.iter().map(|w| w.inject.clone()).collect();
+        let max = wls.iter().map(|w| w.max_cycles).max().unwrap();
+        let streamed = run_sharded_waves(&plan, &waves, max);
+        assert_eq!(streamed.len(), waves.len());
+        for (i, wl) in wls.iter().enumerate() {
+            let cfg = wl.sim_config();
+            let alone = run_sharded(&plan, &cfg);
+            assert_eq!(streamed[i].outputs, alone.outputs, "wave {i}");
+            let whole = run_token(&g, &cfg);
+            assert_eq!(streamed[i].outputs, whole.outputs, "wave {i} vs whole");
+            assert!(streamed[i].quiescent, "wave {i}");
         }
     }
 

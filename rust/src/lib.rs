@@ -58,4 +58,4 @@ pub mod vhdl;
 
 pub use dfg::{Arc, ArcId, Graph, Node, NodeId, Op};
 pub use fabric::FabricTopology;
-pub use sim::{FsmSim, SimConfig, SimOutcome, TokenSim};
+pub use sim::{FsmSim, SimConfig, SimOutcome, StreamSession, TokenSim};

@@ -4,9 +4,11 @@
 //! dataflow-accel run <bench> [--n 16] [--seed 7] [--engine token|fsm|dynamic]
 //! dataflow-accel compile <bench> [--emit asm|vhdl|c|resources]
 //! dataflow-accel place <bench> [--shards K] [--channels N] [--check] [--reconfig]
+//! dataflow-accel stream <bench|saxpy> [--waves 8] [--n 8] [--seed 7]
+//! dataflow-accel stream --table [--waves 8] [--n 8] [--seed 7]
 //! dataflow-accel table1 [--fig8]
 //! dataflow-accel sweep [--bench all] [--requests 64] [--n 16] [--engine native|xla]
-//!                      [--workers 4] [--batch 8]
+//!                      [--workers 4] [--batch 8] [--stream]
 //! dataflow-accel info
 //! ```
 
@@ -19,13 +21,14 @@ use dataflow_accel::{estimate, frontend, report, sim, vhdl};
 fn main() {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["fig8", "verbose", "check", "reconfig"],
+        &["fig8", "verbose", "check", "reconfig", "table", "stream"],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
         "compile" => cmd_compile(&args),
         "place" => cmd_place(&args),
+        "stream" => cmd_stream(&args),
         "table1" => {
             if args.has("fig8") {
                 print!("{}", report::fig8_csv());
@@ -37,13 +40,17 @@ fn main() {
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dataflow-accel <run|compile|place|table1|sweep|info> [options]\n\
+                "usage: dataflow-accel <run|compile|place|stream|table1|sweep|info> [options]\n\
                  place: map a benchmark onto the physical fabric model \n\
                  \x20 --shards K    size the fabric to ~1/K of the graph (forces partitioning)\n\
                  \x20 --channels N  override the bus-channel pool\n\
                  \x20 --check       run sharded + whole-graph sims and compare outputs\n\
                  \x20 --reconfig    time-multiplex the shards on one fabric, report swap cost\n\
-                 benchmarks: {}",
+                 stream: wave-pipelined execution over a resident graph \n\
+                 \x20 --waves K     number of independent input waves (default 8)\n\
+                 \x20 --table       print the streamed-vs-run-to-completion throughput table\n\
+                 sweep: --stream routes batches through resident streaming sessions\n\
+                 benchmarks: {} saxpy (stream only)",
                 BenchId::ALL.map(|b| b.slug()).join(" ")
             );
         }
@@ -175,6 +182,81 @@ fn cmd_place(args: &Args) {
     }
 }
 
+fn cmd_stream(args: &Args) {
+    let waves = args.get_usize("waves", 8);
+    let n = args.get_usize("n", 8);
+    let seed = args.get_u64("seed", 7);
+    if args.has("table") {
+        print!("{}", report::throughput_table(waves, n, seed));
+        return;
+    }
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or_else(|| panic!("stream wants a benchmark name or --table"));
+
+    // (graph, waves, expected z-streams keyed per wave+port)
+    let (g, wave_inputs, expects): (
+        dataflow_accel::dfg::Graph,
+        Vec<sim::WaveInput>,
+        Vec<std::collections::BTreeMap<String, Vec<dataflow_accel::dfg::Word>>>,
+    ) = if which == "saxpy" {
+        let g = bench_defs::saxpy::build();
+        let mut ws = Vec::new();
+        let mut ex = Vec::new();
+        for i in 0..waves {
+            let (w, z) = bench_defs::saxpy::wave(n, seed.wrapping_add(i as u64));
+            ws.push(w);
+            ex.push(std::collections::BTreeMap::from([("z".to_string(), z)]));
+        }
+        (g, ws, ex)
+    } else {
+        let bench = BenchId::from_slug(which)
+            .unwrap_or_else(|| panic!("unknown benchmark `{which}`"));
+        let g = bench_defs::build(bench);
+        let wls = bench_defs::wave_workloads(bench, waves, n, seed);
+        let ws = wls.iter().map(|w| w.inject.clone()).collect();
+        let ex = wls.into_iter().map(|w| w.expect).collect();
+        (g, ws, ex)
+    };
+
+    let mut session = sim::StreamSession::new(&g);
+    let mode = session.mode();
+    for w in &wave_inputs {
+        session.admit(w).expect("wave admission");
+    }
+    session.run(1_000_000u64.saturating_mul(waves as u64));
+    let m = session.metrics();
+    println!(
+        "{}: {} waves ({:?} admission) | {} rounds, {} firings, {} tokens out",
+        g.name, m.waves_completed, mode, m.rounds, m.firings, m.tokens_out
+    );
+    println!(
+        "  throughput {:.4} tokens/cycle | occupancy {:.1}% | tag stalls {}",
+        m.tokens_per_cycle(),
+        100.0 * m.occupancy(g.n_nodes()),
+        m.tag_stalls
+    );
+    let mut ok = 0usize;
+    for (i, expect) in expects.iter().enumerate() {
+        let outs = session.wave_outputs(i as u32);
+        let verified = expect
+            .iter()
+            .all(|(port, want)| outs.get(port).map(|v| v == want).unwrap_or(false));
+        if verified {
+            ok += 1;
+        } else {
+            println!("  wave {i}: MISMATCH (got {outs:?}, want {expect:?})");
+        }
+    }
+    println!("  verified {ok}/{} waves", expects.len());
+    println!("  wave latency histogram (rounds):");
+    for (lo, hi, count) in m.latency_histogram(6) {
+        println!("    [{lo:>6}, {hi:>6})  {}", "#".repeat(count));
+    }
+}
+
 fn cmd_sweep(args: &Args) {
     let engine = match args.get_or("engine", "native").as_str() {
         "native" => Engine::Native,
@@ -192,8 +274,12 @@ fn cmd_sweep(args: &Args) {
         vec![BenchId::from_slug(&which).expect("benchmark")]
     };
 
-    let c = Coordinator::start(workers, engine, Some("artifacts"), batch)
-        .expect("coordinator start");
+    let c = if args.has("stream") {
+        Coordinator::start_streamed(workers, batch).expect("coordinator start")
+    } else {
+        Coordinator::start(workers, engine, Some("artifacts"), batch)
+            .expect("coordinator start")
+    };
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..requests)
         .map(|i| {

@@ -7,10 +7,11 @@
 //! Fig. 8 in CSV form (one panel per metric).
 
 use crate::baselines::{ctv, kernel_spec, lalp};
-use crate::bench_defs::{build, BenchId};
+use crate::bench_defs::{self, build, BenchId};
 use crate::dfg::Graph;
 use crate::estimate::{estimate, estimate_shards, estimate_trimmed, Resources};
 use crate::fabric::{self, FabricTopology};
+use crate::sim::{self, run_token, WaveInput, WaveMode};
 use std::fmt::Write;
 
 /// The paper's published Table 1 numbers (FF, LUT, Slices, Fmax MHz).
@@ -285,6 +286,126 @@ pub fn placement_table(g: &Graph, topo: &FabricTopology) -> String {
     out
 }
 
+/// One row of the streaming throughput comparison.
+#[derive(Debug, Clone)]
+pub struct ThroughputRow {
+    pub name: String,
+    pub mode: WaveMode,
+    pub waves: usize,
+    pub tokens_out: u64,
+    /// Total rounds running every wave to completion separately.
+    pub r2c_cycles: u64,
+    /// Makespan of the same waves through one resident session.
+    pub streamed_cycles: u64,
+}
+
+impl ThroughputRow {
+    pub fn r2c_tokens_per_cycle(&self) -> f64 {
+        self.tokens_out as f64 / self.r2c_cycles.max(1) as f64
+    }
+    pub fn streamed_tokens_per_cycle(&self) -> f64 {
+        self.tokens_out as f64 / self.streamed_cycles.max(1) as f64
+    }
+    pub fn speedup(&self) -> f64 {
+        self.r2c_cycles as f64 / self.streamed_cycles.max(1) as f64
+    }
+}
+
+/// Measure one graph: run `waves` to completion one at a time, then
+/// pipeline the identical waves through a resident [`sim::StreamSession`].
+pub fn throughput_row(name: &str, g: &Graph, waves: &[WaveInput], budget: u64) -> ThroughputRow {
+    let mut r2c_cycles = 0u64;
+    let mut tokens_out = 0u64;
+    for wave in waves {
+        let mut cfg = crate::sim::SimConfig::new().max_cycles(budget);
+        for (p, s) in wave {
+            cfg = cfg.inject(p, s.clone());
+        }
+        let out = run_token(g, &cfg);
+        r2c_cycles += out.cycles;
+        tokens_out += out.outputs.values().map(|v| v.len() as u64).sum::<u64>();
+    }
+    let (_, metrics) = sim::run_stream(g, waves, budget * waves.len().max(1) as u64);
+    ThroughputRow {
+        name: name.to_string(),
+        // The admission policy actually used (run_stream serializes a
+        // pipelined-capable graph when the waves fail unit-rate
+        // admission, e.g. unequal per-port stream lengths).
+        mode: metrics.mode,
+        waves: waves.len(),
+        tokens_out,
+        r2c_cycles,
+        streamed_cycles: metrics.rounds,
+    }
+}
+
+/// The streamed-vs-run-to-completion rows for the whole suite: the six
+/// paper benchmarks (serialized waves over a resident session) plus the
+/// pipelineable SAXPY workload (overlapped waves — the Fig. 1c case).
+pub fn throughput_rows(waves: usize, n: usize, seed: u64) -> Vec<ThroughputRow> {
+    let mut rows = Vec::new();
+    for b in BenchId::ALL {
+        let g = build(b);
+        let wls = bench_defs::wave_workloads(b, waves, n, seed);
+        let budget = wls.iter().map(|w| w.max_cycles).max().unwrap_or(1_000_000);
+        let ws: Vec<WaveInput> = wls.iter().map(|w| w.inject.clone()).collect();
+        rows.push(throughput_row(b.slug(), &g, &ws, budget));
+    }
+    let g = bench_defs::saxpy::build();
+    let ws: Vec<WaveInput> = (0..waves)
+        .map(|i| bench_defs::saxpy::wave(n, seed.wrapping_add(i as u64)).0)
+        .collect();
+    rows.push(throughput_row("saxpy", &g, &ws, 1_000_000));
+    rows
+}
+
+/// Fig. 8-style sustained-throughput table: tokens/cycle run-to-
+/// completion vs streamed, per benchmark.
+pub fn throughput_table(waves: usize, n: usize, seed: u64) -> String {
+    let rows = throughput_rows(waves, n, seed);
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Sustained throughput: {waves} waves of size {n} per benchmark \
+         (run-to-completion vs streamed session)"
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<12} {:>10} {:>7} {:>8} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "benchmark",
+        "admission",
+        "waves",
+        "tokens",
+        "r2c cyc",
+        "strm cyc",
+        "r2c tok/c",
+        "strm tok/c",
+        "speedup"
+    )
+    .unwrap();
+    for r in &rows {
+        writeln!(
+            out,
+            "{:<12} {:>10} {:>7} {:>8} {:>10} {:>10} {:>10.4} {:>10.4} {:>7.2}x",
+            r.name,
+            match r.mode {
+                WaveMode::Pipelined => "pipelined",
+                WaveMode::Serialized => "serialized",
+            },
+            r.waves,
+            r.tokens_out,
+            r.r2c_cycles,
+            r.streamed_cycles,
+            r.r2c_tokens_per_cycle(),
+            r.streamed_tokens_per_cycle(),
+            r.speedup()
+        )
+        .unwrap();
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,6 +449,33 @@ mod tests {
         assert!(t2.contains("does not fit one instance"), "{t2}");
         assert!(t2.contains("partitioned into"), "{t2}");
         assert!(t2.contains("shard"), "{t2}");
+    }
+
+    #[test]
+    fn throughput_table_covers_suite_and_pipelines_win() {
+        let rows = throughput_rows(4, 3, 11);
+        assert_eq!(rows.len(), BenchId::ALL.len() + 1);
+        let t = throughput_table(4, 3, 11);
+        for b in BenchId::ALL {
+            assert!(t.contains(b.slug()), "missing {}", b.slug());
+        }
+        assert!(t.contains("saxpy"));
+        for r in &rows {
+            assert!(r.tokens_out > 0, "{}: no output tokens", r.name);
+            if r.mode == WaveMode::Pipelined {
+                assert!(
+                    r.streamed_tokens_per_cycle() >= r.r2c_tokens_per_cycle(),
+                    "{}: streamed {} < r2c {} tokens/cycle",
+                    r.name,
+                    r.streamed_tokens_per_cycle(),
+                    r.r2c_tokens_per_cycle()
+                );
+            }
+        }
+        // The canonical pipeline must actually show the Fig. 1c win.
+        let saxpy = rows.iter().find(|r| r.name == "saxpy").unwrap();
+        assert_eq!(saxpy.mode, WaveMode::Pipelined);
+        assert!(saxpy.speedup() > 1.0, "saxpy speedup {}", saxpy.speedup());
     }
 
     #[test]

@@ -16,13 +16,25 @@
 //!
 //! All three must agree on final port outputs; integration tests and
 //! proptests enforce this.
+//!
+//! On top of the engines sits the **streaming tier** ([`stream`]): a
+//! [`StreamSession`] keeps one graph resident and admits successive
+//! independent input *waves*, overlapping them inside the fabric when
+//! the graph is unit-rate ([`overlap_safe`]) and serializing them with
+//! a reset in between otherwise. Per-wave outputs are byte-identical to
+//! running each wave alone through [`TokenSim`]
+//! (`rust/tests/conformance.rs` enforces this).
 
 mod dynamic;
 mod fsm;
+pub mod stream;
 mod token;
 
 pub use dynamic::{run_dynamic, DynamicSim};
 pub use fsm::{run_fsm, FsmSim, HandshakeEvent, HandshakeKind};
+pub use stream::{
+    overlap_safe, run_stream, StreamError, StreamMetrics, StreamSession, WaveInput, WaveMode,
+};
 pub use token::{run_token, AluReq, TokenSim};
 
 use crate::dfg::Word;

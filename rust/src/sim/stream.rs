@@ -1,0 +1,981 @@
+//! The streaming execution tier: wave-pipelined execution of successive
+//! independent input sets ("waves") over one resident graph.
+//!
+//! Every other executor in this crate runs one input set to completion
+//! before admitting the next, so the fabric idles between runs. The
+//! paper's throughput claim (Fig. 1c) rests on the opposite behaviour:
+//! independent tokens pipeline through the operators back-to-back. A
+//! [`StreamSession`] keeps a graph resident and admits waves under one
+//! of two admission policies:
+//!
+//! * [`WaveMode::Pipelined`] — waves overlap inside the fabric. The
+//!   next wave's tokens enter an input arc the round after the previous
+//!   wave's token left it (the one-token-per-arc rule is the only gate;
+//!   the session never waits for the graph to drain). Sound only for
+//!   *unit-rate* graphs — every operator consumes exactly one token per
+//!   input and produces exactly one per output each firing, and the
+//!   graph is acyclic — where the j-th token on every arc provably
+//!   belongs to the j-th admitted input position, so waves can never
+//!   mix ([`overlap_safe`] checks this structurally).
+//! * [`WaveMode::Serialized`] — waves are admitted one at a time: the
+//!   next wave is released when the previous one can make no further
+//!   progress, and any residue (tokens stranded by a starved operator)
+//!   is flushed first, exactly as a hardware reset between input sets
+//!   would. The graph, FIFO storage and all allocations stay resident.
+//!   This is the mode for the paper's loop-schema benchmarks, whose
+//!   `ndmerge` back-edges would conflate overlapping waves.
+//!
+//! Internally every token carries its wave tag, which gives the engine
+//! airtight per-wave output demultiplexing and lets multi-input
+//! operators *refuse* to pair tokens from different waves (a structural
+//! impossibility under the admission policies above; the refusal turns
+//! a would-be correctness bug into a visible `tag_stalls` counter).
+//!
+//! Conformance contract (enforced by `rust/tests/conformance.rs`): the
+//! per-wave output streams are byte-identical to running each wave
+//! alone through whole-graph [`TokenSim`](super::TokenSim).
+
+use super::SimOutcome;
+use crate::dfg::{ArcId, Graph, Op, Word};
+use std::collections::{BTreeMap, VecDeque};
+
+/// One wave: injection streams per input-port label.
+pub type WaveInput = BTreeMap<String, Vec<Word>>;
+
+/// How the session admits successive waves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaveMode {
+    /// Overlapping admission (unit-rate acyclic graphs only).
+    Pipelined,
+    /// One wave in flight at a time, reset between waves.
+    Serialized,
+}
+
+/// Why a wave was rejected at admission.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamError {
+    /// Pipelined waves must cover every input port with the same number
+    /// of tokens (unit-rate admission); this one did not.
+    RateMismatch(String),
+    /// The wave names a port the graph does not have.
+    UnknownPort(String),
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::RateMismatch(msg) => {
+                write!(f, "pipelined wave admission requires equal-length streams on every input port: {msg}")
+            }
+            StreamError::UnknownPort(p) => write!(f, "wave names unknown input port `{p}`"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// True when waves may safely overlap inside `g`: every operator is
+/// unit-rate (ALU, decider, `not`, `copy`, `fifo`) and the graph is
+/// acyclic. `branch`/`dmerge` (conditional consumption or production),
+/// `ndmerge` (arrival-order dependent) and `const` (fires once per
+/// reset, not once per token) all break the j-th-token-is-wave-j
+/// invariant, as does any cycle.
+pub fn overlap_safe(g: &Graph) -> bool {
+    for n in &g.nodes {
+        match n.op {
+            Op::NdMerge | Op::DMerge | Op::Branch | Op::Const(_) => return false,
+            _ => {}
+        }
+    }
+    // Kahn's algorithm over the node-to-node arc adjacency.
+    let nn = g.n_nodes();
+    let mut indeg = vec![0usize; nn];
+    for a in &g.arcs {
+        if let (Some((_, _)), Some((d, _))) = (a.src, a.dst) {
+            indeg[d.0 as usize] += 1;
+        }
+    }
+    let mut ready: Vec<usize> = (0..nn).filter(|&i| indeg[i] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(ni) = ready.pop() {
+        seen += 1;
+        for &a in &g.nodes[ni].outs {
+            if let Some((d, _)) = g.arc(a).dst {
+                let d = d.0 as usize;
+                indeg[d] -= 1;
+                if indeg[d] == 0 {
+                    ready.push(d);
+                }
+            }
+        }
+    }
+    seen == nn
+}
+
+/// Sustained-throughput metrics for one session.
+#[derive(Debug, Clone)]
+pub struct StreamMetrics {
+    /// The admission policy the session actually ran under (a
+    /// pipelined-capable graph can still be served serialized when its
+    /// waves fail unit-rate admission — see [`run_stream`]).
+    pub mode: WaveMode,
+    /// Synchronous rounds executed.
+    pub rounds: u64,
+    /// Total operator firings.
+    pub firings: u64,
+    /// Tokens collected at output ports.
+    pub tokens_out: u64,
+    pub waves_admitted: u32,
+    pub waves_completed: u32,
+    /// Rounds a multi-input operator held tokens of different waves and
+    /// refused to fire. Always 0 under the documented admission
+    /// policies; nonzero means a policy violation was contained.
+    pub tag_stalls: u64,
+    /// Per completed wave: rounds from its first token entering the
+    /// fabric to its last output token leaving.
+    pub latencies: Vec<u64>,
+}
+
+impl StreamMetrics {
+    /// Output tokens per synchronous round — the Fig. 8 throughput axis.
+    pub fn tokens_per_cycle(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.rounds as f64
+        }
+    }
+
+    /// Mean fraction of operators firing per round (fireable-operator
+    /// occupancy of the fabric).
+    pub fn occupancy(&self, n_nodes: usize) -> f64 {
+        if self.rounds == 0 || n_nodes == 0 {
+            0.0
+        } else {
+            self.firings as f64 / (self.rounds as f64 * n_nodes as f64)
+        }
+    }
+
+    /// Wave-latency histogram: `buckets` equal-width bins over the
+    /// observed range, as `(lo, hi, count)` rows.
+    pub fn latency_histogram(&self, buckets: usize) -> Vec<(u64, u64, usize)> {
+        if self.latencies.is_empty() || buckets == 0 {
+            return Vec::new();
+        }
+        let lo = *self.latencies.iter().min().unwrap();
+        let hi = *self.latencies.iter().max().unwrap();
+        let width = ((hi - lo) / buckets as u64 + 1).max(1);
+        let mut rows: Vec<(u64, u64, usize)> = (0..buckets)
+            .map(|i| (lo + i as u64 * width, lo + (i as u64 + 1) * width, 0))
+            .collect();
+        for &l in &self.latencies {
+            let i = (((l - lo) / width) as usize).min(buckets - 1);
+            rows[i].2 += 1;
+        }
+        rows.retain(|r| r.2 > 0);
+        rows
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Tok {
+    v: Word,
+    wave: u32,
+}
+
+/// Per-wave bookkeeping.
+#[derive(Debug, Clone)]
+struct WaveState {
+    /// Tokens of this wave still in the system (gate + pending + arcs +
+    /// FIFOs + unemitted const arms).
+    alive: u64,
+    /// Round the wave's first token entered the fabric.
+    started: Option<u64>,
+    /// Round the wave's last token left (or was flushed).
+    done: Option<u64>,
+    /// No residue was flushed and all injections were accepted.
+    quiescent: bool,
+    firings: u64,
+    outputs: BTreeMap<String, Vec<Word>>,
+}
+
+/// A resident graph accepting successive input waves.
+pub struct StreamSession<'g> {
+    g: &'g Graph,
+    mode: WaveMode,
+    tokens: Vec<Option<Tok>>,
+    fifos: Vec<VecDeque<Tok>>,
+    /// Indices of `Const` nodes (armed once per wave, serialized mode).
+    const_nodes: Vec<usize>,
+    /// Waves each const still owes, oldest first.
+    const_pending: Vec<VecDeque<u32>>,
+    /// Per input port: (arc, queue of tagged tokens awaiting a free arc).
+    pending: Vec<(ArcId, VecDeque<Tok>)>,
+    /// Serialized mode: admitted waves not yet released into `pending`.
+    gate: VecDeque<(u32, WaveInput)>,
+    out_ports: Vec<ArcId>,
+    waves: Vec<WaveState>,
+    rounds: u64,
+    firings: u64,
+    tokens_out: u64,
+    tag_stalls: u64,
+    staged: Vec<(ArcId, Tok)>,
+    /// First admitted wave not yet completed (completion is in wave
+    /// order under both admission policies).
+    next_done: usize,
+}
+
+impl<'g> StreamSession<'g> {
+    /// Auto-select the widest sound admission policy for `g`.
+    pub fn new(g: &'g Graph) -> Self {
+        let mode = if overlap_safe(g) {
+            WaveMode::Pipelined
+        } else {
+            WaveMode::Serialized
+        };
+        Self::with_mode(g, mode)
+    }
+
+    /// Force a mode. Panics when `Pipelined` is requested for a graph
+    /// where overlapping waves could mix (see [`overlap_safe`]).
+    pub fn with_mode(g: &'g Graph, mode: WaveMode) -> Self {
+        assert!(
+            mode != WaveMode::Pipelined || overlap_safe(g),
+            "graph `{}` is not overlap-safe; use WaveMode::Serialized",
+            g.name
+        );
+        let const_nodes: Vec<usize> = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.op, Op::Const(_)))
+            .map(|(i, _)| i)
+            .collect();
+        StreamSession {
+            g,
+            mode,
+            tokens: vec![None; g.n_arcs()],
+            fifos: g.nodes.iter().map(|_| VecDeque::new()).collect(),
+            const_pending: g.nodes.iter().map(|_| VecDeque::new()).collect(),
+            const_nodes,
+            pending: g
+                .input_ports()
+                .into_iter()
+                .map(|a| (a, VecDeque::new()))
+                .collect(),
+            gate: VecDeque::new(),
+            out_ports: g.output_ports(),
+            waves: Vec::new(),
+            rounds: 0,
+            firings: 0,
+            tokens_out: 0,
+            tag_stalls: 0,
+            staged: Vec::new(),
+            next_done: 0,
+        }
+    }
+
+    pub fn mode(&self) -> WaveMode {
+        self.mode
+    }
+
+    /// Waves admitted so far.
+    pub fn n_waves(&self) -> u32 {
+        self.waves.len() as u32
+    }
+
+    fn fresh_wave_state(&self) -> WaveState {
+        let mut outputs = BTreeMap::new();
+        for &p in &self.out_ports {
+            outputs.insert(self.g.arc(p).name.clone(), Vec::new());
+        }
+        WaveState {
+            alive: 0,
+            started: None,
+            done: None,
+            quiescent: true,
+            firings: 0,
+            outputs,
+        }
+    }
+
+    /// Admit one wave; returns its id. In pipelined mode the wave's
+    /// tokens become eligible for injection immediately (behind earlier
+    /// waves' tokens, FIFO per port); in serialized mode the wave waits
+    /// behind the gate until the previous wave finishes.
+    /// The pipelined (unit-rate) admission rules: every input port
+    /// present with the same stream length ≥ 1, no unknown ports.
+    /// `None` means `wave` is admissible. Shared by [`Self::admit`] and
+    /// [`run_stream`]'s fallback probe so the two can never disagree.
+    fn pipelined_admit_error(&self, wave: &WaveInput) -> Option<StreamError> {
+        for port in wave.keys() {
+            if !self
+                .pending
+                .iter()
+                .any(|(a, _)| &self.g.arc(*a).name == port)
+            {
+                return Some(StreamError::UnknownPort(port.clone()));
+            }
+        }
+        let mut len: Option<usize> = None;
+        for (a, _) in &self.pending {
+            let name = &self.g.arc(*a).name;
+            let l = wave.get(name).map(|s| s.len()).unwrap_or(0);
+            if l == 0 {
+                return Some(StreamError::RateMismatch(format!(
+                    "port `{name}` got no tokens"
+                )));
+            }
+            match len {
+                None => len = Some(l),
+                Some(p) if p != l => {
+                    return Some(StreamError::RateMismatch(format!(
+                        "port `{name}` got {l} tokens, expected {p}"
+                    )))
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    pub fn admit(&mut self, wave: &WaveInput) -> Result<u32, StreamError> {
+        let w = self.waves.len() as u32;
+        let mut st = self.fresh_wave_state();
+        match self.mode {
+            WaveMode::Pipelined => {
+                if let Some(e) = self.pipelined_admit_error(wave) {
+                    return Err(e);
+                }
+                for (a, q) in self.pending.iter_mut() {
+                    let stream = &wave[&self.g.arc(*a).name];
+                    st.alive += stream.len() as u64;
+                    q.extend(stream.iter().map(|&v| Tok { v, wave: w }));
+                }
+                // No consts in overlap-safe graphs.
+                self.waves.push(st);
+            }
+            WaveMode::Serialized => {
+                // Streams for ports the graph does not have are ignored,
+                // matching `SimConfig`/`TokenSim` semantics.
+                let known: u64 = wave
+                    .iter()
+                    .filter(|(p, _)| {
+                        self.pending
+                            .iter()
+                            .any(|(a, _)| self.g.arc(*a).name.as_str() == p.as_str())
+                    })
+                    .map(|(_, s)| s.len() as u64)
+                    .sum();
+                st.alive = known + self.const_nodes.len() as u64;
+                self.waves.push(st);
+                self.gate.push_back((w, wave.clone()));
+                self.maybe_release();
+            }
+        }
+        Ok(w)
+    }
+
+    /// Serialized mode: release the next gated wave when nothing is in
+    /// flight.
+    fn maybe_release(&mut self) {
+        if self.mode != WaveMode::Serialized {
+            return;
+        }
+        // Waves complete in admission order, so the oldest incomplete
+        // wave is `next_done`; release it iff it is still gated (an
+        // earlier released wave still in flight keeps it gated).
+        match self.gate.front() {
+            Some((w, _)) if *w as usize == self.next_done => {}
+            _ => return,
+        }
+        let (w, wave) = self.gate.pop_front().unwrap();
+        for (a, q) in self.pending.iter_mut() {
+            if let Some(stream) = wave.get(&self.g.arc(*a).name) {
+                q.extend(stream.iter().map(|&v| Tok { v, wave: w }));
+            }
+        }
+        for &ni in &self.const_nodes {
+            self.const_pending[ni].push_back(w);
+        }
+    }
+
+    #[inline]
+    fn full(&self, a: ArcId) -> bool {
+        self.tokens[a.0 as usize].is_some()
+    }
+
+    #[inline]
+    fn take(&mut self, a: ArcId) -> Tok {
+        self.tokens[a.0 as usize].take().expect("token present")
+    }
+
+    fn note_start(&mut self, w: u32) {
+        let st = &mut self.waves[w as usize];
+        if st.started.is_none() {
+            st.started = Some(self.rounds);
+        }
+    }
+
+    /// One synchronous round. Returns total progress events (injections
+    /// + collections + firings); zero means a global fixpoint.
+    pub fn step(&mut self) -> u64 {
+        let mut progress = 0u64;
+
+        // Phase 1a: environment injection (one token per free port arc).
+        for pi in 0..self.pending.len() {
+            let (arc, _) = self.pending[pi];
+            if self.tokens[arc.0 as usize].is_none() {
+                if let Some(t) = self.pending[pi].1.pop_front() {
+                    self.tokens[arc.0 as usize] = Some(t);
+                    self.note_start(t.wave);
+                    progress += 1;
+                }
+            }
+        }
+        // Phase 1b: environment collection at output ports.
+        for pi in 0..self.out_ports.len() {
+            let p = self.out_ports[pi];
+            if let Some(t) = self.tokens[p.0 as usize].take() {
+                let name = self.g.arc(p).name.clone();
+                let st = &mut self.waves[t.wave as usize];
+                st.outputs.get_mut(&name).expect("known port").push(t.v);
+                st.alive -= 1;
+                self.tokens_out += 1;
+                progress += 1;
+            }
+        }
+
+        // Phase 2: snapshot-fire every operator; writes are staged so
+        // firing decisions see round-start state (identical semantics to
+        // `TokenSim`; an arc has a unique consumer, so in-round takes
+        // cannot perturb another node's decision).
+        let mut staged = std::mem::take(&mut self.staged);
+        debug_assert!(staged.is_empty());
+        let mut fired = 0u64;
+        for ni in 0..self.g.n_nodes() {
+            if self.try_fire(ni, &mut staged) {
+                fired += 1;
+            }
+        }
+        for &(a, t) in &staged {
+            debug_assert!(self.tokens[a.0 as usize].is_none(), "token overwrite");
+            self.tokens[a.0 as usize] = Some(t);
+        }
+        staged.clear();
+        self.staged = staged;
+
+        self.firings += fired;
+        progress += fired;
+        self.rounds += 1;
+
+        // Completion sweep: waves finish in admission order.
+        while self.next_done < self.waves.len() {
+            let w = self.next_done;
+            let fully_admitted = match self.mode {
+                WaveMode::Pipelined => true,
+                WaveMode::Serialized => !self.gate.iter().any(|(gw, _)| *gw as usize == w),
+            };
+            if fully_admitted && self.waves[w].alive == 0 && self.waves[w].done.is_none() {
+                if self.waves[w].started.is_none() {
+                    self.waves[w].started = Some(self.rounds);
+                }
+                self.waves[w].done = Some(self.rounds);
+                self.next_done += 1;
+                if self.mode == WaveMode::Serialized {
+                    self.maybe_release();
+                }
+            } else {
+                break;
+            }
+        }
+        progress
+    }
+
+    /// Fire node `ni` if enabled; consume inputs now, stage outputs.
+    fn try_fire(&mut self, ni: usize, staged: &mut Vec<(ArcId, Tok)>) -> bool {
+        let node = &self.g.nodes[ni];
+        let op = node.op;
+        match op {
+            Op::Const(v) => {
+                if self.const_pending[ni].is_empty() || self.full(node.outs[0]) {
+                    return false;
+                }
+                let out = node.outs[0];
+                let w = self.const_pending[ni].pop_front().unwrap();
+                self.note_start(w);
+                staged.push((out, Tok { v, wave: w }));
+                self.waves[w as usize].firings += 1;
+                true
+            }
+            Op::Copy => {
+                if !self.full(node.ins[0]) || self.full(node.outs[0]) || self.full(node.outs[1]) {
+                    return false;
+                }
+                let (o0, o1) = (node.outs[0], node.outs[1]);
+                let t = self.take(node.ins[0]);
+                self.waves[t.wave as usize].alive += 1; // 1 in, 2 out
+                self.waves[t.wave as usize].firings += 1;
+                staged.push((o0, t));
+                staged.push((o1, t));
+                true
+            }
+            Op::Not => {
+                if !self.full(node.ins[0]) || self.full(node.outs[0]) {
+                    return false;
+                }
+                let out = node.outs[0];
+                let t = self.take(node.ins[0]);
+                self.waves[t.wave as usize].firings += 1;
+                staged.push((out, Tok { v: op.eval1(t.v), wave: t.wave }));
+                true
+            }
+            Op::NdMerge => {
+                // Serialized mode only (overlap_safe rejects it): one
+                // wave in flight, so first-come with port-0 priority is
+                // exactly TokenSim's rule.
+                if self.full(node.outs[0]) {
+                    return false;
+                }
+                let (i0, i1, out) = (node.ins[0], node.ins[1], node.outs[0]);
+                let t = if self.full(i0) {
+                    self.take(i0)
+                } else if self.full(i1) {
+                    self.take(i1)
+                } else {
+                    return false;
+                };
+                self.waves[t.wave as usize].firings += 1;
+                staged.push((out, t));
+                true
+            }
+            Op::DMerge => {
+                if self.full(node.outs[0]) {
+                    return false;
+                }
+                let ctl = match self.tokens[node.ins[0].0 as usize] {
+                    Some(c) => c,
+                    None => return false,
+                };
+                let sel = if ctl.v != 0 { node.ins[1] } else { node.ins[2] };
+                match self.tokens[sel.0 as usize] {
+                    Some(d) if d.wave == ctl.wave => {}
+                    Some(_) => {
+                        self.tag_stalls += 1;
+                        return false;
+                    }
+                    None => return false,
+                }
+                let out = node.outs[0];
+                let c = self.take(node.ins[0]);
+                let d = self.take(sel);
+                self.waves[c.wave as usize].alive -= 1; // 2 in, 1 out
+                self.waves[c.wave as usize].firings += 1;
+                staged.push((out, d));
+                true
+            }
+            Op::Branch => {
+                let ctl = match self.tokens[node.ins[0].0 as usize] {
+                    Some(c) => c,
+                    None => return false,
+                };
+                match self.tokens[node.ins[1].0 as usize] {
+                    Some(d) if d.wave == ctl.wave => {}
+                    Some(_) => {
+                        self.tag_stalls += 1;
+                        return false;
+                    }
+                    None => return false,
+                }
+                let out = if ctl.v != 0 { node.outs[0] } else { node.outs[1] };
+                if self.full(out) {
+                    return false;
+                }
+                let c = self.take(node.ins[0]);
+                let d = self.take(node.ins[1]);
+                self.waves[c.wave as usize].alive -= 1; // 2 in, 1 out
+                self.waves[c.wave as usize].firings += 1;
+                staged.push((out, d));
+                true
+            }
+            Op::Fifo(k) => {
+                // Firing attribution: the wave is credited when a token
+                // *leaves* the FIFO (the enqueue half of a pass-through
+                // round is part of the same logical firing), so
+                // session-level `firings` — which counts acted rounds,
+                // like `TokenSim` — can exceed the per-wave sum on
+                // FIFO-bearing graphs. See `wave_outcome`.
+                let mut acted = false;
+                if self.full(node.ins[0]) && self.fifos[ni].len() < k as usize {
+                    let t = self.take(node.ins[0]);
+                    self.fifos[ni].push_back(t);
+                    acted = true;
+                }
+                if !self.full(node.outs[0]) {
+                    if let Some(t) = self.fifos[ni].pop_front() {
+                        self.waves[t.wave as usize].firings += 1;
+                        staged.push((node.outs[0], t));
+                        acted = true;
+                    }
+                }
+                acted
+            }
+            // All remaining ops are 2-in/1-out ALU or decider nodes.
+            _ => {
+                let (a, b) = (node.ins[0], node.ins[1]);
+                match (self.tokens[a.0 as usize], self.tokens[b.0 as usize]) {
+                    (Some(x), Some(y)) if x.wave != y.wave => {
+                        self.tag_stalls += 1;
+                        return false;
+                    }
+                    (Some(_), Some(_)) => {}
+                    _ => return false,
+                }
+                if self.full(node.outs[0]) {
+                    return false;
+                }
+                let out = node.outs[0];
+                let x = self.take(a);
+                let y = self.take(b);
+                self.waves[x.wave as usize].alive -= 1; // 2 in, 1 out
+                self.waves[x.wave as usize].firings += 1;
+                staged.push((out, Tok { v: op.eval2(x.v, y.v), wave: x.wave }));
+                true
+            }
+        }
+    }
+
+    /// Serialized mode: the wave currently in flight has reached a
+    /// fixpoint short of draining. Flush its residue (a hardware reset
+    /// between input sets) so the next wave starts clean, and mark it
+    /// done but not quiescent.
+    fn flush_stalled_wave(&mut self) {
+        debug_assert_eq!(self.mode, WaveMode::Serialized);
+        let w = self.next_done;
+        if w >= self.waves.len() || self.waves[w].done.is_some() {
+            return;
+        }
+        for t in self.tokens.iter_mut() {
+            if t.is_some() {
+                *t = None;
+            }
+        }
+        for q in self.fifos.iter_mut() {
+            q.clear();
+        }
+        for (_, q) in self.pending.iter_mut() {
+            q.clear();
+        }
+        for q in self.const_pending.iter_mut() {
+            q.clear();
+        }
+        let st = &mut self.waves[w];
+        st.alive = 0;
+        st.quiescent = false;
+        st.done = Some(self.rounds);
+        if st.started.is_none() {
+            st.started = Some(self.rounds);
+        }
+        self.next_done += 1;
+        self.maybe_release();
+    }
+
+    /// Drive the session until every admitted wave is done or
+    /// `max_rounds` is reached. Can be called repeatedly as more waves
+    /// are admitted.
+    pub fn run(&mut self, max_rounds: u64) {
+        let mut stall = 0u32;
+        while self.rounds < max_rounds && self.next_done < self.waves.len() {
+            let progress = self.step();
+            if progress == 0 {
+                stall += 1;
+                // One idle round is a true fixpoint under snapshot
+                // semantics; confirm once to mirror TokenSim's drain
+                // round, then resolve the stall.
+                if stall >= 2 {
+                    match self.mode {
+                        WaveMode::Serialized => {
+                            self.flush_stalled_wave();
+                            stall = 0;
+                        }
+                        WaveMode::Pipelined => break,
+                    }
+                }
+            } else {
+                stall = 0;
+            }
+        }
+    }
+
+    /// Has wave `w` fully drained (or been flushed)?
+    pub fn wave_done(&self, w: u32) -> bool {
+        self.waves[w as usize].done.is_some()
+    }
+
+    /// Per-wave output streams, demultiplexed by wave tag.
+    pub fn wave_outputs(&self, w: u32) -> &BTreeMap<String, Vec<Word>> {
+        &self.waves[w as usize].outputs
+    }
+
+    /// Per-wave view in the common [`SimOutcome`] shape: `cycles` is
+    /// the wave's latency (first token in → last token out), `firings`
+    /// are the firings attributed to its tokens. Attribution note: a
+    /// FIFO round that only *accepts* a token counts toward the
+    /// session's total (matching `TokenSim`) but is credited to the
+    /// wave when the token is later emitted, so on FIFO-bearing graphs
+    /// the per-wave sum can run below the session total.
+    pub fn wave_outcome(&self, w: u32) -> SimOutcome {
+        let st = &self.waves[w as usize];
+        let cycles = match (st.started, st.done) {
+            (Some(s), Some(d)) => d.saturating_sub(s).max(1),
+            _ => self.rounds,
+        };
+        SimOutcome {
+            outputs: st.outputs.clone(),
+            cycles,
+            firings: st.firings,
+            quiescent: st.done.is_some() && st.quiescent,
+        }
+    }
+
+    /// Sustained-throughput metrics so far.
+    pub fn metrics(&self) -> StreamMetrics {
+        StreamMetrics {
+            mode: self.mode,
+            rounds: self.rounds,
+            firings: self.firings,
+            tokens_out: self.tokens_out,
+            waves_admitted: self.waves.len() as u32,
+            waves_completed: self.next_done as u32,
+            tag_stalls: self.tag_stalls,
+            latencies: self
+                .waves
+                .iter()
+                .filter_map(|st| match (st.started, st.done) {
+                    (Some(s), Some(d)) => Some(d.saturating_sub(s).max(1)),
+                    _ => None,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Convenience: admit every wave, run to completion (or `max_rounds`),
+/// and return the per-wave outcomes plus session metrics. Waves that
+/// fail pipelined admission fall back to a serialized session for the
+/// whole batch (mixed admission would reorder waves).
+pub fn run_stream(
+    g: &Graph,
+    waves: &[WaveInput],
+    max_rounds: u64,
+) -> (Vec<SimOutcome>, StreamMetrics) {
+    let mut session = StreamSession::new(g);
+    if session.mode() == WaveMode::Pipelined
+        && waves
+            .iter()
+            .any(|w| session.pipelined_admit_error(w).is_some())
+    {
+        session = StreamSession::with_mode(g, WaveMode::Serialized);
+    }
+    for w in waves {
+        session.admit(w).expect("serialized admission is total");
+    }
+    session.run(max_rounds);
+    let outcomes = (0..session.n_waves()).map(|w| session.wave_outcome(w)).collect();
+    (outcomes, session.metrics())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::GraphBuilder;
+    use crate::sim::{run_token, SimConfig};
+
+    fn adder() -> Graph {
+        let mut b = GraphBuilder::new("adder");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, c], &[z]);
+        b.finish().unwrap()
+    }
+
+    /// a 4-deep pipeline: z = not((a + b) * c) stage-by-stage.
+    fn deep_pipeline() -> Graph {
+        let mut b = GraphBuilder::new("pipe");
+        let a = b.input_port("a");
+        let x = b.input_port("b");
+        let c = b.input_port("c");
+        let s = b.op2(Op::Add, a, x);
+        let f = b.node(Op::Fifo(2), &[s], &[]);
+        let fo = b.out_arc(f, 0);
+        let m = b.op2(Op::Mul, fo, c);
+        let z = b.output_port("z");
+        b.node(Op::Not, &[m], &[z]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn adder_is_overlap_safe_loops_are_not() {
+        assert!(overlap_safe(&adder()));
+        assert!(overlap_safe(&deep_pipeline()));
+        for b in crate::bench_defs::BenchId::ALL {
+            assert!(
+                !overlap_safe(&crate::bench_defs::build(b)),
+                "{} has loops/merges and must be serialized",
+                b.slug()
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_waves_are_demuxed_and_match_isolated_runs() {
+        let g = deep_pipeline();
+        let waves: Vec<WaveInput> = (0..5)
+            .map(|w| {
+                BTreeMap::from([
+                    ("a".to_string(), vec![w as Word, w as Word + 1]),
+                    ("b".to_string(), vec![10, 20]),
+                    ("c".to_string(), vec![3, 3]),
+                ])
+            })
+            .collect();
+        let (outs, metrics) = run_stream(&g, &waves, 100_000);
+        assert_eq!(metrics.waves_completed, 5);
+        assert_eq!(metrics.tag_stalls, 0);
+        for (w, wave) in waves.iter().enumerate() {
+            let mut cfg = SimConfig::new();
+            for (p, s) in wave {
+                cfg = cfg.inject(p, s.clone());
+            }
+            let alone = run_token(&g, &cfg);
+            assert_eq!(outs[w].outputs, alone.outputs, "wave {w}");
+            assert!(outs[w].quiescent);
+        }
+    }
+
+    #[test]
+    fn pipelined_beats_run_to_completion() {
+        let g = deep_pipeline();
+        let waves: Vec<WaveInput> = (0..16)
+            .map(|w| {
+                BTreeMap::from([
+                    ("a".to_string(), vec![w as Word]),
+                    ("b".to_string(), vec![2]),
+                    ("c".to_string(), vec![5]),
+                ])
+            })
+            .collect();
+        let mut r2c_cycles = 0u64;
+        for wave in &waves {
+            let mut cfg = SimConfig::new();
+            for (p, s) in wave {
+                cfg = cfg.inject(p, s.clone());
+            }
+            r2c_cycles += run_token(&g, &cfg).cycles;
+        }
+        let (_, m) = run_stream(&g, &waves, 100_000);
+        assert!(
+            m.rounds < r2c_cycles,
+            "streamed {} rounds vs run-to-completion {}",
+            m.rounds,
+            r2c_cycles
+        );
+        assert_eq!(m.waves_completed, 16);
+    }
+
+    #[test]
+    fn serialized_waves_match_isolated_runs_on_a_loop_graph() {
+        let g = crate::bench_defs::build(crate::bench_defs::BenchId::Fibonacci);
+        let mut session = StreamSession::new(&g);
+        assert_eq!(session.mode(), WaveMode::Serialized);
+        let waves: Vec<WaveInput> = [3i16, 7, 0, 11]
+            .iter()
+            .map(|&n| BTreeMap::from([("n".to_string(), vec![n])]))
+            .collect();
+        for w in &waves {
+            session.admit(w).unwrap();
+        }
+        session.run(1_000_000);
+        for (w, wave) in waves.iter().enumerate() {
+            let mut cfg = SimConfig::new();
+            for (p, s) in wave {
+                cfg = cfg.inject(p, s.clone());
+            }
+            let alone = run_token(&g, &cfg);
+            assert_eq!(
+                session.wave_outputs(w as u32),
+                &alone.outputs,
+                "wave {w} (n={})",
+                wave["n"][0]
+            );
+            assert!(session.wave_done(w as u32));
+        }
+        assert_eq!(session.metrics().tag_stalls, 0);
+    }
+
+    #[test]
+    fn serialized_flushes_stalled_waves() {
+        // An adder fed only one operand stalls; the next wave must still
+        // run clean and produce its own result.
+        let g = adder();
+        let mut session = StreamSession::with_mode(&g, WaveMode::Serialized);
+        session
+            .admit(&BTreeMap::from([("a".to_string(), vec![1])]))
+            .unwrap();
+        session
+            .admit(&BTreeMap::from([
+                ("a".to_string(), vec![2]),
+                ("b".to_string(), vec![40]),
+            ]))
+            .unwrap();
+        session.run(10_000);
+        let w0 = session.wave_outcome(0);
+        let w1 = session.wave_outcome(1);
+        assert_eq!(w0.stream("z"), &[] as &[Word]);
+        assert!(!w0.quiescent, "stalled wave is not quiescent");
+        assert_eq!(w1.stream("z"), &[42]);
+        assert!(w1.quiescent);
+    }
+
+    #[test]
+    fn pipelined_admission_rejects_rate_mismatch() {
+        let g = adder();
+        let mut session = StreamSession::new(&g);
+        assert_eq!(session.mode(), WaveMode::Pipelined);
+        let bad = BTreeMap::from([("a".to_string(), vec![1, 2])]);
+        assert!(matches!(
+            session.admit(&bad),
+            Err(StreamError::RateMismatch(_))
+        ));
+        let unknown = BTreeMap::from([
+            ("a".to_string(), vec![1]),
+            ("b".to_string(), vec![2]),
+            ("zz".to_string(), vec![3]),
+        ]);
+        assert!(matches!(
+            session.admit(&unknown),
+            Err(StreamError::UnknownPort(_))
+        ));
+    }
+
+    #[test]
+    fn metrics_and_histogram_are_sane() {
+        let g = adder();
+        let waves: Vec<WaveInput> = (0..8)
+            .map(|w| {
+                BTreeMap::from([
+                    ("a".to_string(), vec![w as Word]),
+                    ("b".to_string(), vec![1]),
+                ])
+            })
+            .collect();
+        let (_, m) = run_stream(&g, &waves, 10_000);
+        assert_eq!(m.waves_completed, 8);
+        assert!(m.tokens_per_cycle() > 0.0);
+        assert!(m.occupancy(1) > 0.0 && m.occupancy(1) <= 1.0);
+        let hist = m.latency_histogram(4);
+        let total: usize = hist.iter().map(|r| r.2).sum();
+        assert_eq!(total, 8);
+    }
+}

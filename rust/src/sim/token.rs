@@ -199,6 +199,42 @@ impl<'g> TokenSim<'g> {
             .unwrap_or_default()
     }
 
+    /// Re-arm every `Const` node so it emits its reset token once more —
+    /// the software analogue of pulsing the fabric's reset line between
+    /// input sets. The streamed sharded/reconfig executors call this at
+    /// each wave boundary so a resident graph can process the next wave
+    /// exactly as a freshly loaded one would.
+    pub fn rearm_consts(&mut self) {
+        for (ni, n) in self.g.nodes.iter().enumerate() {
+            if matches!(n.op, Op::Const(_)) {
+                self.const_done[ni] = false;
+                self.mark(ni as i32);
+            }
+        }
+    }
+
+    /// Drop every token still in flight (arcs, FIFO queues, pending
+    /// injections) — the rest of the wave-boundary reset. Collected
+    /// output streams are left untouched; drain them with
+    /// [`TokenSim::take_stream`] before purging.
+    pub fn purge(&mut self) {
+        for t in self.tokens.iter_mut() {
+            *t = None;
+        }
+        for q in self.fifos.iter_mut() {
+            q.clear();
+        }
+        for (_, q) in self.pending.iter_mut() {
+            q.clear();
+        }
+    }
+
+    /// Total operator firings so far (streamed executors take deltas at
+    /// wave boundaries).
+    pub fn firings(&self) -> u64 {
+        self.firings
+    }
+
     /// Finalize into an outcome (offload driver use).
     pub fn into_outcome(self, cycles: u64, quiescent: bool) -> SimOutcome {
         SimOutcome {

@@ -3,8 +3,16 @@
 //! base seed; on failure it reports the failing seed so the case can be
 //! replayed exactly, and — when the input type supports it — retries a
 //! sequence of caller-provided shrink candidates.
+//!
+//! Also home to the **random-DFG generator** the differential
+//! conformance harness (`rust/tests/conformance.rs`) feeds to every
+//! engine: seeded, replayable graphs covering `const`, `fifo #k`,
+//! `copy`/ALU/decider pipelines, `dmerge`/`branch` routing and
+//! `build_loop` branch/merge loops.
 
 use super::Rng;
+use crate::dfg::{build_loop, ArcId, Graph, GraphBuilder, Op, Word};
+use std::collections::BTreeMap;
 
 /// Configuration for [`check`].
 #[derive(Debug, Clone, Copy)]
@@ -19,6 +27,20 @@ impl Default for PropCfg {
             cases: 64,
             base_seed: 0xDA7AF10B,
         }
+    }
+}
+
+impl PropCfg {
+    /// Like a literal `PropCfg`, but the case count can be overridden
+    /// through the `PROPTEST_CASES` environment variable — CI runs a
+    /// fixed-seed smoke subset (small count) of the same properties the
+    /// full suite runs at depth.
+    pub fn from_env(cases: usize, base_seed: u64) -> PropCfg {
+        let cases = std::env::var("PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(cases);
+        PropCfg { cases, base_seed }
     }
 }
 
@@ -41,6 +63,237 @@ pub fn check<T: std::fmt::Debug>(
             );
         }
     }
+}
+
+/// What kind of injection stream an input port of a generated graph
+/// expects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PortKind {
+    /// A loop trip-count: inject exactly one small non-negative token.
+    LoopCount,
+    /// A data stream: inject `len` tokens.
+    Stream,
+}
+
+/// A generated graph plus the port contract its workloads must follow.
+#[derive(Debug, Clone)]
+pub struct GenGraph {
+    pub graph: Graph,
+    /// `(port label, kind)` for every input port.
+    pub ports: Vec<(String, PortKind)>,
+}
+
+fn pop_random(r: &mut Rng, open: &mut Vec<ArcId>) -> ArcId {
+    let i = r.below(open.len());
+    open.swap_remove(i)
+}
+
+const ALU2: [Op; 9] = [
+    Op::Add,
+    Op::Sub,
+    Op::Mul,
+    Op::Div,
+    Op::And,
+    Op::Or,
+    Op::Xor,
+    Op::Shl,
+    Op::Shr,
+];
+const DECIDERS: [Op; 6] = [Op::IfGt, Op::IfGe, Op::IfLt, Op::IfLe, Op::IfEq, Op::IfDf];
+
+/// Knobs for [`random_dfg_with`]. Every flag off yields a pure
+/// unit-rate pipeline (`copy`/`not`/`fifo`/ALU/decider over stream
+/// ports, no cycles) — exactly the class the streaming tier may
+/// overlap ([`crate::sim::overlap_safe`]).
+#[derive(Debug, Clone, Copy)]
+pub struct GenCfg {
+    /// Emit free-form `dmerge`/`branch` routing. These strand tokens on
+    /// data-dependent paths, so only engines with *identical* arc
+    /// capacity (TokenSim, StreamSession) agree on arbitrary such
+    /// graphs; `FsmSim`'s latched input registers and `DynamicSim`'s
+    /// deeper queues add slack that legally admits extra firings behind
+    /// a stalled consumer.
+    pub routing: bool,
+    /// Emit a counted accumulator loop (the full branch/merge
+    /// while-schema via [`build_loop`]).
+    pub loops: bool,
+    /// Emit `const` sources as operands.
+    pub consts: bool,
+}
+
+/// Generate a random well-formed DFG. `branchy` is shorthand for all
+/// [`GenCfg`] knobs on; `!branchy` for all off.
+pub fn random_dfg(r: &mut Rng, branchy: bool) -> GenGraph {
+    random_dfg_with(
+        r,
+        GenCfg {
+            routing: branchy,
+            loops: branchy,
+            consts: branchy,
+        },
+    )
+}
+
+/// Generate a random well-formed DFG under explicit knobs.
+pub fn random_dfg_with(r: &mut Rng, cfg: GenCfg) -> GenGraph {
+    let mut b = GraphBuilder::new("gen");
+    let mut ports: Vec<(String, PortKind)> = Vec::new();
+    let mut open: Vec<ArcId> = Vec::new();
+
+    let n_ports = 1 + r.below(3);
+    for i in 0..n_ports {
+        let name = format!("p{i}");
+        open.push(b.input_port(&name));
+        ports.push((name, PortKind::Stream));
+    }
+
+    let ops = 3 + r.below(9);
+    for _ in 0..ops {
+        // Replenish operands: extra ports, or consts when allowed (a
+        // const is not unit-rate across waves).
+        while open.len() < 3 {
+            if cfg.consts && r.bool() {
+                open.push(b.constant(r.word(-50, 50)));
+            } else {
+                let name = format!("p{}", ports.len());
+                open.push(b.input_port(&name));
+                ports.push((name, PortKind::Stream));
+            }
+        }
+        match r.below(if cfg.routing { 12 } else { 10 }) {
+            0 => {
+                let a = pop_random(r, &mut open);
+                let (x, y) = b.copy(a);
+                open.push(x);
+                open.push(y);
+            }
+            1 => {
+                let a = pop_random(r, &mut open);
+                let n = b.node(Op::Fifo(1 + r.below(8) as u16), &[a], &[]);
+                open.push(b.out_arc(n, 0));
+            }
+            2 => {
+                let a = pop_random(r, &mut open);
+                let n = b.node(Op::Not, &[a], &[]);
+                open.push(b.out_arc(n, 0));
+            }
+            3 | 4 => {
+                let op = DECIDERS[r.below(DECIDERS.len())];
+                let a = pop_random(r, &mut open);
+                let c = pop_random(r, &mut open);
+                open.push(b.op2(op, a, c));
+            }
+            10 => {
+                // dmerge: decider-driven select between two operands.
+                let a = pop_random(r, &mut open);
+                let c = pop_random(r, &mut open);
+                let ctl = b.op2(DECIDERS[r.below(DECIDERS.len())], a, c);
+                while open.len() < 2 {
+                    open.push(b.constant(r.word(-50, 50)));
+                }
+                let d0 = pop_random(r, &mut open);
+                let d1 = pop_random(r, &mut open);
+                let n = b.node(Op::DMerge, &[ctl, d0, d1], &[]);
+                open.push(b.out_arc(n, 0));
+            }
+            11 => {
+                // branch: decider-routed token; both sides stay open.
+                let a = pop_random(r, &mut open);
+                let c = pop_random(r, &mut open);
+                let ctl = b.op2(DECIDERS[r.below(DECIDERS.len())], a, c);
+                while open.is_empty() {
+                    open.push(b.constant(r.word(-50, 50)));
+                }
+                let d = pop_random(r, &mut open);
+                let n = b.node(Op::Branch, &[ctl, d], &[]);
+                open.push(b.out_arc(n, 0));
+                open.push(b.out_arc(n, 1));
+            }
+            _ => {
+                let op = ALU2[r.below(ALU2.len())];
+                let a = pop_random(r, &mut open);
+                let c = pop_random(r, &mut open);
+                open.push(b.op2(op, a, c));
+            }
+        }
+    }
+
+    if cfg.loops && r.bool() {
+        // A counted accumulator loop: the full branch/merge while-schema
+        // (ndmerge back-edges, branch exits, copy fan-out, decider).
+        let nname = format!("n{}", ports.len());
+        let n_port = b.input_port(&nname);
+        ports.push((nname, PortKind::LoopCount));
+        let i0 = b.constant(0);
+        let one0 = b.constant(1);
+        let acc0 = b.constant(r.word(-20, 20));
+        let body_op = [Op::Add, Op::Sub, Op::Xor, Op::Or, Op::And][r.below(5)];
+        let exits = build_loop(
+            &mut b,
+            &[i0, n_port, one0, acc0],
+            &[0, 1],
+            |b, c| b.op2(Op::IfLt, c[0], c[1]),
+            |b, g| {
+                let (i_use, i_tap) = b.copy(g[0]);
+                let (one_use, one_back) = b.copy(g[2]);
+                let i_next = b.op2(Op::Add, i_use, one_use);
+                let acc_next = b.op2(body_op, g[3], i_tap);
+                vec![i_next, g[1], one_back, acc_next]
+            },
+        );
+        // The accumulator exit feeds back into the open pool half the
+        // time (loop output consumed downstream), else dangles as an
+        // output port.
+        if r.bool() {
+            open.push(exits[3]);
+        }
+    }
+
+    // Terminate floating input ports: an arc that appears in no
+    // statement would not survive the assembler round-trip, so each
+    // unconsumed port runs through a `not` whose result dangles as an
+    // anonymous output pin.
+    let floating: Vec<ArcId> = open
+        .iter()
+        .copied()
+        .filter(|&a| b.graph().arc(a).src.is_none())
+        .collect();
+    open.retain(|&a| b.graph().arc(a).src.is_some());
+    for a in floating {
+        b.node(Op::Not, &[a], &[]);
+    }
+
+    // A couple of named result taps (driven arcs only — renaming an
+    // unconsumed *input* port would break the port contract); every
+    // other open arc dangles as an anonymous output port (legal
+    // hardware: unused result pins).
+    let driven: Vec<ArcId> = open
+        .iter()
+        .copied()
+        .filter(|&a| b.graph().arc(a).src.is_some())
+        .collect();
+    for (i, &a) in driven.iter().take(2).enumerate() {
+        b.rename_arc(a, &format!("z{i}"));
+    }
+
+    GenGraph {
+        graph: b.finish().expect("generated graph is structurally valid"),
+        ports,
+    }
+}
+
+/// A random injection map honouring `gg`'s port contract: loop counts
+/// get one small token, streams get `len` tokens each.
+pub fn random_workload(r: &mut Rng, gg: &GenGraph, len: usize) -> BTreeMap<String, Vec<Word>> {
+    let mut m = BTreeMap::new();
+    for (name, kind) in &gg.ports {
+        let stream = match kind {
+            PortKind::LoopCount => vec![r.word(0, 6)],
+            PortKind::Stream => r.words(len.max(1), -100, 100),
+        };
+        m.insert(name.clone(), stream);
+    }
+    m
 }
 
 #[cfg(test)]

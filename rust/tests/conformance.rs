@@ -1,0 +1,370 @@
+//! Differential conformance harness.
+//!
+//! One semantics, many executors: `TokenSim`, `FsmSim`, `DynamicSim`,
+//! the streaming tier (`StreamSession`, pipelined and serialized), the
+//! sharded executor and the time-multiplexed executor must all produce
+//! identical output streams. This harness checks them against each
+//! other on:
+//!
+//! * seeded **random DFGs** from the generator in `util::proptest`
+//!   (covering `const`, `fifo #k`, `dmerge`/`branch` routing and
+//!   `build_loop` branch/merge loops), and
+//! * the six paper benchmarks under multi-wave streamed injection.
+//!
+//! Every property is replayable from the seed in its failure message.
+//! CI runs the same properties as a fixed-seed smoke subset by setting
+//! `PROPTEST_CASES` (see `.github/workflows/ci.yml`).
+
+use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::fabric::{self, FabricTopology};
+use dataflow_accel::sim::{
+    run_dynamic, run_fsm, run_stream, run_token, SimConfig, StreamSession, WaveInput, WaveMode,
+};
+use dataflow_accel::util::proptest::{
+    check, random_dfg, random_dfg_with, random_workload, GenCfg, GenGraph, PropCfg,
+};
+use dataflow_accel::util::Rng;
+use std::collections::BTreeMap;
+
+fn config_for(wl: &BTreeMap<String, Vec<i16>>, max_cycles: u64) -> SimConfig {
+    let mut cfg = SimConfig::new().max_cycles(max_cycles);
+    for (p, s) in wl {
+        cfg = cfg.inject(p, s.clone());
+    }
+    cfg
+}
+
+/// TokenSim == FsmSim == DynamicSim(k) == streamed (single serialized
+/// wave) on random DFGs with `const`s, `fifo #k`s and branch/merge
+/// loops, under single-token streams.
+///
+/// Why single-token streams and no free `dmerge`/`branch`: `FsmSim`'s
+/// latched input registers and `DynamicSim`'s deeper queues are extra
+/// arc capacity. On workloads that strand tokens behind a `copy`, that
+/// slack legally admits extra firings, so only *quiescing* cases define
+/// a cross-engine contract (unit-rate ops + the balanced loop schema
+/// quiesce by construction; the capacity-identical comparisons below
+/// cover arbitrary stranding).
+#[test]
+fn prop_engines_agree_on_random_dfgs() {
+    check(
+        "TokenSim == FsmSim == DynamicSim == streamed",
+        PropCfg::from_env(48, 0xD1FF_C0DE),
+        |r: &mut Rng| {
+            let gg = random_dfg_with(
+                r,
+                GenCfg {
+                    routing: false,
+                    loops: true,
+                    consts: true,
+                },
+            );
+            let wl = random_workload(r, &gg, 1);
+            let bound = 1 + r.below(4);
+            (gg, wl, bound)
+        },
+        |(gg, wl, bound): &(GenGraph, BTreeMap<String, Vec<i16>>, usize)| {
+            let g = &gg.graph;
+            let cfg = config_for(wl, 200_000);
+            let tok = run_token(g, &cfg);
+
+            let mut fsm_cfg = cfg.clone();
+            fsm_cfg.max_cycles *= 4;
+            let fsm = run_fsm(g, &fsm_cfg);
+            if fsm.outputs != tok.outputs {
+                return Err(format!(
+                    "FsmSim diverged: {:?} != {:?}",
+                    fsm.outputs, tok.outputs
+                ));
+            }
+
+            let dy = run_dynamic(g, &cfg, *bound);
+            if dy.outputs != tok.outputs {
+                return Err(format!(
+                    "DynamicSim(bound={bound}) diverged: {:?} != {:?}",
+                    dy.outputs, tok.outputs
+                ));
+            }
+
+            let (outs, metrics) = run_stream(g, std::slice::from_ref(wl), cfg.max_cycles);
+            if outs[0].outputs != tok.outputs {
+                return Err(format!(
+                    "streamed diverged: {:?} != {:?}",
+                    outs[0].outputs, tok.outputs
+                ));
+            }
+            if metrics.tag_stalls != 0 {
+                return Err(format!("tag stalls on a single wave: {}", metrics.tag_stalls));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Serialized multi-wave streaming == running each wave alone, on
+/// random branchy DFGs (waves may strand tokens; the session's
+/// wave-boundary reset must still isolate them).
+#[test]
+fn prop_serialized_waves_match_isolated_runs_on_random_dfgs() {
+    check(
+        "serialized waves == isolated TokenSim runs",
+        PropCfg::from_env(32, 0x5E71A1),
+        |r: &mut Rng| {
+            let gg = random_dfg(r, true);
+            let n_waves = 2 + r.below(3);
+            let waves: Vec<BTreeMap<String, Vec<i16>>> = (0..n_waves)
+                .map(|_| random_workload(r, &gg, 1 + r.below(3)))
+                .collect();
+            (gg, waves)
+        },
+        |(gg, waves): &(GenGraph, Vec<BTreeMap<String, Vec<i16>>>)| {
+            let g = &gg.graph;
+            let mut session = StreamSession::with_mode(g, WaveMode::Serialized);
+            for w in waves {
+                session.admit(w).map_err(|e| e.to_string())?;
+            }
+            session.run(200_000 * waves.len() as u64);
+            for (i, w) in waves.iter().enumerate() {
+                let alone = run_token(g, &config_for(w, 200_000));
+                if session.wave_outputs(i as u32) != &alone.outputs {
+                    return Err(format!(
+                        "wave {i}: streamed {:?} != isolated {:?}",
+                        session.wave_outputs(i as u32),
+                        alone.outputs
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pipelined (overlapping) streaming == running each wave alone, on
+/// random unit-rate pipeline DFGs — and the overlap must not be slower
+/// than run-to-completion.
+#[test]
+fn prop_pipelined_waves_match_isolated_runs_and_win_throughput() {
+    check(
+        "pipelined waves == isolated runs, streamed rounds <= r2c rounds",
+        PropCfg::from_env(32, 0xF10_11E),
+        |r: &mut Rng| {
+            let gg = random_dfg(r, false);
+            let len = 1 + r.below(3);
+            let n_waves = 3 + r.below(4);
+            let waves: Vec<BTreeMap<String, Vec<i16>>> = (0..n_waves)
+                .map(|_| random_workload(r, &gg, len))
+                .collect();
+            (gg, waves)
+        },
+        |(gg, waves): &(GenGraph, Vec<BTreeMap<String, Vec<i16>>>)| {
+            let g = &gg.graph;
+            if !dataflow_accel::sim::overlap_safe(g) {
+                return Err("pipeline generator produced a non-overlap-safe graph".into());
+            }
+            let mut r2c_cycles = 0u64;
+            let mut isolated = Vec::new();
+            for w in waves {
+                let out = run_token(g, &config_for(w, 200_000));
+                r2c_cycles += out.cycles;
+                isolated.push(out);
+            }
+            let (outs, metrics) = run_stream(g, waves, 200_000 * waves.len() as u64);
+            if metrics.waves_completed as usize != waves.len() {
+                return Err(format!(
+                    "only {}/{} waves completed",
+                    metrics.waves_completed,
+                    waves.len()
+                ));
+            }
+            for (i, alone) in isolated.iter().enumerate() {
+                if outs[i].outputs != alone.outputs {
+                    return Err(format!(
+                        "wave {i}: streamed {:?} != isolated {:?}",
+                        outs[i].outputs, alone.outputs
+                    ));
+                }
+            }
+            if metrics.tag_stalls != 0 {
+                return Err(format!("tag stalls: {}", metrics.tag_stalls));
+            }
+            if waves.len() >= 3 && metrics.rounds > r2c_cycles {
+                return Err(format!(
+                    "streamed makespan {} rounds > run-to-completion {}",
+                    metrics.rounds, r2c_cycles
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// All six paper benchmarks, multi-wave streamed injection through one
+/// resident session: per-wave output streams byte-identical to running
+/// each wave alone through whole-graph TokenSim.
+#[test]
+fn streamed_waves_match_isolated_runs_on_all_benchmarks() {
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let wls = bench_defs::wave_workloads(b, 4, 4, 0xBEE5);
+        let waves: Vec<WaveInput> = wls.iter().map(|w| w.inject.clone()).collect();
+        let budget: u64 = wls.iter().map(|w| w.max_cycles).sum();
+        let (outs, metrics) = run_stream(&g, &waves, budget);
+        assert_eq!(
+            metrics.waves_completed as usize,
+            waves.len(),
+            "{}: waves incomplete",
+            b.slug()
+        );
+        for (i, wl) in wls.iter().enumerate() {
+            let alone = run_token(&g, &wl.sim_config());
+            assert_eq!(
+                outs[i].outputs,
+                alone.outputs,
+                "{} wave {i}: streamed != isolated",
+                b.slug()
+            );
+            for (port, want) in &wl.expect {
+                assert_eq!(
+                    outs[i].stream(port),
+                    want.as_slice(),
+                    "{} wave {i} port `{port}`",
+                    b.slug()
+                );
+            }
+        }
+    }
+}
+
+/// Streamed injection through the sharded and reconfig executors agrees
+/// with whole-graph TokenSim per wave on every benchmark.
+#[test]
+fn streamed_fabric_executors_match_whole_graph() {
+    let mut rng = Rng::new(0xFAB_57B);
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = fabric::partition(&g, &topo).unwrap_or_else(|e| panic!("{}: {e}", b.slug()));
+        let wls: Vec<_> = (0..3)
+            .map(|_| bench_defs::workload(b, 1 + rng.below(5), rng.next_u64()))
+            .collect();
+        let waves: Vec<WaveInput> = wls.iter().map(|w| w.inject.clone()).collect();
+        let budget = wls.iter().map(|w| w.max_cycles).max().unwrap();
+
+        let sharded = fabric::run_sharded_waves(&plan, &waves, budget);
+        let (reconf, _stats) = fabric::run_reconfig_waves(&plan, &topo, &waves, budget);
+        for (i, wl) in wls.iter().enumerate() {
+            let whole = run_token(&g, &wl.sim_config());
+            assert_eq!(
+                sharded[i].outputs,
+                whole.outputs,
+                "{} wave {i}: sharded-streamed != whole",
+                b.slug()
+            );
+            assert_eq!(
+                reconf[i].outputs,
+                whole.outputs,
+                "{} wave {i}: reconfig-streamed != whole",
+                b.slug()
+            );
+        }
+    }
+}
+
+/// The streamed coordinator batch path equals the run-to-completion
+/// batch path per request.
+#[test]
+fn streamed_batch_path_matches_run_to_completion() {
+    use dataflow_accel::coordinator::{run_batch_native, run_batch_streamed};
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let cfgs: Vec<_> = (0..3)
+            .map(|s| bench_defs::workload(b, 2 + s, 40 + s as u64).sim_config())
+            .collect();
+        let native = run_batch_native(&g, &cfgs);
+        let streamed = run_batch_streamed(&g, &cfgs);
+        for i in 0..cfgs.len() {
+            assert_eq!(streamed[i].outputs, native[i].outputs, "{} #{i}", b.slug());
+        }
+    }
+}
+
+/// Print → parse round-trip on every random-generated graph (not just
+/// the six benchmarks): the printed assembler re-parses to a graph with
+/// identical structure and identical behaviour, and print∘parse is a
+/// fixpoint.
+#[test]
+fn prop_asm_roundtrip_on_random_dfgs() {
+    check(
+        "asm print -> parse round-trip on random DFGs",
+        PropCfg::from_env(48, 0xA5B_C0DE),
+        |r: &mut Rng| {
+            let gg = random_dfg(r, true);
+            let wl = random_workload(r, &gg, 1 + r.below(3));
+            (gg, wl)
+        },
+        |(gg, wl): &(GenGraph, BTreeMap<String, Vec<i16>>)| {
+            let g = &gg.graph;
+            let text = dataflow_accel::asm::print(g);
+            let g2 = dataflow_accel::asm::parse(&g.name, &text)
+                .map_err(|e| format!("re-parse failed: {e}\n{text}"))?;
+            if g2.n_nodes() != g.n_nodes() || g2.n_arcs() != g.n_arcs() {
+                return Err(format!(
+                    "shape changed: {}x{} -> {}x{}",
+                    g.n_nodes(),
+                    g.n_arcs(),
+                    g2.n_nodes(),
+                    g2.n_arcs()
+                ));
+            }
+            let text2 = dataflow_accel::asm::print(&g2);
+            if text2 != text {
+                return Err("print∘parse is not a fixpoint".into());
+            }
+            let cfg = config_for(wl, 200_000);
+            let a = run_token(g, &cfg);
+            let b = run_token(&g2, &cfg);
+            if a.outputs != b.outputs {
+                return Err(format!(
+                    "round-tripped graph diverged: {:?} != {:?}",
+                    b.outputs, a.outputs
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The dynamic engine agrees with the static engine on random DFGs for
+/// every queue bound (extends the per-benchmark seed property to
+/// generated graphs; quiescing cases, see `prop_engines_agree_*`).
+#[test]
+fn prop_dynamic_bounds_agree_on_random_dfgs() {
+    check(
+        "DynamicSim(k) == TokenSim on random DFGs",
+        PropCfg::from_env(24, 0xD1_CE2),
+        |r: &mut Rng| {
+            let gg = random_dfg_with(
+                r,
+                GenCfg {
+                    routing: false,
+                    loops: true,
+                    consts: true,
+                },
+            );
+            let wl = random_workload(r, &gg, 1);
+            (gg, wl)
+        },
+        |(gg, wl): &(GenGraph, BTreeMap<String, Vec<i16>>)| {
+            let g = &gg.graph;
+            let cfg = config_for(wl, 200_000);
+            let tok = run_token(g, &cfg);
+            for bound in [1usize, 2, 8] {
+                let dy = run_dynamic(g, &cfg, bound);
+                if dy.outputs != tok.outputs {
+                    return Err(format!("bound {bound} diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
