@@ -67,6 +67,16 @@ pub fn wave(n: usize, seed: u64) -> (WaveInput, Vec<Word>) {
     )
 }
 
+/// `count` successive independent waves of size `n` (wave `i` derives
+/// from `seed + i`), paired with their expected `z` streams — the
+/// SAXPY analogue of [`super::wave_workloads`], used by the perf
+/// harness and the lane conformance tests.
+pub fn waves(count: usize, n: usize, seed: u64) -> Vec<(WaveInput, Vec<Word>)> {
+    (0..count)
+        .map(|i| wave(n, seed.wrapping_add(i as u64)))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

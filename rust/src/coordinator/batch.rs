@@ -8,7 +8,7 @@
 
 use crate::dfg::Graph;
 use crate::runtime::{FabricBatch, FabricRuntime};
-use crate::sim::{AluReq, SimConfig, SimOutcome, TokenSim};
+use crate::sim::{run_token, AluReq, LaneSim, Program, SimConfig, SimOutcome, TokenSim, LANES};
 use anyhow::{bail, Result};
 
 /// How a batch evaluates its operator ALUs.
@@ -153,6 +153,62 @@ pub fn run_batch_native(g: &Graph, cfgs: &[SimConfig]) -> Vec<SimOutcome> {
     run_batch(g, cfgs, &BatchEngine::Native).expect("native engine is infallible")
 }
 
+/// Accounting for one lane-routed batch (see [`run_batch_lanes`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LaneBatchStats {
+    /// Lane chunks executed (`ceil(batch / 64)`).
+    pub chunks: usize,
+    /// Items re-run on the scalar engine because their lane did not
+    /// quiesce — the lanes→placed fallback.
+    pub scalar_reruns: usize,
+}
+
+/// The lane-vectorized batch path: compile `g` once, then run the batch
+/// in [`LANES`]-wide chunks through [`LaneSim`] — one pass over the
+/// compiled node table advances every item at once, instead of one
+/// interpreter walk per item (`run_batch_native`).
+///
+/// Conformance contract: per-item output streams are byte-identical to
+/// `run_batch_native` / single-instance `TokenSim` (scoped, as for the
+/// sharded executor, to graphs whose `ndmerge` arbitration is
+/// uncontended — the loop-schema invariant every benchmark holds; see
+/// `sim::lanes` module docs). Lane execution guarantees this at
+/// fixpoint; an item whose lane does NOT quiesce (its own deadlock, or
+/// a chunk-shared round budget cut short by a smaller per-item
+/// `max_cycles`) is transparently re-run on the scalar engine under
+/// its own config — the lanes→placed fallback the router's metrics
+/// expose.
+pub fn run_batch_lanes(g: &Graph, cfgs: &[SimConfig]) -> Vec<SimOutcome> {
+    run_batch_lanes_with_stats(g, cfgs).0
+}
+
+/// [`run_batch_lanes`], returning the chunk/fallback accounting.
+pub fn run_batch_lanes_with_stats(
+    g: &Graph,
+    cfgs: &[SimConfig],
+) -> (Vec<SimOutcome>, LaneBatchStats) {
+    if cfgs.is_empty() {
+        return (Vec::new(), LaneBatchStats::default());
+    }
+    let prog = Program::compile(g);
+    let mut stats = LaneBatchStats::default();
+    let mut outcomes = Vec::with_capacity(cfgs.len());
+    for chunk in cfgs.chunks(LANES) {
+        stats.chunks += 1;
+        let mut sim = LaneSim::new(&prog, chunk);
+        sim.run();
+        for (cfg, out) in chunk.iter().zip(sim.into_outcomes()) {
+            if out.quiescent {
+                outcomes.push(out);
+            } else {
+                stats.scalar_reruns += 1;
+                outcomes.push(run_token(g, cfg));
+            }
+        }
+    }
+    (outcomes, stats)
+}
+
 /// The streaming batch path: instead of B lockstep run-to-completion
 /// instances, pipeline the whole batch as successive waves through ONE
 /// resident [`crate::sim::StreamSession`]. Overlap-safe graphs admit
@@ -239,6 +295,52 @@ mod tests {
                     bench.slug()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn lane_batch_matches_native_batch() {
+        for bench in BenchId::ALL {
+            let g = bench_defs::build(bench);
+            let cfgs: Vec<_> = (0..6)
+                .map(|s| bench_defs::workload(bench, 3 + s, s as u64).sim_config())
+                .collect();
+            let native = run_batch_native(&g, &cfgs);
+            let (lanes, stats) = run_batch_lanes_with_stats(&g, &cfgs);
+            assert_eq!(stats.chunks, 1, "{}", bench.slug());
+            assert_eq!(lanes.len(), native.len(), "{}", bench.slug());
+            for i in 0..cfgs.len() {
+                assert_eq!(
+                    lanes[i].outputs,
+                    native[i].outputs,
+                    "{} item {i}",
+                    bench.slug()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lane_batch_reruns_non_quiescent_items_on_the_scalar_engine() {
+        use crate::dfg::{GraphBuilder, Op};
+        let mut b = GraphBuilder::new("adder");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, c], &[z]);
+        let g = b.finish().unwrap();
+        let cfgs = vec![
+            SimConfig::new().inject("a", vec![1]).inject("b", vec![2]),
+            // Deadlocked item: no `b` operand, and a much smaller own
+            // budget than the chunk's shared one.
+            SimConfig::new().inject("a", vec![9]).max_cycles(10),
+            SimConfig::new().inject("a", vec![3]).inject("b", vec![4]),
+        ];
+        let (outs, stats) = run_batch_lanes_with_stats(&g, &cfgs);
+        assert_eq!(stats.scalar_reruns, 1);
+        for (cfg, out) in cfgs.iter().zip(&outs) {
+            let alone = run_token(&g, cfg);
+            assert_eq!(out.outputs, alone.outputs);
         }
     }
 

@@ -20,5 +20,8 @@
 pub mod batch;
 pub mod router;
 
-pub use batch::{run_batch_native, run_batch_streamed, run_batch_xla, BatchEngine};
+pub use batch::{
+    run_batch_lanes, run_batch_lanes_with_stats, run_batch_native, run_batch_streamed,
+    run_batch_xla, BatchEngine, LaneBatchStats,
+};
 pub use router::{BatchMode, Coordinator, Engine, Metrics, Request, Response};

@@ -80,6 +80,12 @@ pub struct Metrics {
     pub fallback: AtomicU64,
     /// Waves pipelined through resident sessions (streamed mode only).
     pub streamed_waves: AtomicU64,
+    /// Placed batches served by the lane-vectorized engine (native
+    /// run-to-completion mode; subset of `placed`).
+    pub lanes: AtomicU64,
+    /// Items within lane batches re-run on the scalar engine because
+    /// their lane did not quiesce (the lanes→placed fallback).
+    pub lane_scalar_reruns: AtomicU64,
 }
 
 impl Metrics {
@@ -87,7 +93,8 @@ impl Metrics {
         let completed = self.completed.load(Ordering::Relaxed).max(1);
         format!(
             "requests {}/{} verified {} | batches {} (placed {}, sharded {}, reconfig {}, \
-             fallback {}) | streamed waves {} | fabric cycles {} | mean latency {:.1} ms",
+             fallback {}) | lanes {} (scalar reruns {}) | streamed waves {} | \
+             fabric cycles {} | mean latency {:.1} ms",
             self.completed.load(Ordering::Relaxed),
             self.submitted.load(Ordering::Relaxed),
             self.verified.load(Ordering::Relaxed),
@@ -96,6 +103,8 @@ impl Metrics {
             self.sharded.load(Ordering::Relaxed),
             self.reconfig.load(Ordering::Relaxed),
             self.fallback.load(Ordering::Relaxed),
+            self.lanes.load(Ordering::Relaxed),
+            self.lane_scalar_reruns.load(Ordering::Relaxed),
             self.streamed_waves.load(Ordering::Relaxed),
             self.fabric_cycles.load(Ordering::Relaxed),
             self.total_latency_us.load(Ordering::Relaxed) as f64 / completed as f64 / 1000.0,
@@ -402,7 +411,18 @@ fn run_jobs(
                 match runtime {
                     Some(rt) => run_batch(&g, &cfgs, &BatchEngine::Xla(rt))
                         .unwrap_or_else(|_| super::batch::run_batch_native(&g, &cfgs)),
-                    None => super::batch::run_batch_native(&g, &cfgs),
+                    // Native run-to-completion batches take the lane-
+                    // vectorized engine; items whose lane does not
+                    // quiesce fall back to the scalar placed engine
+                    // (counted in `lane_scalar_reruns`).
+                    None => {
+                        let (outs, stats) = super::batch::run_batch_lanes_with_stats(&g, &cfgs);
+                        metrics.lanes.fetch_add(1, Ordering::Relaxed);
+                        metrics
+                            .lane_scalar_reruns
+                            .fetch_add(stats.scalar_reruns as u64, Ordering::Relaxed);
+                        outs
+                    }
                 }
             }
         }
@@ -486,6 +506,53 @@ mod tests {
         }
         assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 18);
         assert_eq!(c.metrics.verified.load(Ordering::Relaxed), 18);
+        c.shutdown();
+    }
+
+    #[test]
+    fn native_placed_batches_take_the_lane_engine() {
+        let c = Coordinator::start(2, Engine::Native, None, 8).unwrap();
+        let rxs: Vec<_> = (0..10)
+            .map(|i| {
+                c.submit(Request {
+                    bench: BenchId::DotProd,
+                    n: 3 + i % 4,
+                    seed: i as u64,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert!(resp.verified, "{:?} failed on lane route", resp.request);
+        }
+        assert!(c.metrics.lanes.load(Ordering::Relaxed) >= 1);
+        assert!(c.metrics.placed.load(Ordering::Relaxed) >= 1);
+        // Benchmark workloads quiesce — no scalar fallback expected.
+        assert_eq!(c.metrics.lane_scalar_reruns.load(Ordering::Relaxed), 0);
+        assert!(c.metrics.summary().contains("lanes"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn streamed_mode_bypasses_the_lane_engine() {
+        // The lanes route serves native run-to-completion batches only;
+        // streamed batches keep the resident-session path (the
+        // placed/streamed side of the route lattice).
+        let c = Coordinator::start_streamed(1, 4).unwrap();
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                c.submit(Request {
+                    bench: BenchId::Fibonacci,
+                    n: 4 + i,
+                    seed: i as u64,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(60)).unwrap().verified);
+        }
+        assert_eq!(c.metrics.lanes.load(Ordering::Relaxed), 0);
+        assert!(c.metrics.streamed_waves.load(Ordering::Relaxed) >= 4);
         c.shutdown();
     }
 

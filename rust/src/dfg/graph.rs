@@ -110,7 +110,12 @@ impl Graph {
             .collect()
     }
 
-    /// Look up an arc by label.
+    /// Look up an arc by label — a linear scan; fine for one-off
+    /// lookups (labels are unique per graph; `validate` rejects
+    /// duplicates). Repeated lookups on hot paths go through an index
+    /// built once at construction instead: the parser interns labels in
+    /// its own map, and the executors resolve forwarding targets via
+    /// [`TokenSim::port_slot`](crate::sim::TokenSim::port_slot).
     pub fn arc_by_name(&self, name: &str) -> Option<ArcId> {
         self.arcs.iter().find(|a| a.name == name).map(|a| a.id)
     }

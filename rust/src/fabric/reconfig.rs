@@ -45,6 +45,17 @@ fn drive_contexts(
     let n = sims.len();
     let mut active_cycles = 0u64;
     let mut stalled_rotation = 0usize;
+    // Resolve each cut's destination injection slot once per call; the
+    // per-rotation forwarding below is then index-only.
+    let cut_slots: Vec<usize> = plan
+        .cuts
+        .iter()
+        .map(|cut| {
+            sims[cut.to]
+                .port_slot(&cut.name)
+                .unwrap_or_else(|| panic!("cut arc `{}` has no input half", cut.name))
+        })
+        .collect();
 
     loop {
         // Run the active context until it stops firing; the final zero-
@@ -59,13 +70,12 @@ fn drive_contexts(
             }
         }
         // Flush this context's cut outputs into the inter-context buffers.
-        for cut in &plan.cuts {
+        for (cut, &slot) in plan.cuts.iter().zip(&cut_slots) {
             if cut.from != *active {
                 continue;
             }
             for v in sims[cut.from].take_stream(&cut.name) {
-                let ok = sims[cut.to].enqueue(&cut.name, v);
-                debug_assert!(ok, "cut arc `{}` has no input half", cut.name);
+                sims[cut.to].enqueue_at(slot, v);
             }
         }
         if shard_fired == 0 {

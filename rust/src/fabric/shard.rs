@@ -77,6 +77,17 @@ pub(crate) fn merge_outcomes(
 /// Returns the rounds consumed. Shared by [`run_sharded`] and
 /// [`run_sharded_waves`] so the forwarding/stop rules cannot diverge.
 pub(crate) fn drive_lockstep(sims: &mut [TokenSim], plan: &PartitionPlan, budget: u64) -> u64 {
+    // Resolve each cut's destination injection slot once; the per-round
+    // forwarding below is then index-only (no per-token label lookup).
+    let cut_slots: Vec<usize> = plan
+        .cuts
+        .iter()
+        .map(|cut| {
+            sims[cut.to]
+                .port_slot(&cut.name)
+                .unwrap_or_else(|| panic!("cut arc `{}` has no input half", cut.name))
+        })
+        .collect();
     let mut rounds = 0u64;
     let mut idle_rounds = 0u32;
     while rounds < budget {
@@ -85,12 +96,11 @@ pub(crate) fn drive_lockstep(sims: &mut [TokenSim], plan: &PartitionPlan, budget
             fired += sim.step();
         }
         let mut moved = 0usize;
-        for cut in &plan.cuts {
+        for (cut, &slot) in plan.cuts.iter().zip(&cut_slots) {
             let vals = sims[cut.from].take_stream(&cut.name);
             moved += vals.len();
             for v in vals {
-                let ok = sims[cut.to].enqueue(&cut.name, v);
-                debug_assert!(ok, "cut arc `{}` has no input half", cut.name);
+                sims[cut.to].enqueue_at(slot, v);
             }
         }
         rounds += 1;

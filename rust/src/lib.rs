@@ -18,8 +18,10 @@
 //! * [`frontend`] — the paper's named future work: a mini-C compiler that
 //!   lowers a C subset to static dataflow graphs.
 //! * [`sim`] — cycle-accurate simulation of the paper's operator FSMs
-//!   (Figs. 5/6) and handshake protocol (Fig. 3), plus a fast token engine
-//!   and a dynamic (tagged-token) extension.
+//!   (Figs. 5/6) and handshake protocol (Fig. 3), plus a fast token engine,
+//!   a dynamic (tagged-token) extension, the wave-pipelined streaming tier,
+//!   and the lane tier (compiled programs + 64-wide lockstep batch
+//!   execution, `sim::compiled` / `sim::lanes`).
 //! * [`vhdl`] — the VHDL backend the paper's assembler targeted.
 //! * [`estimate`] — structural FF/LUT/slice/Fmax models replacing the
 //!   Xilinx ISE synthesis flow we do not have.

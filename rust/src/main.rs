@@ -6,6 +6,7 @@
 //! dataflow-accel place <bench> [--shards K] [--channels N] [--check] [--reconfig]
 //! dataflow-accel stream <bench|saxpy> [--waves 8] [--n 8] [--seed 7]
 //! dataflow-accel stream --table [--waves 8] [--n 8] [--seed 7]
+//! dataflow-accel bench [--quick] [--items 64] [--n 16] [--seed 7] [--out BENCH_3.json]
 //! dataflow-accel table1 [--fig8]
 //! dataflow-accel sweep [--bench all] [--requests 64] [--n 16] [--engine native|xla]
 //!                      [--workers 4] [--batch 8] [--stream]
@@ -21,7 +22,7 @@ use dataflow_accel::{estimate, frontend, report, sim, vhdl};
 fn main() {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["fig8", "verbose", "check", "reconfig", "table", "stream"],
+        &["fig8", "verbose", "check", "reconfig", "table", "stream", "quick"],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -29,6 +30,7 @@ fn main() {
         "compile" => cmd_compile(&args),
         "place" => cmd_place(&args),
         "stream" => cmd_stream(&args),
+        "bench" => cmd_bench(&args),
         "table1" => {
             if args.has("fig8") {
                 print!("{}", report::fig8_csv());
@@ -49,8 +51,12 @@ fn main() {
                  stream: wave-pipelined execution over a resident graph \n\
                  \x20 --waves K     number of independent input waves (default 8)\n\
                  \x20 --table       print the streamed-vs-run-to-completion throughput table\n\
+                 bench: scalar vs streamed vs lane engines over all seven benchmarks \n\
+                 \x20 --quick       reduced iteration counts (the CI smoke job)\n\
+                 \x20 --items B     batch items per benchmark (default 64; 8 with --quick)\n\
+                 \x20 --out PATH    write the JSON trajectory (default BENCH_3.json)\n\
                  sweep: --stream routes batches through resident streaming sessions\n\
-                 benchmarks: {} saxpy (stream only)",
+                 benchmarks: {} saxpy (stream/bench only)",
                 BenchId::ALL.map(|b| b.slug()).join(" ")
             );
         }
@@ -255,6 +261,33 @@ fn cmd_stream(args: &Args) {
     for (lo, hi, count) in m.latency_histogram(6) {
         println!("    [{lo:>6}, {hi:>6})  {}", "#".repeat(count));
     }
+}
+
+fn cmd_bench(args: &Args) {
+    let quick = args.has("quick");
+    let items = args.get_usize("items", if quick { 8 } else { 64 });
+    let n = args.get_usize("n", if quick { 4 } else { 16 });
+    let seed = args.get_u64("seed", 7);
+    let out_path = args.get_or("out", "BENCH_3.json");
+    let cfg = report::perf::PerfCfg::new(items, n, seed, quick);
+    let rows = report::perf::run_suite(&cfg);
+    print!("{}", report::perf::render_table(&rows));
+    // Verification gates the trajectory file: numbers from an engine
+    // whose outputs diverged must never land in BENCH_*.json.
+    let mut unverified = Vec::new();
+    for r in &rows {
+        for e in r.engines.iter().filter(|e| !e.verified) {
+            unverified.push(format!("{}/{}", r.name, e.engine));
+        }
+    }
+    if !unverified.is_empty() {
+        eprintln!("bench: UNVERIFIED engine outputs: {}", unverified.join(", "));
+        eprintln!("bench: refusing to write {out_path}");
+        std::process::exit(1);
+    }
+    let json = report::perf::to_json(&rows, &cfg);
+    std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
+    println!("wrote {out_path}");
 }
 
 fn cmd_sweep(args: &Args) {

@@ -1,10 +1,14 @@
-//! Table 1 / Fig. 8 renderers.
+//! Table 1 / Fig. 8 renderers, plus the perf harness ([`perf`]).
 //!
 //! [`table1`] regenerates the paper's Table 1 — FF / LUT / Slices / Max
 //! Freq for every benchmark under C-to-Verilog, LALP and the Algorithm
 //! Accelerator — side by side with the paper's published numbers.
 //! [`fig8_csv`] emits the same data as the four bar-chart series of
-//! Fig. 8 in CSV form (one panel per metric).
+//! Fig. 8 in CSV form (one panel per metric). [`perf`] is the `bench`
+//! subcommand's engine-comparison harness (scalar vs streamed vs lane
+//! engines, BENCH_*.json trajectory).
+
+pub mod perf;
 
 use crate::baselines::{ctv, kernel_spec, lalp};
 use crate::bench_defs::{self, build, BenchId};

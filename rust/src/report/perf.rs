@@ -1,0 +1,423 @@
+//! The first-class perf harness behind the `bench` CLI subcommand.
+//!
+//! Runs the **seven-benchmark suite** — the paper's six loop-schema
+//! benchmarks plus the pipelineable SAXPY workload — as a batch of
+//! independent items under three engines:
+//!
+//! * `scalar`  — the run-to-completion baseline: one whole-graph
+//!   [`TokenSim`](crate::sim::TokenSim) run per item (what every PR
+//!   before the lane engine shipped as the batch path's inner loop).
+//! * `streamed` — the resident [`crate::sim::StreamSession`]
+//!   admitting the batch as successive waves.
+//! * `lanes`   — the lane-vectorized engine: the batch in lockstep
+//!   chunks of 64 through one compiled program
+//!   ([`run_batch_lanes`](crate::coordinator::run_batch_lanes)).
+//!
+//! Timing is hand-rolled `std::time::Instant` through the crate's own
+//! criterion-style loop ([`crate::util::bench`]); no external deps.
+//! Every engine's outputs are verified against the benchmark's software
+//! reference before its numbers are reported, so a wrong-but-fast
+//! engine can never seed the trajectory.
+//!
+//! The results serialize to a hand-rolled JSON file (`BENCH_<k>.json`,
+//! schema `dataflow-accel-bench/v1`) so future PRs have a throughput
+//! trajectory to regress against; EXPERIMENTS.md documents how to run
+//! and read it, and CI's `bench-smoke` job uploads a reduced-iteration
+//! run per push.
+
+use crate::bench_defs::{self, BenchId};
+use crate::coordinator::run_batch_lanes;
+use crate::dfg::Word;
+use crate::sim::{self, overlap_safe, run_token, SimConfig, SimOutcome, WaveInput};
+use crate::util::bench::{self as timing, BenchCfg};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Harness configuration (CLI flags of the `bench` subcommand).
+#[derive(Debug, Clone, Copy)]
+pub struct PerfCfg {
+    /// Batch items per benchmark (64 = one full lane chunk).
+    pub items: usize,
+    /// Workload size per item.
+    pub n: usize,
+    pub seed: u64,
+    /// Reduced iteration counts (the CI smoke job).
+    pub quick: bool,
+}
+
+impl PerfCfg {
+    pub fn new(items: usize, n: usize, seed: u64, quick: bool) -> Self {
+        PerfCfg {
+            items,
+            n,
+            seed,
+            quick,
+        }
+    }
+
+    fn timing(&self) -> BenchCfg {
+        if self.quick {
+            BenchCfg {
+                warmup_iters: 0,
+                samples: 2,
+                iters_per_sample: 1,
+            }
+        } else {
+            BenchCfg {
+                warmup_iters: 1,
+                samples: 7,
+                iters_per_sample: 1,
+            }
+        }
+    }
+}
+
+/// One engine's measurement on one benchmark's batch.
+#[derive(Debug, Clone)]
+pub struct EngineResult {
+    pub engine: &'static str,
+    /// Median wall time for the whole batch, nanoseconds.
+    pub median_ns: f64,
+    pub tokens_out: u64,
+    pub firings: u64,
+    /// All items' outputs matched the software reference.
+    pub verified: bool,
+}
+
+impl EngineResult {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_out as f64 / (self.median_ns.max(1.0) * 1e-9)
+    }
+
+    pub fn firings_per_sec(&self) -> f64 {
+        self.firings as f64 / (self.median_ns.max(1.0) * 1e-9)
+    }
+}
+
+/// One benchmark's row: the same batch under every engine.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub name: String,
+    /// Acyclic unit-rate — the lane engine's topo fast path applies
+    /// (and the streamed engine may overlap waves).
+    pub pipelineable: bool,
+    pub items: usize,
+    pub engines: Vec<EngineResult>,
+}
+
+impl BenchRow {
+    pub fn engine(&self, name: &str) -> Option<&EngineResult> {
+        self.engines.iter().find(|e| e.engine == name)
+    }
+
+    /// Wall-time speedup of `engine` over the scalar baseline.
+    pub fn speedup(&self, engine: &str) -> f64 {
+        match (self.engine("scalar"), self.engine(engine)) {
+            (Some(s), Some(e)) => s.median_ns / e.median_ns.max(1.0),
+            _ => 1.0,
+        }
+    }
+}
+
+/// One benchmark's batch: per-item configs and expected output streams.
+struct Batch {
+    name: String,
+    pipelineable: bool,
+    cfgs: Vec<SimConfig>,
+    waves: Vec<WaveInput>,
+    expects: Vec<BTreeMap<String, Vec<Word>>>,
+    budget: u64,
+    graph: crate::dfg::Graph,
+}
+
+fn bench_batch(b: BenchId, cfg: &PerfCfg) -> Batch {
+    let wls = bench_defs::wave_workloads(b, cfg.items, cfg.n, cfg.seed);
+    let graph = bench_defs::build(b);
+    Batch {
+        name: b.slug().to_string(),
+        pipelineable: overlap_safe(&graph),
+        cfgs: wls.iter().map(|w| w.sim_config()).collect(),
+        waves: wls.iter().map(|w| w.inject.clone()).collect(),
+        expects: wls.iter().map(|w| w.expect.clone()).collect(),
+        budget: wls.iter().map(|w| w.max_cycles).sum(),
+        graph,
+    }
+}
+
+fn saxpy_batch(cfg: &PerfCfg) -> Batch {
+    let graph = bench_defs::saxpy::build();
+    let pairs = bench_defs::saxpy::waves(cfg.items, cfg.n, cfg.seed);
+    let budget = 1_000_000u64.saturating_mul(cfg.items.max(1) as u64);
+    Batch {
+        name: "saxpy".to_string(),
+        pipelineable: overlap_safe(&graph),
+        cfgs: pairs
+            .iter()
+            .map(|(w, _)| {
+                let mut c = SimConfig::new();
+                for (p, s) in w {
+                    c = c.inject(p, s.clone());
+                }
+                c
+            })
+            .collect(),
+        waves: pairs.iter().map(|(w, _)| w.clone()).collect(),
+        expects: pairs
+            .iter()
+            .map(|(_, z)| BTreeMap::from([("z".to_string(), z.clone())]))
+            .collect(),
+        budget,
+        graph,
+    }
+}
+
+fn summarize(
+    engine: &'static str,
+    median_ns: f64,
+    outs: &[SimOutcome],
+    expects: &[BTreeMap<String, Vec<Word>>],
+) -> EngineResult {
+    let tokens_out = outs
+        .iter()
+        .map(|o| o.outputs.values().map(|v| v.len() as u64).sum::<u64>())
+        .sum();
+    let firings = outs.iter().map(|o| o.firings).sum();
+    let mut verified = outs.len() == expects.len();
+    for (o, want) in outs.iter().zip(expects) {
+        verified &= want.iter().all(|(port, stream)| o.stream(port) == stream.as_slice());
+    }
+    EngineResult {
+        engine,
+        median_ns,
+        tokens_out,
+        firings,
+        verified,
+    }
+}
+
+fn measure_batch(batch: &Batch, cfg: &PerfCfg) -> BenchRow {
+    let timing_cfg = cfg.timing();
+    let g = &batch.graph;
+
+    // Run-to-completion scalar baseline: one TokenSim walk per item.
+    let scalar_outs: Vec<SimOutcome> = batch.cfgs.iter().map(|c| run_token(g, c)).collect();
+    let m = timing::run(&format!("{}/scalar", batch.name), timing_cfg, || {
+        batch.cfgs.iter().map(|c| run_token(g, c)).collect::<Vec<_>>()
+    });
+    let scalar = summarize("scalar", m.median_ns, &scalar_outs, &batch.expects);
+
+    // Streamed: the whole batch as successive waves through one
+    // resident session.
+    let (stream_outs, _) = sim::run_stream(g, &batch.waves, batch.budget);
+    let m = timing::run(&format!("{}/streamed", batch.name), timing_cfg, || {
+        sim::run_stream(g, &batch.waves, batch.budget)
+    });
+    let streamed = summarize("streamed", m.median_ns, &stream_outs, &batch.expects);
+
+    // Lanes: lockstep chunks of 64 through one compiled program.
+    let lane_outs = run_batch_lanes(g, &batch.cfgs);
+    let m = timing::run(&format!("{}/lanes", batch.name), timing_cfg, || {
+        run_batch_lanes(g, &batch.cfgs)
+    });
+    let lanes = summarize("lanes", m.median_ns, &lane_outs, &batch.expects);
+
+    BenchRow {
+        name: batch.name.clone(),
+        pipelineable: batch.pipelineable,
+        items: batch.cfgs.len(),
+        engines: vec![scalar, streamed, lanes],
+    }
+}
+
+/// Run the whole suite (six paper benchmarks + SAXPY) under all three
+/// engines.
+pub fn run_suite(cfg: &PerfCfg) -> Vec<BenchRow> {
+    let mut rows = Vec::new();
+    for b in BenchId::ALL {
+        rows.push(measure_batch(&bench_batch(b, cfg), cfg));
+    }
+    rows.push(measure_batch(&saxpy_batch(cfg), cfg));
+    rows
+}
+
+/// Geometric mean of the lane-engine speedup over the scalar baseline,
+/// across `rows` filtered by `pipelineable_only`. Returns 1.0 when the
+/// filter selects nothing.
+pub fn geomean_lane_speedup(rows: &[BenchRow], pipelineable_only: bool) -> f64 {
+    let speedups: Vec<f64> = rows
+        .iter()
+        .filter(|r| !pipelineable_only || r.pipelineable)
+        .map(|r| r.speedup("lanes").max(1e-9))
+        .collect();
+    if speedups.is_empty() {
+        return 1.0;
+    }
+    let log_sum: f64 = speedups.iter().map(|s| s.ln()).sum();
+    (log_sum / speedups.len() as f64).exp()
+}
+
+fn json_escape(s: &str) -> String {
+    // Benchmark names are ASCII slugs, but stay safe anyway.
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Serialize the suite results (schema `dataflow-accel-bench/v1`).
+pub fn to_json(rows: &[BenchRow], cfg: &PerfCfg) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"dataflow-accel-bench/v1\",\n");
+    writeln!(out, "  \"quick\": {},", cfg.quick).unwrap();
+    writeln!(out, "  \"items\": {},", cfg.items).unwrap();
+    writeln!(out, "  \"n\": {},", cfg.n).unwrap();
+    writeln!(out, "  \"seed\": {},", cfg.seed).unwrap();
+    out.push_str("  \"benchmarks\": [\n");
+    for (ri, r) in rows.iter().enumerate() {
+        let row_comma = if ri + 1 < rows.len() { "," } else { "" };
+        out.push_str("    {\n");
+        writeln!(out, "      \"name\": \"{}\",", json_escape(&r.name)).unwrap();
+        writeln!(out, "      \"pipelineable\": {},", r.pipelineable).unwrap();
+        writeln!(out, "      \"items\": {},", r.items).unwrap();
+        out.push_str("      \"engines\": [\n");
+        for (ei, e) in r.engines.iter().enumerate() {
+            let comma = if ei + 1 < r.engines.len() { "," } else { "" };
+            let speedup = r.speedup(e.engine);
+            out.push_str("        {\n");
+            writeln!(out, "          \"engine\": \"{}\",", e.engine).unwrap();
+            writeln!(out, "          \"median_ns\": {:.0},", e.median_ns).unwrap();
+            writeln!(out, "          \"tokens_out\": {},", e.tokens_out).unwrap();
+            writeln!(out, "          \"firings\": {},", e.firings).unwrap();
+            let tps = e.tokens_per_sec();
+            let fps = e.firings_per_sec();
+            writeln!(out, "          \"tokens_per_sec\": {tps:.1},").unwrap();
+            writeln!(out, "          \"firings_per_sec\": {fps:.1},").unwrap();
+            writeln!(out, "          \"speedup_vs_scalar\": {speedup:.3},").unwrap();
+            writeln!(out, "          \"verified\": {}", e.verified).unwrap();
+            writeln!(out, "        }}{comma}").unwrap();
+        }
+        out.push_str("      ]\n");
+        writeln!(out, "    }}{row_comma}").unwrap();
+    }
+    out.push_str("  ],\n");
+    let all = geomean_lane_speedup(rows, false);
+    let pipe = geomean_lane_speedup(rows, true);
+    writeln!(out, "  \"geomean_lane_speedup\": {all:.3},").unwrap();
+    writeln!(out, "  \"geomean_lane_speedup_pipelineable\": {pipe:.3}").unwrap();
+    out.push_str("}\n");
+    out
+}
+
+/// Human-readable summary table (the `bench` subcommand's stdout).
+pub fn render_table(rows: &[BenchRow]) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "{:<12} {:>5} {:<10} {:>12} {:>14} {:>14} {:>8} {:>9}",
+        "benchmark",
+        "items",
+        "engine",
+        "median",
+        "tokens/s",
+        "firings/s",
+        "speedup",
+        "verified"
+    )
+    .unwrap();
+    for r in rows {
+        for e in &r.engines {
+            writeln!(
+                out,
+                "{:<12} {:>5} {:<10} {:>12} {:>14.0} {:>14.0} {:>7.2}x {:>9}",
+                r.name,
+                r.items,
+                e.engine,
+                timing::fmt_ns(e.median_ns),
+                e.tokens_per_sec(),
+                e.firings_per_sec(),
+                r.speedup(e.engine),
+                if e.verified { "yes" } else { "NO" }
+            )
+            .unwrap();
+        }
+    }
+    let all = geomean_lane_speedup(rows, false);
+    let pipe = geomean_lane_speedup(rows, true);
+    writeln!(
+        out,
+        "geomean lane speedup vs scalar: {all:.2}x (all), {pipe:.2}x (pipelineable)"
+    )
+    .unwrap();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> PerfCfg {
+        PerfCfg::new(3, 3, 11, true)
+    }
+
+    #[test]
+    fn suite_covers_seven_benchmarks_and_verifies() {
+        let rows = run_suite(&tiny_cfg());
+        assert_eq!(rows.len(), BenchId::ALL.len() + 1);
+        assert!(rows.iter().any(|r| r.name == "saxpy"));
+        for r in &rows {
+            assert_eq!(r.engines.len(), 3, "{}", r.name);
+            for e in &r.engines {
+                assert!(e.verified, "{}/{} failed verification", r.name, e.engine);
+                assert!(e.tokens_out > 0, "{}/{}", r.name, e.engine);
+                assert!(e.median_ns > 0.0, "{}/{}", r.name, e.engine);
+            }
+        }
+        let saxpy = rows.iter().find(|r| r.name == "saxpy").unwrap();
+        assert!(saxpy.pipelineable);
+        for b in BenchId::ALL {
+            let row = rows.iter().find(|r| r.name == b.slug()).unwrap();
+            assert!(!row.pipelineable, "{} is a loop schema", b.slug());
+        }
+    }
+
+    #[test]
+    fn json_is_well_formed_enough_to_grep() {
+        let cfg = tiny_cfg();
+        let rows = run_suite(&cfg);
+        let json = to_json(&rows, &cfg);
+        assert!(json.starts_with("{\n"));
+        assert!(json.ends_with("}\n"));
+        assert!(json.contains("\"schema\": \"dataflow-accel-bench/v1\""));
+        assert!(json.contains("\"geomean_lane_speedup_pipelineable\""));
+        assert_eq!(json.matches("\"engine\": \"lanes\"").count(), rows.len());
+        // Balanced braces/brackets (a cheap structural check; CI's
+        // smoke job runs a real JSON parser over the artifact).
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        // No bare NaN/inf can reach the file.
+        assert!(!json.contains("NaN") && !json.contains("inf"));
+    }
+
+    #[test]
+    fn table_renders_every_engine_row() {
+        let cfg = tiny_cfg();
+        let rows = run_suite(&cfg);
+        let t = render_table(&rows);
+        for r in &rows {
+            assert!(t.contains(&r.name));
+        }
+        assert!(t.contains("scalar") && t.contains("streamed") && t.contains("lanes"));
+        assert!(t.contains("geomean lane speedup"));
+    }
+
+    #[test]
+    fn geomean_handles_empty_filters() {
+        assert_eq!(geomean_lane_speedup(&[], true), 1.0);
+    }
+}

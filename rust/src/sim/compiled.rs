@@ -1,0 +1,235 @@
+//! Pre-compiled programs: dense, cache-friendly execution metadata for
+//! the lane engine ([`super::lanes`]).
+//!
+//! [`crate::dfg::Graph`] is built for construction and analysis: every
+//! node owns a `Vec<ArcId>` per port direction, so walking the graph in
+//! the interpreter hot loop chases two heap indirections per node per
+//! round. [`Program::compile`] flattens that once: one [`CNode`] per
+//! node with **inline port arrays** (`[u32; 3]` inputs / `[u32; 2]`
+//! outputs, padded with [`NO_ARC`] — no operator in the paper's set has
+//! more than 3 inputs or 2 outputs) and the opcode alongside, so a
+//! firing pass is a single linear scan over one contiguous table.
+//!
+//! For **acyclic unit-rate** graphs (no `branch`/`dmerge`/`ndmerge`/
+//! `const`, no cycles — the same structural predicate as
+//! [`super::overlap_safe`]) compilation additionally emits a
+//! producer-before-consumer **topological firing list**. On such graphs
+//! every operator consumes one token per input and produces one per
+//! output each firing, so the j-th token on every arc provably belongs
+//! to the j-th injected input position and the per-port output streams
+//! are independent of the firing schedule. The lane engine exploits
+//! this to fire nodes in topo order with immediate (non-staged) arc
+//! updates: a token ripples through the whole pipeline in one pass and
+//! the worklist machinery of the scalar engine disappears entirely.
+//! Graphs outside this class keep snapshot-round semantics (staged
+//! occupancy updates, table-order scan). See DESIGN.md §6 for why the
+//! fast path is legal exactly on this class.
+
+use crate::dfg::{Graph, Op, OpClass};
+
+/// Padding value for unused [`CNode`] port slots.
+pub const NO_ARC: u32 = u32::MAX;
+
+/// One operator in compiled form: opcode plus inline port arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CNode {
+    pub op: Op,
+    /// Input arcs in operator-port order, padded with [`NO_ARC`].
+    pub ins: [u32; 3],
+    /// Output arcs in operator-port order, padded with [`NO_ARC`].
+    pub outs: [u32; 2],
+}
+
+/// A [`Graph`] flattened for execution (see module docs).
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Source graph name (diagnostics).
+    pub name: String,
+    /// Arc count — the size of the lane engine's token storage.
+    pub n_arcs: usize,
+    /// The dense opcode/port table, in original node order.
+    pub nodes: Vec<CNode>,
+    /// Producer-before-consumer firing order; `Some` exactly when the
+    /// graph is acyclic and unit-rate (the topo fast path is legal —
+    /// module docs). `None` graphs are fired in table order under
+    /// snapshot-round semantics.
+    pub topo: Option<Vec<u32>>,
+    /// `(arc, label)` per input port, in arc-id order.
+    pub input_ports: Vec<(u32, String)>,
+    /// `(arc, label)` per output port, in arc-id order.
+    pub output_ports: Vec<(u32, String)>,
+}
+
+impl Program {
+    /// Flatten `g` into a [`Program`].
+    pub fn compile(g: &Graph) -> Program {
+        let nodes = g
+            .nodes
+            .iter()
+            .map(|n| {
+                debug_assert!(n.ins.len() <= 3 && n.outs.len() <= 2);
+                let mut ins = [NO_ARC; 3];
+                let mut outs = [NO_ARC; 2];
+                for (slot, &a) in ins.iter_mut().zip(&n.ins) {
+                    *slot = a.0;
+                }
+                for (slot, &a) in outs.iter_mut().zip(&n.outs) {
+                    *slot = a.0;
+                }
+                CNode { op: n.op, ins, outs }
+            })
+            .collect();
+        Program {
+            name: g.name.clone(),
+            n_arcs: g.n_arcs(),
+            nodes,
+            topo: topo_order(g),
+            input_ports: g
+                .input_ports()
+                .into_iter()
+                .map(|a| (a.0, g.arc(a).name.clone()))
+                .collect(),
+            output_ports: g
+                .output_ports()
+                .into_iter()
+                .map(|a| (a.0, g.arc(a).name.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Unit-rate operators: exactly one token consumed per input and one
+/// produced per output each firing (the classes [`super::overlap_safe`]
+/// admits). `branch`/`dmerge` consume or produce conditionally,
+/// `ndmerge` is arrival-order dependent, `const` fires once per reset.
+fn unit_rate(op: Op) -> bool {
+    matches!(
+        op.class(),
+        OpClass::Copy | OpClass::Alu1 | OpClass::Alu2 | OpClass::Decider | OpClass::Fifo
+    )
+}
+
+/// Kahn topological order over the node-to-node arc adjacency, as node
+/// indices; `None` for cyclic graphs or graphs with non-unit-rate
+/// operators (where a topo firing schedule would not be output-
+/// equivalent to snapshot rounds).
+fn topo_order(g: &Graph) -> Option<Vec<u32>> {
+    if g.nodes.iter().any(|n| !unit_rate(n.op)) {
+        return None;
+    }
+    let nn = g.n_nodes();
+    let mut indeg = vec![0usize; nn];
+    for a in &g.arcs {
+        if let (Some(_), Some((d, _))) = (a.src, a.dst) {
+            indeg[d.0 as usize] += 1;
+        }
+    }
+    let mut order: Vec<u32> = (0..nn as u32).filter(|&i| indeg[i as usize] == 0).collect();
+    // Process as a FIFO so the order is deterministic in node-id order
+    // per rank (only legality matters for correctness, not the order
+    // within a rank).
+    let mut head = 0usize;
+    while head < order.len() {
+        let ni = order[head] as usize;
+        head += 1;
+        for &a in &g.nodes[ni].outs {
+            if let Some((d, _)) = g.arc(a).dst {
+                let d = d.0 as usize;
+                indeg[d] -= 1;
+                if indeg[d] == 0 {
+                    order.push(d as u32);
+                }
+            }
+        }
+    }
+    (order.len() == nn).then_some(order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{self, BenchId};
+    use crate::dfg::GraphBuilder;
+
+    #[test]
+    fn compile_preserves_shape_and_ports() {
+        for b in BenchId::ALL {
+            let g = bench_defs::build(b);
+            let p = Program::compile(&g);
+            assert_eq!(p.n_nodes(), g.n_nodes(), "{}", b.slug());
+            assert_eq!(p.n_arcs, g.n_arcs(), "{}", b.slug());
+            assert_eq!(p.input_ports.len(), g.input_ports().len());
+            assert_eq!(p.output_ports.len(), g.output_ports().len());
+            for (cn, n) in p.nodes.iter().zip(&g.nodes) {
+                assert_eq!(cn.op, n.op);
+                for (pi, &a) in n.ins.iter().enumerate() {
+                    assert_eq!(cn.ins[pi], a.0);
+                }
+                for (pi, &a) in n.outs.iter().enumerate() {
+                    assert_eq!(cn.outs[pi], a.0);
+                }
+                for slot in &cn.ins[n.ins.len()..] {
+                    assert_eq!(*slot, NO_ARC);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topo_fast_path_matches_overlap_safe() {
+        // The topo list exists exactly for the graphs the streaming tier
+        // may overlap — same structural predicate.
+        for b in BenchId::ALL {
+            let g = bench_defs::build(b);
+            let p = Program::compile(&g);
+            assert_eq!(
+                p.topo.is_some(),
+                crate::sim::overlap_safe(&g),
+                "{}",
+                b.slug()
+            );
+            assert!(p.topo.is_none(), "{} is a loop schema", b.slug());
+        }
+        let saxpy = bench_defs::saxpy::build();
+        let p = Program::compile(&saxpy);
+        assert!(p.topo.is_some());
+    }
+
+    #[test]
+    fn topo_order_is_producer_before_consumer() {
+        let g = bench_defs::saxpy::build();
+        let p = Program::compile(&g);
+        let order = p.topo.unwrap();
+        assert_eq!(order.len(), g.n_nodes());
+        let mut rank = vec![0usize; g.n_nodes()];
+        for (i, &ni) in order.iter().enumerate() {
+            rank[ni as usize] = i;
+        }
+        for a in &g.arcs {
+            if let (Some((s, _)), Some((d, _))) = (a.src, a.dst) {
+                assert!(
+                    rank[s.0 as usize] < rank[d.0 as usize],
+                    "arc `{}` violates topo order",
+                    a.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cyclic_unit_rate_graph_gets_no_topo() {
+        // A fifo feeding an adder that feeds it back: every operator is
+        // unit-rate, but the cycle must still disqualify the fast path.
+        let mut b = GraphBuilder::new("cyc");
+        let a = b.input_port("a");
+        let back = b.wire();
+        let s = b.op2(Op::Add, a, back);
+        b.node(Op::Fifo(2), &[s], &[back]);
+        let g = b.graph().clone();
+        assert!(topo_order(&g).is_none());
+    }
+}

@@ -1,0 +1,664 @@
+//! The lane-vectorized batch engine: up to [`LANES`] independent input
+//! sets ("lanes") executed in lockstep through one compiled
+//! [`Program`].
+//!
+//! The scalar engines walk `Option<Word>` arcs one token at a time; the
+//! coordinator's batch path therefore re-runs the whole interpreter per
+//! batch item. This engine replicates only the *state*, not the
+//! control: token storage is structure-of-arrays — per arc a 64-bit
+//! `occupied` bitmask (bit ℓ = lane ℓ's token present) plus a
+//! `[Word; LANES]` value row — so one pass over the node table advances
+//! every lane at once. Fire decisions for ALU/decider/`copy`/`const`/
+//! `ndmerge` ops are pure bitmask algebra; only value-dependent routing
+//! (`branch`/`dmerge` control) needs a lane scan to build its truth
+//! mask, and only `fifo` keeps a per-lane queue.
+//!
+//! Lanes never interact: lane ℓ executes a legal schedule of exactly
+//! the firings a scalar [`TokenSim`](super::TokenSim) run of lane ℓ's
+//! config would perform, and every firing rule is deterministic, so
+//! per-port output streams at fixpoint are byte-identical — with the
+//! same scoping the sharded executor's confluence argument carries: a
+//! *contended* `ndmerge` (both inputs holding tokens whose arrival
+//! order differs between schedules) is arrival-order dependent in
+//! every engine of this crate, and only the loop schema's guarantee
+//! that its merge nodes never hold two competing tokens
+//! (`dfg::schema`) makes cross-engine comparison exact. All seven
+//! benchmarks and the `util::proptest` generator stay inside that
+//! class, and the conformance harness enforces byte-identity there. A
+//! lane that deadlocks simply stops contributing fire-mask bits; its
+//! siblings keep advancing.
+//!
+//! Two firing schedules, selected by [`Program::compile`]:
+//!
+//! * **snapshot rounds** (general graphs): table-order scan, input
+//!   consumption immediate, output occupancy staged to the end of the
+//!   pass — the scalar engines' round semantics, vectorized.
+//! * **topo ripple** (acyclic unit-rate graphs): producer-before-
+//!   consumer scan with immediate occupancy updates, so a token crosses
+//!   the whole pipeline in one pass. Legal exactly on this class — the
+//!   per-arc token sequence is schedule-independent there (see
+//!   `sim::compiled` and DESIGN.md §6).
+
+use super::compiled::{CNode, Program};
+use super::{SimConfig, SimOutcome};
+use crate::dfg::{Op, OpClass, Word};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Lanes per [`LaneSim`]: one `u64` occupancy mask worth.
+pub const LANES: usize = 64;
+
+/// One input port's pending injections: per-lane streams + cursors.
+struct Inject {
+    arc: u32,
+    streams: Vec<Vec<Word>>,
+    pos: Vec<usize>,
+}
+
+/// Per-lane collected output streams for one port.
+type LaneStreams = Vec<Vec<Word>>;
+
+/// Up to 64 batch items in lockstep through one compiled program.
+pub struct LaneSim<'p> {
+    p: &'p Program,
+    n_lanes: usize,
+    /// Bitmask of lanes in use (low `n_lanes` bits).
+    active: u64,
+    /// Firing schedule: `p.topo` when present, else table order.
+    schedule: Vec<u32>,
+    /// Topo ripple (immediate occupancy) vs snapshot rounds (staged).
+    immediate: bool,
+    /// Per-arc lane occupancy.
+    occ: Vec<u64>,
+    /// Per-arc lane values; `vals[a][ℓ]` is live iff `occ[a]` bit ℓ.
+    vals: Vec<[Word; LANES]>,
+    /// Per-node: lanes whose `Const` reset token has been emitted.
+    const_done: Vec<u64>,
+    /// Per-node per-lane FIFO queues (empty vec for non-`Fifo` nodes).
+    fifos: Vec<Vec<VecDeque<Word>>>,
+    inject: Vec<Inject>,
+    /// Collected tokens per output port per lane.
+    collected: Vec<LaneStreams>,
+    /// Staged occupancy writes for the current snapshot round.
+    staged: Vec<(u32, u64)>,
+    lane_firings: [u64; LANES],
+    firings: u64,
+    passes: u64,
+    max_cycles: u64,
+}
+
+impl<'p> LaneSim<'p> {
+    /// One lane per config; `cfgs.len()` must be in `1..=LANES`.
+    pub fn new(p: &'p Program, cfgs: &[SimConfig]) -> Self {
+        let n = cfgs.len();
+        assert!(
+            (1..=LANES).contains(&n),
+            "LaneSim takes 1..={LANES} lane configs, got {n}"
+        );
+        let active = if n == LANES { u64::MAX } else { (1u64 << n) - 1 };
+        let (schedule, immediate) = match &p.topo {
+            Some(order) => (order.clone(), true),
+            None => ((0..p.n_nodes() as u32).collect(), false),
+        };
+        LaneSim {
+            p,
+            n_lanes: n,
+            active,
+            schedule,
+            immediate,
+            occ: vec![0; p.n_arcs],
+            vals: vec![[0; LANES]; p.n_arcs],
+            const_done: vec![0; p.n_nodes()],
+            fifos: p
+                .nodes
+                .iter()
+                .map(|cn| match cn.op {
+                    Op::Fifo(_) => vec![VecDeque::new(); n],
+                    _ => Vec::new(),
+                })
+                .collect(),
+            inject: p
+                .input_ports
+                .iter()
+                .map(|(arc, name)| Inject {
+                    arc: *arc,
+                    streams: cfgs
+                        .iter()
+                        .map(|c| c.inject.get(name).cloned().unwrap_or_default())
+                        .collect(),
+                    pos: vec![0; n],
+                })
+                .collect(),
+            collected: vec![vec![Vec::new(); n]; p.output_ports.len()],
+            staged: Vec::new(),
+            lane_firings: [0; LANES],
+            firings: 0,
+            passes: 0,
+            max_cycles: cfgs.iter().map(|c| c.max_cycles).max().unwrap(),
+        }
+    }
+
+    /// One synchronous pass over all lanes. Returns total progress
+    /// events (injections + collections + firings across lanes); zero
+    /// means a global fixpoint.
+    pub fn step(&mut self) -> u64 {
+        let mut progress = 0u64;
+
+        // Phase 1a: environment injection — one token per free port
+        // arc per lane (the always-ready sender, per lane).
+        for inj in &mut self.inject {
+            let a = inj.arc as usize;
+            let mut free = !self.occ[a] & self.active;
+            while free != 0 {
+                let l = free.trailing_zeros() as usize;
+                free &= free - 1;
+                if inj.pos[l] < inj.streams[l].len() {
+                    self.vals[a][l] = inj.streams[l][inj.pos[l]];
+                    inj.pos[l] += 1;
+                    self.occ[a] |= 1 << l;
+                    progress += 1;
+                }
+            }
+        }
+        // Phase 1b: environment collection at output ports.
+        for pi in 0..self.p.output_ports.len() {
+            let a = self.p.output_ports[pi].0 as usize;
+            let mut m = self.occ[a] & self.active;
+            self.occ[a] &= !m;
+            progress += m.count_ones() as u64;
+            while m != 0 {
+                let l = m.trailing_zeros() as usize;
+                m &= m - 1;
+                self.collected[pi][l].push(self.vals[a][l]);
+            }
+        }
+
+        // Phase 2: fire every node once, over all lanes at once.
+        let mut fired = 0u64;
+        let schedule = std::mem::take(&mut self.schedule);
+        for &ni in &schedule {
+            fired += self.fire_node(ni as usize);
+        }
+        self.schedule = schedule;
+        if !self.immediate {
+            let staged = std::mem::take(&mut self.staged);
+            for &(a, m) in &staged {
+                debug_assert_eq!(self.occ[a as usize] & m, 0, "lane token overwrite");
+                self.occ[a as usize] |= m;
+            }
+            let mut staged = staged;
+            staged.clear();
+            self.staged = staged;
+        }
+
+        self.firings += fired;
+        self.passes += 1;
+        progress + fired
+    }
+
+    /// Run until every lane reaches a fixpoint (two consecutive
+    /// zero-progress passes, mirroring the scalar drain round) or the
+    /// shared cycle budget (the max over the lane configs) is spent.
+    pub fn run(&mut self) {
+        let mut idle = 0u32;
+        while self.passes < self.max_cycles {
+            if self.step() == 0 {
+                idle += 1;
+                if idle >= 2 {
+                    break;
+                }
+            } else {
+                idle = 0;
+            }
+        }
+    }
+
+    /// Mark `mask` lanes of `arc` occupied — staged under snapshot
+    /// rounds, immediate on the topo ripple path.
+    #[inline]
+    fn emit(&mut self, arc: u32, mask: u64) {
+        if mask == 0 {
+            return;
+        }
+        if self.immediate {
+            debug_assert_eq!(self.occ[arc as usize] & mask, 0, "lane token overwrite");
+            self.occ[arc as usize] |= mask;
+        } else {
+            self.staged.push((arc, mask));
+        }
+    }
+
+    #[inline]
+    fn count(&mut self, mut mask: u64) -> u64 {
+        let n = mask.count_ones() as u64;
+        while mask != 0 {
+            let l = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            self.lane_firings[l] += 1;
+        }
+        n
+    }
+
+    /// Truth mask over lanes with a non-zero value on `arc` (garbage on
+    /// unoccupied lanes — callers mask with the arc's occupancy).
+    #[inline]
+    fn truthy(&self, arc: usize) -> u64 {
+        let mut t = 0u64;
+        for (l, &v) in self.vals[arc].iter().enumerate() {
+            t |= ((v != 0) as u64) << l;
+        }
+        t
+    }
+
+    /// Fire node `ni` on every lane whose fire rule holds; returns the
+    /// number of lane-firings.
+    fn fire_node(&mut self, ni: usize) -> u64 {
+        let cn: CNode = self.p.nodes[ni];
+        match cn.op.class() {
+            OpClass::Alu2 | OpClass::Decider => {
+                let (a, b, o) = (cn.ins[0] as usize, cn.ins[1] as usize, cn.outs[0] as usize);
+                let m = self.occ[a] & self.occ[b] & !self.occ[o];
+                if m == 0 {
+                    return 0;
+                }
+                self.occ[a] &= !m;
+                self.occ[b] &= !m;
+                let (va, vb) = (self.vals[a], self.vals[b]);
+                let mut tmp = [0; LANES];
+                eval2_lanes(cn.op, &va, &vb, &mut tmp);
+                blend(&mut self.vals[o], &tmp, m);
+                self.emit(o as u32, m);
+                self.count(m)
+            }
+            OpClass::Alu1 => {
+                let (a, o) = (cn.ins[0] as usize, cn.outs[0] as usize);
+                let m = self.occ[a] & !self.occ[o];
+                if m == 0 {
+                    return 0;
+                }
+                self.occ[a] &= !m;
+                let va = self.vals[a];
+                let mut tmp = [0; LANES];
+                for (x, v) in tmp.iter_mut().zip(&va) {
+                    *x = cn.op.eval1(*v);
+                }
+                blend(&mut self.vals[o], &tmp, m);
+                self.emit(o as u32, m);
+                self.count(m)
+            }
+            OpClass::Copy => {
+                let (a, o0, o1) = (cn.ins[0] as usize, cn.outs[0] as usize, cn.outs[1] as usize);
+                let m = self.occ[a] & !self.occ[o0] & !self.occ[o1];
+                if m == 0 {
+                    return 0;
+                }
+                self.occ[a] &= !m;
+                let va = self.vals[a];
+                blend(&mut self.vals[o0], &va, m);
+                blend(&mut self.vals[o1], &va, m);
+                self.emit(o0 as u32, m);
+                self.emit(o1 as u32, m);
+                self.count(m)
+            }
+            OpClass::Const => {
+                let o = cn.outs[0] as usize;
+                let m = self.active & !self.const_done[ni] & !self.occ[o];
+                if m == 0 {
+                    return 0;
+                }
+                let Op::Const(v) = cn.op else { unreachable!() };
+                self.const_done[ni] |= m;
+                blend(&mut self.vals[o], &[v; LANES], m);
+                self.emit(o as u32, m);
+                self.count(m)
+            }
+            OpClass::NdMerge => {
+                // First-come-first-served; on a tie, port 0 wins (the
+                // scalar engines' fixed arbiter priority, per lane).
+                let (i0, i1, o) = (cn.ins[0] as usize, cn.ins[1] as usize, cn.outs[0] as usize);
+                let f = !self.occ[o] & self.active;
+                let take0 = self.occ[i0] & f;
+                let take1 = self.occ[i1] & f & !self.occ[i0];
+                if (take0 | take1) == 0 {
+                    return 0;
+                }
+                self.occ[i0] &= !take0;
+                self.occ[i1] &= !take1;
+                let (v0, v1) = (self.vals[i0], self.vals[i1]);
+                blend(&mut self.vals[o], &v0, take0);
+                blend(&mut self.vals[o], &v1, take1);
+                self.emit(o as u32, take0 | take1);
+                self.count(take0 | take1)
+            }
+            OpClass::DMerge => {
+                // Port 0 is the control; TRUE selects port 1, FALSE
+                // port 2. The unselected token, if any, stays put.
+                let (c, d1, d2, o) = (
+                    cn.ins[0] as usize,
+                    cn.ins[1] as usize,
+                    cn.ins[2] as usize,
+                    cn.outs[0] as usize,
+                );
+                let t = self.truthy(c);
+                let ready = self.occ[c] & !self.occ[o];
+                let m_t = ready & t & self.occ[d1];
+                let m_f = ready & !t & self.occ[d2];
+                if (m_t | m_f) == 0 {
+                    return 0;
+                }
+                self.occ[c] &= !(m_t | m_f);
+                self.occ[d1] &= !m_t;
+                self.occ[d2] &= !m_f;
+                let (vd1, vd2) = (self.vals[d1], self.vals[d2]);
+                blend(&mut self.vals[o], &vd1, m_t);
+                blend(&mut self.vals[o], &vd2, m_f);
+                self.emit(o as u32, m_t | m_f);
+                self.count(m_t | m_f)
+            }
+            OpClass::Branch => {
+                // Port 0 is control, port 1 data; output 0 is the TRUE
+                // side. Only the selected output must be free.
+                let (c, d, o0, o1) = (
+                    cn.ins[0] as usize,
+                    cn.ins[1] as usize,
+                    cn.outs[0] as usize,
+                    cn.outs[1] as usize,
+                );
+                let t = self.truthy(c);
+                let ready = self.occ[c] & self.occ[d];
+                let m_t = ready & t & !self.occ[o0];
+                let m_f = ready & !t & !self.occ[o1];
+                if (m_t | m_f) == 0 {
+                    return 0;
+                }
+                self.occ[c] &= !(m_t | m_f);
+                self.occ[d] &= !(m_t | m_f);
+                let vd = self.vals[d];
+                blend(&mut self.vals[o0], &vd, m_t);
+                blend(&mut self.vals[o1], &vd, m_f);
+                self.emit(o0 as u32, m_t);
+                self.emit(o1 as u32, m_f);
+                self.count(m_t | m_f)
+            }
+            OpClass::Fifo => {
+                // Control diverges per lane (queue depths differ), so
+                // this is the one per-lane fallback: accept and emit in
+                // the same pass, exactly like the scalar engine.
+                let Op::Fifo(k) = cn.op else { unreachable!() };
+                let cap = k as usize;
+                let (i, o) = (cn.ins[0] as usize, cn.outs[0] as usize);
+                let mut acted_mask = 0u64;
+                let mut emit_mask = 0u64;
+                let mut act = self.active;
+                while act != 0 {
+                    let l = act.trailing_zeros() as usize;
+                    act &= act - 1;
+                    let bit = 1u64 << l;
+                    if self.occ[i] & bit != 0 && self.fifos[ni][l].len() < cap {
+                        self.occ[i] &= !bit;
+                        let v = self.vals[i][l];
+                        self.fifos[ni][l].push_back(v);
+                        acted_mask |= bit;
+                    }
+                    if self.occ[o] & bit == 0 && emit_mask & bit == 0 {
+                        if let Some(v) = self.fifos[ni][l].pop_front() {
+                            self.vals[o][l] = v;
+                            emit_mask |= bit;
+                            acted_mask |= bit;
+                        }
+                    }
+                }
+                self.emit(o as u32, emit_mask);
+                self.count(acted_mask)
+            }
+        }
+    }
+
+    /// True when lane `l` can make no progress ever again: injections
+    /// drained, no tokens on arcs, no tokens queued in FIFOs (the
+    /// scalar engine's `idle` test, per lane).
+    fn lane_idle(&self, l: usize) -> bool {
+        let bit = 1u64 << l;
+        self.inject
+            .iter()
+            .all(|inj| inj.pos[l] >= inj.streams[l].len())
+            && self.occ.iter().all(|&m| m & bit == 0)
+            && self
+                .fifos
+                .iter()
+                .all(|q| q.is_empty() || q[l].is_empty())
+    }
+
+    /// Finalize into one [`SimOutcome`] per lane. As in the lockstep
+    /// batch engine, `cycles` is the chunk's shared pass count;
+    /// `firings` and `quiescent` are per lane.
+    pub fn into_outcomes(mut self) -> Vec<SimOutcome> {
+        let mut outs = Vec::with_capacity(self.n_lanes);
+        for l in 0..self.n_lanes {
+            let quiescent = self.lane_idle(l);
+            let mut outputs = BTreeMap::new();
+            for (pi, (_, name)) in self.p.output_ports.iter().enumerate() {
+                outputs.insert(name.clone(), std::mem::take(&mut self.collected[pi][l]));
+            }
+            outs.push(SimOutcome {
+                outputs,
+                cycles: self.passes,
+                firings: self.lane_firings[l],
+                quiescent,
+            });
+        }
+        outs
+    }
+
+    /// Total lane-firings across the chunk so far.
+    pub fn firings(&self) -> u64 {
+        self.firings
+    }
+
+    /// Passes executed so far.
+    pub fn passes(&self) -> u64 {
+        self.passes
+    }
+}
+
+/// `dst[ℓ] = src[ℓ]` where `mask` bit ℓ is set, branch-free (bitwise
+/// select against a sign-extended lane mask).
+#[inline]
+fn blend(dst: &mut [Word; LANES], src: &[Word; LANES], mask: u64) {
+    for (l, (d, &s)) in dst.iter_mut().zip(src).enumerate() {
+        let sel = 0i16.wrapping_sub(((mask >> l) & 1) as i16);
+        *d = (s & sel) | (*d & !sel);
+    }
+}
+
+/// The vector opcode table: evaluate a 2-input opcode over all lanes.
+/// One tight loop per opcode so the compiler can vectorize each arm.
+fn eval2_lanes(op: Op, a: &[Word; LANES], b: &[Word; LANES], out: &mut [Word; LANES]) {
+    macro_rules! arm {
+        ($f:expr) => {{
+            let f = $f;
+            for (o, (&x, &y)) in out.iter_mut().zip(a.iter().zip(b)) {
+                *o = f(x, y);
+            }
+        }};
+    }
+    match op {
+        Op::Add => arm!(|x: Word, y: Word| x.wrapping_add(y)),
+        Op::Sub => arm!(|x: Word, y: Word| x.wrapping_sub(y)),
+        Op::Mul => arm!(|x: Word, y: Word| x.wrapping_mul(y)),
+        Op::And => arm!(|x: Word, y: Word| x & y),
+        Op::Or => arm!(|x: Word, y: Word| x | y),
+        Op::Xor => arm!(|x: Word, y: Word| x ^ y),
+        Op::Shl => arm!(|x: Word, y: Word| x.wrapping_shl((y & 0xf) as u32)),
+        Op::Shr => arm!(|x: Word, y: Word| x.wrapping_shr((y & 0xf) as u32)),
+        Op::IfGt => arm!(|x: Word, y: Word| (x > y) as Word),
+        Op::IfGe => arm!(|x: Word, y: Word| (x >= y) as Word),
+        Op::IfLt => arm!(|x: Word, y: Word| (x < y) as Word),
+        Op::IfLe => arm!(|x: Word, y: Word| (x <= y) as Word),
+        Op::IfEq => arm!(|x: Word, y: Word| (x == y) as Word),
+        Op::IfDf => arm!(|x: Word, y: Word| (x != y) as Word),
+        // Div (branchy divide-by-zero guard) and anything future: the
+        // scalar rule per lane.
+        _ => arm!(|x: Word, y: Word| op.eval2(x, y)),
+    }
+}
+
+/// Run any number of configs through `p`, in lane chunks of [`LANES`];
+/// one outcome per config, in order.
+pub fn run_lanes(p: &Program, cfgs: &[SimConfig]) -> Vec<SimOutcome> {
+    let mut outs = Vec::with_capacity(cfgs.len());
+    for chunk in cfgs.chunks(LANES) {
+        let mut sim = LaneSim::new(p, chunk);
+        sim.run();
+        outs.extend(sim.into_outcomes());
+    }
+    outs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::{Graph, GraphBuilder};
+    use crate::sim::run_token;
+
+    fn adder() -> Graph {
+        let mut b = GraphBuilder::new("adder");
+        let a = b.input_port("a");
+        let c = b.input_port("b");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[a, c], &[z]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn lanes_match_scalar_on_an_adder_batch() {
+        let g = adder();
+        let p = Program::compile(&g);
+        assert!(p.topo.is_some());
+        let cfgs: Vec<SimConfig> = (0..10)
+            .map(|i| {
+                SimConfig::new()
+                    .inject("a", vec![i as Word, 2 * i as Word])
+                    .inject("b", vec![100, 200])
+            })
+            .collect();
+        let outs = run_lanes(&p, &cfgs);
+        for (cfg, out) in cfgs.iter().zip(&outs) {
+            let alone = run_token(&g, cfg);
+            assert_eq!(out.outputs, alone.outputs);
+            assert_eq!(out.firings, alone.firings);
+            assert!(out.quiescent);
+        }
+    }
+
+    #[test]
+    fn branch_routes_per_lane() {
+        let mut b = GraphBuilder::new("t");
+        let ctl = b.input_port("ctl");
+        let data = b.input_port("data");
+        let t = b.output_port("t");
+        let f = b.output_port("f");
+        b.node(Op::Branch, &[ctl, data], &[t, f]);
+        let g = b.finish().unwrap();
+        let p = Program::compile(&g);
+        assert!(p.topo.is_none(), "branch graphs take snapshot rounds");
+        let cfgs = vec![
+            SimConfig::new()
+                .inject("ctl", vec![1, 0, 1])
+                .inject("data", vec![10, 20, 30]),
+            SimConfig::new()
+                .inject("ctl", vec![0, 0])
+                .inject("data", vec![7, 8]),
+        ];
+        let outs = run_lanes(&p, &cfgs);
+        assert_eq!(outs[0].stream("t"), &[10, 30]);
+        assert_eq!(outs[0].stream("f"), &[20]);
+        assert_eq!(outs[1].stream("t"), &[] as &[Word]);
+        assert_eq!(outs[1].stream("f"), &[7, 8]);
+    }
+
+    #[test]
+    fn const_fires_once_per_lane() {
+        let mut b = GraphBuilder::new("t");
+        let k = b.constant(42);
+        let a = b.input_port("a");
+        let z = b.output_port("z");
+        b.node(Op::Add, &[k, a], &[z]);
+        let g = b.finish().unwrap();
+        let p = Program::compile(&g);
+        let cfgs = vec![
+            SimConfig::new().inject("a", vec![1, 2]),
+            SimConfig::new().inject("a", vec![8]),
+        ];
+        let outs = run_lanes(&p, &cfgs);
+        // One const token per lane: the second `a` token never pairs.
+        assert_eq!(outs[0].stream("z"), &[43]);
+        assert!(!outs[0].quiescent);
+        assert_eq!(outs[1].stream("z"), &[50]);
+        assert!(outs[1].quiescent);
+    }
+
+    #[test]
+    fn stuck_lane_does_not_stall_siblings() {
+        let g = adder();
+        let p = Program::compile(&g);
+        let cfgs = vec![
+            SimConfig::new().inject("a", vec![1]).inject("b", vec![2]),
+            SimConfig::new().inject("a", vec![5]), // deadlocked: no `b`
+            SimConfig::new().inject("a", vec![3]).inject("b", vec![4]),
+        ];
+        let outs = run_lanes(&p, &cfgs);
+        assert_eq!(outs[0].stream("z"), &[3]);
+        assert!(outs[0].quiescent);
+        assert_eq!(outs[1].stream("z"), &[] as &[Word]);
+        assert!(!outs[1].quiescent);
+        assert_eq!(outs[2].stream("z"), &[7]);
+        assert!(outs[2].quiescent);
+    }
+
+    #[test]
+    fn full_and_ragged_chunks_agree_with_scalar() {
+        let g = adder();
+        let p = Program::compile(&g);
+        // 64 + 6: one full chunk plus a ragged tail.
+        let cfgs: Vec<SimConfig> = (0..70)
+            .map(|i| {
+                SimConfig::new()
+                    .inject("a", vec![i as Word])
+                    .inject("b", vec![1000 - i as Word])
+            })
+            .collect();
+        let outs = run_lanes(&p, &cfgs);
+        assert_eq!(outs.len(), 70);
+        for (cfg, out) in cfgs.iter().zip(&outs) {
+            assert_eq!(out.outputs, run_token(&g, cfg).outputs);
+        }
+    }
+
+    #[test]
+    fn fifo_pipeline_ripples_on_the_topo_path() {
+        let g = crate::bench_defs::saxpy::build();
+        let p = Program::compile(&g);
+        assert!(p.topo.is_some());
+        let (w, expect) = crate::bench_defs::saxpy::wave(8, 3);
+        let mut cfg = SimConfig::new();
+        for (port, s) in &w {
+            cfg = cfg.inject(port, s.clone());
+        }
+        let outs = run_lanes(&p, std::slice::from_ref(&cfg));
+        assert_eq!(outs[0].stream("z"), expect.as_slice());
+        assert!(outs[0].quiescent);
+        // The ripple pass moves a token through the whole pipeline per
+        // pass, so the lane run cannot be slower than the scalar rounds.
+        let scalar = run_token(&g, &cfg);
+        assert!(outs[0].cycles <= scalar.cycles);
+    }
+
+    #[test]
+    #[should_panic(expected = "LaneSim takes 1..=64")]
+    fn rejects_oversized_chunks() {
+        let g = adder();
+        let p = Program::compile(&g);
+        let cfgs = vec![SimConfig::new(); 65];
+        let _ = LaneSim::new(&p, &cfgs);
+    }
+}

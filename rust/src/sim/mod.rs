@@ -24,16 +24,30 @@
 //! a reset in between otherwise. Per-wave outputs are byte-identical to
 //! running each wave alone through [`TokenSim`]
 //! (`rust/tests/conformance.rs` enforces this).
+//!
+//! Orthogonal to both sits the **lane tier** ([`compiled`] +
+//! [`lanes`]): [`Program::compile`] flattens a graph into a dense
+//! opcode/port table once, and [`LaneSim`] runs up to [`LANES`]
+//! independent input sets in lockstep through it using structure-of-
+//! arrays token storage (per-arc occupancy bitmasks + value rows), so
+//! one pass over the node table advances every lane at once. Per-lane
+//! outputs are byte-identical to [`TokenSim`] — the same conformance
+//! contract as the streaming tier.
 
+pub mod compiled;
 mod dynamic;
 mod fsm;
+pub mod lanes;
 pub mod stream;
 mod token;
 
+pub use compiled::{CNode, Program, NO_ARC};
 pub use dynamic::{run_dynamic, DynamicSim};
 pub use fsm::{run_fsm, FsmSim, HandshakeEvent, HandshakeKind};
+pub use lanes::{run_lanes, LaneSim, LANES};
 pub use stream::{
-    overlap_safe, run_stream, StreamError, StreamMetrics, StreamSession, WaveInput, WaveMode,
+    overlap_safe, run_stream, run_stream_lanes, StreamError, StreamMetrics, StreamSession,
+    WaveInput, WaveMode,
 };
 pub use token::{run_token, AluReq, TokenSim};
 

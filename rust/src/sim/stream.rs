@@ -760,6 +760,38 @@ impl<'g> StreamSession<'g> {
     }
 }
 
+/// The lane-backed admission path for [`WaveMode::Serialized`]
+/// workloads: waves are mutually independent input sets by definition,
+/// so instead of admitting them one at a time through the resident
+/// graph (paying one full drain-and-reset per wave), run up to
+/// [`LANES`](super::LANES) of them *concurrently* — one lane each —
+/// through one compiled [`Program`](super::Program). Lane isolation
+/// gives exactly the wave isolation the serialized policy exists to
+/// guarantee, so per-wave output streams stay byte-identical to
+/// serialized admission and to isolated [`run_token`](super::run_token)
+/// runs (conformance-enforced); a stalled wave parks in its lane
+/// without delaying the others. The returned outcomes differ from
+/// [`StreamSession::wave_outcome`] only in accounting: `cycles` is the
+/// lane chunk's shared pass count, not the wave's solo latency.
+pub fn run_stream_lanes(
+    g: &Graph,
+    waves: &[WaveInput],
+    max_cycles_per_wave: u64,
+) -> Vec<SimOutcome> {
+    let prog = super::Program::compile(g);
+    let cfgs: Vec<super::SimConfig> = waves
+        .iter()
+        .map(|w| {
+            let mut c = super::SimConfig::new().max_cycles(max_cycles_per_wave);
+            for (p, s) in w {
+                c = c.inject(p, s.clone());
+            }
+            c
+        })
+        .collect();
+    super::run_lanes(&prog, &cfgs)
+}
+
 /// Convenience: admit every wave, run to completion (or `max_rounds`),
 /// and return the per-wave outcomes plus session metrics. Waves that
 /// fail pipelined admission fall back to a serialized session for the
@@ -957,6 +989,51 @@ mod tests {
             session.admit(&unknown),
             Err(StreamError::UnknownPort(_))
         ));
+    }
+
+    #[test]
+    fn lane_backed_serialized_path_matches_session_and_isolated_runs() {
+        let g = crate::bench_defs::build(crate::bench_defs::BenchId::Fibonacci);
+        let waves: Vec<WaveInput> = [2i16, 6, 0, 9]
+            .iter()
+            .map(|&n| BTreeMap::from([("n".to_string(), vec![n])]))
+            .collect();
+        let lanes = run_stream_lanes(&g, &waves, 200_000);
+        let mut session = StreamSession::with_mode(&g, WaveMode::Serialized);
+        for w in &waves {
+            session.admit(w).unwrap();
+        }
+        session.run(1_000_000);
+        for (i, wave) in waves.iter().enumerate() {
+            let mut cfg = SimConfig::new();
+            for (p, s) in wave {
+                cfg = cfg.inject(p, s.clone());
+            }
+            let alone = run_token(&g, &cfg);
+            assert_eq!(lanes[i].outputs, alone.outputs, "wave {i} vs isolated");
+            assert_eq!(
+                &lanes[i].outputs,
+                session.wave_outputs(i as u32),
+                "wave {i} vs serialized session"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_backed_path_parks_stalled_waves_without_blocking() {
+        // Same shape as `serialized_flushes_stalled_waves`, but the
+        // stalled wave just idles in its lane — no flush needed for the
+        // second wave to finish.
+        let g = adder();
+        let waves: Vec<WaveInput> = vec![
+            BTreeMap::from([("a".to_string(), vec![1])]),
+            BTreeMap::from([("a".to_string(), vec![2]), ("b".to_string(), vec![40])]),
+        ];
+        let outs = run_stream_lanes(&g, &waves, 10_000);
+        assert_eq!(outs[0].stream("z"), &[] as &[Word]);
+        assert!(!outs[0].quiescent);
+        assert_eq!(outs[1].stream("z"), &[42]);
+        assert!(outs[1].quiescent);
     }
 
     #[test]

@@ -34,8 +34,16 @@ pub struct TokenSim<'g> {
     fifos: Vec<VecDeque<Word>>,
     /// Const nodes that have already emitted their reset token.
     const_done: Vec<bool>,
+    /// `Const` nodes still owed a reset emission — kept in sync with
+    /// `const_done` so [`TokenSim::consts_pending`] is O(1) instead of
+    /// re-scanning every node per reconfig-scheduler poll.
+    consts_outstanding: u32,
     /// Pending environment injections per input port.
     pending: Vec<(ArcId, VecDeque<Word>)>,
+    /// Port label → index in `pending`, built once at construction so
+    /// [`TokenSim::enqueue`] (the sharded executor's per-token
+    /// forwarding hook) is a map lookup, not an O(ports) label scan.
+    port_slots: BTreeMap<String, usize>,
     /// Output ports (collected every round).
     out_ports: Vec<ArcId>,
     collected: BTreeMap<String, Vec<Word>>,
@@ -56,6 +64,7 @@ pub struct TokenSim<'g> {
 impl<'g> TokenSim<'g> {
     pub fn new(g: &'g Graph, cfg: &SimConfig) -> Self {
         let mut pending = Vec::new();
+        let mut port_slots = BTreeMap::new();
         for a in g.input_ports() {
             let name = &g.arc(a).name;
             let stream = cfg
@@ -63,6 +72,7 @@ impl<'g> TokenSim<'g> {
                 .get(name)
                 .map(|v| v.iter().copied().collect())
                 .unwrap_or_default();
+            port_slots.insert(name.clone(), pending.len());
             pending.push((a, stream));
         }
         let out_ports = g.output_ports();
@@ -82,7 +92,13 @@ impl<'g> TokenSim<'g> {
                 })
                 .collect(),
             const_done: vec![false; g.n_nodes()],
+            consts_outstanding: g
+                .nodes
+                .iter()
+                .filter(|n| matches!(n.op, Op::Const(_)))
+                .count() as u32,
             pending,
+            port_slots,
             out_ports,
             collected,
             firings: 0,
@@ -167,11 +183,7 @@ impl<'g> TokenSim<'g> {
     /// the first round). The reconfiguration scheduler uses this to avoid
     /// retiring a context that never ran.
     pub fn consts_pending(&self) -> bool {
-        self.g
-            .nodes
-            .iter()
-            .zip(&self.const_done)
-            .any(|(n, &done)| matches!(n.op, Op::Const(_)) && !done)
+        self.consts_outstanding > 0
     }
 
     /// Append a token to the pending injection stream of input port
@@ -180,13 +192,26 @@ impl<'g> TokenSim<'g> {
     /// half in the consuming shard. Returns `false` when the graph has no
     /// input port with that label.
     pub fn enqueue(&mut self, port: &str, v: Word) -> bool {
-        for (arc, stream) in self.pending.iter_mut() {
-            if self.g.arcs[arc.0 as usize].name == port {
-                stream.push_back(v);
-                return true;
+        match self.port_slots.get(port) {
+            Some(&slot) => {
+                self.pending[slot].1.push_back(v);
+                true
             }
+            None => false,
         }
-        false
+    }
+
+    /// Resolve an input-port label to its injection slot once, so a
+    /// repeated forwarder (the sharded executor's cut-arc loop) can use
+    /// [`TokenSim::enqueue_at`] and skip the per-token name lookup.
+    pub fn port_slot(&self, port: &str) -> Option<usize> {
+        self.port_slots.get(port).copied()
+    }
+
+    /// [`TokenSim::enqueue`] by pre-resolved slot (O(1); see
+    /// [`TokenSim::port_slot`]).
+    pub fn enqueue_at(&mut self, slot: usize, v: Word) {
+        self.pending[slot].1.push_back(v);
     }
 
     /// Drain every token collected so far on output port `port` (arrival
@@ -205,12 +230,15 @@ impl<'g> TokenSim<'g> {
     /// each wave boundary so a resident graph can process the next wave
     /// exactly as a freshly loaded one would.
     pub fn rearm_consts(&mut self) {
+        let mut outstanding = 0u32;
         for (ni, n) in self.g.nodes.iter().enumerate() {
             if matches!(n.op, Op::Const(_)) {
                 self.const_done[ni] = false;
                 self.mark(ni as i32);
+                outstanding += 1;
             }
         }
+        self.consts_outstanding = outstanding;
     }
 
     /// Drop every token still in flight (arcs, FIFO queues, pending
@@ -357,6 +385,7 @@ impl<'g> TokenSim<'g> {
                     return false;
                 }
                 self.const_done[ni] = true;
+                self.consts_outstanding -= 1;
                 staged.push((node.outs[0], v));
                 true
             }
@@ -642,6 +671,43 @@ mod tests {
         let cfg = SimConfig::new().inject("a", vec![5, 6, 7]);
         let out = TokenSim::new(&g, &cfg).run(&cfg);
         assert_eq!(out.stream("z"), &[5, 6, 7]);
+    }
+
+    #[test]
+    fn consts_pending_counter_tracks_fire_and_rearm() {
+        let mut b = GraphBuilder::new("t");
+        let k1 = b.constant(1);
+        let k2 = b.constant(2);
+        let z = b.output_port("z");
+        b.node(Op::Add, &[k1, k2], &[z]);
+        let g = b.finish().unwrap();
+        let cfg = SimConfig::new();
+        let mut sim = TokenSim::new(&g, &cfg);
+        assert!(sim.consts_pending());
+        while sim.step() > 0 {}
+        assert!(!sim.consts_pending(), "both consts fired");
+        sim.purge();
+        assert!(!sim.consts_pending(), "purge does not re-arm consts");
+        sim.rearm_consts();
+        assert!(sim.consts_pending());
+        while sim.step() > 0 {}
+        assert!(!sim.consts_pending());
+    }
+
+    #[test]
+    fn enqueue_resolves_ports_through_the_index() {
+        let g = adder();
+        let cfg = SimConfig::new();
+        let mut sim = TokenSim::new(&g, &cfg);
+        assert!(sim.enqueue("a", 40));
+        assert!(sim.enqueue("b", 2));
+        assert!(!sim.enqueue("nope", 1));
+        assert_eq!(sim.port_slot("nope"), None);
+        let slot = sim.port_slot("b").unwrap();
+        sim.enqueue_at(slot, 0); // stranded second token on `b`
+        let out = sim.run(&cfg);
+        assert_eq!(out.stream("z"), &[42]);
+        assert!(!out.quiescent, "extra `b` token is stranded");
     }
 
     #[test]

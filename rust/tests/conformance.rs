@@ -9,7 +9,12 @@
 //! * seeded **random DFGs** from the generator in `util::proptest`
 //!   (covering `const`, `fifo #k`, `dmerge`/`branch` routing and
 //!   `build_loop` branch/merge loops), and
-//! * the six paper benchmarks under multi-wave streamed injection.
+//! * the six paper benchmarks under multi-wave streamed injection, and
+//! * the **lane engine** (`Program` + `LaneSim`): per-lane output
+//!   streams byte-identical to `TokenSim` on all seven benchmarks (the
+//!   six loop schemas plus SAXPY) and on random DFGs, including ragged
+//!   chunks, per-lane deadlock containment and the batch router's
+//!   lanes→placed fallback.
 //!
 //! Every property is replayable from the seed in its failure message.
 //! CI runs the same properties as a fixed-seed smoke subset by setting
@@ -18,7 +23,8 @@
 use dataflow_accel::bench_defs::{self, BenchId};
 use dataflow_accel::fabric::{self, FabricTopology};
 use dataflow_accel::sim::{
-    run_dynamic, run_fsm, run_stream, run_token, SimConfig, StreamSession, WaveInput, WaveMode,
+    run_dynamic, run_fsm, run_lanes, run_stream, run_stream_lanes, run_token, Program, SimConfig,
+    StreamSession, WaveInput, WaveMode,
 };
 use dataflow_accel::util::proptest::{
     check, random_dfg, random_dfg_with, random_workload, GenCfg, GenGraph, PropCfg,
@@ -332,6 +338,210 @@ fn prop_asm_roundtrip_on_random_dfgs() {
             Ok(())
         },
     );
+}
+
+/// The lane engine against the scalar engine, item by item, on all
+/// seven benchmarks — the six loop schemas exercise the snapshot-round
+/// path (branch/dmerge/ndmerge control divergence resolved per lane),
+/// SAXPY exercises the topo ripple fast path.
+#[test]
+fn lane_engine_matches_token_on_all_seven_benchmarks() {
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let prog = Program::compile(&g);
+        let wls: Vec<_> = (0..6)
+            .map(|i| bench_defs::workload(b, 2 + i, 90 + i as u64))
+            .collect();
+        let cfgs: Vec<SimConfig> = wls.iter().map(|w| w.sim_config()).collect();
+        let outs = run_lanes(&prog, &cfgs);
+        for (i, wl) in wls.iter().enumerate() {
+            let alone = run_token(&g, &cfgs[i]);
+            assert_eq!(
+                outs[i].outputs,
+                alone.outputs,
+                "{} item {i}: lanes != scalar",
+                b.slug()
+            );
+            for (port, want) in &wl.expect {
+                assert_eq!(
+                    outs[i].stream(port),
+                    want.as_slice(),
+                    "{} item {i} port `{port}`",
+                    b.slug()
+                );
+            }
+        }
+    }
+    // The seventh: SAXPY through the topo fast path.
+    let g = bench_defs::saxpy::build();
+    let prog = Program::compile(&g);
+    assert!(prog.topo.is_some(), "saxpy must take the topo fast path");
+    let pairs = bench_defs::saxpy::waves(6, 5, 0x5A);
+    let cfgs: Vec<SimConfig> = pairs
+        .iter()
+        .map(|(w, _)| {
+            let mut c = SimConfig::new();
+            for (p, s) in w {
+                c = c.inject(p, s.clone());
+            }
+            c
+        })
+        .collect();
+    let outs = run_lanes(&prog, &cfgs);
+    for (i, (_, expect)) in pairs.iter().enumerate() {
+        assert_eq!(outs[i].stream("z"), expect.as_slice(), "saxpy item {i}");
+        assert_eq!(
+            outs[i].outputs,
+            run_token(&g, &cfgs[i]).outputs,
+            "saxpy item {i} vs scalar"
+        );
+    }
+}
+
+/// Lane == scalar on random DFGs (branch/dmerge routing, consts, fifos,
+/// loop schemas) under multi-item batches.
+#[test]
+fn prop_lane_engine_matches_token_on_random_dfgs() {
+    check(
+        "LaneSim == TokenSim per item on random DFGs",
+        PropCfg::from_env(48, 0x1A9E_C0DE),
+        |r: &mut Rng| {
+            let gg = random_dfg(r, true);
+            let n_items = 1 + r.below(7);
+            let wls: Vec<BTreeMap<String, Vec<i16>>> = (0..n_items)
+                .map(|_| random_workload(r, &gg, 1 + r.below(3)))
+                .collect();
+            (gg, wls)
+        },
+        |(gg, wls): &(GenGraph, Vec<BTreeMap<String, Vec<i16>>>)| {
+            let g = &gg.graph;
+            let prog = Program::compile(g);
+            let cfgs: Vec<SimConfig> = wls.iter().map(|w| config_for(w, 200_000)).collect();
+            let outs = run_lanes(&prog, &cfgs);
+            for (i, cfg) in cfgs.iter().enumerate() {
+                let alone = run_token(g, cfg);
+                if outs[i].outputs != alone.outputs {
+                    return Err(format!(
+                        "item {i}: lanes {:?} != scalar {:?}",
+                        outs[i].outputs, alone.outputs
+                    ));
+                }
+            }
+            // The lane-backed serialized stream path must agree too.
+            let streamed = run_stream_lanes(g, wls, 200_000);
+            for (i, cfg) in cfgs.iter().enumerate() {
+                let alone = run_token(g, cfg);
+                if streamed[i].outputs != alone.outputs {
+                    return Err(format!(
+                        "wave {i}: lane stream {:?} != scalar {:?}",
+                        streamed[i].outputs, alone.outputs
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Ragged chunking: a batch spanning one full 64-lane chunk plus a
+/// partial tail (and a singleton) stays item-exact.
+#[test]
+fn lane_batches_survive_ragged_final_chunks() {
+    use dataflow_accel::coordinator::run_batch_lanes_with_stats;
+    let b = BenchId::VectorSum;
+    let g = bench_defs::build(b);
+    for items in [1usize, 64, 70] {
+        let wls: Vec<_> = (0..items)
+            .map(|i| bench_defs::workload(b, 1 + i % 3, i as u64))
+            .collect();
+        let cfgs: Vec<SimConfig> = wls.iter().map(|w| w.sim_config()).collect();
+        let (outs, stats) = run_batch_lanes_with_stats(&g, &cfgs);
+        assert_eq!(outs.len(), items);
+        assert_eq!(stats.chunks, items.div_ceil(64), "items={items}");
+        for (i, wl) in wls.iter().enumerate() {
+            let alone = run_token(&g, &cfgs[i]);
+            assert_eq!(outs[i].outputs, alone.outputs, "items={items} #{i}");
+            for (port, want) in &wl.expect {
+                assert_eq!(outs[i].stream(port), want.as_slice(), "items={items} #{i}");
+            }
+        }
+    }
+}
+
+/// One deadlocked lane must not stall its siblings, and the batch-level
+/// lanes→scalar fallback must hand the stuck item back byte-identical
+/// to a scalar run under its own budget.
+#[test]
+fn lane_deadlock_is_contained_and_falls_back_to_scalar() {
+    use dataflow_accel::coordinator::run_batch_lanes_with_stats;
+    use dataflow_accel::dfg::{GraphBuilder, Op};
+    let mut b = GraphBuilder::new("adder");
+    let a = b.input_port("a");
+    let x = b.input_port("b");
+    let z = b.output_port("z");
+    b.node(Op::Add, &[a, x], &[z]);
+    let g = b.finish().unwrap();
+    let prog = Program::compile(&g);
+
+    let mut cfgs: Vec<SimConfig> = (0..10)
+        .map(|i| {
+            SimConfig::new()
+                .inject("a", vec![i as i16])
+                .inject("b", vec![100])
+        })
+        .collect();
+    // Lane 4 deadlocks: `b` never arrives.
+    cfgs[4] = SimConfig::new().inject("a", vec![7]).max_cycles(50);
+
+    let outs = run_lanes(&prog, &cfgs);
+    for (i, out) in outs.iter().enumerate() {
+        if i == 4 {
+            assert_eq!(out.stream("z"), &[] as &[i16]);
+            assert!(!out.quiescent, "stuck lane must not report quiescence");
+        } else {
+            assert_eq!(out.stream("z"), &[100 + i as i16], "sibling lane {i}");
+            assert!(out.quiescent, "sibling lane {i} stalled by the stuck lane");
+        }
+    }
+
+    let (fb, stats) = run_batch_lanes_with_stats(&g, &cfgs);
+    assert_eq!(stats.scalar_reruns, 1);
+    for (i, cfg) in cfgs.iter().enumerate() {
+        assert_eq!(fb[i].outputs, run_token(&g, cfg).outputs, "item {i}");
+    }
+}
+
+/// The lane-backed serialized stream path equals both the resident
+/// serialized session and isolated runs, per wave, on every benchmark.
+#[test]
+fn lane_stream_path_matches_serialized_session_on_all_benchmarks() {
+    for b in BenchId::ALL {
+        let g = bench_defs::build(b);
+        let wls = bench_defs::wave_workloads(b, 4, 3, 0x1A9E);
+        let waves: Vec<WaveInput> = wls.iter().map(|w| w.inject.clone()).collect();
+        let budget = wls.iter().map(|w| w.max_cycles).max().unwrap();
+        let lanes = run_stream_lanes(&g, &waves, budget);
+        let mut session = StreamSession::with_mode(&g, WaveMode::Serialized);
+        for w in &waves {
+            session.admit(w).unwrap();
+        }
+        session.run(budget.saturating_mul(waves.len() as u64));
+        for (i, wl) in wls.iter().enumerate() {
+            let alone = run_token(&g, &wl.sim_config());
+            assert_eq!(
+                lanes[i].outputs,
+                alone.outputs,
+                "{} wave {i}: lane stream != isolated",
+                b.slug()
+            );
+            assert_eq!(
+                &lanes[i].outputs,
+                session.wave_outputs(i as u32),
+                "{} wave {i}: lane stream != serialized session",
+                b.slug()
+            );
+        }
+    }
 }
 
 /// The dynamic engine agrees with the static engine on random DFGs for
