@@ -7,8 +7,11 @@
 //! (the fire mask simply goes quiet for drained instances).
 
 use crate::dfg::Graph;
+use crate::fabric::{self, FabricTopology, PartitionPlan};
 use crate::runtime::{FabricBatch, FabricRuntime};
-use crate::sim::{run_token, AluReq, LaneSim, Program, SimConfig, SimOutcome, TokenSim, LANES};
+use crate::sim::{
+    run_token, AluReq, LaneSim, Program, SimConfig, SimOutcome, TokenSim, WaveInput, LANES,
+};
 use anyhow::{bail, Result};
 
 /// How a batch evaluates its operator ALUs.
@@ -187,15 +190,29 @@ pub fn run_batch_lanes_with_stats(
     g: &Graph,
     cfgs: &[SimConfig],
 ) -> (Vec<SimOutcome>, LaneBatchStats) {
+    let prog = Program::compile(g);
+    run_batch_lanes_prog(g, &prog, cfgs)
+}
+
+/// [`run_batch_lanes_with_stats`] with a pre-compiled program — the
+/// session-cache hot path: the serving tier and the router compile a
+/// graph once per fingerprint ([`crate::serve::SessionCache`]) and
+/// reuse the program for every subsequent batch, so only the cache
+/// miss pays `Program::compile`. `prog` must be compiled from `g`
+/// (the scalar rerun fallback runs `g` itself).
+pub fn run_batch_lanes_prog(
+    g: &Graph,
+    prog: &Program,
+    cfgs: &[SimConfig],
+) -> (Vec<SimOutcome>, LaneBatchStats) {
     if cfgs.is_empty() {
         return (Vec::new(), LaneBatchStats::default());
     }
-    let prog = Program::compile(g);
     let mut stats = LaneBatchStats::default();
     let mut outcomes = Vec::with_capacity(cfgs.len());
     for chunk in cfgs.chunks(LANES) {
         stats.chunks += 1;
-        let mut sim = LaneSim::new(&prog, chunk);
+        let mut sim = LaneSim::new(prog, chunk);
         sim.run();
         for (cfg, out) in chunk.iter().zip(sim.into_outcomes()) {
             if out.quiescent {
@@ -226,6 +243,45 @@ pub fn run_batch_streamed(g: &Graph, cfgs: &[SimConfig]) -> Vec<SimOutcome> {
     let budget: u64 = cfgs.iter().map(|c| c.max_cycles).sum();
     let (outcomes, _metrics) = crate::sim::run_stream(g, &waves, budget);
     outcomes
+}
+
+/// Serve a same-graph batch through the sharded executor — one route
+/// arm of the placed → sharded → reconfig → fallback lattice, shared
+/// by the router and the service tier so the wave-vs-isolated policy
+/// lives in exactly one place. With `waves_resident` the batch streams
+/// as successive waves through one resident shard rack
+/// ([`fabric::run_sharded_waves`]); otherwise each item runs isolated.
+pub fn run_batch_sharded(
+    plan: &PartitionPlan,
+    cfgs: &[SimConfig],
+    waves_resident: bool,
+) -> Vec<SimOutcome> {
+    if waves_resident && !cfgs.is_empty() {
+        let waves: Vec<WaveInput> = cfgs.iter().map(|c| c.inject.clone()).collect();
+        let budget = cfgs.iter().map(|c| c.max_cycles).max().unwrap();
+        fabric::run_sharded_waves(plan, &waves, budget)
+    } else {
+        cfgs.iter().map(|c| fabric::run_sharded(plan, c)).collect()
+    }
+}
+
+/// The reconfiguration (time-multiplexed single instance) analogue of
+/// [`run_batch_sharded`].
+pub fn run_batch_reconfig(
+    plan: &PartitionPlan,
+    topo: &FabricTopology,
+    cfgs: &[SimConfig],
+    waves_resident: bool,
+) -> Vec<SimOutcome> {
+    if waves_resident && !cfgs.is_empty() {
+        let waves: Vec<WaveInput> = cfgs.iter().map(|c| c.inject.clone()).collect();
+        let budget = cfgs.iter().map(|c| c.max_cycles).max().unwrap();
+        fabric::run_reconfig_waves(plan, topo, &waves, budget).0
+    } else {
+        cfgs.iter()
+            .map(|c| fabric::run_reconfig(plan, topo, c).0)
+            .collect()
+    }
 }
 
 /// Convenience: batch through the PJRT fabric kernel.
@@ -317,6 +373,21 @@ mod tests {
                     bench.slug()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn precompiled_program_path_matches_compiling_path() {
+        let g = bench_defs::build(BenchId::VectorSum);
+        let cfgs: Vec<_> = (0..3)
+            .map(|s| bench_defs::workload(BenchId::VectorSum, 3 + s, s as u64).sim_config())
+            .collect();
+        let prog = Program::compile(&g);
+        let (a, sa) = run_batch_lanes_with_stats(&g, &cfgs);
+        let (b, sb) = run_batch_lanes_prog(&g, &prog, &cfgs);
+        assert_eq!(sa, sb);
+        for i in 0..cfgs.len() {
+            assert_eq!(a[i].outputs, b[i].outputs, "item {i}");
         }
     }
 

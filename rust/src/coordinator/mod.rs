@@ -15,13 +15,20 @@
 //!   environment has no tokio). Batches are routed round-robin over a
 //!   [`crate::fabric::FabricPool`] of physical fabric instances; graphs
 //!   that exceed one instance are partitioned and served by the sharded
-//!   executor ([`crate::fabric::shard`]).
+//!   executor ([`crate::fabric::shard`]). Warm per-graph state (built
+//!   graph, compiled lane program, fabric route) is shared across
+//!   workers through a [`crate::serve::SessionCache`] keyed by graph
+//!   fingerprint (`cache_hits` in [`Metrics`]); the engine-selection
+//!   lattice itself is exposed through [`crate::serve::sched`] so the
+//!   service tier can drive the same engines without this module's
+//!   queue.
 
 pub mod batch;
 pub mod router;
 
 pub use batch::{
-    run_batch_lanes, run_batch_lanes_with_stats, run_batch_native, run_batch_streamed,
-    run_batch_xla, BatchEngine, LaneBatchStats,
+    run_batch_lanes, run_batch_lanes_prog, run_batch_lanes_with_stats, run_batch_native,
+    run_batch_reconfig, run_batch_sharded, run_batch_streamed, run_batch_xla, BatchEngine,
+    LaneBatchStats,
 };
 pub use router::{BatchMode, Coordinator, Engine, Metrics, Request, Response};

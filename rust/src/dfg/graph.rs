@@ -128,6 +128,65 @@ impl Graph {
         }
         m
     }
+
+    /// Content-addressed identity: a stable FNV-1a 64-bit hash over the
+    /// graph's *computational* content — operators (with their `const` /
+    /// `fifo` parameters) in node order, arc endpoints (node index +
+    /// port index on each side), and the labels of environment-facing
+    /// port arcs (they name the injection/collection interface).
+    ///
+    /// Deliberately excluded: the graph's display `name` and the labels
+    /// of *internal* arcs — renaming `s3` to `tmp` changes neither what
+    /// the graph computes nor how it places, so it must not change the
+    /// fingerprint (the session cache keys warm compile/place state by
+    /// this hash). Changing an op, rewiring a port, or renaming an
+    /// input/output port all change it.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a(h, &(self.nodes.len() as u32).to_le_bytes());
+        h = fnv1a(h, &(self.arcs.len() as u32).to_le_bytes());
+        for n in &self.nodes {
+            h = fnv1a(h, n.op.mnemonic().as_bytes());
+            match n.op {
+                Op::Const(v) => h = fnv1a(h, &v.to_le_bytes()),
+                Op::Fifo(k) => h = fnv1a(h, &k.to_le_bytes()),
+                _ => {}
+            }
+            h = fnv1a(h, &[0xFE]);
+        }
+        for a in &self.arcs {
+            h = fnv1a_endpoint(h, a.src);
+            h = fnv1a_endpoint(h, a.dst);
+            if a.is_input_port() || a.is_output_port() {
+                h = fnv1a(h, a.name.as_bytes());
+            }
+            h = fnv1a(h, &[0xFE]);
+        }
+        h
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fold one arc endpoint: `(node index, port index)` or an environment
+/// marker distinct from any node index.
+fn fnv1a_endpoint(h: u64, ep: Option<(NodeId, u8)>) -> u64 {
+    match ep {
+        Some((n, port)) => {
+            let h = fnv1a(h, &n.0.to_le_bytes());
+            fnv1a(h, &[port])
+        }
+        None => fnv1a(h, &[0xFF; 5]),
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +223,92 @@ mod tests {
         let g = b.finish().unwrap();
         assert_eq!(g.op_census()["copy"], 1);
         assert_eq!(g.op_census()["add"], 1);
+    }
+
+    #[test]
+    fn fingerprint_ignores_internal_arc_names_and_graph_name() {
+        let build = |gname: &str, internal: &str| {
+            let mut b = GraphBuilder::new(gname);
+            let a = b.input_port("a");
+            let c = b.input_port("b");
+            let s = b.op2(Op::Add, a, c);
+            b.rename_arc(s, internal);
+            let z = b.output_port("z");
+            b.node(Op::Not, &[s], &[z]);
+            b.finish().unwrap()
+        };
+        let g1 = build("first", "s_sum");
+        let g2 = build("second", "totally_different_label");
+        assert_eq!(g1.fingerprint(), g2.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_sees_op_changes() {
+        let build = |op: Op| {
+            let mut b = GraphBuilder::new("t");
+            let a = b.input_port("a");
+            let c = b.input_port("b");
+            let z = b.output_port("z");
+            b.node(op, &[a, c], &[z]);
+            b.finish().unwrap()
+        };
+        assert_ne!(build(Op::Add).fingerprint(), build(Op::Sub).fingerprint());
+        // Parameterized ops hash their parameter too.
+        let fifo = |k: u16| {
+            let mut b = GraphBuilder::new("t");
+            let a = b.input_port("a");
+            let z = b.output_port("z");
+            b.node(Op::Fifo(k), &[a], &[z]);
+            b.finish().unwrap()
+        };
+        assert_ne!(fifo(2).fingerprint(), fifo(3).fingerprint());
+        let konst = |v: i16| {
+            let mut b = GraphBuilder::new("t");
+            let c = b.constant(v);
+            let a = b.input_port("a");
+            let z = b.output_port("z");
+            b.node(Op::Add, &[c, a], &[z]);
+            b.finish().unwrap()
+        };
+        assert_ne!(konst(1).fingerprint(), konst(2).fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_sees_port_renames_and_rewiring() {
+        let build = |in0: &str, swap: bool| {
+            let mut b = GraphBuilder::new("t");
+            let a = b.input_port(in0);
+            let c = b.input_port("b");
+            let z = b.output_port("z");
+            let (x, y) = if swap { (c, a) } else { (a, c) };
+            b.node(Op::Sub, &[x, y], &[z]);
+            b.finish().unwrap()
+        };
+        // Renaming an environment-facing port changes the interface.
+        assert_ne!(
+            build("a", false).fingerprint(),
+            build("a2", false).fingerprint()
+        );
+        // Swapping which port feeds which operand rewires the arcs.
+        assert_ne!(
+            build("a", false).fingerprint(),
+            build("a", true).fingerprint()
+        );
+        // Identical construction is a fixpoint.
+        assert_eq!(
+            build("a", false).fingerprint(),
+            build("a", false).fingerprint()
+        );
+    }
+
+    #[test]
+    fn benchmark_fingerprints_are_distinct() {
+        use std::collections::BTreeSet;
+        let fps: BTreeSet<u64> = crate::bench_defs::BenchId::ALL
+            .iter()
+            .map(|&b| crate::bench_defs::build(b).fingerprint())
+            .collect();
+        assert_eq!(fps.len(), crate::bench_defs::BenchId::ALL.len());
     }
 
     #[test]

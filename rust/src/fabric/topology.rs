@@ -133,7 +133,37 @@ impl FabricTopology {
             256,
         )
     }
+
+    /// The multi-tenant serving fabric: the paper instance scaled with
+    /// per-class headroom for workloads *outside* the six benchmarks.
+    /// `paper()` is demand-derived, so classes no benchmark uses get
+    /// zero slots (e.g. `alu1` — no benchmark contains a `not`), which
+    /// would push every random-DFG tenant off the placed path. The
+    /// serving preset floors every class at [`SERVING_CLASS_FLOOR`]
+    /// slots and widens the channel pool so the conformance
+    /// generator's graphs ([`crate::util::proptest::random_dfg`])
+    /// place whole; partitioned/reconfig serving is still reachable by
+    /// handing the serve tier a smaller explicit topology.
+    pub fn serving() -> FabricTopology {
+        let mut t = Self::paper();
+        t.name = "paper-virtex7-serving".to_string();
+        for class in OpClass::ALL {
+            let e = t.slots.entry(class).or_insert(0);
+            *e = (*e).max(SERVING_CLASS_FLOOR);
+        }
+        t.channels = t.channels.max(SERVING_CHANNELS);
+        t
+    }
 }
+
+/// Slots per operator class the serving fabric guarantees — an upper
+/// bound on the per-class demand of the random-DFG generator (≤ 12 op
+/// arms plus the loop schema and port terminators).
+pub const SERVING_CLASS_FLOOR: usize = 40;
+
+/// Bus channels the serving fabric guarantees (generator graphs stay
+/// well under 200 arcs).
+pub const SERVING_CHANNELS: usize = 320;
 
 #[cfg(test)]
 mod tests {
@@ -145,6 +175,25 @@ mod tests {
         let topo = FabricTopology::paper();
         for b in BenchId::ALL {
             assert!(topo.fits(&build(b)), "{} must fit the paper fabric", b.slug());
+        }
+    }
+
+    #[test]
+    fn serving_fabric_fits_benchmarks_and_random_dfgs() {
+        let topo = FabricTopology::serving();
+        for b in BenchId::ALL {
+            assert!(topo.fits(&build(b)), "{}", b.slug());
+        }
+        assert!(topo.fits(&crate::bench_defs::saxpy::build()));
+        assert!(topo.slot_count(crate::dfg::OpClass::Alu1) >= SERVING_CLASS_FLOOR);
+        let mut r = crate::util::Rng::new(0x5E41);
+        for case in 0..64 {
+            let gg = crate::util::proptest::random_dfg(&mut r, case % 2 == 0);
+            assert!(
+                topo.fits(&gg.graph),
+                "random graph (case {case}) exceeds the serving fabric: {:?}",
+                FabricTopology::demand(&gg.graph)
+            );
         }
     }
 

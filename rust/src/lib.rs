@@ -39,6 +39,11 @@
 //! * [`runtime`] + [`coordinator`] — the acceleration path: batched fabric
 //!   simulation through AOT-compiled XLA artifacts (JAX/Pallas, loaded over
 //!   PJRT; Python never runs at simulation time).
+//! * [`serve`] — the multi-tenant service tier: warm-state session cache
+//!   keyed by [`dfg::Graph::fingerprint`], admission scheduler
+//!   (quotas, explicit shedding, weighted-fair picking, deadline-aware
+//!   batch formation, per-batch engine selection), deterministic load
+//!   generator, and per-tenant latency/shed/cache statistics.
 //! * [`report`] — Table 1 / Fig. 8 renderers.
 //!
 //! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for
@@ -55,6 +60,7 @@ pub mod fabric;
 pub mod frontend;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod vhdl;
 

@@ -7,6 +7,8 @@
 //! dataflow-accel stream <bench|saxpy> [--waves 8] [--n 8] [--seed 7]
 //! dataflow-accel stream --table [--waves 8] [--n 8] [--seed 7]
 //! dataflow-accel bench [--quick] [--items 64] [--n 16] [--seed 7] [--out BENCH_3.json]
+//! dataflow-accel serve [--quick] [--seed 7] [--scale 24] [--n 8]
+//!                      [--arrival closed|open] [--out SERVE_4.json]
 //! dataflow-accel table1 [--fig8]
 //! dataflow-accel sweep [--bench all] [--requests 64] [--n 16] [--engine native|xla]
 //!                      [--workers 4] [--batch 8] [--stream]
@@ -31,6 +33,7 @@ fn main() {
         "place" => cmd_place(&args),
         "stream" => cmd_stream(&args),
         "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
         "table1" => {
             if args.has("fig8") {
                 print!("{}", report::fig8_csv());
@@ -42,7 +45,7 @@ fn main() {
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dataflow-accel <run|compile|place|stream|table1|sweep|info> [options]\n\
+                "usage: dataflow-accel <run|compile|place|stream|bench|serve|table1|sweep|info> [options]\n\
                  place: map a benchmark onto the physical fabric model \n\
                  \x20 --shards K    size the fabric to ~1/K of the graph (forces partitioning)\n\
                  \x20 --channels N  override the bus-channel pool\n\
@@ -55,6 +58,13 @@ fn main() {
                  \x20 --quick       reduced iteration counts (the CI smoke job)\n\
                  \x20 --items B     batch items per benchmark (default 64; 8 with --quick)\n\
                  \x20 --out PATH    write the JSON trajectory (default BENCH_3.json)\n\
+                 serve: multi-tenant service tier over the fixed 3-tenant workload mix \n\
+                 \x20 --quick       reduced request counts (the CI smoke job)\n\
+                 \x20 --scale S     per-weight request multiplier (default 24; 4 with --quick)\n\
+                 \x20 --n N         workload size per request (default 8; 4 with --quick)\n\
+                 \x20 --seed S      load-profile seed (same seed = same request trace)\n\
+                 \x20 --arrival M   closed (default) or open loop arrivals\n\
+                 \x20 --out PATH    write the JSON report (default SERVE_4.json)\n\
                  sweep: --stream routes batches through resident streaming sessions\n\
                  benchmarks: {} saxpy (stream/bench only)",
                 BenchId::ALL.map(|b| b.slug()).join(" ")
@@ -286,6 +296,53 @@ fn cmd_bench(args: &Args) {
         std::process::exit(1);
     }
     let json = report::perf::to_json(&rows, &cfg);
+    std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
+    println!("wrote {out_path}");
+}
+
+fn cmd_serve(args: &Args) {
+    use dataflow_accel::serve::{self, Arrival};
+    let quick = args.has("quick");
+    let seed = args.get_u64("seed", 7);
+    let scale = args.get_usize("scale", if quick { 4 } else { 24 });
+    let n = args.get_usize("n", if quick { 4 } else { 8 });
+    let out_path = args.get_or("out", "SERVE_4.json");
+    let mut profile = serve::standard_profile(scale, n, seed);
+    match args.get_or("arrival", "closed").as_str() {
+        "closed" => {}
+        "open" => profile.arrival = Arrival::Open { burst: 4 },
+        other => panic!("unknown --arrival `{other}` (closed|open)"),
+    }
+    let opts = serve::ServeOptions::default();
+    let outcome = serve::run_profile(&profile, &opts);
+    let report = &outcome.report;
+    print!("{}", report::serve_table(report));
+
+    // Service invariants gate the trajectory file: every submitted
+    // request must be completed or explicitly shed, and every
+    // completed request's outputs must have verified against its
+    // reference — numbers from a lossy or wrong service tier must
+    // never land in SERVE_*.json.
+    if report.global.lost() != 0 {
+        eprintln!(
+            "serve: {} request(s) lost (submitted {} != completed {} + shed {})",
+            report.global.lost(),
+            report.global.submitted,
+            report.global.completed,
+            report.global.shed()
+        );
+        eprintln!("serve: refusing to write {out_path}");
+        std::process::exit(1);
+    }
+    if report.global.verified != report.global.completed {
+        eprintln!(
+            "serve: {} completed request(s) failed verification",
+            report.global.completed - report.global.verified
+        );
+        eprintln!("serve: refusing to write {out_path}");
+        std::process::exit(1);
+    }
+    let json = report::serve::to_json(report, seed, scale, n, quick);
     std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
     println!("wrote {out_path}");
 }

@@ -6,9 +6,14 @@
 //! [`fig8_csv`] emits the same data as the four bar-chart series of
 //! Fig. 8 in CSV form (one panel per metric). [`perf`] is the `bench`
 //! subcommand's engine-comparison harness (scalar vs streamed vs lane
-//! engines, BENCH_*.json trajectory).
+//! engines, BENCH_*.json trajectory). [`serve`] renders the service
+//! tier's per-tenant summary ([`serve::serve_table`]) and the
+//! SERVE_*.json trajectory.
 
 pub mod perf;
+pub mod serve;
+
+pub use serve::serve_table;
 
 use crate::baselines::{ctv, kernel_spec, lalp};
 use crate::bench_defs::{self, build, BenchId};

@@ -1,0 +1,202 @@
+//! Renderers for the service tier: the per-tenant summary table the
+//! `serve` CLI prints, and the hand-rolled `SERVE_<k>.json` trajectory
+//! (schema `dataflow-accel-serve/v1`) the CI smoke job validates and
+//! archives. No JSON dependency — same approach as [`super::perf`].
+
+use crate::serve::{ServeReport, TenantStats};
+use std::fmt::Write as _;
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+fn tenant_row(out: &mut String, t: &TenantStats) {
+    writeln!(
+        out,
+        "{:<12} {:>9} {:>9} {:>6} {:>9} {:>8} {:>9.3} {:>9.3} {:>9.3} {:>9.1}",
+        t.name,
+        t.submitted,
+        t.completed,
+        t.shed(),
+        t.verified,
+        t.batches,
+        ms(t.latency.p50_ns()),
+        ms(t.latency.p95_ns()),
+        ms(t.latency.p99_ns()),
+        t.mean_wait_ticks(),
+    )
+    .unwrap();
+}
+
+/// The per-tenant summary table (stdout of the `serve` subcommand).
+pub fn serve_table(r: &ServeReport) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Service tier: {} tenant(s), {} tick(s), max queue depth {}",
+        r.tenants.len(),
+        r.ticks,
+        r.max_queue_depth
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:<12} {:>9} {:>9} {:>6} {:>9} {:>8} {:>9} {:>9} {:>9} {:>9}",
+        "tenant",
+        "submitted",
+        "completed",
+        "shed",
+        "verified",
+        "batches",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "wait tk"
+    )
+    .unwrap();
+    for t in &r.tenants {
+        tenant_row(&mut out, t);
+    }
+    tenant_row(&mut out, &r.global);
+    let engines: Vec<String> = r
+        .global
+        .engine_requests
+        .iter()
+        .map(|(e, n)| format!("{e} {n}"))
+        .collect();
+    writeln!(
+        out,
+        "engines: {} | lane scalar reruns {}",
+        if engines.is_empty() {
+            "none".to_string()
+        } else {
+            engines.join(", ")
+        },
+        r.lane_scalar_reruns
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "cache: {} hit(s), {} miss(es), {} eviction(s) | lost requests {}",
+        r.cache_hits,
+        r.cache_misses,
+        r.cache_evictions,
+        r.global.lost()
+    )
+    .unwrap();
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+fn stats_json(out: &mut String, indent: &str, t: &TenantStats) {
+    writeln!(out, "{indent}\"name\": \"{}\",", json_escape(&t.name)).unwrap();
+    writeln!(out, "{indent}\"submitted\": {},", t.submitted).unwrap();
+    writeln!(out, "{indent}\"completed\": {},", t.completed).unwrap();
+    writeln!(out, "{indent}\"shed\": {},", t.shed()).unwrap();
+    writeln!(out, "{indent}\"shed_queue_full\": {},", t.shed_queue_full).unwrap();
+    writeln!(out, "{indent}\"shed_quota\": {},", t.shed_quota).unwrap();
+    writeln!(out, "{indent}\"lost\": {},", t.lost()).unwrap();
+    writeln!(out, "{indent}\"verified\": {},", t.verified).unwrap();
+    writeln!(out, "{indent}\"batches\": {},", t.batches).unwrap();
+    writeln!(out, "{indent}\"fabric_cycles\": {},", t.fabric_cycles).unwrap();
+    writeln!(out, "{indent}\"mean_wait_ticks\": {:.2},", t.mean_wait_ticks()).unwrap();
+    let engines: Vec<String> = t
+        .engine_requests
+        .iter()
+        .map(|(e, n)| format!("\"{e}\": {n}"))
+        .collect();
+    writeln!(out, "{indent}\"engine_requests\": {{{}}},", engines.join(", ")).unwrap();
+    writeln!(out, "{indent}\"latency\": {{").unwrap();
+    writeln!(out, "{indent}  \"count\": {},", t.latency.count()).unwrap();
+    writeln!(out, "{indent}  \"mean_ns\": {},", t.latency.mean_ns()).unwrap();
+    writeln!(out, "{indent}  \"min_ns\": {},", t.latency.min_ns()).unwrap();
+    writeln!(out, "{indent}  \"max_ns\": {},", t.latency.max_ns()).unwrap();
+    writeln!(out, "{indent}  \"p50_ns\": {},", t.latency.p50_ns()).unwrap();
+    writeln!(out, "{indent}  \"p95_ns\": {},", t.latency.p95_ns()).unwrap();
+    writeln!(out, "{indent}  \"p99_ns\": {}", t.latency.p99_ns()).unwrap();
+    writeln!(out, "{indent}}}").unwrap();
+}
+
+/// Serialize a profile run (schema `dataflow-accel-serve/v1`). The
+/// caller echoes its profile parameters so reruns are reproducible.
+pub fn to_json(r: &ServeReport, seed: u64, scale: usize, n: usize, quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"dataflow-accel-serve/v1\",\n");
+    writeln!(out, "  \"seed\": {seed},").unwrap();
+    writeln!(out, "  \"scale\": {scale},").unwrap();
+    writeln!(out, "  \"n\": {n},").unwrap();
+    writeln!(out, "  \"quick\": {quick},").unwrap();
+    writeln!(out, "  \"ticks\": {},", r.ticks).unwrap();
+    writeln!(out, "  \"max_queue_depth\": {},", r.max_queue_depth).unwrap();
+    writeln!(out, "  \"cache_hits\": {},", r.cache_hits).unwrap();
+    writeln!(out, "  \"cache_misses\": {},", r.cache_misses).unwrap();
+    writeln!(out, "  \"cache_evictions\": {},", r.cache_evictions).unwrap();
+    writeln!(out, "  \"lane_scalar_reruns\": {},", r.lane_scalar_reruns).unwrap();
+    out.push_str("  \"global\": {\n");
+    stats_json(&mut out, "    ", &r.global);
+    out.push_str("  },\n");
+    out.push_str("  \"tenants\": [\n");
+    for (i, t) in r.tenants.iter().enumerate() {
+        let comma = if i + 1 < r.tenants.len() { "," } else { "" };
+        out.push_str("    {\n");
+        stats_json(&mut out, "      ", t);
+        writeln!(out, "    }}{comma}").unwrap();
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{run_profile, standard_profile, ServeOptions};
+
+    fn tiny_report() -> ServeReport {
+        let profile = standard_profile(2, 3, 11);
+        run_profile(&profile, &ServeOptions::default()).report
+    }
+
+    #[test]
+    fn table_names_every_tenant_and_the_invariants() {
+        let r = tiny_report();
+        let t = serve_table(&r);
+        for tenant in &r.tenants {
+            assert!(t.contains(&tenant.name), "missing {}", tenant.name);
+        }
+        assert!(t.contains("global"));
+        assert!(t.contains("p99 ms"));
+        assert!(t.contains("lost requests 0"), "{t}");
+    }
+
+    #[test]
+    fn json_is_structurally_sound_and_carries_the_schema() {
+        let r = tiny_report();
+        let json = to_json(&r, 11, 2, 3, true);
+        assert!(json.starts_with("{\n") && json.ends_with("}\n"));
+        assert!(json.contains("\"schema\": \"dataflow-accel-serve/v1\""));
+        for field in ["\"p50_ns\"", "\"p95_ns\"", "\"p99_ns\""] {
+            assert!(
+                json.matches(field).count() >= r.tenants.len() + 1,
+                "{field} missing"
+            );
+        }
+        assert!(json.contains("\"lost\": 0"));
+        assert!(json.contains("\"cache_hits\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert!(!json.contains("NaN") && !json.contains("inf"));
+    }
+}

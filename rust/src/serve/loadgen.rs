@@ -1,0 +1,311 @@
+//! Deterministic load generation over mixed workloads: all seven
+//! benchmarks (the paper's six loop schemas plus SAXPY) and seeded
+//! random DFGs from [`crate::util::proptest`], organized into tenants
+//! with weights, quotas and arrival patterns.
+//!
+//! Everything derives from the profile seed: the per-tenant request
+//! *trace* (kind, size, workload seed per sequence number) is a pure
+//! function of `(profile.seed, tenant index)`, so the same seed always
+//! offers the same load — the property `rust/tests/serve.rs` pins.
+//! What is *not* deterministic is wall-clock latency; the scheduler
+//! therefore keys all scheduling decisions off virtual ticks and uses
+//! wall time only for the reported histograms.
+
+use crate::bench_defs::{self, BenchId};
+use crate::dfg::{Graph, Word};
+use crate::util::proptest::{random_dfg, random_workload, GenGraph};
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+/// One unit of work a tenant can request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkKind {
+    /// One of the paper's six benchmarks.
+    Bench(BenchId),
+    /// The pipelineable SAXPY workload.
+    Saxpy,
+    /// A seeded random DFG from the conformance generator. The graph
+    /// identity is derived from the request seed (see
+    /// [`ServeRequest::graph_seed`]), so tenants revisit a small graph
+    /// family and the session cache gets realistic reuse.
+    Random { branchy: bool },
+}
+
+/// One fully-specified request in a tenant's trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeRequest {
+    pub tenant: usize,
+    /// Monotonic per-tenant sequence number.
+    pub seq: usize,
+    pub kind: WorkKind,
+    /// Workload size (vector length / trip count).
+    pub n: usize,
+    /// Workload seed (inputs derive from it).
+    pub seed: u64,
+}
+
+/// Distinct random graphs per `Random` arm — small, so repeat requests
+/// hit warm sessions the way repeat tenants would in production.
+const RANDOM_GRAPH_FAMILY: u64 = 5;
+
+impl ServeRequest {
+    /// The seed that fixes a `Random` request's *graph* (as opposed to
+    /// its workload): folded into a small family for cache reuse.
+    pub fn graph_seed(&self) -> u64 {
+        self.seed % RANDOM_GRAPH_FAMILY
+    }
+
+    /// A cache key stable across requests for the same graph content —
+    /// what [`crate::serve::SessionCache::warm_keyed`] indexes by.
+    pub fn cache_hint(&self) -> String {
+        match self.kind {
+            WorkKind::Bench(b) => format!("bench:{}", b.slug()),
+            WorkKind::Saxpy => "saxpy".to_string(),
+            WorkKind::Random { branchy } => {
+                format!("gen:{}:{}", branchy as u8, self.graph_seed())
+            }
+        }
+    }
+}
+
+/// Build (or for `Random`, regenerate) the request's graph. Cache
+/// misses only; hits resolve through the hint index without building.
+pub fn build_graph(req: &ServeRequest) -> Graph {
+    match req.kind {
+        WorkKind::Bench(b) => bench_defs::build(b),
+        WorkKind::Saxpy => bench_defs::saxpy::build(),
+        WorkKind::Random { branchy } => gen_graph(req, branchy).graph,
+    }
+}
+
+fn gen_graph(req: &ServeRequest, branchy: bool) -> GenGraph {
+    let mut r = Rng::new(0x6E6E_6772 ^ (req.graph_seed() << 8) ^ branchy as u64);
+    random_dfg(&mut r, branchy)
+}
+
+/// A request's injection streams, expected outputs (when the workload
+/// has a closed-form reference) and round budget.
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    pub inject: BTreeMap<String, Vec<Word>>,
+    /// `None` means the oracle is a scalar `TokenSim` run (random
+    /// DFGs); the executor computes and compares it after the engine.
+    pub expect: Option<BTreeMap<String, Vec<Word>>>,
+    pub max_cycles: u64,
+}
+
+/// Materialize the workload half of a request (the graph half goes
+/// through the session cache).
+pub fn work_item(req: &ServeRequest) -> WorkItem {
+    match req.kind {
+        WorkKind::Bench(b) => {
+            let wl = bench_defs::workload(b, req.n, req.seed);
+            WorkItem {
+                inject: wl.inject,
+                expect: Some(wl.expect),
+                max_cycles: wl.max_cycles,
+            }
+        }
+        WorkKind::Saxpy => {
+            let (inject, z) = bench_defs::saxpy::wave(req.n, req.seed);
+            WorkItem {
+                inject,
+                expect: Some(BTreeMap::from([("z".to_string(), z)])),
+                max_cycles: 100_000,
+            }
+        }
+        WorkKind::Random { branchy } => {
+            // Regenerating the GenGraph here (per item) is deliberate:
+            // only its *port contract* is needed to shape the workload,
+            // the graphs are tiny (≲ a few dozen nodes), and every
+            // random item already pays a full scalar `TokenSim` oracle
+            // run at verification — graph generation is noise next to
+            // that. The expensive half (compile/place/route) still
+            // comes from the session cache.
+            let gg = gen_graph(req, branchy);
+            let mut r = Rng::new(req.seed ^ 0x5EED_F00D);
+            // Short streams: random routing strands tokens, so budgets
+            // stay modest and deadlocked items are cheap to flush.
+            let inject = random_workload(&mut r, &gg, req.n.clamp(1, 4));
+            WorkItem {
+                inject,
+                expect: None,
+                max_cycles: 200_000,
+            }
+        }
+    }
+}
+
+/// One tenant's offered load and service parameters.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Weighted-fair share: dispatch credits per scheduler refill.
+    pub weight: u32,
+    /// Max requests this tenant may have queued; admission sheds
+    /// beyond it (explicitly).
+    pub quota: usize,
+    /// Closed-loop window: target outstanding (queued) requests.
+    pub window: usize,
+    /// The request mix, sampled uniformly per request.
+    pub mix: Vec<WorkKind>,
+    /// Total requests the tenant offers over the profile.
+    pub requests: usize,
+}
+
+/// How requests arrive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Closed loop: each tenant tops its queue up to `window` every
+    /// tick (the next request "arrives" as soon as a slot frees).
+    Closed,
+    /// Open loop: `burst` requests per tenant per tick regardless of
+    /// completions — the oversubscription / shedding regime.
+    Open { burst: usize },
+}
+
+/// A complete load profile: tenants, arrival pattern, workload size,
+/// and the seed everything derives from.
+#[derive(Debug, Clone)]
+pub struct LoadProfile {
+    pub tenants: Vec<TenantSpec>,
+    pub arrival: Arrival,
+    /// Workload size per request.
+    pub n: usize,
+    pub seed: u64,
+}
+
+/// The full deterministic request trace for tenant `t` — same
+/// `(profile.seed, t)` ⇒ same trace, independent of scheduling.
+pub fn tenant_trace(profile: &LoadProfile, t: usize) -> Vec<ServeRequest> {
+    let spec = &profile.tenants[t];
+    assert!(
+        spec.requests == 0 || !spec.mix.is_empty(),
+        "tenant `{}`: a non-empty trace needs a non-empty mix",
+        spec.name
+    );
+    let mut r = Rng::new(profile.seed ^ ((t as u64 + 1) << 40));
+    (0..spec.requests)
+        .map(|seq| ServeRequest {
+            tenant: t,
+            seq,
+            kind: spec.mix[r.below(spec.mix.len())],
+            n: profile.n,
+            seed: r.next_u64(),
+        })
+        .collect()
+}
+
+/// The fixed three-tenant mix the `serve` CLI and CI smoke job run:
+/// an interactive tenant (weight 4, latency-sensitive benchmarks +
+/// SAXPY), a batch tenant (weight 2, the whole suite), and a fuzz
+/// tenant (weight 1, random DFGs). `scale` multiplies per-tenant
+/// request counts (offered load stays 4:2:1).
+pub fn standard_profile(scale: usize, n: usize, seed: u64) -> LoadProfile {
+    let scale = scale.max(1);
+    LoadProfile {
+        tenants: vec![
+            TenantSpec {
+                name: "interactive".to_string(),
+                weight: 4,
+                quota: 64,
+                window: 8,
+                mix: vec![
+                    WorkKind::Bench(BenchId::Fibonacci),
+                    WorkKind::Bench(BenchId::DotProd),
+                    WorkKind::Bench(BenchId::Max),
+                    WorkKind::Saxpy,
+                ],
+                requests: 4 * scale,
+            },
+            TenantSpec {
+                name: "batch".to_string(),
+                weight: 2,
+                quota: 64,
+                window: 4,
+                mix: BenchId::ALL
+                    .iter()
+                    .map(|&b| WorkKind::Bench(b))
+                    .chain([WorkKind::Saxpy])
+                    .collect(),
+                requests: 2 * scale,
+            },
+            TenantSpec {
+                name: "fuzz".to_string(),
+                weight: 1,
+                quota: 32,
+                window: 2,
+                mix: vec![
+                    WorkKind::Random { branchy: false },
+                    WorkKind::Random { branchy: true },
+                ],
+                requests: scale,
+            },
+        ],
+        arrival: Arrival::Closed,
+        n,
+        seed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_per_seed() {
+        let p = standard_profile(8, 4, 7);
+        for t in 0..p.tenants.len() {
+            assert_eq!(tenant_trace(&p, t), tenant_trace(&p, t));
+        }
+        let mut p2 = p.clone();
+        p2.seed = 8;
+        assert_ne!(tenant_trace(&p, 0), tenant_trace(&p2, 0));
+    }
+
+    #[test]
+    fn standard_profile_offers_weighted_load() {
+        let p = standard_profile(3, 4, 1);
+        assert_eq!(p.tenants.len(), 3);
+        assert_eq!(p.tenants[0].requests, 12);
+        assert_eq!(p.tenants[1].requests, 6);
+        assert_eq!(p.tenants[2].requests, 3);
+        assert_eq!(
+            p.tenants.iter().map(|t| t.weight).collect::<Vec<_>>(),
+            vec![4, 2, 1]
+        );
+    }
+
+    #[test]
+    fn random_requests_share_a_small_graph_family() {
+        let p = standard_profile(16, 3, 9);
+        let fuzz = p.tenants.len() - 1;
+        let hints: std::collections::BTreeSet<String> = tenant_trace(&p, fuzz)
+            .iter()
+            .map(|r| r.cache_hint())
+            .collect();
+        // Two arms × at most RANDOM_GRAPH_FAMILY graph seeds.
+        assert!(hints.len() <= 2 * RANDOM_GRAPH_FAMILY as usize);
+        assert!(!hints.is_empty());
+    }
+
+    #[test]
+    fn work_items_match_their_graphs() {
+        // Every mix member materializes a workload whose ports exist on
+        // the graph it will run against.
+        let p = standard_profile(2, 4, 3);
+        for t in 0..p.tenants.len() {
+            for req in tenant_trace(&p, t) {
+                let g = build_graph(&req);
+                let item = work_item(&req);
+                for port in item.inject.keys() {
+                    assert!(
+                        g.arc_by_name(port).is_some(),
+                        "{:?}: port {port} missing",
+                        req.kind
+                    );
+                }
+            }
+        }
+    }
+}

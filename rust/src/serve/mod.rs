@@ -1,0 +1,49 @@
+//! The multi-tenant service tier: the front door that admits,
+//! schedules, and reuses resident execution state across tenants.
+//!
+//! PRs 1–3 built the engines — placed/sharded/reconfig fabrics
+//! ([`crate::fabric`]), wave-pipelined resident sessions
+//! ([`crate::sim::StreamSession`]), 64-wide lane batches
+//! ([`crate::sim::lanes`]) — but nothing *served* them: the paper's
+//! acceleration story is a resident dataflow fabric fed a sustained
+//! operand stream, and the system-level analogue is a service that
+//! keeps warm state resident and feeds it a sustained request stream
+//! from many tenants. This module is that service:
+//!
+//! * [`session`] — a bounded, thread-safe cache of warm execution
+//!   state (built graph, compiled lane [`Program`](crate::sim::Program),
+//!   fabric route) keyed by the content-addressed
+//!   [`Graph::fingerprint`](crate::dfg::Graph::fingerprint), so repeat
+//!   tenants skip build/compile/place entirely. The coordinator's
+//!   router shares the same cache (its `cache_hits` metric).
+//! * [`sched`] — an admission queue with per-tenant quotas and a
+//!   global bound (oversubscription gets an explicit shed response,
+//!   never a silent drop), weighted-fair credit picking across
+//!   tenants (bounded starvation), deadline-aware same-graph batch
+//!   formation, and per-batch engine selection over the existing
+//!   placed → sharded → reconfig → fallback route lattice.
+//! * [`loadgen`] — a deterministic seeded closed-loop / open-loop
+//!   load generator over mixed workloads: the seven benchmarks plus
+//!   random DFGs from [`crate::util::proptest`], organized into
+//!   tenant mixes (same seed ⇒ same request trace).
+//! * [`stats`] — per-tenant and global latency percentiles over a
+//!   fixed-bucket histogram, queue-depth / shed / cache-hit counters.
+//!
+//! [`crate::report::serve`] renders the summary table and the
+//! machine-readable `SERVE_<k>.json`; the `serve` CLI subcommand runs
+//! a load profile end to end. DESIGN.md §8 states the invariants.
+
+pub mod loadgen;
+pub mod sched;
+pub mod session;
+pub mod stats;
+
+pub use loadgen::{
+    standard_profile, tenant_trace, Arrival, LoadProfile, ServeRequest, TenantSpec, WorkKind,
+};
+pub use sched::{
+    choose_engine, execute_batch, run_profile, Admission, BatchResult, DispatchRec, EngineChoice,
+    ProfileOutcome, Scheduler, ServeCfg, ServeOptions,
+};
+pub use session::{RoutePlan, SessionCache, WarmState};
+pub use stats::{Histogram, ServeCollector, ServeReport, ShedReason, TenantStats};

@@ -1,0 +1,586 @@
+//! The admission scheduler: bounded queues with explicit shedding,
+//! weighted-fair picking across tenants, deadline-aware batch
+//! formation, and per-batch engine selection over the warm-state
+//! session cache.
+//!
+//! Scheduling is driven entirely by virtual *ticks*, never wall time,
+//! so every decision the scheduler makes — admission, shedding, batch
+//! formation, tenant picking — is a deterministic function of the
+//! profile seed. Wall clocks appear only in the reported latency
+//! histograms.
+//!
+//! **Fairness invariant** (asserted by `rust/tests/serve.rs`): picking
+//! is weighted round-robin with credit refill — each refill grants
+//! tenant `t` its `weight` dispatch credits, and credits refill only
+//! when no dispatch-ready tenant holds any. A tenant that stays
+//! dispatch-ready therefore waits at most `sum(weights) − weight(t)`
+//! dispatches between services, no matter how much load the others
+//! offer.
+//!
+//! **Shed invariant**: admission either queues the request or returns
+//! an explicit [`Admission::Shed`] with its reason; nothing is dropped
+//! silently, so `completed + shed == submitted` once a profile drains.
+//!
+//! **Batch formation**: a tenant's queue is dispatched from the head
+//! as the longest same-graph run (bounded by `max_batch`). A short run
+//! waits for batch-mates until the head request's deadline
+//! (`deadline_ticks`) expires, then dispatches at whatever size is
+//! there — batching never costs more than the configured slack.
+//!
+//! **Engine selection** per batch, from the cached [`WarmState`]:
+//! placed + overlap-safe graphs with ≥ 2 waves go to a pipelined
+//! resident [`StreamSession`](crate::sim::StreamSession) (the Fig. 1c
+//! throughput case); other placed graphs run-to-completion on the
+//! lane engine with the cached compiled program; partitioned graphs
+//! take the resident sharded rack or the reconfiguration scheduler;
+//! unplaceable graphs fall back to the infinite-fabric engine.
+
+use super::loadgen::{self, Arrival, LoadProfile, ServeRequest, TenantSpec, WorkItem};
+use super::session::{RoutePlan, SessionCache, WarmState};
+use super::stats::{ServeCollector, ServeReport, ShedReason};
+use crate::coordinator::batch::{
+    run_batch_lanes_prog, run_batch_native, run_batch_reconfig, run_batch_sharded,
+};
+use crate::fabric::FabricTopology;
+use crate::sim::stream::run_stream_prevalidated;
+use crate::sim::{run_token, SimConfig, SimOutcome, WaveInput, WaveMode};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Scheduler knobs.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Global admission-queue bound (all tenants together).
+    pub queue_cap: usize,
+    /// Largest batch one dispatch may form.
+    pub max_batch: usize,
+    /// Ticks a head request may wait for same-graph batch-mates before
+    /// dispatch is forced (0 = dispatch as soon as picked).
+    pub deadline_ticks: u64,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            queue_cap: 256,
+            max_batch: 16,
+            deadline_ticks: 4,
+        }
+    }
+}
+
+/// The admission verdict — always explicit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Admitted,
+    Shed(ShedReason),
+}
+
+#[derive(Debug)]
+struct Pending {
+    req: ServeRequest,
+    hint: String,
+    admitted_tick: u64,
+    submitted: Instant,
+}
+
+/// Per-tenant bounded queues + weighted-fair batch picking.
+pub struct Scheduler {
+    cfg: ServeCfg,
+    weights: Vec<u32>,
+    quotas: Vec<usize>,
+    queues: Vec<VecDeque<Pending>>,
+    credits: Vec<u32>,
+    queued_total: usize,
+}
+
+impl Scheduler {
+    pub fn new(tenants: &[TenantSpec], cfg: ServeCfg) -> Self {
+        let weights: Vec<u32> = tenants.iter().map(|t| t.weight.max(1)).collect();
+        Scheduler {
+            credits: weights.clone(),
+            weights,
+            quotas: tenants.iter().map(|t| t.quota.max(1)).collect(),
+            queues: tenants.iter().map(|_| VecDeque::new()).collect(),
+            queued_total: 0,
+            cfg,
+        }
+    }
+
+    /// Requests tenant `t` currently has queued.
+    pub fn queued(&self, t: usize) -> usize {
+        self.queues[t].len()
+    }
+
+    pub fn queued_total(&self) -> usize {
+        self.queued_total
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queued_total == 0
+    }
+
+    /// Admit or shed. Shedding is the *response* — the caller owns
+    /// telling the tenant; the scheduler never drops silently.
+    pub fn admit(&mut self, tick: u64, req: ServeRequest) -> Admission {
+        if self.queued_total >= self.cfg.queue_cap {
+            return Admission::Shed(ShedReason::QueueFull);
+        }
+        let t = req.tenant;
+        if self.queues[t].len() >= self.quotas[t] {
+            return Admission::Shed(ShedReason::TenantQuota);
+        }
+        let hint = req.cache_hint();
+        self.queues[t].push_back(Pending {
+            req,
+            hint,
+            admitted_tick: tick,
+            submitted: Instant::now(),
+        });
+        self.queued_total += 1;
+        Admission::Admitted
+    }
+
+    /// The same-graph head-run length of tenant `t`'s queue if it is
+    /// dispatchable now (full batch, deadline expired, or draining).
+    fn dispatchable(&self, t: usize, tick: u64, drain: bool) -> Option<usize> {
+        let q = &self.queues[t];
+        let head = q.front()?;
+        let cap = q.len().min(self.cfg.max_batch);
+        let mut run = 1usize;
+        while run < cap && q[run].hint == head.hint {
+            run += 1;
+        }
+        let due = tick >= head.admitted_tick + self.cfg.deadline_ticks;
+        if run >= self.cfg.max_batch || due || drain {
+            Some(run)
+        } else {
+            None
+        }
+    }
+
+    /// Pick the next batch under weighted-fair credits. `drain` forces
+    /// dispatch of short runs (no more arrivals can ever join them).
+    fn next_batch(&mut self, tick: u64, drain: bool) -> Option<(usize, Vec<Pending>)> {
+        let runs: Vec<Option<usize>> = (0..self.queues.len())
+            .map(|t| self.dispatchable(t, tick, drain))
+            .collect();
+        if runs.iter().all(|r| r.is_none()) {
+            return None;
+        }
+        // Refill only when no dispatch-ready tenant holds credit — this
+        // is what bounds any ready tenant's wait to sum(weights)−w(t).
+        if !runs
+            .iter()
+            .zip(&self.credits)
+            .any(|(r, &c)| r.is_some() && c > 0)
+        {
+            self.credits.copy_from_slice(&self.weights);
+        }
+        for t in 0..self.queues.len() {
+            if self.credits[t] == 0 {
+                continue;
+            }
+            if let Some(run) = runs[t] {
+                self.credits[t] -= 1;
+                let batch: Vec<Pending> = self.queues[t].drain(..run).collect();
+                self.queued_total -= batch.len();
+                return Some((t, batch));
+            }
+        }
+        None
+    }
+}
+
+/// Which engine a batch ran on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineChoice {
+    Lanes,
+    Streamed,
+    Sharded,
+    Reconfig,
+    Fallback,
+}
+
+impl EngineChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineChoice::Lanes => "lanes",
+            EngineChoice::Streamed => "streamed",
+            EngineChoice::Sharded => "sharded",
+            EngineChoice::Reconfig => "reconfig",
+            EngineChoice::Fallback => "fallback",
+        }
+    }
+}
+
+/// The per-batch engine policy (see module docs).
+pub fn choose_engine(state: &WarmState, batch_len: usize) -> EngineChoice {
+    match &state.route {
+        RoutePlan::Placed => {
+            if state.overlap_safe && batch_len >= 2 {
+                EngineChoice::Streamed
+            } else {
+                EngineChoice::Lanes
+            }
+        }
+        RoutePlan::Sharded(_) => EngineChoice::Sharded,
+        RoutePlan::Reconfig(_) => EngineChoice::Reconfig,
+        RoutePlan::Fallback => EngineChoice::Fallback,
+    }
+}
+
+/// What one batch execution produced.
+#[derive(Debug)]
+pub struct BatchResult {
+    pub engine: &'static str,
+    /// The warm-state lookup was a cache hit (compile/place skipped).
+    pub cache_hit: bool,
+    /// Lane items re-run on the scalar engine (lanes→scalar fallback).
+    pub lane_scalar_reruns: u64,
+    pub outcomes: Vec<SimOutcome>,
+    /// Per item: outputs matched the workload's reference (benchmarks)
+    /// or a scalar `TokenSim` oracle (random DFGs).
+    pub verified: Vec<bool>,
+}
+
+/// Execute one same-graph batch against the session cache. All
+/// requests must share a [`ServeRequest::cache_hint`]. Public so tests
+/// can drive the cold/warm byte-identity contract directly.
+pub fn execute_batch(cache: &SessionCache, reqs: &[ServeRequest]) -> BatchResult {
+    assert!(!reqs.is_empty(), "empty batch");
+    let hint = reqs[0].cache_hint();
+    debug_assert!(
+        reqs.iter().all(|r| r.cache_hint() == hint),
+        "batch mixes graphs"
+    );
+    let (state, cache_hit) = cache.warm_keyed(&hint, || loadgen::build_graph(&reqs[0]));
+    let items: Vec<WorkItem> = reqs.iter().map(loadgen::work_item).collect();
+    let cfgs: Vec<SimConfig> = items
+        .iter()
+        .map(|it| {
+            let mut c = SimConfig::new().max_cycles(it.max_cycles);
+            for (p, s) in &it.inject {
+                c = c.inject(p, s.clone());
+            }
+            c
+        })
+        .collect();
+    let engine = choose_engine(&state, reqs.len());
+    let g = state.graph.as_ref();
+    let mut lane_scalar_reruns = 0u64;
+    // Resident racks stream the batch as waves when there is more than
+    // one item to keep resident state warm for.
+    let waves_resident = cfgs.len() >= 2;
+    let outcomes: Vec<SimOutcome> = match (engine, &state.route) {
+        (EngineChoice::Streamed, _) => {
+            // The whole batch shares one resident session's rounds.
+            // The cached `overlap_safe` bit stands in for the
+            // structural walk — a warm streamed batch pays none.
+            let waves: Vec<WaveInput> = items.iter().map(|it| it.inject.clone()).collect();
+            let budget: u64 = cfgs.iter().map(|c| c.max_cycles).sum();
+            run_stream_prevalidated(g, &waves, budget, WaveMode::Pipelined).0
+        }
+        (EngineChoice::Lanes, _) => {
+            let (outs, stats) = run_batch_lanes_prog(g, &state.program, &cfgs);
+            lane_scalar_reruns = stats.scalar_reruns as u64;
+            outs
+        }
+        (EngineChoice::Sharded, RoutePlan::Sharded(plan)) => {
+            run_batch_sharded(plan, &cfgs, waves_resident)
+        }
+        (EngineChoice::Reconfig, RoutePlan::Reconfig(plan)) => {
+            run_batch_reconfig(plan, cache.topology(), &cfgs, waves_resident)
+        }
+        (EngineChoice::Fallback, _) => run_batch_native(g, &cfgs),
+        _ => unreachable!("engine choice always follows the cached route"),
+    };
+    let verified = items
+        .iter()
+        .zip(&cfgs)
+        .zip(&outcomes)
+        .map(|((item, cfg), out)| match &item.expect {
+            Some(want) => want
+                .iter()
+                .all(|(port, w)| out.stream(port) == w.as_slice()),
+            None => run_token(g, cfg).outputs == out.outputs,
+        })
+        .collect();
+    BatchResult {
+        engine: engine.name(),
+        cache_hit,
+        lane_scalar_reruns,
+        outcomes,
+        verified,
+    }
+}
+
+/// Service-tier construction parameters (the coordinator-independent
+/// analogue of `Coordinator::start_with_fabric`).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub topo: FabricTopology,
+    /// Fabric instances available to the route planner.
+    pub pool_size: usize,
+    /// Session-cache capacity (distinct warm graphs).
+    pub cache_cap: usize,
+    pub cfg: ServeCfg,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            // The serving preset, not `paper()`: random-DFG tenants
+            // must place whole so every engine on the placed path
+            // keeps its byte-identical TokenSim contract.
+            topo: FabricTopology::serving(),
+            pool_size: 2,
+            cache_cap: 32,
+            cfg: ServeCfg::default(),
+        }
+    }
+}
+
+/// One dispatch, for fairness analysis: which tenant, when, how many
+/// requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DispatchRec {
+    pub tenant: usize,
+    pub tick: u64,
+    pub len: usize,
+}
+
+/// What a whole profile run produced.
+#[derive(Debug)]
+pub struct ProfileOutcome {
+    pub report: ServeReport,
+    /// The deterministic dispatch sequence (tick-driven scheduling).
+    pub dispatches: Vec<DispatchRec>,
+}
+
+/// Drive a load profile to completion: per tick, admit arrivals
+/// (closed-loop window top-up or open-loop burst), then dispatch at
+/// most one weighted-fair batch. Runs until every trace is offered and
+/// every queue drains; every submitted request ends as completed or
+/// explicitly shed.
+pub fn run_profile(profile: &LoadProfile, opts: &ServeOptions) -> ProfileOutcome {
+    let cache = SessionCache::new(opts.topo.clone(), opts.pool_size, opts.cache_cap);
+    let names: Vec<String> = profile.tenants.iter().map(|t| t.name.clone()).collect();
+    let mut collector = ServeCollector::new(&names);
+    let mut sched = Scheduler::new(&profile.tenants, opts.cfg.clone());
+    let traces: Vec<Vec<ServeRequest>> = (0..profile.tenants.len())
+        .map(|t| loadgen::tenant_trace(profile, t))
+        .collect();
+    let mut cursor = vec![0usize; traces.len()];
+    let mut dispatches = Vec::new();
+    let mut tick = 0u64;
+    loop {
+        tick += 1;
+        for (t, trace) in traces.iter().enumerate() {
+            let want = match profile.arrival {
+                Arrival::Closed => profile.tenants[t]
+                    .window
+                    .max(1)
+                    .saturating_sub(sched.queued(t)),
+                Arrival::Open { burst } => burst.max(1),
+            };
+            for _ in 0..want {
+                if cursor[t] >= trace.len() {
+                    break;
+                }
+                let req = trace[cursor[t]].clone();
+                cursor[t] += 1;
+                collector.submitted(t);
+                match sched.admit(tick, req) {
+                    Admission::Admitted => {}
+                    Admission::Shed(reason) => collector.shed(t, reason),
+                }
+            }
+        }
+        collector.queue_depth(sched.queued_total());
+        let drained = cursor.iter().zip(&traces).all(|(&c, tr)| c >= tr.len());
+        match sched.next_batch(tick, drained) {
+            Some((tenant, batch)) => {
+                dispatches.push(DispatchRec {
+                    tenant,
+                    tick,
+                    len: batch.len(),
+                });
+                let reqs: Vec<ServeRequest> = batch.iter().map(|p| p.req.clone()).collect();
+                let result = execute_batch(&cache, &reqs);
+                collector.batch(tenant, result.engine, reqs.len());
+                collector.lane_scalar_reruns(result.lane_scalar_reruns);
+                for ((p, out), verified) in
+                    batch.iter().zip(&result.outcomes).zip(&result.verified)
+                {
+                    collector.completed(
+                        tenant,
+                        *verified,
+                        p.submitted.elapsed().as_nanos() as u64,
+                        tick.saturating_sub(p.admitted_tick),
+                        out.cycles,
+                    );
+                }
+            }
+            None => {
+                if drained && sched.idle() {
+                    break;
+                }
+            }
+        }
+    }
+    ProfileOutcome {
+        report: collector.finish(&cache, tick),
+        dispatches,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::BenchId;
+    use crate::serve::loadgen::WorkKind;
+
+    fn req(tenant: usize, seq: usize, kind: WorkKind) -> ServeRequest {
+        ServeRequest {
+            tenant,
+            seq,
+            kind,
+            n: 3,
+            seed: seq as u64,
+        }
+    }
+
+    fn tenant(name: &str, weight: u32, quota: usize) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            weight,
+            quota,
+            window: 2,
+            mix: vec![WorkKind::Bench(BenchId::Fibonacci)],
+            requests: 0,
+        }
+    }
+
+    #[test]
+    fn admission_sheds_explicitly_at_quota_and_capacity() {
+        let tenants = [tenant("a", 1, 2), tenant("b", 1, 8)];
+        let cfg = ServeCfg {
+            queue_cap: 5,
+            ..ServeCfg::default()
+        };
+        let mut s = Scheduler::new(&tenants, cfg);
+        let k = WorkKind::Bench(BenchId::Max);
+        assert_eq!(s.admit(1, req(0, 0, k)), Admission::Admitted);
+        assert_eq!(s.admit(1, req(0, 1, k)), Admission::Admitted);
+        // Tenant 0 quota (2) exhausted.
+        assert_eq!(
+            s.admit(1, req(0, 2, k)),
+            Admission::Shed(ShedReason::TenantQuota)
+        );
+        for i in 0..3 {
+            assert_eq!(s.admit(1, req(1, i, k)), Admission::Admitted);
+        }
+        // Global cap (5) exhausted — even for tenant 1 under quota.
+        assert_eq!(
+            s.admit(1, req(1, 9, k)),
+            Admission::Shed(ShedReason::QueueFull)
+        );
+        assert_eq!(s.queued_total(), 5);
+    }
+
+    #[test]
+    fn batches_form_same_graph_runs_and_respect_deadlines() {
+        let tenants = [tenant("a", 1, 16)];
+        let cfg = ServeCfg {
+            queue_cap: 64,
+            max_batch: 8,
+            deadline_ticks: 3,
+        };
+        let mut s = Scheduler::new(&tenants, cfg);
+        let fib = WorkKind::Bench(BenchId::Fibonacci);
+        let max = WorkKind::Bench(BenchId::Max);
+        s.admit(1, req(0, 0, fib));
+        s.admit(1, req(0, 1, fib));
+        s.admit(1, req(0, 2, max));
+        // Tick 1: run of 2 fibs, not full, deadline (1+3=4) not reached.
+        assert!(s.next_batch(1, false).is_none());
+        // Tick 4: deadline expired → dispatch the fib run only.
+        let (t, batch) = s.next_batch(4, false).expect("due");
+        assert_eq!(t, 0);
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|p| p.hint == "bench:fibonacci"));
+        // The max request remains; drain forces it out regardless.
+        let (_, batch) = s.next_batch(4, true).expect("drain");
+        assert_eq!(batch.len(), 1);
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn weighted_credits_bound_waits() {
+        // Weights 2:1, both always dispatchable → pattern a,a,b repeats.
+        let tenants = [tenant("a", 2, 64), tenant("b", 1, 64)];
+        let cfg = ServeCfg {
+            queue_cap: 256,
+            max_batch: 1,
+            deadline_ticks: 0,
+        };
+        let mut s = Scheduler::new(&tenants, cfg);
+        let k = WorkKind::Bench(BenchId::DotProd);
+        for i in 0..6 {
+            s.admit(1, req(0, i, k));
+            s.admit(1, req(1, i, k));
+        }
+        let picks: Vec<usize> = (0..9)
+            .map(|i| s.next_batch(i as u64 + 1, false).expect("backlogged").0)
+            .collect();
+        assert_eq!(picks, vec![0, 0, 1, 0, 0, 1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn engine_choice_follows_route_and_admission_class() {
+        let cache = SessionCache::new(FabricTopology::paper(), 2, 8);
+        let (fib, _) = cache.warm(&crate::bench_defs::build(BenchId::Fibonacci));
+        assert_eq!(choose_engine(&fib, 8), EngineChoice::Lanes);
+        let (sax, _) = cache.warm(&crate::bench_defs::saxpy::build());
+        assert_eq!(choose_engine(&sax, 8), EngineChoice::Streamed);
+        assert_eq!(
+            choose_engine(&sax, 1),
+            EngineChoice::Lanes,
+            "a single wave has nothing to overlap"
+        );
+        let g = crate::bench_defs::build(BenchId::Max);
+        let small = SessionCache::new(FabricTopology::sized_for_shards(&g, 2), 1, 8);
+        let (max, _) = small.warm(&g);
+        assert_eq!(choose_engine(&max, 4), EngineChoice::Reconfig);
+    }
+
+    #[test]
+    fn execute_batch_serves_and_verifies_every_mix_member() {
+        let cache = SessionCache::new(FabricTopology::serving(), 2, 16);
+        for kind in [
+            WorkKind::Bench(BenchId::Fibonacci),
+            WorkKind::Bench(BenchId::BubbleSort),
+            WorkKind::Saxpy,
+            WorkKind::Random { branchy: false },
+            WorkKind::Random { branchy: true },
+        ] {
+            // Seed stride 5 keeps `Random` requests on one graph
+            // (one batch = one cache hint) with distinct workloads.
+            let reqs: Vec<ServeRequest> = (0..3)
+                .map(|i| ServeRequest {
+                    seed: (i * 5) as u64,
+                    ..req(0, i, kind)
+                })
+                .collect();
+            let r = execute_batch(&cache, &reqs);
+            assert_eq!(r.outcomes.len(), 3, "{kind:?}");
+            assert!(
+                r.verified.iter().all(|&v| v),
+                "{kind:?} failed verification on {}",
+                r.engine
+            );
+        }
+        assert!(cache.misses() > 0);
+    }
+}

@@ -1,0 +1,324 @@
+//! The warm-state session cache: compile/place results keyed by
+//! [`Graph::fingerprint`].
+//!
+//! Every execution engine in this crate needs per-graph *static* state
+//! before the first token moves: the built [`Graph`] itself, the lane
+//! tier's compiled [`Program`], and the fabric route (placement check,
+//! partition plan). None of that depends on the workload, so a serving
+//! tier that rebuilds it per batch wastes the whole cold-start cost on
+//! every repeat tenant. [`SessionCache`] interns it once per graph
+//! fingerprint; a warm lookup hands back an [`Arc<WarmState>`] and the
+//! hot path runs straight into the engines.
+//!
+//! The resident wave-session state itself (token buffers, FIFOs) is
+//! *empty* between batches by construction — serialized admission
+//! resets between waves and pipelined admission drains — so a warm
+//! session is exactly: cached graph + cached program + cached route +
+//! cached admission class, re-wrapped around the engines in O(arcs).
+//! The expensive part (graph build, `Program::compile`, `place` /
+//! `partition`) is what the cache skips; `hits`/`misses` counters make
+//! that observable ([`crate::coordinator::Metrics`] exposes them as
+//! `cache_hits`).
+//!
+//! Invalidation: the fingerprint is content-addressed, so a changed
+//! graph *is* a different key — entries are never stale, only cold.
+//! Capacity is bounded; least-recently-used entries are evicted.
+
+use crate::dfg::Graph;
+use crate::fabric::{self, FabricTopology, PartitionPlan};
+use crate::sim::{overlap_safe, Program};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// How a graph maps onto the serving fabric — the router's placed →
+/// sharded → reconfig → fallback lattice, computed once per graph
+/// fingerprint instead of once per (worker, benchmark).
+#[derive(Debug, Clone)]
+pub enum RoutePlan {
+    /// Fits one fabric instance whole: batched engines apply.
+    Placed,
+    /// Exceeds one instance; the pool can host one instance per shard.
+    Sharded(PartitionPlan),
+    /// Exceeds one instance on a pool with too few instances: serve
+    /// time-multiplexed (context swapping) on one instance.
+    Reconfig(PartitionPlan),
+    /// Fits no partition of the topology: serve on the infinite-fabric
+    /// simulation rather than failing.
+    Fallback,
+}
+
+impl RoutePlan {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePlan::Placed => "placed",
+            RoutePlan::Sharded(_) => "sharded",
+            RoutePlan::Reconfig(_) => "reconfig",
+            RoutePlan::Fallback => "fallback",
+        }
+    }
+}
+
+/// Everything the hot path needs that depends only on the graph (not
+/// the workload): the one warm, shareable compile/place state.
+#[derive(Debug)]
+pub struct WarmState {
+    pub fingerprint: u64,
+    pub graph: Arc<Graph>,
+    /// The lane tier's compiled node table ([`Program::compile`]).
+    pub program: Arc<Program>,
+    pub route: RoutePlan,
+    /// Cached [`overlap_safe`] — whether a resident session may overlap
+    /// waves (pipelined admission).
+    pub overlap_safe: bool,
+}
+
+struct Inner {
+    by_fp: BTreeMap<u64, Arc<WarmState>>,
+    /// Secondary index: a caller-stable hint key (benchmark slug,
+    /// generator seed) → fingerprint, so hot-path hits skip even the
+    /// graph build.
+    by_hint: BTreeMap<String, u64>,
+    /// Fingerprints, least recently used first.
+    lru: VecDeque<u64>,
+}
+
+/// A bounded, thread-safe cache of [`WarmState`] keyed by
+/// [`Graph::fingerprint`], for one serving tier (one topology + pool).
+pub struct SessionCache {
+    topo: FabricTopology,
+    pool_size: usize,
+    cap: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl SessionCache {
+    /// A cache for a pool of `pool_size` instances of `topo`, holding
+    /// at most `cap` distinct graphs.
+    pub fn new(topo: FabricTopology, pool_size: usize, cap: usize) -> Self {
+        SessionCache {
+            topo,
+            pool_size: pool_size.max(1),
+            cap: cap.max(1),
+            inner: Mutex::new(Inner {
+                by_fp: BTreeMap::new(),
+                by_hint: BTreeMap::new(),
+                lru: VecDeque::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The (shared) topology every route in this cache was computed
+    /// against.
+    pub fn topology(&self) -> &FabricTopology {
+        &self.topo
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Distinct graphs currently warm.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().by_fp.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Warm state for `g`: a hit returns the cached entry; a miss pays
+    /// `Program::compile` + place/partition once and interns the
+    /// result. The flag is `true` on a hit.
+    pub fn warm(&self, g: &Graph) -> (Arc<WarmState>, bool) {
+        let fp = g.fingerprint();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(state) = inner.by_fp.get(&fp).cloned() {
+                touch(&mut inner.lru, fp);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return (state, true);
+            }
+        }
+        // Build outside the lock: compile/place can be slow, and the
+        // computation is idempotent (a racing builder just loses the
+        // insert).
+        let state = Arc::new(self.build_state(fp, g));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(existing) = inner.by_fp.get(&fp).cloned() {
+            touch(&mut inner.lru, fp);
+            return (existing, false);
+        }
+        inner.by_fp.insert(fp, Arc::clone(&state));
+        inner.lru.push_back(fp);
+        while inner.by_fp.len() > self.cap {
+            if let Some(old) = inner.lru.pop_front() {
+                inner.by_fp.remove(&old);
+                inner.by_hint.retain(|_, v| *v != old);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        (state, false)
+    }
+
+    /// [`SessionCache::warm`] through a caller-stable hint key: a hint
+    /// hit skips the graph build *and* the fingerprint walk entirely.
+    /// The caller must guarantee the hint always names the same graph
+    /// content (a benchmark slug or a generator seed does).
+    pub fn warm_keyed(
+        &self,
+        hint: &str,
+        build: impl FnOnce() -> Graph,
+    ) -> (Arc<WarmState>, bool) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(&fp) = inner.by_hint.get(hint) {
+                if let Some(state) = inner.by_fp.get(&fp).cloned() {
+                    touch(&mut inner.lru, fp);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return (state, true);
+                }
+            }
+        }
+        let g = build();
+        let (state, hit) = self.warm(&g);
+        let mut inner = self.inner.lock().unwrap();
+        inner.by_hint.insert(hint.to_string(), state.fingerprint);
+        (state, hit)
+    }
+
+    fn build_state(&self, fp: u64, g: &Graph) -> WarmState {
+        let route = if self.topo.fits(g) {
+            RoutePlan::Placed
+        } else {
+            match fabric::partition(g, &self.topo) {
+                Ok(plan) if self.pool_size >= plan.n_shards() => RoutePlan::Sharded(plan),
+                Ok(plan) => RoutePlan::Reconfig(plan),
+                Err(e) => {
+                    eprintln!(
+                        "serve: `{}` is unpartitionable on `{}` ({e}); \
+                         falling back to infinite-fabric simulation",
+                        g.name, self.topo.name
+                    );
+                    RoutePlan::Fallback
+                }
+            }
+        };
+        WarmState {
+            fingerprint: fp,
+            graph: Arc::new(g.clone()),
+            program: Arc::new(Program::compile(g)),
+            route,
+            overlap_safe: overlap_safe(g),
+        }
+    }
+
+    /// One-line counter summary for logs and reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "session cache: {} warm graph(s), {} hit(s), {} miss(es), {} eviction(s)",
+            self.len(),
+            self.hits(),
+            self.misses(),
+            self.evictions()
+        )
+    }
+}
+
+fn touch(lru: &mut VecDeque<u64>, fp: u64) {
+    if let Some(i) = lru.iter().position(|&x| x == fp) {
+        lru.remove(i);
+    }
+    lru.push_back(fp);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{self, BenchId};
+
+    fn cache(cap: usize) -> SessionCache {
+        SessionCache::new(FabricTopology::paper(), 2, cap)
+    }
+
+    #[test]
+    fn repeat_lookups_hit() {
+        let c = cache(8);
+        let g = bench_defs::build(BenchId::Fibonacci);
+        let (s0, hit0) = c.warm(&g);
+        assert!(!hit0);
+        let (s1, hit1) = c.warm(&g);
+        assert!(hit1);
+        assert!(Arc::ptr_eq(&s0, &s1));
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert!(matches!(s0.route, RoutePlan::Placed));
+        assert!(!s0.overlap_safe);
+    }
+
+    #[test]
+    fn hint_hits_skip_the_build() {
+        let c = cache(8);
+        let mut builds = 0usize;
+        for _ in 0..3 {
+            let (state, _) = c.warm_keyed("bench:fibonacci", || {
+                builds += 1;
+                bench_defs::build(BenchId::Fibonacci)
+            });
+            assert!(matches!(state.route, RoutePlan::Placed));
+        }
+        assert_eq!(builds, 1, "only the miss builds the graph");
+        assert_eq!(c.hits(), 2);
+    }
+
+    #[test]
+    fn capacity_evicts_lru() {
+        let c = cache(2);
+        for b in [BenchId::Fibonacci, BenchId::Max, BenchId::DotProd] {
+            c.warm(&bench_defs::build(b));
+        }
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        // Fibonacci was evicted; warming it again is a miss.
+        c.warm(&bench_defs::build(BenchId::Fibonacci));
+        assert_eq!(c.misses(), 4);
+        assert!(c.summary().contains("2 warm graph(s)"));
+    }
+
+    #[test]
+    fn undersized_topology_routes_off_the_placed_path() {
+        let g = bench_defs::build(BenchId::Max);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        // Two instances: spatial sharding.
+        let c2 = SessionCache::new(topo.clone(), 4, 8);
+        let (s, _) = c2.warm(&g);
+        assert!(matches!(s.route, RoutePlan::Sharded(_)));
+        // One instance: time-multiplexing.
+        let c1 = SessionCache::new(topo, 1, 8);
+        let (s, _) = c1.warm(&g);
+        assert!(matches!(s.route, RoutePlan::Reconfig(_)));
+    }
+
+    #[test]
+    fn saxpy_is_warm_overlap_safe() {
+        let c = cache(4);
+        let (s, _) = c.warm(&bench_defs::saxpy::build());
+        assert!(s.overlap_safe);
+        assert_eq!(s.program.n_nodes(), s.graph.n_nodes());
+    }
+}

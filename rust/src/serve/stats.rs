@@ -1,0 +1,369 @@
+//! Service-tier statistics: per-tenant and global latency percentiles
+//! over a fixed-bucket histogram (no deps, no post-hoc sorting), plus
+//! queue-depth / shed / cache-hit counters. Rendered by
+//! [`crate::report::serve`] and serialized into `SERVE_<k>.json`.
+
+use std::collections::BTreeMap;
+
+/// Histogram bucket count: geometric bounds in ~√2 steps starting at
+/// 1 µs — bucket `2k` tops out at `1000·2^k` ns and bucket `2k+1` at
+/// `1500·2^k` ns, covering 1 µs to ~33 s before the overflow bucket.
+pub const BUCKETS: usize = 52;
+
+/// Upper bound (inclusive) of bucket `i`, in nanoseconds.
+pub fn bucket_hi(i: usize) -> u64 {
+    let base: u64 = if i % 2 == 0 { 1_000 } else { 1_500 };
+    base << (i / 2)
+}
+
+/// A fixed-bucket latency histogram. Recording is O(buckets) with no
+/// allocation; percentiles read the cumulative counts and report the
+/// bucket's upper bound (≤ one √2 step of overestimate).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        let i = (0..BUCKETS)
+            .find(|&i| ns <= bucket_hi(i))
+            .unwrap_or(BUCKETS - 1);
+        self.counts[i] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_ns / self.count
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+
+    /// The latency at quantile `q` in `[0, 1]` — the upper bound of the
+    /// first bucket whose cumulative count reaches `ceil(q·count)`.
+    /// Zero when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // Never report past the observed maximum.
+                return bucket_hi(i).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn p50_ns(&self) -> u64 {
+        self.quantile_ns(0.50)
+    }
+
+    pub fn p95_ns(&self) -> u64 {
+        self.quantile_ns(0.95)
+    }
+
+    pub fn p99_ns(&self) -> u64 {
+        self.quantile_ns(0.99)
+    }
+
+    /// Fold `other` into `self` (used to build the global view).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Why a request was shed at admission (always explicit — the
+/// scheduler never silently drops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The global admission queue was at capacity.
+    QueueFull,
+    /// The tenant's own queued-request quota was exhausted.
+    TenantQuota,
+}
+
+/// One tenant's (or the global) counter set.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    pub name: String,
+    pub submitted: u64,
+    pub shed_queue_full: u64,
+    pub shed_quota: u64,
+    pub completed: u64,
+    pub verified: u64,
+    pub batches: u64,
+    /// Requests served per engine name (`lanes`, `streamed`, …).
+    pub engine_requests: BTreeMap<&'static str, u64>,
+    /// End-to-end wall latency (submit → result), nanoseconds.
+    pub latency: Histogram,
+    /// Sum of scheduler-tick queue waits (admit → dispatch), for the
+    /// mean; tick waits are deterministic where wall latency is not.
+    pub wait_ticks: u64,
+    pub fabric_cycles: u64,
+}
+
+impl TenantStats {
+    pub fn named(name: impl Into<String>) -> Self {
+        TenantStats {
+            name: name.into(),
+            ..TenantStats::default()
+        }
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed_queue_full + self.shed_quota
+    }
+
+    /// Requests neither completed nor explicitly shed. The service
+    /// invariant is that this is zero once a profile drains.
+    pub fn lost(&self) -> u64 {
+        self.submitted
+            .saturating_sub(self.completed)
+            .saturating_sub(self.shed())
+    }
+
+    pub fn mean_wait_ticks(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.wait_ticks as f64 / self.completed as f64
+        }
+    }
+}
+
+/// The full result of one load profile: per-tenant stats, the global
+/// roll-up, and service-level gauges.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub tenants: Vec<TenantStats>,
+    pub global: TenantStats,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    /// High-water mark of the total admission queue depth.
+    pub max_queue_depth: usize,
+    /// Scheduler ticks the profile took to drain.
+    pub ticks: u64,
+    /// Lane items re-run on the scalar engine (lanes→scalar fallback).
+    pub lane_scalar_reruns: u64,
+}
+
+/// The mutable collector the scheduler writes into while a profile
+/// runs; [`ServeCollector::finish`] produces the immutable report.
+#[derive(Debug, Default)]
+pub struct ServeCollector {
+    tenants: Vec<TenantStats>,
+    max_queue_depth: usize,
+    lane_scalar_reruns: u64,
+}
+
+impl ServeCollector {
+    pub fn new(tenant_names: &[String]) -> Self {
+        ServeCollector {
+            tenants: tenant_names
+                .iter()
+                .map(|n| TenantStats::named(n.clone()))
+                .collect(),
+            max_queue_depth: 0,
+            lane_scalar_reruns: 0,
+        }
+    }
+
+    pub fn submitted(&mut self, tenant: usize) {
+        self.tenants[tenant].submitted += 1;
+    }
+
+    pub fn shed(&mut self, tenant: usize, reason: ShedReason) {
+        match reason {
+            ShedReason::QueueFull => self.tenants[tenant].shed_queue_full += 1,
+            ShedReason::TenantQuota => self.tenants[tenant].shed_quota += 1,
+        }
+    }
+
+    pub fn batch(&mut self, tenant: usize, engine: &'static str, requests: usize) {
+        let t = &mut self.tenants[tenant];
+        t.batches += 1;
+        *t.engine_requests.entry(engine).or_insert(0) += requests as u64;
+    }
+
+    pub fn completed(
+        &mut self,
+        tenant: usize,
+        verified: bool,
+        latency_ns: u64,
+        wait_ticks: u64,
+        fabric_cycles: u64,
+    ) {
+        let t = &mut self.tenants[tenant];
+        t.completed += 1;
+        if verified {
+            t.verified += 1;
+        }
+        t.latency.record(latency_ns);
+        t.wait_ticks += wait_ticks;
+        t.fabric_cycles += fabric_cycles;
+    }
+
+    pub fn lane_scalar_reruns(&mut self, n: u64) {
+        self.lane_scalar_reruns += n;
+    }
+
+    pub fn queue_depth(&mut self, depth: usize) {
+        self.max_queue_depth = self.max_queue_depth.max(depth);
+    }
+
+    /// Roll up the global view and freeze the report.
+    pub fn finish(self, cache: &super::SessionCache, ticks: u64) -> ServeReport {
+        let mut global = TenantStats::named("global");
+        for t in &self.tenants {
+            global.submitted += t.submitted;
+            global.shed_queue_full += t.shed_queue_full;
+            global.shed_quota += t.shed_quota;
+            global.completed += t.completed;
+            global.verified += t.verified;
+            global.batches += t.batches;
+            global.wait_ticks += t.wait_ticks;
+            global.fabric_cycles += t.fabric_cycles;
+            global.latency.merge(&t.latency);
+            for (e, n) in &t.engine_requests {
+                *global.engine_requests.entry(e).or_insert(0) += n;
+            }
+        }
+        ServeReport {
+            tenants: self.tenants,
+            global,
+            cache_hits: cache.hits(),
+            cache_misses: cache.misses(),
+            cache_evictions: cache.evictions(),
+            max_queue_depth: self.max_queue_depth,
+            ticks,
+            lane_scalar_reruns: self.lane_scalar_reruns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_cover_microseconds_to_seconds() {
+        for i in 1..BUCKETS {
+            assert!(bucket_hi(i) > bucket_hi(i - 1), "bucket {i}");
+        }
+        assert_eq!(bucket_hi(0), 1_000);
+        assert!(bucket_hi(BUCKETS - 1) > 30_000_000_000);
+    }
+
+    #[test]
+    fn percentiles_track_recorded_values() {
+        let mut h = Histogram::new();
+        assert_eq!(h.p50_ns(), 0);
+        for ns in [1_000u64, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000, 128_000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 8);
+        let p50 = h.p50_ns();
+        assert!((4_000..=8_000).contains(&p50), "p50 {p50}");
+        let p99 = h.p99_ns();
+        assert!(p99 >= 128_000, "p99 {p99}");
+        assert!(p99 <= h.max_ns());
+        assert_eq!(h.min_ns(), 1_000);
+        assert!(h.p50_ns() <= h.p95_ns() && h.p95_ns() <= h.p99_ns());
+    }
+
+    #[test]
+    fn overflow_lands_in_last_bucket() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX / 2);
+        assert_eq!(h.count(), 1);
+        // Clamped to the overflow bucket's bound, not the raw value.
+        assert_eq!(h.p50_ns(), bucket_hi(BUCKETS - 1));
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_in_one() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for (i, ns) in [900u64, 5_000, 77_000, 2_000_000, 400].iter().enumerate() {
+            if i % 2 == 0 {
+                a.record(*ns);
+            } else {
+                b.record(*ns);
+            }
+            whole.record(*ns);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.p50_ns(), whole.p50_ns());
+        assert_eq!(a.p99_ns(), whole.p99_ns());
+        assert_eq!(a.min_ns(), whole.min_ns());
+        assert_eq!(a.max_ns(), whole.max_ns());
+    }
+
+    #[test]
+    fn lost_is_zero_when_everything_is_accounted() {
+        let mut t = TenantStats::named("t");
+        t.submitted = 10;
+        t.completed = 7;
+        t.shed_queue_full = 2;
+        t.shed_quota = 1;
+        assert_eq!(t.shed(), 3);
+        assert_eq!(t.lost(), 0);
+        t.submitted = 12;
+        assert_eq!(t.lost(), 2);
+    }
+}

@@ -46,8 +46,8 @@ pub use dynamic::{run_dynamic, DynamicSim};
 pub use fsm::{run_fsm, FsmSim, HandshakeEvent, HandshakeKind};
 pub use lanes::{run_lanes, LaneSim, LANES};
 pub use stream::{
-    overlap_safe, run_stream, run_stream_lanes, StreamError, StreamMetrics, StreamSession,
-    WaveInput, WaveMode,
+    overlap_safe, run_stream, run_stream_lanes, run_stream_session, StreamError, StreamMetrics,
+    StreamSession, WaveInput, WaveMode,
 };
 pub use token::{run_token, AluReq, TokenSim};
 

@@ -233,7 +233,7 @@ impl<'g> StreamSession<'g> {
         } else {
             WaveMode::Serialized
         };
-        Self::with_mode(g, mode)
+        Self::with_mode_unchecked(g, mode)
     }
 
     /// Force a mode. Panics when `Pipelined` is requested for a graph
@@ -244,6 +244,12 @@ impl<'g> StreamSession<'g> {
             "graph `{}` is not overlap-safe; use WaveMode::Serialized",
             g.name
         );
+        Self::with_mode_unchecked(g, mode)
+    }
+
+    /// [`Self::with_mode`] without the `overlap_safe` re-walk — for
+    /// callers that just established (or cached) the answer.
+    fn with_mode_unchecked(g: &'g Graph, mode: WaveMode) -> Self {
         let const_nodes: Vec<usize> = g
             .nodes
             .iter()
@@ -801,7 +807,50 @@ pub fn run_stream(
     waves: &[WaveInput],
     max_rounds: u64,
 ) -> (Vec<SimOutcome>, StreamMetrics) {
-    let mut session = StreamSession::new(g);
+    // `run_stream_session` demotes to Serialized when the graph is not
+    // overlap-safe, so this is exactly the auto-selected widest policy.
+    run_stream_session(g, waves, max_rounds, WaveMode::Pipelined)
+}
+
+/// [`run_stream`] under a caller-chosen admission policy. A
+/// `Pipelined` request pays exactly one `overlap_safe` walk to
+/// validate it and is demoted to `Serialized` when the graph is not
+/// overlap-safe or any wave fails unit-rate admission (mixed admission
+/// would reorder waves), so the call is total for every graph/wave
+/// combination. A `Serialized` request performs no structural walk at
+/// all — callers holding a cached `overlap_safe == false` (the serving
+/// tier's [`WarmState`](crate::serve::WarmState)) skip it entirely.
+pub fn run_stream_session(
+    g: &Graph,
+    waves: &[WaveInput],
+    max_rounds: u64,
+    mode: WaveMode,
+) -> (Vec<SimOutcome>, StreamMetrics) {
+    let mode = if mode == WaveMode::Pipelined && overlap_safe(g) {
+        WaveMode::Pipelined
+    } else {
+        WaveMode::Serialized
+    };
+    run_stream_prevalidated(g, waves, max_rounds, mode)
+}
+
+/// Crate-internal [`run_stream_session`] for callers that have already
+/// established the admission class — the serving tier's cached
+/// `WarmState::overlap_safe` — so a warm streamed batch pays **zero**
+/// structural walks. The unit-rate wave probe still demotes to
+/// `Serialized` on mismatched waves.
+pub(crate) fn run_stream_prevalidated(
+    g: &Graph,
+    waves: &[WaveInput],
+    max_rounds: u64,
+    mode: WaveMode,
+) -> (Vec<SimOutcome>, StreamMetrics) {
+    debug_assert!(
+        mode != WaveMode::Pipelined || overlap_safe(g),
+        "caller claimed `{}` overlap-safe without checking",
+        g.name
+    );
+    let mut session = StreamSession::with_mode_unchecked(g, mode);
     if session.mode() == WaveMode::Pipelined
         && waves
             .iter()

@@ -1,0 +1,298 @@
+//! Service-tier contract tests: scheduler fairness (a light tenant is
+//! never starved by a 10× heavier one), shed-path correctness (an
+//! oversubmitted queue sheds explicitly and loses nothing), cache-hit
+//! byte-identity (warm-session results == cold results on all seven
+//! benchmarks), and loadgen determinism (same seed ⇒ same request
+//! trace ⇒ same dispatch schedule).
+
+use dataflow_accel::bench_defs::BenchId;
+use dataflow_accel::fabric::FabricTopology;
+use dataflow_accel::serve::{
+    execute_batch, run_profile, standard_profile, tenant_trace, Arrival, LoadProfile,
+    ServeCfg, ServeOptions, ServeRequest, SessionCache, TenantSpec, WorkKind,
+};
+
+fn bench_tenant(name: &str, weight: u32, window: usize, requests: usize) -> TenantSpec {
+    TenantSpec {
+        name: name.to_string(),
+        weight,
+        quota: 64,
+        window,
+        mix: vec![
+            WorkKind::Bench(BenchId::Fibonacci),
+            WorkKind::Bench(BenchId::DotProd),
+        ],
+        requests,
+    }
+}
+
+/// Two equal-weight tenants at 10:1 offered load: both make progress
+/// throughout, the light tenant is served within a bounded gap while
+/// it has work, and it finishes long before the heavy one.
+#[test]
+fn fairness_light_tenant_is_not_starved_by_heavy_offered_load() {
+    let profile = LoadProfile {
+        tenants: vec![
+            bench_tenant("heavy", 1, 16, 100),
+            bench_tenant("light", 1, 2, 10),
+        ],
+        arrival: Arrival::Closed,
+        n: 3,
+        seed: 41,
+    };
+    let opts = ServeOptions {
+        cfg: ServeCfg {
+            queue_cap: 256,
+            max_batch: 4,
+            // Always dispatch-ready: this test isolates the fairness of
+            // the pick, not batching slack.
+            deadline_ticks: 0,
+        },
+        ..ServeOptions::default()
+    };
+    let outcome = run_profile(&profile, &opts);
+    let r = &outcome.report;
+    assert_eq!(r.global.lost(), 0);
+    for t in &r.tenants {
+        assert_eq!(t.completed + t.shed(), t.submitted, "{}", t.name);
+        assert_eq!(t.verified, t.completed, "{}", t.name);
+        assert!(t.completed > 0, "{} starved outright", t.name);
+    }
+
+    let light_picks: Vec<usize> = outcome
+        .dispatches
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| d.tenant == 1)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(!light_picks.is_empty());
+    // Starvation bound: while the light tenant has work, weighted
+    // round-robin credits (weights 1:1) serve it at least once every
+    // sum(weights) dispatches; allow slack for ticks where its
+    // closed-loop window was momentarily empty.
+    let max_gap = light_picks
+        .windows(2)
+        .map(|w| w[1] - w[0])
+        .max()
+        .unwrap_or(1);
+    assert!(max_gap <= 4, "light tenant waited {max_gap} dispatches");
+    // 10× offered load: the light tenant must drain well before the
+    // heavy one stops dispatching.
+    let last_light = *light_picks.last().unwrap();
+    let last_heavy = outcome
+        .dispatches
+        .iter()
+        .rposition(|d| d.tenant == 0)
+        .unwrap();
+    assert!(
+        last_light < last_heavy,
+        "light finished at dispatch {last_light}, heavy at {last_heavy}"
+    );
+}
+
+/// Open-loop oversubscription against a tiny queue: the scheduler
+/// sheds explicitly (with reasons), never silently — submitted is
+/// fully accounted as completed + shed, and everything completed
+/// verifies.
+#[test]
+fn oversubmission_sheds_explicitly_and_loses_nothing() {
+    let mut heavy = bench_tenant("flood", 1, 8, 120);
+    heavy.quota = 6;
+    let profile = LoadProfile {
+        tenants: vec![heavy],
+        arrival: Arrival::Open { burst: 12 },
+        n: 3,
+        seed: 23,
+    };
+    let opts = ServeOptions {
+        cfg: ServeCfg {
+            queue_cap: 8,
+            max_batch: 4,
+            deadline_ticks: 1,
+        },
+        ..ServeOptions::default()
+    };
+    let r = run_profile(&profile, &opts).report;
+    let t = &r.tenants[0];
+    assert_eq!(t.submitted, 120);
+    assert!(t.shed() > 0, "oversubmission must shed");
+    assert_eq!(t.completed + t.shed(), t.submitted, "no silent drops");
+    assert_eq!(r.global.lost(), 0);
+    assert_eq!(t.verified, t.completed);
+    assert!(r.max_queue_depth <= 8, "queue bound violated");
+}
+
+/// Warm-session results are byte-identical to cold results on all
+/// seven benchmarks (and a random DFG), and the warm run skips
+/// compile/place — observable as cache hits with no new misses.
+#[test]
+fn warm_session_results_are_byte_identical_to_cold() {
+    let kinds: Vec<WorkKind> = BenchId::ALL
+        .iter()
+        .map(|&b| WorkKind::Bench(b))
+        .chain([WorkKind::Saxpy, WorkKind::Random { branchy: true }])
+        .collect();
+    let cache = SessionCache::new(FabricTopology::serving(), 2, 32);
+    for (k, kind) in kinds.iter().enumerate() {
+        // Seeds stride by 5 so `Random` requests stay in one
+        // graph-family slot (one batch = one graph) while workloads
+        // differ.
+        let reqs: Vec<ServeRequest> = (0..4)
+            .map(|i| ServeRequest {
+                tenant: 0,
+                seq: i,
+                kind: *kind,
+                n: 4,
+                seed: (k * 10 + i * 5) as u64,
+            })
+            .collect();
+        let misses_before = cache.misses();
+        let cold = execute_batch(&cache, &reqs);
+        assert_eq!(
+            cache.misses(),
+            misses_before + 1,
+            "{kind:?}: cold run must compile/place once"
+        );
+        let warm = execute_batch(&cache, &reqs);
+        assert!(warm.cache_hit, "{kind:?}: second run must be warm");
+        assert_eq!(
+            cache.misses(),
+            misses_before + 1,
+            "{kind:?}: warm run must skip compile/place"
+        );
+        assert_eq!(cold.engine, warm.engine, "{kind:?}");
+        assert_eq!(cold.outcomes.len(), warm.outcomes.len());
+        for (i, (c, w)) in cold.outcomes.iter().zip(&warm.outcomes).enumerate() {
+            assert_eq!(c.outputs, w.outputs, "{kind:?} item {i}: warm != cold");
+        }
+        assert!(
+            cold.verified.iter().all(|&v| v),
+            "{kind:?} failed verification on {}",
+            cold.engine
+        );
+    }
+    assert!(cache.hits() >= kinds.len() as u64);
+}
+
+/// A benchmark mix on an undersized fabric serves through the resident
+/// sharded rack (and the single-instance pool through the reconfig
+/// scheduler) — and still verifies everything.
+#[test]
+fn undersized_fabrics_serve_sharded_and_reconfig() {
+    let g = dataflow_accel::bench_defs::build(BenchId::DotProd);
+    let topo = FabricTopology::sized_for_shards(&g, 2);
+    let mut tenant = bench_tenant("t", 1, 4, 12);
+    tenant.mix = vec![WorkKind::Bench(BenchId::DotProd)];
+    let profile = LoadProfile {
+        tenants: vec![tenant],
+        arrival: Arrival::Closed,
+        n: 4,
+        seed: 5,
+    };
+    for (pool_size, engine) in [(4usize, "sharded"), (1usize, "reconfig")] {
+        let opts = ServeOptions {
+            topo: topo.clone(),
+            pool_size,
+            ..ServeOptions::default()
+        };
+        let r = run_profile(&profile, &opts).report;
+        assert_eq!(r.global.lost(), 0);
+        assert_eq!(r.global.verified, r.global.completed, "pool {pool_size}");
+        assert_eq!(
+            r.global.engine_requests.get(engine).copied().unwrap_or(0),
+            r.global.completed,
+            "pool {pool_size} must serve via {engine}: {:?}",
+            r.global.engine_requests
+        );
+    }
+}
+
+/// Same seed ⇒ same request trace, and — because scheduling is driven
+/// by virtual ticks, not wall time — the same dispatch schedule.
+#[test]
+fn loadgen_and_schedule_are_deterministic() {
+    let profile = standard_profile(6, 4, 99);
+    for t in 0..profile.tenants.len() {
+        assert_eq!(tenant_trace(&profile, t), tenant_trace(&profile, t));
+    }
+    let a = run_profile(&profile, &ServeOptions::default());
+    let b = run_profile(&profile, &ServeOptions::default());
+    assert_eq!(a.dispatches, b.dispatches, "dispatch schedule diverged");
+    assert_eq!(a.report.global.submitted, b.report.global.submitted);
+    assert_eq!(a.report.global.completed, b.report.global.completed);
+    assert_eq!(a.report.global.shed(), b.report.global.shed());
+    assert_eq!(a.report.cache_misses, b.report.cache_misses);
+
+    let other = standard_profile(6, 4, 100);
+    assert_ne!(
+        tenant_trace(&profile, 0),
+        tenant_trace(&other, 0),
+        "different seeds must offer different traces"
+    );
+}
+
+/// The standard three-tenant profile (the CLI/CI mix) drains cleanly:
+/// zero lost requests, everything verified, warm sessions reused, and
+/// every tenant's percentiles populated.
+#[test]
+fn standard_profile_serves_mixed_tenants_end_to_end() {
+    let profile = standard_profile(8, 4, 7);
+    let r = run_profile(&profile, &ServeOptions::default()).report;
+    assert_eq!(r.global.submitted, 8 * 4 + 8 * 2 + 8);
+    assert_eq!(r.global.lost(), 0);
+    assert_eq!(r.global.verified, r.global.completed);
+    assert!(r.cache_hits > 0, "repeat tenants must hit warm sessions");
+    // Distinct graphs: 6 benchmarks + saxpy + ≤ 10 random-DFG family
+    // members — misses stay far below the batch count.
+    assert!(r.cache_misses <= 17, "misses {}", r.cache_misses);
+    for t in &r.tenants {
+        assert!(t.completed > 0, "{}", t.name);
+        assert!(t.latency.p50_ns() > 0, "{}", t.name);
+        assert!(t.latency.p99_ns() >= t.latency.p50_ns(), "{}", t.name);
+    }
+    assert!(
+        r.global.engine_requests.contains_key("lanes"),
+        "loop benchmarks take the lane engine: {:?}",
+        r.global.engine_requests
+    );
+    let engine_total: u64 = r.global.engine_requests.values().sum();
+    assert_eq!(engine_total, r.global.completed);
+}
+
+/// A tenant offering only the pipelineable SAXPY workload is served by
+/// the pipelined resident session (the Fig. 1c case) whenever a batch
+/// has anything to overlap.
+#[test]
+fn pipelineable_tenant_takes_the_resident_streamed_session() {
+    let profile = LoadProfile {
+        tenants: vec![TenantSpec {
+            name: "pipeline".to_string(),
+            weight: 1,
+            quota: 32,
+            window: 4,
+            mix: vec![WorkKind::Saxpy],
+            requests: 12,
+        }],
+        arrival: Arrival::Closed,
+        n: 4,
+        seed: 13,
+    };
+    let r = run_profile(&profile, &ServeOptions::default()).report;
+    assert_eq!(r.global.lost(), 0);
+    assert_eq!(r.global.verified, r.global.completed);
+    let streamed = r
+        .global
+        .engine_requests
+        .get("streamed")
+        .copied()
+        .unwrap_or(0);
+    // Every multi-wave batch overlaps; at most a size-1 straggler may
+    // run-to-completion on the lane engine instead.
+    assert!(
+        streamed >= r.global.completed - 1,
+        "streamed {streamed} of {}: {:?}",
+        r.global.completed,
+        r.global.engine_requests
+    );
+}
