@@ -160,6 +160,28 @@ mod tests {
         );
     }
 
+    #[test]
+    fn print_parse_fixpoint_on_optimized_graphs() {
+        // The optimizer's output is ordinary assembler: it prints,
+        // re-parses to the same shape, and re-optimizing the re-parsed
+        // graph changes nothing (the conformance harness extends this
+        // to every benchmark and level).
+        let g = crate::frontend::compile_with(
+            "dot_prod",
+            crate::bench_defs::c_source(crate::bench_defs::BenchId::DotProd),
+            crate::opt::OptLevel::None,
+        )
+        .unwrap();
+        let (og, _) = crate::opt::optimize(&g, crate::opt::OptLevel::Default);
+        let text = print(&og);
+        let g2 = parse("dot_prod", &text).unwrap();
+        assert_eq!(g2.n_nodes(), og.n_nodes());
+        assert_eq!(print(&g2), text);
+        let (g3, report) = crate::opt::optimize(&g2, crate::opt::OptLevel::Default);
+        assert!(!report.changed(), "re-optimize must be a fixed point");
+        assert_eq!(print(&g3), text);
+    }
+
     /// Listing 1 from the paper, verbatim (including its duplicated line
     /// 12/13 pair, which we reject as a double-driver — the listing has a
     /// typo; see bench_defs::fibonacci for the corrected graph).

@@ -91,20 +91,25 @@ pub struct Metrics {
     /// route) came out of the shared session cache — the graph's
     /// build/compile/place cold-start work was skipped entirely.
     pub cache_hits: AtomicU64,
+    /// Placed batches whose *raw* graph overflowed one fabric instance
+    /// and only place because the optimizer shrank it (subset of
+    /// `placed`; see [`crate::serve::WarmState::opt_rescued_place`]).
+    pub opt_placed: AtomicU64,
 }
 
 impl Metrics {
     pub fn summary(&self) -> String {
         let completed = self.completed.load(Ordering::Relaxed).max(1);
         format!(
-            "requests {}/{} verified {} | batches {} (placed {}, sharded {}, reconfig {}, \
-             fallback {}) | cache hits {} | lanes {} (scalar reruns {}) | \
+            "requests {}/{} verified {} | batches {} (placed {} [opt-placed {}], sharded {}, \
+             reconfig {}, fallback {}) | cache hits {} | lanes {} (scalar reruns {}) | \
              streamed waves {} | fabric cycles {} | mean latency {:.1} ms",
             self.completed.load(Ordering::Relaxed),
             self.submitted.load(Ordering::Relaxed),
             self.verified.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.placed.load(Ordering::Relaxed),
+            self.opt_placed.load(Ordering::Relaxed),
             self.sharded.load(Ordering::Relaxed),
             self.reconfig.load(Ordering::Relaxed),
             self.fallback.load(Ordering::Relaxed),
@@ -388,6 +393,9 @@ fn run_jobs(
     let outcomes = match &state.route {
         RoutePlan::Placed => {
             metrics.placed.fetch_add(1, Ordering::Relaxed);
+            if state.opt_rescued_place {
+                metrics.opt_placed.fetch_add(1, Ordering::Relaxed);
+            }
             pool.route();
             if streamed {
                 super::batch::run_batch_streamed(g, &cfgs)
@@ -464,6 +472,12 @@ fn run_jobs(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The graph the session cache actually routes: tests that size
+    /// fabrics to force a route class must size against this.
+    fn optimized(b: BenchId) -> crate::dfg::Graph {
+        crate::opt::optimize(&crate::bench_defs::build(b), Default::default()).0
+    }
 
     #[test]
     fn serves_mixed_requests_native() {
@@ -586,17 +600,20 @@ mod tests {
         let m = Metrics::default();
         m.submitted.store(4, Ordering::Relaxed);
         m.completed.store(4, Ordering::Relaxed);
+        m.opt_placed.store(2, Ordering::Relaxed);
         assert!(m.summary().contains("requests 4/4"));
+        assert!(m.summary().contains("opt-placed 2"));
     }
 
     #[test]
     fn tiny_fabric_serves_via_sharded_executor() {
         // A half-size fabric fits none of the benchmarks whole, so every
         // batch must take the partition + sharded-execution path — and
-        // still verify against the software references. The pool must
-        // hold one instance per shard, so give it as many workers as the
-        // partition produces shards.
-        let g = crate::bench_defs::build(BenchId::DotProd);
+        // still verify against the software references. The fabric is
+        // sized against the *optimized* graph (what the session cache
+        // routes); the pool must hold one instance per shard, so give
+        // it as many workers as the partition produces shards.
+        let g = optimized(BenchId::DotProd);
         let topo = FabricTopology::sized_for_shards(&g, 2);
         let plan = crate::fabric::partition(&g, &topo).unwrap();
         let workers = plan.n_shards().max(2);
@@ -627,7 +644,7 @@ mod tests {
     fn single_instance_pool_takes_reconfig_route() {
         // One worker = one fabric instance; an oversized graph cannot
         // shard spatially, so it must time-multiplex — and still verify.
-        let g = crate::bench_defs::build(BenchId::Max);
+        let g = optimized(BenchId::Max);
         let topo = FabricTopology::sized_for_shards(&g, 2);
         let c = Coordinator::start_with_fabric(1, Engine::Native, None, 4, topo).unwrap();
         let rxs: Vec<_> = (0..4)
@@ -705,7 +722,7 @@ mod tests {
 
     #[test]
     fn streamed_sharded_route_verifies() {
-        let g = crate::bench_defs::build(BenchId::VectorSum);
+        let g = optimized(BenchId::VectorSum);
         let topo = FabricTopology::sized_for_shards(&g, 2);
         let workers = crate::fabric::partition(&g, &topo).unwrap().n_shards().max(2);
         let c = Coordinator::start_streamed_with_fabric(workers, 4, topo).unwrap();
@@ -745,6 +762,9 @@ mod tests {
         }
         assert_eq!(c.metrics.sharded.load(Ordering::Relaxed), 0);
         assert!(c.metrics.placed.load(Ordering::Relaxed) >= 1);
+        // The hand-built benchmarks place raw on the paper fabric, so
+        // none of these placements needed the optimizer's rescue.
+        assert_eq!(c.metrics.opt_placed.load(Ordering::Relaxed), 0);
         c.shutdown();
     }
 }

@@ -59,6 +59,14 @@ impl Arc {
     }
 }
 
+/// Whether a label is an anonymous internal wire (`s1`, `s42`, ...) as
+/// opposed to a caller-chosen port/signal name. Anonymous dangling arcs
+/// are drain wires with no interface meaning — the optimizer may remove
+/// them, while named ports are part of the graph's external contract.
+pub fn is_anon_label(name: &str) -> bool {
+    name.starts_with('s') && name.len() > 1 && name[1..].chars().all(|c| c.is_ascii_digit())
+}
+
 /// A static dataflow graph.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Graph {

@@ -11,13 +11,11 @@
 mod builder;
 mod graph;
 mod op;
-pub mod optimize;
 pub mod schema;
 mod validate;
 
 pub use builder::GraphBuilder;
-pub use optimize::eliminate_dead_copies;
-pub use graph::{Arc, ArcId, Graph, Node, NodeId, PortDir};
+pub use graph::{is_anon_label, Arc, ArcId, Graph, Node, NodeId, PortDir};
 pub use op::{Op, OpClass, Word, MAX_FIFO_DEPTH};
 pub use schema::build_loop;
 pub use validate::{validate, ValidateError};

@@ -54,10 +54,7 @@ pub fn validate(g: &Graph) -> Result<(), ValidateError> {
             // A named port with no connection is legal hardware (an
             // unused top-level pin, e.g. a declared-but-unread input);
             // an unconnected anonymous wire (`sN`) is a builder bug.
-            let is_wire = a.name.starts_with('s')
-                && a.name.len() > 1
-                && a.name[1..].chars().all(|c| c.is_ascii_digit());
-            if is_wire {
+            if super::graph::is_anon_label(&a.name) {
                 return Err(ValidateError::Dangling(a.name.clone()));
             }
         }

@@ -400,8 +400,27 @@ fn semantic_check(prog: &Program) -> Result<(), CError> {
     check_stmts(prog, &prog.body, &mut defined, false)
 }
 
-/// Lower a checked program to a dataflow graph.
+/// Lower a checked program to a dataflow graph and run the optimizer's
+/// default pipeline over it (the lazy-copy discipline leaves copy
+/// chains and constant subgraphs the paper's hand-drawn graphs don't
+/// have; see [`crate::opt`]).
 pub fn lower(name: &str, prog: &Program) -> Result<Graph, CError> {
+    lower_with(name, prog, crate::opt::OptLevel::Default)
+}
+
+/// [`lower`] with an explicit [`OptLevel`](crate::opt::OptLevel) —
+/// `None` yields the raw lowering (what the optimizer's differential
+/// harness compares against).
+pub fn lower_with(
+    name: &str,
+    prog: &Program,
+    level: crate::opt::OptLevel,
+) -> Result<Graph, CError> {
+    let g = lower_raw(name, prog)?;
+    Ok(crate::opt::optimize(&g, level).0)
+}
+
+fn lower_raw(name: &str, prog: &Program) -> Result<Graph, CError> {
     semantic_check(prog)?;
 
     let mut b = GraphBuilder::new(name);

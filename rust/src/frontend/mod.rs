@@ -43,7 +43,7 @@ mod parser;
 pub use ast::{literals_of, mutated_of, vars_of, BinOp, Expr, Program, Stmt, UnOp};
 pub use interp::{interpret, InterpResult};
 pub use lexer::{lex, Token};
-pub use lower::lower;
+pub use lower::{lower, lower_with};
 pub use parser::parse_program;
 
 use crate::dfg::Graph;
@@ -82,11 +82,22 @@ impl From<crate::dfg::ValidateError> for CError {
     }
 }
 
-/// Compile mini-C source into a static dataflow graph.
+/// Compile mini-C source into a static dataflow graph. The result is
+/// optimized at [`OptLevel::Default`](crate::opt::OptLevel) — use
+/// [`compile_with`] to control (or disable) the pipeline.
 pub fn compile(name: &str, src: &str) -> Result<Graph, CError> {
+    compile_with(name, src, crate::opt::OptLevel::Default)
+}
+
+/// [`compile`] with an explicit optimizer level.
+pub fn compile_with(
+    name: &str,
+    src: &str,
+    level: crate::opt::OptLevel,
+) -> Result<Graph, CError> {
     let tokens = lex(src)?;
     let prog = parse_program(&tokens)?;
-    lower(name, &prog)
+    lower_with(name, &prog, level)
 }
 
 #[cfg(test)]

@@ -17,6 +17,11 @@
 //! * [`asm`] — the paper's dataflow assembler language (Listing 1 syntax).
 //! * [`frontend`] — the paper's named future work: a mini-C compiler that
 //!   lowers a C subset to static dataflow graphs.
+//! * [`opt`] — the DFG optimizer: a fixed-point pass pipeline (constant
+//!   folding, copy-chain elision, CSE, dead-node elimination, strength
+//!   reduction) with an [`opt::OptLevel`] knob; lowered graphs run
+//!   through it by default and the serve tier caches optimized graphs
+//!   keyed by pre-optimization fingerprint + level.
 //! * [`sim`] — cycle-accurate simulation of the paper's operator FSMs
 //!   (Figs. 5/6) and handshake protocol (Fig. 3), plus a fast token engine,
 //!   a dynamic (tagged-token) extension, the wave-pipelined streaming tier,
@@ -58,6 +63,7 @@ pub mod dfg;
 pub mod estimate;
 pub mod fabric;
 pub mod frontend;
+pub mod opt;
 pub mod report;
 pub mod runtime;
 pub mod serve;
@@ -66,4 +72,5 @@ pub mod vhdl;
 
 pub use dfg::{Arc, ArcId, Graph, Node, NodeId, Op};
 pub use fabric::FabricTopology;
+pub use opt::{optimize, OptLevel, OptReport};
 pub use sim::{FsmSim, SimConfig, SimOutcome, StreamSession, TokenSim};

@@ -3,6 +3,7 @@
 //! ```text
 //! dataflow-accel run <bench> [--n 16] [--seed 7] [--engine token|fsm|dynamic]
 //! dataflow-accel compile <bench> [--emit asm|vhdl|c|resources]
+//! dataflow-accel opt [bench] [--level none|default|aggressive] [--out OPT_5.json]
 //! dataflow-accel place <bench> [--shards K] [--channels N] [--check] [--reconfig]
 //! dataflow-accel stream <bench|saxpy> [--waves 8] [--n 8] [--seed 7]
 //! dataflow-accel stream --table [--waves 8] [--n 8] [--seed 7]
@@ -30,6 +31,7 @@ fn main() {
     match cmd {
         "run" => cmd_run(&args),
         "compile" => cmd_compile(&args),
+        "opt" => cmd_opt(&args),
         "place" => cmd_place(&args),
         "stream" => cmd_stream(&args),
         "bench" => cmd_bench(&args),
@@ -45,7 +47,11 @@ fn main() {
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dataflow-accel <run|compile|place|stream|bench|serve|table1|sweep|info> [options]\n\
+                "usage: dataflow-accel <run|compile|opt|place|stream|bench|serve|table1|sweep|info> [options]\n\
+                 opt: run the DFG optimizer pipeline over the benchmark graphs \n\
+                 \x20 [bench]       show one benchmark's before/after graphs + pass report\n\
+                 \x20 --level L     none | default | aggressive (default: default)\n\
+                 \x20 --out PATH    write the JSON report (default OPT_5.json; whole-suite mode)\n\
                  place: map a benchmark onto the physical fabric model \n\
                  \x20 --shards K    size the fabric to ~1/K of the graph (forces partitioning)\n\
                  \x20 --channels N  override the bus-channel pool\n\
@@ -146,6 +152,61 @@ fn cmd_compile(args: &Args) {
         }
         other => panic!("unknown --emit `{other}`"),
     }
+}
+
+fn cmd_opt(args: &Args) {
+    use dataflow_accel::opt::{optimize, OptLevel};
+    let level_name = args.get_or("level", "default");
+    let level = OptLevel::from_name(&level_name)
+        .unwrap_or_else(|| panic!("unknown --level `{level_name}` (none|default|aggressive)"));
+
+    if let Some(which) = args.positional.get(1) {
+        // Single-benchmark deep dive: before/after graphs + pass report
+        // for the frontend-lowered form (hand-built for saxpy).
+        let (raw, label) = if which.as_str() == "saxpy" {
+            (bench_defs::saxpy::build(), "built")
+        } else {
+            let bench = BenchId::from_slug(which)
+                .unwrap_or_else(|| panic!("unknown benchmark `{which}`"));
+            (
+                frontend::compile_with(bench.slug(), bench_defs::c_source(bench), OptLevel::None)
+                    .expect("benchmark C source compiles"),
+                "lowered",
+            )
+        };
+        let (og, report) = optimize(&raw, level);
+        println!("=== {which} ({label}, raw: {} nodes, {} arcs) ===", raw.n_nodes(), raw.n_arcs());
+        print!("{}", dataflow_accel::asm::print(&raw));
+        println!("=== optimized @ {level} ({} nodes, {} arcs) ===", og.n_nodes(), og.n_arcs());
+        print!("{}", dataflow_accel::asm::print(&og));
+        print!("{report}");
+        let (rb, ra) = (estimate::estimate(&raw), estimate::estimate(&og));
+        println!(
+            "resources: FF {} -> {}, LUT {} -> {}, fmax {:.1} -> {:.1} MHz",
+            rb.ff, ra.ff, rb.lut, ra.lut, rb.fmax_mhz, ra.fmax_mhz
+        );
+        return;
+    }
+
+    let out_path = args.get_or("out", "OPT_5.json");
+    let rows = report::opt::opt_rows(level);
+    print!("{}", report::opt::render_table(&rows, level));
+    // Equivalence gates the trajectory file: numbers from a rewrite
+    // that changed any named output stream must never land in
+    // OPT_*.json.
+    let broken: Vec<String> = rows
+        .iter()
+        .filter(|r| !r.verified)
+        .map(|r| format!("{}/{}", r.name, r.source))
+        .collect();
+    if !broken.is_empty() {
+        eprintln!("opt: EQUIVALENCE FAILURES: {}", broken.join(", "));
+        eprintln!("opt: refusing to write {out_path}");
+        std::process::exit(1);
+    }
+    let json = report::opt::to_json(&rows, level);
+    std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
+    println!("wrote {out_path}");
 }
 
 fn cmd_place(args: &Args) {

@@ -1,0 +1,239 @@
+//! Mutable graph-rewrite substrate for the optimizer passes.
+//!
+//! A [`GraphEditor`] holds a tombstoned copy of a [`Graph`]: nodes and
+//! arcs keep their original indices while a pass deletes, rewires and
+//! adds elements, and [`GraphEditor::finish`] compacts the survivors
+//! back into a dense, validated [`Graph`] (stable order: original
+//! elements first, additions after). Keeping all rewiring behind a
+//! handful of invariant-preserving operations means every pass shares
+//! one correctness argument for the structural bookkeeping — the
+//! `validate` call at the end is a backstop, not the mechanism.
+
+use crate::dfg::{is_anon_label, validate, Arc, ArcId, Graph, Node, NodeId, Op};
+
+/// An editable operator instance (indices are editor slots, not
+/// [`NodeId`]s — those are assigned at [`GraphEditor::finish`]).
+#[derive(Debug, Clone)]
+pub struct ENode {
+    pub op: Op,
+    pub ins: Vec<usize>,
+    pub outs: Vec<usize>,
+}
+
+/// An editable arc.
+#[derive(Debug, Clone)]
+pub struct EArc {
+    pub src: Option<(usize, u8)>,
+    pub dst: Option<(usize, u8)>,
+    pub name: String,
+}
+
+#[derive(Debug)]
+pub struct GraphEditor {
+    name: String,
+    nodes: Vec<Option<ENode>>,
+    arcs: Vec<Option<EArc>>,
+    next_anon: u32,
+}
+
+impl GraphEditor {
+    pub fn new(g: &Graph) -> Self {
+        let mut next_anon = 1u32;
+        for a in &g.arcs {
+            if is_anon_label(&a.name) {
+                // Labels too large for u32 cannot collide with the
+                // small fresh numbers allocated here.
+                let n: u32 = a.name[1..].parse().unwrap_or(0);
+                next_anon = next_anon.max(n.saturating_add(1));
+            }
+        }
+        GraphEditor {
+            name: g.name.clone(),
+            nodes: g
+                .nodes
+                .iter()
+                .map(|n| {
+                    Some(ENode {
+                        op: n.op,
+                        ins: n.ins.iter().map(|a| a.0 as usize).collect(),
+                        outs: n.outs.iter().map(|a| a.0 as usize).collect(),
+                    })
+                })
+                .collect(),
+            arcs: g
+                .arcs
+                .iter()
+                .map(|a| {
+                    Some(EArc {
+                        src: a.src.map(|(n, p)| (n.0 as usize, p)),
+                        dst: a.dst.map(|(n, p)| (n.0 as usize, p)),
+                        name: a.name.clone(),
+                    })
+                })
+                .collect(),
+            next_anon,
+        }
+    }
+
+    /// Allocate a fresh anonymous label (`sN`) guaranteed unique in
+    /// this graph.
+    pub fn fresh_anon(&mut self) -> String {
+        let n = self.next_anon;
+        self.next_anon += 1;
+        format!("s{n}")
+    }
+
+    /// Add an arc; `None` gets a fresh anonymous label.
+    pub fn add_arc(&mut self, name: Option<String>) -> usize {
+        let name = name.unwrap_or_else(|| self.fresh_anon());
+        self.arcs.push(Some(EArc {
+            src: None,
+            dst: None,
+            name,
+        }));
+        self.arcs.len() - 1
+    }
+
+    /// Add a node wired to the given (unclaimed) input/output arcs.
+    pub fn add_node(&mut self, op: Op, ins: &[usize], outs: &[usize]) -> usize {
+        assert_eq!(ins.len(), op.n_in(), "{op:?} arity");
+        assert_eq!(outs.len(), op.n_out(), "{op:?} arity");
+        let id = self.nodes.len();
+        for (p, &a) in ins.iter().enumerate() {
+            let arc = self.arcs[a].as_mut().expect("live arc");
+            assert!(arc.dst.is_none(), "arc `{}` already consumed", arc.name);
+            arc.dst = Some((id, p as u8));
+        }
+        for (p, &a) in outs.iter().enumerate() {
+            let arc = self.arcs[a].as_mut().expect("live arc");
+            assert!(arc.src.is_none(), "arc `{}` already driven", arc.name);
+            arc.src = Some((id, p as u8));
+        }
+        self.nodes.push(Some(ENode {
+            op,
+            ins: ins.to_vec(),
+            outs: outs.to_vec(),
+        }));
+        id
+    }
+
+    /// Delete a node, detaching every incident arc (in-arcs lose their
+    /// consumer, out-arcs their driver; the arcs themselves survive).
+    pub fn delete_node(&mut self, i: usize) {
+        let n = self.nodes[i].take().expect("live node");
+        for a in n.ins {
+            if let Some(arc) = self.arcs[a].as_mut() {
+                arc.dst = None;
+            }
+        }
+        for a in n.outs {
+            if let Some(arc) = self.arcs[a].as_mut() {
+                arc.src = None;
+            }
+        }
+    }
+
+    /// Delete a fully detached arc.
+    pub fn delete_arc(&mut self, i: usize) {
+        let a = self.arcs[i].take().expect("live arc");
+        assert!(
+            a.src.is_none() && a.dst.is_none(),
+            "deleting connected arc `{}`",
+            a.name
+        );
+    }
+
+    /// Give arc `i`'s consumer slot to `(node, port)` — the node's input
+    /// at that port must currently be unwired from `i`'s perspective
+    /// (i.e. this is the re-attachment half of a fuse).
+    pub fn attach_dst(&mut self, i: usize, node: usize, port: u8) {
+        let arc = self.arcs[i].as_mut().expect("live arc");
+        assert!(arc.dst.is_none(), "arc `{}` already consumed", arc.name);
+        arc.dst = Some((node, port));
+        self.nodes[node].as_mut().expect("live node").ins[port as usize] = i;
+    }
+
+    /// Drop arc `i`'s consumer endpoint. The consuming node's input
+    /// slot still references `i` until the caller re-points it with
+    /// [`GraphEditor::attach_dst`] on a replacement arc — transient
+    /// only, inside one rewrite.
+    pub fn detach_dst(&mut self, i: usize) {
+        self.arcs[i].as_mut().expect("live arc").dst = None;
+    }
+
+    /// Replace the opcode in place (arity classes must match).
+    pub fn set_op(&mut self, i: usize, op: Op) {
+        let n = self.nodes[i].as_mut().expect("live node");
+        assert_eq!(n.ins.len(), op.n_in(), "set_op arity");
+        assert_eq!(n.outs.len(), op.n_out(), "set_op arity");
+        n.op = op;
+    }
+
+    /// Swap the two inputs of a binary node (commutative rewires only).
+    pub fn swap_ins2(&mut self, i: usize) {
+        let n = self.nodes[i].as_mut().expect("live node");
+        assert_eq!(n.ins.len(), 2, "swap_ins2 on non-binary node");
+        n.ins.swap(0, 1);
+        let (a0, a1) = (n.ins[0], n.ins[1]);
+        self.arcs[a0].as_mut().expect("live arc").dst = Some((i, 0));
+        self.arcs[a1].as_mut().expect("live arc").dst = Some((i, 1));
+    }
+
+    pub fn rename_arc(&mut self, i: usize, name: String) {
+        self.arcs[i].as_mut().expect("live arc").name = name;
+    }
+
+    /// Compact into a dense, validated [`Graph`]. Surviving elements
+    /// keep their relative order, so repeated optimization of an
+    /// already-optimal graph is byte-stable.
+    pub fn finish(self, pass: &str) -> Graph {
+        let mut node_map = vec![u32::MAX; self.nodes.len()];
+        let mut next = 0u32;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.is_some() {
+                node_map[i] = next;
+                next += 1;
+            }
+        }
+        let mut arc_map = vec![u32::MAX; self.arcs.len()];
+        let mut next = 0u32;
+        for (i, a) in self.arcs.iter().enumerate() {
+            if a.is_some() {
+                arc_map[i] = next;
+                next += 1;
+            }
+        }
+        let mut g = Graph::new(self.name.clone());
+        for (i, a) in self.arcs.iter().enumerate() {
+            let Some(a) = a else { continue };
+            let map_ep = |ep: Option<(usize, u8)>| {
+                ep.map(|(n, p)| {
+                    debug_assert!(
+                        self.nodes[n].is_some(),
+                        "pass `{pass}`: arc `{}` references deleted node",
+                        a.name
+                    );
+                    (NodeId(node_map[n]), p)
+                })
+            };
+            g.arcs.push(Arc {
+                id: ArcId(arc_map[i]),
+                src: map_ep(a.src),
+                dst: map_ep(a.dst),
+                name: a.name.clone(),
+            });
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            let Some(n) = n else { continue };
+            g.nodes.push(Node {
+                id: NodeId(node_map[i]),
+                op: n.op,
+                ins: n.ins.iter().map(|&a| ArcId(arc_map[a])).collect(),
+                outs: n.outs.iter().map(|&a| ArcId(arc_map[a])).collect(),
+            });
+        }
+        validate(&g)
+            .unwrap_or_else(|e| panic!("optimizer pass `{pass}` broke structural validity: {e}"));
+        g
+    }
+}

@@ -1,0 +1,452 @@
+//! The DFG optimizer: a fixed-point pass pipeline over [`Graph`].
+//!
+//! Lowered graphs — especially `frontend::lower`'s output with its
+//! lazy-copy discipline — carry redundant copy chains, constant
+//! subgraphs and duplicated expressions that burn fabric slots, bus
+//! channels and firings on every engine. The pipeline removes them
+//! while preserving the graph's *observable* behaviour:
+//!
+//! * **canonicalize** — commutative operands into a deterministic
+//!   order, shift counts masked to the 4-bit barrel-shifter range;
+//! * **fold-consts** — `const`-only ALU/decider/`not` subgraphs
+//!   evaluated at compile time with the exact [`Op::eval2`]/
+//!   [`Op::eval1`] word semantics `TokenSim::try_fire` uses;
+//! * **strength** — `mul` by a constant power of two → `shl`;
+//! * **elide-copies** — copies whose second output dangles
+//!   anonymously are wires; chains collapse to zero;
+//! * **cse** ([`OptLevel::Aggressive`] only) — duplicate pure
+//!   computations merge into one, fanned out through a `copy`;
+//! * **dce** — nodes with no forward path to a *named* output port.
+//!
+//! Every pass, and the pipeline as a whole, is held to the
+//! differential obligation enforced by `rust/tests/conformance.rs`:
+//! on every workload that quiesces on the raw graph, every execution
+//! engine produces byte-identical streams on the named output ports
+//! of the optimized graph, and the named external port set is
+//! preserved exactly. DESIGN.md §9 catalogues the per-pass legality
+//! conditions (and the rewrites that are deliberately *absent* —
+//! `x+0` elision and constant-control routing folds are rate changes
+//! in static dataflow, not simplifications).
+
+mod editor;
+mod passes;
+
+use crate::dfg::Graph;
+use std::fmt;
+
+/// How hard to optimize. `None` is the identity (and is tested to be);
+/// `Default` runs the always-profitable structural passes; `Aggressive`
+/// adds common-subexpression elimination, which trades a little
+/// operator coupling (the fan-out `copy`) for fewer ALU slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum OptLevel {
+    None,
+    #[default]
+    Default,
+    Aggressive,
+}
+
+impl OptLevel {
+    pub const ALL: [OptLevel; 3] = [OptLevel::None, OptLevel::Default, OptLevel::Aggressive];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OptLevel::None => "none",
+            OptLevel::Default => "default",
+            OptLevel::Aggressive => "aggressive",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<OptLevel> {
+        OptLevel::ALL.iter().copied().find(|l| l.name() == s)
+    }
+}
+
+impl fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Structural delta one pass application produced (crate-internal
+/// accumulator; [`PassStats`] is the reported aggregate).
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct PassDelta {
+    pub applications: u64,
+    /// Net node-count change (negative = removed). CSE is net zero on
+    /// its own; its wins surface through the cleanup passes.
+    pub nodes: i64,
+    pub arcs: i64,
+    /// In-place rewrites that moved no nodes or arcs (operand swaps,
+    /// opcode changes).
+    pub rewrites: u64,
+}
+
+/// What one pass did over the whole pipeline run.
+#[derive(Debug, Clone)]
+pub struct PassStats {
+    pub name: &'static str,
+    pub applications: u64,
+    pub nodes_delta: i64,
+    pub arcs_delta: i64,
+    pub rewrites: u64,
+}
+
+impl PassStats {
+    fn new(name: &'static str) -> Self {
+        PassStats {
+            name,
+            applications: 0,
+            nodes_delta: 0,
+            arcs_delta: 0,
+            rewrites: 0,
+        }
+    }
+
+    fn absorb(&mut self, d: PassDelta) {
+        self.applications += d.applications;
+        self.nodes_delta += d.nodes;
+        self.arcs_delta += d.arcs;
+        self.rewrites += d.rewrites;
+    }
+
+    fn merge(&mut self, o: &PassStats) {
+        debug_assert_eq!(self.name, o.name);
+        self.applications += o.applications;
+        self.nodes_delta += o.nodes_delta;
+        self.arcs_delta += o.arcs_delta;
+        self.rewrites += o.rewrites;
+    }
+}
+
+/// What the pipeline did to one graph.
+#[derive(Debug, Clone)]
+pub struct OptReport {
+    pub level: OptLevel,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    pub arcs_before: usize,
+    pub arcs_after: usize,
+    /// Full pipeline sweeps until the joint fixpoint.
+    pub iterations: u64,
+    /// Per-pass aggregates, in pipeline order.
+    pub passes: Vec<PassStats>,
+}
+
+impl OptReport {
+    pub fn nodes_removed(&self) -> i64 {
+        self.nodes_before as i64 - self.nodes_after as i64
+    }
+
+    pub fn arcs_removed(&self) -> i64 {
+        self.arcs_before as i64 - self.arcs_after as i64
+    }
+
+    /// Any pass applied at least one rewrite.
+    pub fn changed(&self) -> bool {
+        self.passes.iter().any(|p| p.applications > 0)
+    }
+
+    /// One-line counter summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "opt[{}]: nodes {} -> {}, arcs {} -> {} ({} iteration(s))",
+            self.level,
+            self.nodes_before,
+            self.nodes_after,
+            self.arcs_before,
+            self.arcs_after,
+            self.iterations
+        )
+    }
+}
+
+impl fmt::Display for OptReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.summary())?;
+        writeln!(
+            f,
+            "  {:<14} {:>6} {:>8} {:>8} {:>9}",
+            "pass", "apps", "d-nodes", "d-arcs", "rewrites"
+        )?;
+        for p in &self.passes {
+            writeln!(
+                f,
+                "  {:<14} {:>6} {:>8} {:>8} {:>9}",
+                p.name, p.applications, p.nodes_delta, p.arcs_delta, p.rewrites
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// The [`OptLevel::Default`] pipeline, in order.
+pub const PASSES_DEFAULT: [&str; 5] = [
+    "canonicalize",
+    "fold-consts",
+    "strength",
+    "elide-copies",
+    "dce",
+];
+
+/// The [`OptLevel::Aggressive`] pipeline: default plus CSE (before the
+/// cleanup passes re-run at the next sweep).
+pub const PASSES_AGGRESSIVE: [&str; 6] = [
+    "canonicalize",
+    "fold-consts",
+    "strength",
+    "elide-copies",
+    "cse",
+    "dce",
+];
+
+/// The pass names a level runs, in pipeline order.
+pub fn pass_names(level: OptLevel) -> &'static [&'static str] {
+    match level {
+        OptLevel::None => &[],
+        OptLevel::Default => &PASSES_DEFAULT,
+        OptLevel::Aggressive => &PASSES_AGGRESSIVE,
+    }
+}
+
+fn canonical_pass_name(pass: &str) -> &'static str {
+    PASSES_AGGRESSIVE
+        .iter()
+        .copied()
+        .find(|&n| n == pass)
+        .unwrap_or_else(|| panic!("unknown optimizer pass `{pass}`"))
+}
+
+fn apply_once(g: &Graph, pass: &'static str) -> Option<(Graph, PassDelta)> {
+    match pass {
+        "canonicalize" => passes::canonicalize(g),
+        "fold-consts" => passes::fold_consts(g),
+        "strength" => passes::strength(g),
+        "elide-copies" => passes::elide_copies(g),
+        "cse" => passes::cse(g),
+        "dce" => passes::dce(g),
+        other => panic!("unknown optimizer pass `{other}`"),
+    }
+}
+
+/// Generous bound on single-pass self-applications (each application
+/// strictly shrinks the graph or fixes a one-way rewrite, so real
+/// graphs converge in far fewer).
+const PASS_FIXPOINT_CAP: usize = 100_000;
+
+/// Bound on full pipeline sweeps.
+const DRIVER_CAP: u64 = 64;
+
+fn run_pass_inner(g: &Graph, name: &'static str) -> Option<(Graph, PassStats)> {
+    let mut stats = PassStats::new(name);
+    let mut cur: Option<Graph> = None;
+    for _ in 0..PASS_FIXPOINT_CAP {
+        let src = cur.as_ref().unwrap_or(g);
+        match apply_once(src, name) {
+            Some((next, d)) => {
+                stats.absorb(d);
+                cur = Some(next);
+            }
+            None => break,
+        }
+    }
+    cur.map(|g| (g, stats))
+}
+
+/// Run a single pass to its own fixpoint — the entry the pass-level
+/// differential harness drives. Unknown names panic.
+pub fn run_pass(g: &Graph, pass: &str) -> (Graph, PassStats) {
+    let name = canonical_pass_name(pass);
+    run_pass_inner(g, name).unwrap_or_else(|| (g.clone(), PassStats::new(name)))
+}
+
+/// Optimize `g` at `level`: run every pass of the level's pipeline to
+/// its fixpoint, and sweep the pipeline until a whole sweep changes
+/// nothing. The result is validated after every rewrite; a graph that
+/// is already optimal comes back byte-identical (idempotence — the
+/// conformance harness pins it).
+pub fn optimize(g: &Graph, level: OptLevel) -> (Graph, OptReport) {
+    let mut report = OptReport {
+        level,
+        nodes_before: g.n_nodes(),
+        nodes_after: g.n_nodes(),
+        arcs_before: g.n_arcs(),
+        arcs_after: g.n_arcs(),
+        iterations: 0,
+        passes: pass_names(level).iter().map(|&n| PassStats::new(n)).collect(),
+    };
+    if level == OptLevel::None {
+        return (g.clone(), report);
+    }
+    let mut cur = g.clone();
+    for _ in 0..DRIVER_CAP {
+        let mut changed = false;
+        report.iterations += 1;
+        for (pi, &name) in pass_names(level).iter().enumerate() {
+            let name = canonical_pass_name(name);
+            if let Some((next, st)) = run_pass_inner(&cur, name) {
+                report.passes[pi].merge(&st);
+                cur = next;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    report.nodes_after = cur.n_nodes();
+    report.arcs_after = cur.n_arcs();
+    (cur, report)
+}
+
+/// [`optimize`] at [`OptLevel::Default`], dropping the report — the
+/// convenience the frontend and examples use.
+pub fn optimize_default(g: &Graph) -> Graph {
+    optimize(g, OptLevel::Default).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{self, BenchId};
+    use crate::dfg::{GraphBuilder, Op};
+    use crate::frontend;
+    use crate::sim::{run_fsm, run_token};
+
+    #[test]
+    fn removes_dangling_copy() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input_port("a");
+        let (u, _rest) = b.copy(a); // rest dangles
+        let k = b.constant(1);
+        let z = b.output_port("z");
+        b.node(Op::Add, &[u, k], &[z]);
+        let g = b.finish().unwrap();
+        let (opt, report) = optimize(&g, OptLevel::Default);
+        assert_eq!(opt.n_nodes(), g.n_nodes() - 1);
+        assert!(opt.op_census().get("copy").is_none());
+        assert_eq!(report.nodes_removed(), 1);
+        let cfg = crate::sim::SimConfig::new().inject("a", vec![41]);
+        assert_eq!(run_token(&opt, &cfg).stream("z"), &[42]);
+    }
+
+    #[test]
+    fn preserves_port_names_through_fusion() {
+        // `r = x + 0;` lowers to copy(x) feeding the add; eliminating
+        // the copy must keep both port names on the fused arcs.
+        let g = frontend::compile_with("t", "in int x; out int r; r = x + 0;", OptLevel::None)
+            .unwrap();
+        let (opt, _) = optimize(&g, OptLevel::Default);
+        assert!(opt.arc_by_name("r").is_some());
+        assert!(opt.arc_by_name("x").is_some());
+        let cfg = crate::sim::SimConfig::new().inject("x", vec![9]);
+        assert_eq!(run_token(&opt, &cfg).stream("r"), &[9]);
+    }
+
+    #[test]
+    fn shrinks_all_compiled_benchmarks_semantics_preserved() {
+        for bench in BenchId::ALL {
+            let g = frontend::compile_with(
+                bench.slug(),
+                bench_defs::c_source(bench),
+                OptLevel::None,
+            )
+            .unwrap();
+            let (opt, report) = optimize(&g, OptLevel::Default);
+            assert!(
+                opt.n_nodes() < g.n_nodes(),
+                "{}: {} !< {}",
+                bench.slug(),
+                opt.n_nodes(),
+                g.n_nodes()
+            );
+            assert_eq!(
+                report.nodes_removed(),
+                g.n_nodes() as i64 - opt.n_nodes() as i64
+            );
+            let wl = bench_defs::workload(bench, 6, 17);
+            let mut cfg = wl.sim_config();
+            cfg.max_cycles *= 4;
+            let tok = run_token(&opt, &cfg);
+            let fsm = run_fsm(&opt, &cfg);
+            for (port, want) in &wl.expect {
+                assert_eq!(tok.stream(port), want.as_slice(), "{} token", bench.slug());
+                assert_eq!(fsm.stream(port), want.as_slice(), "{} fsm", bench.slug());
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_graphs_approach_hand_built_size() {
+        // Aggregate: the pipeline recovers a large share of the
+        // lazy-copy overhead the frontend introduces vs the hand-built
+        // graphs.
+        let mut raw = 0usize;
+        let mut opt_total = 0usize;
+        let mut hand = 0usize;
+        for bench in BenchId::ALL {
+            let g = frontend::compile_with(
+                bench.slug(),
+                bench_defs::c_source(bench),
+                OptLevel::None,
+            )
+            .unwrap();
+            raw += g.n_nodes();
+            opt_total += optimize_default(&g).n_nodes();
+            hand += bench_defs::build(bench).n_nodes();
+        }
+        assert!(opt_total < raw, "optimizer removed nothing");
+        let overhead_before = raw as f64 / hand as f64;
+        let overhead_after = opt_total as f64 / hand as f64;
+        assert!(
+            overhead_after < overhead_before,
+            "{overhead_after:.2} !< {overhead_before:.2}"
+        );
+    }
+
+    #[test]
+    fn idempotent_to_the_byte() {
+        for level in [OptLevel::Default, OptLevel::Aggressive] {
+            let g = frontend::compile_with(
+                "fib",
+                bench_defs::c_source(BenchId::Fibonacci),
+                OptLevel::None,
+            )
+            .unwrap();
+            let (o1, _) = optimize(&g, level);
+            let (o2, r2) = optimize(&o1, level);
+            assert!(!r2.changed(), "{level}: second run must be a no-op");
+            assert_eq!(
+                crate::asm::print(&o1),
+                crate::asm::print(&o2),
+                "{level}: fixpoint not byte-stable"
+            );
+        }
+    }
+
+    #[test]
+    fn level_none_is_identity() {
+        let g = bench_defs::build(BenchId::DotProd);
+        let (o, report) = optimize(&g, OptLevel::None);
+        assert_eq!(crate::asm::print(&o), crate::asm::print(&g));
+        assert!(!report.changed());
+        assert_eq!(report.iterations, 0);
+        assert!(report.passes.is_empty());
+    }
+
+    #[test]
+    fn report_renders() {
+        let g = frontend::compile_with(
+            "fib",
+            bench_defs::c_source(BenchId::Fibonacci),
+            OptLevel::None,
+        )
+        .unwrap();
+        let (_, report) = optimize(&g, OptLevel::Default);
+        let text = format!("{report}");
+        assert!(text.contains("elide-copies"), "{text}");
+        assert!(report.summary().contains("opt[default]"), "{}", report.summary());
+        assert_eq!(OptLevel::from_name("aggressive"), Some(OptLevel::Aggressive));
+        assert_eq!(OptLevel::from_name("bogus"), None);
+    }
+}

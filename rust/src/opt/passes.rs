@@ -1,0 +1,587 @@
+//! The individual rewrite passes.
+//!
+//! Every pass takes a valid [`Graph`] and either returns `None` (no
+//! candidate — the pass is at its fixpoint) or a rewritten valid graph
+//! plus the structural delta it caused. Legality conditions per pass
+//! are catalogued in DESIGN.md §9; the short version of the contract:
+//!
+//! * the **named** external port set (input ports and non-anonymous
+//!   output ports) is preserved exactly — anonymous dangling `sN` arcs
+//!   are drain wires and may appear or disappear;
+//! * on every execution that quiesces on the raw graph, the streams
+//!   collected at named output ports are byte-identical (the same
+//!   contract under which the PR 2 cross-engine comparisons are
+//!   defined — buffer-capacity changes are unobservable exactly at
+//!   quiescence);
+//! * rewrites that would change a `const`'s one-shot pairing (x+0 → x)
+//!   or a one-shot routing decision (`branch`/`dmerge` under constant
+//!   control) are *not* performed — those are rate changes, not
+//!   simplifications, in static dataflow.
+
+use super::editor::GraphEditor;
+use super::PassDelta;
+use crate::dfg::{is_anon_label, ArcId, Graph, Op, OpClass, Word};
+use std::collections::BTreeMap;
+
+fn is_commutative(op: Op) -> bool {
+    matches!(op, Op::Add | Op::Mul | Op::And | Op::Or | Op::Xor | Op::IfEq | Op::IfDf)
+}
+
+/// Pure value operators: no routing, no state, no one-shot semantics.
+fn is_pure(op: Op) -> bool {
+    matches!(op.class(), OpClass::Alu1 | OpClass::Alu2 | OpClass::Decider)
+}
+
+/// The `Const` node driving `a`, if any, as `(node index, value)`.
+fn const_src(g: &Graph, a: ArcId) -> Option<(usize, Word)> {
+    let (n, _) = g.arc(a).src?;
+    match g.node(n).op {
+        Op::Const(v) => Some((n.0 as usize, v)),
+        _ => None,
+    }
+}
+
+/// A deterministic total order on a node's operand arcs: node-driven
+/// operands sort by (driver index, driver port), environment ports by
+/// label. Used to put commutative operands in a canonical order.
+fn operand_key<'g>(g: &'g Graph, a: ArcId) -> (u8, u32, u8, &'g str) {
+    match g.arc(a).src {
+        Some((n, p)) => (0, n.0, p, ""),
+        None => (1, 0, 0, g.arc(a).name.as_str()),
+    }
+}
+
+// ---- canonicalize ------------------------------------------------------
+
+/// Commutative operands into canonical order; shift counts masked to
+/// the barrel shifter's 4 bits (`shl x, #17` ≡ `shl x, #1`). Pure
+/// rewrites — node and arc counts never change.
+pub(super) fn canonicalize(g: &Graph) -> Option<(Graph, PassDelta)> {
+    let mut swaps: Vec<usize> = Vec::new();
+    let mut masks: Vec<(usize, Word)> = Vec::new();
+    for n in &g.nodes {
+        match n.op {
+            Op::Shl | Op::Shr => {
+                if let Some((cn, v)) = const_src(g, n.ins[1]) {
+                    let m = v & 0xf;
+                    if m != v {
+                        masks.push((cn, m));
+                    }
+                }
+            }
+            op if is_commutative(op) => {
+                if operand_key(g, n.ins[1]) < operand_key(g, n.ins[0]) {
+                    swaps.push(n.id.0 as usize);
+                }
+            }
+            _ => {}
+        }
+    }
+    if swaps.is_empty() && masks.is_empty() {
+        return None;
+    }
+    let rewrites = (swaps.len() + masks.len()) as u64;
+    let mut ed = GraphEditor::new(g);
+    for i in swaps {
+        ed.swap_ins2(i);
+    }
+    for (cn, m) in masks {
+        ed.set_op(cn, Op::Const(m));
+    }
+    Some((
+        ed.finish("canonicalize"),
+        PassDelta {
+            applications: rewrites,
+            rewrites,
+            ..PassDelta::default()
+        },
+    ))
+}
+
+// ---- fold-consts -------------------------------------------------------
+
+/// One constant fold: an ALU/decider/`not` node with all-const inputs
+/// becomes a single `const` (exact: one token in produces one token
+/// out, before and after — the fold even *shrinks* every per-class
+/// demand, so a graph that placed raw always places folded).
+struct Fold {
+    node: usize,
+    consts: Vec<(usize, ArcId)>,
+    val: Word,
+}
+
+pub(super) fn fold_consts(g: &Graph) -> Option<(Graph, PassDelta)> {
+    let mut folds: Vec<Fold> = Vec::new();
+    for n in &g.nodes {
+        match n.op.class() {
+            OpClass::Alu2 | OpClass::Decider => {
+                if let (Some((c0, v0)), Some((c1, v1))) =
+                    (const_src(g, n.ins[0]), const_src(g, n.ins[1]))
+                {
+                    folds.push(Fold {
+                        node: n.id.0 as usize,
+                        consts: vec![(c0, n.ins[0]), (c1, n.ins[1])],
+                        val: n.op.eval2(v0, v1),
+                    });
+                }
+            }
+            OpClass::Alu1 => {
+                if let Some((c0, v0)) = const_src(g, n.ins[0]) {
+                    folds.push(Fold {
+                        node: n.id.0 as usize,
+                        consts: vec![(c0, n.ins[0])],
+                        val: n.op.eval1(v0),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    if folds.is_empty() {
+        return None;
+    }
+    let mut delta = PassDelta::default();
+    let mut ed = GraphEditor::new(g);
+    for Fold { node, consts, val } in folds {
+        let out = g.nodes[node].outs[0].0 as usize;
+        ed.delete_node(node);
+        for (cn, arc) in &consts {
+            ed.delete_node(*cn);
+            ed.delete_arc(arc.0 as usize);
+        }
+        ed.add_node(Op::Const(val), &[], &[out]);
+        delta.applications += 1;
+        delta.nodes -= consts.len() as i64;
+        delta.arcs -= consts.len() as i64;
+    }
+    Some((ed.finish("fold-consts"), delta))
+}
+
+// ---- strength ----------------------------------------------------------
+
+/// `k` such that multiplying by `v` equals `shl` by `k` in wrapping
+/// 16-bit arithmetic. `i16::MIN` is 2¹⁵ mod 2¹⁶; `1` is excluded (a
+/// `shl #0` is no cheaper and the identity elision itself would be a
+/// rate change — see DESIGN.md §9).
+fn pow2_shift(v: Word) -> Option<Word> {
+    if v == Word::MIN {
+        return Some(15);
+    }
+    if v >= 2 && (v & (v - 1)) == 0 {
+        return Some(v.trailing_zeros() as Word);
+    }
+    None
+}
+
+/// `mul` by a constant power of two → `shl` (exact for every input in
+/// wrapping arithmetic). `div` by a power of two is deliberately *not*
+/// reduced: `wrapping_div` truncates toward zero while `shr` is an
+/// arithmetic (flooring) shift, so they disagree on negative odd
+/// dividends (−3/2 = −1 but −3>>1 = −2).
+pub(super) fn strength(g: &Graph) -> Option<(Graph, PassDelta)> {
+    let mut plans: Vec<(usize, usize, Word, bool)> = Vec::new();
+    for n in &g.nodes {
+        if n.op != Op::Mul {
+            continue;
+        }
+        let (c0, c1) = (const_src(g, n.ins[0]), const_src(g, n.ins[1]));
+        if c0.is_some() && c1.is_some() {
+            continue; // fold-consts territory
+        }
+        let (swap, konst) = match (c0, c1) {
+            (_, Some(c)) => (false, c),
+            (Some(c), _) => (true, c),
+            _ => continue,
+        };
+        if let Some(k) = pow2_shift(konst.1) {
+            plans.push((n.id.0 as usize, konst.0, k, swap));
+        }
+    }
+    if plans.is_empty() {
+        return None;
+    }
+    let applications = plans.len() as u64;
+    let mut ed = GraphEditor::new(g);
+    for (node, cn, k, swap) in plans {
+        if swap {
+            ed.swap_ins2(node);
+        }
+        ed.set_op(node, Op::Shl);
+        ed.set_op(cn, Op::Const(k));
+    }
+    Some((
+        ed.finish("strength"),
+        PassDelta {
+            applications,
+            rewrites: applications,
+            ..PassDelta::default()
+        },
+    ))
+}
+
+// ---- elide-copies ------------------------------------------------------
+
+/// Copy-chain elision: a `copy` with an anonymous unconsumed output is
+/// a one-place buffer (the dangling side always drains), so the node
+/// is removed and its input fused with its live output; chains
+/// collapse over the fixpoint loop. Guards: named dangles are
+/// interface, never dead; a copy repeating an input port straight to
+/// an output port is load-bearing (removing it would leave a
+/// disconnected pin that *echoes* injections); fusing onto a named
+/// output port must not rename it.
+pub(super) fn elide_copies(g: &Graph) -> Option<(Graph, PassDelta)> {
+    for n in &g.nodes {
+        if n.op != Op::Copy {
+            continue;
+        }
+        let in_arc = n.ins[0];
+        if in_arc == n.outs[0] || in_arc == n.outs[1] {
+            continue; // degenerate self-loop
+        }
+        let dead = |a: ArcId| {
+            let arc = g.arc(a);
+            arc.dst.is_none() && is_anon_label(&arc.name)
+        };
+        let (d0, d1) = (dead(n.outs[0]), dead(n.outs[1]));
+        let in_is_port = g.arc(in_arc).src.is_none();
+        let in_anon = is_anon_label(&g.arc(in_arc).name);
+        let ni = n.id.0 as usize;
+
+        if d0 && d1 {
+            // Pure drain. Removing it leaves the input arc as the
+            // drain, which only works when that arc may dangle
+            // anonymously itself.
+            if in_is_port || !in_anon {
+                continue;
+            }
+            let mut ed = GraphEditor::new(g);
+            ed.delete_node(ni);
+            ed.delete_arc(n.outs[0].0 as usize);
+            ed.delete_arc(n.outs[1].0 as usize);
+            return Some((
+                ed.finish("elide-copies"),
+                PassDelta {
+                    applications: 1,
+                    nodes: -1,
+                    arcs: -2,
+                    ..PassDelta::default()
+                },
+            ));
+        }
+        if d0 || d1 {
+            let (dead_arc, live_arc) = if d0 {
+                (n.outs[0], n.outs[1])
+            } else {
+                (n.outs[1], n.outs[0])
+            };
+            let live = g.arc(live_arc);
+            let live_dst = live.dst;
+            if live_dst.is_none() {
+                // The live side is a *named* output port (anonymous
+                // would be dead). The fused input arc must be able to
+                // take over both the portness and the label.
+                if in_is_port || !in_anon {
+                    continue;
+                }
+            }
+            let live_name = live.name.clone();
+            let mut ed = GraphEditor::new(g);
+            ed.delete_node(ni);
+            if let Some((c, p)) = live_dst {
+                // Free the live arc's consumer slot, then hand it to
+                // the copy's input arc (the fuse).
+                ed.detach_dst(live_arc.0 as usize);
+                ed.attach_dst(in_arc.0 as usize, c.0 as usize, p);
+            }
+            if in_anon && !is_anon_label(&live_name) {
+                ed.rename_arc(in_arc.0 as usize, live_name);
+            }
+            ed.delete_arc(live_arc.0 as usize);
+            ed.delete_arc(dead_arc.0 as usize);
+            return Some((
+                ed.finish("elide-copies"),
+                PassDelta {
+                    applications: 1,
+                    nodes: -1,
+                    arcs: -2,
+                    ..PassDelta::default()
+                },
+            ));
+        }
+    }
+    None
+}
+
+// ---- cse ---------------------------------------------------------------
+
+/// Value-number every arc that is acyclically computable: environment
+/// ports get fresh classes, `const #v` interns on its value, `copy`
+/// propagates its input class to both outputs, pure operators intern
+/// on (opcode, operand classes — sorted when commutative), `fifo #k`
+/// interns on (depth, input class), and routing operators
+/// (`branch`/`dmerge`/`ndmerge`) always get fresh classes (their
+/// output streams are data-dependent subsequences). Arcs inside
+/// cycles never resolve and stay `None` — loop bodies are thereby
+/// excluded from CSE.
+fn value_classes(g: &Graph) -> Vec<Option<u32>> {
+    type Key = (&'static str, i32, Vec<u32>);
+    fn intern(interned: &mut BTreeMap<Key, u32>, next: &mut u32, key: Key) -> u32 {
+        *interned.entry(key).or_insert_with(|| {
+            let c = *next;
+            *next += 1;
+            c
+        })
+    }
+    let mut class: Vec<Option<u32>> = vec![None; g.n_arcs()];
+    let mut next = 0u32;
+    let mut interned: BTreeMap<Key, u32> = BTreeMap::new();
+    for a in &g.arcs {
+        if a.src.is_none() {
+            class[a.id.0 as usize] = Some(next);
+            next += 1;
+        }
+    }
+    loop {
+        let mut progress = false;
+        for n in &g.nodes {
+            if n.outs.iter().all(|o| class[o.0 as usize].is_some()) {
+                continue;
+            }
+            if !n.ins.iter().all(|i| class[i.0 as usize].is_some()) {
+                continue;
+            }
+            match n.op {
+                Op::Const(v) => {
+                    let c = intern(&mut interned, &mut next, ("const", v as i32, vec![]));
+                    class[n.outs[0].0 as usize] = Some(c);
+                }
+                Op::Copy => {
+                    let c = class[n.ins[0].0 as usize];
+                    class[n.outs[0].0 as usize] = c;
+                    class[n.outs[1].0 as usize] = c;
+                }
+                Op::Fifo(k) => {
+                    let c = class[n.ins[0].0 as usize].unwrap();
+                    let c = intern(&mut interned, &mut next, ("fifo", k as i32, vec![c]));
+                    class[n.outs[0].0 as usize] = Some(c);
+                }
+                Op::NdMerge | Op::DMerge | Op::Branch => {
+                    for o in &n.outs {
+                        class[o.0 as usize] = Some(next);
+                        next += 1;
+                    }
+                }
+                op => {
+                    debug_assert!(is_pure(op));
+                    let mut operands: Vec<u32> = n
+                        .ins
+                        .iter()
+                        .map(|i| class[i.0 as usize].unwrap())
+                        .collect();
+                    if is_commutative(op) {
+                        operands.sort_unstable();
+                    }
+                    let c = intern(&mut interned, &mut next, (op.mnemonic(), 0, operands));
+                    class[n.outs[0].0 as usize] = Some(c);
+                }
+            }
+            progress = true;
+        }
+        if !progress {
+            break;
+        }
+    }
+    class
+}
+
+/// Local CSE for pure operators (never `const`, never routing, never
+/// `fifo` — see DESIGN.md §9): two value-equivalent pure nodes merge
+/// into one computation fanned out through a fresh `copy`; the
+/// victim's orphaned operand tree is cleaned up by `elide-copies` and
+/// `dce` on later fixpoint rounds. One merge per call.
+pub(super) fn cse(g: &Graph) -> Option<(Graph, PassDelta)> {
+    let class = value_classes(g);
+    let mut by_class: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+    for n in &g.nodes {
+        if !is_pure(n.op) {
+            continue;
+        }
+        let out = g.arc(n.outs[0]);
+        if out.dst.is_none() && is_anon_label(&out.name) {
+            continue; // pure drain — merging buys nothing, costs coupling
+        }
+        if let Some(c) = class[n.outs[0].0 as usize] {
+            by_class.entry(c).or_default().push(n.id.0 as usize);
+        }
+    }
+    for members in by_class.values().filter(|m| m.len() >= 2) {
+        // A victim must be fully rewireable: every operand node-driven
+        // through an anonymous arc (detaching a named arc or a port
+        // would change the external interface).
+        let can_be_victim = |&ni: &usize| {
+            g.nodes[ni].ins.iter().all(|&a| {
+                let arc = g.arc(a);
+                arc.src.is_some() && is_anon_label(&arc.name)
+            })
+        };
+        for &victim in members.iter() {
+            if !can_be_victim(&victim) {
+                continue;
+            }
+            let Some(&keeper) = members.iter().find(|&&k| k != victim) else {
+                continue;
+            };
+            // Defensive: never merge producer/consumer pairs (value
+            // numbering makes them distinct classes, but the rewire
+            // below must not dangle onto a deleted node).
+            let a1 = g.nodes[keeper].outs[0];
+            let a2 = g.nodes[victim].outs[0];
+            let consumes = |arc: ArcId, node: usize| {
+                matches!(g.arc(arc).dst, Some((d, _)) if d.0 as usize == node)
+            };
+            if consumes(a1, victim) || consumes(a2, keeper) {
+                continue;
+            }
+            return Some(merge_pair(g, keeper, victim));
+        }
+    }
+    None
+}
+
+fn merge_pair(g: &Graph, keeper: usize, victim: usize) -> (Graph, PassDelta) {
+    let a1 = g.nodes[keeper].outs[0];
+    let a2 = g.nodes[victim].outs[0];
+    let a1_dst = g.arc(a1).dst;
+    let a1_name = g.arc(a1).name.clone();
+
+    let mut ed = GraphEditor::new(g);
+    // A fresh arc takes over the keeper output's public identity
+    // (consumer or named portness); the old arc becomes the internal
+    // wire feeding the new copy.
+    let o0 = ed.add_arc(None);
+    if let Some((c, p)) = a1_dst {
+        ed.detach_dst(a1.0 as usize);
+        ed.attach_dst(o0, c.0 as usize, p);
+    }
+    if !is_anon_label(&a1_name) {
+        let fresh = ed.fresh_anon();
+        ed.rename_arc(a1.0 as usize, fresh);
+        ed.rename_arc(o0, a1_name);
+    }
+    // The victim's operand arcs dangle after this; `elide-copies` and
+    // `dce` collect them on later fixpoint rounds.
+    ed.delete_node(victim);
+    ed.add_node(Op::Copy, &[a1.0 as usize], &[o0, a2.0 as usize]);
+    (
+        ed.finish("cse"),
+        PassDelta {
+            applications: 1,
+            nodes: 0,
+            arcs: 1,
+            ..PassDelta::default()
+        },
+    )
+}
+
+// ---- dce ---------------------------------------------------------------
+
+/// Dead-node elimination. Roots are the *named* output ports; a node
+/// with no forward path to any of them computes nothing observable.
+/// Two protections keep removal exact and interface-preserving:
+/// a node directly fed by an input port is kept (deleting it would
+/// leave the port as a disconnected pin that echoes injections), and
+/// the removable set is shrunk to a fixpoint so no removed node feeds
+/// a kept node and no kept node feeds a removed node through a
+/// *named* arc (a named dangle would join the interface).
+pub(super) fn dce(g: &Graph) -> Option<(Graph, PassDelta)> {
+    let nn = g.n_nodes();
+    let mut live = vec![false; nn];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut any_named_out = false;
+    for a in &g.arcs {
+        if a.dst.is_none() && !is_anon_label(&a.name) {
+            any_named_out = true;
+            if let Some((n, _)) = a.src {
+                if !live[n.0 as usize] {
+                    live[n.0 as usize] = true;
+                    stack.push(n.0 as usize);
+                }
+            }
+        }
+    }
+    if !any_named_out {
+        // An all-drain graph (no named outputs) is pure sink hardware;
+        // there is nothing observable to preserve *or* remove safely.
+        return None;
+    }
+    while let Some(ni) = stack.pop() {
+        for &ia in &g.nodes[ni].ins {
+            if let Some((p, _)) = g.arc(ia).src {
+                if !live[p.0 as usize] {
+                    live[p.0 as usize] = true;
+                    stack.push(p.0 as usize);
+                }
+            }
+        }
+    }
+    let mut kept = live;
+    for n in &g.nodes {
+        if n.ins.iter().any(|&a| g.arc(a).src.is_none()) {
+            kept[n.id.0 as usize] = true;
+        }
+    }
+    loop {
+        let mut changed = false;
+        for n in &g.nodes {
+            let ni = n.id.0 as usize;
+            if kept[ni] {
+                continue;
+            }
+            let feeds_kept = n
+                .outs
+                .iter()
+                .any(|&a| matches!(g.arc(a).dst, Some((d, _)) if kept[d.0 as usize]));
+            let named_in_from_kept = n.ins.iter().any(|&a| {
+                let arc = g.arc(a);
+                !is_anon_label(&arc.name)
+                    && matches!(arc.src, Some((s, _)) if kept[s.0 as usize])
+            });
+            if feeds_kept || named_in_from_kept {
+                kept[ni] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let removed: Vec<usize> = (0..nn).filter(|&i| !kept[i]).collect();
+    if removed.is_empty() {
+        return None;
+    }
+    // Every out-arc of a removed node goes with it (its consumer is
+    // removed too, or it was an anonymous dangle); in-arcs from kept
+    // nodes survive as anonymous drain wires.
+    let mut dead_arcs: Vec<usize> = Vec::new();
+    for a in &g.arcs {
+        if matches!(a.src, Some((s, _)) if !kept[s.0 as usize]) {
+            dead_arcs.push(a.id.0 as usize);
+        }
+    }
+    let mut ed = GraphEditor::new(g);
+    for &ni in &removed {
+        ed.delete_node(ni);
+    }
+    for &ai in &dead_arcs {
+        ed.delete_arc(ai);
+    }
+    Some((
+        ed.finish("dce"),
+        PassDelta {
+            applications: removed.len() as u64,
+            nodes: -(removed.len() as i64),
+            arcs: -(dead_arcs.len() as i64),
+            ..PassDelta::default()
+        },
+    ))
+}

@@ -10,6 +10,7 @@
 //! tier's per-tenant summary ([`serve::serve_table`]) and the
 //! SERVE_*.json trajectory.
 
+pub mod opt;
 pub mod perf;
 pub mod serve;
 

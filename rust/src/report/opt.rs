@@ -1,0 +1,269 @@
+//! The `opt` CLI subcommand's report: before/after structure and
+//! resource estimates for every benchmark graph under the optimizer
+//! pipeline, with built-in output-equivalence verification.
+//!
+//! Every row runs the raw and the optimized graph through `TokenSim`
+//! on a deterministic workload and compares the streams on every
+//! *named* output port (anonymous `sN` dangles are drain wires the
+//! optimizer may remove; see DESIGN.md §9). Rows that fail
+//! verification are flagged and the CLI refuses to write the
+//! OPT_*.json trajectory — numbers from a wrong rewrite must never
+//! land in an artifact.
+
+use crate::bench_defs::{self, BenchId};
+use crate::dfg::{is_anon_label, Graph, Word};
+use crate::estimate::estimate;
+use crate::opt::{optimize, OptLevel, OptReport};
+use crate::sim::{run_token, SimConfig, SimOutcome};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One graph's trip through the pipeline.
+#[derive(Debug)]
+pub struct OptRow {
+    pub name: String,
+    /// `built` (the hand-crafted paper graph) or `lowered` (the mini-C
+    /// frontend's raw output).
+    pub source: &'static str,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    pub arcs_before: usize,
+    pub arcs_after: usize,
+    pub ff_before: u32,
+    pub ff_after: u32,
+    pub lut_before: u32,
+    pub lut_after: u32,
+    pub fmax_before: f64,
+    pub fmax_after: f64,
+    pub report: OptReport,
+    /// Raw and optimized named-output streams were byte-identical and
+    /// the optimized graph met the workload's reference expectations.
+    pub verified: bool,
+}
+
+/// The streams on named output ports only — the optimizer's
+/// equivalence surface.
+pub fn named_outputs(out: &SimOutcome) -> BTreeMap<String, Vec<Word>> {
+    out.outputs
+        .iter()
+        .filter(|(name, _)| !is_anon_label(name))
+        .map(|(name, v)| (name.clone(), v.clone()))
+        .collect()
+}
+
+fn verify(raw: &Graph, opt: &Graph, cfg: &SimConfig, expect: &BTreeMap<String, Vec<Word>>) -> bool {
+    let raw_out = run_token(raw, cfg);
+    let opt_out = run_token(opt, cfg);
+    if named_outputs(&raw_out) != named_outputs(&opt_out) {
+        return false;
+    }
+    expect
+        .iter()
+        .all(|(port, want)| opt_out.stream(port) == want.as_slice())
+}
+
+fn row(
+    name: &str,
+    source: &'static str,
+    raw: Graph,
+    level: OptLevel,
+    cfg: &SimConfig,
+    expect: &BTreeMap<String, Vec<Word>>,
+) -> OptRow {
+    let (og, report) = optimize(&raw, level);
+    let (rb, ra) = (estimate(&raw), estimate(&og));
+    OptRow {
+        name: name.to_string(),
+        source,
+        nodes_before: raw.n_nodes(),
+        nodes_after: og.n_nodes(),
+        arcs_before: raw.n_arcs(),
+        arcs_after: og.n_arcs(),
+        ff_before: rb.ff,
+        ff_after: ra.ff,
+        lut_before: rb.lut,
+        lut_after: ra.lut,
+        fmax_before: rb.fmax_mhz,
+        fmax_after: ra.fmax_mhz,
+        verified: verify(&raw, &og, cfg, expect),
+        report,
+    }
+}
+
+/// Every benchmark graph — the six paper graphs plus SAXPY in their
+/// hand-built form, and the six frontend-lowered (raw, unoptimized)
+/// forms — through the pipeline at `level`.
+pub fn opt_rows(level: OptLevel) -> Vec<OptRow> {
+    let mut rows = Vec::new();
+    for b in BenchId::ALL {
+        let wl = bench_defs::workload(b, 6, 17);
+        let cfg = wl.sim_config();
+        rows.push(row(
+            b.slug(),
+            "built",
+            bench_defs::build(b),
+            level,
+            &cfg,
+            &wl.expect,
+        ));
+    }
+    {
+        let (inject, z) = bench_defs::saxpy::wave(6, 17);
+        let mut cfg = SimConfig::new().max_cycles(200_000);
+        for (p, s) in &inject {
+            cfg = cfg.inject(p, s.clone());
+        }
+        let expect = BTreeMap::from([("z".to_string(), z)]);
+        rows.push(row(
+            "saxpy",
+            "built",
+            bench_defs::saxpy::build(),
+            level,
+            &cfg,
+            &expect,
+        ));
+    }
+    for b in BenchId::ALL {
+        let raw = crate::frontend::compile_with(b.slug(), bench_defs::c_source(b), OptLevel::None)
+            .expect("benchmark C source compiles");
+        let wl = bench_defs::workload(b, 6, 17);
+        let mut cfg = wl.sim_config();
+        cfg.max_cycles *= 4;
+        rows.push(row(b.slug(), "lowered", raw, level, &cfg, &wl.expect));
+    }
+    rows
+}
+
+/// Fixed-width table, one row per graph, estimate deltas included.
+pub fn render_table(rows: &[OptRow], level: OptLevel) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "optimizer pipeline @ {level}");
+    let _ = writeln!(
+        out,
+        "{:<14} {:<8} {:>11} {:>11} {:>13} {:>13} {:>13} {:>9}",
+        "benchmark", "source", "nodes", "arcs", "FF", "LUT", "fmax MHz", "verified"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<14} {:<8} {:>4} -> {:<4} {:>4} -> {:<4} {:>5} -> {:<5} {:>5} -> {:<5} {:>5.1} -> {:<5.1} {:>7}",
+            r.name,
+            r.source,
+            r.nodes_before,
+            r.nodes_after,
+            r.arcs_before,
+            r.arcs_after,
+            r.ff_before,
+            r.ff_after,
+            r.lut_before,
+            r.lut_after,
+            r.fmax_before,
+            r.fmax_after,
+            if r.verified { "yes" } else { "NO" },
+        );
+    }
+    let reduced = rows
+        .iter()
+        .filter(|r| r.nodes_after < r.nodes_before || r.arcs_after < r.arcs_before)
+        .count();
+    let _ = writeln!(
+        out,
+        "{reduced}/{} graphs strictly reduced (nodes or arcs)",
+        rows.len()
+    );
+    out
+}
+
+/// Hand-rolled JSON trajectory (schema `dataflow-accel-opt/v1`), the
+/// artifact CI's `opt-smoke` job uploads.
+pub fn to_json(rows: &[OptRow], level: OptLevel) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"dataflow-accel-opt/v1\",\n");
+    let _ = writeln!(out, "  \"level\": \"{level}\",");
+    let reduced = rows
+        .iter()
+        .filter(|r| r.nodes_after < r.nodes_before || r.arcs_after < r.arcs_before)
+        .count();
+    let _ = writeln!(out, "  \"graphs_reduced\": {reduced},");
+    let _ = writeln!(out, "  \"graphs_total\": {},", rows.len());
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str("    {\n");
+        let _ = writeln!(out, "      \"name\": \"{}\",", r.name);
+        let _ = writeln!(out, "      \"source\": \"{}\",", r.source);
+        let _ = writeln!(out, "      \"nodes_before\": {},", r.nodes_before);
+        let _ = writeln!(out, "      \"nodes_after\": {},", r.nodes_after);
+        let _ = writeln!(out, "      \"arcs_before\": {},", r.arcs_before);
+        let _ = writeln!(out, "      \"arcs_after\": {},", r.arcs_after);
+        let _ = writeln!(out, "      \"ff_before\": {},", r.ff_before);
+        let _ = writeln!(out, "      \"ff_after\": {},", r.ff_after);
+        let _ = writeln!(out, "      \"lut_before\": {},", r.lut_before);
+        let _ = writeln!(out, "      \"lut_after\": {},", r.lut_after);
+        let _ = writeln!(out, "      \"fmax_before\": {:.2},", r.fmax_before);
+        let _ = writeln!(out, "      \"fmax_after\": {:.2},", r.fmax_after);
+        let _ = writeln!(out, "      \"iterations\": {},", r.report.iterations);
+        out.push_str("      \"passes\": [\n");
+        for (j, p) in r.report.passes.iter().enumerate() {
+            let _ = write!(
+                out,
+                "        {{\"pass\": \"{}\", \"applications\": {}, \"nodes_delta\": {}, \
+                 \"arcs_delta\": {}, \"rewrites\": {}}}",
+                p.name, p.applications, p.nodes_delta, p.arcs_delta, p.rewrites
+            );
+            out.push_str(if j + 1 < r.report.passes.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("      ],\n");
+        let _ = writeln!(out, "      \"verified\": {}", r.verified);
+        out.push_str(if i + 1 < rows.len() { "    },\n" } else { "    }\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_verify_and_lowered_graphs_reduce() {
+        let rows = opt_rows(OptLevel::Default);
+        assert_eq!(rows.len(), 13);
+        for r in &rows {
+            assert!(r.verified, "{} ({}) failed verification", r.name, r.source);
+            assert!(
+                r.nodes_after <= r.nodes_before && r.arcs_after <= r.arcs_before,
+                "{} ({}) grew",
+                r.name,
+                r.source
+            );
+        }
+        // Acceptance: every frontend-lowered graph strictly shrinks.
+        for r in rows.iter().filter(|r| r.source == "lowered") {
+            assert!(
+                r.nodes_after < r.nodes_before,
+                "{} (lowered) did not shrink",
+                r.name
+            );
+        }
+    }
+
+    #[test]
+    fn table_and_json_render() {
+        // One benchmark's worth keeps the test fast.
+        let wl = crate::bench_defs::workload(BenchId::Fibonacci, 5, 3);
+        let rows = vec![super::row(
+            "fibonacci",
+            "built",
+            crate::bench_defs::build(BenchId::Fibonacci),
+            OptLevel::Default,
+            &wl.sim_config(),
+            &wl.expect,
+        )];
+        let table = render_table(&rows, OptLevel::Default);
+        assert!(table.contains("fibonacci"), "{table}");
+        let json = to_json(&rows, OptLevel::Default);
+        assert!(json.contains("\"schema\": \"dataflow-accel-opt/v1\""));
+        assert!(json.contains("\"verified\": true"));
+    }
+}

@@ -550,7 +550,9 @@ mod tests {
             "a single wave has nothing to overlap"
         );
         let g = crate::bench_defs::build(BenchId::Max);
-        let small = SessionCache::new(FabricTopology::sized_for_shards(&g, 2), 1, 8);
+        // Size against the optimized graph (what the cache routes).
+        let og = crate::opt::optimize(&g, Default::default()).0;
+        let small = SessionCache::new(FabricTopology::sized_for_shards(&og, 2), 1, 8);
         let (max, _) = small.warm(&g);
         assert_eq!(choose_engine(&max, 4), EngineChoice::Reconfig);
     }

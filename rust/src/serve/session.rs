@@ -23,9 +23,20 @@
 //! Invalidation: the fingerprint is content-addressed, so a changed
 //! graph *is* a different key — entries are never stale, only cold.
 //! Capacity is bounded; least-recently-used entries are evicted.
+//!
+//! **Optimization.** A warm miss runs the graph through the
+//! [`crate::opt`] pipeline before compiling/placing, and everything
+//! downstream (compiled program, route, admission class) is computed
+//! from the *optimized* graph. The cache key stays the **pre-opt**
+//! fingerprint: the same raw submission always warms the same
+//! optimized state, while a pre-optimized submission is different
+//! content and therefore its own entry. [`OptLevel`] is the other
+//! half of the key — warming the same graph at a different level is a
+//! miss, never a silent mismatch.
 
 use crate::dfg::Graph;
 use crate::fabric::{self, FabricTopology, PartitionPlan};
+use crate::opt::{self, OptLevel, OptReport};
 use crate::sim::{overlap_safe, Program};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -63,8 +74,19 @@ impl RoutePlan {
 /// the workload): the one warm, shareable compile/place state.
 #[derive(Debug)]
 pub struct WarmState {
+    /// [`Graph::fingerprint`] of the *submitted* (pre-optimization)
+    /// graph — one half of the cache key.
     pub fingerprint: u64,
+    /// The optimizer level this state was built at — the other half.
+    pub opt_level: OptLevel,
+    /// The optimized graph every engine below runs.
     pub graph: Arc<Graph>,
+    /// What the optimizer did (counters feed observability).
+    pub opt: OptReport,
+    /// The raw graph did *not* fit one fabric instance but the
+    /// optimized graph does — placement rescued by optimization
+    /// (surfaced as the router's `opt-placed` metric).
+    pub opt_rescued_place: bool,
     /// The lane tier's compiled node table ([`Program::compile`]).
     pub program: Arc<Program>,
     pub route: RoutePlan,
@@ -73,14 +95,16 @@ pub struct WarmState {
     pub overlap_safe: bool,
 }
 
+type Key = (u64, OptLevel);
+
 struct Inner {
-    by_fp: BTreeMap<u64, Arc<WarmState>>,
+    by_fp: BTreeMap<Key, Arc<WarmState>>,
     /// Secondary index: a caller-stable hint key (benchmark slug,
-    /// generator seed) → fingerprint, so hot-path hits skip even the
+    /// generator seed) → cache key, so hot-path hits skip even the
     /// graph build.
-    by_hint: BTreeMap<String, u64>,
-    /// Fingerprints, least recently used first.
-    lru: VecDeque<u64>,
+    by_hint: BTreeMap<String, Key>,
+    /// Cache keys, least recently used first.
+    lru: VecDeque<Key>,
 }
 
 /// A bounded, thread-safe cache of [`WarmState`] keyed by
@@ -89,6 +113,9 @@ pub struct SessionCache {
     topo: FabricTopology,
     pool_size: usize,
     cap: usize,
+    /// The level [`SessionCache::warm`]/[`SessionCache::warm_keyed`]
+    /// build at; [`SessionCache::warm_at`] overrides per call.
+    level: OptLevel,
     inner: Mutex<Inner>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -97,12 +124,24 @@ pub struct SessionCache {
 
 impl SessionCache {
     /// A cache for a pool of `pool_size` instances of `topo`, holding
-    /// at most `cap` distinct graphs.
+    /// at most `cap` distinct graphs, optimizing at
+    /// [`OptLevel::Default`].
     pub fn new(topo: FabricTopology, pool_size: usize, cap: usize) -> Self {
+        Self::with_level(topo, pool_size, cap, OptLevel::Default)
+    }
+
+    /// [`SessionCache::new`] with an explicit default optimizer level.
+    pub fn with_level(
+        topo: FabricTopology,
+        pool_size: usize,
+        cap: usize,
+        level: OptLevel,
+    ) -> Self {
         SessionCache {
             topo,
             pool_size: pool_size.max(1),
             cap: cap.max(1),
+            level,
             inner: Mutex::new(Inner {
                 by_fp: BTreeMap::new(),
                 by_hint: BTreeMap::new(),
@@ -112,6 +151,11 @@ impl SessionCache {
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
+    }
+
+    /// The level parameter-less lookups build at.
+    pub fn opt_level(&self) -> OptLevel {
+        self.level
     }
 
     /// The (shared) topology every route in this cache was computed
@@ -141,31 +185,39 @@ impl SessionCache {
         self.len() == 0
     }
 
-    /// Warm state for `g`: a hit returns the cached entry; a miss pays
-    /// `Program::compile` + place/partition once and interns the
-    /// result. The flag is `true` on a hit.
+    /// Warm state for `g` at the cache's default level: a hit returns
+    /// the cached entry; a miss pays optimize + `Program::compile` +
+    /// place/partition once and interns the result. The flag is `true`
+    /// on a hit.
     pub fn warm(&self, g: &Graph) -> (Arc<WarmState>, bool) {
-        let fp = g.fingerprint();
+        self.warm_at(g, self.level)
+    }
+
+    /// [`SessionCache::warm`] at an explicit [`OptLevel`]. The level is
+    /// part of the cache key: the same graph at a different level is a
+    /// miss with its own entry.
+    pub fn warm_at(&self, g: &Graph, level: OptLevel) -> (Arc<WarmState>, bool) {
+        let key = (g.fingerprint(), level);
         {
             let mut inner = self.inner.lock().unwrap();
-            if let Some(state) = inner.by_fp.get(&fp).cloned() {
-                touch(&mut inner.lru, fp);
+            if let Some(state) = inner.by_fp.get(&key).cloned() {
+                touch(&mut inner.lru, key);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return (state, true);
             }
         }
-        // Build outside the lock: compile/place can be slow, and the
-        // computation is idempotent (a racing builder just loses the
-        // insert).
-        let state = Arc::new(self.build_state(fp, g));
+        // Build outside the lock: optimize/compile/place can be slow,
+        // and the computation is idempotent (a racing builder just
+        // loses the insert).
+        let state = Arc::new(self.build_state(key, g));
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap();
-        if let Some(existing) = inner.by_fp.get(&fp).cloned() {
-            touch(&mut inner.lru, fp);
+        if let Some(existing) = inner.by_fp.get(&key).cloned() {
+            touch(&mut inner.lru, key);
             return (existing, false);
         }
-        inner.by_fp.insert(fp, Arc::clone(&state));
-        inner.lru.push_back(fp);
+        inner.by_fp.insert(key, Arc::clone(&state));
+        inner.lru.push_back(key);
         while inner.by_fp.len() > self.cap {
             if let Some(old) = inner.lru.pop_front() {
                 inner.by_fp.remove(&old);
@@ -198,22 +250,27 @@ impl SessionCache {
         let g = build();
         let (state, hit) = self.warm(&g);
         let mut inner = self.inner.lock().unwrap();
-        inner.by_hint.insert(hint.to_string(), state.fingerprint);
+        inner
+            .by_hint
+            .insert(hint.to_string(), (state.fingerprint, state.opt_level));
         (state, hit)
     }
 
-    fn build_state(&self, fp: u64, g: &Graph) -> WarmState {
-        let route = if self.topo.fits(g) {
+    fn build_state(&self, key: Key, g: &Graph) -> WarmState {
+        let (fp, level) = key;
+        let (og, report) = opt::optimize(g, level);
+        let fits_opt = self.topo.fits(&og);
+        let route = if fits_opt {
             RoutePlan::Placed
         } else {
-            match fabric::partition(g, &self.topo) {
+            match fabric::partition(&og, &self.topo) {
                 Ok(plan) if self.pool_size >= plan.n_shards() => RoutePlan::Sharded(plan),
                 Ok(plan) => RoutePlan::Reconfig(plan),
                 Err(e) => {
                     eprintln!(
                         "serve: `{}` is unpartitionable on `{}` ({e}); \
                          falling back to infinite-fabric simulation",
-                        g.name, self.topo.name
+                        og.name, self.topo.name
                     );
                     RoutePlan::Fallback
                 }
@@ -221,10 +278,13 @@ impl SessionCache {
         };
         WarmState {
             fingerprint: fp,
-            graph: Arc::new(g.clone()),
-            program: Arc::new(Program::compile(g)),
+            opt_level: level,
+            opt_rescued_place: fits_opt && report.changed() && !self.topo.fits(g),
+            program: Arc::new(Program::compile(&og)),
             route,
-            overlap_safe: overlap_safe(g),
+            overlap_safe: overlap_safe(&og),
+            opt: report,
+            graph: Arc::new(og),
         }
     }
 
@@ -240,11 +300,11 @@ impl SessionCache {
     }
 }
 
-fn touch(lru: &mut VecDeque<u64>, fp: u64) {
-    if let Some(i) = lru.iter().position(|&x| x == fp) {
+fn touch(lru: &mut VecDeque<Key>, key: Key) {
+    if let Some(i) = lru.iter().position(|&x| x == key) {
         lru.remove(i);
     }
-    lru.push_back(fp);
+    lru.push_back(key);
 }
 
 #[cfg(test)]
@@ -303,7 +363,11 @@ mod tests {
     #[test]
     fn undersized_topology_routes_off_the_placed_path() {
         let g = bench_defs::build(BenchId::Max);
-        let topo = FabricTopology::sized_for_shards(&g, 2);
+        // Size the fabric against the *optimized* graph — that is what
+        // the cache routes, and `sized_for_shards` guarantees it will
+        // not fit whole.
+        let og = crate::opt::optimize(&g, OptLevel::Default).0;
+        let topo = FabricTopology::sized_for_shards(&og, 2);
         // Two instances: spatial sharding.
         let c2 = SessionCache::new(topo.clone(), 4, 8);
         let (s, _) = c2.warm(&g);
@@ -312,6 +376,75 @@ mod tests {
         let c1 = SessionCache::new(topo, 1, 8);
         let (s, _) = c1.warm(&g);
         assert!(matches!(s.route, RoutePlan::Reconfig(_)));
+    }
+
+    #[test]
+    fn opt_level_participates_in_the_cache_key() {
+        let c = cache(8);
+        let g = bench_defs::build(BenchId::DotProd);
+        let (_, h0) = c.warm_at(&g, OptLevel::Default);
+        assert!(!h0);
+        let (_, h1) = c.warm_at(&g, OptLevel::Default);
+        assert!(h1);
+        let (s2, h2) = c.warm_at(&g, OptLevel::Aggressive);
+        assert!(!h2, "changing the level must be a miss");
+        assert_eq!(s2.opt_level, OptLevel::Aggressive);
+        assert_eq!(c.misses(), 2);
+        assert_eq!(c.len(), 2, "both levels stay warm side by side");
+        assert_eq!(c.opt_level(), OptLevel::Default);
+    }
+
+    #[test]
+    fn cache_key_is_the_pre_opt_fingerprint() {
+        // The same raw submission always hits the same entry even
+        // though the cached graph is the optimized one; a
+        // pre-optimized submission is different content, hence its own
+        // key.
+        let c = cache(8);
+        let raw = crate::frontend::compile_with(
+            "fib",
+            bench_defs::c_source(BenchId::Fibonacci),
+            OptLevel::None,
+        )
+        .unwrap();
+        let (s, hit) = c.warm(&raw);
+        assert!(!hit);
+        assert_eq!(s.fingerprint, raw.fingerprint());
+        assert!(s.graph.n_nodes() < raw.n_nodes(), "lowered fib must shrink");
+        assert_ne!(s.graph.fingerprint(), raw.fingerprint());
+        let (s2, hit2) = c.warm(&raw);
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&s, &s2));
+        let (s3, hit3) = c.warm(&s.graph);
+        assert!(!hit3, "optimized content is a different key");
+        assert_eq!(s3.fingerprint, s.graph.fingerprint());
+    }
+
+    #[test]
+    fn optimization_rescues_placement_on_tight_fabrics() {
+        let raw = crate::frontend::compile_with(
+            "fib",
+            bench_defs::c_source(BenchId::Fibonacci),
+            OptLevel::None,
+        )
+        .unwrap();
+        let og = crate::opt::optimize(&raw, OptLevel::Default).0;
+        assert!(og.n_nodes() < raw.n_nodes());
+        // A fabric sized exactly for the optimized graph: the raw graph
+        // overflows it (strictly more nodes ⇒ strictly more arcs than
+        // the channel pool), the optimized graph places whole.
+        let topo = FabricTopology::sized_for_shards(&og, 1);
+        assert!(topo.fits(&og));
+        assert!(!topo.fits(&raw));
+        let c = SessionCache::new(topo, 2, 8);
+        let (s, _) = c.warm(&raw);
+        assert!(matches!(s.route, RoutePlan::Placed));
+        assert!(s.opt_rescued_place, "placement only succeeds optimized");
+        assert!(s.opt.changed());
+        // The already-optimal graph places on its own merits.
+        let (s2, _) = c.warm(&og);
+        assert!(matches!(s2.route, RoutePlan::Placed));
+        assert!(!s2.opt_rescued_place);
     }
 
     #[test]

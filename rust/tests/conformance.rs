@@ -21,7 +21,10 @@
 //! `PROPTEST_CASES` (see `.github/workflows/ci.yml`).
 
 use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::dfg::is_anon_label;
 use dataflow_accel::fabric::{self, FabricTopology};
+use dataflow_accel::frontend;
+use dataflow_accel::opt::{self, optimize, OptLevel};
 use dataflow_accel::sim::{
     run_dynamic, run_fsm, run_lanes, run_stream, run_stream_lanes, run_token, Program, SimConfig,
     StreamSession, WaveInput, WaveMode,
@@ -30,6 +33,7 @@ use dataflow_accel::util::proptest::{
     check, random_dfg, random_dfg_with, random_workload, GenCfg, GenGraph, PropCfg,
 };
 use dataflow_accel::util::Rng;
+use dataflow_accel::Graph;
 use std::collections::BTreeMap;
 
 fn config_for(wl: &BTreeMap<String, Vec<i16>>, max_cycles: u64) -> SimConfig {
@@ -577,4 +581,342 @@ fn prop_dynamic_bounds_agree_on_random_dfgs() {
             Ok(())
         },
     );
+}
+
+// ---- optimizer pass-level differential harness -------------------------
+//
+// The optimizer's contract (DESIGN.md §9): for every pass individually
+// *and* the full pipeline, on every execution that quiesces on the raw
+// graph, the streams collected at **named** output ports are
+// byte-identical between the raw and the optimized graph under every
+// engine, and the named external port set is preserved exactly.
+// Anonymous `sN` dangles are drain wires the optimizer may remove, so
+// they are excluded from the comparison; non-quiescing executions are
+// excluded because buffer-capacity changes (a copy is a one-place
+// buffer) are only unobservable at quiescence — the same boundary the
+// cross-engine contract above draws (`prop_engines_agree_*`).
+//
+// Everything here is named `opt_*` so CI's `opt-smoke` job can run
+// exactly this subset (`cargo test --test conformance opt_`).
+
+/// Every standalone pass plus the two pipelines.
+const OPT_TRANSFORMS: [&str; 8] = [
+    "canonicalize",
+    "fold-consts",
+    "strength",
+    "elide-copies",
+    "cse",
+    "dce",
+    "pipeline:default",
+    "pipeline:aggressive",
+];
+
+fn apply_transform(g: &Graph, t: &str) -> Graph {
+    match t {
+        "pipeline:default" => optimize(g, OptLevel::Default).0,
+        "pipeline:aggressive" => optimize(g, OptLevel::Aggressive).0,
+        pass => opt::run_pass(g, pass).0,
+    }
+}
+
+fn named_streams(outputs: &BTreeMap<String, Vec<i16>>) -> BTreeMap<&str, &Vec<i16>> {
+    outputs
+        .iter()
+        .filter(|(k, _)| !is_anon_label(k))
+        .map(|(k, v)| (k.as_str(), v))
+        .collect()
+}
+
+/// The 13-graph suite: the seven hand-built benchmark graphs (six
+/// paper loop schemas + SAXPY) and the six frontend-lowered raw forms,
+/// each with one deterministic workload.
+fn opt_suite() -> Vec<(String, Graph, SimConfig)> {
+    let mut suite = Vec::new();
+    for b in BenchId::ALL {
+        let wl = bench_defs::workload(b, 4, 9);
+        suite.push((
+            format!("built:{}", b.slug()),
+            bench_defs::build(b),
+            wl.sim_config(),
+        ));
+        let raw = frontend::compile_with(b.slug(), bench_defs::c_source(b), OptLevel::None)
+            .unwrap_or_else(|e| panic!("{}: {e}", b.slug()));
+        let mut cfg = wl.sim_config();
+        cfg.max_cycles *= 4;
+        suite.push((format!("lowered:{}", b.slug()), raw, cfg));
+    }
+    let (inject, _z) = bench_defs::saxpy::wave(5, 9);
+    let mut cfg = SimConfig::new().max_cycles(200_000);
+    for (p, s) in &inject {
+        cfg = cfg.inject(p, s.clone());
+    }
+    suite.push(("built:saxpy".to_string(), bench_defs::saxpy::build(), cfg));
+    suite
+}
+
+/// Each pass individually: token and lane engines on the transformed
+/// graph reproduce the raw graph's named-output streams on all 13
+/// suite graphs.
+#[test]
+fn opt_each_pass_preserves_benchmark_outputs() {
+    let mut covered = 0usize;
+    for (name, g, cfg) in opt_suite() {
+        let base = run_token(&g, &cfg);
+        if !base.quiescent {
+            // Outside the equivalence contract (see module comment);
+            // benchmark workloads quiesce in practice, so this is a
+            // safety valve, not an expected path.
+            eprintln!("opt harness: {name} raw run did not quiesce; skipped");
+            continue;
+        }
+        covered += 1;
+        for t in OPT_TRANSFORMS {
+            let tg = apply_transform(&g, t);
+            let tok = run_token(&tg, &cfg);
+            assert_eq!(
+                named_streams(&tok.outputs),
+                named_streams(&base.outputs),
+                "{name} / {t}: token engine diverged"
+            );
+            let prog = Program::compile(&tg);
+            let lanes = run_lanes(&prog, std::slice::from_ref(&cfg));
+            assert_eq!(
+                named_streams(&lanes[0].outputs),
+                named_streams(&base.outputs),
+                "{name} / {t}: lane engine diverged"
+            );
+        }
+    }
+    assert!(covered >= 8, "only {covered}/13 suite graphs quiesced");
+}
+
+/// The full pipelines across the remaining engine matrix: streamed
+/// (resident session), sharded, and time-multiplexed execution of the
+/// optimized graph reproduce the raw graph's named-output streams.
+#[test]
+fn opt_pipeline_preserves_outputs_across_stream_shard_reconfig() {
+    let mut fabric_covered = 0usize;
+    for (name, g, cfg) in opt_suite() {
+        let base = run_token(&g, &cfg);
+        if !base.quiescent {
+            eprintln!("opt harness: {name} raw run did not quiesce; skipped");
+            continue;
+        }
+        for t in ["pipeline:default", "pipeline:aggressive"] {
+            let tg = apply_transform(&g, t);
+            // Streamed: two successive waves of the same workload
+            // through one resident session, each byte-identical to the
+            // raw isolated run.
+            let waves: Vec<WaveInput> = vec![cfg.inject.clone(), cfg.inject.clone()];
+            let (outs, _m) = run_stream(&tg, &waves, cfg.max_cycles * 2);
+            for (i, out) in outs.iter().enumerate() {
+                assert_eq!(
+                    named_streams(&out.outputs),
+                    named_streams(&base.outputs),
+                    "{name} / {t}: streamed wave {i} diverged"
+                );
+            }
+            // Sharded + reconfig on a fabric sized for the optimized
+            // graph (graphs the KL partitioner cannot split at k=2 are
+            // skipped; the coverage floor below keeps the benchmark
+            // graphs honest).
+            let topo = FabricTopology::sized_for_shards(&tg, 2);
+            let plan = match fabric::partition(&tg, &topo) {
+                Ok(plan) => plan,
+                Err(e) => {
+                    eprintln!("opt harness: {name} / {t}: unpartitionable ({e}); skipped");
+                    continue;
+                }
+            };
+            fabric_covered += 1;
+            let waves: Vec<WaveInput> = vec![cfg.inject.clone()];
+            let sharded = fabric::run_sharded_waves(&plan, &waves, cfg.max_cycles);
+            assert_eq!(
+                named_streams(&sharded[0].outputs),
+                named_streams(&base.outputs),
+                "{name} / {t}: sharded diverged"
+            );
+            let (reconf, _stats) = fabric::run_reconfig_waves(&plan, &topo, &waves, cfg.max_cycles);
+            assert_eq!(
+                named_streams(&reconf[0].outputs),
+                named_streams(&base.outputs),
+                "{name} / {t}: reconfig diverged"
+            );
+        }
+    }
+    assert!(
+        fabric_covered >= 10,
+        "only {fabric_covered} sharded/reconfig comparisons ran"
+    );
+}
+
+/// Acceptance: the pipeline strictly reduces every frontend-lowered
+/// benchmark graph (nodes *and* arcs), never grows a hand-built one,
+/// and the report's per-pass deltas reconcile with the structural
+/// diff.
+#[test]
+fn opt_pipeline_strictly_reduces_all_lowered_benchmarks() {
+    let mut lowered_reduced = 0usize;
+    for (name, g, _cfg) in opt_suite() {
+        let (og, report) = optimize(&g, OptLevel::Default);
+        assert!(
+            og.n_nodes() <= g.n_nodes() && og.n_arcs() <= g.n_arcs(),
+            "{name}: pipeline grew the graph"
+        );
+        let pass_nodes: i64 = report.passes.iter().map(|p| p.nodes_delta).sum();
+        assert_eq!(-pass_nodes, report.nodes_removed(), "{name}: bookkeeping");
+        if name.starts_with("lowered:") {
+            assert!(
+                og.n_nodes() < g.n_nodes() && og.n_arcs() < g.n_arcs(),
+                "{name}: lowered graph did not strictly shrink ({} -> {} nodes)",
+                g.n_nodes(),
+                og.n_nodes()
+            );
+            lowered_reduced += 1;
+        }
+    }
+    assert_eq!(lowered_reduced, 6, "all six lowered benchmarks reduce");
+}
+
+/// Pass-level differential property on seeded random DFGs: for every
+/// pass and both pipelines, quiescing workloads see byte-identical
+/// named-output streams on the token and lane engines, and the
+/// serialized lane-stream path agrees per wave.
+#[test]
+fn opt_prop_passes_preserve_random_dfg_outputs() {
+    check(
+        "optimized == raw (named ports) on quiescing random DFGs",
+        PropCfg::from_env(32, 0x0C0D_E5E5),
+        |r: &mut Rng| {
+            let gg = random_dfg(r, true);
+            let wl = random_workload(r, &gg, 1 + r.below(3));
+            (gg, wl)
+        },
+        |(gg, wl): &(GenGraph, BTreeMap<String, Vec<i16>>)| {
+            let g = &gg.graph;
+            let cfg = config_for(wl, 200_000);
+            let base = run_token(g, &cfg);
+            if !base.quiescent {
+                // Stranding workloads are outside the optimizer's
+                // equivalence contract (capacity differences become
+                // observable) — same boundary as the cross-engine
+                // comparisons.
+                return Ok(());
+            }
+            for t in OPT_TRANSFORMS {
+                let tg = apply_transform(g, t);
+                let tok = run_token(&tg, &cfg);
+                if named_streams(&tok.outputs) != named_streams(&base.outputs) {
+                    return Err(format!(
+                        "{t}: token diverged: {:?} != {:?}",
+                        tok.outputs, base.outputs
+                    ));
+                }
+                let prog = Program::compile(&tg);
+                let lanes = run_lanes(&prog, std::slice::from_ref(&cfg));
+                if named_streams(&lanes[0].outputs) != named_streams(&base.outputs) {
+                    return Err(format!("{t}: lanes diverged"));
+                }
+            }
+            // The serialized lane-stream path over the aggressive
+            // pipeline's output, two waves, each equal to the raw
+            // isolated run.
+            let tg = apply_transform(g, "pipeline:aggressive");
+            let waves = vec![wl.clone(), wl.clone()];
+            let streamed = run_stream_lanes(&tg, &waves, 200_000);
+            for (i, out) in streamed.iter().enumerate() {
+                if named_streams(&out.outputs) != named_streams(&base.outputs) {
+                    return Err(format!("aggressive lane-stream wave {i} diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Metamorphic properties: `OptLevel::None` is the identity; both
+/// pipelines are idempotent to the byte at their fixpoint; the named
+/// external port set (input ports and named output ports) is
+/// preserved exactly at every level.
+#[test]
+fn opt_metamorphic_identity_idempotence_and_port_preservation() {
+    fn port_sets(g: &Graph) -> (Vec<String>, Vec<String>) {
+        let mut ins: Vec<String> = g
+            .input_ports()
+            .iter()
+            .map(|&a| g.arc(a).name.clone())
+            .filter(|n| !is_anon_label(n))
+            .collect();
+        let mut outs: Vec<String> = g
+            .output_ports()
+            .iter()
+            .map(|&a| g.arc(a).name.clone())
+            .filter(|n| !is_anon_label(n))
+            .collect();
+        ins.sort();
+        outs.sort();
+        (ins, outs)
+    }
+    let mut graphs: Vec<(String, Graph)> = opt_suite()
+        .into_iter()
+        .map(|(n, g, _)| (n, g))
+        .collect();
+    let mut rng = Rng::new(0x1DE_A7E5);
+    for i in 0..4 {
+        graphs.push((format!("random:{i}"), random_dfg(&mut rng, i % 2 == 0).graph));
+    }
+    for (name, g) in &graphs {
+        let (none, none_report) = optimize(g, OptLevel::None);
+        assert_eq!(
+            dataflow_accel::asm::print(&none),
+            dataflow_accel::asm::print(g),
+            "{name}: OptLevel::None must be the identity"
+        );
+        assert!(!none_report.changed());
+        for level in [OptLevel::Default, OptLevel::Aggressive] {
+            let (o1, _) = optimize(g, level);
+            let (o2, r2) = optimize(&o1, level);
+            assert!(!r2.changed(), "{name} @ {level}: not idempotent");
+            assert_eq!(
+                dataflow_accel::asm::print(&o1),
+                dataflow_accel::asm::print(&o2),
+                "{name} @ {level}: fixpoint not byte-stable"
+            );
+            assert_eq!(
+                port_sets(g),
+                port_sets(&o1),
+                "{name} @ {level}: external port set changed"
+            );
+        }
+    }
+}
+
+/// Optimized graphs survive the assembler round trip and re-optimizing
+/// the re-parsed graph is a fixed point (print → parse → re-optimize
+/// changes nothing, to the byte).
+#[test]
+fn opt_asm_roundtrip_reoptimize_is_a_fixed_point() {
+    for b in BenchId::ALL {
+        for level in [OptLevel::Default, OptLevel::Aggressive] {
+            let raw = frontend::compile_with(b.slug(), bench_defs::c_source(b), OptLevel::None)
+                .unwrap();
+            let (og, _) = optimize(&raw, level);
+            let text = dataflow_accel::asm::print(&og);
+            let g2 = dataflow_accel::asm::parse(b.slug(), &text)
+                .unwrap_or_else(|e| panic!("{} @ {level}: re-parse failed: {e}", b.slug()));
+            assert_eq!(g2.n_nodes(), og.n_nodes(), "{} @ {level}", b.slug());
+            let (g3, r3) = optimize(&g2, level);
+            assert!(
+                !r3.changed(),
+                "{} @ {level}: re-optimize after round trip rewrote the graph",
+                b.slug()
+            );
+            assert_eq!(
+                dataflow_accel::asm::print(&g3),
+                text,
+                "{} @ {level}: print∘parse∘optimize not a fixed point",
+                b.slug()
+            );
+        }
+    }
 }

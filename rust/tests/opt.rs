@@ -1,0 +1,319 @@
+//! Optimizer unit suite: each pass's targeted before/after graph
+//! shapes, report bookkeeping, and the rewrites the pipeline must
+//! *refuse* (div-by-power-of-two, identity elision — both rate or
+//! rounding changes in this word semantics). The cross-engine
+//! differential obligations live in `rust/tests/conformance.rs`.
+
+use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::dfg::{Graph, GraphBuilder, Op};
+use dataflow_accel::frontend;
+use dataflow_accel::opt::{optimize, run_pass, OptLevel};
+use dataflow_accel::sim::{run_token, SimConfig};
+
+fn census(g: &Graph, op: &str) -> usize {
+    g.op_census().get(op).copied().unwrap_or(0)
+}
+
+#[test]
+fn fold_consts_collapses_a_constant_subgraph() {
+    // (3 + 4) * x over a const chain: the add folds to const 7; the
+    // chain is exact (one token per reset, before and after).
+    let mut b = GraphBuilder::new("t");
+    let c3 = b.constant(3);
+    let c4 = b.constant(4);
+    let s = b.op2(Op::Add, c3, c4);
+    let x = b.input_port("x");
+    let z = b.output_port("z");
+    b.node(Op::Mul, &[s, x], &[z]);
+    let g = b.finish().unwrap();
+
+    let (opt, stats) = run_pass(&g, "fold-consts");
+    assert_eq!(census(&opt, "add"), 0);
+    assert_eq!(census(&opt, "const"), 1);
+    assert_eq!(opt.n_nodes(), g.n_nodes() - 2);
+    assert_eq!(stats.nodes_delta, -2);
+    assert_eq!(stats.arcs_delta, -2);
+    let cfg = SimConfig::new().inject("x", vec![6]);
+    assert_eq!(run_token(&opt, &cfg).stream("z"), &[42]);
+}
+
+#[test]
+fn fold_consts_cascades_through_chains() {
+    // not(3 > 4) folds in two rounds of the pass's own fixpoint.
+    let mut b = GraphBuilder::new("t");
+    let c3 = b.constant(3);
+    let c4 = b.constant(4);
+    let d = b.op2(Op::IfGt, c3, c4);
+    let n = b.node(Op::Not, &[d], &[]);
+    let nd = b.out_arc(n, 0);
+    let x = b.input_port("x");
+    let z = b.output_port("z");
+    b.node(Op::And, &[nd, x], &[z]);
+    let g = b.finish().unwrap();
+
+    let (opt, stats) = run_pass(&g, "fold-consts");
+    assert_eq!(opt.n_nodes(), 2, "const + and survive");
+    assert_eq!(stats.applications, 2, "decider fold then not fold");
+    let cfg = SimConfig::new().inject("x", vec![-1]);
+    // !(3>4) = !0 = -1 (bitwise not of 0x0000); -1 & -1 = -1.
+    assert_eq!(run_token(&opt, &cfg).stream("z"), &[-1]);
+}
+
+#[test]
+fn copy_chain_of_length_k_collapses_to_zero() {
+    let mut b = GraphBuilder::new("t");
+    let a = b.input_port("a");
+    let mut cur = a;
+    for _ in 0..4 {
+        let (next, _spill) = b.copy(cur); // spill dangles anonymously
+        cur = next;
+    }
+    let z = b.output_port("z");
+    b.node(Op::Not, &[cur], &[z]);
+    let g = b.finish().unwrap();
+    assert_eq!(census(&g, "copy"), 4);
+
+    let (opt, stats) = run_pass(&g, "elide-copies");
+    assert_eq!(census(&opt, "copy"), 0);
+    assert_eq!(opt.n_nodes(), 1);
+    assert_eq!(stats.applications, 4);
+    assert_eq!(stats.nodes_delta, -4);
+    assert_eq!(stats.arcs_delta, -8);
+    assert!(opt.arc_by_name("a").is_some());
+    assert!(opt.arc_by_name("z").is_some());
+    let cfg = SimConfig::new().inject("a", vec![0]);
+    assert_eq!(run_token(&opt, &cfg).stream("z"), &[-1]);
+}
+
+#[test]
+fn port_to_port_repeater_copy_is_not_elided() {
+    // in -> copy -> out: the copy is the only node; eliding it would
+    // leave a disconnected pin pair. The pipeline must keep it.
+    let mut b = GraphBuilder::new("t");
+    let a = b.input_port("a");
+    let n = b.node(Op::Copy, &[a], &[]);
+    let out = b.out_arc(n, 0);
+    b.rename_arc(out, "z");
+    let g = b.finish().unwrap();
+    let (opt, report) = optimize(&g, OptLevel::Aggressive);
+    assert_eq!(census(&opt, "copy"), 1);
+    assert!(!report.changed());
+    let cfg = SimConfig::new().inject("a", vec![5, 6]);
+    assert_eq!(run_token(&opt, &cfg).stream("z"), &[5, 6]);
+}
+
+#[test]
+fn cse_merges_duplicate_pure_nodes() {
+    // x fanned to two `x + 5` computations (distinct const nodes, as
+    // the frontend would emit them): aggressive CSE keeps one add and
+    // fans its result; cleanup collects the orphaned operand tree.
+    let mut b = GraphBuilder::new("t");
+    let x = b.input_port("x");
+    let (x1, x2) = b.copy(x);
+    let c1 = b.constant(5);
+    let c2 = b.constant(5);
+    let z0 = b.output_port("z0");
+    let z1 = b.output_port("z1");
+    b.node(Op::Add, &[x1, c1], &[z0]);
+    b.node(Op::Add, &[c2, x2], &[z1]); // operands swapped on purpose
+    let g = b.finish().unwrap();
+
+    let (opt, report) = optimize(&g, OptLevel::Aggressive);
+    assert_eq!(census(&opt, "add"), 1, "duplicate add must merge");
+    assert_eq!(census(&opt, "const"), 1, "orphaned const collected");
+    assert_eq!(census(&opt, "copy"), 1, "one fan-out copy remains");
+    assert_eq!(opt.n_nodes(), 3);
+    assert!(report.passes.iter().any(|p| p.name == "cse" && p.applications > 0));
+    let cfg = SimConfig::new().inject("x", vec![37]);
+    let out = run_token(&opt, &cfg);
+    assert_eq!(out.stream("z0"), &[42]);
+    assert_eq!(out.stream("z1"), &[42]);
+
+    // Default level never runs CSE.
+    let (def, report) = optimize(&g, OptLevel::Default);
+    assert_eq!(census(&def, "add"), 2);
+    assert!(report.passes.iter().all(|p| p.name != "cse"));
+}
+
+#[test]
+fn dce_removes_a_dead_branch_arm() {
+    // branch TRUE arm reaches the named output; the FALSE arm feeds a
+    // `not` whose result dangles anonymously — dead, removable.
+    let mut b = GraphBuilder::new("t");
+    let ctl = b.input_port("ctl");
+    let data = b.input_port("data");
+    let br = b.node(Op::Branch, &[ctl, data], &[]);
+    let t_arm = b.out_arc(br, 0);
+    let f_arm = b.out_arc(br, 1);
+    let z = b.output_port("z");
+    b.node(Op::Not, &[t_arm], &[z]);
+    b.node(Op::Not, &[f_arm], &[]); // dead arm; output dangles
+    let g = b.finish().unwrap();
+
+    let (opt, stats) = run_pass(&g, "dce");
+    assert_eq!(census(&opt, "not"), 1);
+    assert_eq!(stats.nodes_delta, -1);
+    assert_eq!(opt.n_nodes(), g.n_nodes() - 1);
+    // The branch itself stays (it still routes), its false output
+    // dangling as an anonymous drain.
+    assert_eq!(census(&opt, "branch"), 1);
+    let cfg = SimConfig::new()
+        .inject("ctl", vec![1, 0, 1])
+        .inject("data", vec![1, 2, 3]);
+    assert_eq!(run_token(&opt, &cfg).stream("z"), &[-2, -4]);
+}
+
+#[test]
+fn dce_keeps_port_fed_sinks() {
+    // A port-fed drain chain must survive: deleting it would leave the
+    // input port as a disconnected pin that *echoes* injections.
+    let mut b = GraphBuilder::new("t");
+    let a = b.input_port("a");
+    b.node(Op::Not, &[a], &[]); // drains `a`, result dangles
+    let x = b.input_port("x");
+    let z = b.output_port("z");
+    b.node(Op::Not, &[x], &[z]);
+    let g = b.finish().unwrap();
+    let (opt, _) = optimize(&g, OptLevel::Aggressive);
+    assert_eq!(census(&opt, "not"), 2, "port-fed sink survives");
+    let cfg = SimConfig::new().inject("a", vec![1]).inject("x", vec![2]);
+    let out = run_token(&opt, &cfg);
+    assert_eq!(out.stream("z"), &[-3]);
+    assert!(out.stream("a").is_empty(), "no echo of `a` injections");
+}
+
+#[test]
+fn strength_reduces_mul_by_power_of_two_only() {
+    let build = |k: i16, op: Op| {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input_port("x");
+        let c = b.constant(k);
+        let z = b.output_port("z");
+        b.node(op, &[x, c], &[z]);
+        b.finish().unwrap()
+    };
+    // mul by 8 → shl by 3, value-exact including negatives and wrap.
+    let g = build(8, Op::Mul);
+    let (opt, stats) = run_pass(&g, "strength");
+    assert_eq!(census(&opt, "mul"), 0);
+    assert_eq!(census(&opt, "shl"), 1);
+    assert_eq!(stats.rewrites, 1);
+    assert_eq!(stats.nodes_delta, 0);
+    for x in [0i16, 1, -1, 5, -4097, i16::MAX, i16::MIN] {
+        let cfg = SimConfig::new().inject("x", vec![x]);
+        assert_eq!(
+            run_token(&opt, &cfg).stream("z"),
+            &[x.wrapping_mul(8)],
+            "x={x}"
+        );
+    }
+    // mul by 3 is untouched.
+    let g = build(3, Op::Mul);
+    assert_eq!(census(&run_pass(&g, "strength").0, "mul"), 1);
+    // div by 2 must NOT become shr: wrapping_div truncates toward
+    // zero, shr floors — they disagree on negative odd dividends.
+    let g = build(2, Op::Div);
+    let (opt, _) = optimize(&g, OptLevel::Aggressive);
+    assert_eq!(census(&opt, "div"), 1);
+    assert_eq!(census(&opt, "shr"), 0);
+    let cfg = SimConfig::new().inject("x", vec![-3]);
+    assert_eq!(run_token(&opt, &cfg).stream("z"), &[-1], "-3/2 truncates");
+}
+
+#[test]
+fn strength_handles_const_in_either_operand_slot() {
+    // 2 * x (const first) swaps operands before rewriting to shl.
+    let mut b = GraphBuilder::new("t");
+    let c = b.constant(2);
+    let x = b.input_port("x");
+    let z = b.output_port("z");
+    b.node(Op::Mul, &[c, x], &[z]);
+    let g = b.finish().unwrap();
+    let (opt, _) = run_pass(&g, "strength");
+    assert_eq!(census(&opt, "shl"), 1);
+    let cfg = SimConfig::new().inject("x", vec![-7]);
+    assert_eq!(run_token(&opt, &cfg).stream("z"), &[-14]);
+}
+
+#[test]
+fn identity_ops_are_not_elided() {
+    // `x + 0` pairs ONE const token with ONE x token — it is a
+    // one-shot gate, not a wire. Rewriting it away would change how
+    // many tokens flow. The pipeline must keep the add.
+    let mut b = GraphBuilder::new("t");
+    let x = b.input_port("x");
+    let c = b.constant(0);
+    let z = b.output_port("z");
+    b.node(Op::Add, &[x, c], &[z]);
+    let g = b.finish().unwrap();
+    let (opt, _) = optimize(&g, OptLevel::Aggressive);
+    assert_eq!(census(&opt, "add"), 1);
+    let cfg = SimConfig::new().inject("x", vec![7, 8, 9]);
+    let out = run_token(&opt, &cfg);
+    assert_eq!(out.stream("z"), &[7], "one const token = one pairing");
+    assert!(!out.quiescent, "later x tokens strand, as in the raw graph");
+}
+
+#[test]
+fn canonicalize_masks_shift_counts() {
+    let mut b = GraphBuilder::new("t");
+    let x = b.input_port("x");
+    let c = b.constant(17); // & 0xf == 1
+    let z = b.output_port("z");
+    b.node(Op::Shl, &[x, c], &[z]);
+    let g = b.finish().unwrap();
+    let (opt, stats) = run_pass(&g, "canonicalize");
+    assert_eq!(stats.rewrites, 1);
+    let konst = opt
+        .nodes
+        .iter()
+        .find_map(|n| match n.op {
+            Op::Const(v) => Some(v),
+            _ => None,
+        })
+        .unwrap();
+    assert_eq!(konst, 1);
+    let cfg = SimConfig::new().inject("x", vec![3]);
+    assert_eq!(run_token(&opt, &cfg).stream("z"), &[6]);
+}
+
+#[test]
+fn report_counts_match_the_structural_diff() {
+    for level in [OptLevel::Default, OptLevel::Aggressive] {
+        for bench in BenchId::ALL {
+            let g = frontend::compile_with(
+                bench.slug(),
+                bench_defs::c_source(bench),
+                OptLevel::None,
+            )
+            .unwrap();
+            let (opt, report) = optimize(&g, level);
+            let pass_nodes: i64 = report.passes.iter().map(|p| p.nodes_delta).sum();
+            let pass_arcs: i64 = report.passes.iter().map(|p| p.arcs_delta).sum();
+            assert_eq!(
+                -pass_nodes,
+                report.nodes_removed(),
+                "{} @ {level}: node bookkeeping",
+                bench.slug()
+            );
+            assert_eq!(
+                -pass_arcs,
+                report.arcs_removed(),
+                "{} @ {level}: arc bookkeeping",
+                bench.slug()
+            );
+            assert_eq!(report.nodes_after, opt.n_nodes());
+            assert_eq!(report.arcs_after, opt.n_arcs());
+        }
+    }
+}
+
+#[test]
+fn optimize_none_is_the_identity_and_unknown_pass_panics() {
+    let g = bench_defs::build(BenchId::Max);
+    let (o, report) = optimize(&g, OptLevel::None);
+    assert_eq!(dataflow_accel::asm::print(&o), dataflow_accel::asm::print(&g));
+    assert!(!report.changed());
+    let err = std::panic::catch_unwind(|| run_pass(&g, "no-such-pass"));
+    assert!(err.is_err());
+}

@@ -180,7 +180,13 @@ fn warm_session_results_are_byte_identical_to_cold() {
 /// scheduler) — and still verifies everything.
 #[test]
 fn undersized_fabrics_serve_sharded_and_reconfig() {
-    let g = dataflow_accel::bench_defs::build(BenchId::DotProd);
+    // Sized against the *optimized* graph — what the session cache
+    // actually routes — so the placed path stays unreachable.
+    let g = dataflow_accel::optimize(
+        &dataflow_accel::bench_defs::build(BenchId::DotProd),
+        dataflow_accel::OptLevel::Default,
+    )
+    .0;
     let topo = FabricTopology::sized_for_shards(&g, 2);
     let mut tenant = bench_tenant("t", 1, 4, 12);
     tenant.mix = vec![WorkKind::Bench(BenchId::DotProd)];
@@ -295,4 +301,68 @@ fn pipelineable_tenant_takes_the_resident_streamed_session() {
         r.global.completed,
         r.global.engine_requests
     );
+}
+
+/// Optimizer integration with the warm-state cache (the serve tier
+/// optimizes by default): the key is (pre-optimization fingerprint,
+/// OptLevel) — the same raw submission hits across repeats even though
+/// the cached graph is the optimized one, a pre-optimized submission
+/// is different content (its own entry), and changing the level is a
+/// miss, never a silent mismatch.
+#[test]
+fn opt_level_and_pre_opt_fingerprint_form_the_cache_key() {
+    use dataflow_accel::{frontend, optimize, OptLevel};
+    let cache = SessionCache::new(FabricTopology::serving(), 2, 32);
+    let raw = frontend::compile_with(
+        "fibonacci",
+        dataflow_accel::bench_defs::c_source(BenchId::Fibonacci),
+        OptLevel::None,
+    )
+    .unwrap();
+
+    let (cold, hit) = cache.warm(&raw);
+    assert!(!hit);
+    assert_eq!(cold.fingerprint, raw.fingerprint());
+    assert!(
+        cold.graph.n_nodes() < raw.n_nodes(),
+        "the cache must store the optimized graph"
+    );
+    let (warm, hit) = cache.warm(&raw);
+    assert!(hit, "same raw submission, same pre-opt fingerprint: hit");
+    assert_eq!(warm.fingerprint, cold.fingerprint);
+
+    // Submitting the already-optimized content is a different key.
+    let og = optimize(&raw, OptLevel::Default).0;
+    let (opt_state, hit) = cache.warm(&og);
+    assert!(!hit, "optimized content has its own fingerprint");
+    assert_eq!(opt_state.fingerprint, og.fingerprint());
+
+    // Same graph, different level: a miss with its own entry.
+    let (agg, hit) = cache.warm_at(&raw, OptLevel::Aggressive);
+    assert!(!hit, "changing OptLevel must be a cache miss");
+    assert_eq!(agg.fingerprint, raw.fingerprint());
+    assert_eq!(agg.opt_level, OptLevel::Aggressive);
+    let (_, hit) = cache.warm_at(&raw, OptLevel::Aggressive);
+    assert!(hit);
+
+    // Warm == cold byte-identity with optimization on, through the
+    // public batch executor (fibonacci requests resolve to the same
+    // benchmark graph the cache already warmed raw — a distinct hint,
+    // so this exercises a separate entry end to end).
+    let reqs: Vec<ServeRequest> = (0..3)
+        .map(|i| ServeRequest {
+            tenant: 0,
+            seq: i,
+            kind: WorkKind::Bench(BenchId::Fibonacci),
+            n: 5,
+            seed: i as u64,
+        })
+        .collect();
+    let cold = execute_batch(&cache, &reqs);
+    let warm = execute_batch(&cache, &reqs);
+    assert!(warm.cache_hit);
+    for (c, w) in cold.outcomes.iter().zip(&warm.outcomes) {
+        assert_eq!(c.outputs, w.outputs, "warm != cold under optimization");
+    }
+    assert!(cold.verified.iter().all(|&v| v));
 }
