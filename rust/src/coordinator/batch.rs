@@ -8,6 +8,7 @@
 
 use crate::dfg::Graph;
 use crate::fabric::{self, FabricTopology, PartitionPlan};
+use crate::par::Executor;
 use crate::runtime::{FabricBatch, FabricRuntime};
 use crate::sim::{
     run_token, AluReq, LaneSim, Program, SimConfig, SimOutcome, TokenSim, WaveInput, LANES,
@@ -284,6 +285,115 @@ pub fn run_batch_reconfig(
     }
 }
 
+/// Parallel [`run_batch_lanes_prog`]: the batch's fixed [`LANES`]-wide
+/// chunks are mapped across the executor's workers. Chunk boundaries
+/// depend only on the batch length — never on the worker count — and
+/// chunks share no state (each gets its own [`LaneSim`]; scalar reruns
+/// happen inside the owning task), so the result is byte-identical to
+/// the serial path at every worker count. With one worker this *is*
+/// the serial path.
+pub fn run_batch_lanes_par(
+    g: &Graph,
+    prog: &Program,
+    cfgs: &[SimConfig],
+    exec: &Executor,
+) -> (Vec<SimOutcome>, LaneBatchStats) {
+    if exec.workers() <= 1 || cfgs.len() <= LANES {
+        return run_batch_lanes_prog(g, prog, cfgs);
+    }
+    let chunks: Vec<&[SimConfig]> = cfgs.chunks(LANES).collect();
+    let per_chunk = exec.map(chunks.len(), |i| {
+        let chunk = chunks[i];
+        let mut sim = LaneSim::new(prog, chunk);
+        sim.run();
+        let mut outs = Vec::with_capacity(chunk.len());
+        let mut reruns = 0usize;
+        for (cfg, out) in chunk.iter().zip(sim.into_outcomes()) {
+            if out.quiescent {
+                outs.push(out);
+            } else {
+                reruns += 1;
+                outs.push(run_token(g, cfg));
+            }
+        }
+        (outs, reruns)
+    });
+    let mut stats = LaneBatchStats {
+        chunks: chunks.len(),
+        scalar_reruns: 0,
+    };
+    let mut outcomes = Vec::with_capacity(cfgs.len());
+    for (outs, reruns) in per_chunk {
+        stats.scalar_reruns += reruns;
+        outcomes.extend(outs);
+    }
+    (outcomes, stats)
+}
+
+/// Parallel [`run_batch_sharded`]. Isolated items are independent by
+/// construction and map one-per-task. Resident waves split into
+/// contiguous per-worker spans ([`crate::par::split_ranges`]), each
+/// span streaming through its own shard rack: `run_sharded_waves`
+/// purges and re-arms every shard between waves, so a rack starting at
+/// wave k is in exactly the state the serial rack reaches after wave
+/// k-1 — outcomes (including the `done - started` cycle counts, which
+/// restart per wave) are byte-identical to the serial rack. Each span
+/// keeps the same max-budget the serial path would use.
+pub fn run_batch_sharded_par(
+    plan: &PartitionPlan,
+    cfgs: &[SimConfig],
+    waves_resident: bool,
+    exec: &Executor,
+) -> Vec<SimOutcome> {
+    if exec.workers() <= 1 || cfgs.len() <= 1 {
+        return run_batch_sharded(plan, cfgs, waves_resident);
+    }
+    if waves_resident {
+        let waves: Vec<WaveInput> = cfgs.iter().map(|c| c.inject.clone()).collect();
+        let budget = cfgs.iter().map(|c| c.max_cycles).max().unwrap();
+        let spans = crate::par::split_ranges(waves.len(), exec.workers());
+        let per_span = exec.map(spans.len(), |i| {
+            fabric::run_sharded_waves(plan, &waves[spans[i].clone()], budget)
+        });
+        per_span.into_iter().flatten().collect()
+    } else {
+        exec.map(cfgs.len(), |i| fabric::run_sharded(plan, &cfgs[i]))
+    }
+}
+
+/// Parallel serialized-stream batch: the wave list splits into
+/// contiguous per-worker spans, each streaming through its own
+/// serialized [`crate::sim::StreamSession`]. Serialized admission
+/// fully drains and resets the session between waves (tokens, FIFOs,
+/// gating — see `sim::stream`), so wave k's outcome is independent of
+/// which session ran waves 0..k, and the concatenated spans are
+/// byte-identical to one serial session at every worker count. Each
+/// span's session gets the sum of its own items' budgets — the same
+/// per-wave headroom the serial whole-batch sum provides.
+///
+/// Pipelined (overlap-safe) batches are *not* split: overlapping waves
+/// inside one fabric is the whole point of that mode, and a wave's
+/// latency there depends on its neighbours. Callers wanting overlap
+/// keep using [`run_batch_streamed`] serially.
+pub fn run_batch_sstream_par(g: &Graph, cfgs: &[SimConfig], exec: &Executor) -> Vec<SimOutcome> {
+    if cfgs.is_empty() {
+        return Vec::new();
+    }
+    let waves: Vec<WaveInput> = cfgs.iter().map(|c| c.inject.clone()).collect();
+    if exec.workers() <= 1 || cfgs.len() <= 1 {
+        let budget: u64 = cfgs.iter().map(|c| c.max_cycles).sum();
+        return crate::sim::run_stream_session(g, &waves, budget, crate::sim::WaveMode::Serialized)
+            .0;
+    }
+    let spans = crate::par::split_ranges(waves.len(), exec.workers());
+    let per_span = exec.map(spans.len(), |i| {
+        let span = spans[i].clone();
+        let budget: u64 = cfgs[span.clone()].iter().map(|c| c.max_cycles).sum();
+        crate::sim::run_stream_session(g, &waves[span], budget, crate::sim::WaveMode::Serialized).0
+    });
+    per_span.into_iter().flatten().collect()
+}
+
 /// Convenience: batch through the PJRT fabric kernel.
 pub fn run_batch_xla(
     g: &Graph,
@@ -412,6 +522,40 @@ mod tests {
         for (cfg, out) in cfgs.iter().zip(&outs) {
             let alone = run_token(&g, cfg);
             assert_eq!(out.outputs, alone.outputs);
+        }
+    }
+
+    #[test]
+    fn par_lane_batch_matches_serial_at_every_worker_count() {
+        let bench = BenchId::DotProd;
+        let g = bench_defs::build(bench);
+        // > 2 chunks so parallel chunk dispatch is real work.
+        let cfgs: Vec<_> = (0..(2 * LANES + 5))
+            .map(|s| bench_defs::workload(bench, 3 + (s % 5), s as u64).sim_config())
+            .collect();
+        let prog = Program::compile(&g);
+        let (serial, serial_stats) = run_batch_lanes_prog(&g, &prog, &cfgs);
+        for workers in [1usize, 2, 4] {
+            let exec = Executor::new(workers);
+            let (par, stats) = run_batch_lanes_par(&g, &prog, &cfgs, &exec);
+            assert_eq!(stats, serial_stats, "workers={workers}");
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn par_sstream_batch_matches_serial_serialized_session() {
+        for bench in [BenchId::Fibonacci, BenchId::PopCount] {
+            let g = bench_defs::build(bench);
+            let cfgs: Vec<_> = (0..9)
+                .map(|s| bench_defs::workload(bench, 3 + (s % 4), s as u64).sim_config())
+                .collect();
+            let serial = run_batch_sstream_par(&g, &cfgs, &Executor::single());
+            for workers in [2usize, 4] {
+                let exec = Executor::new(workers);
+                let par = run_batch_sstream_par(&g, &cfgs, &exec);
+                assert_eq!(par, serial, "{} workers={workers}", bench.slug());
+            }
         }
     }
 

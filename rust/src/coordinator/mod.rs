@@ -27,8 +27,8 @@ pub mod batch;
 pub mod router;
 
 pub use batch::{
-    run_batch_lanes, run_batch_lanes_prog, run_batch_lanes_with_stats, run_batch_native,
-    run_batch_reconfig, run_batch_sharded, run_batch_streamed, run_batch_xla, BatchEngine,
-    LaneBatchStats,
+    run_batch_lanes, run_batch_lanes_par, run_batch_lanes_prog, run_batch_lanes_with_stats,
+    run_batch_native, run_batch_reconfig, run_batch_sharded, run_batch_sharded_par,
+    run_batch_sstream_par, run_batch_streamed, run_batch_xla, BatchEngine, LaneBatchStats,
 };
-pub use router::{BatchMode, Coordinator, Engine, Metrics, Request, Response};
+pub use router::{BatchMode, Coordinator, Engine, Metrics, MetricsSnapshot, Request, Response};

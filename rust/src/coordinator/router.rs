@@ -97,28 +97,80 @@ pub struct Metrics {
     pub opt_placed: AtomicU64,
 }
 
+/// A coherent point-in-time copy of [`Metrics`]: plain `u64` fields,
+/// cheap to clone, compare, and serialize. "Coherent" here means each
+/// field is an atomic load — counters incremented by in-flight workers
+/// between two loads can skew by a request or two, which is the usual
+/// contract for monitoring snapshots (and exact once workers quiesce).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub verified: u64,
+    pub batches: u64,
+    pub fabric_cycles: u64,
+    pub total_latency_us: u64,
+    pub placed: u64,
+    pub sharded: u64,
+    pub reconfig: u64,
+    pub fallback: u64,
+    pub streamed_waves: u64,
+    pub lanes: u64,
+    pub lane_scalar_reruns: u64,
+    pub cache_hits: u64,
+    pub opt_placed: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean end-to-end request latency in milliseconds.
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.total_latency_us as f64 / self.completed.max(1) as f64 / 1000.0
+    }
+}
+
 impl Metrics {
+    /// Snapshot every counter with relaxed loads.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            verified: self.verified.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            fabric_cycles: self.fabric_cycles.load(Ordering::Relaxed),
+            total_latency_us: self.total_latency_us.load(Ordering::Relaxed),
+            placed: self.placed.load(Ordering::Relaxed),
+            sharded: self.sharded.load(Ordering::Relaxed),
+            reconfig: self.reconfig.load(Ordering::Relaxed),
+            fallback: self.fallback.load(Ordering::Relaxed),
+            streamed_waves: self.streamed_waves.load(Ordering::Relaxed),
+            lanes: self.lanes.load(Ordering::Relaxed),
+            lane_scalar_reruns: self.lane_scalar_reruns.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            opt_placed: self.opt_placed.load(Ordering::Relaxed),
+        }
+    }
+
     pub fn summary(&self) -> String {
-        let completed = self.completed.load(Ordering::Relaxed).max(1);
+        let s = self.snapshot();
         format!(
             "requests {}/{} verified {} | batches {} (placed {} [opt-placed {}], sharded {}, \
              reconfig {}, fallback {}) | cache hits {} | lanes {} (scalar reruns {}) | \
              streamed waves {} | fabric cycles {} | mean latency {:.1} ms",
-            self.completed.load(Ordering::Relaxed),
-            self.submitted.load(Ordering::Relaxed),
-            self.verified.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.placed.load(Ordering::Relaxed),
-            self.opt_placed.load(Ordering::Relaxed),
-            self.sharded.load(Ordering::Relaxed),
-            self.reconfig.load(Ordering::Relaxed),
-            self.fallback.load(Ordering::Relaxed),
-            self.cache_hits.load(Ordering::Relaxed),
-            self.lanes.load(Ordering::Relaxed),
-            self.lane_scalar_reruns.load(Ordering::Relaxed),
-            self.streamed_waves.load(Ordering::Relaxed),
-            self.fabric_cycles.load(Ordering::Relaxed),
-            self.total_latency_us.load(Ordering::Relaxed) as f64 / completed as f64 / 1000.0,
+            s.completed,
+            s.submitted,
+            s.verified,
+            s.batches,
+            s.placed,
+            s.opt_placed,
+            s.sharded,
+            s.reconfig,
+            s.fallback,
+            s.cache_hits,
+            s.lanes,
+            s.lane_scalar_reruns,
+            s.streamed_waves,
+            s.fabric_cycles,
+            s.mean_latency_ms(),
         )
     }
 }
@@ -497,6 +549,44 @@ mod tests {
         assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 18);
         assert_eq!(c.metrics.verified.load(Ordering::Relaxed), 18);
         c.shutdown();
+    }
+
+    #[test]
+    fn metrics_snapshot_is_exact_after_concurrent_increments() {
+        let m = Arc::new(Metrics::default());
+        let threads = 4;
+        let per_thread = 1000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        m.submitted.fetch_add(1, Ordering::Relaxed);
+                        m.completed.fetch_add(1, Ordering::Relaxed);
+                        m.total_latency_us.fetch_add(2, Ordering::Relaxed);
+                        if (t as u64 + i) % 2 == 0 {
+                            m.verified.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if i % 10 == 0 {
+                            m.batches.fetch_add(1, Ordering::Relaxed);
+                            m.cache_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        let total = threads as u64 * per_thread;
+        let s = m.snapshot();
+        assert_eq!(s.submitted, total);
+        assert_eq!(s.completed, total);
+        assert_eq!(s.verified, total / 2);
+        assert_eq!(s.batches, total / 10);
+        assert_eq!(s.cache_hits, total / 10);
+        assert_eq!(s.total_latency_us, total * 2);
+        // Derived view and quiescent re-snapshot agree.
+        assert!((s.mean_latency_ms() - 0.002).abs() < 1e-12);
+        assert_eq!(m.snapshot(), s);
+        assert!(m.summary().contains(&format!("requests {total}/{total}")));
     }
 
     #[test]

@@ -44,6 +44,10 @@
 //! * [`runtime`] + [`coordinator`] — the acceleration path: batched fabric
 //!   simulation through AOT-compiled XLA artifacts (JAX/Pallas, loaded over
 //!   PJRT; Python never runs at simulation time).
+//! * [`par`] — the std-only work-stealing executor (per-worker deques +
+//!   global injector, scoped workers) that the lane, shard, stream, and
+//!   serve tiers use to spread independent chunks/shards/batches across
+//!   cores with byte-identical results at any worker count.
 //! * [`serve`] — the multi-tenant service tier: warm-state session cache
 //!   keyed by [`dfg::Graph::fingerprint`], admission scheduler
 //!   (quotas, explicit shedding, weighted-fair picking, deadline-aware
@@ -64,6 +68,7 @@ pub mod estimate;
 pub mod fabric;
 pub mod frontend;
 pub mod opt;
+pub mod par;
 pub mod report;
 pub mod runtime;
 pub mod serve;

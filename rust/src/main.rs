@@ -9,7 +9,8 @@
 //! dataflow-accel stream --table [--waves 8] [--n 8] [--seed 7]
 //! dataflow-accel bench [--quick] [--items 64] [--n 16] [--seed 7] [--out BENCH_3.json]
 //! dataflow-accel serve [--quick] [--seed 7] [--scale 24] [--n 8]
-//!                      [--arrival closed|open] [--out SERVE_4.json]
+//!                      [--arrival closed|open|burst] [--workers N] [--scale-workers]
+//!                      [--out SERVE_6.json]
 //! dataflow-accel table1 [--fig8]
 //! dataflow-accel sweep [--bench all] [--requests 64] [--n 16] [--engine native|xla]
 //!                      [--workers 4] [--batch 8] [--stream]
@@ -25,7 +26,16 @@ use dataflow_accel::{estimate, frontend, report, sim, vhdl};
 fn main() {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["fig8", "verbose", "check", "reconfig", "table", "stream", "quick"],
+        &[
+            "fig8",
+            "verbose",
+            "check",
+            "reconfig",
+            "table",
+            "stream",
+            "quick",
+            "scale-workers",
+        ],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -69,8 +79,11 @@ fn main() {
                  \x20 --scale S     per-weight request multiplier (default 24; 4 with --quick)\n\
                  \x20 --n N         workload size per request (default 8; 4 with --quick)\n\
                  \x20 --seed S      load-profile seed (same seed = same request trace)\n\
-                 \x20 --arrival M   closed (default) or open loop arrivals\n\
-                 \x20 --out PATH    write the JSON report (default SERVE_4.json)\n\
+                 \x20 --arrival M   closed (default), open, or burst (open-loop ramp) arrivals\n\
+                 \x20 --workers N   dispatch batches across N work-stealing workers (default 1)\n\
+                 \x20 --scale-workers  sweep worker counts 1,2,..,max(4,N); verify identical\n\
+                 \x20                  results per count, emit the scaling curve\n\
+                 \x20 --out PATH    write the JSON report (default SERVE_6.json)\n\
                  sweep: --stream routes batches through resident streaming sessions\n\
                  benchmarks: {} saxpy (stream/bench only)",
                 BenchId::ALL.map(|b| b.slug()).join(" ")
@@ -367,43 +380,102 @@ fn cmd_serve(args: &Args) {
     let seed = args.get_u64("seed", 7);
     let scale = args.get_usize("scale", if quick { 4 } else { 24 });
     let n = args.get_usize("n", if quick { 4 } else { 8 });
-    let out_path = args.get_or("out", "SERVE_4.json");
+    let workers = args.get_usize("workers", 1).max(1);
+    let scale_workers = args.has("scale-workers");
+    let out_path = args.get_or("out", "SERVE_6.json");
     let mut profile = serve::standard_profile(scale, n, seed);
     match args.get_or("arrival", "closed").as_str() {
         "closed" => {}
         "open" => profile.arrival = Arrival::Open { burst: 4 },
-        other => panic!("unknown --arrival `{other}` (closed|open)"),
+        "burst" => {
+            let peak = if scale_workers { workers.max(4) } else { workers };
+            profile.arrival = serve::burst_series(peak);
+        }
+        other => panic!("unknown --arrival `{other}` (closed|open|burst)"),
     }
-    let opts = serve::ServeOptions::default();
-    let outcome = serve::run_profile(&profile, &opts);
-    let report = &outcome.report;
-    print!("{}", report::serve_table(report));
+    let refuse = |msg: String| {
+        eprintln!("serve: {msg}");
+        eprintln!("serve: refusing to write {out_path}");
+        std::process::exit(1);
+    };
+
+    // Worker counts to run: always the 1-worker reference first. The
+    // sweep doubles up to max(4, --workers), so the curve always has
+    // at least three points (1, 2, 4).
+    let mut counts = vec![1usize];
+    if scale_workers {
+        let cap = workers.max(4);
+        let mut w = 2;
+        while w < cap {
+            counts.push(w);
+            w *= 2;
+        }
+        counts.push(cap);
+    } else if workers > 1 {
+        counts.push(workers);
+    }
 
     // Service invariants gate the trajectory file: every submitted
-    // request must be completed or explicitly shed, and every
-    // completed request's outputs must have verified against its
-    // reference — numbers from a lossy or wrong service tier must
-    // never land in SERVE_*.json.
-    if report.global.lost() != 0 {
-        eprintln!(
-            "serve: {} request(s) lost (submitted {} != completed {} + shed {})",
-            report.global.lost(),
-            report.global.submitted,
-            report.global.completed,
-            report.global.shed()
-        );
-        eprintln!("serve: refusing to write {out_path}");
-        std::process::exit(1);
+    // request must be completed or explicitly shed, every completed
+    // request's outputs must have verified against its reference, and
+    // every multi-worker run's per-request result digests must be
+    // byte-identical to the 1-worker reference — numbers from a
+    // lossy, wrong, or schedule-dependent service tier must never
+    // land in SERVE_*.json.
+    let mut scaling: Vec<report::ScalePoint> = Vec::new();
+    let mut baseline_digests = None;
+    let mut last = None;
+    for &w in &counts {
+        let opts = serve::ServeOptions {
+            workers: w,
+            ..serve::ServeOptions::default()
+        };
+        let outcome = serve::run_profile(&profile, &opts);
+        let report = &outcome.report;
+        if report.global.lost() != 0 {
+            refuse(format!(
+                "workers {w}: {} request(s) lost (submitted {} != completed {} + shed {})",
+                report.global.lost(),
+                report.global.submitted,
+                report.global.completed,
+                report.global.shed()
+            ));
+        }
+        if report.global.verified != report.global.completed {
+            refuse(format!(
+                "workers {w}: {} completed request(s) failed verification",
+                report.global.completed - report.global.verified
+            ));
+        }
+        match &baseline_digests {
+            None => baseline_digests = Some(outcome.digests.clone()),
+            Some(base) => {
+                if *base != outcome.digests {
+                    let differ = outcome
+                        .digests
+                        .iter()
+                        .filter(|(k, v)| base.get(k) != Some(v))
+                        .count();
+                    refuse(format!(
+                        "workers {w}: results diverged from the 1-worker reference \
+                         ({differ} of {} digests differ)",
+                        base.len()
+                    ));
+                }
+            }
+        }
+        scaling.push(report::ScalePoint::from_report(report));
+        last = Some(outcome);
     }
-    if report.global.verified != report.global.completed {
-        eprintln!(
-            "serve: {} completed request(s) failed verification",
-            report.global.completed - report.global.verified
-        );
-        eprintln!("serve: refusing to write {out_path}");
-        std::process::exit(1);
+
+    let outcome = last.expect("at least the 1-worker run");
+    let report = &outcome.report;
+    print!("{}", report::serve_table(report));
+    if counts.len() > 1 {
+        print!("{}", report::scaling_table(&scaling));
+        println!("scaling verified: results byte-identical across worker counts {counts:?}");
     }
-    let json = report::serve::to_json(report, seed, scale, n, quick);
+    let json = report::serve::to_json(report, seed, scale, n, quick, &scaling);
     std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
     println!("wrote {out_path}");
 }

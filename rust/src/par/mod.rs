@@ -1,0 +1,445 @@
+//! `par` — a std-only work-stealing executor for the host-side tiers.
+//!
+//! The paper's fabric wins by firing many operators concurrently; the
+//! host-side reproduction gets its concurrency here instead. The
+//! executor runs a fixed pool of `std::thread` scoped workers, each
+//! owning a private deque, fed by one global injector queue:
+//!
+//! * `submit` pushes a sequence-tagged task onto the injector;
+//! * an idle worker grabs a fair share (`len / workers`, min 1) of the
+//!   injector into its own deque, so a burst of same-graph batches
+//!   spreads across the pool in one pass;
+//! * a worker whose deque runs dry steals single tasks from the *back*
+//!   of a victim's deque (classic Chase–Lev discipline, approximated
+//!   with mutexed `VecDeque`s since we are std-only by construction);
+//! * workers park on a `Condvar` when the whole system is empty and are
+//!   woken by `submit` / shutdown.
+//!
+//! **Determinism contract.** Tasks must be pure functions of their
+//! captured inputs. The executor tags every task with its submission
+//! index and sorts results back into submission order, so `map` and
+//! `pipeline` return byte-identical results regardless of worker count
+//! or steal schedule. The conformance harness (`par_determinism_*`)
+//! enforces this end to end across the lane, shard, and stream tiers.
+//!
+//! No new crates: `Mutex` + `Condvar` + atomics + `thread::scope` only.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+type Task<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
+
+/// Cumulative executor counters, snapshotted via [`Executor::stats`].
+///
+/// `busy_ns` sums task execution time across *all* workers, so on an
+/// N-worker pool it can exceed wall time by up to a factor of N — that
+/// ratio is exactly the utilization number `util::bench` and
+/// `report::serve` report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ParStats {
+    /// Tasks executed to completion.
+    pub executed: u64,
+    /// Tasks obtained by stealing from another worker's deque (as
+    /// opposed to the worker's own deque or the global injector).
+    pub steals: u64,
+    /// Total nanoseconds spent inside task bodies, summed over workers.
+    pub busy_ns: u64,
+}
+
+/// Per-worker tallies folded into the executor atomics at join time.
+#[derive(Default)]
+struct WorkerTally {
+    executed: u64,
+    steals: u64,
+    busy_ns: u64,
+}
+
+struct Shared<'env, T: Send> {
+    injector: Mutex<VecDeque<(u64, Task<'env, T>)>>,
+    locals: Vec<Mutex<VecDeque<(u64, Task<'env, T>)>>>,
+    /// Guards the park/notify handshake; `submit` takes it before
+    /// notifying so a wakeup can never slip between a worker's empty
+    /// check and its wait.
+    sleep: Mutex<()>,
+    bell: Condvar,
+    closed: AtomicBool,
+    next_seq: AtomicU64,
+}
+
+impl<'env, T: Send> Shared<'env, T> {
+    fn new(workers: usize) -> Self {
+        Shared {
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep: Mutex::new(()),
+            bell: Condvar::new(),
+            closed: AtomicBool::new(false),
+            next_seq: AtomicU64::new(0),
+        }
+    }
+
+    fn push(&self, job: Task<'env, T>) {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        self.injector.lock().unwrap().push_back((seq, job));
+        let _g = self.sleep.lock().unwrap();
+        self.bell.notify_one();
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        let _g = self.sleep.lock().unwrap();
+        self.bell.notify_all();
+    }
+
+    fn has_work(&self) -> bool {
+        if !self.injector.lock().unwrap().is_empty() {
+            return true;
+        }
+        self.locals.iter().any(|l| !l.lock().unwrap().is_empty())
+    }
+
+    /// Pop the next task for worker `wi`: own deque front, then a fair
+    /// share of the injector, then a steal from a victim's back.
+    /// Returns `None` only once the pool is closed and fully drained.
+    fn next_task(&self, wi: usize, tally: &mut WorkerTally) -> Option<(u64, Task<'env, T>)> {
+        loop {
+            if let Some(t) = self.locals[wi].lock().unwrap().pop_front() {
+                return Some(t);
+            }
+            {
+                let mut inj = self.injector.lock().unwrap();
+                if !inj.is_empty() {
+                    let grab = (inj.len() / self.locals.len()).max(1);
+                    let first = inj.pop_front().unwrap();
+                    if grab > 1 {
+                        let mut local = self.locals[wi].lock().unwrap();
+                        for _ in 1..grab {
+                            match inj.pop_front() {
+                                Some(t) => local.push_back(t),
+                                None => break,
+                            }
+                        }
+                    }
+                    return Some(first);
+                }
+            }
+            for k in 1..self.locals.len() {
+                let victim = (wi + k) % self.locals.len();
+                if let Some(t) = self.locals[victim].lock().unwrap().pop_back() {
+                    tally.steals += 1;
+                    return Some(t);
+                }
+            }
+            if self.closed.load(Ordering::Acquire) {
+                // Drained and closed: one final sweep above found
+                // nothing, and nothing new can arrive.
+                if !self.has_work() {
+                    return None;
+                }
+                continue;
+            }
+            // Park. The timeout is belt-and-braces only; the sleep
+            // mutex handshake already rules out lost wakeups.
+            let guard = self.sleep.lock().unwrap();
+            if self.has_work() || self.closed.load(Ordering::Acquire) {
+                continue;
+            }
+            let (guard, _timed_out) =
+                self.bell.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+            drop(guard);
+        }
+    }
+}
+
+fn worker_loop<'env, T: Send>(
+    shared: &Shared<'env, T>,
+    wi: usize,
+) -> (Vec<(u64, T)>, WorkerTally) {
+    let mut out = Vec::new();
+    let mut tally = WorkerTally::default();
+    while let Some((seq, job)) = shared.next_task(wi, &mut tally) {
+        let t0 = Instant::now();
+        out.push((seq, job()));
+        tally.busy_ns += t0.elapsed().as_nanos() as u64;
+        tally.executed += 1;
+    }
+    (out, tally)
+}
+
+/// Handle for submitting tasks from inside [`Executor::pipeline`].
+pub struct Submitter<'scope, 'env, T: Send> {
+    shared: &'scope Shared<'env, T>,
+}
+
+impl<'scope, 'env, T: Send> Submitter<'scope, 'env, T> {
+    /// Queue a task. Results come back from `pipeline` sorted by
+    /// submission order, independent of which worker ran what.
+    pub fn submit(&self, job: impl FnOnce() -> T + Send + 'env) {
+        self.shared.push(Box::new(job));
+    }
+}
+
+/// A work-stealing thread-pool executor. Cheap to construct; each
+/// `map`/`pipeline` call spawns its own scoped workers so borrowed data
+/// flows into tasks without `'static` bounds, and the pool fully
+/// quiesces before the call returns.
+pub struct Executor {
+    workers: usize,
+    executed: AtomicU64,
+    steals: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+impl Executor {
+    /// An executor with `workers` threads (clamped to at least 1).
+    pub fn new(workers: usize) -> Self {
+        Executor {
+            workers: workers.max(1),
+            executed: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// A single-worker executor: every `map`/`pipeline` call runs
+    /// inline on the caller thread (no threads spawned at all).
+    pub fn single() -> Self {
+        Executor::new(1)
+    }
+
+    /// Hardware parallelism, defaulting to 1 when unknowable.
+    pub fn available_parallelism() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Snapshot of cumulative counters across all calls so far.
+    pub fn stats(&self) -> ParStats {
+        ParStats {
+            executed: self.executed.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    fn absorb(&self, tally: &WorkerTally) {
+        self.executed.fetch_add(tally.executed, Ordering::Relaxed);
+        self.steals.fetch_add(tally.steals, Ordering::Relaxed);
+        self.busy_ns.fetch_add(tally.busy_ns, Ordering::Relaxed);
+    }
+
+    /// Run `f(0..n)` across the pool and return results in index order.
+    /// With one worker (or `n <= 1`) this runs inline on the caller
+    /// thread — the serial fast path the determinism tests compare
+    /// against.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.workers <= 1 || n <= 1 {
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                let t0 = Instant::now();
+                out.push(f(i));
+                self.busy_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                self.executed.fetch_add(1, Ordering::Relaxed);
+            }
+            return out;
+        }
+        let fr = &f;
+        let (_, results) = self.pipeline(|sub| {
+            for i in 0..n {
+                sub.submit(move || fr(i));
+            }
+        });
+        results
+    }
+
+    /// Run `drive` on the caller thread while the pool executes
+    /// whatever it submits; returns `drive`'s value plus all task
+    /// results sorted into submission order. This is the open-loop
+    /// shape `serve::sched` needs: the tick loop keeps admitting and
+    /// dispatching while earlier batches are still executing.
+    pub fn pipeline<'env, T, X, F>(&self, drive: F) -> (X, Vec<T>)
+    where
+        T: Send + 'env,
+        F: for<'scope> FnOnce(&Submitter<'scope, 'env, T>) -> X,
+    {
+        if self.workers <= 1 {
+            // Inline: queue submissions, then drain them on this
+            // thread in submission order once `drive` returns.
+            let shared = Shared::new(1);
+            let x = drive(&Submitter { shared: &shared });
+            shared.close();
+            let (mut tagged, tally) = worker_loop(&shared, 0);
+            self.absorb(&tally);
+            tagged.sort_unstable_by_key(|(seq, _)| *seq);
+            return (x, tagged.into_iter().map(|(_, t)| t).collect());
+        }
+        let shared = Shared::new(self.workers);
+        let mut tagged: Vec<(u64, T)> = Vec::new();
+        let x = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..self.workers)
+                .map(|wi| {
+                    let sh = &shared;
+                    s.spawn(move || worker_loop(sh, wi))
+                })
+                .collect();
+            let x = drive(&Submitter { shared: &shared });
+            shared.close();
+            for h in handles {
+                let (res, tally) = h.join().expect("par worker panicked");
+                self.absorb(&tally);
+                tagged.extend(res);
+            }
+            x
+        });
+        tagged.sort_unstable_by_key(|(seq, _)| *seq);
+        (x, tagged.into_iter().map(|(_, t)| t).collect())
+    }
+}
+
+/// Split `0..n` into at most `parts` contiguous ranges whose lengths
+/// differ by at most one. Deterministic in `n` and `parts` only — this
+/// is what keeps per-worker wave chunks reproducible.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn map_preserves_order_across_worker_counts() {
+        let inputs: Vec<u64> = (0..257).map(|i| i * 31 + 7).collect();
+        let expect: Vec<u64> = inputs.iter().map(|x| x.wrapping_mul(*x)).collect();
+        for workers in [1, 2, 4, 7] {
+            let exec = Executor::new(workers);
+            let got = exec.map(inputs.len(), |i| inputs[i].wrapping_mul(inputs[i]));
+            assert_eq!(got, expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn map_runs_every_task_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        let exec = Executor::new(4);
+        exec.map(hits.len(), |i| hits[i].fetch_add(1, Ordering::Relaxed));
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+        assert_eq!(exec.stats().executed, 100);
+    }
+
+    #[test]
+    fn pipeline_returns_results_in_submission_order() {
+        let exec = Executor::new(3);
+        let (count, results) = exec.pipeline(|sub| {
+            for i in 0..64u64 {
+                // Uneven task costs provoke out-of-order completion.
+                sub.submit(move || {
+                    let mut acc = i;
+                    for k in 0..(i % 9) * 1000 {
+                        acc = acc.wrapping_mul(31).wrapping_add(k);
+                    }
+                    (i, acc)
+                });
+            }
+            64usize
+        });
+        assert_eq!(count, 64);
+        assert_eq!(results.len(), 64);
+        for (idx, (i, _)) in results.iter().enumerate() {
+            assert_eq!(*i as usize, idx);
+        }
+    }
+
+    #[test]
+    fn pipeline_handles_empty_and_single_submissions() {
+        let exec = Executor::new(4);
+        let (_, empty) = exec.pipeline::<u32, _, _>(|_sub| ());
+        assert!(empty.is_empty());
+        let (_, one) = exec.pipeline(|sub| sub.submit(|| 42u32));
+        assert_eq!(one, vec![42]);
+    }
+
+    #[test]
+    fn tasks_can_borrow_caller_state() {
+        let data = vec![1u64, 2, 3, 4, 5];
+        let exec = Executor::new(2);
+        let sums = exec.map(data.len(), |i| data[i] + 10);
+        assert_eq!(sums, vec![11, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn stats_accumulate_busy_time() {
+        let exec = Executor::new(2);
+        exec.map(32, |i| {
+            let mut s = 0u64;
+            for k in 0..2000u64 {
+                s = s.wrapping_add(k * i as u64);
+            }
+            s
+        });
+        let st = exec.stats();
+        assert_eq!(st.executed, 32);
+        assert!(st.busy_ns > 0);
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let exec = Executor::single();
+        assert_eq!(exec.workers(), 1);
+        let got = exec.map(10, |i| i * 2);
+        assert_eq!(got, (0..10).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_ranges_covers_exactly_once() {
+        for n in [0usize, 1, 5, 64, 65, 131, 1000] {
+            for parts in [1usize, 2, 3, 4, 7, 16] {
+                let ranges = split_ranges(n, parts);
+                let mut covered = 0;
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "contiguous n={n} parts={parts}");
+                    assert!(r.end > r.start, "non-empty n={n} parts={parts}");
+                    covered += r.len();
+                    next = r.end;
+                }
+                assert_eq!(covered, n, "n={n} parts={parts}");
+                if n > 0 {
+                    assert!(ranges.len() <= parts);
+                    let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                    let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                    assert!(hi - lo <= 1, "balanced n={n} parts={parts}");
+                }
+            }
+        }
+    }
+}

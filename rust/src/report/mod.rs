@@ -14,7 +14,7 @@ pub mod opt;
 pub mod perf;
 pub mod serve;
 
-pub use serve::serve_table;
+pub use serve::{scaling_table, serve_table, ScalePoint};
 
 use crate::baselines::{ctv, kernel_spec, lalp};
 use crate::bench_defs::{self, build, BenchId};

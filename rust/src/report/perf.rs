@@ -2,7 +2,7 @@
 //!
 //! Runs the **seven-benchmark suite** — the paper's six loop-schema
 //! benchmarks plus the pipelineable SAXPY workload — as a batch of
-//! independent items under three engines:
+//! independent items under four engines:
 //!
 //! * `scalar`  — the run-to-completion baseline: one whole-graph
 //!   [`TokenSim`](crate::sim::TokenSim) run per item (what every PR
@@ -12,9 +12,16 @@
 //! * `lanes`   — the lane-vectorized engine: the batch in lockstep
 //!   chunks of 64 through one compiled program
 //!   ([`run_batch_lanes`](crate::coordinator::run_batch_lanes)).
+//! * `sstream-par` — the serialized-stream batch split into
+//!   contiguous wave spans across a [`crate::par::Executor`]
+//!   work-stealing pool
+//!   ([`run_batch_sstream_par`](crate::coordinator::run_batch_sstream_par)).
 //!
 //! Timing is hand-rolled `std::time::Instant` through the crate's own
-//! criterion-style loop ([`crate::util::bench`]); no external deps.
+//! criterion-style loop ([`crate::util::bench`]); the multi-worker
+//! engine reports its pool's busy-time delta through
+//! [`bench::run_timed`](crate::util::bench::run_timed) so wall and CPU
+//! cost stay distinct. No external deps.
 //! Every engine's outputs are verified against the benchmark's software
 //! reference before its numbers are reported, so a wrong-but-fast
 //! engine can never seed the trajectory.
@@ -26,10 +33,11 @@
 //! run per push.
 
 use crate::bench_defs::{self, BenchId};
-use crate::coordinator::run_batch_lanes;
+use crate::coordinator::{run_batch_lanes, run_batch_sstream_par};
 use crate::dfg::Word;
+use crate::par::Executor;
 use crate::sim::{self, overlap_safe, run_token, SimConfig, SimOutcome, WaveInput};
-use crate::util::bench::{self as timing, BenchCfg};
+use crate::util::bench::{self as timing, BenchCfg, IterCost};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -78,6 +86,12 @@ pub struct EngineResult {
     pub engine: &'static str,
     /// Median wall time for the whole batch, nanoseconds.
     pub median_ns: f64,
+    /// Median per-iteration busy time summed over every worker that
+    /// executed part of the batch (equals wall for single-threaded
+    /// engines; see [`crate::util::bench::Measurement::busy_ns`]).
+    pub busy_ns: f64,
+    /// Workers that contributed to `busy_ns` (1 for the serial engines).
+    pub workers: usize,
     pub tokens_out: u64,
     pub firings: u64,
     /// All items' outputs matched the software reference.
@@ -91,6 +105,11 @@ impl EngineResult {
 
     pub fn firings_per_sec(&self) -> f64 {
         self.firings as f64 / (self.median_ns.max(1.0) * 1e-9)
+    }
+
+    /// Pool utilization: `busy / (wall × workers)`; ≈1.0 when serial.
+    pub fn cpu_util(&self) -> f64 {
+        self.busy_ns / (self.median_ns.max(1.0) * self.workers.max(1) as f64)
     }
 }
 
@@ -173,7 +192,7 @@ fn saxpy_batch(cfg: &PerfCfg) -> Batch {
 
 fn summarize(
     engine: &'static str,
-    median_ns: f64,
+    m: &timing::Measurement,
     outs: &[SimOutcome],
     expects: &[BTreeMap<String, Vec<Word>>],
 ) -> EngineResult {
@@ -188,7 +207,9 @@ fn summarize(
     }
     EngineResult {
         engine,
-        median_ns,
+        median_ns: m.median_ns,
+        busy_ns: m.busy_ns,
+        workers: m.workers,
         tokens_out,
         firings,
         verified,
@@ -204,7 +225,7 @@ fn measure_batch(batch: &Batch, cfg: &PerfCfg) -> BenchRow {
     let m = timing::run(&format!("{}/scalar", batch.name), timing_cfg, || {
         batch.cfgs.iter().map(|c| run_token(g, c)).collect::<Vec<_>>()
     });
-    let scalar = summarize("scalar", m.median_ns, &scalar_outs, &batch.expects);
+    let scalar = summarize("scalar", &m, &scalar_outs, &batch.expects);
 
     // Streamed: the whole batch as successive waves through one
     // resident session.
@@ -212,24 +233,40 @@ fn measure_batch(batch: &Batch, cfg: &PerfCfg) -> BenchRow {
     let m = timing::run(&format!("{}/streamed", batch.name), timing_cfg, || {
         sim::run_stream(g, &batch.waves, batch.budget)
     });
-    let streamed = summarize("streamed", m.median_ns, &stream_outs, &batch.expects);
+    let streamed = summarize("streamed", &m, &stream_outs, &batch.expects);
 
     // Lanes: lockstep chunks of 64 through one compiled program.
     let lane_outs = run_batch_lanes(g, &batch.cfgs);
     let m = timing::run(&format!("{}/lanes", batch.name), timing_cfg, || {
         run_batch_lanes(g, &batch.cfgs)
     });
-    let lanes = summarize("lanes", m.median_ns, &lane_outs, &batch.expects);
+    let lanes = summarize("lanes", &m, &lane_outs, &batch.expects);
+
+    // Parallel serialized stream: contiguous wave spans across the
+    // work-stealing pool. Busy time is the executor's stats delta
+    // around each iteration — never inferred from wall time.
+    let exec = Executor::new(Executor::available_parallelism().min(4));
+    let par_outs = run_batch_sstream_par(g, &batch.cfgs, &exec);
+    let m = timing::run_timed(&format!("{}/sstream-par", batch.name), timing_cfg, || {
+        let before = exec.stats();
+        let outs = run_batch_sstream_par(g, &batch.cfgs, &exec);
+        let cost = IterCost {
+            busy_ns: exec.stats().busy_ns.saturating_sub(before.busy_ns),
+            workers: exec.workers(),
+        };
+        (outs, cost)
+    });
+    let sstream_par = summarize("sstream-par", &m, &par_outs, &batch.expects);
 
     BenchRow {
         name: batch.name.clone(),
         pipelineable: batch.pipelineable,
         items: batch.cfgs.len(),
-        engines: vec![scalar, streamed, lanes],
+        engines: vec![scalar, streamed, lanes, sstream_par],
     }
 }
 
-/// Run the whole suite (six paper benchmarks + SAXPY) under all three
+/// Run the whole suite (six paper benchmarks + SAXPY) under all four
 /// engines.
 pub fn run_suite(cfg: &PerfCfg) -> Vec<BenchRow> {
     let mut rows = Vec::new();
@@ -292,6 +329,9 @@ pub fn to_json(rows: &[BenchRow], cfg: &PerfCfg) -> String {
             out.push_str("        {\n");
             writeln!(out, "          \"engine\": \"{}\",", e.engine).unwrap();
             writeln!(out, "          \"median_ns\": {:.0},", e.median_ns).unwrap();
+            writeln!(out, "          \"busy_ns\": {:.0},", e.busy_ns).unwrap();
+            writeln!(out, "          \"workers\": {},", e.workers).unwrap();
+            writeln!(out, "          \"cpu_util\": {:.3},", e.cpu_util()).unwrap();
             writeln!(out, "          \"tokens_out\": {},", e.tokens_out).unwrap();
             writeln!(out, "          \"firings\": {},", e.firings).unwrap();
             let tps = e.tokens_per_sec();
@@ -319,7 +359,7 @@ pub fn render_table(rows: &[BenchRow]) -> String {
     let mut out = String::new();
     writeln!(
         out,
-        "{:<12} {:>5} {:<10} {:>12} {:>14} {:>14} {:>8} {:>9}",
+        "{:<12} {:>5} {:<11} {:>12} {:>14} {:>14} {:>8} {:>4} {:>5} {:>9}",
         "benchmark",
         "items",
         "engine",
@@ -327,6 +367,8 @@ pub fn render_table(rows: &[BenchRow]) -> String {
         "tokens/s",
         "firings/s",
         "speedup",
+        "wkr",
+        "util",
         "verified"
     )
     .unwrap();
@@ -334,7 +376,7 @@ pub fn render_table(rows: &[BenchRow]) -> String {
         for e in &r.engines {
             writeln!(
                 out,
-                "{:<12} {:>5} {:<10} {:>12} {:>14.0} {:>14.0} {:>7.2}x {:>9}",
+                "{:<12} {:>5} {:<11} {:>12} {:>14.0} {:>14.0} {:>7.2}x {:>4} {:>5.2} {:>9}",
                 r.name,
                 r.items,
                 e.engine,
@@ -342,6 +384,8 @@ pub fn render_table(rows: &[BenchRow]) -> String {
                 e.tokens_per_sec(),
                 e.firings_per_sec(),
                 r.speedup(e.engine),
+                e.workers,
+                e.cpu_util(),
                 if e.verified { "yes" } else { "NO" }
             )
             .unwrap();
@@ -371,12 +415,19 @@ mod tests {
         assert_eq!(rows.len(), BenchId::ALL.len() + 1);
         assert!(rows.iter().any(|r| r.name == "saxpy"));
         for r in &rows {
-            assert_eq!(r.engines.len(), 3, "{}", r.name);
+            assert_eq!(r.engines.len(), 4, "{}", r.name);
             for e in &r.engines {
                 assert!(e.verified, "{}/{} failed verification", r.name, e.engine);
                 assert!(e.tokens_out > 0, "{}/{}", r.name, e.engine);
                 assert!(e.median_ns > 0.0, "{}/{}", r.name, e.engine);
+                assert!(e.workers >= 1, "{}/{}", r.name, e.engine);
             }
+            // The parallel engine reproduces the serialized-stream
+            // results token for token (same verification oracle) and
+            // reports its pool size.
+            let par = r.engine("sstream-par").unwrap();
+            let streamed = r.engine("streamed").unwrap();
+            assert_eq!(par.tokens_out, streamed.tokens_out, "{}", r.name);
         }
         let saxpy = rows.iter().find(|r| r.name == "saxpy").unwrap();
         assert!(saxpy.pipelineable);
@@ -396,6 +447,8 @@ mod tests {
         assert!(json.contains("\"schema\": \"dataflow-accel-bench/v1\""));
         assert!(json.contains("\"geomean_lane_speedup_pipelineable\""));
         assert_eq!(json.matches("\"engine\": \"lanes\"").count(), rows.len());
+        assert_eq!(json.matches("\"engine\": \"sstream-par\"").count(), rows.len());
+        assert_eq!(json.matches("\"cpu_util\":").count(), rows.len() * 4);
         // Balanced braces/brackets (a cheap structural check; CI's
         // smoke job runs a real JSON parser over the artifact).
         assert_eq!(json.matches('{').count(), json.matches('}').count());
@@ -413,6 +466,7 @@ mod tests {
             assert!(t.contains(&r.name));
         }
         assert!(t.contains("scalar") && t.contains("streamed") && t.contains("lanes"));
+        assert!(t.contains("sstream-par") && t.contains("util"));
         assert!(t.contains("geomean lane speedup"));
     }
 

@@ -1,10 +1,53 @@
 //! Renderers for the service tier: the per-tenant summary table the
 //! `serve` CLI prints, and the hand-rolled `SERVE_<k>.json` trajectory
-//! (schema `dataflow-accel-serve/v1`) the CI smoke job validates and
+//! (schema `dataflow-accel-serve/v2`) the CI smoke job validates and
 //! archives. No JSON dependency — same approach as [`super::perf`].
+//!
+//! v2 adds the parallel-dispatch fields (`workers`, `wall_ns`,
+//! `busy_ns`, `steals`, `tokens_out`, derived throughput/utilization)
+//! and a `scaling` array — one [`ScalePoint`] per worker count from
+//! the `serve --scale-workers` sweep, written only after every point's
+//! result digests were verified byte-identical to the 1-worker run.
 
 use crate::serve::{ServeReport, TenantStats};
 use std::fmt::Write as _;
+
+/// One point on the worker-scaling curve: the same profile (same
+/// seed, same trace, verified-identical results) at one worker count.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalePoint {
+    pub workers: usize,
+    pub wall_ns: u64,
+    pub busy_ns: u64,
+    pub tokens_out: u64,
+    pub completed: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+}
+
+impl ScalePoint {
+    pub fn from_report(r: &ServeReport) -> Self {
+        ScalePoint {
+            workers: r.workers,
+            wall_ns: r.wall_ns,
+            busy_ns: r.busy_ns,
+            tokens_out: r.tokens_out,
+            completed: r.global.completed,
+            p50_ns: r.global.latency.p50_ns(),
+            p95_ns: r.global.latency.p95_ns(),
+            p99_ns: r.global.latency.p99_ns(),
+        }
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / (self.wall_ns as f64 * 1e-9)
+        }
+    }
+}
 
 fn ms(ns: u64) -> f64 {
     ns as f64 / 1e6
@@ -84,6 +127,56 @@ pub fn serve_table(r: &ServeReport) -> String {
         r.global.lost()
     )
     .unwrap();
+    writeln!(
+        out,
+        "dispatch: {} worker(s), wall {:.3} ms, busy {:.3} ms, {} steal(s) | \
+         {} token(s) out, {:.0} tokens/s, util {:.2}",
+        r.workers,
+        ms(r.wall_ns),
+        ms(r.busy_ns),
+        r.steals,
+        r.tokens_out,
+        r.tokens_per_sec(),
+        r.utilization()
+    )
+    .unwrap();
+    out
+}
+
+/// The worker-scaling curve table (stdout of `serve --scale-workers`).
+pub fn scaling_table(points: &[ScalePoint]) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "{:>7} {:>12} {:>12} {:>12} {:>10} {:>9} {:>9} {:>9} {:>8}",
+        "workers",
+        "wall ms",
+        "busy ms",
+        "tokens/s",
+        "completed",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "speedup"
+    )
+    .unwrap();
+    let base = points.first().map(|p| p.wall_ns).unwrap_or(0);
+    for p in points {
+        writeln!(
+            out,
+            "{:>7} {:>12.3} {:>12.3} {:>12.0} {:>10} {:>9.3} {:>9.3} {:>9.3} {:>7.2}x",
+            p.workers,
+            ms(p.wall_ns),
+            ms(p.busy_ns),
+            p.tokens_per_sec(),
+            p.completed,
+            ms(p.p50_ns),
+            ms(p.p95_ns),
+            ms(p.p99_ns),
+            base as f64 / p.wall_ns.max(1) as f64
+        )
+        .unwrap();
+    }
     out
 }
 
@@ -128,12 +221,20 @@ fn stats_json(out: &mut String, indent: &str, t: &TenantStats) {
     writeln!(out, "{indent}}}").unwrap();
 }
 
-/// Serialize a profile run (schema `dataflow-accel-serve/v1`). The
-/// caller echoes its profile parameters so reruns are reproducible.
-pub fn to_json(r: &ServeReport, seed: u64, scale: usize, n: usize, quick: bool) -> String {
+/// Serialize a profile run (schema `dataflow-accel-serve/v2`). The
+/// caller echoes its profile parameters so reruns are reproducible;
+/// `scaling` is the `--scale-workers` sweep (empty for a single run).
+pub fn to_json(
+    r: &ServeReport,
+    seed: u64,
+    scale: usize,
+    n: usize,
+    quick: bool,
+    scaling: &[ScalePoint],
+) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"dataflow-accel-serve/v1\",\n");
+    out.push_str("  \"schema\": \"dataflow-accel-serve/v2\",\n");
     writeln!(out, "  \"seed\": {seed},").unwrap();
     writeln!(out, "  \"scale\": {scale},").unwrap();
     writeln!(out, "  \"n\": {n},").unwrap();
@@ -144,6 +245,29 @@ pub fn to_json(r: &ServeReport, seed: u64, scale: usize, n: usize, quick: bool) 
     writeln!(out, "  \"cache_misses\": {},", r.cache_misses).unwrap();
     writeln!(out, "  \"cache_evictions\": {},", r.cache_evictions).unwrap();
     writeln!(out, "  \"lane_scalar_reruns\": {},", r.lane_scalar_reruns).unwrap();
+    writeln!(out, "  \"workers\": {},", r.workers).unwrap();
+    writeln!(out, "  \"wall_ns\": {},", r.wall_ns).unwrap();
+    writeln!(out, "  \"busy_ns\": {},", r.busy_ns).unwrap();
+    writeln!(out, "  \"steals\": {},", r.steals).unwrap();
+    writeln!(out, "  \"tokens_out\": {},", r.tokens_out).unwrap();
+    writeln!(out, "  \"tokens_per_sec\": {:.1},", r.tokens_per_sec()).unwrap();
+    writeln!(out, "  \"utilization\": {:.3},", r.utilization()).unwrap();
+    out.push_str("  \"scaling\": [\n");
+    for (i, p) in scaling.iter().enumerate() {
+        let comma = if i + 1 < scaling.len() { "," } else { "" };
+        out.push_str("    {\n");
+        writeln!(out, "      \"workers\": {},", p.workers).unwrap();
+        writeln!(out, "      \"wall_ns\": {},", p.wall_ns).unwrap();
+        writeln!(out, "      \"busy_ns\": {},", p.busy_ns).unwrap();
+        writeln!(out, "      \"tokens_out\": {},", p.tokens_out).unwrap();
+        writeln!(out, "      \"tokens_per_sec\": {:.1},", p.tokens_per_sec()).unwrap();
+        writeln!(out, "      \"completed\": {},", p.completed).unwrap();
+        writeln!(out, "      \"p50_ns\": {},", p.p50_ns).unwrap();
+        writeln!(out, "      \"p95_ns\": {},", p.p95_ns).unwrap();
+        writeln!(out, "      \"p99_ns\": {}", p.p99_ns).unwrap();
+        writeln!(out, "    }}{comma}").unwrap();
+    }
+    out.push_str("  ],\n");
     out.push_str("  \"global\": {\n");
     stats_json(&mut out, "    ", &r.global);
     out.push_str("  },\n");
@@ -179,24 +303,53 @@ mod tests {
         assert!(t.contains("global"));
         assert!(t.contains("p99 ms"));
         assert!(t.contains("lost requests 0"), "{t}");
+        assert!(t.contains("dispatch: 1 worker(s)"), "{t}");
+        assert!(t.contains("tokens/s"), "{t}");
     }
 
     #[test]
     fn json_is_structurally_sound_and_carries_the_schema() {
         let r = tiny_report();
-        let json = to_json(&r, 11, 2, 3, true);
+        let scaling = [ScalePoint::from_report(&r)];
+        let json = to_json(&r, 11, 2, 3, true, &scaling);
         assert!(json.starts_with("{\n") && json.ends_with("}\n"));
-        assert!(json.contains("\"schema\": \"dataflow-accel-serve/v1\""));
+        assert!(json.contains("\"schema\": \"dataflow-accel-serve/v2\""));
         for field in ["\"p50_ns\"", "\"p95_ns\"", "\"p99_ns\""] {
             assert!(
-                json.matches(field).count() >= r.tenants.len() + 1,
+                json.matches(field).count() >= r.tenants.len() + 2,
                 "{field} missing"
             );
         }
         assert!(json.contains("\"lost\": 0"));
         assert!(json.contains("\"cache_hits\""));
+        assert!(json.contains("\"workers\": 1"));
+        assert!(json.contains("\"scaling\": ["));
+        assert!(json.contains("\"tokens_per_sec\""));
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
         assert!(!json.contains("NaN") && !json.contains("inf"));
+    }
+
+    #[test]
+    fn empty_scaling_sweep_serializes_cleanly() {
+        let r = tiny_report();
+        let json = to_json(&r, 11, 2, 3, true, &[]);
+        assert!(json.contains("\"scaling\": [\n  ],"));
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn scaling_table_reports_every_worker_count() {
+        let r = tiny_report();
+        let mut p = ScalePoint::from_report(&r);
+        let mut points = vec![p];
+        p.workers = 2;
+        p.wall_ns = p.wall_ns.max(2) / 2;
+        points.push(p);
+        let t = scaling_table(&points);
+        assert!(t.contains("workers"));
+        assert!(t.contains("speedup"));
+        // Two data rows below the header.
+        assert_eq!(t.lines().count(), 3, "{t}");
     }
 }

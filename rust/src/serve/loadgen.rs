@@ -162,6 +162,49 @@ pub enum Arrival {
     /// Open loop: `burst` requests per tenant per tick regardless of
     /// completions — the oversubscription / shedding regime.
     Open { burst: usize },
+    /// Open-loop concurrency sweep: the per-tenant burst *ramps* —
+    /// `base` at tick 1, growing by `step` per tick, capped at `cap` —
+    /// so in-flight batches pile up until every worker of an N-worker
+    /// pool has independent work. Deterministic in the tick alone:
+    /// same seed + same arrival ⇒ same trace, at any worker count.
+    BurstSeries {
+        base: usize,
+        step: usize,
+        cap: usize,
+    },
+}
+
+impl Arrival {
+    /// Requests per tenant arriving at `tick` (1-based) for the
+    /// open-loop modes; `None` for [`Arrival::Closed`], whose arrivals
+    /// depend on queue occupancy rather than the tick.
+    pub fn burst_at(self, tick: u64) -> Option<usize> {
+        match self {
+            Arrival::Closed => None,
+            Arrival::Open { burst } => Some(burst.max(1)),
+            Arrival::BurstSeries { base, step, cap } => {
+                let ramp =
+                    base.saturating_add(step.saturating_mul(tick.saturating_sub(1) as usize));
+                // Not `clamp`: `cap` may legitimately sit below 1's
+                // floor only when misconfigured, and the floor wins.
+                let capped = if ramp > cap { cap } else { ramp };
+                Some(capped.max(1))
+            }
+        }
+    }
+}
+
+/// The burst series sized to saturate an N-worker pool: starts at N
+/// per tenant per tick and ramps to 8·N, so the dispatch loop always
+/// has several same-graph batches in flight per worker once the ramp
+/// tops out.
+pub fn burst_series(workers: usize) -> Arrival {
+    let w = workers.max(1);
+    Arrival::BurstSeries {
+        base: w,
+        step: w,
+        cap: 8 * w,
+    }
 }
 
 /// A complete load profile: tenants, arrival pattern, workload size,
@@ -287,6 +330,38 @@ mod tests {
         // Two arms × at most RANDOM_GRAPH_FAMILY graph seeds.
         assert!(hints.len() <= 2 * RANDOM_GRAPH_FAMILY as usize);
         assert!(!hints.is_empty());
+    }
+
+    #[test]
+    fn burst_series_ramps_and_caps() {
+        let a = burst_series(4);
+        assert_eq!(a.burst_at(1), Some(4));
+        assert_eq!(a.burst_at(2), Some(8));
+        assert_eq!(a.burst_at(5), Some(20));
+        // Capped at 8 × workers from tick 8 on.
+        assert_eq!(a.burst_at(8), Some(32));
+        assert_eq!(a.burst_at(1000), Some(32));
+        // Closed has no tick-determined burst; Open is flat.
+        assert_eq!(Arrival::Closed.burst_at(3), None);
+        assert_eq!(Arrival::Open { burst: 4 }.burst_at(999), Some(4));
+        // Degenerate worker counts still offer at least one request.
+        assert_eq!(burst_series(0), burst_series(1));
+        assert!(burst_series(1).burst_at(1).unwrap() >= 1);
+    }
+
+    #[test]
+    fn burst_series_traces_are_deterministic() {
+        // The arrival mode never feeds the trace generator — same seed
+        // ⇒ same trace under any arrival, which is what makes the
+        // worker-count sweep compare like with like.
+        let mut p = standard_profile(6, 4, 11);
+        p.arrival = burst_series(4);
+        let with_burst: Vec<_> = (0..p.tenants.len()).map(|t| tenant_trace(&p, t)).collect();
+        let mut q = p.clone();
+        q.arrival = Arrival::Closed;
+        for t in 0..p.tenants.len() {
+            assert_eq!(with_burst[t], tenant_trace(&q, t));
+        }
     }
 
     #[test]

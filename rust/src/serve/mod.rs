@@ -32,6 +32,16 @@
 //! [`crate::report::serve`] renders the summary table and the
 //! machine-readable `SERVE_<k>.json`; the `serve` CLI subcommand runs
 //! a load profile end to end. DESIGN.md §8 states the invariants.
+//!
+//! **Parallel dispatch (PR 6).** `run_profile` optionally executes
+//! dispatched batches on a [`crate::par::Executor`] work-stealing pool
+//! (`ServeOptions::workers`), with the session cache lock-striped so
+//! warm lookups don't serialize the dispatch loop. The tick loop's
+//! decisions never read execution results, so schedules — and
+//! therefore per-request results ([`outcome_digest`]) — are
+//! byte-identical at every worker count; the `serve --scale-workers`
+//! sweep verifies exactly that before writing `SERVE_6.json`.
+//! DESIGN.md §10 states the threading model.
 
 pub mod loadgen;
 pub mod sched;
@@ -39,11 +49,12 @@ pub mod session;
 pub mod stats;
 
 pub use loadgen::{
-    standard_profile, tenant_trace, Arrival, LoadProfile, ServeRequest, TenantSpec, WorkKind,
+    burst_series, standard_profile, tenant_trace, Arrival, LoadProfile, ServeRequest, TenantSpec,
+    WorkKind,
 };
 pub use sched::{
-    choose_engine, execute_batch, run_profile, Admission, BatchResult, DispatchRec, EngineChoice,
-    ProfileOutcome, Scheduler, ServeCfg, ServeOptions,
+    choose_engine, execute_batch, execute_batch_par, outcome_digest, run_profile, Admission,
+    BatchResult, DispatchRec, EngineChoice, ProfileOutcome, Scheduler, ServeCfg, ServeOptions,
 };
-pub use session::{RoutePlan, SessionCache, WarmState};
+pub use session::{RoutePlan, SessionCache, WarmState, DEFAULT_STRIPES};
 pub use stats::{Histogram, ServeCollector, ServeReport, ShedReason, TenantStats};

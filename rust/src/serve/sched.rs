@@ -36,15 +36,18 @@
 //! unplaceable graphs fall back to the infinite-fabric engine.
 
 use super::loadgen::{self, Arrival, LoadProfile, ServeRequest, TenantSpec, WorkItem};
-use super::session::{RoutePlan, SessionCache, WarmState};
+use super::session::{RoutePlan, SessionCache, WarmState, DEFAULT_STRIPES};
 use super::stats::{ServeCollector, ServeReport, ShedReason};
 use crate::coordinator::batch::{
-    run_batch_lanes_prog, run_batch_native, run_batch_reconfig, run_batch_sharded,
+    run_batch_lanes_par, run_batch_lanes_prog, run_batch_native, run_batch_reconfig,
+    run_batch_sharded, run_batch_sharded_par,
 };
 use crate::fabric::FabricTopology;
+use crate::opt::OptLevel;
+use crate::par::Executor;
 use crate::sim::stream::run_stream_prevalidated;
 use crate::sim::{run_token, SimConfig, SimOutcome, WaveInput, WaveMode};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 /// Scheduler knobs.
@@ -248,6 +251,30 @@ pub struct BatchResult {
 /// requests must share a [`ServeRequest::cache_hint`]. Public so tests
 /// can drive the cold/warm byte-identity contract directly.
 pub fn execute_batch(cache: &SessionCache, reqs: &[ServeRequest]) -> BatchResult {
+    execute_batch_inner(cache, reqs, None)
+}
+
+/// [`execute_batch`] with intra-batch parallelism: the lane chunks and
+/// shard items of this ONE batch spread across `exec`'s workers
+/// ([`run_batch_lanes_par`] / [`run_batch_sharded_par`]). Outcomes are
+/// byte-identical to [`execute_batch`] at every worker count — the
+/// `par_determinism_*` conformance properties enforce it. Pipelined
+/// stream batches stay serial (waves overlapping inside one resident
+/// session are the point of that engine); `run_profile` gets its
+/// parallelism for those from batch-level dispatch instead.
+pub fn execute_batch_par(
+    cache: &SessionCache,
+    reqs: &[ServeRequest],
+    exec: &Executor,
+) -> BatchResult {
+    execute_batch_inner(cache, reqs, Some(exec))
+}
+
+fn execute_batch_inner(
+    cache: &SessionCache,
+    reqs: &[ServeRequest],
+    exec: Option<&Executor>,
+) -> BatchResult {
     assert!(!reqs.is_empty(), "empty batch");
     let hint = reqs[0].cache_hint();
     debug_assert!(
@@ -282,13 +309,17 @@ pub fn execute_batch(cache: &SessionCache, reqs: &[ServeRequest]) -> BatchResult
             run_stream_prevalidated(g, &waves, budget, WaveMode::Pipelined).0
         }
         (EngineChoice::Lanes, _) => {
-            let (outs, stats) = run_batch_lanes_prog(g, &state.program, &cfgs);
+            let (outs, stats) = match exec {
+                Some(e) => run_batch_lanes_par(g, &state.program, &cfgs, e),
+                None => run_batch_lanes_prog(g, &state.program, &cfgs),
+            };
             lane_scalar_reruns = stats.scalar_reruns as u64;
             outs
         }
-        (EngineChoice::Sharded, RoutePlan::Sharded(plan)) => {
-            run_batch_sharded(plan, &cfgs, waves_resident)
-        }
+        (EngineChoice::Sharded, RoutePlan::Sharded(plan)) => match exec {
+            Some(e) => run_batch_sharded_par(plan, &cfgs, waves_resident, e),
+            None => run_batch_sharded(plan, &cfgs, waves_resident),
+        },
         (EngineChoice::Reconfig, RoutePlan::Reconfig(plan)) => {
             run_batch_reconfig(plan, cache.topology(), &cfgs, waves_resident)
         }
@@ -324,6 +355,15 @@ pub struct ServeOptions {
     pub pool_size: usize,
     /// Session-cache capacity (distinct warm graphs).
     pub cache_cap: usize,
+    /// Session-cache lock stripes ([`crate::serve::session`]).
+    pub cache_stripes: usize,
+    /// Dispatch workers. 1 = the classic inline loop (no threads).
+    /// N > 1 executes dispatched batches on an N-worker stealing pool
+    /// ([`crate::par::Executor`]) while the tick loop keeps admitting
+    /// and dispatching; the dispatch schedule never reads execution
+    /// results, so schedules — and therefore results — are identical
+    /// at every worker count (DESIGN.md §10).
+    pub workers: usize,
     pub cfg: ServeCfg,
 }
 
@@ -336,6 +376,8 @@ impl Default for ServeOptions {
             topo: FabricTopology::serving(),
             pool_size: 2,
             cache_cap: 32,
+            cache_stripes: DEFAULT_STRIPES,
+            workers: 1,
             cfg: ServeCfg::default(),
         }
     }
@@ -356,18 +398,90 @@ pub struct ProfileOutcome {
     pub report: ServeReport,
     /// The deterministic dispatch sequence (tick-driven scheduling).
     pub dispatches: Vec<DispatchRec>,
+    /// `(tenant, request seq)` → [`outcome_digest`] of that request's
+    /// result, for every completed request. This is the byte-identity
+    /// witness: the `--scale-workers` sweep and the conformance
+    /// harness require these maps to be *equal* (same completed set,
+    /// same digests) across worker counts.
+    pub digests: BTreeMap<(usize, usize), u64>,
 }
 
-/// Drive a load profile to completion: per tick, admit arrivals
-/// (closed-loop window top-up or open-loop burst), then dispatch at
-/// most one weighted-fair batch. Runs until every trace is offered and
-/// every queue drains; every submitted request ends as completed or
-/// explicitly shed.
-pub fn run_profile(profile: &LoadProfile, opts: &ServeOptions) -> ProfileOutcome {
-    let cache = SessionCache::new(opts.topo.clone(), opts.pool_size, opts.cache_cap);
-    let names: Vec<String> = profile.tenants.iter().map(|t| t.name.clone()).collect();
-    let mut collector = ServeCollector::new(&names);
-    let mut sched = Scheduler::new(&profile.tenants, opts.cfg.clone());
+fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Order-stable FNV-1a digest of everything a [`SimOutcome`] asserts:
+/// every output stream (port names and token values), cycle count,
+/// firing count, and quiescence. Two outcomes digest equal iff the
+/// engine produced byte-identical results.
+pub fn outcome_digest(out: &SimOutcome) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for (port, stream) in &out.outputs {
+        h = fnv(h, port.as_bytes());
+        h = fnv(h, &[0xFF]);
+        for w in stream {
+            h = fnv(h, &w.to_le_bytes());
+        }
+        h = fnv(h, &[0xFE]);
+    }
+    h = fnv(h, &out.cycles.to_le_bytes());
+    h = fnv(h, &out.firings.to_le_bytes());
+    fnv(h, &[u8::from(out.quiescent)])
+}
+
+/// One dispatched batch after execution, carrying everything the
+/// post-loop record phase needs (no scheduler state).
+struct ExecutedBatch {
+    tenant: usize,
+    result: BatchResult,
+    /// Per item: (request seq, wait ticks at dispatch, wall latency in
+    /// nanoseconds measured when execution finished).
+    items: Vec<(usize, u64, u64)>,
+    /// Wall time of `execute_batch` alone — summed over batches this
+    /// is the pool's busy time.
+    exec_ns: u64,
+}
+
+fn exec_one(cache: &SessionCache, tick: u64, tenant: usize, batch: &[Pending]) -> ExecutedBatch {
+    let reqs: Vec<ServeRequest> = batch.iter().map(|p| p.req.clone()).collect();
+    let t0 = Instant::now();
+    let result = execute_batch(cache, &reqs);
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+    let items = batch
+        .iter()
+        .map(|p| {
+            (
+                p.req.seq,
+                tick.saturating_sub(p.admitted_tick),
+                p.submitted.elapsed().as_nanos() as u64,
+            )
+        })
+        .collect();
+    ExecutedBatch {
+        tenant,
+        result,
+        items,
+        exec_ns,
+    }
+}
+
+/// The tick loop, shared verbatim by the serial and parallel paths:
+/// per tick, admit arrivals (closed-loop window top-up or open-loop
+/// burst), then hand at most one weighted-fair batch to `sink`. The
+/// loop never reads execution results — admission, shedding, batching,
+/// and termination depend only on queue state — which is exactly why
+/// executing `sink`'s batches asynchronously cannot change the
+/// schedule (DESIGN.md §10).
+fn drive_profile(
+    profile: &LoadProfile,
+    cfg: &ServeCfg,
+    collector: &mut ServeCollector,
+    mut sink: impl FnMut(u64, usize, Vec<Pending>),
+) -> (u64, Vec<DispatchRec>) {
+    let mut sched = Scheduler::new(&profile.tenants, cfg.clone());
     let traces: Vec<Vec<ServeRequest>> = (0..profile.tenants.len())
         .map(|t| loadgen::tenant_trace(profile, t))
         .collect();
@@ -382,7 +496,7 @@ pub fn run_profile(profile: &LoadProfile, opts: &ServeOptions) -> ProfileOutcome
                     .window
                     .max(1)
                     .saturating_sub(sched.queued(t)),
-                Arrival::Open { burst } => burst.max(1),
+                open => open.burst_at(tick).unwrap_or(1),
             };
             for _ in 0..want {
                 if cursor[t] >= trace.len() {
@@ -406,21 +520,7 @@ pub fn run_profile(profile: &LoadProfile, opts: &ServeOptions) -> ProfileOutcome
                     tick,
                     len: batch.len(),
                 });
-                let reqs: Vec<ServeRequest> = batch.iter().map(|p| p.req.clone()).collect();
-                let result = execute_batch(&cache, &reqs);
-                collector.batch(tenant, result.engine, reqs.len());
-                collector.lane_scalar_reruns(result.lane_scalar_reruns);
-                for ((p, out), verified) in
-                    batch.iter().zip(&result.outcomes).zip(&result.verified)
-                {
-                    collector.completed(
-                        tenant,
-                        *verified,
-                        p.submitted.elapsed().as_nanos() as u64,
-                        tick.saturating_sub(p.admitted_tick),
-                        out.cycles,
-                    );
-                }
+                sink(tick, tenant, batch);
             }
             None => {
                 if drained && sched.idle() {
@@ -429,9 +529,80 @@ pub fn run_profile(profile: &LoadProfile, opts: &ServeOptions) -> ProfileOutcome
             }
         }
     }
+    (tick, dispatches)
+}
+
+/// Drive a load profile to completion. Runs until every trace is
+/// offered and every queue drains; every submitted request ends as
+/// completed or explicitly shed.
+///
+/// With `opts.workers <= 1` dispatched batches execute inline on the
+/// caller thread, exactly as before the parallel tier existed. With
+/// `opts.workers > 1` they execute on a work-stealing pool while the
+/// tick loop keeps going ([`Executor::pipeline`]); results are
+/// recorded post-loop in dispatch order, so every report field except
+/// wall-clock latencies/steals is identical across worker counts, and
+/// the per-request [`ProfileOutcome::digests`] are *byte*-identical.
+pub fn run_profile(profile: &LoadProfile, opts: &ServeOptions) -> ProfileOutcome {
+    let wall0 = Instant::now();
+    let cache = SessionCache::with_stripes(
+        opts.topo.clone(),
+        opts.pool_size,
+        opts.cache_cap,
+        OptLevel::Default,
+        opts.cache_stripes,
+    );
+    let names: Vec<String> = profile.tenants.iter().map(|t| t.name.clone()).collect();
+    let mut collector = ServeCollector::new(&names);
+    let workers = opts.workers.max(1);
+    let exec = Executor::new(workers);
+    let (ticks, dispatches, executed) = if workers <= 1 {
+        let mut executed = Vec::new();
+        let (ticks, dispatches) =
+            drive_profile(profile, &opts.cfg, &mut collector, |tick, tenant, batch| {
+                executed.push(exec_one(&cache, tick, tenant, &batch));
+            });
+        (ticks, dispatches, executed)
+    } else {
+        let cache_ref = &cache;
+        let ((ticks, dispatches), executed) = exec.pipeline(|sub| {
+            drive_profile(profile, &opts.cfg, &mut collector, |tick, tenant, batch| {
+                sub.submit(move || exec_one(cache_ref, tick, tenant, &batch));
+            })
+        });
+        (ticks, dispatches, executed)
+    };
+    // Record phase: identical bookkeeping for both modes, in dispatch
+    // order (the executor sorts results back into submission order).
+    let mut digests = BTreeMap::new();
+    let mut busy_ns = 0u64;
+    let mut tokens_out = 0u64;
+    for eb in &executed {
+        busy_ns += eb.exec_ns;
+        collector.batch(eb.tenant, eb.result.engine, eb.items.len());
+        collector.lane_scalar_reruns(eb.result.lane_scalar_reruns);
+        for ((item, out), verified) in eb
+            .items
+            .iter()
+            .zip(&eb.result.outcomes)
+            .zip(&eb.result.verified)
+        {
+            let (seq, wait, latency) = *item;
+            collector.completed(eb.tenant, *verified, latency, wait, out.cycles);
+            tokens_out += out.outputs.values().map(|s| s.len() as u64).sum::<u64>();
+            digests.insert((eb.tenant, seq), outcome_digest(out));
+        }
+    }
+    let mut report = collector.finish(&cache, ticks);
+    report.workers = workers;
+    report.wall_ns = wall0.elapsed().as_nanos() as u64;
+    report.busy_ns = busy_ns;
+    report.steals = exec.stats().steals;
+    report.tokens_out = tokens_out;
     ProfileOutcome {
-        report: collector.finish(&cache, tick),
+        report,
         dispatches,
+        digests,
     }
 }
 

@@ -24,6 +24,16 @@
 //! graph *is* a different key — entries are never stale, only cold.
 //! Capacity is bounded; least-recently-used entries are evicted.
 //!
+//! **Striping.** The cache is sharded into K lock-striped segments
+//! (fingerprint-hashed) plus K hint-index stripes, so N dispatch
+//! workers doing warm lookups contend only when they hash to the same
+//! stripe, instead of serializing on one global mutex. Capacity and
+//! LRU eviction are per-segment (`ceil(cap / K)` entries each); the
+//! hit/miss/eviction counters are process-wide atomics. Lock order is
+//! one-way — a segment lock may acquire hint-stripe locks (eviction
+//! purge), a held hint lock never acquires a segment lock — so the
+//! striped paths cannot deadlock.
+//!
 //! **Optimization.** A warm miss runs the graph through the
 //! [`crate::opt`] pipeline before compiling/placing, and everything
 //! downstream (compiled program, route, admission class) is computed
@@ -97,26 +107,34 @@ pub struct WarmState {
 
 type Key = (u64, OptLevel);
 
-struct Inner {
+/// One lock-striped cache segment: a fingerprint-keyed map plus its
+/// own LRU list. Segments never talk to each other.
+#[derive(Default)]
+struct Segment {
     by_fp: BTreeMap<Key, Arc<WarmState>>,
-    /// Secondary index: a caller-stable hint key (benchmark slug,
-    /// generator seed) → cache key, so hot-path hits skip even the
-    /// graph build.
-    by_hint: BTreeMap<String, Key>,
-    /// Cache keys, least recently used first.
+    /// Cache keys in this segment, least recently used first.
     lru: VecDeque<Key>,
 }
 
+/// Default segment / hint-stripe count ([`SessionCache::new`]).
+pub const DEFAULT_STRIPES: usize = 4;
+
 /// A bounded, thread-safe cache of [`WarmState`] keyed by
 /// [`Graph::fingerprint`], for one serving tier (one topology + pool).
+/// Lock-striped: see the module docs.
 pub struct SessionCache {
     topo: FabricTopology,
     pool_size: usize,
-    cap: usize,
+    /// Per-segment capacity (`ceil(cap / stripes)`).
+    seg_cap: usize,
     /// The level [`SessionCache::warm`]/[`SessionCache::warm_keyed`]
     /// build at; [`SessionCache::warm_at`] overrides per call.
     level: OptLevel,
-    inner: Mutex<Inner>,
+    segments: Vec<Mutex<Segment>>,
+    /// Secondary index: a caller-stable hint key (benchmark slug,
+    /// generator seed) → cache key, so hot-path hits skip even the
+    /// graph build. Striped separately from the segments.
+    hints: Vec<Mutex<BTreeMap<String, Key>>>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -124,8 +142,8 @@ pub struct SessionCache {
 
 impl SessionCache {
     /// A cache for a pool of `pool_size` instances of `topo`, holding
-    /// at most `cap` distinct graphs, optimizing at
-    /// [`OptLevel::Default`].
+    /// at most `cap` distinct graphs across [`DEFAULT_STRIPES`]
+    /// segments, optimizing at [`OptLevel::Default`].
     pub fn new(topo: FabricTopology, pool_size: usize, cap: usize) -> Self {
         Self::with_level(topo, pool_size, cap, OptLevel::Default)
     }
@@ -137,20 +155,50 @@ impl SessionCache {
         cap: usize,
         level: OptLevel,
     ) -> Self {
+        Self::with_stripes(topo, pool_size, cap, level, DEFAULT_STRIPES)
+    }
+
+    /// Fully explicit constructor: `stripes` lock-striped segments
+    /// (clamped to at least 1), each holding `ceil(cap / stripes)`
+    /// entries. `stripes = 1` reproduces a single global LRU exactly —
+    /// the capacity tests and any caller needing strict whole-cache
+    /// LRU semantics use that.
+    pub fn with_stripes(
+        topo: FabricTopology,
+        pool_size: usize,
+        cap: usize,
+        level: OptLevel,
+        stripes: usize,
+    ) -> Self {
+        let stripes = stripes.max(1);
         SessionCache {
             topo,
             pool_size: pool_size.max(1),
-            cap: cap.max(1),
+            seg_cap: cap.max(1).div_ceil(stripes).max(1),
             level,
-            inner: Mutex::new(Inner {
-                by_fp: BTreeMap::new(),
-                by_hint: BTreeMap::new(),
-                lru: VecDeque::new(),
-            }),
+            segments: (0..stripes).map(|_| Mutex::new(Segment::default())).collect(),
+            hints: (0..stripes).map(|_| Mutex::new(BTreeMap::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
+    }
+
+    fn segment_of(&self, key: Key) -> usize {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in key.0.to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3);
+        }
+        h = (h ^ key.1 as u64).wrapping_mul(0x100_0000_01b3);
+        (h % self.segments.len() as u64) as usize
+    }
+
+    fn hint_stripe(&self, hint: &str) -> usize {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in hint.as_bytes() {
+            h = (h ^ u64::from(*b)).wrapping_mul(0x100_0000_01b3);
+        }
+        (h % self.hints.len() as u64) as usize
     }
 
     /// The level parameter-less lookups build at.
@@ -176,13 +224,21 @@ impl SessionCache {
         self.evictions.load(Ordering::Relaxed)
     }
 
-    /// Distinct graphs currently warm.
+    /// Distinct graphs currently warm (summed over segments).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().by_fp.len()
+        self.segments
+            .iter()
+            .map(|s| s.lock().unwrap().by_fp.len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Number of lock stripes (segments).
+    pub fn stripes(&self) -> usize {
+        self.segments.len()
     }
 
     /// Warm state for `g` at the cache's default level: a hit returns
@@ -198,10 +254,11 @@ impl SessionCache {
     /// miss with its own entry.
     pub fn warm_at(&self, g: &Graph, level: OptLevel) -> (Arc<WarmState>, bool) {
         let key = (g.fingerprint(), level);
+        let si = self.segment_of(key);
         {
-            let mut inner = self.inner.lock().unwrap();
-            if let Some(state) = inner.by_fp.get(&key).cloned() {
-                touch(&mut inner.lru, key);
+            let mut seg = self.segments[si].lock().unwrap();
+            if let Some(state) = seg.by_fp.get(&key).cloned() {
+                touch(&mut seg.lru, key);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return (state, true);
             }
@@ -211,18 +268,22 @@ impl SessionCache {
         // loses the insert).
         let state = Arc::new(self.build_state(key, g));
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut inner = self.inner.lock().unwrap();
-        if let Some(existing) = inner.by_fp.get(&key).cloned() {
-            touch(&mut inner.lru, key);
+        let mut seg = self.segments[si].lock().unwrap();
+        if let Some(existing) = seg.by_fp.get(&key).cloned() {
+            touch(&mut seg.lru, key);
             return (existing, false);
         }
-        inner.by_fp.insert(key, Arc::clone(&state));
-        inner.lru.push_back(key);
-        while inner.by_fp.len() > self.cap {
-            if let Some(old) = inner.lru.pop_front() {
-                inner.by_fp.remove(&old);
-                inner.by_hint.retain(|_, v| *v != old);
+        seg.by_fp.insert(key, Arc::clone(&state));
+        seg.lru.push_back(key);
+        while seg.by_fp.len() > self.seg_cap {
+            if let Some(old) = seg.lru.pop_front() {
+                seg.by_fp.remove(&old);
                 self.evictions.fetch_add(1, Ordering::Relaxed);
+                // Purge hints naming the evicted key. Lock order:
+                // segment → hint stripe only, never the reverse.
+                for h in &self.hints {
+                    h.lock().unwrap().retain(|_, v| *v != old);
+                }
             }
         }
         (state, false)
@@ -237,21 +298,24 @@ impl SessionCache {
         hint: &str,
         build: impl FnOnce() -> Graph,
     ) -> (Arc<WarmState>, bool) {
-        {
-            let mut inner = self.inner.lock().unwrap();
-            if let Some(&fp) = inner.by_hint.get(hint) {
-                if let Some(state) = inner.by_fp.get(&fp).cloned() {
-                    touch(&mut inner.lru, fp);
-                    self.hits.fetch_add(1, Ordering::Relaxed);
-                    return (state, true);
-                }
+        let hi = self.hint_stripe(hint);
+        // Read the hint under its stripe lock, then RELEASE it before
+        // touching any segment — the one-way lock order that keeps the
+        // striped cache deadlock-free.
+        let known = self.hints[hi].lock().unwrap().get(hint).copied();
+        if let Some(key) = known {
+            let mut seg = self.segments[self.segment_of(key)].lock().unwrap();
+            if let Some(state) = seg.by_fp.get(&key).cloned() {
+                touch(&mut seg.lru, key);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return (state, true);
             }
         }
         let g = build();
         let (state, hit) = self.warm(&g);
-        let mut inner = self.inner.lock().unwrap();
-        inner
-            .by_hint
+        self.hints[hi]
+            .lock()
+            .unwrap()
             .insert(hint.to_string(), (state.fingerprint, state.opt_level));
         (state, hit)
     }
@@ -348,7 +412,10 @@ mod tests {
 
     #[test]
     fn capacity_evicts_lru() {
-        let c = cache(2);
+        // One stripe = one global LRU: exact whole-cache capacity
+        // semantics, the configuration this test pins down.
+        let c = SessionCache::with_stripes(FabricTopology::paper(), 2, 2, OptLevel::Default, 1);
+        assert_eq!(c.stripes(), 1);
         for b in [BenchId::Fibonacci, BenchId::Max, BenchId::DotProd] {
             c.warm(&bench_defs::build(b));
         }
@@ -358,6 +425,57 @@ mod tests {
         c.warm(&bench_defs::build(BenchId::Fibonacci));
         assert_eq!(c.misses(), 4);
         assert!(c.summary().contains("2 warm graph(s)"));
+    }
+
+    #[test]
+    fn striped_cache_concurrent_warms_converge() {
+        // N threads warming the same small graph set race on the
+        // stripes; every thread must land on consistent interned state
+        // and the cache must end exactly as warm as a serial pass.
+        let c = cache(16);
+        let benches = [BenchId::Fibonacci, BenchId::Max, BenchId::DotProd];
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for b in benches {
+                        let g = bench_defs::build(b);
+                        let (state, _) = c.warm(&g);
+                        assert_eq!(state.fingerprint, g.fingerprint());
+                    }
+                });
+            }
+        });
+        assert!(c.stripes() > 1);
+        assert_eq!(c.len(), benches.len());
+        // 4 threads × 3 graphs = 12 lookups; racing builders may each
+        // count a miss, but at least one per graph must.
+        assert_eq!(c.hits() + c.misses(), 12);
+        assert!(c.misses() >= benches.len() as u64);
+        // The interned state is shared: a fresh warm is a pure hit.
+        for b in benches {
+            let (_, hit) = c.warm(&bench_defs::build(b));
+            assert!(hit);
+        }
+    }
+
+    #[test]
+    fn striped_eviction_purges_hints() {
+        // stripes=1 + cap=1 forces every new graph to evict the
+        // previous one; the hint index must never dangle.
+        let c = SessionCache::with_stripes(FabricTopology::paper(), 2, 1, OptLevel::Default, 1);
+        let (a, _) = c.warm_keyed("bench:fibonacci", || bench_defs::build(BenchId::Fibonacci));
+        let (b, _) = c.warm_keyed("bench:max", || bench_defs::build(BenchId::Max));
+        assert_ne!(a.fingerprint, b.fingerprint);
+        assert_eq!(c.len(), 1);
+        assert!(c.evictions() >= 1);
+        // The evicted hint rebuilds (miss), the resident one hits.
+        let mut rebuilt = false;
+        let (a2, hit) = c.warm_keyed("bench:fibonacci", || {
+            rebuilt = true;
+            bench_defs::build(BenchId::Fibonacci)
+        });
+        assert!(rebuilt && !hit);
+        assert_eq!(a2.fingerprint, a.fingerprint);
     }
 
     #[test]

@@ -198,6 +198,38 @@ pub struct ServeReport {
     pub ticks: u64,
     /// Lane items re-run on the scalar engine (lanes→scalar fallback).
     pub lane_scalar_reruns: u64,
+    /// Dispatch workers the profile ran with (1 = inline loop).
+    pub workers: usize,
+    /// Wall time of the whole profile run.
+    pub wall_ns: u64,
+    /// Summed batch-execution time across all workers — can exceed
+    /// `wall_ns` by up to a factor of `workers`.
+    pub busy_ns: u64,
+    /// Tasks the executor's workers obtained by stealing.
+    pub steals: u64,
+    /// Total output tokens across every completed request.
+    pub tokens_out: u64,
+}
+
+impl ServeReport {
+    /// Output tokens per wall-clock second — the scaling curve's
+    /// throughput axis.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / (self.wall_ns as f64 * 1e-9)
+        }
+    }
+
+    /// Mean fraction of the pool kept busy (`busy / (wall × workers)`).
+    pub fn utilization(&self) -> f64 {
+        if self.wall_ns == 0 || self.workers == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / (self.wall_ns as f64 * self.workers as f64)
+        }
+    }
 }
 
 /// The mutable collector the scheduler writes into while a profile
@@ -290,6 +322,14 @@ impl ServeCollector {
             max_queue_depth: self.max_queue_depth,
             ticks,
             lane_scalar_reruns: self.lane_scalar_reruns,
+            // The run harness (`run_profile`) fills the threading
+            // fields in after the freeze; a bare collector reports
+            // the single inline worker.
+            workers: 1,
+            wall_ns: 0,
+            busy_ns: 0,
+            steals: 0,
+            tokens_out: 0,
         }
     }
 }

@@ -13,18 +13,49 @@ use std::time::Instant;
 #[derive(Debug, Clone)]
 pub struct Measurement {
     pub name: String,
-    /// Nanoseconds per iteration: (min, median, mean, p95).
+    /// Nanoseconds per iteration: (min, median, mean, p95). Always
+    /// *wall* time of the measuring thread — on a multi-worker
+    /// workload this is what latency/throughput derive from, and it is
+    /// NOT the CPU cost.
     pub min_ns: f64,
     pub median_ns: f64,
     pub mean_ns: f64,
     pub p95_ns: f64,
     pub samples: usize,
+    /// Median per-iteration *busy* nanoseconds summed across every
+    /// worker that executed part of the iteration. For single-threaded
+    /// work ([`run`]) this equals the median wall time; for pooled
+    /// work ([`run_timed`]) it can exceed wall by up to `workers`×.
+    pub busy_ns: f64,
+    /// Workers that contributed to `busy_ns` (1 for [`run`]).
+    pub workers: usize,
 }
 
 impl Measurement {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.median_ns * 1e-9)
     }
+
+    /// Mean pool utilization: `busy / (wall × workers)`. 1.0 means the
+    /// pool never idled during the iteration; a single-threaded
+    /// measurement reports ≈1.0 by construction.
+    pub fn cpu_util(&self) -> f64 {
+        if self.median_ns <= 0.0 || self.workers == 0 {
+            0.0
+        } else {
+            self.busy_ns / (self.median_ns * self.workers as f64)
+        }
+    }
+}
+
+/// Per-iteration cost report from a [`run_timed`] closure: how much
+/// worker busy-time the iteration consumed and across how many
+/// workers. The caller reads these off a [`crate::par::ParStats`]
+/// delta (`Executor::stats` before/after).
+#[derive(Debug, Clone, Copy)]
+pub struct IterCost {
+    pub busy_ns: u64,
+    pub workers: usize,
 }
 
 /// Configuration for [`run`].
@@ -45,20 +76,56 @@ impl Default for BenchCfg {
     }
 }
 
-/// Time `f`, returning per-iteration statistics.
+/// Time `f`, returning per-iteration statistics. Single-threaded:
+/// busy time is wall time and `workers` is 1.
 pub fn run<T>(name: &str, cfg: BenchCfg, mut f: impl FnMut() -> T) -> Measurement {
+    run_timed(name, cfg, || {
+        let t0 = Instant::now();
+        let out = f();
+        let busy = t0.elapsed().as_nanos() as u64;
+        (
+            out,
+            IterCost {
+                busy_ns: busy,
+                workers: 1,
+            },
+        )
+    })
+}
+
+/// Time a closure that reports its own per-iteration worker cost —
+/// the multi-threaded measurement path. Wall statistics come from the
+/// measuring thread's clock exactly as in [`run`]; busy time is
+/// whatever the closure reports (typically an
+/// [`Executor::stats`](crate::par::Executor::stats) delta around the
+/// call), aggregated per iteration and summarized by its own median —
+/// never by assuming wall == CPU, which a pool breaks in both
+/// directions (idle workers, or N× wall when saturated).
+pub fn run_timed<T>(
+    name: &str,
+    cfg: BenchCfg,
+    mut f: impl FnMut() -> (T, IterCost),
+) -> Measurement {
     for _ in 0..cfg.warmup_iters {
-        black_box(f());
+        black_box(f().0);
     }
     let mut per_iter: Vec<f64> = Vec::with_capacity(cfg.samples);
+    let mut busy_iter: Vec<f64> = Vec::with_capacity(cfg.samples);
+    let mut workers = 1usize;
     for _ in 0..cfg.samples {
+        let mut busy = 0u64;
         let t0 = Instant::now();
         for _ in 0..cfg.iters_per_sample {
-            black_box(f());
+            let (out, cost) = f();
+            black_box(out);
+            busy += cost.busy_ns;
+            workers = workers.max(cost.workers);
         }
         per_iter.push(t0.elapsed().as_nanos() as f64 / cfg.iters_per_sample as f64);
+        busy_iter.push(busy as f64 / cfg.iters_per_sample as f64);
     }
     per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    busy_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = per_iter.len();
     let mean = per_iter.iter().sum::<f64>() / n as f64;
     Measurement {
@@ -68,6 +135,8 @@ pub fn run<T>(name: &str, cfg: BenchCfg, mut f: impl FnMut() -> T) -> Measuremen
         mean_ns: mean,
         p95_ns: per_iter[((n as f64 * 0.95) as usize).min(n - 1)],
         samples: n,
+        busy_ns: busy_iter[n / 2],
+        workers,
     }
 }
 
@@ -121,6 +190,66 @@ mod tests {
         assert!(m.min_ns > 0.0);
         assert!(m.median_ns >= m.min_ns);
         assert!(m.p95_ns >= m.median_ns);
+    }
+
+    #[test]
+    fn single_threaded_busy_tracks_wall() {
+        let m = run(
+            "spin1",
+            BenchCfg {
+                warmup_iters: 1,
+                samples: 7,
+                iters_per_sample: 5,
+            },
+            || {
+                let mut s = 1u64;
+                for i in 1..5000u64 {
+                    s = s.wrapping_mul(i | 1);
+                }
+                s
+            },
+        );
+        assert_eq!(m.workers, 1);
+        assert!(m.busy_ns > 0.0);
+        // Busy is measured inside the iteration, wall outside: busy
+        // can never exceed wall, and for CPU-bound work it dominates.
+        assert!(m.busy_ns <= m.median_ns * 1.05);
+        assert!(m.cpu_util() > 0.5, "util {}", m.cpu_util());
+        assert!(m.cpu_util() <= 1.05);
+    }
+
+    #[test]
+    fn run_timed_aggregates_reported_worker_cost() {
+        // A synthetic 4-worker workload reporting 2× wall as busy:
+        // utilization must come out near 0.5, not near 2.0 (the bug a
+        // wall==CPU assumption would produce) and not 1.0.
+        let m = run_timed(
+            "pooled",
+            BenchCfg {
+                warmup_iters: 0,
+                samples: 5,
+                iters_per_sample: 2,
+            },
+            || {
+                let t0 = Instant::now();
+                let mut s = 0u64;
+                for i in 0..20_000u64 {
+                    s = s.wrapping_add(i * i);
+                }
+                let wall = t0.elapsed().as_nanos() as u64;
+                (
+                    s,
+                    IterCost {
+                        busy_ns: wall * 2,
+                        workers: 4,
+                    },
+                )
+            },
+        );
+        assert_eq!(m.workers, 4);
+        assert!(m.busy_ns > m.median_ns, "busy exceeds wall on a pool");
+        let util = m.cpu_util();
+        assert!(util > 0.2 && util < 0.75, "util {util}");
     }
 
     #[test]

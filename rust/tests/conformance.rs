@@ -21,13 +21,18 @@
 //! `PROPTEST_CASES` (see `.github/workflows/ci.yml`).
 
 use dataflow_accel::bench_defs::{self, BenchId};
+use dataflow_accel::coordinator::{
+    run_batch_lanes_par, run_batch_lanes_prog, run_batch_sharded, run_batch_sharded_par,
+    run_batch_sstream_par,
+};
 use dataflow_accel::dfg::is_anon_label;
 use dataflow_accel::fabric::{self, FabricTopology};
 use dataflow_accel::frontend;
 use dataflow_accel::opt::{self, optimize, OptLevel};
+use dataflow_accel::par::Executor;
 use dataflow_accel::sim::{
     run_dynamic, run_fsm, run_lanes, run_stream, run_stream_lanes, run_token, Program, SimConfig,
-    StreamSession, WaveInput, WaveMode,
+    StreamSession, WaveInput, WaveMode, LANES,
 };
 use dataflow_accel::util::proptest::{
     check, random_dfg, random_dfg_with, random_workload, GenCfg, GenGraph, PropCfg,
@@ -917,6 +922,239 @@ fn opt_asm_roundtrip_reoptimize_is_a_fixed_point() {
                 "{} @ {level}: print∘parse∘optimize not a fixed point",
                 b.slug()
             );
+        }
+    }
+}
+
+// ---- work-stealing executor determinism harness ------------------------
+//
+// PR 6's non-negotiable invariant (DESIGN.md §10): the parallel batch
+// paths built on `par::Executor` return results byte-identical to the
+// serial paths at every worker count. Schedules (who executed what,
+// steal counts, timing) may vary run to run; results and the
+// seed-determinism of traces may not. Everything here is named
+// `par_determinism_*` so CI's `par-smoke` job can run exactly this
+// subset (`cargo test --test conformance par_determinism`).
+
+/// The 13-graph suite with a multi-item batch per graph: the seven
+/// hand-built benchmark graphs + the six frontend-lowered raw forms,
+/// each with `items` seed-varied workloads (mirrors [`opt_suite`]).
+fn par_suite(items: usize) -> Vec<(String, Graph, Vec<SimConfig>)> {
+    let mut suite = Vec::new();
+    for b in BenchId::ALL {
+        let wls = bench_defs::wave_workloads(b, items, 3, 0x9A7);
+        let cfgs: Vec<SimConfig> = wls.iter().map(|w| w.sim_config()).collect();
+        suite.push((
+            format!("built:{}", b.slug()),
+            bench_defs::build(b),
+            cfgs.clone(),
+        ));
+        let raw = frontend::compile_with(b.slug(), bench_defs::c_source(b), OptLevel::None)
+            .unwrap_or_else(|e| panic!("{}: {e}", b.slug()));
+        let cfgs4: Vec<SimConfig> = cfgs
+            .into_iter()
+            .map(|mut c| {
+                c.max_cycles *= 4;
+                c
+            })
+            .collect();
+        suite.push((format!("lowered:{}", b.slug()), raw, cfgs4));
+    }
+    let pairs = bench_defs::saxpy::waves(items, 4, 0x9A7);
+    let cfgs: Vec<SimConfig> = pairs
+        .iter()
+        .map(|(w, _)| {
+            let mut c = SimConfig::new().max_cycles(200_000);
+            for (p, s) in w {
+                c = c.inject(p, s.clone());
+            }
+            c
+        })
+        .collect();
+    suite.push(("built:saxpy".to_string(), bench_defs::saxpy::build(), cfgs));
+    suite
+}
+
+/// Lane batches through the work-stealing pool: byte-identical
+/// outcomes and identical fallback accounting at workers {1, 2, 4} on
+/// all 13 suite graphs.
+#[test]
+fn par_determinism_lanes_on_suite_graphs() {
+    for (name, g, cfgs) in par_suite(12) {
+        let prog = Program::compile(&g);
+        let (base, base_stats) = run_batch_lanes_prog(&g, &prog, &cfgs);
+        for workers in [1usize, 2, 4] {
+            let exec = Executor::new(workers);
+            let (outs, stats) = run_batch_lanes_par(&g, &prog, &cfgs, &exec);
+            assert_eq!(outs, base, "{name}: lanes diverged at {workers} workers");
+            assert_eq!(
+                stats.scalar_reruns, base_stats.scalar_reruns,
+                "{name}: fallback accounting diverged at {workers} workers"
+            );
+        }
+    }
+}
+
+/// Sharded batches (isolated and resident-wave modes) through the
+/// pool: byte-identical to the serial sharded path at workers
+/// {1, 2, 4} on every suite graph the k=2 partitioner can split.
+#[test]
+fn par_determinism_sharded_on_suite_graphs() {
+    let mut covered = 0usize;
+    for (name, g, cfgs) in par_suite(12) {
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = match fabric::partition(&g, &topo) {
+            Ok(plan) => plan,
+            Err(e) => {
+                eprintln!("par harness: {name}: unpartitionable ({e}); skipped");
+                continue;
+            }
+        };
+        covered += 1;
+        for resident in [false, true] {
+            let base = run_batch_sharded(&plan, &cfgs, resident);
+            for workers in [1usize, 2, 4] {
+                let exec = Executor::new(workers);
+                let outs = run_batch_sharded_par(&plan, &cfgs, resident, &exec);
+                assert_eq!(
+                    outs, base,
+                    "{name}: sharded (resident={resident}) diverged at {workers} workers"
+                );
+            }
+        }
+    }
+    assert!(covered >= 8, "only {covered}/13 suite graphs partitioned");
+}
+
+/// Serialized-stream batches split into contiguous wave spans across
+/// the pool: byte-identical to the single-session serial path at
+/// workers {1, 2, 4} on all 13 suite graphs.
+#[test]
+fn par_determinism_sstream_on_suite_graphs() {
+    for (name, g, cfgs) in par_suite(12) {
+        let base = run_batch_sstream_par(&g, &cfgs, &Executor::single());
+        for workers in [2usize, 4] {
+            let exec = Executor::new(workers);
+            let outs = run_batch_sstream_par(&g, &cfgs, &exec);
+            assert_eq!(
+                outs, base,
+                "{name}: serialized stream diverged at {workers} workers"
+            );
+        }
+    }
+}
+
+/// Multi-chunk lane batches: with more items than 2×LANES the
+/// parallel path actually distributes whole 64-lane chunks across
+/// workers (the single-chunk fallback can't mask a bug here).
+#[test]
+fn par_determinism_lanes_multi_chunk_batches() {
+    for b in [BenchId::DotProd, BenchId::VectorSum, BenchId::Fibonacci] {
+        let g = bench_defs::build(b);
+        let prog = Program::compile(&g);
+        let items = 2 * LANES + 3;
+        let cfgs: Vec<SimConfig> = (0..items)
+            .map(|i| bench_defs::workload(b, 1 + i % 4, i as u64).sim_config())
+            .collect();
+        let (base, _) = run_batch_lanes_prog(&g, &prog, &cfgs);
+        assert_eq!(base.len(), items);
+        for workers in [2usize, 4] {
+            let exec = Executor::new(workers);
+            let (outs, _) = run_batch_lanes_par(&g, &prog, &cfgs, &exec);
+            assert_eq!(outs, base, "{}: {workers} workers", b.slug());
+        }
+    }
+}
+
+/// Parallel batch paths on seeded random DFGs: the serialized-stream
+/// and lane paths reproduce their serial results at workers {2, 4} on
+/// arbitrary generated graphs (branch/dmerge routing, consts, fifos,
+/// loop schemas).
+#[test]
+fn prop_par_determinism_random_dfgs() {
+    check(
+        "parallel batches == serial batches on random DFGs",
+        PropCfg::from_env(24, 0x9A7_C0DE),
+        |r: &mut Rng| {
+            let gg = random_dfg(r, true);
+            let n_items = 3 + r.below(6);
+            let wls: Vec<BTreeMap<String, Vec<i16>>> = (0..n_items)
+                .map(|_| random_workload(r, &gg, 1 + r.below(3)))
+                .collect();
+            (gg, wls)
+        },
+        |(gg, wls): &(GenGraph, Vec<BTreeMap<String, Vec<i16>>>)| {
+            let g = &gg.graph;
+            let cfgs: Vec<SimConfig> = wls.iter().map(|w| config_for(w, 200_000)).collect();
+            let prog = Program::compile(g);
+            let (lanes_base, _) = run_batch_lanes_prog(g, &prog, &cfgs);
+            let sstream_base = run_batch_sstream_par(g, &cfgs, &Executor::single());
+            for workers in [2usize, 4] {
+                let exec = Executor::new(workers);
+                let (lanes, _) = run_batch_lanes_par(g, &prog, &cfgs, &exec);
+                if lanes != lanes_base {
+                    return Err(format!("lanes diverged at {workers} workers"));
+                }
+                let sstream = run_batch_sstream_par(g, &cfgs, &exec);
+                if sstream != sstream_base {
+                    return Err(format!(
+                        "serialized stream diverged at {workers} workers"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Warm == cold byte-identity holds through the lock-striped session
+/// cache under the parallel batch executor: a cold parallel run, a
+/// warm parallel run, and the serial executor all agree item by item
+/// at workers {1, 2, 4}, on benchmarks and a random-DFG family.
+#[test]
+fn par_determinism_warm_equals_cold_through_striped_cache() {
+    use dataflow_accel::serve::{
+        execute_batch, execute_batch_par, ServeRequest, SessionCache, WorkKind,
+    };
+    let kinds = [
+        WorkKind::Bench(BenchId::DotProd),
+        WorkKind::Bench(BenchId::Fibonacci),
+        WorkKind::Saxpy,
+        WorkKind::Random { branchy: true },
+    ];
+    for (k, kind) in kinds.iter().enumerate() {
+        let reqs: Vec<ServeRequest> = (0..6)
+            .map(|i| ServeRequest {
+                tenant: 0,
+                seq: i,
+                kind: *kind,
+                n: 4,
+                seed: (k * 10 + i * 5) as u64,
+            })
+            .collect();
+        // Serial reference through its own (default-striped) cache.
+        let serial_cache = SessionCache::new(FabricTopology::serving(), 2, 32);
+        let serial = execute_batch(&serial_cache, &reqs);
+        for workers in [1usize, 2, 4] {
+            let exec = Executor::new(workers);
+            let cache = SessionCache::new(FabricTopology::serving(), 2, 32);
+            assert!(cache.stripes() > 1, "default cache must be striped");
+            let cold = execute_batch_par(&cache, &reqs, &exec);
+            let warm = execute_batch_par(&cache, &reqs, &exec);
+            assert!(warm.cache_hit, "{kind:?} @ {workers}: second run must be warm");
+            assert_eq!(cold.engine, serial.engine, "{kind:?} @ {workers}");
+            assert_eq!(warm.engine, serial.engine, "{kind:?} @ {workers}");
+            for (i, s) in serial.outcomes.iter().enumerate() {
+                assert_eq!(
+                    cold.outcomes[i].outputs, s.outputs,
+                    "{kind:?} item {i} @ {workers}: cold parallel != serial"
+                );
+                assert_eq!(
+                    warm.outcomes[i].outputs, s.outputs,
+                    "{kind:?} item {i} @ {workers}: warm parallel != serial"
+                );
+            }
+            assert!(cold.verified.iter().all(|&v| v), "{kind:?} @ {workers}");
         }
     }
 }

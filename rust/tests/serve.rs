@@ -8,8 +8,8 @@
 use dataflow_accel::bench_defs::BenchId;
 use dataflow_accel::fabric::FabricTopology;
 use dataflow_accel::serve::{
-    execute_batch, run_profile, standard_profile, tenant_trace, Arrival, LoadProfile,
-    ServeCfg, ServeOptions, ServeRequest, SessionCache, TenantSpec, WorkKind,
+    burst_series, execute_batch, run_profile, standard_profile, tenant_trace, Arrival,
+    LoadProfile, ServeCfg, ServeOptions, ServeRequest, SessionCache, TenantSpec, WorkKind,
 };
 
 fn bench_tenant(name: &str, weight: u32, window: usize, requests: usize) -> TenantSpec {
@@ -365,4 +365,68 @@ fn opt_level_and_pre_opt_fingerprint_form_the_cache_key() {
         assert_eq!(c.outputs, w.outputs, "warm != cold under optimization");
     }
     assert!(cold.verified.iter().all(|&v| v));
+}
+
+/// Parallel dispatch reproduces the serial service tier exactly: the
+/// same dispatch schedule, the same per-request result digests, and
+/// the same counters at every worker count — the invariant the
+/// `serve --scale-workers` sweep enforces before writing SERVE_6.json.
+#[test]
+fn parallel_dispatch_is_byte_identical_across_worker_counts() {
+    let profile = standard_profile(6, 4, 77);
+    let base = run_profile(&profile, &ServeOptions::default());
+    assert_eq!(base.report.workers, 1);
+    assert!(!base.digests.is_empty());
+    assert_eq!(
+        base.digests.len() as u64,
+        base.report.global.completed,
+        "one digest per completed request"
+    );
+    for workers in [2usize, 4] {
+        let opts = ServeOptions {
+            workers,
+            ..ServeOptions::default()
+        };
+        let par = run_profile(&profile, &opts);
+        assert_eq!(par.report.workers, workers);
+        assert_eq!(
+            par.dispatches, base.dispatches,
+            "{workers} workers: dispatch schedule diverged"
+        );
+        assert_eq!(
+            par.digests, base.digests,
+            "{workers} workers: results diverged from serial"
+        );
+        assert_eq!(par.report.global.submitted, base.report.global.submitted);
+        assert_eq!(par.report.global.completed, base.report.global.completed);
+        assert_eq!(par.report.global.shed(), base.report.global.shed());
+        assert_eq!(par.report.global.verified, base.report.global.verified);
+        assert_eq!(par.report.tokens_out, base.report.tokens_out);
+        assert_eq!(par.report.global.lost(), 0);
+    }
+}
+
+/// The open-loop burst-series ramp is deterministic end to end: same
+/// seed ⇒ same trace, schedule, and result digests, serial and
+/// parallel — and the invariants (nothing lost, everything verified)
+/// hold under the ramped offered load.
+#[test]
+fn burst_series_profile_is_deterministic_serial_and_parallel() {
+    let mut profile = standard_profile(6, 4, 55);
+    profile.arrival = burst_series(4);
+    let a = run_profile(&profile, &ServeOptions::default());
+    let b = run_profile(&profile, &ServeOptions::default());
+    assert_eq!(a.dispatches, b.dispatches, "same-seed schedule diverged");
+    assert_eq!(a.digests, b.digests, "same-seed results diverged");
+    assert_eq!(a.report.global.lost(), 0);
+    assert_eq!(a.report.global.verified, a.report.global.completed);
+    let par = run_profile(
+        &profile,
+        &ServeOptions {
+            workers: 4,
+            ..ServeOptions::default()
+        },
+    );
+    assert_eq!(par.dispatches, a.dispatches, "parallel schedule diverged");
+    assert_eq!(par.digests, a.digests, "parallel results diverged");
 }
