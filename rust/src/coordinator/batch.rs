@@ -11,7 +11,7 @@ use crate::fabric::{self, FabricTopology, PartitionPlan};
 use crate::par::Executor;
 use crate::runtime::{FabricBatch, FabricRuntime};
 use crate::sim::{
-    run_token, AluReq, LaneSim, Program, SimConfig, SimOutcome, TokenSim, WaveInput, LANES,
+    run_token, AluReq, LaneSim, Program, SimConfig, SimOutcome, TokenSim, WaveInput, MAX_LANES,
 };
 use anyhow::{bail, Result};
 
@@ -160,7 +160,7 @@ pub fn run_batch_native(g: &Graph, cfgs: &[SimConfig]) -> Vec<SimOutcome> {
 /// Accounting for one lane-routed batch (see [`run_batch_lanes`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct LaneBatchStats {
-    /// Lane chunks executed (`ceil(batch / 64)`).
+    /// Lane chunks executed (`ceil(batch / MAX_LANES)`).
     pub chunks: usize,
     /// Items re-run on the scalar engine because their lane did not
     /// quiesce — the lanes→placed fallback.
@@ -168,9 +168,10 @@ pub struct LaneBatchStats {
 }
 
 /// The lane-vectorized batch path: compile `g` once, then run the batch
-/// in [`LANES`]-wide chunks through [`LaneSim`] — one pass over the
-/// compiled node table advances every item at once, instead of one
-/// interpreter walk per item (`run_batch_native`).
+/// in [`MAX_LANES`]-wide chunks through [`LaneSim`] (multi-word
+/// occupancy masks: 256 items per chunk) — one pass over the compiled
+/// node table advances every item at once, instead of one interpreter
+/// walk per item (`run_batch_native`).
 ///
 /// Conformance contract: per-item output streams are byte-identical to
 /// `run_batch_native` / single-instance `TokenSim` (scoped, as for the
@@ -211,7 +212,7 @@ pub fn run_batch_lanes_prog(
     }
     let mut stats = LaneBatchStats::default();
     let mut outcomes = Vec::with_capacity(cfgs.len());
-    for chunk in cfgs.chunks(LANES) {
+    for chunk in cfgs.chunks(MAX_LANES) {
         stats.chunks += 1;
         let mut sim = LaneSim::new(prog, chunk);
         sim.run();
@@ -285,23 +286,24 @@ pub fn run_batch_reconfig(
     }
 }
 
-/// Parallel [`run_batch_lanes_prog`]: the batch's fixed [`LANES`]-wide
-/// chunks are mapped across the executor's workers. Chunk boundaries
-/// depend only on the batch length — never on the worker count — and
-/// chunks share no state (each gets its own [`LaneSim`]; scalar reruns
-/// happen inside the owning task), so the result is byte-identical to
-/// the serial path at every worker count. With one worker this *is*
-/// the serial path.
+/// Parallel [`run_batch_lanes_prog`]: the batch's fixed
+/// [`MAX_LANES`]-wide chunks are mapped across the executor's workers,
+/// so each worker advances 256 items per node-table pass. Chunk
+/// boundaries depend only on the batch length — never on the worker
+/// count — and chunks share no state (each gets its own [`LaneSim`];
+/// scalar reruns happen inside the owning task), so the result is
+/// byte-identical to the serial path at every worker count. With one
+/// worker this *is* the serial path.
 pub fn run_batch_lanes_par(
     g: &Graph,
     prog: &Program,
     cfgs: &[SimConfig],
     exec: &Executor,
 ) -> (Vec<SimOutcome>, LaneBatchStats) {
-    if exec.workers() <= 1 || cfgs.len() <= LANES {
+    if exec.workers() <= 1 || cfgs.len() <= MAX_LANES {
         return run_batch_lanes_prog(g, prog, cfgs);
     }
-    let chunks: Vec<&[SimConfig]> = cfgs.chunks(LANES).collect();
+    let chunks: Vec<&[SimConfig]> = cfgs.chunks(MAX_LANES).collect();
     let per_chunk = exec.map(chunks.len(), |i| {
         let chunk = chunks[i];
         let mut sim = LaneSim::new(prog, chunk);
@@ -530,7 +532,7 @@ mod tests {
         let bench = BenchId::DotProd;
         let g = bench_defs::build(bench);
         // > 2 chunks so parallel chunk dispatch is real work.
-        let cfgs: Vec<_> = (0..(2 * LANES + 5))
+        let cfgs: Vec<_> = (0..(2 * MAX_LANES + 5))
             .map(|s| bench_defs::workload(bench, 3 + (s % 5), s as u64).sim_config())
             .collect();
         let prog = Program::compile(&g);

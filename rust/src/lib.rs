@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # dataflow-accel
 //!
 //! A production-grade reproduction of *"Accelerating Algorithms using a

@@ -7,7 +7,7 @@
 //! dataflow-accel place <bench> [--shards K] [--channels N] [--check] [--reconfig]
 //! dataflow-accel stream <bench|saxpy> [--waves 8] [--n 8] [--seed 7]
 //! dataflow-accel stream --table [--waves 8] [--n 8] [--seed 7]
-//! dataflow-accel bench [--quick] [--items 64] [--n 16] [--seed 7] [--out BENCH_3.json]
+//! dataflow-accel bench [--quick] [--no-fuse] [--items 64] [--n 16] [--seed 7] [--out BENCH_7.json]
 //! dataflow-accel serve [--quick] [--seed 7] [--scale 24] [--n 8]
 //!                      [--arrival closed|open|burst] [--workers N] [--scale-workers]
 //!                      [--out SERVE_6.json]
@@ -35,6 +35,7 @@ fn main() {
             "stream",
             "quick",
             "scale-workers",
+            "no-fuse",
         ],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -73,7 +74,8 @@ fn main() {
                  bench: scalar vs streamed vs lane engines over all seven benchmarks \n\
                  \x20 --quick       reduced iteration counts (the CI smoke job)\n\
                  \x20 --items B     batch items per benchmark (default 64; 8 with --quick)\n\
-                 \x20 --out PATH    write the JSON trajectory (default BENCH_3.json)\n\
+                 \x20 --no-fuse     compile the lane program without superinstruction fusion\n\
+                 \x20 --out PATH    write the JSON trajectory (default BENCH_7.json)\n\
                  serve: multi-tenant service tier over the fixed 3-tenant workload mix \n\
                  \x20 --quick       reduced request counts (the CI smoke job)\n\
                  \x20 --scale S     per-weight request multiplier (default 24; 4 with --quick)\n\
@@ -352,8 +354,9 @@ fn cmd_bench(args: &Args) {
     let items = args.get_usize("items", if quick { 8 } else { 64 });
     let n = args.get_usize("n", if quick { 4 } else { 16 });
     let seed = args.get_u64("seed", 7);
-    let out_path = args.get_or("out", "BENCH_3.json");
-    let cfg = report::perf::PerfCfg::new(items, n, seed, quick);
+    let out_path = args.get_or("out", "BENCH_7.json");
+    let mut cfg = report::perf::PerfCfg::new(items, n, seed, quick);
+    cfg.fuse = !args.has("no-fuse");
     let rows = report::perf::run_suite(&cfg);
     print!("{}", report::perf::render_table(&rows));
     // Verification gates the trajectory file: numbers from an engine
@@ -368,6 +371,21 @@ fn cmd_bench(args: &Args) {
         eprintln!("bench: UNVERIFIED engine outputs: {}", unverified.join(", "));
         eprintln!("bench: refusing to write {out_path}");
         std::process::exit(1);
+    }
+    // Same gate for the summary statistics: a non-finite or non-positive
+    // geomean means the harness itself misbehaved, and a trajectory file
+    // with a poisoned headline number is worse than none.
+    let geo_all = report::perf::geomean_lane_speedup(&rows, false);
+    let geo_pipe = report::perf::geomean_lane_speedup(&rows, true);
+    for (label, v) in [
+        ("geomean_lane_speedup", geo_all),
+        ("geomean_lane_speedup_pipelineable", geo_pipe),
+    ] {
+        if !v.is_finite() || v <= 0.0 {
+            eprintln!("bench: degenerate {label} = {v}");
+            eprintln!("bench: refusing to write {out_path}");
+            std::process::exit(1);
+        }
     }
     let json = report::perf::to_json(&rows, &cfg);
     std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));

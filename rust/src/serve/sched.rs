@@ -254,8 +254,10 @@ pub fn execute_batch(cache: &SessionCache, reqs: &[ServeRequest]) -> BatchResult
     execute_batch_inner(cache, reqs, None)
 }
 
-/// [`execute_batch`] with intra-batch parallelism: the lane chunks and
-/// shard items of this ONE batch spread across `exec`'s workers
+/// [`execute_batch`] with intra-batch parallelism: the lane chunks
+/// (up to [`crate::sim::MAX_LANES`] = 256 items each, multi-word
+/// occupancy masks) and shard items of this ONE batch spread across
+/// `exec`'s workers
 /// ([`run_batch_lanes_par`] / [`run_batch_sharded_par`]). Outcomes are
 /// byte-identical to [`execute_batch`] at every worker count — the
 /// `par_determinism_*` conformance properties enforce it. Pipelined

@@ -11,9 +11,19 @@ use std::collections::BTreeMap;
 pub const BUCKETS: usize = 52;
 
 /// Upper bound (inclusive) of bucket `i`, in nanoseconds.
+///
+/// Total for any index: once `1000·2^(i/2)` no longer fits in a `u64`
+/// the bound saturates at [`u64::MAX`] instead of shifting past the
+/// word width (a shift of ≥ 64 is a debug panic and masked garbage in
+/// release, which silently broke monotonicity for large `i`).
 pub fn bucket_hi(i: usize) -> u64 {
     let base: u64 = if i % 2 == 0 { 1_000 } else { 1_500 };
-    base << (i / 2)
+    let k = (i / 2) as u32;
+    if k > base.leading_zeros() {
+        u64::MAX
+    } else {
+        base << k
+    }
 }
 
 /// A fixed-bucket latency histogram. Recording is O(buckets) with no
@@ -88,7 +98,11 @@ impl Histogram {
             return 0;
         }
         let q = q.clamp(0.0, 1.0);
-        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        // Rank of the sample to report, clamped to [1, count]: q = 0.0
+        // must rank the first sample (not rank 0, which every cumulative
+        // count trivially reaches) and float rounding at q = 1.0 must
+        // never rank past the last.
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
         let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
@@ -345,6 +359,40 @@ mod tests {
         }
         assert_eq!(bucket_hi(0), 1_000);
         assert!(bucket_hi(BUCKETS - 1) > 30_000_000_000);
+    }
+
+    #[test]
+    fn bucket_hi_saturates_instead_of_overflowing() {
+        // Pre-fix this shifted by 65 — a shift-overflow panic in debug
+        // builds and masked garbage (non-monotone bounds) in release.
+        assert_eq!(bucket_hi(130), u64::MAX);
+        for i in 1..=256 {
+            assert!(bucket_hi(i) >= bucket_hi(i - 1), "bucket {i}");
+        }
+        // The largest exactly-representable bound, then saturation.
+        assert_eq!(bucket_hi(108), 1_000u64 << 54);
+        assert_eq!(bucket_hi(109), u64::MAX);
+    }
+
+    #[test]
+    fn quantile_edges_are_well_defined() {
+        let mut h = Histogram::new();
+        h.record(5_000);
+        // One sample: every quantile is that sample (clamped to the
+        // observed max), never a zero or out-of-range rank.
+        assert_eq!(h.quantile_ns(0.0), 5_000);
+        assert_eq!(h.quantile_ns(0.5), 5_000);
+        assert_eq!(h.quantile_ns(1.0), 5_000);
+
+        let mut h = Histogram::new();
+        h.record(1_000);
+        h.record(2_000_000);
+        // q = 0.0 ranks the first sample, q = 1.0 the last; out-of-range
+        // q clamps rather than ranking past either end.
+        assert_eq!(h.quantile_ns(0.0), 1_000);
+        assert_eq!(h.quantile_ns(-3.0), 1_000);
+        assert_eq!(h.quantile_ns(1.0), 2_000_000);
+        assert_eq!(h.quantile_ns(7.0), 2_000_000);
     }
 
     #[test]

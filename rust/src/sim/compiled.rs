@@ -24,6 +24,37 @@
 //! Graphs outside this class keep snapshot-round semantics (staged
 //! occupancy updates, table-order scan). See DESIGN.md §6 for why the
 //! fast path is legal exactly on this class.
+//!
+//! # Superinstruction fusion
+//!
+//! On the topo fast path, compilation further collapses linear chains
+//! of single-output unit-rate operators into [`FusedChain`]
+//! superinstructions, dispatched as one [`ExecUnit`] each. A chain
+//! member's output arc that feeds the next member (the *link arc*)
+//! is elided at run time: the intermediate value stays in a register
+//! row instead of bouncing through token storage, and the interpreter
+//! pays one dispatch for the whole chain. The legality rule is
+//! structural and `OptLevel`-independent (DESIGN.md §6):
+//!
+//! * fusion happens only where the topo list exists (acyclic,
+//!   unit-rate — so never across `branch`/`*merge`/`const`);
+//! * every member has exactly one output arc (rules out fan-out
+//!   `copy`; with the builder's one-consumer-per-arc invariant this
+//!   makes each link arc single-producer/single-consumer);
+//! * ALU and decider members compute; `fifo` and single-output `copy`
+//!   members fuse as pure transport (identity) steps — on an acyclic
+//!   unit-rate graph a FIFO's buffering depth affects only *when*
+//!   tokens move, never which tokens reach which port (the Kahn
+//!   determinism argument of DESIGN.md §6), so eliding it is
+//!   output-invisible;
+//! * link arcs are internal by construction (a port arc has no
+//!   consumer node, so a chain can only *end* on one).
+//!
+//! Each chain is scheduled at its **last** member's topo position.
+//! Every external input's producer topologically precedes some member
+//! and hence (transitively) the last one, so all external tokens a
+//! pass can supply are present by the time the chain fires — the fused
+//! schedule is pass-for-pass as productive as the unfused one.
 
 use crate::dfg::{Graph, Op, OpClass};
 
@@ -40,6 +71,52 @@ pub struct CNode {
     pub outs: [u32; 2],
 }
 
+/// Where one [`FusedStep`] operand comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusedSrc {
+    /// A real arc's value row (an external chain input).
+    Arc(u32),
+    /// The previous step's result — the elided link arc.
+    Prev,
+    /// Unused operand slot (1-input opcodes and transport steps).
+    None,
+}
+
+/// One member of a [`FusedChain`], with its operands resolved to
+/// either external arcs or the chain-internal register.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusedStep {
+    pub op: Op,
+    pub a: FusedSrc,
+    pub b: FusedSrc,
+}
+
+/// A linear run of single-output unit-rate operators executed as one
+/// table entry (module docs: *Superinstruction fusion*).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusedChain {
+    /// Member node indices in producer order (diagnostics + firing
+    /// accounting: each member still counts one firing per token).
+    pub nodes: Vec<u32>,
+    /// One step per member; step 0 never reads [`FusedSrc::Prev`].
+    pub steps: Vec<FusedStep>,
+    /// Every [`FusedSrc::Arc`] operand, in step order. The chain fires
+    /// on exactly the lanes where *all* of these hold a token (and the
+    /// output is free) — distinct by the one-consumer-per-arc builder
+    /// invariant, and never produced by a chain member.
+    pub ext_ins: Vec<u32>,
+    /// The last member's output arc — the only token the chain emits.
+    pub out: u32,
+}
+
+/// One entry of the fused topo schedule: a plain table row or a whole
+/// chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecUnit {
+    Node(u32),
+    Chain(u32),
+}
+
 /// A [`Graph`] flattened for execution (see module docs).
 #[derive(Debug, Clone)]
 pub struct Program {
@@ -54,6 +131,13 @@ pub struct Program {
     /// module docs). `None` graphs are fired in table order under
     /// snapshot-round semantics.
     pub topo: Option<Vec<u32>>,
+    /// The fused firing schedule for the topo fast path: one entry per
+    /// surviving table row, producer-before-consumer, with each
+    /// multi-node chain placed at its *last* member's topo position.
+    /// Empty exactly when `topo` is `None`.
+    pub exec: Vec<ExecUnit>,
+    /// Chain bodies referenced by [`ExecUnit::Chain`].
+    pub chains: Vec<FusedChain>,
     /// `(arc, label)` per input port, in arc-id order.
     pub input_ports: Vec<(u32, String)>,
     /// `(arc, label)` per output port, in arc-id order.
@@ -61,8 +145,20 @@ pub struct Program {
 }
 
 impl Program {
-    /// Flatten `g` into a [`Program`].
+    /// Flatten `g` into a [`Program`], fusing superinstruction chains
+    /// on the topo fast path (module docs).
     pub fn compile(g: &Graph) -> Program {
+        Self::compile_with(g, true)
+    }
+
+    /// [`Program::compile`] without fusion — every topo entry stays a
+    /// plain table row. The differential harness and `bench --no-fuse`
+    /// use this as the comparison baseline.
+    pub fn compile_unfused(g: &Graph) -> Program {
+        Self::compile_with(g, false)
+    }
+
+    fn compile_with(g: &Graph, fuse: bool) -> Program {
         let nodes = g
             .nodes
             .iter()
@@ -79,11 +175,18 @@ impl Program {
                 CNode { op: n.op, ins, outs }
             })
             .collect();
+        let topo = topo_order(g);
+        let (exec, chains) = match &topo {
+            Some(order) => build_exec(g, order, fuse),
+            None => (Vec::new(), Vec::new()),
+        };
         Program {
             name: g.name.clone(),
             n_arcs: g.n_arcs(),
             nodes,
-            topo: topo_order(g),
+            topo,
+            exec,
+            chains,
             input_ports: g
                 .input_ports()
                 .into_iter()
@@ -100,6 +203,16 @@ impl Program {
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
     }
+
+    /// Number of fused superinstruction chains.
+    pub fn n_chains(&self) -> usize {
+        self.chains.len()
+    }
+
+    /// Total nodes covered by fused chains (bench reporting).
+    pub fn fused_nodes(&self) -> usize {
+        self.chains.iter().map(|c| c.nodes.len()).sum()
+    }
 }
 
 /// Unit-rate operators: exactly one token consumed per input and one
@@ -111,6 +224,120 @@ fn unit_rate(op: Op) -> bool {
         op.class(),
         OpClass::Copy | OpClass::Alu1 | OpClass::Alu2 | OpClass::Decider | OpClass::Fifo
     )
+}
+
+/// Chain-member eligibility (module docs): unit-rate with exactly one
+/// output arc. `OpClass::Copy` with two consumers keeps its own table
+/// row — its fire rule needs both outputs free at once.
+fn chainable(g: &Graph, ni: usize) -> bool {
+    let n = &g.nodes[ni];
+    n.outs.len() == 1
+        && matches!(
+            n.op.class(),
+            OpClass::Alu1 | OpClass::Alu2 | OpClass::Decider | OpClass::Fifo | OpClass::Copy
+        )
+}
+
+/// Greedy chain formation over the topo order: a chainable node joins
+/// the chain whose current tail produces one of its inputs, else opens
+/// a chain of its own. Singleton "chains" stay plain table rows.
+fn build_exec(g: &Graph, order: &[u32], fuse: bool) -> (Vec<ExecUnit>, Vec<FusedChain>) {
+    if !fuse {
+        return (order.iter().map(|&n| ExecUnit::Node(n)).collect(), Vec::new());
+    }
+    let nn = g.n_nodes();
+    let mut members: Vec<Vec<u32>> = Vec::new();
+    // Chain index whose tail is this node, if any — `take`n on join so
+    // each tail extends at most once (chains stay linear).
+    let mut tail_of: Vec<Option<usize>> = vec![None; nn];
+    for &ni in order {
+        let u = ni as usize;
+        if !chainable(g, u) {
+            continue;
+        }
+        let mut joined = false;
+        for &ia in &g.nodes[u].ins {
+            let Some((v, _)) = g.arc(ia).src else { continue };
+            if let Some(ci) = tail_of[v.0 as usize].take() {
+                members[ci].push(ni);
+                tail_of[u] = Some(ci);
+                joined = true;
+                break;
+            }
+        }
+        if !joined {
+            members.push(vec![ni]);
+            tail_of[u] = Some(members.len() - 1);
+        }
+    }
+
+    let mut chains: Vec<FusedChain> = Vec::new();
+    // Non-last members vanish from the schedule; last members carry
+    // their whole chain at their topo position.
+    let mut swallowed = vec![false; nn];
+    let mut chain_at: Vec<Option<u32>> = vec![None; nn];
+    for m in members {
+        if m.len() < 2 {
+            continue;
+        }
+        let last = *m.last().expect("non-empty chain") as usize;
+        for &x in &m[..m.len() - 1] {
+            swallowed[x as usize] = true;
+        }
+        chain_at[last] = Some(chains.len() as u32);
+        chains.push(build_chain(g, &m));
+    }
+    let mut exec = Vec::with_capacity(order.len());
+    for &ni in order {
+        let u = ni as usize;
+        if swallowed[u] {
+            continue;
+        }
+        match chain_at[u] {
+            Some(ci) => exec.push(ExecUnit::Chain(ci)),
+            None => exec.push(ExecUnit::Node(ni)),
+        }
+    }
+    (exec, chains)
+}
+
+fn build_chain(g: &Graph, members: &[u32]) -> FusedChain {
+    let mut steps = Vec::with_capacity(members.len());
+    let mut ext_ins = Vec::new();
+    let mut prev_link: Option<u32> = None;
+    for &m in members {
+        let n = &g.nodes[m as usize];
+        let mut srcs = [FusedSrc::None; 2];
+        for (slot, &ia) in srcs.iter_mut().zip(&n.ins) {
+            if prev_link == Some(ia.0) {
+                *slot = FusedSrc::Prev;
+            } else {
+                *slot = FusedSrc::Arc(ia.0);
+                ext_ins.push(ia.0);
+            }
+        }
+        // Every external input must come from outside the chain: a
+        // member's single output either *is* the link consumed by the
+        // next member or terminates the chain, so this can only trip
+        // if the eligibility rule above is broken.
+        debug_assert!(
+            n.ins
+                .iter()
+                .all(|&ia| prev_link == Some(ia.0)
+                    || g.arc(ia)
+                        .src
+                        .map_or(true, |(v, _)| !members.contains(&v.0))),
+            "fused chain input produced by a chain member"
+        );
+        steps.push(FusedStep { op: n.op, a: srcs[0], b: srcs[1] });
+        prev_link = Some(n.outs[0].0);
+    }
+    FusedChain {
+        nodes: members.to_vec(),
+        steps,
+        ext_ins,
+        out: prev_link.expect("non-empty chain"),
+    }
 }
 
 /// Kahn topological order over the node-to-node arc adjacency, as node
@@ -193,6 +420,8 @@ mod tests {
                 b.slug()
             );
             assert!(p.topo.is_none(), "{} is a loop schema", b.slug());
+            // No topo → no fused schedule either.
+            assert!(p.exec.is_empty() && p.chains.is_empty(), "{}", b.slug());
         }
         let saxpy = bench_defs::saxpy::build();
         let p = Program::compile(&saxpy);
@@ -231,5 +460,72 @@ mod tests {
         b.node(Op::Fifo(2), &[s], &[back]);
         let g = b.graph().clone();
         assert!(topo_order(&g).is_none());
+    }
+
+    #[test]
+    fn saxpy_fuses_into_one_superinstruction() {
+        // mul → fifo → add is one linear single-output run: the whole
+        // pipeline becomes a single dispatch, fifo as pure transport.
+        let g = bench_defs::saxpy::build();
+        let p = Program::compile(&g);
+        assert_eq!(p.n_chains(), 1);
+        assert_eq!(p.exec.len(), 1);
+        let c = &p.chains[0];
+        assert_eq!(c.nodes.len(), 3);
+        assert_eq!(c.steps.len(), 3);
+        assert_eq!(c.ext_ins.len(), 3, "a, x, y stay external");
+        assert!(matches!(c.steps[1], FusedStep { a: FusedSrc::Prev, b: FusedSrc::None, .. }));
+        assert_eq!(p.fused_nodes(), 3);
+        let z = g.output_ports()[0].0;
+        assert_eq!(c.out, z);
+
+        let u = Program::compile_unfused(&g);
+        assert_eq!(u.n_chains(), 0);
+        assert_eq!(u.exec.len(), 3, "unfused: one unit per table row");
+        assert_eq!(u.topo, p.topo, "fusion never changes the topo list");
+    }
+
+    #[test]
+    fn chains_break_at_fanout_copies() {
+        // add → copy(2 out): the copy needs both outputs free at once,
+        // so it must keep its own table row and end the chain.
+        let mut b = GraphBuilder::new("fan");
+        let a = b.input_port("a");
+        let x = b.input_port("x");
+        let z1 = b.output_port("z1");
+        let z2 = b.output_port("z2");
+        let s = b.op2(Op::Add, a, x);
+        b.node(Op::Copy, &[s], &[z1, z2]);
+        let g = b.finish().unwrap();
+        let p = Program::compile(&g);
+        assert!(p.topo.is_some());
+        assert_eq!(p.n_chains(), 0, "no run of >=2 single-output nodes");
+        assert_eq!(p.exec.len(), 2);
+    }
+
+    #[test]
+    fn chain_steps_wire_prev_into_the_consuming_slot() {
+        // not → sub(ext, prev): the link may feed either operand slot.
+        let mut b = GraphBuilder::new("slots");
+        let a = b.input_port("a");
+        let x = b.input_port("x");
+        let z = b.output_port("z");
+        let na = b.wire();
+        b.node(Op::Not, &[a], &[na]);
+        b.node(Op::Sub, &[x, na], &[z]);
+        let g = b.finish().unwrap();
+        let p = Program::compile(&g);
+        assert_eq!(p.n_chains(), 1);
+        let c = &p.chains[0];
+        assert_eq!(c.steps.len(), 2);
+        assert!(matches!(
+            c.steps[0],
+            FusedStep { op: Op::Not, a: FusedSrc::Arc(_), b: FusedSrc::None }
+        ));
+        assert!(matches!(
+            c.steps[1],
+            FusedStep { op: Op::Sub, a: FusedSrc::Arc(_), b: FusedSrc::Prev }
+        ));
+        assert_eq!(c.ext_ins.len(), 2);
     }
 }

@@ -1,17 +1,18 @@
-//! The lane-vectorized batch engine: up to [`LANES`] independent input
-//! sets ("lanes") executed in lockstep through one compiled
+//! The lane-vectorized batch engine: up to [`MAX_LANES`] independent
+//! input sets ("lanes") executed in lockstep through one compiled
 //! [`Program`].
 //!
 //! The scalar engines walk `Option<Word>` arcs one token at a time; the
 //! coordinator's batch path therefore re-runs the whole interpreter per
 //! batch item. This engine replicates only the *state*, not the
-//! control: token storage is structure-of-arrays — per arc a 64-bit
-//! `occupied` bitmask (bit ℓ = lane ℓ's token present) plus a
-//! `[Word; LANES]` value row — so one pass over the node table advances
-//! every lane at once. Fire decisions for ALU/decider/`copy`/`const`/
-//! `ndmerge` ops are pure bitmask algebra; only value-dependent routing
-//! (`branch`/`dmerge` control) needs a lane scan to build its truth
-//! mask, and only `fifo` keeps a per-lane queue.
+//! control: token storage is structure-of-arrays — per arc a row of
+//! 64-bit `occupied` mask words (bit ℓ of word w = lane `w·64+ℓ`'s
+//! token present) plus a `[Word; LANES]` value row per mask word — so
+//! one pass over the node table advances every lane at once. Fire
+//! decisions for ALU/decider/`copy`/`const`/`ndmerge` ops are pure
+//! bitmask algebra; only value-dependent routing (`branch`/`dmerge`
+//! control) needs a lane scan to build its truth mask, and only `fifo`
+//! keeps a per-lane queue.
 //!
 //! Lanes never interact: lane ℓ executes a legal schedule of exactly
 //! the firings a scalar [`TokenSim`](super::TokenSim) run of lane ℓ's
@@ -35,17 +36,35 @@
 //!   pass — the scalar engines' round semantics, vectorized.
 //! * **topo ripple** (acyclic unit-rate graphs): producer-before-
 //!   consumer scan with immediate occupancy updates, so a token crosses
-//!   the whole pipeline in one pass. Legal exactly on this class — the
-//!   per-arc token sequence is schedule-independent there (see
-//!   `sim::compiled` and DESIGN.md §6).
+//!   the whole pipeline in one pass. On this path the schedule is the
+//!   program's fused [`ExecUnit`] list: linear operator runs execute as
+//!   one [`FusedChain`] superinstruction — external inputs consumed,
+//!   steps evaluated through a register row, one output emitted — with
+//!   link arcs never touching token storage. Legal exactly on this
+//!   class — the per-arc token sequence is schedule-independent there
+//!   (see `sim::compiled` and DESIGN.md §6).
+//!
+//! The inner row kernels (`eval2`/`blend`) are written straight-line
+//! over whole `[Word; LANES]` rows so the autovectorizer can keep them
+//! branch-free; `--features simd` (nightly) swaps in explicit
+//! `std::simd` kernels that are required — and tested — to stay
+//! byte-identical to the scalar arms.
 
-use super::compiled::{CNode, Program};
+use super::compiled::{CNode, ExecUnit, FusedSrc, Program};
 use super::{SimConfig, SimOutcome};
 use crate::dfg::{Op, OpClass, Word};
 use std::collections::{BTreeMap, VecDeque};
 
-/// Lanes per [`LaneSim`]: one `u64` occupancy mask worth.
+/// Lanes per occupancy-mask word: one `u64` worth.
 pub const LANES: usize = 64;
+
+/// Maximum lanes per [`LaneSim`] — [`MAX_WORDS`] mask words in
+/// lockstep. Chunking helpers ([`run_lanes`], the coordinator batch
+/// path) split larger batches at this width.
+pub const MAX_LANES: usize = MAX_WORDS * LANES;
+
+/// Occupancy-mask words per arc at full width.
+const MAX_WORDS: usize = 4;
 
 /// One input port's pending injections: per-lane streams + cursors.
 struct Inject {
@@ -57,57 +76,65 @@ struct Inject {
 /// Per-lane collected output streams for one port.
 type LaneStreams = Vec<Vec<Word>>;
 
-/// Up to 64 batch items in lockstep through one compiled program.
+/// Up to [`MAX_LANES`] batch items in lockstep through one compiled
+/// program.
 pub struct LaneSim<'p> {
     p: &'p Program,
     n_lanes: usize,
-    /// Bitmask of lanes in use (low `n_lanes` bits).
-    active: u64,
-    /// Firing schedule: `p.topo` when present, else table order.
-    schedule: Vec<u32>,
+    /// Mask words actually in play: `ceil(n_lanes / 64)`.
+    words: usize,
+    /// Per-word mask of lanes in use (all bits except the ragged tail).
+    active: Vec<u64>,
     /// Topo ripple (immediate occupancy) vs snapshot rounds (staged).
     immediate: bool,
-    /// Per-arc lane occupancy.
+    /// Per-arc lane occupancy, flat: slot `a·words + w`.
     occ: Vec<u64>,
-    /// Per-arc lane values; `vals[a][ℓ]` is live iff `occ[a]` bit ℓ.
-    vals: Vec<[Word; LANES]>,
-    /// Per-node: lanes whose `Const` reset token has been emitted.
+    /// Per-slot value rows, flat at `slot·LANES`; `vals[slot·LANES+ℓ]`
+    /// is live iff `occ[slot]` bit ℓ.
+    vals: Vec<Word>,
+    /// Per node × word: lanes whose `Const` reset token was emitted.
     const_done: Vec<u64>,
-    /// Per-node per-lane FIFO queues (empty vec for non-`Fifo` nodes).
+    /// Per-node per-lane FIFO queues (empty vec for non-`Fifo` nodes),
+    /// indexed by global lane.
     fifos: Vec<Vec<VecDeque<Word>>>,
     inject: Vec<Inject>,
     /// Collected tokens per output port per lane.
     collected: Vec<LaneStreams>,
-    /// Staged occupancy writes for the current snapshot round.
+    /// Staged occupancy writes (slot, mask) for the current snapshot
+    /// round.
     staged: Vec<(u32, u64)>,
-    lane_firings: [u64; LANES],
+    lane_firings: Vec<u64>,
     firings: u64,
     passes: u64,
     max_cycles: u64,
 }
 
 impl<'p> LaneSim<'p> {
-    /// One lane per config; `cfgs.len()` must be in `1..=LANES`.
+    /// One lane per config; `cfgs.len()` must be at most [`MAX_LANES`].
+    /// An empty slice yields a valid sim that is already at fixpoint
+    /// and produces no outcomes.
     pub fn new(p: &'p Program, cfgs: &[SimConfig]) -> Self {
         let n = cfgs.len();
         assert!(
-            (1..=LANES).contains(&n),
-            "LaneSim takes 1..={LANES} lane configs, got {n}"
+            n <= MAX_LANES,
+            "LaneSim takes at most {MAX_LANES} lane configs, got {n}"
         );
-        let active = if n == LANES { u64::MAX } else { (1u64 << n) - 1 };
-        let (schedule, immediate) = match &p.topo {
-            Some(order) => (order.clone(), true),
-            None => ((0..p.n_nodes() as u32).collect(), false),
-        };
+        let words = n.div_ceil(LANES);
+        let mut active = vec![u64::MAX; words];
+        if let Some(last) = active.last_mut() {
+            if n % LANES != 0 {
+                *last = (1u64 << (n % LANES)) - 1;
+            }
+        }
         LaneSim {
             p,
             n_lanes: n,
+            words,
             active,
-            schedule,
-            immediate,
-            occ: vec![0; p.n_arcs],
-            vals: vec![[0; LANES]; p.n_arcs],
-            const_done: vec![0; p.n_nodes()],
+            immediate: p.topo.is_some(),
+            occ: vec![0; p.n_arcs * words],
+            vals: vec![0; p.n_arcs * words * LANES],
+            const_done: vec![0; p.n_nodes() * words],
             fifos: p
                 .nodes
                 .iter()
@@ -130,10 +157,12 @@ impl<'p> LaneSim<'p> {
                 .collect(),
             collected: vec![vec![Vec::new(); n]; p.output_ports.len()],
             staged: Vec::new(),
-            lane_firings: [0; LANES],
+            lane_firings: vec![0; words * LANES],
             firings: 0,
             passes: 0,
-            max_cycles: cfgs.iter().map(|c| c.max_cycles).max().unwrap(),
+            // No lanes → no budget: `run` exits immediately. (This used
+            // to be `.max().unwrap()`, panicking on empty batches.)
+            max_cycles: cfgs.iter().map(|c| c.max_cycles).max().unwrap_or(0),
         }
     }
 
@@ -142,48 +171,64 @@ impl<'p> LaneSim<'p> {
     /// means a global fixpoint.
     pub fn step(&mut self) -> u64 {
         let mut progress = 0u64;
+        let words = self.words;
 
         // Phase 1a: environment injection — one token per free port
         // arc per lane (the always-ready sender, per lane).
         for inj in &mut self.inject {
             let a = inj.arc as usize;
-            let mut free = !self.occ[a] & self.active;
-            while free != 0 {
-                let l = free.trailing_zeros() as usize;
-                free &= free - 1;
-                if inj.pos[l] < inj.streams[l].len() {
-                    self.vals[a][l] = inj.streams[l][inj.pos[l]];
-                    inj.pos[l] += 1;
-                    self.occ[a] |= 1 << l;
-                    progress += 1;
+            for w in 0..words {
+                let slot = a * words + w;
+                let mut free = !self.occ[slot] & self.active[w];
+                while free != 0 {
+                    let ll = free.trailing_zeros() as usize;
+                    free &= free - 1;
+                    let l = w * LANES + ll;
+                    if inj.pos[l] < inj.streams[l].len() {
+                        self.vals[slot * LANES + ll] = inj.streams[l][inj.pos[l]];
+                        inj.pos[l] += 1;
+                        self.occ[slot] |= 1 << ll;
+                        progress += 1;
+                    }
                 }
             }
         }
         // Phase 1b: environment collection at output ports.
         for pi in 0..self.p.output_ports.len() {
             let a = self.p.output_ports[pi].0 as usize;
-            let mut m = self.occ[a] & self.active;
-            self.occ[a] &= !m;
-            progress += m.count_ones() as u64;
-            while m != 0 {
-                let l = m.trailing_zeros() as usize;
-                m &= m - 1;
-                self.collected[pi][l].push(self.vals[a][l]);
+            for w in 0..words {
+                let slot = a * words + w;
+                let mut m = self.occ[slot] & self.active[w];
+                self.occ[slot] &= !m;
+                progress += m.count_ones() as u64;
+                while m != 0 {
+                    let ll = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    self.collected[pi][w * LANES + ll].push(self.vals[slot * LANES + ll]);
+                }
             }
         }
 
-        // Phase 2: fire every node once, over all lanes at once.
+        // Phase 2: fire every schedule entry once, over all lanes at
+        // once — the fused exec list on the topo path, the plain table
+        // under snapshot rounds.
+        let p = self.p;
         let mut fired = 0u64;
-        let schedule = std::mem::take(&mut self.schedule);
-        for &ni in &schedule {
-            fired += self.fire_node(ni as usize);
-        }
-        self.schedule = schedule;
-        if !self.immediate {
+        if self.immediate {
+            for unit in &p.exec {
+                fired += match *unit {
+                    ExecUnit::Node(ni) => self.fire_node(ni as usize),
+                    ExecUnit::Chain(ci) => self.fire_chain(ci as usize),
+                };
+            }
+        } else {
+            for ni in 0..p.n_nodes() {
+                fired += self.fire_node(ni);
+            }
             let staged = std::mem::take(&mut self.staged);
-            for &(a, m) in &staged {
-                debug_assert_eq!(self.occ[a as usize] & m, 0, "lane token overwrite");
-                self.occ[a as usize] |= m;
+            for &(slot, m) in &staged {
+                debug_assert_eq!(self.occ[slot as usize] & m, 0, "lane token overwrite");
+                self.occ[slot as usize] |= m;
             }
             let mut staged = staged;
             staged.clear();
@@ -212,122 +257,169 @@ impl<'p> LaneSim<'p> {
         }
     }
 
-    /// Mark `mask` lanes of `arc` occupied — staged under snapshot
-    /// rounds, immediate on the topo ripple path.
+    /// Storage slot for (arc, mask word).
     #[inline]
-    fn emit(&mut self, arc: u32, mask: u64) {
+    fn slot(&self, arc: usize, w: usize) -> usize {
+        arc * self.words + w
+    }
+
+    /// Copy of one value row.
+    #[inline]
+    fn row(&self, slot: usize) -> [Word; LANES] {
+        self.vals[slot * LANES..(slot + 1) * LANES]
+            .try_into()
+            .expect("row is LANES wide")
+    }
+
+    #[inline]
+    fn row_mut(&mut self, slot: usize) -> &mut [Word; LANES] {
+        (&mut self.vals[slot * LANES..(slot + 1) * LANES])
+            .try_into()
+            .expect("row is LANES wide")
+    }
+
+    /// Mark `mask` lanes of storage `slot` occupied — staged under
+    /// snapshot rounds, immediate on the topo ripple path.
+    #[inline]
+    fn emit(&mut self, slot: usize, mask: u64) {
         if mask == 0 {
             return;
         }
         if self.immediate {
-            debug_assert_eq!(self.occ[arc as usize] & mask, 0, "lane token overwrite");
-            self.occ[arc as usize] |= mask;
+            debug_assert_eq!(self.occ[slot] & mask, 0, "lane token overwrite");
+            self.occ[slot] |= mask;
         } else {
-            self.staged.push((arc, mask));
+            self.staged.push((slot as u32, mask));
         }
     }
 
+    /// Credit `times` firings to every mask lane of word `w` — a
+    /// straight-line sweep over the word (no per-set-bit loop) so the
+    /// accounting vectorizes with the rest of the row work. Returns the
+    /// lane-firing total.
     #[inline]
-    fn count(&mut self, mut mask: u64) -> u64 {
-        let n = mask.count_ones() as u64;
-        while mask != 0 {
-            let l = mask.trailing_zeros() as usize;
-            mask &= mask - 1;
-            self.lane_firings[l] += 1;
+    fn count_times(&mut self, w: usize, mask: u64, times: u64) -> u64 {
+        let lf = &mut self.lane_firings[w * LANES..(w + 1) * LANES];
+        for (l, f) in lf.iter_mut().enumerate() {
+            *f += ((mask >> l) & 1) * times;
         }
-        n
+        mask.count_ones() as u64 * times
     }
 
-    /// Truth mask over lanes with a non-zero value on `arc` (garbage on
-    /// unoccupied lanes — callers mask with the arc's occupancy).
     #[inline]
-    fn truthy(&self, arc: usize) -> u64 {
+    fn count(&mut self, w: usize, mask: u64) -> u64 {
+        self.count_times(w, mask, 1)
+    }
+
+    /// Truth mask over lanes with a non-zero value on storage `slot`
+    /// (garbage on unoccupied lanes — callers mask with occupancy).
+    #[inline]
+    fn truthy(&self, slot: usize) -> u64 {
         let mut t = 0u64;
-        for (l, &v) in self.vals[arc].iter().enumerate() {
-            t |= ((v != 0) as u64) << l;
+        for (l, v) in self.vals[slot * LANES..(slot + 1) * LANES].iter().enumerate() {
+            t |= ((*v != 0) as u64) << l;
         }
         t
     }
 
     /// Fire node `ni` on every lane whose fire rule holds; returns the
-    /// number of lane-firings.
+    /// number of lane-firings. Each opcode class hoists its fire-rule
+    /// mask out of the row work, so the per-element bodies stay
+    /// branch-free.
     fn fire_node(&mut self, ni: usize) -> u64 {
         let cn: CNode = self.p.nodes[ni];
+        let words = self.words;
+        let mut fired = 0u64;
         match cn.op.class() {
             OpClass::Alu2 | OpClass::Decider => {
                 let (a, b, o) = (cn.ins[0] as usize, cn.ins[1] as usize, cn.outs[0] as usize);
-                let m = self.occ[a] & self.occ[b] & !self.occ[o];
-                if m == 0 {
-                    return 0;
+                for w in 0..words {
+                    let (sa, sb, so) = (self.slot(a, w), self.slot(b, w), self.slot(o, w));
+                    let m = self.occ[sa] & self.occ[sb] & !self.occ[so];
+                    if m == 0 {
+                        continue;
+                    }
+                    self.occ[sa] &= !m;
+                    self.occ[sb] &= !m;
+                    let (va, vb) = (self.row(sa), self.row(sb));
+                    let mut tmp = [0; LANES];
+                    eval2_lanes(cn.op, &va, &vb, &mut tmp);
+                    blend(self.row_mut(so), &tmp, m);
+                    self.emit(so, m);
+                    fired += self.count(w, m);
                 }
-                self.occ[a] &= !m;
-                self.occ[b] &= !m;
-                let (va, vb) = (self.vals[a], self.vals[b]);
-                let mut tmp = [0; LANES];
-                eval2_lanes(cn.op, &va, &vb, &mut tmp);
-                blend(&mut self.vals[o], &tmp, m);
-                self.emit(o as u32, m);
-                self.count(m)
             }
             OpClass::Alu1 => {
                 let (a, o) = (cn.ins[0] as usize, cn.outs[0] as usize);
-                let m = self.occ[a] & !self.occ[o];
-                if m == 0 {
-                    return 0;
+                for w in 0..words {
+                    let (sa, so) = (self.slot(a, w), self.slot(o, w));
+                    let m = self.occ[sa] & !self.occ[so];
+                    if m == 0 {
+                        continue;
+                    }
+                    self.occ[sa] &= !m;
+                    let va = self.row(sa);
+                    let mut tmp = [0; LANES];
+                    eval1_lanes(cn.op, &va, &mut tmp);
+                    blend(self.row_mut(so), &tmp, m);
+                    self.emit(so, m);
+                    fired += self.count(w, m);
                 }
-                self.occ[a] &= !m;
-                let va = self.vals[a];
-                let mut tmp = [0; LANES];
-                for (x, v) in tmp.iter_mut().zip(&va) {
-                    *x = cn.op.eval1(*v);
-                }
-                blend(&mut self.vals[o], &tmp, m);
-                self.emit(o as u32, m);
-                self.count(m)
             }
             OpClass::Copy => {
                 let (a, o0, o1) = (cn.ins[0] as usize, cn.outs[0] as usize, cn.outs[1] as usize);
-                let m = self.occ[a] & !self.occ[o0] & !self.occ[o1];
-                if m == 0 {
-                    return 0;
+                for w in 0..words {
+                    let (sa, s0, s1) = (self.slot(a, w), self.slot(o0, w), self.slot(o1, w));
+                    let m = self.occ[sa] & !self.occ[s0] & !self.occ[s1];
+                    if m == 0 {
+                        continue;
+                    }
+                    self.occ[sa] &= !m;
+                    let va = self.row(sa);
+                    blend(self.row_mut(s0), &va, m);
+                    blend(self.row_mut(s1), &va, m);
+                    self.emit(s0, m);
+                    self.emit(s1, m);
+                    fired += self.count(w, m);
                 }
-                self.occ[a] &= !m;
-                let va = self.vals[a];
-                blend(&mut self.vals[o0], &va, m);
-                blend(&mut self.vals[o1], &va, m);
-                self.emit(o0 as u32, m);
-                self.emit(o1 as u32, m);
-                self.count(m)
             }
             OpClass::Const => {
                 let o = cn.outs[0] as usize;
-                let m = self.active & !self.const_done[ni] & !self.occ[o];
-                if m == 0 {
-                    return 0;
-                }
                 let Op::Const(v) = cn.op else { unreachable!() };
-                self.const_done[ni] |= m;
-                blend(&mut self.vals[o], &[v; LANES], m);
-                self.emit(o as u32, m);
-                self.count(m)
+                let kv = [v; LANES];
+                for w in 0..words {
+                    let so = self.slot(o, w);
+                    let cd = ni * words + w;
+                    let m = self.active[w] & !self.const_done[cd] & !self.occ[so];
+                    if m == 0 {
+                        continue;
+                    }
+                    self.const_done[cd] |= m;
+                    blend(self.row_mut(so), &kv, m);
+                    self.emit(so, m);
+                    fired += self.count(w, m);
+                }
             }
             OpClass::NdMerge => {
                 // First-come-first-served; on a tie, port 0 wins (the
                 // scalar engines' fixed arbiter priority, per lane).
                 let (i0, i1, o) = (cn.ins[0] as usize, cn.ins[1] as usize, cn.outs[0] as usize);
-                let f = !self.occ[o] & self.active;
-                let take0 = self.occ[i0] & f;
-                let take1 = self.occ[i1] & f & !self.occ[i0];
-                if (take0 | take1) == 0 {
-                    return 0;
+                for w in 0..words {
+                    let (s0, s1, so) = (self.slot(i0, w), self.slot(i1, w), self.slot(o, w));
+                    let f = !self.occ[so] & self.active[w];
+                    let take0 = self.occ[s0] & f;
+                    let take1 = self.occ[s1] & f & !self.occ[s0];
+                    if (take0 | take1) == 0 {
+                        continue;
+                    }
+                    self.occ[s0] &= !take0;
+                    self.occ[s1] &= !take1;
+                    let (v0, v1) = (self.row(s0), self.row(s1));
+                    blend(self.row_mut(so), &v0, take0);
+                    blend(self.row_mut(so), &v1, take1);
+                    self.emit(so, take0 | take1);
+                    fired += self.count(w, take0 | take1);
                 }
-                self.occ[i0] &= !take0;
-                self.occ[i1] &= !take1;
-                let (v0, v1) = (self.vals[i0], self.vals[i1]);
-                blend(&mut self.vals[o], &v0, take0);
-                blend(&mut self.vals[o], &v1, take1);
-                self.emit(o as u32, take0 | take1);
-                self.count(take0 | take1)
             }
             OpClass::DMerge => {
                 // Port 0 is the control; TRUE selects port 1, FALSE
@@ -338,21 +430,29 @@ impl<'p> LaneSim<'p> {
                     cn.ins[2] as usize,
                     cn.outs[0] as usize,
                 );
-                let t = self.truthy(c);
-                let ready = self.occ[c] & !self.occ[o];
-                let m_t = ready & t & self.occ[d1];
-                let m_f = ready & !t & self.occ[d2];
-                if (m_t | m_f) == 0 {
-                    return 0;
+                for w in 0..words {
+                    let (sc, sd1, sd2, so) = (
+                        self.slot(c, w),
+                        self.slot(d1, w),
+                        self.slot(d2, w),
+                        self.slot(o, w),
+                    );
+                    let t = self.truthy(sc);
+                    let ready = self.occ[sc] & !self.occ[so];
+                    let m_t = ready & t & self.occ[sd1];
+                    let m_f = ready & !t & self.occ[sd2];
+                    if (m_t | m_f) == 0 {
+                        continue;
+                    }
+                    self.occ[sc] &= !(m_t | m_f);
+                    self.occ[sd1] &= !m_t;
+                    self.occ[sd2] &= !m_f;
+                    let (vd1, vd2) = (self.row(sd1), self.row(sd2));
+                    blend(self.row_mut(so), &vd1, m_t);
+                    blend(self.row_mut(so), &vd2, m_f);
+                    self.emit(so, m_t | m_f);
+                    fired += self.count(w, m_t | m_f);
                 }
-                self.occ[c] &= !(m_t | m_f);
-                self.occ[d1] &= !m_t;
-                self.occ[d2] &= !m_f;
-                let (vd1, vd2) = (self.vals[d1], self.vals[d2]);
-                blend(&mut self.vals[o], &vd1, m_t);
-                blend(&mut self.vals[o], &vd2, m_f);
-                self.emit(o as u32, m_t | m_f);
-                self.count(m_t | m_f)
             }
             OpClass::Branch => {
                 // Port 0 is control, port 1 data; output 0 is the TRUE
@@ -363,21 +463,29 @@ impl<'p> LaneSim<'p> {
                     cn.outs[0] as usize,
                     cn.outs[1] as usize,
                 );
-                let t = self.truthy(c);
-                let ready = self.occ[c] & self.occ[d];
-                let m_t = ready & t & !self.occ[o0];
-                let m_f = ready & !t & !self.occ[o1];
-                if (m_t | m_f) == 0 {
-                    return 0;
+                for w in 0..words {
+                    let (sc, sd, s0, s1) = (
+                        self.slot(c, w),
+                        self.slot(d, w),
+                        self.slot(o0, w),
+                        self.slot(o1, w),
+                    );
+                    let t = self.truthy(sc);
+                    let ready = self.occ[sc] & self.occ[sd];
+                    let m_t = ready & t & !self.occ[s0];
+                    let m_f = ready & !t & !self.occ[s1];
+                    if (m_t | m_f) == 0 {
+                        continue;
+                    }
+                    self.occ[sc] &= !(m_t | m_f);
+                    self.occ[sd] &= !(m_t | m_f);
+                    let vd = self.row(sd);
+                    blend(self.row_mut(s0), &vd, m_t);
+                    blend(self.row_mut(s1), &vd, m_f);
+                    self.emit(s0, m_t);
+                    self.emit(s1, m_f);
+                    fired += self.count(w, m_t | m_f);
                 }
-                self.occ[c] &= !(m_t | m_f);
-                self.occ[d] &= !(m_t | m_f);
-                let vd = self.vals[d];
-                blend(&mut self.vals[o0], &vd, m_t);
-                blend(&mut self.vals[o1], &vd, m_f);
-                self.emit(o0 as u32, m_t);
-                self.emit(o1 as u32, m_f);
-                self.count(m_t | m_f)
             }
             OpClass::Fifo => {
                 // Control diverges per lane (queue depths differ), so
@@ -386,42 +494,106 @@ impl<'p> LaneSim<'p> {
                 let Op::Fifo(k) = cn.op else { unreachable!() };
                 let cap = k as usize;
                 let (i, o) = (cn.ins[0] as usize, cn.outs[0] as usize);
-                let mut acted_mask = 0u64;
-                let mut emit_mask = 0u64;
-                let mut act = self.active;
-                while act != 0 {
-                    let l = act.trailing_zeros() as usize;
-                    act &= act - 1;
-                    let bit = 1u64 << l;
-                    if self.occ[i] & bit != 0 && self.fifos[ni][l].len() < cap {
-                        self.occ[i] &= !bit;
-                        let v = self.vals[i][l];
-                        self.fifos[ni][l].push_back(v);
-                        acted_mask |= bit;
-                    }
-                    if self.occ[o] & bit == 0 && emit_mask & bit == 0 {
-                        if let Some(v) = self.fifos[ni][l].pop_front() {
-                            self.vals[o][l] = v;
-                            emit_mask |= bit;
+                for w in 0..words {
+                    let (si, so) = (self.slot(i, w), self.slot(o, w));
+                    let mut acted_mask = 0u64;
+                    let mut emit_mask = 0u64;
+                    let mut act = self.active[w];
+                    while act != 0 {
+                        let ll = act.trailing_zeros() as usize;
+                        act &= act - 1;
+                        let bit = 1u64 << ll;
+                        let l = w * LANES + ll;
+                        if self.occ[si] & bit != 0 && self.fifos[ni][l].len() < cap {
+                            self.occ[si] &= !bit;
+                            let v = self.vals[si * LANES + ll];
+                            self.fifos[ni][l].push_back(v);
                             acted_mask |= bit;
                         }
+                        if self.occ[so] & bit == 0 && emit_mask & bit == 0 {
+                            if let Some(v) = self.fifos[ni][l].pop_front() {
+                                self.vals[so * LANES + ll] = v;
+                                emit_mask |= bit;
+                                acted_mask |= bit;
+                            }
+                        }
                     }
+                    self.emit(so, emit_mask);
+                    fired += self.count(w, acted_mask);
                 }
-                self.emit(o as u32, emit_mask);
-                self.count(acted_mask)
             }
         }
+        fired
+    }
+
+    /// Fire a fused superinstruction chain: on every lane where *all*
+    /// external inputs hold a token and the output is free, consume the
+    /// inputs, evaluate the member steps through a register row (link
+    /// arcs never touch token storage), and emit the single output.
+    /// Each member is credited one firing per token, so firing totals
+    /// match the unfused schedule at quiescence.
+    fn fire_chain(&mut self, ci: usize) -> u64 {
+        let p = self.p;
+        let c = &p.chains[ci];
+        let words = self.words;
+        let o = c.out as usize;
+        let chain_len = c.nodes.len() as u64;
+        let mut fired = 0u64;
+        for w in 0..words {
+            let so = o * words + w;
+            let mut m = self.active[w] & !self.occ[so];
+            for &a in &c.ext_ins {
+                m &= self.occ[a as usize * words + w];
+            }
+            if m == 0 {
+                continue;
+            }
+            for &a in &c.ext_ins {
+                self.occ[a as usize * words + w] &= !m;
+            }
+            // `cur` carries the elided link value; only `m` lanes are
+            // meaningful, the rest are garbage the final blend drops.
+            let mut cur = [0; LANES];
+            let mut tmp = [0; LANES];
+            for step in &c.steps {
+                let xa = match step.a {
+                    FusedSrc::Arc(a) => self.row(a as usize * words + w),
+                    FusedSrc::Prev | FusedSrc::None => cur,
+                };
+                match step.op.class() {
+                    OpClass::Alu2 | OpClass::Decider => {
+                        let xb = match step.b {
+                            FusedSrc::Arc(a) => self.row(a as usize * words + w),
+                            FusedSrc::Prev | FusedSrc::None => cur,
+                        };
+                        eval2_lanes(step.op, &xa, &xb, &mut tmp);
+                        cur = tmp;
+                    }
+                    OpClass::Alu1 => {
+                        eval1_lanes(step.op, &xa, &mut tmp);
+                        cur = tmp;
+                    }
+                    // `fifo` / single-output `copy`: pure transport.
+                    _ => cur = xa,
+                }
+            }
+            blend(self.row_mut(so), &cur, m);
+            self.emit(so, m);
+            fired += self.count_times(w, m, chain_len);
+        }
+        fired
     }
 
     /// True when lane `l` can make no progress ever again: injections
     /// drained, no tokens on arcs, no tokens queued in FIFOs (the
     /// scalar engine's `idle` test, per lane).
     fn lane_idle(&self, l: usize) -> bool {
-        let bit = 1u64 << l;
+        let (w, bit) = (l / LANES, 1u64 << (l % LANES));
+        let words = self.words;
         self.inject
             .iter()
             .all(|inj| inj.pos[l] >= inj.streams[l].len())
-            && self.occ.iter().all(|&m| m & bit == 0)
+            && (0..self.p.n_arcs).all(|a| self.occ[a * words + w] & bit == 0)
             && self
                 .fifos
                 .iter()
@@ -460,19 +632,48 @@ impl<'p> LaneSim<'p> {
     }
 }
 
-/// `dst[ℓ] = src[ℓ]` where `mask` bit ℓ is set, branch-free (bitwise
-/// select against a sign-extended lane mask).
+/// `dst[ℓ] = src[ℓ]` where `mask` bit ℓ is set. Full and empty masks —
+/// the common cases on saturated chunks — short-circuit to a plain row
+/// copy / no-op before any per-element work.
 #[inline]
 fn blend(dst: &mut [Word; LANES], src: &[Word; LANES], mask: u64) {
+    if mask == u64::MAX {
+        *dst = *src;
+    } else if mask != 0 {
+        blend_partial(dst, src, mask);
+    }
+}
+
+/// Partial-mask blend, branch-free (bitwise select against a
+/// sign-extended lane mask) so the element loop vectorizes.
+fn blend_partial(dst: &mut [Word; LANES], src: &[Word; LANES], mask: u64) {
     for (l, (d, &s)) in dst.iter_mut().zip(src).enumerate() {
         let sel = 0i16.wrapping_sub(((mask >> l) & 1) as i16);
         *d = (s & sel) | (*d & !sel);
     }
 }
 
+/// Unary opcode over a whole row — one tight loop, no lane branches.
+fn eval1_lanes(op: Op, a: &[Word; LANES], out: &mut [Word; LANES]) {
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o = op.eval1(x);
+    }
+}
+
 /// The vector opcode table: evaluate a 2-input opcode over all lanes.
-/// One tight loop per opcode so the compiler can vectorize each arm.
+#[inline]
 fn eval2_lanes(op: Op, a: &[Word; LANES], b: &[Word; LANES], out: &mut [Word; LANES]) {
+    #[cfg(feature = "simd")]
+    vector::eval2(op, a, b, out);
+    #[cfg(not(feature = "simd"))]
+    eval2_lanes_scalar(op, a, b, out);
+}
+
+/// Scalar reference kernels: one tight loop per opcode so the
+/// autovectorizer can keep each arm branch-free. Always compiled —
+/// the `simd` path falls back here for branchy opcodes (`Div`) and the
+/// equivalence test uses it as the byte-identity oracle.
+fn eval2_lanes_scalar(op: Op, a: &[Word; LANES], b: &[Word; LANES], out: &mut [Word; LANES]) {
     macro_rules! arm {
         ($f:expr) => {{
             let f = $f;
@@ -502,11 +703,63 @@ fn eval2_lanes(op: Op, a: &[Word; LANES], b: &[Word; LANES], out: &mut [Word; LA
     }
 }
 
-/// Run any number of configs through `p`, in lane chunks of [`LANES`];
-/// one outcome per config, in order.
+/// Explicit `std::simd` row kernels (nightly-only, `--features simd`).
+/// Equivalence obligation (DESIGN.md §6): every arm must be
+/// byte-identical to [`eval2_lanes_scalar`] — the in-module test pins
+/// this per opcode, and the bench verification gate re-checks the
+/// end-to-end outputs on every run.
+#[cfg(feature = "simd")]
+mod vector {
+    use super::{eval2_lanes_scalar, Word, LANES};
+    use crate::dfg::Op;
+    use std::simd::prelude::*;
+
+    /// 16 × i16 per register: 256-bit rows, four registers per word.
+    const W: usize = 16;
+    type V = Simd<Word, W>;
+
+    pub fn eval2(op: Op, a: &[Word; LANES], b: &[Word; LANES], out: &mut [Word; LANES]) {
+        macro_rules! arm {
+            (|$x:ident, $y:ident| $e:expr) => {{
+                for i in (0..LANES).step_by(W) {
+                    let $x = V::from_slice(&a[i..i + W]);
+                    let $y = V::from_slice(&b[i..i + W]);
+                    let r: V = $e;
+                    r.copy_to_slice(&mut out[i..i + W]);
+                }
+            }};
+        }
+        match op {
+            // `std::simd` integer arithmetic wraps, matching the
+            // scalar `wrapping_*` semantics exactly.
+            Op::Add => arm!(|x, y| x + y),
+            Op::Sub => arm!(|x, y| x - y),
+            Op::Mul => arm!(|x, y| x * y),
+            Op::And => arm!(|x, y| x & y),
+            Op::Or => arm!(|x, y| x | y),
+            Op::Xor => arm!(|x, y| x ^ y),
+            // Amounts are masked to 0..=15 first, so every lane shift
+            // is in range; `>>` on i16 lanes is arithmetic, matching
+            // `wrapping_shr` on the masked amount.
+            Op::Shl => arm!(|x, y| x << (y & V::splat(0xf))),
+            Op::Shr => arm!(|x, y| x >> (y & V::splat(0xf))),
+            Op::IfGt => arm!(|x, y| x.simd_gt(y).select(V::splat(1), V::splat(0))),
+            Op::IfGe => arm!(|x, y| x.simd_ge(y).select(V::splat(1), V::splat(0))),
+            Op::IfLt => arm!(|x, y| x.simd_lt(y).select(V::splat(1), V::splat(0))),
+            Op::IfLe => arm!(|x, y| x.simd_le(y).select(V::splat(1), V::splat(0))),
+            Op::IfEq => arm!(|x, y| x.simd_eq(y).select(V::splat(1), V::splat(0))),
+            Op::IfDf => arm!(|x, y| x.simd_ne(y).select(V::splat(1), V::splat(0))),
+            // Div's divide-by-zero guard is branchy — scalar per lane.
+            _ => eval2_lanes_scalar(op, a, b, out),
+        }
+    }
+}
+
+/// Run any number of configs through `p`, in lane chunks of
+/// [`MAX_LANES`]; one outcome per config, in order.
 pub fn run_lanes(p: &Program, cfgs: &[SimConfig]) -> Vec<SimOutcome> {
     let mut outs = Vec::with_capacity(cfgs.len());
-    for chunk in cfgs.chunks(LANES) {
+    for chunk in cfgs.chunks(MAX_LANES) {
         let mut sim = LaneSim::new(p, chunk);
         sim.run();
         outs.extend(sim.into_outcomes());
@@ -548,6 +801,20 @@ mod tests {
             assert_eq!(out.firings, alone.firings);
             assert!(out.quiescent);
         }
+    }
+
+    #[test]
+    fn empty_batches_are_valid_and_produce_nothing() {
+        // Regression: `LaneSim::new` used to panic on an empty config
+        // slice (`.max().unwrap()` over the cycle budgets).
+        let g = adder();
+        let p = Program::compile(&g);
+        let mut sim = LaneSim::new(&p, &[]);
+        sim.run();
+        assert_eq!(sim.firings(), 0);
+        assert_eq!(sim.passes(), 0);
+        assert!(sim.into_outcomes().is_empty());
+        assert!(run_lanes(&p, &[]).is_empty());
     }
 
     #[test]
@@ -619,8 +886,8 @@ mod tests {
     fn full_and_ragged_chunks_agree_with_scalar() {
         let g = adder();
         let p = Program::compile(&g);
-        // 64 + 6: one full chunk plus a ragged tail.
-        let cfgs: Vec<SimConfig> = (0..70)
+        // 256 + 6: one full multi-word chunk plus a ragged tail chunk.
+        let cfgs: Vec<SimConfig> = (0..MAX_LANES + 6)
             .map(|i| {
                 SimConfig::new()
                     .inject("a", vec![i as Word])
@@ -628,9 +895,37 @@ mod tests {
             })
             .collect();
         let outs = run_lanes(&p, &cfgs);
-        assert_eq!(outs.len(), 70);
+        assert_eq!(outs.len(), MAX_LANES + 6);
         for (cfg, out) in cfgs.iter().zip(&outs) {
             assert_eq!(out.outputs, run_token(&g, cfg).outputs);
+        }
+    }
+
+    #[test]
+    fn every_mask_word_boundary_width_agrees_with_scalar() {
+        // Widths straddling each occupancy-word boundary run in ONE
+        // LaneSim (no chunk split below MAX_LANES) and must match the
+        // scalar engine lane for lane.
+        let g = adder();
+        let p = Program::compile(&g);
+        for n in [1usize, 63, 64, 65, 128, 129, MAX_LANES] {
+            let cfgs: Vec<SimConfig> = (0..n)
+                .map(|i| {
+                    SimConfig::new()
+                        .inject("a", vec![i as Word, -(i as Word)])
+                        .inject("b", vec![7, 1 + i as Word])
+                })
+                .collect();
+            let mut sim = LaneSim::new(&p, &cfgs);
+            sim.run();
+            let outs = sim.into_outcomes();
+            assert_eq!(outs.len(), n);
+            for (i, (cfg, out)) in cfgs.iter().zip(&outs).enumerate() {
+                let alone = run_token(&g, cfg);
+                assert_eq!(out.outputs, alone.outputs, "width {n}, lane {i}");
+                assert_eq!(out.firings, alone.firings, "width {n}, lane {i}");
+                assert!(out.quiescent, "width {n}, lane {i}");
+            }
         }
     }
 
@@ -654,11 +949,86 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "LaneSim takes 1..=64")]
+    fn fused_chains_match_the_unfused_schedule() {
+        // saxpy compiles to one mul→fifo→add superinstruction; fused
+        // and unfused programs must agree on outputs, firings and
+        // quiescence, and fusing may only shorten the run.
+        let g = crate::bench_defs::saxpy::build();
+        let pf = Program::compile(&g);
+        let pu = Program::compile_unfused(&g);
+        assert_eq!(pf.n_chains(), 1);
+        assert_eq!(pu.n_chains(), 0);
+        let cfgs: Vec<SimConfig> = (0..70)
+            .map(|i| {
+                let (w, _) = crate::bench_defs::saxpy::wave(6, i as u64);
+                let mut cfg = SimConfig::new();
+                for (port, s) in &w {
+                    cfg = cfg.inject(port, s.clone());
+                }
+                cfg
+            })
+            .collect();
+        let fused = run_lanes(&pf, &cfgs);
+        let unfused = run_lanes(&pu, &cfgs);
+        for (i, (f, u)) in fused.iter().zip(&unfused).enumerate() {
+            assert_eq!(f.outputs, u.outputs, "lane {i}");
+            assert_eq!(f.firings, u.firings, "lane {i}");
+            assert_eq!(f.quiescent, u.quiescent, "lane {i}");
+            assert!(f.cycles <= u.cycles, "lane {i}");
+        }
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_kernels_match_scalar_kernels_bytewise() {
+        // The simd-feature equivalence obligation, pinned per opcode on
+        // adversarial rows (full-range values, zeros for Div/shifts).
+        use crate::util::Rng;
+        let ops = [
+            Op::Add,
+            Op::Sub,
+            Op::Mul,
+            Op::Div,
+            Op::And,
+            Op::Or,
+            Op::Xor,
+            Op::Shl,
+            Op::Shr,
+            Op::IfGt,
+            Op::IfGe,
+            Op::IfLt,
+            Op::IfLe,
+            Op::IfEq,
+            Op::IfDf,
+        ];
+        let mut rng = Rng::new(0xD1CE);
+        for round in 0..32 {
+            let mut a: Vec<Word> = rng.words(LANES, i16::MIN as i32, i16::MAX as i32);
+            let mut b: Vec<Word> = rng.words(LANES, i16::MIN as i32, i16::MAX as i32);
+            // Pin the edge cases on a few lanes every round.
+            a[0] = i16::MIN;
+            b[0] = -1;
+            a[1] = i16::MAX;
+            b[1] = i16::MAX;
+            b[2] = 0; // div-by-zero, shift-by-zero
+            let a: [Word; LANES] = a.as_slice().try_into().unwrap();
+            let b: [Word; LANES] = b.as_slice().try_into().unwrap();
+            for op in ops {
+                let mut simd = [0; LANES];
+                let mut scalar = [0; LANES];
+                super::vector::eval2(op, &a, &b, &mut simd);
+                eval2_lanes_scalar(op, &a, &b, &mut scalar);
+                assert_eq!(simd, scalar, "op {op:?}, round {round}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "LaneSim takes at most 256")]
     fn rejects_oversized_chunks() {
         let g = adder();
         let p = Program::compile(&g);
-        let cfgs = vec![SimConfig::new(); 65];
+        let cfgs = vec![SimConfig::new(); MAX_LANES + 1];
         let _ = LaneSim::new(&p, &cfgs);
     }
 }

@@ -27,12 +27,14 @@
 //!
 //! Orthogonal to both sits the **lane tier** ([`compiled`] +
 //! [`lanes`]): [`Program::compile`] flattens a graph into a dense
-//! opcode/port table once, and [`LaneSim`] runs up to [`LANES`]
-//! independent input sets in lockstep through it using structure-of-
-//! arrays token storage (per-arc occupancy bitmasks + value rows), so
-//! one pass over the node table advances every lane at once. Per-lane
-//! outputs are byte-identical to [`TokenSim`] — the same conformance
-//! contract as the streaming tier.
+//! opcode/port table once — fusing linear operator runs into
+//! superinstruction chains on acyclic unit-rate graphs — and
+//! [`LaneSim`] runs up to [`MAX_LANES`] independent input sets in
+//! lockstep through it using structure-of-arrays token storage
+//! (per-arc multi-word occupancy bitmasks + value rows), so one pass
+//! over the node table advances every lane at once. Per-lane outputs
+//! are byte-identical to [`TokenSim`] — the same conformance contract
+//! as the streaming tier.
 
 pub mod compiled;
 mod dynamic;
@@ -41,10 +43,10 @@ pub mod lanes;
 pub mod stream;
 mod token;
 
-pub use compiled::{CNode, Program, NO_ARC};
+pub use compiled::{CNode, ExecUnit, FusedChain, FusedSrc, FusedStep, Program, NO_ARC};
 pub use dynamic::{run_dynamic, DynamicSim};
 pub use fsm::{run_fsm, FsmSim, HandshakeEvent, HandshakeKind};
-pub use lanes::{run_lanes, LaneSim, LANES};
+pub use lanes::{run_lanes, LaneSim, LANES, MAX_LANES};
 pub use stream::{
     overlap_safe, run_stream, run_stream_lanes, run_stream_session, StreamError, StreamMetrics,
     StreamSession, WaveInput, WaveMode,

@@ -770,8 +770,9 @@ impl<'g> StreamSession<'g> {
 /// workloads: waves are mutually independent input sets by definition,
 /// so instead of admitting them one at a time through the resident
 /// graph (paying one full drain-and-reset per wave), run up to
-/// [`LANES`](super::LANES) of them *concurrently* — one lane each —
-/// through one compiled [`Program`](super::Program). Lane isolation
+/// [`MAX_LANES`](super::MAX_LANES) of them *concurrently* — one lane
+/// each — through one compiled [`Program`](super::Program). Lane
+/// isolation
 /// gives exactly the wave isolation the serialized policy exists to
 /// guarantee, so per-wave output streams stay byte-identical to
 /// serialized admission and to isolated [`run_token`](super::run_token)

@@ -109,20 +109,25 @@ pub fn run_timed<T>(
     for _ in 0..cfg.warmup_iters {
         black_box(f().0);
     }
-    let mut per_iter: Vec<f64> = Vec::with_capacity(cfg.samples);
-    let mut busy_iter: Vec<f64> = Vec::with_capacity(cfg.samples);
+    // A zeroed config (hand-built quick/smoke configs) must still
+    // produce one sample — an empty sample vector would panic on
+    // indexing below, and 0 iters per sample would divide to NaN.
+    let samples = cfg.samples.max(1);
+    let iters_per_sample = cfg.iters_per_sample.max(1);
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    let mut busy_iter: Vec<f64> = Vec::with_capacity(samples);
     let mut workers = 1usize;
-    for _ in 0..cfg.samples {
+    for _ in 0..samples {
         let mut busy = 0u64;
         let t0 = Instant::now();
-        for _ in 0..cfg.iters_per_sample {
+        for _ in 0..iters_per_sample {
             let (out, cost) = f();
             black_box(out);
             busy += cost.busy_ns;
             workers = workers.max(cost.workers);
         }
-        per_iter.push(t0.elapsed().as_nanos() as f64 / cfg.iters_per_sample as f64);
-        busy_iter.push(busy as f64 / cfg.iters_per_sample as f64);
+        per_iter.push(t0.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        busy_iter.push(busy as f64 / iters_per_sample as f64);
     }
     per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
     busy_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -250,6 +255,23 @@ mod tests {
         assert!(m.busy_ns > m.median_ns, "busy exceeds wall on a pool");
         let util = m.cpu_util();
         assert!(util > 0.2 && util < 0.75, "util {util}");
+    }
+
+    #[test]
+    fn zeroed_config_still_yields_one_sample() {
+        // Pre-guard this panicked indexing an empty sample vector.
+        let m = run(
+            "zeroed",
+            BenchCfg {
+                warmup_iters: 0,
+                samples: 0,
+                iters_per_sample: 0,
+            },
+            || black_box(42u64),
+        );
+        assert_eq!(m.samples, 1);
+        assert!(m.median_ns.is_finite());
+        assert!(m.busy_ns.is_finite());
     }
 
     #[test]

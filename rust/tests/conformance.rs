@@ -13,8 +13,11 @@
 //! * the **lane engine** (`Program` + `LaneSim`): per-lane output
 //!   streams byte-identical to `TokenSim` on all seven benchmarks (the
 //!   six loop schemas plus SAXPY) and on random DFGs, including ragged
-//!   chunks, per-lane deadlock containment and the batch router's
-//!   lanes→placed fallback.
+//!   multi-word chunks (up to `MAX_LANES` = 256 lanes per chunk),
+//!   per-lane deadlock containment, the batch router's lanes→placed
+//!   fallback, and superinstruction **fusion**: programs compiled with
+//!   fused chains produce outcomes byte-identical to unfused programs
+//!   on every suite graph and on random pipeline DFGs.
 //!
 //! Every property is replayable from the seed in its failure message.
 //! CI runs the same properties as a fixed-seed smoke subset by setting
@@ -32,7 +35,7 @@ use dataflow_accel::opt::{self, optimize, OptLevel};
 use dataflow_accel::par::Executor;
 use dataflow_accel::sim::{
     run_dynamic, run_fsm, run_lanes, run_stream, run_stream_lanes, run_token, Program, SimConfig,
-    StreamSession, WaveInput, WaveMode, LANES,
+    StreamSession, WaveInput, WaveMode, MAX_LANES,
 };
 use dataflow_accel::util::proptest::{
     check, random_dfg, random_dfg_with, random_workload, GenCfg, GenGraph, PropCfg,
@@ -452,21 +455,23 @@ fn prop_lane_engine_matches_token_on_random_dfgs() {
     );
 }
 
-/// Ragged chunking: a batch spanning one full 64-lane chunk plus a
-/// partial tail (and a singleton) stays item-exact.
+/// Ragged chunking: batches at every occupancy-mask word boundary — a
+/// singleton, exactly one 64-bit mask word, one word plus a ragged
+/// second, a full 256-lane multi-word chunk, and a chunk-and-a-bit —
+/// stay item-exact.
 #[test]
 fn lane_batches_survive_ragged_final_chunks() {
     use dataflow_accel::coordinator::run_batch_lanes_with_stats;
     let b = BenchId::VectorSum;
     let g = bench_defs::build(b);
-    for items in [1usize, 64, 70] {
+    for items in [1usize, 64, 70, 129, MAX_LANES, MAX_LANES + 6] {
         let wls: Vec<_> = (0..items)
             .map(|i| bench_defs::workload(b, 1 + i % 3, i as u64))
             .collect();
         let cfgs: Vec<SimConfig> = wls.iter().map(|w| w.sim_config()).collect();
         let (outs, stats) = run_batch_lanes_with_stats(&g, &cfgs);
         assert_eq!(outs.len(), items);
-        assert_eq!(stats.chunks, items.div_ceil(64), "items={items}");
+        assert_eq!(stats.chunks, items.div_ceil(MAX_LANES), "items={items}");
         for (i, wl) in wls.iter().enumerate() {
             let alone = run_token(&g, &cfgs[i]);
             assert_eq!(outs[i].outputs, alone.outputs, "items={items} #{i}");
@@ -549,6 +554,147 @@ fn lane_stream_path_matches_serialized_session_on_all_benchmarks() {
                 "{} wave {i}: lane stream != serialized session",
                 b.slug()
             );
+        }
+    }
+}
+
+/// Superinstruction fusion is invisible to outcomes: programs compiled
+/// with fused chains reproduce the unfused programs' outcomes — output
+/// streams, firings, quiescence — item by item on all 13 suite graphs
+/// (the cyclic schemas compile to zero chains, so the comparison there
+/// pins down that fusion never misfires on the snapshot path; SAXPY
+/// and the other acyclic graphs exercise real chains).
+#[test]
+fn fused_programs_match_unfused_on_suite_graphs() {
+    let mut chained = 0usize;
+    for (name, g, cfgs) in par_suite(12) {
+        let fused = Program::compile(&g);
+        let unfused = Program::compile_unfused(&g);
+        chained += usize::from(fused.n_chains() > 0);
+        let (f_outs, f_stats) = run_batch_lanes_prog(&g, &fused, &cfgs);
+        let (u_outs, u_stats) = run_batch_lanes_prog(&g, &unfused, &cfgs);
+        assert_eq!(
+            f_stats.scalar_reruns, u_stats.scalar_reruns,
+            "{name}: fallback accounting diverged"
+        );
+        // Outputs, firings and quiescence must match exactly; pass
+        // counts may not (a fused chain buffers less internally than
+        // its members did, which is allowed to shift in-flight timing).
+        for (i, cfg) in cfgs.iter().enumerate() {
+            assert_eq!(f_outs[i].outputs, u_outs[i].outputs, "{name} #{i}: outputs");
+            assert_eq!(f_outs[i].firings, u_outs[i].firings, "{name} #{i}: firings");
+            assert_eq!(
+                f_outs[i].quiescent, u_outs[i].quiescent,
+                "{name} #{i}: quiescence"
+            );
+            let alone = run_token(&g, cfg);
+            assert_eq!(f_outs[i].outputs, alone.outputs, "{name} #{i}: vs scalar");
+        }
+    }
+    assert!(chained >= 1, "no suite graph produced a fused chain");
+}
+
+/// Fused == unfused == scalar on seeded random *pipeline* DFGs (the
+/// acyclic unit-rate family where fusion actually forms chains), under
+/// multi-item batches.
+#[test]
+fn prop_fused_matches_unfused_on_random_pipelines() {
+    check(
+        "fused program == unfused program on random pipeline DFGs",
+        PropCfg::from_env(32, 0xF05E_D0DE),
+        |r: &mut Rng| {
+            let gg = random_dfg(r, false);
+            let n_items = 1 + r.below(7);
+            let wls: Vec<BTreeMap<String, Vec<i16>>> = (0..n_items)
+                .map(|_| random_workload(r, &gg, 1 + r.below(3)))
+                .collect();
+            (gg, wls)
+        },
+        |(gg, wls): &(GenGraph, Vec<BTreeMap<String, Vec<i16>>>)| {
+            let g = &gg.graph;
+            let fused = Program::compile(g);
+            let unfused = Program::compile_unfused(g);
+            let cfgs: Vec<SimConfig> = wls.iter().map(|w| config_for(w, 200_000)).collect();
+            let f_outs = run_lanes(&fused, &cfgs);
+            let u_outs = run_lanes(&unfused, &cfgs);
+            for i in 0..cfgs.len() {
+                if f_outs[i].outputs != u_outs[i].outputs
+                    || f_outs[i].quiescent != u_outs[i].quiescent
+                {
+                    return Err(format!(
+                        "item {i}: fused {:?} != unfused {:?}",
+                        f_outs[i], u_outs[i]
+                    ));
+                }
+                if f_outs[i].quiescent && f_outs[i].firings != u_outs[i].firings {
+                    return Err(format!(
+                        "item {i}: firings {} != {} at quiescence",
+                        f_outs[i].firings, u_outs[i].firings
+                    ));
+                }
+                let alone = run_token(g, &cfgs[i]);
+                if f_outs[i].outputs != alone.outputs {
+                    return Err(format!(
+                        "item {i}: fused {:?} != scalar {:?}",
+                        f_outs[i].outputs, alone.outputs
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Multi-word lane widths: one LaneSim chunk at every occupancy-mask
+/// word boundary (1, 63, 64, 65, 128, 129, 256 lanes) reproduces the
+/// scalar engine item by item — fused program, SAXPY's topo path plus
+/// a cyclic schema's snapshot path.
+#[test]
+fn lane_widths_across_mask_word_boundaries_match_scalar() {
+    // SAXPY: acyclic, fused, topo ripple.
+    let g = bench_defs::saxpy::build();
+    let prog = Program::compile(&g);
+    for width in [1usize, 63, 64, 65, 128, 129, MAX_LANES] {
+        let pairs = bench_defs::saxpy::waves(width, 3, 0x77AD + width as u64);
+        let cfgs: Vec<SimConfig> = pairs
+            .iter()
+            .map(|(w, _)| {
+                let mut c = SimConfig::new();
+                for (p, s) in w {
+                    c = c.inject(p, s.clone());
+                }
+                c
+            })
+            .collect();
+        let outs = run_lanes(&prog, &cfgs);
+        assert_eq!(outs.len(), width);
+        for (i, (_, expect)) in pairs.iter().enumerate() {
+            assert_eq!(outs[i].stream("z"), expect.as_slice(), "width={width} #{i}");
+            let alone = run_token(&g, &cfgs[i]);
+            assert_eq!(outs[i].outputs, alone.outputs, "width={width} #{i}");
+        }
+    }
+    // Fibonacci: cyclic, snapshot rounds, per-lane loop trip counts.
+    let b = BenchId::Fibonacci;
+    let g = bench_defs::build(b);
+    let prog = Program::compile(&g);
+    for width in [63usize, 65, 129] {
+        let wls: Vec<_> = (0..width)
+            .map(|i| bench_defs::workload(b, 1 + i % 5, i as u64))
+            .collect();
+        let cfgs: Vec<SimConfig> = wls.iter().map(|w| w.sim_config()).collect();
+        let outs = run_lanes(&prog, &cfgs);
+        for (i, wl) in wls.iter().enumerate() {
+            let alone = run_token(&g, &cfgs[i]);
+            assert_eq!(
+                outs[i].outputs,
+                alone.outputs,
+                "{} width={width} #{i}",
+                b.slug()
+            );
+            for (port, want) in &wl.expect {
+                assert_eq!(outs[i].stream(port), want.as_slice(), "width={width} #{i}");
+            }
         }
     }
 }
@@ -1044,15 +1190,15 @@ fn par_determinism_sstream_on_suite_graphs() {
     }
 }
 
-/// Multi-chunk lane batches: with more items than 2×LANES the
-/// parallel path actually distributes whole 64-lane chunks across
-/// workers (the single-chunk fallback can't mask a bug here).
+/// Multi-chunk lane batches: with more items than 2×MAX_LANES the
+/// parallel path actually distributes whole 256-lane multi-word chunks
+/// across workers (the single-chunk fallback can't mask a bug here).
 #[test]
 fn par_determinism_lanes_multi_chunk_batches() {
     for b in [BenchId::DotProd, BenchId::VectorSum, BenchId::Fibonacci] {
         let g = bench_defs::build(b);
         let prog = Program::compile(&g);
-        let items = 2 * LANES + 3;
+        let items = 2 * MAX_LANES + 3;
         let cfgs: Vec<SimConfig> = (0..items)
             .map(|i| bench_defs::workload(b, 1 + i % 4, i as u64).sim_config())
             .collect();
