@@ -448,7 +448,7 @@ fn run_jobs(
             if state.opt_rescued_place {
                 metrics.opt_placed.fetch_add(1, Ordering::Relaxed);
             }
-            pool.route();
+            pool.route_healthy();
             if streamed {
                 super::batch::run_batch_streamed(g, &cfgs)
             } else {
@@ -476,13 +476,13 @@ fn run_jobs(
             metrics.sharded.fetch_add(1, Ordering::Relaxed);
             // A sharded batch occupies one instance per shard.
             for _ in 0..plan.n_shards() {
-                pool.route();
+                pool.route_healthy();
             }
             super::batch::run_batch_sharded(plan, &cfgs, streamed)
         }
         RoutePlan::Reconfig(plan) => {
             metrics.reconfig.fetch_add(1, Ordering::Relaxed);
-            pool.route();
+            pool.route_healthy();
             super::batch::run_batch_reconfig(plan, pool.topology(), &cfgs, streamed)
         }
         RoutePlan::Fallback => {

@@ -1,0 +1,366 @@
+//! Deterministic fault injection for the fabric.
+//!
+//! The paper's accelerator is physical hardware: operator slots lose
+//! timing closure, bus channels develop stuck-at faults, and a whole
+//! instance can drop off the rack. A production serve tier has to keep
+//! answering through all of that, so this module gives the chaos
+//! harness a *seeded, deterministic* fault source:
+//!
+//! * [`FaultPlan`] — a schedule of [`FaultEvent`]s pinned to virtual
+//!   scheduler ticks (never wall time). The same seed always yields the
+//!   same schedule, so a chaos run is exactly as reproducible as the
+//!   load profile it torments.
+//! * [`FabricHealth`] — the mutable health view of one instance's
+//!   [`FabricTopology`]: quarantined slots/channels and a whole-instance
+//!   `down` flag. [`FabricHealth::effective`] projects the degraded
+//!   topology the placer must route against; a [`FaultKind::Repair`]
+//!   restores the instance wholesale (the technician swaps the board).
+//!
+//! The health timeline is a pure function of `(plan, tick)`:
+//! [`FaultPlan::healthy_at`] replays the schedule, which is what lets
+//! the serve tier's bounded-retry policy *probe the future* — backoff
+//! decisions depend only on the plan and the virtual clock, never on
+//! execution timing, keeping chaos runs schedule-invariant (DESIGN.md
+//! §11).
+
+use super::topology::FabricTopology;
+use crate::dfg::OpClass;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+/// One way an instance degrades (or recovers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `count` operator slots of `class` are quarantined.
+    SlotFail { class: OpClass, count: usize },
+    /// `channels` bus channels are quarantined.
+    BusFail { channels: usize },
+    /// The whole instance goes dark (mid-wave sessions die with it).
+    Outage,
+    /// Full repair: every quarantine on the instance is lifted.
+    Repair,
+}
+
+/// One scheduled fault: at the start of virtual tick `tick`, `kind`
+/// applies to instance `instance`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub tick: u64,
+    pub instance: usize,
+    pub kind: FaultKind,
+}
+
+/// Per-kind event census of a plan (the chaos gate requires at least
+/// one slot, one bus, and one outage fault).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub slot: u64,
+    pub bus: u64,
+    pub outage: u64,
+    pub repair: u64,
+}
+
+impl FaultCounts {
+    /// Faults injected (repairs are recoveries, not faults).
+    pub fn injected(&self) -> u64 {
+        self.slot + self.bus + self.outage
+    }
+}
+
+/// A deterministic schedule of fabric faults, sorted by tick.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// No faults — the baseline run.
+    pub fn empty() -> Self {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// A plan from explicit events (sorted by tick, stable).
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| e.tick);
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Events scheduled for the start of `tick`.
+    pub fn events_at(&self, tick: u64) -> impl Iterator<Item = &FaultEvent> {
+        self.events.iter().filter(move |e| e.tick == tick)
+    }
+
+    /// Per-kind census.
+    pub fn counts(&self) -> FaultCounts {
+        let mut c = FaultCounts::default();
+        for e in &self.events {
+            match e.kind {
+                FaultKind::SlotFail { .. } => c.slot += 1,
+                FaultKind::BusFail { .. } => c.bus += 1,
+                FaultKind::Outage => c.outage += 1,
+                FaultKind::Repair => c.repair += 1,
+            }
+        }
+        c
+    }
+
+    /// Is `instance` up at the start of tick `tick` (after that tick's
+    /// events apply)? Pure replay of the schedule — the bounded-retry
+    /// policy probes future ticks through this.
+    pub fn healthy_at(&self, tick: u64, instance: usize) -> bool {
+        let mut down = false;
+        for e in &self.events {
+            if e.tick > tick || e.instance != instance {
+                continue;
+            }
+            match e.kind {
+                FaultKind::Outage => down = true,
+                FaultKind::Repair => down = false,
+                _ => {}
+            }
+        }
+        !down
+    }
+
+    /// The canonical seeded chaos schedule for a pool of `instances`:
+    /// guaranteed to contain at least one slot failure, one bus-channel
+    /// failure, and one whole-instance outage, every fault inside the
+    /// tick window [2, 8] (early enough that even a quick profile is
+    /// still dispatching), and a repair for every faulted instance by
+    /// tick 10. Only one instance is ever in outage at a time, so a
+    /// pool of ≥ 2 instances always has a healthy member, and a pool of
+    /// 1 recovers within the bounded-retry window (T+1/T+3/T+7).
+    pub fn seeded(seed: u64, instances: usize) -> Self {
+        let instances = instances.max(1);
+        let mut r = Rng::new(seed ^ 0xFA01_7B1A_D5EE_DCAB);
+        let mut events = Vec::new();
+        // Slot failure: quarantine more slots than any class provisions
+        // (the health view clamps), so placed graphs genuinely stop
+        // fitting the degraded instance and demote down the lattice.
+        let t_slot = 2 + r.below(3) as u64; // 2..=4
+        let i_slot = r.below(instances);
+        events.push(FaultEvent {
+            tick: t_slot,
+            instance: i_slot,
+            kind: FaultKind::SlotFail {
+                class: OpClass::Alu2,
+                count: (1 << 10) + r.below(64),
+            },
+        });
+        events.push(FaultEvent {
+            tick: t_slot + 3,
+            instance: i_slot,
+            kind: FaultKind::Repair,
+        });
+        // Bus failure on a (possibly different) instance.
+        let t_bus = 3 + r.below(3) as u64; // 3..=5
+        let i_bus = r.below(instances);
+        events.push(FaultEvent {
+            tick: t_bus,
+            instance: i_bus,
+            kind: FaultKind::BusFail {
+                channels: (1 << 10) + r.below(64),
+            },
+        });
+        events.push(FaultEvent {
+            tick: t_bus + 3,
+            instance: i_bus,
+            kind: FaultKind::Repair,
+        });
+        // Whole-instance outage — the mid-wave killer. Repair after 2
+        // ticks keeps a single-instance pool inside the retry window.
+        let t_out = 3 + r.below(6) as u64; // 3..=8
+        let i_out = r.below(instances);
+        events.push(FaultEvent {
+            tick: t_out,
+            instance: i_out,
+            kind: FaultKind::Outage,
+        });
+        events.push(FaultEvent {
+            tick: t_out + 2,
+            instance: i_out,
+            kind: FaultKind::Repair,
+        });
+        FaultPlan::new(events)
+    }
+}
+
+/// The mutable health view of one fabric instance. All-healthy by
+/// default; [`FabricHealth::apply`] folds in fault events and
+/// [`FabricHealth::effective`] projects the topology the placer and
+/// router must respect.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FabricHealth {
+    /// Quarantined operator slots per class.
+    pub lost_slots: BTreeMap<OpClass, usize>,
+    /// Quarantined bus channels.
+    pub lost_channels: usize,
+    /// Whole instance dark (outage).
+    pub down: bool,
+}
+
+impl FabricHealth {
+    pub fn healthy() -> Self {
+        FabricHealth::default()
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.down || self.lost_channels > 0 || self.lost_slots.values().any(|&n| n > 0)
+    }
+
+    /// Fold one fault event into the view.
+    pub fn apply(&mut self, kind: FaultKind) {
+        match kind {
+            FaultKind::SlotFail { class, count } => {
+                *self.lost_slots.entry(class).or_insert(0) += count;
+            }
+            FaultKind::BusFail { channels } => {
+                self.lost_channels += channels;
+            }
+            FaultKind::Outage => self.down = true,
+            FaultKind::Repair => *self = FabricHealth::healthy(),
+        }
+    }
+
+    /// The topology this instance effectively offers right now:
+    /// `base` minus quarantined resources (saturating at zero); a
+    /// down instance offers nothing.
+    pub fn effective(&self, base: &FabricTopology) -> FabricTopology {
+        if self.down {
+            return FabricTopology::new(base.name.clone(), BTreeMap::new(), 0, base.reconfig_cycles);
+        }
+        let slots: BTreeMap<OpClass, usize> = base
+            .slots
+            .iter()
+            .map(|(&c, &n)| (c, n.saturating_sub(self.lost_slots.get(&c).copied().unwrap_or(0))))
+            .collect();
+        FabricTopology::new(
+            base.name.clone(),
+            slots,
+            base.channels.saturating_sub(self.lost_channels),
+            base.reconfig_cycles,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{build, BenchId};
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_complete() {
+        for seed in [0u64, 7, 42, 0xDEAD] {
+            let a = FaultPlan::seeded(seed, 2);
+            let b = FaultPlan::seeded(seed, 2);
+            assert_eq!(a.events(), b.events(), "seed {seed} not reproducible");
+            let c = a.counts();
+            assert!(c.slot >= 1, "seed {seed}: no slot failure");
+            assert!(c.bus >= 1, "seed {seed}: no bus failure");
+            assert!(c.outage >= 1, "seed {seed}: no outage");
+            assert!(c.repair >= c.injected().min(3), "seed {seed}: unrepaired");
+            for e in a.events() {
+                match e.kind {
+                    FaultKind::Repair => assert!(e.tick <= 10, "late repair: {e:?}"),
+                    _ => assert!((2..=8).contains(&e.tick), "fault outside window: {e:?}"),
+                }
+                assert!(e.instance < 2);
+            }
+            // Sorted by tick.
+            assert!(a.events().windows(2).all(|w| w[0].tick <= w[1].tick));
+        }
+    }
+
+    #[test]
+    fn seeded_plan_never_downs_the_whole_pool() {
+        for seed in 0u64..32 {
+            let plan = FaultPlan::seeded(seed, 2);
+            let horizon = plan.events().iter().map(|e| e.tick).max().unwrap() + 2;
+            for tick in 0..=horizon {
+                assert!(
+                    (0..2).any(|i| plan.healthy_at(tick, i)),
+                    "seed {seed}: whole pool dark at tick {tick}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_instance_outage_repairs_inside_the_retry_window() {
+        for seed in 0u64..32 {
+            let plan = FaultPlan::seeded(seed, 1);
+            for tick in 0..=12u64 {
+                if !plan.healthy_at(tick, 0) {
+                    // The T+1/T+3/T+7 probes from this tick must find it up.
+                    assert!(
+                        [1u64, 3, 7].iter().any(|d| plan.healthy_at(tick + d, 0)),
+                        "seed {seed}: outage at tick {tick} outlives the retry window"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn health_view_degrades_and_repairs() {
+        let base = FabricTopology::paper();
+        let mut h = FabricHealth::healthy();
+        assert!(!h.is_degraded());
+        assert_eq!(h.effective(&base), base);
+
+        h.apply(FaultKind::SlotFail {
+            class: OpClass::Alu2,
+            count: 1 << 10,
+        });
+        let degraded = h.effective(&base);
+        assert_eq!(degraded.slot_count(OpClass::Alu2), 0, "clamped at zero");
+        for b in BenchId::ALL {
+            assert!(
+                !degraded.fits(&build(b)),
+                "{} still fits with every ALU slot dark",
+                b.slug()
+            );
+        }
+
+        h.apply(FaultKind::BusFail { channels: 3 });
+        assert_eq!(h.effective(&base).channels, base.channels - 3);
+
+        h.apply(FaultKind::Outage);
+        let dark = h.effective(&base);
+        assert_eq!(dark.total_slots(), 0);
+        assert_eq!(dark.channels, 0);
+
+        h.apply(FaultKind::Repair);
+        assert!(!h.is_degraded());
+        assert_eq!(h.effective(&base), base);
+    }
+
+    #[test]
+    fn healthy_at_replays_the_outage_window() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                tick: 4,
+                instance: 1,
+                kind: FaultKind::Outage,
+            },
+            FaultEvent {
+                tick: 6,
+                instance: 1,
+                kind: FaultKind::Repair,
+            },
+        ]);
+        assert!(plan.healthy_at(3, 1));
+        assert!(!plan.healthy_at(4, 1));
+        assert!(!plan.healthy_at(5, 1));
+        assert!(plan.healthy_at(6, 1));
+        assert!(plan.healthy_at(3, 0), "other instances untouched");
+    }
+}

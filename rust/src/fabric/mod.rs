@@ -26,36 +26,43 @@
 //! it and falls back to sharded execution when a graph does not fit one
 //! instance.
 
+pub mod fault;
 pub mod partition;
 pub mod place;
 pub mod reconfig;
 pub mod shard;
 pub mod topology;
 
+pub use fault::{FabricHealth, FaultCounts, FaultEvent, FaultKind, FaultPlan};
 pub use partition::{partition, CutArc, PartitionPlan, Shard};
-pub use place::{place, PlaceError, Placement};
+pub use place::{place, place_healthy, PlaceError, Placement};
 pub use reconfig::{run_reconfig, run_reconfig_waves, ReconfigStats};
 pub use shard::{run_sharded, run_sharded_waves};
 pub use topology::FabricTopology;
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 /// A pool of `N` identical fabric instances — the spatial-sharding tier.
 /// Routing is round-robin (every instance is interchangeable hardware);
-/// per-instance dispatch counters feed the utilization report.
+/// per-instance dispatch counters feed the utilization report. Each
+/// instance carries a quarantine flag ([`FabricPool::set_down`]) so the
+/// fault layer can take it out of rotation and re-admit it on repair.
 #[derive(Debug)]
 pub struct FabricPool {
     topo: FabricTopology,
     next: AtomicUsize,
     dispatched: Vec<AtomicU64>,
+    down: Vec<AtomicBool>,
 }
 
 impl FabricPool {
     pub fn new(topo: FabricTopology, instances: usize) -> Self {
+        let n = instances.max(1);
         FabricPool {
             topo,
             next: AtomicUsize::new(0),
-            dispatched: (0..instances.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            dispatched: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            down: (0..n).map(|_| AtomicBool::new(false)).collect(),
         }
     }
 
@@ -69,6 +76,36 @@ impl FabricPool {
         &self.topo
     }
 
+    /// Quarantine (`down = true`) or re-admit (`down = false`) one
+    /// instance. Returns `false` when `instance` is out of range (the
+    /// pool is left untouched).
+    pub fn set_down(&self, instance: usize, down: bool) -> bool {
+        match self.down.get(instance) {
+            Some(flag) => {
+                flag.store(down, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Is `instance` currently quarantined? Out-of-range instances
+    /// read as down (they can never serve traffic).
+    pub fn is_down(&self, instance: usize) -> bool {
+        self.down
+            .get(instance)
+            .map(|f| f.load(Ordering::Relaxed))
+            .unwrap_or(true)
+    }
+
+    /// Instances currently in rotation.
+    pub fn healthy_count(&self) -> usize {
+        self.down
+            .iter()
+            .filter(|f| !f.load(Ordering::Relaxed))
+            .count()
+    }
+
     /// Route the next batch: returns the chosen instance id and bumps its
     /// dispatch counter.
     pub fn route(&self) -> usize {
@@ -77,9 +114,28 @@ impl FabricPool {
         i
     }
 
-    /// Batches dispatched to `instance` so far.
-    pub fn dispatched(&self, instance: usize) -> u64 {
-        self.dispatched[instance].load(Ordering::Relaxed)
+    /// Health-aware [`FabricPool::route`]: round-robin over instances
+    /// *in rotation*, skipping quarantined ones. Identical to `route`
+    /// while the pool is fully healthy (the cursor advances the same
+    /// way), `None` when every instance is down.
+    pub fn route_healthy(&self) -> Option<usize> {
+        for _ in 0..self.dispatched.len() {
+            let i = self.next.fetch_add(1, Ordering::Relaxed) % self.dispatched.len();
+            if !self.down[i].load(Ordering::Relaxed) {
+                self.dispatched[i].fetch_add(1, Ordering::Relaxed);
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Batches dispatched to `instance` so far; `None` when the pool
+    /// has no such instance (instead of the out-of-bounds panic this
+    /// used to be).
+    pub fn dispatched(&self, instance: usize) -> Option<u64> {
+        self.dispatched
+            .get(instance)
+            .map(|c| c.load(Ordering::Relaxed))
     }
 
     /// One-line utilization summary for logs and the sweep report.
@@ -108,7 +164,7 @@ mod tests {
         let picks: Vec<usize> = (0..6).map(|_| pool.route()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
         for i in 0..3 {
-            assert_eq!(pool.dispatched(i), 2);
+            assert_eq!(pool.dispatched(i), Some(2));
         }
         assert!(pool.summary().contains("3 instance(s)"));
     }
@@ -118,5 +174,41 @@ mod tests {
         let pool = FabricPool::new(FabricTopology::paper(), 0);
         assert_eq!(pool.size(), 1);
         assert_eq!(pool.route(), 0);
+    }
+
+    #[test]
+    fn dispatched_is_total_over_instance_ids() {
+        // Regression: this indexed `self.dispatched[instance]` and
+        // panicked on any id ≥ size (reachable from report callers fed
+        // a stale pool size).
+        let pool = FabricPool::new(FabricTopology::paper(), 2);
+        pool.route();
+        assert_eq!(pool.dispatched(0), Some(1));
+        assert_eq!(pool.dispatched(7), None);
+    }
+
+    #[test]
+    fn route_healthy_skips_quarantined_and_readmits() {
+        let pool = FabricPool::new(FabricTopology::paper(), 3);
+        // Fully healthy: identical to plain round-robin.
+        let picks: Vec<usize> = (0..3).map(|_| pool.route_healthy().unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2]);
+        assert!(pool.set_down(1, true));
+        assert!(pool.is_down(1));
+        assert_eq!(pool.healthy_count(), 2);
+        for _ in 0..4 {
+            let i = pool.route_healthy().unwrap();
+            assert_ne!(i, 1, "routed to a quarantined instance");
+        }
+        // All dark → no route, never a panic.
+        pool.set_down(0, true);
+        pool.set_down(2, true);
+        assert_eq!(pool.route_healthy(), None);
+        // Repair re-admits.
+        pool.set_down(1, false);
+        assert_eq!(pool.route_healthy(), Some(1));
+        // Unknown instances are rejected and read as down.
+        assert!(!pool.set_down(9, true));
+        assert!(pool.is_down(9));
     }
 }

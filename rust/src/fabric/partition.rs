@@ -209,7 +209,9 @@ fn refine(g: &Graph, topo: &FabricTopology, assign: &mut [usize], n_shards: usiz
                 }
             }
             if let Some((_, t)) = best {
-                *counts[s].get_mut(&class).unwrap() -= 1;
+                *counts[s]
+                    .get_mut(&class)
+                    .expect("refine: moved node's class is absent from its home shard census") -= 1;
                 *counts[t].entry(class).or_insert(0) += 1;
                 assign[ni] = t;
                 improved = true;

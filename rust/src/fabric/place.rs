@@ -9,6 +9,7 @@
 //! the VHDL floorplan annotations consume; graphs that do not fit are
 //! rejected with a descriptive [`PlaceError`] (the partitioner's cue).
 
+use super::fault::FabricHealth;
 use super::topology::FabricTopology;
 use crate::dfg::{Graph, OpClass};
 use std::collections::BTreeMap;
@@ -25,6 +26,8 @@ pub enum PlaceError {
     },
     /// The graph has more arcs than the fabric has bus channels.
     InsufficientChannels { need: usize, have: usize },
+    /// The instance is in outage — nothing places until repair.
+    InstanceDown,
 }
 
 impl fmt::Display for PlaceError {
@@ -39,6 +42,9 @@ impl fmt::Display for PlaceError {
                 f,
                 "graph needs {need} bus channels but the fabric provides only {have}"
             ),
+            PlaceError::InstanceDown => {
+                write!(f, "fabric instance is in outage; wait for repair")
+            }
         }
     }
 }
@@ -121,6 +127,23 @@ pub fn place(g: &Graph, topo: &FabricTopology) -> Result<Placement, PlaceError> 
     })
 }
 
+/// Fault-aware placement: place `g` on what is left of `topo` after the
+/// instance's current `health` is subtracted. An instance in outage
+/// rejects everything with [`PlaceError::InstanceDown`]; a degraded
+/// instance places against the reduced slot/channel pools, so the serve
+/// tier's recovery lattice sees the same descriptive errors the cold
+/// placer would produce on a genuinely smaller fabric.
+pub fn place_healthy(
+    g: &Graph,
+    topo: &FabricTopology,
+    health: &FabricHealth,
+) -> Result<Placement, PlaceError> {
+    if health.down {
+        return Err(PlaceError::InstanceDown);
+    }
+    place(g, &health.effective(topo))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +205,42 @@ mod tests {
             }
         );
         assert!(err.to_string().contains("bus channels"));
+    }
+
+    #[test]
+    fn health_aware_placement_degrades_and_recovers() {
+        use crate::fabric::fault::{FabricHealth, FaultKind};
+        let topo = FabricTopology::serving();
+        let g = build(BenchId::DotProd);
+        let mut health = FabricHealth::default();
+        // Healthy instance: identical placement to the plain placer.
+        assert_eq!(place_healthy(&g, &topo, &health), place(&g, &topo));
+        // An outage rejects everything, whatever the graph.
+        health.apply(FaultKind::Outage);
+        assert_eq!(place_healthy(&g, &topo, &health), Err(PlaceError::InstanceDown));
+        assert!(PlaceError::InstanceDown.to_string().contains("outage"));
+        // Repair restores the full pools.
+        health.apply(FaultKind::Repair);
+        assert!(place_healthy(&g, &topo, &health).is_ok());
+        // A slot fault bigger than the provisioned pool clamps the class
+        // to zero and surfaces as the placer's own descriptive error.
+        health.apply(FaultKind::SlotFail {
+            class: crate::dfg::OpClass::Alu2,
+            count: topo.total_slots() + 1,
+        });
+        match place_healthy(&g, &topo, &health) {
+            Err(PlaceError::InsufficientSlots { have, .. }) => assert_eq!(have, 0),
+            other => panic!("wrong result: {other:?}"),
+        }
+        // A bus fault exhausts the channel pool the same way.
+        health.apply(FaultKind::Repair);
+        health.apply(FaultKind::BusFail {
+            channels: topo.channels + 1,
+        });
+        match place_healthy(&g, &topo, &health) {
+            Err(PlaceError::InsufficientChannels { have, .. }) => assert_eq!(have, 0),
+            other => panic!("wrong result: {other:?}"),
+        }
     }
 
     #[test]

@@ -51,9 +51,13 @@ fn drive_contexts(
         .cuts
         .iter()
         .map(|cut| {
-            sims[cut.to]
-                .port_slot(&cut.name)
-                .unwrap_or_else(|| panic!("cut arc `{}` has no input half", cut.name))
+            sims[cut.to].port_slot(&cut.name).unwrap_or_else(|| {
+                panic!(
+                    "partition plan is inconsistent: cut arc `{}` has no \
+                     input half in consuming context {}",
+                    cut.name, cut.to
+                )
+            })
         })
         .collect();
 

@@ -83,9 +83,13 @@ pub(crate) fn drive_lockstep(sims: &mut [TokenSim], plan: &PartitionPlan, budget
         .cuts
         .iter()
         .map(|cut| {
-            sims[cut.to]
-                .port_slot(&cut.name)
-                .unwrap_or_else(|| panic!("cut arc `{}` has no input half", cut.name))
+            sims[cut.to].port_slot(&cut.name).unwrap_or_else(|| {
+                panic!(
+                    "partition plan is inconsistent: cut arc `{}` has no \
+                     input half in consuming shard {}",
+                    cut.name, cut.to
+                )
+            })
         })
         .collect();
     let mut rounds = 0u64;

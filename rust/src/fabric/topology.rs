@@ -134,6 +134,13 @@ impl FabricTopology {
         )
     }
 
+    /// Whether `g` fits this instance after its current fault `health`
+    /// is subtracted — the serve tier's per-dispatch fit probe. An
+    /// instance in outage fits nothing.
+    pub fn fits_healthy(&self, g: &Graph, health: &super::fault::FabricHealth) -> bool {
+        !health.down && health.effective(self).fits(g)
+    }
+
     /// The multi-tenant serving fabric: the paper instance scaled with
     /// per-class headroom for workloads *outside* the six benchmarks.
     /// `paper()` is demand-derived, so classes no benchmark uses get
@@ -225,6 +232,26 @@ mod tests {
         let rb = big.resources();
         assert!(rb.ff > rs.ff);
         assert!(rb.lut >= rs.lut);
+    }
+
+    #[test]
+    fn fits_healthy_tracks_fault_state() {
+        use crate::fabric::fault::{FabricHealth, FaultKind};
+        let topo = FabricTopology::serving();
+        let g = build(BenchId::DotProd);
+        let mut health = FabricHealth::default();
+        assert!(topo.fits_healthy(&g, &health));
+        // Losing more alu2 slots than the fabric has clamps the class to
+        // zero: the graph no longer fits the degraded instance.
+        health.apply(FaultKind::SlotFail {
+            class: crate::dfg::OpClass::Alu2,
+            count: topo.total_slots() + 1,
+        });
+        assert!(!topo.fits_healthy(&g, &health));
+        health.apply(FaultKind::Repair);
+        assert!(topo.fits_healthy(&g, &health));
+        health.apply(FaultKind::Outage);
+        assert!(!topo.fits_healthy(&g, &health));
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! dataflow-accel serve [--quick] [--seed 7] [--scale 24] [--n 8]
 //!                      [--arrival closed|open|burst] [--workers N] [--scale-workers]
 //!                      [--out SERVE_6.json]
+//! dataflow-accel serve --chaos [--quick] [--seed 7] [--scale 16] [--n 8]
+//!                      [--out CHAOS_8.json]
 //! dataflow-accel table1 [--fig8]
 //! dataflow-accel sweep [--bench all] [--requests 64] [--n 16] [--engine native|xla]
 //!                      [--workers 4] [--batch 8] [--stream]
@@ -36,6 +38,7 @@ fn main() {
             "quick",
             "scale-workers",
             "no-fuse",
+            "chaos",
         ],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -85,7 +88,11 @@ fn main() {
                  \x20 --workers N   dispatch batches across N work-stealing workers (default 1)\n\
                  \x20 --scale-workers  sweep worker counts 1,2,..,max(4,N); verify identical\n\
                  \x20                  results per count, emit the scaling curve\n\
-                 \x20 --out PATH    write the JSON report (default SERVE_6.json)\n\
+                 \x20 --chaos       run the 10:1 fairness profile under a seeded fabric fault\n\
+                 \x20               schedule; refuse CHAOS_8.json unless zero requests were\n\
+                 \x20               lost and outputs match the fault-free baseline byte-for-byte\n\
+                 \x20 --out PATH    write the JSON report (default SERVE_6.json; CHAOS_8.json\n\
+                 \x20               with --chaos)\n\
                  sweep: --stream routes batches through resident streaming sessions\n\
                  benchmarks: {} saxpy (stream/bench only)",
                 BenchId::ALL.map(|b| b.slug()).join(" ")
@@ -394,6 +401,10 @@ fn cmd_bench(args: &Args) {
 
 fn cmd_serve(args: &Args) {
     use dataflow_accel::serve::{self, Arrival};
+    if args.has("chaos") {
+        cmd_serve_chaos(args);
+        return;
+    }
     let quick = args.has("quick");
     let seed = args.get_u64("seed", 7);
     let scale = args.get_usize("scale", if quick { 4 } else { 24 });
@@ -494,6 +505,57 @@ fn cmd_serve(args: &Args) {
         println!("scaling verified: results byte-identical across worker counts {counts:?}");
     }
     let json = report::serve::to_json(report, seed, scale, n, quick, &scaling);
+    std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
+    println!("wrote {out_path}");
+}
+
+/// `serve --chaos`: the 10:1 fairness profile under a seeded fabric
+/// fault schedule, gated against a fault-free baseline of the *same*
+/// runner. The zero-lost-requests gate refuses to write CHAOS_8.json
+/// unless every fault kind was injected, nothing was lost, accounting
+/// is exact, and every completed request's output digest is
+/// byte-identical to the baseline's.
+fn cmd_serve_chaos(args: &Args) {
+    use dataflow_accel::fabric::FaultPlan;
+    use dataflow_accel::serve;
+    let quick = args.has("quick");
+    let seed = args.get_u64("seed", 7);
+    let scale = args.get_usize("scale", if quick { 4 } else { 16 });
+    let n = args.get_usize("n", if quick { 4 } else { 8 });
+    let out_path = args.get_or("out", "CHAOS_8.json");
+    let profile = serve::fairness_profile(scale, n, seed);
+    // Small batches keep the heavy tenant dispatching well past the
+    // seeded fault window (ticks 2–8), so faults land on live traffic
+    // instead of after the profile drained.
+    let opts = serve::ServeOptions {
+        cfg: serve::ServeCfg {
+            max_batch: 4,
+            ..serve::ServeCfg::default()
+        },
+        ..serve::ServeOptions::default()
+    };
+    let plan = FaultPlan::seeded(seed, opts.pool_size);
+    println!(
+        "chaos: seed {seed}, {} fault event(s) over {} instance(s) \
+         (slot {}, bus {}, outage {}, repair {})",
+        plan.events().len(),
+        opts.pool_size,
+        plan.counts().slot,
+        plan.counts().bus,
+        plan.counts().outage,
+        plan.counts().repair
+    );
+    let baseline = serve::run_profile_chaos(&profile, &opts, &FaultPlan::empty());
+    let faulted = serve::run_profile_chaos(&profile, &opts, &plan);
+    print!("{}", report::serve_table(&faulted.report));
+    let gate = report::ChaosGate::check(&plan, &faulted, &baseline);
+    print!("{}", report::chaos_summary(&gate, &faulted));
+    if !gate.passed() {
+        eprintln!("serve: chaos gate failed");
+        eprintln!("serve: refusing to write {out_path}");
+        std::process::exit(1);
+    }
+    let json = report::chaos::to_json(&gate, &plan, &faulted, seed, quick);
     std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
     println!("wrote {out_path}");
 }

@@ -1,0 +1,172 @@
+//! The chaos-run verdict: `CHAOS_8.json` (schema
+//! `dataflow-accel-chaos/v1`), written by `serve --chaos` **only**
+//! when the zero-lost-requests gate holds. The CLI refuses to write
+//! the file otherwise, so the artifact's existence is itself the
+//! claim; the JSON carries the evidence (per-kind fault census,
+//! accounting, digest-match verdict, recovery counters) so CI can
+//! re-assert it without re-running.
+
+use crate::fabric::FaultPlan;
+use crate::serve::ChaosOutcome;
+use std::fmt::Write as _;
+
+/// Everything the chaos gate checks, precomputed so the CLI and the
+/// JSON writer cannot disagree about what passed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosGate {
+    /// ≥ 1 slot failure, ≥ 1 bus failure, ≥ 1 outage injected.
+    pub all_fault_kinds: bool,
+    /// No request vanished: `lost == 0` for every tenant.
+    pub zero_lost: bool,
+    /// `completed + shed == submitted` globally.
+    pub accounting_exact: bool,
+    /// Every completed request's output digest is byte-identical to
+    /// the fault-free baseline's, and both runs completed the same
+    /// request set.
+    pub digest_match: bool,
+}
+
+impl ChaosGate {
+    /// Evaluate the gate over a chaos run and its fault-free baseline
+    /// (same profile, same options, [`FaultPlan::empty`]).
+    pub fn check(plan: &FaultPlan, faulted: &ChaosOutcome, baseline: &ChaosOutcome) -> Self {
+        let c = plan.counts();
+        let g = &faulted.report.global;
+        ChaosGate {
+            all_fault_kinds: c.slot >= 1 && c.bus >= 1 && c.outage >= 1,
+            zero_lost: faulted.report.tenants.iter().all(|t| t.lost() == 0) && g.lost() == 0,
+            accounting_exact: g.completed + g.shed() == g.submitted,
+            digest_match: faulted.output_digests == baseline.output_digests,
+        }
+    }
+
+    pub fn passed(&self) -> bool {
+        self.all_fault_kinds && self.zero_lost && self.accounting_exact && self.digest_match
+    }
+
+    /// The gates that failed, for the CLI's refusal message.
+    pub fn failures(&self) -> Vec<&'static str> {
+        let mut v = Vec::new();
+        if !self.all_fault_kinds {
+            v.push("fault plan missing a slot/bus/outage event");
+        }
+        if !self.zero_lost {
+            v.push("requests were lost (neither completed nor shed)");
+        }
+        if !self.accounting_exact {
+            v.push("completed + shed != submitted");
+        }
+        if !self.digest_match {
+            v.push("output digests diverge from the fault-free baseline");
+        }
+        v
+    }
+}
+
+/// Serialize the chaos verdict (schema `dataflow-accel-chaos/v1`).
+/// Callers gate on [`ChaosGate::passed`] before writing this to disk;
+/// the serializer itself is total so tests can render failing gates.
+pub fn to_json(gate: &ChaosGate, plan: &FaultPlan, faulted: &ChaosOutcome, seed: u64, quick: bool) -> String {
+    let counts = plan.counts();
+    let g = &faulted.report.global;
+    let c = &faulted.chaos;
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"dataflow-accel-chaos/v1\",\n");
+    writeln!(out, "  \"seed\": {seed},").unwrap();
+    writeln!(out, "  \"quick\": {quick},").unwrap();
+    writeln!(out, "  \"passed\": {},", gate.passed()).unwrap();
+    writeln!(out, "  \"digest_match\": {},", gate.digest_match).unwrap();
+    writeln!(out, "  \"submitted\": {},", g.submitted).unwrap();
+    writeln!(out, "  \"completed\": {},", g.completed).unwrap();
+    writeln!(out, "  \"shed\": {},", g.shed()).unwrap();
+    writeln!(out, "  \"lost\": {},", g.lost()).unwrap();
+    writeln!(out, "  \"verified\": {},", g.verified).unwrap();
+    writeln!(out, "  \"ticks\": {},", faulted.report.ticks).unwrap();
+    out.push_str("  \"plan\": {\n");
+    writeln!(out, "    \"events\": {},", plan.events().len()).unwrap();
+    writeln!(out, "    \"slot_fails\": {},", counts.slot).unwrap();
+    writeln!(out, "    \"bus_fails\": {},", counts.bus).unwrap();
+    writeln!(out, "    \"outages\": {},", counts.outage).unwrap();
+    writeln!(out, "    \"repairs\": {}", counts.repair).unwrap();
+    out.push_str("  },\n");
+    out.push_str("  \"recovery\": {\n");
+    writeln!(out, "    \"faults_injected\": {},", c.faults_injected()).unwrap();
+    writeln!(out, "    \"migrations\": {},", c.migrations).unwrap();
+    writeln!(out, "    \"rescued_waves\": {},", c.rescued_waves).unwrap();
+    writeln!(out, "    \"retries\": {},", c.retries).unwrap();
+    writeln!(out, "    \"demotions\": {},", c.demotions).unwrap();
+    writeln!(out, "    \"route_invalidations\": {}", c.route_invalidations).unwrap();
+    out.push_str("  },\n");
+    writeln!(out, "  \"requests_digested\": {}", faulted.output_digests.len()).unwrap();
+    out.push_str("}\n");
+    out
+}
+
+/// The human verdict line the CLI prints alongside the table.
+pub fn chaos_summary(gate: &ChaosGate, faulted: &ChaosOutcome) -> String {
+    let c = &faulted.chaos;
+    let mut out = String::new();
+    writeln!(
+        out,
+        "chaos gate: {} | {} fault(s) injected, {} request(s) digest-checked \
+         against the fault-free baseline",
+        if gate.passed() { "PASS" } else { "FAIL" },
+        c.faults_injected(),
+        faulted.output_digests.len()
+    )
+    .unwrap();
+    for f in gate.failures() {
+        writeln!(out, "  gate failure: {f}").unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{fairness_profile, run_profile_chaos, ServeOptions};
+
+    fn runs() -> (FaultPlan, ChaosOutcome, ChaosOutcome) {
+        let p = fairness_profile(1, 5, 17);
+        let opts = ServeOptions::default();
+        let plan = FaultPlan::seeded(17, opts.pool_size);
+        let baseline = run_profile_chaos(&p, &opts, &FaultPlan::empty());
+        let faulted = run_profile_chaos(&p, &opts, &plan);
+        (plan, faulted, baseline)
+    }
+
+    #[test]
+    fn gate_passes_on_a_seeded_run_and_json_carries_the_verdict() {
+        let (plan, faulted, baseline) = runs();
+        let gate = ChaosGate::check(&plan, &faulted, &baseline);
+        assert!(gate.passed(), "{:?}", gate.failures());
+        let json = to_json(&gate, &plan, &faulted, 17, true);
+        assert!(json.contains("\"schema\": \"dataflow-accel-chaos/v1\""));
+        assert!(json.contains("\"passed\": true"));
+        assert!(json.contains("\"digest_match\": true"));
+        assert!(json.contains("\"lost\": 0"));
+        assert!(!json.contains("\"faults_injected\": 0"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        let line = chaos_summary(&gate, &faulted);
+        assert!(line.contains("PASS"), "{line}");
+    }
+
+    #[test]
+    fn gate_fails_loudly_when_digests_or_census_break() {
+        let (plan, faulted, baseline) = runs();
+        // An empty plan fails the census gate...
+        let empty_gate = ChaosGate::check(&FaultPlan::empty(), &faulted, &baseline);
+        assert!(!empty_gate.passed());
+        assert!(!empty_gate.all_fault_kinds);
+        // ...and a doctored baseline fails the digest gate.
+        let mut wrong = ChaosGate::check(&plan, &faulted, &baseline);
+        wrong.digest_match = false;
+        assert!(!wrong.passed());
+        let line = chaos_summary(&wrong, &faulted);
+        assert!(line.contains("FAIL"), "{line}");
+        assert!(line.contains("diverge"), "{line}");
+        let json = to_json(&wrong, &plan, &faulted, 17, true);
+        assert!(json.contains("\"passed\": false"));
+    }
+}

@@ -8,12 +8,16 @@
 //! subcommand's engine-comparison harness (scalar vs streamed vs lane
 //! engines, BENCH_*.json trajectory). [`serve`] renders the service
 //! tier's per-tenant summary ([`serve::serve_table`]) and the
-//! SERVE_*.json trajectory.
+//! SERVE_*.json trajectory. [`chaos`] renders the fault-injection
+//! gate's verdict (CHAOS_*.json, written only when the
+//! zero-lost-requests gate passes).
 
+pub mod chaos;
 pub mod opt;
 pub mod perf;
 pub mod serve;
 
+pub use chaos::{chaos_summary, ChaosGate};
 pub use serve::{scaling_table, serve_table, ScalePoint};
 
 use crate::baselines::{ctv, kernel_spec, lalp};

@@ -1,13 +1,19 @@
 //! Renderers for the service tier: the per-tenant summary table the
 //! `serve` CLI prints, and the hand-rolled `SERVE_<k>.json` trajectory
-//! (schema `dataflow-accel-serve/v2`) the CI smoke job validates and
+//! (schema `dataflow-accel-serve/v3`) the CI smoke job validates and
 //! archives. No JSON dependency — same approach as [`super::perf`].
 //!
-//! v2 adds the parallel-dispatch fields (`workers`, `wall_ns`,
+//! v2 added the parallel-dispatch fields (`workers`, `wall_ns`,
 //! `busy_ns`, `steals`, `tokens_out`, derived throughput/utilization)
 //! and a `scaling` array — one [`ScalePoint`] per worker count from
 //! the `serve --scale-workers` sweep, written only after every point's
 //! result digests were verified byte-identical to the 1-worker run.
+//!
+//! v3 adds an explicit `"empty"` marker to every latency block (a
+//! zero-request tenant reports `0` for every quantile, and the marker
+//! keeps that distinguishable from genuine sub-microsecond latency)
+//! and an optional `"chaos"` object with the fault-injection counters
+//! of a `serve --chaos` run (`null` on fault-free runs).
 
 use crate::serve::{ServeReport, TenantStats};
 use std::fmt::Write as _;
@@ -54,18 +60,27 @@ fn ms(ns: u64) -> f64 {
 }
 
 fn tenant_row(out: &mut String, t: &TenantStats) {
+    // A tenant that completed nothing has no latency distribution;
+    // dashes, not "0.000 ms", so the row can't be read as "very fast".
+    let q = |ns: u64| {
+        if t.latency.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{:.3}", ms(ns))
+        }
+    };
     writeln!(
         out,
-        "{:<12} {:>9} {:>9} {:>6} {:>9} {:>8} {:>9.3} {:>9.3} {:>9.3} {:>9.1}",
+        "{:<12} {:>9} {:>9} {:>6} {:>9} {:>8} {:>9} {:>9} {:>9} {:>9.1}",
         t.name,
         t.submitted,
         t.completed,
         t.shed(),
         t.verified,
         t.batches,
-        ms(t.latency.p50_ns()),
-        ms(t.latency.p95_ns()),
-        ms(t.latency.p99_ns()),
+        q(t.latency.p50_ns()),
+        q(t.latency.p95_ns()),
+        q(t.latency.p99_ns()),
         t.mean_wait_ticks(),
     )
     .unwrap();
@@ -140,6 +155,25 @@ pub fn serve_table(r: &ServeReport) -> String {
         r.utilization()
     )
     .unwrap();
+    if let Some(c) = &r.chaos {
+        writeln!(
+            out,
+            "chaos: {} fault(s) (slot {}, bus {}, outage {}), {} repair(s) | \
+             {} migration(s), {} wave(s) rescued, {} retry probe(s), \
+             {} demotion(s), {} route purge(s)",
+            c.faults_injected(),
+            c.slot_faults,
+            c.bus_faults,
+            c.outages,
+            c.repairs,
+            c.migrations,
+            c.rescued_waves,
+            c.retries,
+            c.demotions,
+            c.route_invalidations
+        )
+        .unwrap();
+    }
     out
 }
 
@@ -211,6 +245,7 @@ fn stats_json(out: &mut String, indent: &str, t: &TenantStats) {
         .collect();
     writeln!(out, "{indent}\"engine_requests\": {{{}}},", engines.join(", ")).unwrap();
     writeln!(out, "{indent}\"latency\": {{").unwrap();
+    writeln!(out, "{indent}  \"empty\": {},", t.latency.is_empty()).unwrap();
     writeln!(out, "{indent}  \"count\": {},", t.latency.count()).unwrap();
     writeln!(out, "{indent}  \"mean_ns\": {},", t.latency.mean_ns()).unwrap();
     writeln!(out, "{indent}  \"min_ns\": {},", t.latency.min_ns()).unwrap();
@@ -221,7 +256,7 @@ fn stats_json(out: &mut String, indent: &str, t: &TenantStats) {
     writeln!(out, "{indent}}}").unwrap();
 }
 
-/// Serialize a profile run (schema `dataflow-accel-serve/v2`). The
+/// Serialize a profile run (schema `dataflow-accel-serve/v3`). The
 /// caller echoes its profile parameters so reruns are reproducible;
 /// `scaling` is the `--scale-workers` sweep (empty for a single run).
 pub fn to_json(
@@ -234,7 +269,7 @@ pub fn to_json(
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"dataflow-accel-serve/v2\",\n");
+    out.push_str("  \"schema\": \"dataflow-accel-serve/v3\",\n");
     writeln!(out, "  \"seed\": {seed},").unwrap();
     writeln!(out, "  \"scale\": {scale},").unwrap();
     writeln!(out, "  \"n\": {n},").unwrap();
@@ -252,6 +287,23 @@ pub fn to_json(
     writeln!(out, "  \"tokens_out\": {},", r.tokens_out).unwrap();
     writeln!(out, "  \"tokens_per_sec\": {:.1},", r.tokens_per_sec()).unwrap();
     writeln!(out, "  \"utilization\": {:.3},", r.utilization()).unwrap();
+    match &r.chaos {
+        Some(c) => {
+            out.push_str("  \"chaos\": {\n");
+            writeln!(out, "    \"faults_injected\": {},", c.faults_injected()).unwrap();
+            writeln!(out, "    \"slot_faults\": {},", c.slot_faults).unwrap();
+            writeln!(out, "    \"bus_faults\": {},", c.bus_faults).unwrap();
+            writeln!(out, "    \"outages\": {},", c.outages).unwrap();
+            writeln!(out, "    \"repairs\": {},", c.repairs).unwrap();
+            writeln!(out, "    \"migrations\": {},", c.migrations).unwrap();
+            writeln!(out, "    \"rescued_waves\": {},", c.rescued_waves).unwrap();
+            writeln!(out, "    \"retries\": {},", c.retries).unwrap();
+            writeln!(out, "    \"demotions\": {},", c.demotions).unwrap();
+            writeln!(out, "    \"route_invalidations\": {}", c.route_invalidations).unwrap();
+            out.push_str("  },\n");
+        }
+        None => out.push_str("  \"chaos\": null,\n"),
+    }
     out.push_str("  \"scaling\": [\n");
     for (i, p) in scaling.iter().enumerate() {
         let comma = if i + 1 < scaling.len() { "," } else { "" };
@@ -313,7 +365,9 @@ mod tests {
         let scaling = [ScalePoint::from_report(&r)];
         let json = to_json(&r, 11, 2, 3, true, &scaling);
         assert!(json.starts_with("{\n") && json.ends_with("}\n"));
-        assert!(json.contains("\"schema\": \"dataflow-accel-serve/v2\""));
+        assert!(json.contains("\"schema\": \"dataflow-accel-serve/v3\""));
+        assert!(json.contains("\"chaos\": null"), "fault-free run");
+        assert!(json.contains("\"empty\": false"), "tenants completed work");
         for field in ["\"p50_ns\"", "\"p95_ns\"", "\"p99_ns\""] {
             assert!(
                 json.matches(field).count() >= r.tenants.len() + 2,
@@ -336,6 +390,50 @@ mod tests {
         let json = to_json(&r, 11, 2, 3, true, &[]);
         assert!(json.contains("\"scaling\": [\n  ],"));
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn zero_request_tenants_are_marked_empty_not_fast() {
+        // Regression (satellite): a tenant that never completed a
+        // request used to render "0.000 ms" quantiles — indistinguishable
+        // from genuinely sub-microsecond service. Now the table shows
+        // dashes and the JSON carries an explicit `"empty": true`.
+        let mut r = tiny_report();
+        r.tenants.push(crate::serve::TenantStats::named("idle"));
+        let t = serve_table(&r);
+        let idle_row = t.lines().find(|l| l.starts_with("idle")).expect("row");
+        assert!(idle_row.contains('-'), "{idle_row}");
+        assert!(!idle_row.contains("0.000"), "{idle_row}");
+        let json = to_json(&r, 11, 2, 3, true, &[]);
+        assert!(json.contains("\"empty\": true"), "{json}");
+        // Non-empty tenants keep real numbers.
+        assert!(json.contains("\"empty\": false"), "{json}");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn chaos_counters_serialize_when_present() {
+        let mut r = tiny_report();
+        r.chaos = Some(crate::serve::ChaosStats {
+            slot_faults: 1,
+            bus_faults: 1,
+            outages: 1,
+            repairs: 3,
+            migrations: 2,
+            rescued_waves: 5,
+            retries: 4,
+            demotions: 2,
+            route_invalidations: 6,
+        });
+        let t = serve_table(&r);
+        assert!(t.contains("chaos: 3 fault(s)"), "{t}");
+        assert!(t.contains("2 migration(s)"), "{t}");
+        assert!(t.contains("5 wave(s) rescued"), "{t}");
+        let json = to_json(&r, 11, 2, 3, true, &[]);
+        assert!(json.contains("\"faults_injected\": 3"), "{json}");
+        assert!(json.contains("\"rescued_waves\": 5"), "{json}");
+        assert!(!json.contains("\"chaos\": null"), "{json}");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
     }
 
     #[test]

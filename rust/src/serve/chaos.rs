@@ -1,0 +1,608 @@
+//! Chaos serving: replay a seeded [`FaultPlan`] against the serving
+//! pool while a load profile runs, and prove the recovery lattice
+//! loses nothing.
+//!
+//! The runner mirrors [`run_profile`](super::run_profile)'s serial
+//! path exactly — same tick loop ([`drive_profile`]), same collector,
+//! same record phase — and layers the fault machinery underneath the
+//! dispatch sink:
+//!
+//! 1. **Event application.** Before each dispatch, every due
+//!    [`FaultEvent`] mutates its instance's [`FabricHealth`] view,
+//!    flips the pool's quarantine flag, and purges the session cache's
+//!    warm routes ([`SessionCache::invalidate_routes`]) — a stale
+//!    `RoutePlan` against a changed topology is the classic
+//!    silent-corruption bug, so invalidation is wholesale.
+//! 2. **Routing.** [`FabricPool::route_healthy`] skips quarantined
+//!    instances. With the whole pool dark, the runner probes the
+//!    plan's own deterministic timeline ([`FaultPlan::healthy_at`]) at
+//!    `T+1, T+3, T+7` — bounded virtual-tick backoff that keeps the
+//!    chaos schedule a pure function of `(profile seed, fault seed)` —
+//!    and charges the wait to the rescued requests. Only when the pool
+//!    stays dark past the last probe does the batch demote to the
+//!    infinite-fabric fallback engine.
+//! 3. **Demotion.** A degraded-but-up instance re-routes the batch
+//!    against what is actually left of it
+//!    ([`FabricHealth::effective`]) through the same
+//!    placed → sharded → reconfig → fallback lattice cold routing
+//!    uses ([`route_graph`]), with the same engine policy
+//!    ([`choose_engine_routed`]) — so a faulted route is never a
+//!    special case, just a smaller topology.
+//! 4. **Migration.** A streamed batch resident on an instance that the
+//!    plan will take down mid-residency is checkpointed
+//!    ([`StreamSession::snapshot`]), serialized to bytes, decoded, and
+//!    restored on a healthy instance — and because
+//!    [`StreamSession::run`] budgets *cumulative* rounds, the resumed
+//!    session finishes the exact rounds the uninterrupted one would
+//!    have: even the per-wave cycle counters match, byte for byte.
+//!
+//! The gate ([`crate::report::chaos`], `serve --chaos`): zero lost
+//! requests, exact accounting (`completed + shed == submitted`), and
+//! per-request [`output_digest`]s equal to a fault-free baseline run.
+//! The baseline is this same runner under [`FaultPlan::empty`] — the
+//! tick loop never reads execution results, so both runs make
+//! identical dispatch decisions and the digest maps compare key for
+//! key.
+
+use super::loadgen::{self, LoadProfile, ServeRequest, WorkItem};
+use super::sched::{
+    batch_configs, choose_engine_routed, drive_profile, outcome_digest, output_digest,
+    verify_outcomes, BatchResult, DispatchRec, EngineChoice, ExecutedBatch, Pending, ServeOptions,
+};
+use super::session::{route_graph, RoutePlan, SessionCache};
+use super::stats::{ChaosStats, ServeCollector, ServeReport};
+use crate::coordinator::batch::{
+    run_batch_lanes_prog, run_batch_native, run_batch_reconfig, run_batch_sharded,
+};
+use crate::dfg::Graph;
+use crate::fabric::{FabricHealth, FabricPool, FaultKind, FaultPlan};
+use crate::opt::OptLevel;
+use crate::sim::stream::run_stream_prevalidated;
+use crate::sim::{SimOutcome, StreamCheckpoint, StreamSession, WaveInput, WaveMode};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Virtual-tick backoff schedule for a batch that finds the whole pool
+/// dark: probe `T+1`, then `T+3`, then `T+7`. Bounded — a pool still
+/// dark at the last probe demotes to the fallback engine rather than
+/// waiting forever — and deterministic, since the probes consult the
+/// fault plan's timeline, not live state.
+const RETRY_BACKOFF: [u64; 3] = [1, 3, 7];
+
+/// What one chaos run produced: the usual profile outcome plus the
+/// fault/recovery counters and the outputs-only digest map the gate
+/// compares against the fault-free baseline.
+#[derive(Debug)]
+pub struct ChaosOutcome {
+    pub report: ServeReport,
+    /// The deterministic dispatch sequence — identical to the
+    /// baseline's, because the tick loop never reads execution results.
+    pub dispatches: Vec<DispatchRec>,
+    /// `(tenant, request seq)` → [`outcome_digest`] (outputs *and*
+    /// cycle/firing counters). Informational: demotions legitimately
+    /// change counters, so this map is not the gate.
+    pub digests: BTreeMap<(usize, usize), u64>,
+    /// `(tenant, request seq)` → [`output_digest`] (output streams
+    /// only). The gate: this map must equal the baseline's exactly.
+    pub output_digests: BTreeMap<(usize, usize), u64>,
+    /// Fault and recovery counters (also embedded in
+    /// `report.chaos`).
+    pub chaos: ChaosStats,
+}
+
+/// Run `profile` to completion while replaying `plan` against the
+/// serving pool. Serial dispatch only: chaos runs are about fault
+/// recovery, and the worker-count invariance story is already proven
+/// separately (DESIGN.md §10) — composing both would blur which
+/// machinery a digest mismatch indicts.
+///
+/// Every submitted request still ends completed or explicitly shed;
+/// [`ChaosOutcome::chaos`] counts what the fault layer had to do to
+/// keep that true.
+pub fn run_profile_chaos(
+    profile: &LoadProfile,
+    opts: &ServeOptions,
+    plan: &FaultPlan,
+) -> ChaosOutcome {
+    let wall0 = Instant::now();
+    let cache = SessionCache::with_stripes(
+        opts.topo.clone(),
+        opts.pool_size,
+        opts.cache_cap,
+        OptLevel::Default,
+        opts.cache_stripes,
+    );
+    let pool = FabricPool::new(opts.topo.clone(), opts.pool_size);
+    let mut health: Vec<FabricHealth> = (0..pool.size()).map(|_| FabricHealth::default()).collect();
+    let mut chaos = ChaosStats::default();
+    let mut next_event = 0usize;
+    let names: Vec<String> = profile.tenants.iter().map(|t| t.name.clone()).collect();
+    let mut collector = ServeCollector::new(&names);
+    let mut executed: Vec<ExecutedBatch> = Vec::new();
+    let (ticks, dispatches) =
+        drive_profile(profile, &opts.cfg, &mut collector, |tick, tenant, batch| {
+            apply_due_events(plan, tick, &mut next_event, &pool, &cache, &mut health, &mut chaos);
+            executed.push(exec_one_chaos(
+                &cache, &pool, &health, plan, tick, tenant, &batch, &mut chaos,
+            ));
+        });
+    // Late events (after the last dispatch) still count as injected —
+    // the seeded plan's guarantees are about the plan, not about how
+    // fast the profile drained.
+    apply_due_events(plan, u64::MAX, &mut next_event, &pool, &cache, &mut health, &mut chaos);
+    // Record phase: identical bookkeeping to `run_profile`, plus the
+    // outputs-only digest map the gate compares.
+    let mut digests = BTreeMap::new();
+    let mut output_digests = BTreeMap::new();
+    let mut busy_ns = 0u64;
+    let mut tokens_out = 0u64;
+    for eb in &executed {
+        busy_ns += eb.exec_ns;
+        collector.batch(eb.tenant, eb.result.engine, eb.items.len());
+        collector.lane_scalar_reruns(eb.result.lane_scalar_reruns);
+        for ((item, out), verified) in eb
+            .items
+            .iter()
+            .zip(&eb.result.outcomes)
+            .zip(&eb.result.verified)
+        {
+            let (seq, wait, latency) = *item;
+            collector.completed(eb.tenant, *verified, latency, wait, out.cycles);
+            tokens_out += out.outputs.values().map(|s| s.len() as u64).sum::<u64>();
+            digests.insert((eb.tenant, seq), outcome_digest(out));
+            output_digests.insert((eb.tenant, seq), output_digest(out));
+        }
+    }
+    chaos.route_invalidations = cache.invalidations();
+    let mut report = collector.finish(&cache, ticks);
+    report.workers = 1;
+    report.wall_ns = wall0.elapsed().as_nanos() as u64;
+    report.busy_ns = busy_ns;
+    report.tokens_out = tokens_out;
+    report.chaos = Some(chaos);
+    ChaosOutcome {
+        report,
+        dispatches,
+        digests,
+        output_digests,
+        chaos,
+    }
+}
+
+/// Apply every plan event with `event.tick <= tick` that has not been
+/// applied yet: mutate the instance's health view, sync the pool's
+/// quarantine flag, purge warm routes, and count.
+#[allow(clippy::too_many_arguments)]
+fn apply_due_events(
+    plan: &FaultPlan,
+    tick: u64,
+    next: &mut usize,
+    pool: &FabricPool,
+    cache: &SessionCache,
+    health: &mut [FabricHealth],
+    chaos: &mut ChaosStats,
+) {
+    let events = plan.events();
+    while *next < events.len() && events[*next].tick <= tick {
+        let ev = events[*next];
+        *next += 1;
+        match ev.kind {
+            FaultKind::SlotFail { .. } => chaos.slot_faults += 1,
+            FaultKind::BusFail { .. } => chaos.bus_faults += 1,
+            FaultKind::Outage => chaos.outages += 1,
+            FaultKind::Repair => chaos.repairs += 1,
+        }
+        if let Some(h) = health.get_mut(ev.instance) {
+            h.apply(ev.kind);
+            pool.set_down(ev.instance, h.down);
+            // The fabric under every cached RoutePlan just changed
+            // shape; a stale warm route is a correctness bug, so the
+            // purge is wholesale (re-warming is cheap next to a wrong
+            // answer).
+            cache.invalidate_routes();
+        }
+    }
+}
+
+/// [`super::sched::exec_one`] with the fault layer underneath: routes
+/// around quarantined instances, re-routes against degraded
+/// topologies, migrates doomed stream residencies, and charges any
+/// retry backoff to the batch's queue-wait ticks.
+#[allow(clippy::too_many_arguments)]
+fn exec_one_chaos(
+    cache: &SessionCache,
+    pool: &FabricPool,
+    health: &[FabricHealth],
+    plan: &FaultPlan,
+    tick: u64,
+    tenant: usize,
+    batch: &[Pending],
+    chaos: &mut ChaosStats,
+) -> ExecutedBatch {
+    let reqs: Vec<ServeRequest> = batch.iter().map(|p| p.req.clone()).collect();
+    let t0 = Instant::now();
+    let (result, extra_wait) = execute_batch_chaos(cache, pool, health, plan, tick, &reqs, chaos);
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+    let items = batch
+        .iter()
+        .map(|p| {
+            (
+                p.req.seq,
+                tick.saturating_sub(p.admitted_tick) + extra_wait,
+                p.submitted.elapsed().as_nanos() as u64,
+            )
+        })
+        .collect();
+    ExecutedBatch {
+        tenant,
+        result,
+        items,
+        exec_ns,
+    }
+}
+
+/// Execute one same-graph batch under the fault plan. Returns the
+/// batch result plus the virtual-tick retry delay (0 when an instance
+/// was available immediately). Under [`FaultPlan::empty`] this is
+/// observably identical to [`super::execute_batch`]'s serial path —
+/// that equivalence is what makes the baseline comparison honest.
+fn execute_batch_chaos(
+    cache: &SessionCache,
+    pool: &FabricPool,
+    health: &[FabricHealth],
+    plan: &FaultPlan,
+    tick: u64,
+    reqs: &[ServeRequest],
+    chaos: &mut ChaosStats,
+) -> (BatchResult, u64) {
+    assert!(!reqs.is_empty(), "empty batch");
+    let hint = reqs[0].cache_hint();
+    let (state, cache_hit) = cache.warm_keyed(&hint, || loadgen::build_graph(&reqs[0]));
+    let items: Vec<WorkItem> = reqs.iter().map(loadgen::work_item).collect();
+    let cfgs = batch_configs(&items);
+    let g = state.graph.as_ref();
+
+    // Route to an instance still in rotation. With the whole pool dark,
+    // probe the plan's own timeline — a repair is wholesale
+    // (`FabricHealth::apply` resets to healthy), so an instance found
+    // healthy at a future probe tick serves at full base capacity.
+    let mut extra_wait = 0u64;
+    let routed: Option<(usize, FabricHealth)> = match pool.route_healthy() {
+        Some(i) => Some((i, health[i].clone())),
+        None => {
+            let mut found = None;
+            for delta in RETRY_BACKOFF {
+                chaos.retries += 1;
+                if let Some(i) = (0..pool.size()).find(|&i| plan.healthy_at(tick + delta, i)) {
+                    extra_wait = delta;
+                    found = Some((i, FabricHealth::default()));
+                    break;
+                }
+            }
+            found
+        }
+    };
+
+    // Retry exhausted with the pool still dark. The request must still
+    // complete — the zero-lost invariant outranks placement — so it
+    // demotes to the lattice's bottom: the infinite-fabric engine.
+    let Some((instance, inst_health)) = routed else {
+        chaos.demotions += 1;
+        let outcomes = run_batch_native(g, &cfgs);
+        let verified = verify_outcomes(g, &items, &cfgs, &outcomes);
+        return (
+            BatchResult {
+                engine: EngineChoice::Fallback.name(),
+                cache_hit,
+                lane_scalar_reruns: 0,
+                outcomes,
+                verified,
+            },
+            extra_wait,
+        );
+    };
+
+    // A degraded instance re-routes against what is actually left of
+    // it. Crossing a lattice tier (placed batch now needs sharding,
+    // shardable graph now needs reconfig swapping, …) is a demotion;
+    // same tier on a smaller fabric is not.
+    let route = if inst_health.is_degraded() {
+        let eff = inst_health.effective(pool.topology());
+        let re = route_graph(g, &eff, pool.healthy_count().max(1));
+        if re.name() != state.route.name() {
+            chaos.demotions += 1;
+        }
+        re
+    } else {
+        state.route.clone()
+    };
+
+    let engine = choose_engine_routed(&route, state.overlap_safe, reqs.len());
+    let waves_resident = cfgs.len() >= 2;
+    let mut lane_scalar_reruns = 0u64;
+    let outcomes: Vec<SimOutcome> = match (engine, &route) {
+        (EngineChoice::Streamed, _) => {
+            let waves: Vec<WaveInput> = items.iter().map(|it| it.inject.clone()).collect();
+            let budget: u64 = cfgs.iter().map(|c| c.max_cycles).sum();
+            // The batch is resident on `instance` for its whole
+            // multi-wave run — model that residency as the tick window
+            // (T, T + waves]. An outage scheduled inside it lands
+            // mid-wave: checkpoint, move, resume.
+            let horizon = tick + reqs.len() as u64;
+            let doomed = plan.events().iter().any(|e| {
+                e.instance == instance
+                    && e.kind == FaultKind::Outage
+                    && e.tick > tick
+                    && e.tick <= horizon
+            });
+            if doomed {
+                run_streamed_migrated(g, &waves, budget, chaos)
+            } else {
+                run_stream_prevalidated(g, &waves, budget, WaveMode::Pipelined).0
+            }
+        }
+        (EngineChoice::Lanes, _) => {
+            let (outs, stats) = run_batch_lanes_prog(g, &state.program, &cfgs);
+            lane_scalar_reruns = stats.scalar_reruns as u64;
+            outs
+        }
+        (EngineChoice::Sharded, RoutePlan::Sharded(p)) => run_batch_sharded(p, &cfgs, waves_resident),
+        (EngineChoice::Reconfig, RoutePlan::Reconfig(p)) => {
+            run_batch_reconfig(p, pool.topology(), &cfgs, waves_resident)
+        }
+        (EngineChoice::Fallback, _) => run_batch_native(g, &cfgs),
+        _ => unreachable!("engine choice always follows the chosen route"),
+    };
+    let verified = verify_outcomes(g, &items, &cfgs, &outcomes);
+    (
+        BatchResult {
+            engine: engine.name(),
+            cache_hit,
+            lane_scalar_reruns,
+            outcomes,
+            verified,
+        },
+        extra_wait,
+    )
+}
+
+/// Run a streamed batch whose instance dies mid-residency: run the
+/// prefix on the doomed instance, checkpoint, serialize the image to
+/// bytes (the migration wire format), decode, restore on a healthy
+/// instance, and finish. [`StreamSession::run`] budgets *cumulative*
+/// rounds — the checkpoint carries the round counter — so the
+/// resumed session executes exactly the rounds the uninterrupted run
+/// would have, and every wave's outcome (outputs *and* cycle
+/// accounting) is byte-identical to a fault-free run.
+fn run_streamed_migrated(
+    g: &Graph,
+    waves: &[WaveInput],
+    budget: u64,
+    chaos: &mut ChaosStats,
+) -> Vec<SimOutcome> {
+    chaos.migrations += 1;
+    // Admission mirrors `run_stream_prevalidated`: pipelined first,
+    // and any wave the pipelined policy rejects demotes the whole
+    // batch to a fresh serialized session (mixed admission would
+    // reorder waves). Rebuilding from scratch lands in the same state
+    // the probe-first path does.
+    let mut session = StreamSession::with_mode(g, WaveMode::Pipelined);
+    if waves.iter().any(|w| session.admit(w).is_err()) {
+        session = StreamSession::with_mode(g, WaveMode::Serialized);
+        for w in waves {
+            session.admit(w).expect("serialized admission is total");
+        }
+    }
+    // Prefix on the doomed instance: a couple of rounds, not a share
+    // of the (huge) budget — the budget is a timeout, and any real
+    // wave outlives two rounds, so the outage genuinely lands with
+    // tokens in flight. `run` caps *cumulative* rounds, so the resumed
+    // session still observes the one true budget.
+    session.run(budget.clamp(1, 2));
+    let image = session.snapshot().to_bytes();
+    drop(session); // the instance is gone; only the image survives
+    let ck = StreamCheckpoint::from_bytes(&image).expect("self-produced checkpoint image decodes");
+    chaos.rescued_waves += ck.waves.iter().filter(|w| w.done.is_none()).count() as u64;
+    let mut resumed =
+        StreamSession::restore(g, &ck).expect("checkpoint restores onto the same graph content");
+    resumed.run(budget);
+    (0..resumed.n_waves()).map(|w| resumed.wave_outcome(w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::FaultEvent;
+    use crate::serve::loadgen::{fairness_profile, tenant_trace, LoadProfile, TenantSpec, WorkKind};
+    use crate::serve::{run_profile, Arrival};
+
+    fn opts() -> ServeOptions {
+        ServeOptions::default()
+    }
+
+    #[test]
+    fn empty_plan_matches_the_plain_serial_runner() {
+        // The chaos runner under no faults IS run_profile's serial
+        // path: same dispatch schedule, same per-request digests (the
+        // full ones, counters included), no fault counters.
+        let p = fairness_profile(2, 6, 11);
+        let base = run_profile(&p, &opts());
+        let chaos = run_profile_chaos(&p, &opts(), &FaultPlan::empty());
+        assert_eq!(chaos.dispatches, base.dispatches);
+        assert_eq!(chaos.digests, base.digests);
+        assert_eq!(chaos.chaos, ChaosStats::default());
+        assert_eq!(chaos.report.global.lost(), 0);
+        assert_eq!(
+            chaos.report.chaos,
+            Some(ChaosStats::default()),
+            "a chaos run always reports its counters, even all-zero"
+        );
+    }
+
+    #[test]
+    fn outage_mid_residency_migrates_and_outputs_match_baseline() {
+        // One all-SAXPY tenant, window == max_batch == requests == 8:
+        // tick 1 admits all 8, forming one full streamed batch resident
+        // over ticks (1, 9]. An outage at tick 2 on its (only)
+        // instance lands mid-residency → checkpoint migration.
+        let p = LoadProfile {
+            tenants: vec![TenantSpec {
+                name: "heavy".to_string(),
+                weight: 1,
+                quota: 64,
+                window: 8,
+                mix: vec![WorkKind::Saxpy],
+                requests: 8,
+            }],
+            arrival: Arrival::Closed,
+            n: 6,
+            seed: 3,
+        };
+        let o = ServeOptions {
+            pool_size: 1,
+            cfg: crate::serve::ServeCfg {
+                max_batch: 8,
+                ..Default::default()
+            },
+            ..opts()
+        };
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                tick: 2,
+                instance: 0,
+                kind: FaultKind::Outage,
+            },
+            FaultEvent {
+                tick: 4,
+                instance: 0,
+                kind: FaultKind::Repair,
+            },
+        ]);
+        let base = run_profile_chaos(&p, &o, &FaultPlan::empty());
+        let faulted = run_profile_chaos(&p, &o, &plan);
+        assert_eq!(faulted.chaos.migrations, 1, "{:?}", faulted.chaos);
+        assert!(faulted.chaos.rescued_waves > 0, "{:?}", faulted.chaos);
+        assert_eq!(faulted.chaos.outages, 1);
+        assert_eq!(faulted.chaos.repairs, 1);
+        assert_eq!(faulted.report.global.lost(), 0);
+        // Migration is invisible in the results — not just outputs:
+        // cumulative round budgeting makes even the cycle counters
+        // match, so the FULL digests agree.
+        assert_eq!(faulted.digests, base.digests);
+        assert_eq!(faulted.output_digests, base.output_digests);
+        assert!(
+            faulted
+                .report
+                .global
+                .engine_requests
+                .contains_key("streamed"),
+            "{:?}",
+            faulted.report.global.engine_requests
+        );
+    }
+
+    #[test]
+    fn dark_pool_retries_on_the_plan_timeline_and_loses_nothing() {
+        // Pool of 1, outage from tick 1. Dispatches finding the pool
+        // dark probe the plan timeline; once the repair (tick 6) is
+        // inside a probe window the batch waits the probed delay and
+        // serves at base capacity (a batch whose probes all missed
+        // would demote to fallback instead). Either way: zero lost,
+        // outputs match the fault-free baseline.
+        let p = fairness_profile(1, 5, 7);
+        let o = ServeOptions {
+            pool_size: 1,
+            ..opts()
+        };
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                tick: 1,
+                instance: 0,
+                kind: FaultKind::Outage,
+            },
+            FaultEvent {
+                tick: 6,
+                instance: 0,
+                kind: FaultKind::Repair,
+            },
+        ]);
+        let base = run_profile_chaos(&p, &o, &FaultPlan::empty());
+        let faulted = run_profile_chaos(&p, &o, &plan);
+        assert!(faulted.chaos.retries > 0, "{:?}", faulted.chaos);
+        assert_eq!(faulted.report.global.lost(), 0);
+        let g = &faulted.report.global;
+        assert_eq!(g.completed + g.shed(), g.submitted);
+        assert_eq!(faulted.output_digests, base.output_digests);
+    }
+
+    #[test]
+    fn degraded_capacity_demotes_down_the_lattice_with_identical_outputs() {
+        // Slot+bus faults big enough to clamp the instance to zero
+        // capacity (but not an outage): batches re-route against the
+        // degraded topology — a demotion — and still produce baseline
+        // outputs.
+        let p = fairness_profile(1, 5, 13);
+        let o = ServeOptions {
+            pool_size: 1,
+            ..opts()
+        };
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                tick: 2,
+                instance: 0,
+                kind: FaultKind::SlotFail {
+                    class: crate::dfg::OpClass::Alu2,
+                    count: 1 << 10,
+                },
+            },
+            FaultEvent {
+                tick: 2,
+                instance: 0,
+                kind: FaultKind::BusFail {
+                    channels: 1 << 10,
+                },
+            },
+            FaultEvent {
+                tick: 9,
+                instance: 0,
+                kind: FaultKind::Repair,
+            },
+        ]);
+        let base = run_profile_chaos(&p, &o, &FaultPlan::empty());
+        let faulted = run_profile_chaos(&p, &o, &plan);
+        assert_eq!(faulted.chaos.slot_faults, 1);
+        assert_eq!(faulted.chaos.bus_faults, 1);
+        assert!(faulted.chaos.demotions > 0, "{:?}", faulted.chaos);
+        assert!(faulted.chaos.route_invalidations > 0);
+        assert_eq!(faulted.report.global.lost(), 0);
+        assert_eq!(faulted.output_digests, base.output_digests);
+    }
+
+    #[test]
+    fn seeded_plan_gate_holds_on_the_fairness_profile() {
+        // The CLI gate in miniature: seeded plan over a 2-instance
+        // pool, 10:1 fairness profile — at least one of each fault
+        // kind injected, zero lost, exact accounting, byte-identical
+        // outputs vs baseline.
+        let p = fairness_profile(2, 6, 21);
+        let o = ServeOptions {
+            pool_size: 2,
+            ..opts()
+        };
+        let plan = FaultPlan::seeded(21, 2);
+        let c = plan.counts();
+        assert!(c.slot >= 1 && c.bus >= 1 && c.outage >= 1);
+        let base = run_profile_chaos(&p, &o, &FaultPlan::empty());
+        let faulted = run_profile_chaos(&p, &o, &plan);
+        assert!(faulted.chaos.faults_injected() >= 3, "{:?}", faulted.chaos);
+        assert_eq!(faulted.report.global.lost(), 0);
+        let g = &faulted.report.global;
+        assert_eq!(g.completed + g.shed(), g.submitted);
+        assert_eq!(faulted.dispatches, base.dispatches);
+        assert_eq!(faulted.output_digests, base.output_digests);
+        // Both runs completed the same request set (digest maps equal
+        // ⇒ same keys), and every heavy request is in there.
+        let heavy = tenant_trace(&p, 0).len();
+        assert!(faulted.output_digests.keys().filter(|(t, _)| *t == 0).count() <= heavy);
+    }
+}

@@ -291,6 +291,43 @@ pub fn standard_profile(scale: usize, n: usize, seed: u64) -> LoadProfile {
     }
 }
 
+/// The 10:1 fairness profile the chaos gate runs: a heavy all-SAXPY
+/// tenant offering ten times the light tenant's load. All-SAXPY keeps
+/// every heavy batch on one cache hint and the pipelined streamed
+/// engine (SAXPY is overlap-safe) — exactly the resident mid-wave
+/// state the checkpoint-migration path must rescue when its instance
+/// goes dark — while the light tenant keeps the placed/lane path busy
+/// so degraded-capacity demotions have traffic to displace.
+pub fn fairness_profile(scale: usize, n: usize, seed: u64) -> LoadProfile {
+    let scale = scale.max(1);
+    LoadProfile {
+        tenants: vec![
+            TenantSpec {
+                name: "heavy".to_string(),
+                weight: 4,
+                quota: 64,
+                window: 16,
+                mix: vec![WorkKind::Saxpy],
+                requests: 10 * scale,
+            },
+            TenantSpec {
+                name: "light".to_string(),
+                weight: 1,
+                quota: 16,
+                window: 2,
+                mix: vec![
+                    WorkKind::Bench(BenchId::Fibonacci),
+                    WorkKind::Bench(BenchId::DotProd),
+                ],
+                requests: scale,
+            },
+        ],
+        arrival: Arrival::Closed,
+        n,
+        seed,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +354,21 @@ mod tests {
             p.tenants.iter().map(|t| t.weight).collect::<Vec<_>>(),
             vec![4, 2, 1]
         );
+    }
+
+    #[test]
+    fn fairness_profile_is_ten_to_one_and_streamable() {
+        let p = fairness_profile(3, 6, 42);
+        assert_eq!(p.tenants[0].requests, 10 * p.tenants[1].requests);
+        // Every heavy request shares one cache hint, so the scheduler
+        // forms multi-wave SAXPY batches — the streamed engine's (and
+        // the migration path's) precondition.
+        let hints: std::collections::BTreeSet<String> = tenant_trace(&p, 0)
+            .iter()
+            .map(|r| r.cache_hint())
+            .collect();
+        assert_eq!(hints.len(), 1);
+        assert!(hints.contains("saxpy"));
     }
 
     #[test]

@@ -42,19 +42,32 @@
 //! byte-identical at every worker count; the `serve --scale-workers`
 //! sweep verifies exactly that before writing `SERVE_6.json`.
 //! DESIGN.md §10 states the threading model.
+//!
+//! **Fault tolerance (PR 8).** [`chaos`] replays a seeded
+//! [`crate::fabric::FaultPlan`] against the serving pool while the
+//! profile runs: quarantined instances leave the routing rotation,
+//! degraded topologies demote warm routes down the lattice, resident
+//! wave sessions migrate mid-wave via [`crate::sim::StreamCheckpoint`],
+//! and whole-pool outages park batches on a bounded virtual-tick retry
+//! schedule. The gate: zero lost requests and byte-identical output
+//! digests against the fault-free baseline (`CHAOS_8.json`).
+//! DESIGN.md §11 states the fault model.
 
+pub mod chaos;
 pub mod loadgen;
 pub mod sched;
 pub mod session;
 pub mod stats;
 
+pub use chaos::{run_profile_chaos, ChaosOutcome};
 pub use loadgen::{
-    burst_series, standard_profile, tenant_trace, Arrival, LoadProfile, ServeRequest, TenantSpec,
-    WorkKind,
+    burst_series, fairness_profile, standard_profile, tenant_trace, Arrival, LoadProfile,
+    ServeRequest, TenantSpec, WorkKind,
 };
 pub use sched::{
-    choose_engine, execute_batch, execute_batch_par, outcome_digest, run_profile, Admission,
-    BatchResult, DispatchRec, EngineChoice, ProfileOutcome, Scheduler, ServeCfg, ServeOptions,
+    choose_engine, execute_batch, execute_batch_par, outcome_digest, output_digest, run_profile,
+    Admission, AdmitError, BatchResult, DispatchRec, EngineChoice, ProfileOutcome, Scheduler,
+    ServeCfg, ServeOptions,
 };
-pub use session::{RoutePlan, SessionCache, WarmState, DEFAULT_STRIPES};
-pub use stats::{Histogram, ServeCollector, ServeReport, ShedReason, TenantStats};
+pub use session::{route_graph, RoutePlan, SessionCache, WarmState, DEFAULT_STRIPES};
+pub use stats::{ChaosStats, Histogram, ServeCollector, ServeReport, ShedReason, TenantStats};

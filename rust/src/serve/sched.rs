@@ -42,12 +42,14 @@ use crate::coordinator::batch::{
     run_batch_lanes_par, run_batch_lanes_prog, run_batch_native, run_batch_reconfig,
     run_batch_sharded, run_batch_sharded_par,
 };
+use crate::dfg::Graph;
 use crate::fabric::FabricTopology;
 use crate::opt::OptLevel;
 use crate::par::Executor;
 use crate::sim::stream::run_stream_prevalidated;
 use crate::sim::{run_token, SimConfig, SimOutcome, WaveInput, WaveMode};
 use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
 use std::time::Instant;
 
 /// Scheduler knobs.
@@ -79,12 +81,35 @@ pub enum Admission {
     Shed(ShedReason),
 }
 
+/// A request naming a tenant the scheduler was not built with — a
+/// caller bug surfaced as a typed error instead of the out-of-bounds
+/// panic it used to be.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmitError {
+    /// The tenant index the request carried.
+    pub tenant: usize,
+    /// How many tenants this scheduler serves.
+    pub tenants: usize,
+}
+
+impl fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "request names tenant {} but the scheduler serves only {} tenant(s)",
+            self.tenant, self.tenants
+        )
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
 #[derive(Debug)]
-struct Pending {
-    req: ServeRequest,
-    hint: String,
-    admitted_tick: u64,
-    submitted: Instant,
+pub(crate) struct Pending {
+    pub(crate) req: ServeRequest,
+    pub(crate) hint: String,
+    pub(crate) admitted_tick: u64,
+    pub(crate) submitted: Instant,
 }
 
 /// Per-tenant bounded queues + weighted-fair batch picking.
@@ -124,14 +149,22 @@ impl Scheduler {
     }
 
     /// Admit or shed. Shedding is the *response* — the caller owns
-    /// telling the tenant; the scheduler never drops silently.
-    pub fn admit(&mut self, tick: u64, req: ServeRequest) -> Admission {
-        if self.queued_total >= self.cfg.queue_cap {
-            return Admission::Shed(ShedReason::QueueFull);
-        }
+    /// telling the tenant; the scheduler never drops silently. A
+    /// request naming an unknown tenant is an [`AdmitError`], not the
+    /// out-of-bounds panic this used to be.
+    pub fn admit(&mut self, tick: u64, req: ServeRequest) -> Result<Admission, AdmitError> {
         let t = req.tenant;
+        if t >= self.queues.len() {
+            return Err(AdmitError {
+                tenant: t,
+                tenants: self.queues.len(),
+            });
+        }
+        if self.queued_total >= self.cfg.queue_cap {
+            return Ok(Admission::Shed(ShedReason::QueueFull));
+        }
         if self.queues[t].len() >= self.quotas[t] {
-            return Admission::Shed(ShedReason::TenantQuota);
+            return Ok(Admission::Shed(ShedReason::TenantQuota));
         }
         let hint = req.cache_hint();
         self.queues[t].push_back(Pending {
@@ -141,7 +174,7 @@ impl Scheduler {
             submitted: Instant::now(),
         });
         self.queued_total += 1;
-        Admission::Admitted
+        Ok(Admission::Admitted)
     }
 
     /// The same-graph head-run length of tenant `t`'s queue if it is
@@ -164,7 +197,7 @@ impl Scheduler {
 
     /// Pick the next batch under weighted-fair credits. `drain` forces
     /// dispatch of short runs (no more arrivals can ever join them).
-    fn next_batch(&mut self, tick: u64, drain: bool) -> Option<(usize, Vec<Pending>)> {
+    pub(crate) fn next_batch(&mut self, tick: u64, drain: bool) -> Option<(usize, Vec<Pending>)> {
         let runs: Vec<Option<usize>> = (0..self.queues.len())
             .map(|t| self.dispatchable(t, tick, drain))
             .collect();
@@ -219,9 +252,20 @@ impl EngineChoice {
 
 /// The per-batch engine policy (see module docs).
 pub fn choose_engine(state: &WarmState, batch_len: usize) -> EngineChoice {
-    match &state.route {
+    choose_engine_routed(&state.route, state.overlap_safe, batch_len)
+}
+
+/// [`choose_engine`] against an explicit route — the chaos runner
+/// re-routes displaced batches against a *degraded* topology and still
+/// needs the exact same policy.
+pub(crate) fn choose_engine_routed(
+    route: &RoutePlan,
+    overlap_safe: bool,
+    batch_len: usize,
+) -> EngineChoice {
+    match route {
         RoutePlan::Placed => {
-            if state.overlap_safe && batch_len >= 2 {
+            if overlap_safe && batch_len >= 2 {
                 EngineChoice::Streamed
             } else {
                 EngineChoice::Lanes
@@ -285,16 +329,7 @@ fn execute_batch_inner(
     );
     let (state, cache_hit) = cache.warm_keyed(&hint, || loadgen::build_graph(&reqs[0]));
     let items: Vec<WorkItem> = reqs.iter().map(loadgen::work_item).collect();
-    let cfgs: Vec<SimConfig> = items
-        .iter()
-        .map(|it| {
-            let mut c = SimConfig::new().max_cycles(it.max_cycles);
-            for (p, s) in &it.inject {
-                c = c.inject(p, s.clone());
-            }
-            c
-        })
-        .collect();
+    let cfgs = batch_configs(&items);
     let engine = choose_engine(&state, reqs.len());
     let g = state.graph.as_ref();
     let mut lane_scalar_reruns = 0u64;
@@ -328,17 +363,7 @@ fn execute_batch_inner(
         (EngineChoice::Fallback, _) => run_batch_native(g, &cfgs),
         _ => unreachable!("engine choice always follows the cached route"),
     };
-    let verified = items
-        .iter()
-        .zip(&cfgs)
-        .zip(&outcomes)
-        .map(|((item, cfg), out)| match &item.expect {
-            Some(want) => want
-                .iter()
-                .all(|(port, w)| out.stream(port) == w.as_slice()),
-            None => run_token(g, cfg).outputs == out.outputs,
-        })
-        .collect();
+    let verified = verify_outcomes(g, &items, &cfgs, &outcomes);
     BatchResult {
         engine: engine.name(),
         cache_hit,
@@ -346,6 +371,43 @@ fn execute_batch_inner(
         outcomes,
         verified,
     }
+}
+
+/// Per-item verification shared by every dispatch path: outputs match
+/// the workload's reference (benchmarks) or a scalar `TokenSim` oracle
+/// (random DFGs).
+pub(crate) fn verify_outcomes(
+    g: &Graph,
+    items: &[WorkItem],
+    cfgs: &[SimConfig],
+    outcomes: &[SimOutcome],
+) -> Vec<bool> {
+    items
+        .iter()
+        .zip(cfgs)
+        .zip(outcomes)
+        .map(|((item, cfg), out)| match &item.expect {
+            Some(want) => want
+                .iter()
+                .all(|(port, w)| out.stream(port) == w.as_slice()),
+            None => run_token(g, cfg).outputs == out.outputs,
+        })
+        .collect()
+}
+
+/// Build per-item [`SimConfig`]s from a batch's work items — shared by
+/// the plain and chaos dispatch paths so their budgets cannot diverge.
+pub(crate) fn batch_configs(items: &[WorkItem]) -> Vec<SimConfig> {
+    items
+        .iter()
+        .map(|it| {
+            let mut c = SimConfig::new().max_cycles(it.max_cycles);
+            for (p, s) in &it.inject {
+                c = c.inject(p, s.clone());
+            }
+            c
+        })
+        .collect()
 }
 
 /// Service-tier construction parameters (the coordinator-independent
@@ -434,20 +496,44 @@ pub fn outcome_digest(out: &SimOutcome) -> u64 {
     fnv(h, &[u8::from(out.quiescent)])
 }
 
-/// One dispatched batch after execution, carrying everything the
-/// post-loop record phase needs (no scheduler state).
-struct ExecutedBatch {
-    tenant: usize,
-    result: BatchResult,
-    /// Per item: (request seq, wait ticks at dispatch, wall latency in
-    /// nanoseconds measured when execution finished).
-    items: Vec<(usize, u64, u64)>,
-    /// Wall time of `execute_batch` alone — summed over batches this
-    /// is the pool's busy time.
-    exec_ns: u64,
+/// [`outcome_digest`] restricted to the *planned* outputs: port names
+/// and token streams only, no cycle/firing/quiescence counters. This
+/// is the chaos gate's witness — a faulted run may legitimately demote
+/// a batch down the route lattice (changing cycles and firings) or
+/// migrate a session mid-wave, yet must still hand every tenant
+/// byte-identical output streams.
+pub fn output_digest(out: &SimOutcome) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for (port, stream) in &out.outputs {
+        h = fnv(h, port.as_bytes());
+        h = fnv(h, &[0xFF]);
+        for w in stream {
+            h = fnv(h, &w.to_le_bytes());
+        }
+        h = fnv(h, &[0xFE]);
+    }
+    h
 }
 
-fn exec_one(cache: &SessionCache, tick: u64, tenant: usize, batch: &[Pending]) -> ExecutedBatch {
+/// One dispatched batch after execution, carrying everything the
+/// post-loop record phase needs (no scheduler state).
+pub(crate) struct ExecutedBatch {
+    pub(crate) tenant: usize,
+    pub(crate) result: BatchResult,
+    /// Per item: (request seq, wait ticks at dispatch, wall latency in
+    /// nanoseconds measured when execution finished).
+    pub(crate) items: Vec<(usize, u64, u64)>,
+    /// Wall time of `execute_batch` alone — summed over batches this
+    /// is the pool's busy time.
+    pub(crate) exec_ns: u64,
+}
+
+pub(crate) fn exec_one(
+    cache: &SessionCache,
+    tick: u64,
+    tenant: usize,
+    batch: &[Pending],
+) -> ExecutedBatch {
     let reqs: Vec<ServeRequest> = batch.iter().map(|p| p.req.clone()).collect();
     let t0 = Instant::now();
     let result = execute_batch(cache, &reqs);
@@ -477,7 +563,7 @@ fn exec_one(cache: &SessionCache, tick: u64, tenant: usize, batch: &[Pending]) -
 /// and termination depend only on queue state — which is exactly why
 /// executing `sink`'s batches asynchronously cannot change the
 /// schedule (DESIGN.md §10).
-fn drive_profile(
+pub(crate) fn drive_profile(
     profile: &LoadProfile,
     cfg: &ServeCfg,
     collector: &mut ServeCollector,
@@ -507,7 +593,9 @@ fn drive_profile(
                 let req = trace[cursor[t]].clone();
                 cursor[t] += 1;
                 collector.submitted(t);
-                match sched.admit(tick, req) {
+                // Trace requests carry the tenant index they were
+                // generated under, so admission cannot fail here.
+                match sched.admit(tick, req).expect("trace tenant is known") {
                     Admission::Admitted => {}
                     Admission::Shed(reason) => collector.shed(t, reason),
                 }
@@ -644,22 +732,38 @@ mod tests {
         };
         let mut s = Scheduler::new(&tenants, cfg);
         let k = WorkKind::Bench(BenchId::Max);
-        assert_eq!(s.admit(1, req(0, 0, k)), Admission::Admitted);
-        assert_eq!(s.admit(1, req(0, 1, k)), Admission::Admitted);
+        assert_eq!(s.admit(1, req(0, 0, k)), Ok(Admission::Admitted));
+        assert_eq!(s.admit(1, req(0, 1, k)), Ok(Admission::Admitted));
         // Tenant 0 quota (2) exhausted.
         assert_eq!(
             s.admit(1, req(0, 2, k)),
-            Admission::Shed(ShedReason::TenantQuota)
+            Ok(Admission::Shed(ShedReason::TenantQuota))
         );
         for i in 0..3 {
-            assert_eq!(s.admit(1, req(1, i, k)), Admission::Admitted);
+            assert_eq!(s.admit(1, req(1, i, k)), Ok(Admission::Admitted));
         }
         // Global cap (5) exhausted — even for tenant 1 under quota.
         assert_eq!(
             s.admit(1, req(1, 9, k)),
-            Admission::Shed(ShedReason::QueueFull)
+            Ok(Admission::Shed(ShedReason::QueueFull))
         );
         assert_eq!(s.queued_total(), 5);
+    }
+
+    #[test]
+    fn admit_rejects_unknown_tenants_with_a_typed_error() {
+        // Regression: this indexed `self.queues[req.tenant]` and
+        // panicked out-of-bounds on any request naming a tenant the
+        // scheduler was not built with.
+        let tenants = [tenant("a", 1, 4), tenant("b", 1, 4)];
+        let mut s = Scheduler::new(&tenants, ServeCfg::default());
+        let err = s
+            .admit(1, req(7, 0, WorkKind::Bench(BenchId::Max)))
+            .unwrap_err();
+        assert_eq!(err, AdmitError { tenant: 7, tenants: 2 });
+        assert!(err.to_string().contains("tenant 7"), "{err}");
+        assert!(err.to_string().contains("2 tenant(s)"), "{err}");
+        assert_eq!(s.queued_total(), 0, "the bad request must not queue");
     }
 
     #[test]
@@ -673,9 +777,9 @@ mod tests {
         let mut s = Scheduler::new(&tenants, cfg);
         let fib = WorkKind::Bench(BenchId::Fibonacci);
         let max = WorkKind::Bench(BenchId::Max);
-        s.admit(1, req(0, 0, fib));
-        s.admit(1, req(0, 1, fib));
-        s.admit(1, req(0, 2, max));
+        for (i, k) in [fib, fib, max].into_iter().enumerate() {
+            s.admit(1, req(0, i, k)).unwrap();
+        }
         // Tick 1: run of 2 fibs, not full, deadline (1+3=4) not reached.
         assert!(s.next_batch(1, false).is_none());
         // Tick 4: deadline expired → dispatch the fib run only.
@@ -701,8 +805,8 @@ mod tests {
         let mut s = Scheduler::new(&tenants, cfg);
         let k = WorkKind::Bench(BenchId::DotProd);
         for i in 0..6 {
-            s.admit(1, req(0, i, k));
-            s.admit(1, req(1, i, k));
+            s.admit(1, req(0, i, k)).unwrap();
+            s.admit(1, req(1, i, k)).unwrap();
         }
         let picks: Vec<usize> = (0..9)
             .map(|i| s.next_batch(i as u64 + 1, false).expect("backlogged").0)

@@ -80,6 +80,29 @@ impl RoutePlan {
     }
 }
 
+/// Compute the placed → sharded → reconfig → fallback route for an
+/// (already optimized) graph on a pool of `pool_size` instances of
+/// `topo`. Factored out of the cache's miss path so the fault layer can
+/// re-route a displaced session against a *degraded* topology with
+/// exactly the lattice the cold path would choose.
+pub fn route_graph(og: &Graph, topo: &FabricTopology, pool_size: usize) -> RoutePlan {
+    if topo.fits(og) {
+        return RoutePlan::Placed;
+    }
+    match fabric::partition(og, topo) {
+        Ok(plan) if pool_size >= plan.n_shards() => RoutePlan::Sharded(plan),
+        Ok(plan) => RoutePlan::Reconfig(plan),
+        Err(e) => {
+            eprintln!(
+                "serve: `{}` is unpartitionable on `{}` ({e}); \
+                 falling back to infinite-fabric simulation",
+                og.name, topo.name
+            );
+            RoutePlan::Fallback
+        }
+    }
+}
+
 /// Everything the hot path needs that depends only on the graph (not
 /// the workload): the one warm, shareable compile/place state.
 #[derive(Debug)]
@@ -138,6 +161,7 @@ pub struct SessionCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    invalidations: AtomicU64,
 }
 
 impl SessionCache {
@@ -181,6 +205,7 @@ impl SessionCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
         }
     }
 
@@ -222,6 +247,35 @@ impl SessionCache {
 
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Whole-cache invalidations so far ([`SessionCache::invalidate_routes`]).
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations.load(Ordering::Relaxed)
+    }
+
+    /// Drop every warm entry and hint. The fault layer calls this when
+    /// the fabric's effective capacity changes under the cache (a slot
+    /// or bus fault, an outage, a repair): every cached [`RoutePlan`]
+    /// was computed against the old capacity, so a warm hit could route
+    /// a graph onto resources that no longer exist — or keep a tenant
+    /// demoted after the fault that demoted it has been repaired.
+    /// Entries are only cold, never wrong, after this; subsequent
+    /// lookups rebuild against the current topology. Returns the number
+    /// of warm entries purged.
+    pub fn invalidate_routes(&self) -> usize {
+        let mut purged = 0usize;
+        for seg in &self.segments {
+            let mut s = seg.lock().unwrap();
+            purged += s.by_fp.len();
+            s.by_fp.clear();
+            s.lru.clear();
+        }
+        for h in &self.hints {
+            h.lock().unwrap().clear();
+        }
+        self.invalidations.fetch_add(1, Ordering::Relaxed);
+        purged
     }
 
     /// Distinct graphs currently warm (summed over segments).
@@ -324,22 +378,7 @@ impl SessionCache {
         let (fp, level) = key;
         let (og, report) = opt::optimize(g, level);
         let fits_opt = self.topo.fits(&og);
-        let route = if fits_opt {
-            RoutePlan::Placed
-        } else {
-            match fabric::partition(&og, &self.topo) {
-                Ok(plan) if self.pool_size >= plan.n_shards() => RoutePlan::Sharded(plan),
-                Ok(plan) => RoutePlan::Reconfig(plan),
-                Err(e) => {
-                    eprintln!(
-                        "serve: `{}` is unpartitionable on `{}` ({e}); \
-                         falling back to infinite-fabric simulation",
-                        og.name, self.topo.name
-                    );
-                    RoutePlan::Fallback
-                }
-            }
-        };
+        let route = route_graph(&og, &self.topo, self.pool_size);
         WarmState {
             fingerprint: fp,
             opt_level: level,
@@ -563,6 +602,45 @@ mod tests {
         let (s2, _) = c.warm(&og);
         assert!(matches!(s2.route, RoutePlan::Placed));
         assert!(!s2.opt_rescued_place);
+    }
+
+    #[test]
+    fn invalidation_purges_entries_and_hints() {
+        let c = cache(8);
+        let (warm, _) = c.warm_keyed("bench:fibonacci", || bench_defs::build(BenchId::Fibonacci));
+        c.warm(&bench_defs::build(BenchId::Max));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.invalidate_routes(), 2);
+        assert_eq!(c.invalidations(), 1);
+        assert!(c.is_empty());
+        // The hint index must not dangle: the next keyed lookup is a
+        // full rebuild, not a stale hit.
+        let mut rebuilt = false;
+        let (again, hit) = c.warm_keyed("bench:fibonacci", || {
+            rebuilt = true;
+            bench_defs::build(BenchId::Fibonacci)
+        });
+        assert!(rebuilt && !hit);
+        assert_eq!(again.fingerprint, warm.fingerprint);
+    }
+
+    #[test]
+    fn route_graph_follows_the_recovery_lattice() {
+        let g = bench_defs::build(BenchId::Max);
+        let og = crate::opt::optimize(&g, OptLevel::Default).0;
+        let full = FabricTopology::paper();
+        assert!(matches!(route_graph(&og, &full, 2), RoutePlan::Placed));
+        let half = FabricTopology::sized_for_shards(&og, 2);
+        assert!(matches!(route_graph(&og, &half, 4), RoutePlan::Sharded(_)));
+        assert!(matches!(route_graph(&og, &half, 1), RoutePlan::Reconfig(_)));
+        // A zero-capacity topology (a downed instance's effective view)
+        // is unpartitionable: the lattice bottoms out at Fallback.
+        let dark = crate::fabric::FabricHealth {
+            down: true,
+            ..Default::default()
+        }
+        .effective(&full);
+        assert!(matches!(route_graph(&og, &dark, 2), RoutePlan::Fallback));
     }
 
     #[test]

@@ -70,6 +70,14 @@ impl Histogram {
         self.count
     }
 
+    /// No samples recorded. Empty histograms report 0 for every
+    /// quantile, mean, min, and max; the report layer marks them
+    /// `"empty"` explicitly so a zero-request tenant's row is never
+    /// mistaken for one with sub-microsecond latency.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
     pub fn mean_ns(&self) -> u64 {
         if self.count == 0 {
             0
@@ -135,6 +143,41 @@ impl Histogram {
         self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
         self.min_ns = self.min_ns.min(other.min_ns);
         self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Fault-injection and recovery counters for one chaos run
+/// ([`crate::serve::chaos`]). All zeros under an empty fault plan.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    /// Slot-failure events applied.
+    pub slot_faults: u64,
+    /// Bus-channel-failure events applied.
+    pub bus_faults: u64,
+    /// Whole-instance outage events applied.
+    pub outages: u64,
+    /// Repair events applied.
+    pub repairs: u64,
+    /// Resident stream sessions moved between instances by
+    /// checkpoint/restore.
+    pub migrations: u64,
+    /// Waves alive inside a migrated checkpoint — work that would have
+    /// been lost without the checkpoint image.
+    pub rescued_waves: u64,
+    /// Virtual-tick retry probes taken while the whole pool was dark.
+    pub retries: u64,
+    /// Batches re-routed down the placed → sharded → reconfig →
+    /// fallback lattice because their warm route no longer fit the
+    /// degraded (or dark) fabric.
+    pub demotions: u64,
+    /// Whole-cache warm-route purges triggered by topology changes.
+    pub route_invalidations: u64,
+}
+
+impl ChaosStats {
+    /// Fault events injected (repairs are recovery, not faults).
+    pub fn faults_injected(&self) -> u64 {
+        self.slot_faults + self.bus_faults + self.outages
     }
 }
 
@@ -223,6 +266,9 @@ pub struct ServeReport {
     pub steals: u64,
     /// Total output tokens across every completed request.
     pub tokens_out: u64,
+    /// Fault-injection counters when the profile ran under a chaos
+    /// schedule ([`crate::serve::chaos`]); `None` on fault-free runs.
+    pub chaos: Option<ChaosStats>,
 }
 
 impl ServeReport {
@@ -344,6 +390,7 @@ impl ServeCollector {
             busy_ns: 0,
             steals: 0,
             tokens_out: 0,
+            chaos: None,
         }
     }
 }
@@ -440,6 +487,43 @@ mod tests {
         assert_eq!(a.p99_ns(), whole.p99_ns());
         assert_eq!(a.min_ns(), whole.min_ns());
         assert_eq!(a.max_ns(), whole.max_ns());
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero_everywhere() {
+        // A zero-request tenant's histogram: every statistic is 0 and
+        // `is_empty` lets the report layer say so explicitly, instead
+        // of the garbage min (`u64::MAX`) or an accidental "p99 = 0 ns"
+        // claim.
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile_ns(q), 0, "q={q}");
+        }
+        assert_eq!(h.mean_ns(), 0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 0);
+        let mut nonempty = Histogram::new();
+        nonempty.record(1);
+        assert!(!nonempty.is_empty());
+        // Merging an empty histogram must not poison min/max.
+        nonempty.merge(&Histogram::new());
+        assert_eq!(nonempty.min_ns(), 1);
+        assert_eq!(nonempty.p99_ns(), 1);
+    }
+
+    #[test]
+    fn chaos_counters_roll_up() {
+        let c = ChaosStats {
+            slot_faults: 1,
+            bus_faults: 2,
+            outages: 3,
+            repairs: 4,
+            ..ChaosStats::default()
+        };
+        assert_eq!(c.faults_injected(), 6);
+        assert_eq!(ChaosStats::default().faults_injected(), 0);
     }
 
     #[test]

@@ -1,0 +1,663 @@
+//! First-class checkpoints of resident simulator state.
+//!
+//! A fabric instance can fail mid-wave (see [`crate::fabric::fault`]);
+//! the serve tier's recovery path snapshots the resident session on
+//! the dead instance and restores it on a healthy one. This module
+//! defines the portable state captures for both resident engines:
+//!
+//! * [`StreamCheckpoint`] — a [`StreamSession`](super::StreamSession)
+//!   between rounds: tokens in flight per arc (with wave tags), fifo
+//!   queues, const-arm wave queues, pending injections, the serialized
+//!   admission gate, and per-wave bookkeeping.
+//! * [`TokenCheckpoint`] — a [`TokenSim`](super::TokenSim) between
+//!   steps: arc tokens, fifo queues, const arms fired, pending
+//!   injections, and collected output streams.
+//!
+//! Both serialize to a versioned little-endian byte image
+//! ([`to_bytes`](StreamCheckpoint::to_bytes) /
+//! [`from_bytes`](StreamCheckpoint::from_bytes)) so a checkpoint can
+//! cross a process boundary. The contract, enforced by the `ckpt_*`
+//! conformance properties, is **round-trip byte-identity**:
+//! `snapshot → restore → snapshot` produces the same bytes, and a
+//! restored session finishes with the same outputs the uninterrupted
+//! run produces.
+//!
+//! **Restore legality.** A checkpoint binds to the graph it was taken
+//! from via [`Graph::fingerprint`](crate::dfg::Graph::fingerprint);
+//! restoring against any other graph is a
+//! [`CheckpointError::FingerprintMismatch`]. Shape checks (arc/node/
+//! port counts) back the fingerprint up so a corrupted image cannot
+//! index out of bounds. Checkpoints are only taken *between* rounds —
+//! never with staged writes outstanding — which is what makes the
+//! captured arc state complete (DESIGN.md §11).
+
+use super::stream::WaveMode;
+use crate::dfg::Word;
+use std::collections::BTreeMap;
+use std::error::Error;
+use std::fmt;
+
+/// Why a checkpoint could not be decoded or restored.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// The byte image ended before the decoder was done.
+    Truncated,
+    /// The image does not start with the checkpoint magic.
+    BadMagic,
+    /// The image's format version is not one this build reads.
+    BadVersion(u16),
+    /// The image's kind byte names neither engine.
+    BadKind(u8),
+    /// An option/bool tag held a value other than 0 or 1.
+    BadTag(u8),
+    /// The checkpoint was taken from a different graph.
+    FingerprintMismatch { want: u64, got: u64 },
+    /// A captured collection disagrees with the graph's shape.
+    ShapeMismatch(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Truncated => write!(f, "checkpoint image truncated"),
+            CheckpointError::BadMagic => write!(f, "not a checkpoint image (bad magic)"),
+            CheckpointError::BadVersion(v) => {
+                write!(f, "unsupported checkpoint version {v} (this build reads 1)")
+            }
+            CheckpointError::BadKind(k) => {
+                write!(f, "unknown checkpoint kind {k} (0 = token, 1 = stream)")
+            }
+            CheckpointError::BadTag(t) => write!(f, "corrupt checkpoint: tag byte {t}"),
+            CheckpointError::FingerprintMismatch { want, got } => write!(
+                f,
+                "checkpoint is for graph {want:#018x}, not {got:#018x} — \
+                 restore requires the identical graph"
+            ),
+            CheckpointError::ShapeMismatch(what) => {
+                write!(f, "checkpoint shape mismatch: {what}")
+            }
+        }
+    }
+}
+
+impl Error for CheckpointError {}
+
+const MAGIC: &[u8; 4] = b"DACK";
+const VERSION: u16 = 1;
+const KIND_TOKEN: u8 = 0;
+const KIND_STREAM: u8 = 1;
+
+/// One wave's bookkeeping inside a [`StreamCheckpoint`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WaveCkpt {
+    pub alive: u64,
+    pub started: Option<u64>,
+    pub done: Option<u64>,
+    pub quiescent: bool,
+    pub firings: u64,
+    pub outputs: BTreeMap<String, Vec<Word>>,
+}
+
+/// A [`StreamSession`](super::StreamSession) captured between rounds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamCheckpoint {
+    /// [`Graph::fingerprint`](crate::dfg::Graph::fingerprint) of the
+    /// session's graph — the restore-legality witness.
+    pub fingerprint: u64,
+    pub mode: WaveMode,
+    /// Per arc: the in-flight token `(value, wave tag)`, if any.
+    pub tokens: Vec<Option<(Word, u32)>>,
+    /// Per node: fifo contents, front first.
+    pub fifos: Vec<Vec<(Word, u32)>>,
+    /// Per node: wave ids whose const arm has not fired yet.
+    pub const_pending: Vec<Vec<u32>>,
+    /// Per input port (graph port order): not-yet-injected tokens.
+    pub pending: Vec<Vec<(Word, u32)>>,
+    /// Serialized-mode admission gate: waves not yet released.
+    pub gate: Vec<(u32, BTreeMap<String, Vec<Word>>)>,
+    pub waves: Vec<WaveCkpt>,
+    pub rounds: u64,
+    pub firings: u64,
+    pub tokens_out: u64,
+    pub tag_stalls: u64,
+    pub next_done: u64,
+    /// Consecutive zero-progress rounds at capture time. Persisted so
+    /// a restored serialized session flushes a stalled wave on the
+    /// same round an uninterrupted run would have.
+    pub stall: u32,
+}
+
+/// A [`TokenSim`](super::TokenSim) captured between steps.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TokenCheckpoint {
+    /// [`Graph::fingerprint`](crate::dfg::Graph::fingerprint) of the
+    /// sim's graph — the restore-legality witness.
+    pub fingerprint: u64,
+    /// Per arc: the in-flight token, if any.
+    pub tokens: Vec<Option<Word>>,
+    /// Per node: fifo contents, front first.
+    pub fifos: Vec<Vec<Word>>,
+    /// Per node: whether its const arm already fired.
+    pub const_done: Vec<bool>,
+    /// Per input port (graph port order): not-yet-injected tokens.
+    pub pending: Vec<Vec<Word>>,
+    /// Output streams collected so far.
+    pub collected: BTreeMap<String, Vec<Word>>,
+    pub firings: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian byte codec. Every integer is fixed-width LE; strings
+// and collections are u32-length-prefixed; options and bools are a
+// single 0/1 tag byte. No self-describing framing beyond the header —
+// both ends share this file.
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new(kind: u8) -> Self {
+        let mut w = Writer { buf: Vec::new() };
+        w.buf.extend_from_slice(MAGIC);
+        w.u16(VERSION);
+        w.u8(kind);
+        w
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn word(&mut self, v: Word) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn boolean(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    fn len(&mut self, n: usize) {
+        self.u32(u32::try_from(n).expect("checkpoint collection exceeds u32 length"));
+    }
+
+    fn string(&mut self, s: &str) {
+        self.len(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn streams(&mut self, m: &BTreeMap<String, Vec<Word>>) {
+        self.len(m.len());
+        for (k, v) in m {
+            self.string(k);
+            self.len(v.len());
+            for &w in v {
+                self.word(w);
+            }
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8], kind: u8) -> Result<Self, CheckpointError> {
+        let mut r = Reader { buf, pos: 0 };
+        if r.bytes(4)? != MAGIC {
+            return Err(CheckpointError::BadMagic);
+        }
+        let version = r.u16()?;
+        if version != VERSION {
+            return Err(CheckpointError::BadVersion(version));
+        }
+        let k = r.u8()?;
+        if k != kind {
+            return Err(CheckpointError::BadKind(k));
+        }
+        Ok(r)
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        let end = self.pos.checked_add(n).ok_or(CheckpointError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(CheckpointError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, CheckpointError> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn word(&mut self) -> Result<Word, CheckpointError> {
+        Ok(Word::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn boolean(&mut self) -> Result<bool, CheckpointError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => Err(CheckpointError::BadTag(t)),
+        }
+    }
+
+    fn len(&mut self) -> Result<usize, CheckpointError> {
+        Ok(self.u32()? as usize)
+    }
+
+    fn string(&mut self) -> Result<String, CheckpointError> {
+        let n = self.len()?;
+        let raw = self.bytes(n)?.to_vec();
+        String::from_utf8(raw).map_err(|_| CheckpointError::BadMagic)
+    }
+
+    fn streams(&mut self) -> Result<BTreeMap<String, Vec<Word>>, CheckpointError> {
+        let n = self.len()?;
+        let mut m = BTreeMap::new();
+        for _ in 0..n {
+            let k = self.string()?;
+            let len = self.len()?;
+            let mut v = Vec::with_capacity(len.min(1 << 16));
+            for _ in 0..len {
+                v.push(self.word()?);
+            }
+            m.insert(k, v);
+        }
+        Ok(m)
+    }
+
+    fn finish(self) -> Result<(), CheckpointError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(CheckpointError::BadMagic)
+        }
+    }
+}
+
+impl StreamCheckpoint {
+    /// Serialize to the portable byte image.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new(KIND_STREAM);
+        w.u64(self.fingerprint);
+        w.u8(match self.mode {
+            WaveMode::Pipelined => 0,
+            WaveMode::Serialized => 1,
+        });
+        w.len(self.tokens.len());
+        for t in &self.tokens {
+            match t {
+                None => w.u8(0),
+                Some((v, wave)) => {
+                    w.u8(1);
+                    w.word(*v);
+                    w.u32(*wave);
+                }
+            }
+        }
+        w.len(self.fifos.len());
+        for q in &self.fifos {
+            w.len(q.len());
+            for (v, wave) in q {
+                w.word(*v);
+                w.u32(*wave);
+            }
+        }
+        w.len(self.const_pending.len());
+        for q in &self.const_pending {
+            w.len(q.len());
+            for &wave in q {
+                w.u32(wave);
+            }
+        }
+        w.len(self.pending.len());
+        for q in &self.pending {
+            w.len(q.len());
+            for (v, wave) in q {
+                w.word(*v);
+                w.u32(*wave);
+            }
+        }
+        w.len(self.gate.len());
+        for (wave, input) in &self.gate {
+            w.u32(*wave);
+            w.streams(input);
+        }
+        w.len(self.waves.len());
+        for wv in &self.waves {
+            w.u64(wv.alive);
+            match wv.started {
+                None => w.u8(0),
+                Some(r) => {
+                    w.u8(1);
+                    w.u64(r);
+                }
+            }
+            match wv.done {
+                None => w.u8(0),
+                Some(r) => {
+                    w.u8(1);
+                    w.u64(r);
+                }
+            }
+            w.boolean(wv.quiescent);
+            w.u64(wv.firings);
+            w.streams(&wv.outputs);
+        }
+        w.u64(self.rounds);
+        w.u64(self.firings);
+        w.u64(self.tokens_out);
+        w.u64(self.tag_stalls);
+        w.u64(self.next_done);
+        w.u32(self.stall);
+        w.buf
+    }
+
+    /// Decode a byte image produced by [`to_bytes`](Self::to_bytes).
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, CheckpointError> {
+        let mut r = Reader::new(buf, KIND_STREAM)?;
+        let fingerprint = r.u64()?;
+        let mode = match r.u8()? {
+            0 => WaveMode::Pipelined,
+            1 => WaveMode::Serialized,
+            t => return Err(CheckpointError::BadTag(t)),
+        };
+        let n_tokens = r.len()?;
+        let mut tokens = Vec::with_capacity(n_tokens.min(1 << 16));
+        for _ in 0..n_tokens {
+            tokens.push(match r.u8()? {
+                0 => None,
+                1 => Some((r.word()?, r.u32()?)),
+                t => return Err(CheckpointError::BadTag(t)),
+            });
+        }
+        let n_fifos = r.len()?;
+        let mut fifos = Vec::with_capacity(n_fifos.min(1 << 16));
+        for _ in 0..n_fifos {
+            let len = r.len()?;
+            let mut q = Vec::with_capacity(len.min(1 << 16));
+            for _ in 0..len {
+                q.push((r.word()?, r.u32()?));
+            }
+            fifos.push(q);
+        }
+        let n_cp = r.len()?;
+        let mut const_pending = Vec::with_capacity(n_cp.min(1 << 16));
+        for _ in 0..n_cp {
+            let len = r.len()?;
+            let mut q = Vec::with_capacity(len.min(1 << 16));
+            for _ in 0..len {
+                q.push(r.u32()?);
+            }
+            const_pending.push(q);
+        }
+        let n_pending = r.len()?;
+        let mut pending = Vec::with_capacity(n_pending.min(1 << 16));
+        for _ in 0..n_pending {
+            let len = r.len()?;
+            let mut q = Vec::with_capacity(len.min(1 << 16));
+            for _ in 0..len {
+                q.push((r.word()?, r.u32()?));
+            }
+            pending.push(q);
+        }
+        let n_gate = r.len()?;
+        let mut gate = Vec::with_capacity(n_gate.min(1 << 16));
+        for _ in 0..n_gate {
+            let wave = r.u32()?;
+            gate.push((wave, r.streams()?));
+        }
+        let n_waves = r.len()?;
+        let mut waves = Vec::with_capacity(n_waves.min(1 << 16));
+        for _ in 0..n_waves {
+            let alive = r.u64()?;
+            let started = match r.u8()? {
+                0 => None,
+                1 => Some(r.u64()?),
+                t => return Err(CheckpointError::BadTag(t)),
+            };
+            let done = match r.u8()? {
+                0 => None,
+                1 => Some(r.u64()?),
+                t => return Err(CheckpointError::BadTag(t)),
+            };
+            let quiescent = r.boolean()?;
+            let firings = r.u64()?;
+            let outputs = r.streams()?;
+            waves.push(WaveCkpt {
+                alive,
+                started,
+                done,
+                quiescent,
+                firings,
+                outputs,
+            });
+        }
+        let ck = StreamCheckpoint {
+            fingerprint,
+            mode,
+            tokens,
+            fifos,
+            const_pending,
+            pending,
+            gate,
+            waves,
+            rounds: r.u64()?,
+            firings: r.u64()?,
+            tokens_out: r.u64()?,
+            tag_stalls: r.u64()?,
+            next_done: r.u64()?,
+            stall: r.u32()?,
+        };
+        r.finish()?;
+        Ok(ck)
+    }
+}
+
+impl TokenCheckpoint {
+    /// Serialize to the portable byte image.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new(KIND_TOKEN);
+        w.u64(self.fingerprint);
+        w.len(self.tokens.len());
+        for t in &self.tokens {
+            match t {
+                None => w.u8(0),
+                Some(v) => {
+                    w.u8(1);
+                    w.word(*v);
+                }
+            }
+        }
+        w.len(self.fifos.len());
+        for q in &self.fifos {
+            w.len(q.len());
+            for &v in q {
+                w.word(v);
+            }
+        }
+        w.len(self.const_done.len());
+        for &b in &self.const_done {
+            w.boolean(b);
+        }
+        w.len(self.pending.len());
+        for q in &self.pending {
+            w.len(q.len());
+            for &v in q {
+                w.word(v);
+            }
+        }
+        w.streams(&self.collected);
+        w.u64(self.firings);
+        w.buf
+    }
+
+    /// Decode a byte image produced by [`to_bytes`](Self::to_bytes).
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, CheckpointError> {
+        let mut r = Reader::new(buf, KIND_TOKEN)?;
+        let fingerprint = r.u64()?;
+        let n_tokens = r.len()?;
+        let mut tokens = Vec::with_capacity(n_tokens.min(1 << 16));
+        for _ in 0..n_tokens {
+            tokens.push(match r.u8()? {
+                0 => None,
+                1 => Some(r.word()?),
+                t => return Err(CheckpointError::BadTag(t)),
+            });
+        }
+        let n_fifos = r.len()?;
+        let mut fifos = Vec::with_capacity(n_fifos.min(1 << 16));
+        for _ in 0..n_fifos {
+            let len = r.len()?;
+            let mut q = Vec::with_capacity(len.min(1 << 16));
+            for _ in 0..len {
+                q.push(r.word()?);
+            }
+            fifos.push(q);
+        }
+        let n_const = r.len()?;
+        let mut const_done = Vec::with_capacity(n_const.min(1 << 16));
+        for _ in 0..n_const {
+            const_done.push(r.boolean()?);
+        }
+        let n_pending = r.len()?;
+        let mut pending = Vec::with_capacity(n_pending.min(1 << 16));
+        for _ in 0..n_pending {
+            let len = r.len()?;
+            let mut q = Vec::with_capacity(len.min(1 << 16));
+            for _ in 0..len {
+                q.push(r.word()?);
+            }
+            pending.push(q);
+        }
+        let collected = r.streams()?;
+        let firings = r.u64()?;
+        let ck = TokenCheckpoint {
+            fingerprint,
+            tokens,
+            fifos,
+            const_done,
+            pending,
+            collected,
+            firings,
+        };
+        r.finish()?;
+        Ok(ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stream() -> StreamCheckpoint {
+        StreamCheckpoint {
+            fingerprint: 0xDEAD_BEEF_0123_4567,
+            mode: WaveMode::Serialized,
+            tokens: vec![None, Some((-3, 1)), Some((7, 0))],
+            fifos: vec![vec![], vec![(9, 2), (-1, 2)]],
+            const_pending: vec![vec![1, 2], vec![]],
+            pending: vec![vec![(5, 0)]],
+            gate: vec![(2, BTreeMap::from([("x".to_string(), vec![1, 2, 3])]))],
+            waves: vec![WaveCkpt {
+                alive: 4,
+                started: Some(2),
+                done: None,
+                quiescent: false,
+                firings: 11,
+                outputs: BTreeMap::from([("z".to_string(), vec![-7])]),
+            }],
+            rounds: 12,
+            firings: 34,
+            tokens_out: 5,
+            tag_stalls: 1,
+            next_done: 0,
+            stall: 1,
+        }
+    }
+
+    fn sample_token() -> TokenCheckpoint {
+        TokenCheckpoint {
+            fingerprint: 42,
+            tokens: vec![Some(1), None],
+            fifos: vec![vec![2, 3]],
+            const_done: vec![true, false],
+            pending: vec![vec![], vec![-5, 5]],
+            collected: BTreeMap::from([("out".to_string(), vec![0, 1])]),
+            firings: 9,
+        }
+    }
+
+    #[test]
+    fn stream_codec_round_trips_byte_identically() {
+        let ck = sample_stream();
+        let bytes = ck.to_bytes();
+        let back = StreamCheckpoint::from_bytes(&bytes).expect("decode");
+        assert_eq!(back, ck);
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn token_codec_round_trips_byte_identically() {
+        let ck = sample_token();
+        let bytes = ck.to_bytes();
+        let back = TokenCheckpoint::from_bytes(&bytes).expect("decode");
+        assert_eq!(back, ck);
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn decoder_rejects_corrupt_images() {
+        let bytes = sample_stream().to_bytes();
+        assert_eq!(
+            StreamCheckpoint::from_bytes(&bytes[..bytes.len() - 1]),
+            Err(CheckpointError::Truncated)
+        );
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] = b'X';
+        assert_eq!(
+            StreamCheckpoint::from_bytes(&wrong_magic),
+            Err(CheckpointError::BadMagic)
+        );
+        // A stream image is not a token image.
+        assert_eq!(
+            TokenCheckpoint::from_bytes(&bytes),
+            Err(CheckpointError::BadKind(1))
+        );
+        let mut bad_version = bytes;
+        bad_version[4] = 9;
+        assert_eq!(
+            StreamCheckpoint::from_bytes(&bad_version),
+            Err(CheckpointError::BadVersion(9))
+        );
+    }
+}

@@ -36,6 +36,7 @@
 //! are byte-identical to [`TokenSim`] — the same conformance contract
 //! as the streaming tier.
 
+pub mod ckpt;
 pub mod compiled;
 mod dynamic;
 mod fsm;
@@ -43,6 +44,7 @@ pub mod lanes;
 pub mod stream;
 mod token;
 
+pub use ckpt::{CheckpointError, StreamCheckpoint, TokenCheckpoint, WaveCkpt};
 pub use compiled::{CNode, ExecUnit, FusedChain, FusedSrc, FusedStep, Program, NO_ARC};
 pub use dynamic::{run_dynamic, DynamicSim};
 pub use fsm::{run_fsm, FsmSim, HandshakeEvent, HandshakeKind};

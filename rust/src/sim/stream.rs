@@ -35,6 +35,7 @@
 //! per-wave output streams are byte-identical to running each wave
 //! alone through whole-graph [`TokenSim`](super::TokenSim).
 
+use super::ckpt::{CheckpointError, StreamCheckpoint, WaveCkpt};
 use super::SimOutcome;
 use crate::dfg::{ArcId, Graph, Op, Word};
 use std::collections::{BTreeMap, VecDeque};
@@ -223,6 +224,11 @@ pub struct StreamSession<'g> {
     /// First admitted wave not yet completed (completion is in wave
     /// order under both admission policies).
     next_done: usize,
+    /// Consecutive zero-progress rounds in [`Self::run`]. Session
+    /// state (not a run-loop local) so a checkpoint cut mid-streak
+    /// resumes the countdown instead of restarting it — serialized
+    /// flush timing stays byte-identical across migration.
+    stall: u32,
 }
 
 impl<'g> StreamSession<'g> {
@@ -278,6 +284,7 @@ impl<'g> StreamSession<'g> {
             tag_stalls: 0,
             staged: Vec::new(),
             next_done: 0,
+            stall: 0,
         }
     }
 
@@ -690,25 +697,24 @@ impl<'g> StreamSession<'g> {
     /// `max_rounds` is reached. Can be called repeatedly as more waves
     /// are admitted.
     pub fn run(&mut self, max_rounds: u64) {
-        let mut stall = 0u32;
         while self.rounds < max_rounds && self.next_done < self.waves.len() {
             let progress = self.step();
             if progress == 0 {
-                stall += 1;
+                self.stall += 1;
                 // One idle round is a true fixpoint under snapshot
                 // semantics; confirm once to mirror TokenSim's drain
                 // round, then resolve the stall.
-                if stall >= 2 {
+                if self.stall >= 2 {
                     match self.mode {
                         WaveMode::Serialized => {
                             self.flush_stalled_wave();
-                            stall = 0;
+                            self.stall = 0;
                         }
                         WaveMode::Pipelined => break,
                     }
                 }
             } else {
-                stall = 0;
+                self.stall = 0;
             }
         }
     }
@@ -742,6 +748,164 @@ impl<'g> StreamSession<'g> {
             firings: st.firings,
             quiescent: st.done.is_some() && st.quiescent,
         }
+    }
+
+    /// Capture the full session state between rounds as a portable
+    /// [`StreamCheckpoint`]. The capture is complete — restoring it on
+    /// the same graph and continuing produces byte-identical outputs
+    /// to the uninterrupted run (the `ckpt_*` conformance properties).
+    ///
+    /// Panics if called mid-round (staged writes outstanding), which
+    /// cannot happen from the public API — [`Self::step`] fully drains
+    /// its stage before returning.
+    pub fn snapshot(&self) -> StreamCheckpoint {
+        assert!(
+            self.staged.is_empty(),
+            "checkpoint mid-round: staged writes outstanding"
+        );
+        StreamCheckpoint {
+            fingerprint: self.g.fingerprint(),
+            mode: self.mode,
+            tokens: self
+                .tokens
+                .iter()
+                .map(|t| t.map(|t| (t.v, t.wave)))
+                .collect(),
+            fifos: self
+                .fifos
+                .iter()
+                .map(|q| q.iter().map(|t| (t.v, t.wave)).collect())
+                .collect(),
+            const_pending: self
+                .const_pending
+                .iter()
+                .map(|q| q.iter().copied().collect())
+                .collect(),
+            pending: self
+                .pending
+                .iter()
+                .map(|(_, q)| q.iter().map(|t| (t.v, t.wave)).collect())
+                .collect(),
+            gate: self.gate.iter().cloned().collect(),
+            waves: self
+                .waves
+                .iter()
+                .map(|st| WaveCkpt {
+                    alive: st.alive,
+                    started: st.started,
+                    done: st.done,
+                    quiescent: st.quiescent,
+                    firings: st.firings,
+                    outputs: st.outputs.clone(),
+                })
+                .collect(),
+            rounds: self.rounds,
+            firings: self.firings,
+            tokens_out: self.tokens_out,
+            tag_stalls: self.tag_stalls,
+            next_done: self.next_done as u64,
+            stall: self.stall,
+        }
+    }
+
+    /// Rebuild a session from a checkpoint taken on the *same* graph
+    /// (same [`Graph::fingerprint`]). Fails with a typed
+    /// [`CheckpointError`] on any other graph or on an image whose
+    /// shape disagrees with the graph — restore never indexes out of
+    /// bounds on corrupt input.
+    pub fn restore(g: &'g Graph, ck: &StreamCheckpoint) -> Result<Self, CheckpointError> {
+        let got = g.fingerprint();
+        if ck.fingerprint != got {
+            return Err(CheckpointError::FingerprintMismatch {
+                want: ck.fingerprint,
+                got,
+            });
+        }
+        let mut s = Self::with_mode_unchecked(g, ck.mode);
+        if ck.tokens.len() != s.tokens.len() {
+            return Err(CheckpointError::ShapeMismatch(format!(
+                "{} arcs captured, graph has {}",
+                ck.tokens.len(),
+                s.tokens.len()
+            )));
+        }
+        if ck.fifos.len() != s.fifos.len() || ck.const_pending.len() != s.const_pending.len() {
+            return Err(CheckpointError::ShapeMismatch(format!(
+                "{}/{} nodes captured, graph has {}",
+                ck.fifos.len(),
+                ck.const_pending.len(),
+                s.fifos.len()
+            )));
+        }
+        if ck.pending.len() != s.pending.len() {
+            return Err(CheckpointError::ShapeMismatch(format!(
+                "{} input ports captured, graph has {}",
+                ck.pending.len(),
+                s.pending.len()
+            )));
+        }
+        let n_waves = ck.waves.len() as u32;
+        let tag_ok = |w: u32| w < n_waves;
+        let tags_ok = ck.tokens.iter().flatten().all(|&(_, w)| tag_ok(w))
+            && ck.fifos.iter().flatten().all(|&(_, w)| tag_ok(w))
+            && ck.const_pending.iter().flatten().all(|&w| tag_ok(w))
+            && ck.pending.iter().flatten().all(|&(_, w)| tag_ok(w))
+            && ck.gate.iter().all(|&(w, _)| tag_ok(w));
+        if !tags_ok {
+            return Err(CheckpointError::ShapeMismatch(format!(
+                "wave tag out of range (only {n_waves} waves captured)"
+            )));
+        }
+        if ck.next_done > u64::from(n_waves) {
+            return Err(CheckpointError::ShapeMismatch(format!(
+                "next_done {} exceeds {n_waves} captured waves",
+                ck.next_done
+            )));
+        }
+        for (w, wv) in ck.waves.iter().enumerate() {
+            for p in &s.out_ports {
+                let name = &g.arc(*p).name;
+                if !wv.outputs.contains_key(name) {
+                    return Err(CheckpointError::ShapeMismatch(format!(
+                        "wave {w} is missing output port `{name}`"
+                    )));
+                }
+            }
+        }
+        s.tokens = ck
+            .tokens
+            .iter()
+            .map(|t| t.map(|(v, wave)| Tok { v, wave }))
+            .collect();
+        for (q, src) in s.fifos.iter_mut().zip(&ck.fifos) {
+            q.extend(src.iter().map(|&(v, wave)| Tok { v, wave }));
+        }
+        for (q, src) in s.const_pending.iter_mut().zip(&ck.const_pending) {
+            q.extend(src.iter().copied());
+        }
+        for ((_, q), src) in s.pending.iter_mut().zip(&ck.pending) {
+            q.extend(src.iter().map(|&(v, wave)| Tok { v, wave }));
+        }
+        s.gate = ck.gate.iter().cloned().collect();
+        s.waves = ck
+            .waves
+            .iter()
+            .map(|wv| WaveState {
+                alive: wv.alive,
+                started: wv.started,
+                done: wv.done,
+                quiescent: wv.quiescent,
+                firings: wv.firings,
+                outputs: wv.outputs.clone(),
+            })
+            .collect();
+        s.rounds = ck.rounds;
+        s.firings = ck.firings;
+        s.tokens_out = ck.tokens_out;
+        s.tag_stalls = ck.tag_stalls;
+        s.next_done = ck.next_done as usize;
+        s.stall = ck.stall;
+        Ok(s)
     }
 
     /// Sustained-throughput metrics so far.
@@ -1104,5 +1268,80 @@ mod tests {
         let hist = m.latency_histogram(4);
         let total: usize = hist.iter().map(|r| r.2).sum();
         assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn snapshot_restore_mid_wave_finishes_identically() {
+        // Interrupt a pipelined session mid-flight, restore, and finish:
+        // outputs and counters must match the uninterrupted run.
+        let g = deep_pipeline();
+        let waves: Vec<WaveInput> = (0..6)
+            .map(|w| {
+                BTreeMap::from([
+                    ("a".to_string(), vec![w as Word, w as Word + 2]),
+                    ("b".to_string(), vec![4, 5]),
+                    ("c".to_string(), vec![2, 2]),
+                ])
+            })
+            .collect();
+        let mut whole = StreamSession::new(&g);
+        for w in &waves {
+            whole.admit(w).unwrap();
+        }
+        whole.run(100_000);
+
+        let mut interrupted = StreamSession::new(&g);
+        for w in &waves {
+            interrupted.admit(w).unwrap();
+        }
+        for _ in 0..3 {
+            interrupted.step();
+        }
+        let ck = interrupted.snapshot();
+        // Byte-identity round trip: snapshot → bytes → restore → snapshot.
+        let bytes = ck.to_bytes();
+        let decoded = StreamCheckpoint::from_bytes(&bytes).expect("decode");
+        let mut resumed = StreamSession::restore(&g, &decoded).expect("restore");
+        assert_eq!(resumed.snapshot().to_bytes(), bytes);
+        resumed.run(100_000);
+        for w in 0..waves.len() as u32 {
+            assert_eq!(
+                resumed.wave_outputs(w),
+                whole.wave_outputs(w),
+                "wave {w} diverged after restore"
+            );
+        }
+        assert_eq!(resumed.metrics().rounds, whole.metrics().rounds);
+        assert_eq!(resumed.metrics().firings, whole.metrics().firings);
+    }
+
+    #[test]
+    fn restore_rejects_wrong_graph_and_corrupt_shapes() {
+        let g = adder();
+        let mut session = StreamSession::new(&g);
+        session
+            .admit(&BTreeMap::from([
+                ("a".to_string(), vec![1]),
+                ("b".to_string(), vec![2]),
+            ]))
+            .unwrap();
+        let ck = session.snapshot();
+        let other = deep_pipeline();
+        assert!(matches!(
+            StreamSession::restore(&other, &ck),
+            Err(CheckpointError::FingerprintMismatch { .. })
+        ));
+        let mut bad = ck.clone();
+        bad.tokens.push(None);
+        assert!(matches!(
+            StreamSession::restore(&g, &bad),
+            Err(CheckpointError::ShapeMismatch(_))
+        ));
+        let mut bad_tag = ck;
+        bad_tag.pending[0].push((7, 99));
+        assert!(matches!(
+            StreamSession::restore(&g, &bad_tag),
+            Err(CheckpointError::ShapeMismatch(_))
+        ));
     }
 }

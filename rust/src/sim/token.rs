@@ -7,6 +7,7 @@
 //! pipeline semantics of the paper's clocked implementation (Fig. 1c)
 //! with the handshake cycles abstracted away — `FsmSim` charges those.
 
+use super::ckpt::{CheckpointError, TokenCheckpoint};
 use super::{SimConfig, SimOutcome};
 use crate::dfg::{ArcId, Graph, Op, OpClass, Word};
 use std::collections::{BTreeMap, VecDeque};
@@ -539,6 +540,92 @@ impl<'g> TokenSim<'g> {
     pub fn occupancy(&self) -> usize {
         self.tokens.iter().filter(|t| t.is_some()).count()
     }
+
+    /// Capture the full simulator state between rounds as a portable
+    /// [`TokenCheckpoint`]. Restoring it on the same graph and
+    /// continuing produces the same outputs as the uninterrupted run
+    /// (the `ckpt_*` conformance properties); `cycles` restart at the
+    /// resume point, so resumed outcomes are compared on outputs.
+    pub fn snapshot(&self) -> TokenCheckpoint {
+        debug_assert!(self.staged.is_empty(), "staged writes outstanding");
+        TokenCheckpoint {
+            fingerprint: self.g.fingerprint(),
+            tokens: self.tokens.clone(),
+            fifos: self.fifos.iter().map(|q| q.iter().copied().collect()).collect(),
+            const_done: self.const_done.clone(),
+            pending: self
+                .pending
+                .iter()
+                .map(|(_, q)| q.iter().copied().collect())
+                .collect(),
+            collected: self.collected.clone(),
+            firings: self.firings,
+        }
+    }
+
+    /// Rebuild a simulator from a checkpoint taken on the *same* graph
+    /// (same [`Graph::fingerprint`]). Fails with a typed
+    /// [`CheckpointError`] on any other graph or on an image whose
+    /// shape disagrees with the graph. The event-driven worklist
+    /// restarts fully marked — every node is re-examined on the first
+    /// resumed round, which is sound (marking is only ever a
+    /// may-examine hint) and needs no worklist state in the image.
+    pub fn restore(g: &'g Graph, ck: &TokenCheckpoint) -> Result<Self, CheckpointError> {
+        let got = g.fingerprint();
+        if ck.fingerprint != got {
+            return Err(CheckpointError::FingerprintMismatch {
+                want: ck.fingerprint,
+                got,
+            });
+        }
+        let mut s = Self::new(g, &SimConfig::new());
+        if ck.tokens.len() != s.tokens.len() {
+            return Err(CheckpointError::ShapeMismatch(format!(
+                "{} arcs captured, graph has {}",
+                ck.tokens.len(),
+                s.tokens.len()
+            )));
+        }
+        if ck.fifos.len() != s.fifos.len() || ck.const_done.len() != s.const_done.len() {
+            return Err(CheckpointError::ShapeMismatch(format!(
+                "{}/{} nodes captured, graph has {}",
+                ck.fifos.len(),
+                ck.const_done.len(),
+                s.fifos.len()
+            )));
+        }
+        if ck.pending.len() != s.pending.len() {
+            return Err(CheckpointError::ShapeMismatch(format!(
+                "{} input ports captured, graph has {}",
+                ck.pending.len(),
+                s.pending.len()
+            )));
+        }
+        for name in s.collected.keys() {
+            if !ck.collected.contains_key(name) {
+                return Err(CheckpointError::ShapeMismatch(format!(
+                    "captured streams are missing output port `{name}`"
+                )));
+            }
+        }
+        s.tokens = ck.tokens.clone();
+        for (q, src) in s.fifos.iter_mut().zip(&ck.fifos) {
+            q.extend(src.iter().copied());
+        }
+        s.const_done = ck.const_done.clone();
+        s.consts_outstanding = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(ni, n)| matches!(n.op, Op::Const(_)) && !ck.const_done[*ni])
+            .count() as u32;
+        for ((_, q), src) in s.pending.iter_mut().zip(&ck.pending) {
+            q.extend(src.iter().copied());
+        }
+        s.collected = ck.collected.clone();
+        s.firings = ck.firings;
+        Ok(s)
+    }
 }
 
 /// Convenience: build + run in one call.
@@ -718,5 +805,47 @@ mod tests {
         let out = TokenSim::new(&g, &cfg).run(&cfg);
         assert_eq!(out.stream("z"), &[] as &[i16]);
         assert!(!out.quiescent);
+    }
+
+    #[test]
+    fn snapshot_restore_mid_run_finishes_identically() {
+        // A loop graph keeps tokens in flight for many rounds — interrupt
+        // one mid-run and the restored sim must finish with the same
+        // outputs (and the same total firings) as the straight run.
+        let g = crate::bench_defs::build(crate::bench_defs::BenchId::Fibonacci);
+        let cfg = SimConfig::new().inject("n", vec![9]);
+        let whole = run_token(&g, &cfg);
+
+        let mut sim = TokenSim::new(&g, &cfg);
+        for _ in 0..7 {
+            sim.step();
+        }
+        let ck = sim.snapshot();
+        let bytes = ck.to_bytes();
+        let decoded = TokenCheckpoint::from_bytes(&bytes).expect("decode");
+        let resumed = TokenSim::restore(&g, &decoded).expect("restore");
+        assert_eq!(resumed.snapshot().to_bytes(), bytes, "round trip bytes");
+        let out = resumed.run(&SimConfig::new().max_cycles(1_000_000));
+        assert_eq!(out.outputs, whole.outputs);
+        assert_eq!(out.firings, whole.firings);
+        assert!(out.quiescent);
+    }
+
+    #[test]
+    fn restore_rejects_wrong_graph() {
+        let g = adder();
+        let cfg = SimConfig::new().inject("a", vec![1]);
+        let ck = TokenSim::new(&g, &cfg).snapshot();
+        let other = crate::bench_defs::build(crate::bench_defs::BenchId::Max);
+        assert!(matches!(
+            TokenSim::restore(&other, &ck),
+            Err(CheckpointError::FingerprintMismatch { .. })
+        ));
+        let mut bad = ck;
+        bad.const_done.push(true);
+        assert!(matches!(
+            TokenSim::restore(&g, &bad),
+            Err(CheckpointError::ShapeMismatch(_))
+        ));
     }
 }

@@ -1,0 +1,125 @@
+//! Serve-tier robustness conformance.
+//!
+//! Two contracts, checked end to end from outside the crate:
+//!
+//! * **Accounting is exact everywhere**: `completed + shed ==
+//!   submitted` and `lost == 0`, per tenant and globally, across every
+//!   arrival mode (closed loop, open-loop burst, ramping burst series)
+//!   and at every dispatch worker count — a request is either served or
+//!   explicitly shed, never silently dropped.
+//! * **The chaos gate holds under injected faults**: a seeded
+//!   [`FaultPlan`](dataflow_accel::fabric::FaultPlan) with slot, bus
+//!   and whole-fabric outage events recovers every in-flight request
+//!   (migration, retry or lattice demotion) with output digests
+//!   byte-identical to the fault-free baseline.
+
+use dataflow_accel::fabric::FaultPlan;
+use dataflow_accel::report::ChaosGate;
+use dataflow_accel::serve::{
+    burst_series, fairness_profile, run_profile, run_profile_chaos, tenant_trace, Arrival,
+    ServeOptions, ServeReport,
+};
+
+fn assert_exact(label: &str, report: &ServeReport) {
+    for t in &report.tenants {
+        assert_eq!(t.lost(), 0, "{label}: tenant `{}` lost requests", t.name);
+        assert_eq!(
+            t.completed + t.shed(),
+            t.submitted,
+            "{label}: tenant `{}` accounting",
+            t.name
+        );
+    }
+    let g = &report.global;
+    assert_eq!(g.lost(), 0, "{label}: global lost");
+    assert_eq!(g.completed + g.shed(), g.submitted, "{label}: global accounting");
+}
+
+/// Satellite conformance matrix: `completed + shed == submitted` and
+/// `lost == 0` under Closed, Open-burst and BurstSeries arrivals, at
+/// worker counts 1 and 2 — and the per-request digest map is identical
+/// across worker counts (the dispatch schedule never reads execution
+/// results, so parallelism cannot change what was served).
+#[test]
+fn accounting_is_exact_across_arrival_modes_and_worker_counts() {
+    let arrivals: [(&str, Arrival); 3] = [
+        ("closed", Arrival::Closed),
+        ("open-burst", Arrival::Open { burst: 4 }),
+        ("burst-series", burst_series(2)),
+    ];
+    for (mode, arrival) in arrivals {
+        let mut serial_digests = None;
+        for workers in [1usize, 2] {
+            let label = format!("{mode} @ {workers} worker(s)");
+            let mut profile = fairness_profile(2, 5, 0xACC7);
+            profile.arrival = arrival;
+            let offered: u64 = (0..profile.tenants.len())
+                .map(|t| tenant_trace(&profile, t).len() as u64)
+                .sum();
+            let opts = ServeOptions {
+                workers,
+                ..ServeOptions::default()
+            };
+            let out = run_profile(&profile, &opts);
+            assert_exact(&label, &out.report);
+            assert_eq!(
+                out.report.global.submitted, offered,
+                "{label}: submitted != offered trace"
+            );
+            assert!(out.report.global.completed > 0, "{label}: nothing completed");
+            match &serial_digests {
+                None => serial_digests = Some(out.digests),
+                Some(serial) => assert_eq!(
+                    &out.digests, serial,
+                    "{label}: digest map diverged from the serial run"
+                ),
+            }
+        }
+    }
+}
+
+/// The accounting contract survives injected faults, in every arrival
+/// mode: a seeded plan (≥1 slot fail, ≥1 bus fail, ≥1 outage) loses
+/// nothing and serves byte-identical outputs to the fault-free
+/// baseline of the *same* arrival mode.
+#[test]
+fn chaos_accounting_and_digests_hold_across_arrival_modes() {
+    let arrivals: [(&str, Arrival); 3] = [
+        ("closed", Arrival::Closed),
+        ("open-burst", Arrival::Open { burst: 4 }),
+        ("burst-series", burst_series(2)),
+    ];
+    for (mode, arrival) in arrivals {
+        let mut profile = fairness_profile(2, 5, 0xFA_0175);
+        profile.arrival = arrival;
+        let opts = ServeOptions::default();
+        let plan = FaultPlan::seeded(29, opts.pool_size);
+        let baseline = run_profile_chaos(&profile, &opts, &FaultPlan::empty());
+        let faulted = run_profile_chaos(&profile, &opts, &plan);
+        assert_exact(&format!("chaos {mode}"), &faulted.report);
+        assert!(
+            faulted.chaos.faults_injected() >= 3,
+            "chaos {mode}: plan under-injected"
+        );
+        assert_eq!(
+            faulted.output_digests, baseline.output_digests,
+            "chaos {mode}: outputs diverged from the fault-free baseline"
+        );
+    }
+}
+
+/// End-to-end chaos gate, exactly as `serve --chaos` evaluates it:
+/// fault census complete, zero lost, accounting exact, digests match.
+#[test]
+fn chaos_gate_passes_end_to_end_on_the_fairness_profile() {
+    let profile = fairness_profile(2, 6, 11);
+    let opts = ServeOptions::default();
+    let plan = FaultPlan::seeded(11, opts.pool_size);
+    let baseline = run_profile_chaos(&profile, &opts, &FaultPlan::empty());
+    let faulted = run_profile_chaos(&profile, &opts, &plan);
+    let gate = ChaosGate::check(&plan, &faulted, &baseline);
+    assert!(gate.passed(), "gate failures: {:?}", gate.failures());
+    let c = plan.counts();
+    assert!(c.slot >= 1 && c.bus >= 1 && c.outage >= 1, "census: {c:?}");
+    assert_eq!(faulted.report.global.lost(), 0);
+}

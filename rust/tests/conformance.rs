@@ -35,7 +35,7 @@ use dataflow_accel::opt::{self, optimize, OptLevel};
 use dataflow_accel::par::Executor;
 use dataflow_accel::sim::{
     run_dynamic, run_fsm, run_lanes, run_stream, run_stream_lanes, run_token, Program, SimConfig,
-    StreamSession, WaveInput, WaveMode, MAX_LANES,
+    StreamCheckpoint, StreamSession, WaveInput, WaveMode, MAX_LANES,
 };
 use dataflow_accel::util::proptest::{
     check, random_dfg, random_dfg_with, random_workload, GenCfg, GenGraph, PropCfg,
@@ -1303,4 +1303,160 @@ fn par_determinism_warm_equals_cold_through_striped_cache() {
             assert!(cold.verified.iter().all(|&v| v), "{kind:?} @ {workers}");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint conformance (the `ckpt_` subset; CI runs it standalone as
+// `cargo test --release --test conformance ckpt_`). The contract behind
+// the serve tier's fault-recovery migration: a `StreamCheckpoint` is a
+// complete capture — byte-identical through encode/decode/restore — and
+// resuming one finishes with wave outcomes identical to a run that was
+// never interrupted, counters included.
+// ---------------------------------------------------------------------------
+
+/// Snapshot → bytes → decode → restore is byte-identical at every hop
+/// on all 13 suite graphs, at several cut depths, and the resumed run
+/// reproduces the uninterrupted run's full per-wave `SimOutcome`
+/// (outputs, cycles, firings, quiescence).
+#[test]
+fn ckpt_roundtrip_and_resume_are_byte_identical_on_all_suite_graphs() {
+    for (name, g, cfg) in opt_suite() {
+        let waves: Vec<WaveInput> = vec![cfg.inject.clone(), cfg.inject.clone()];
+        let budget = cfg.max_cycles * 2;
+
+        let mut whole = StreamSession::with_mode(&g, WaveMode::Serialized);
+        for w in &waves {
+            whole.admit(w).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        whole.run(budget);
+
+        // `run` budgets *cumulative* rounds, so `run(cut)` then
+        // `run(budget)` walks the same round sequence as one call.
+        for cut in [0u64, 1, 7, 63] {
+            let mut first = StreamSession::with_mode(&g, WaveMode::Serialized);
+            for w in &waves {
+                first.admit(w).unwrap_or_else(|e| panic!("{name}: {e}"));
+            }
+            first.run(cut);
+            let ck = first.snapshot();
+            let bytes = ck.to_bytes();
+            let decoded = StreamCheckpoint::from_bytes(&bytes)
+                .unwrap_or_else(|e| panic!("{name} cut {cut}: decode failed: {e:?}"));
+            assert_eq!(decoded, ck, "{name} cut {cut}: decoded image != snapshot");
+            assert_eq!(
+                decoded.to_bytes(),
+                bytes,
+                "{name} cut {cut}: re-encoded image differs"
+            );
+            let mut resumed = StreamSession::restore(&g, &decoded)
+                .unwrap_or_else(|e| panic!("{name} cut {cut}: restore failed: {e:?}"));
+            assert_eq!(
+                resumed.snapshot().to_bytes(),
+                bytes,
+                "{name} cut {cut}: restored session re-captures differently"
+            );
+            resumed.run(budget);
+            for w in 0..whole.n_waves() {
+                assert_eq!(
+                    resumed.wave_outcome(w),
+                    whole.wave_outcome(w),
+                    "{name} cut {cut} wave {w}: resumed != uninterrupted"
+                );
+            }
+        }
+    }
+}
+
+/// Property: the same round-trip + interrupted-resume contract on
+/// seeded random branchy DFGs (stranding tokens, serialized flushes)
+/// with a seeded cut point — including cuts that land mid-stall-streak,
+/// which is why the streak itself is part of the checkpoint image.
+#[test]
+fn ckpt_prop_interrupted_resume_matches_uninterrupted_on_random_dfgs() {
+    check(
+        "checkpoint/restore == uninterrupted",
+        PropCfg::from_env(32, 0xC4EC_4901),
+        |r: &mut Rng| {
+            let gg = random_dfg(r, true);
+            let n_waves = 2 + r.below(3);
+            let waves: Vec<BTreeMap<String, Vec<i16>>> = (0..n_waves)
+                .map(|_| random_workload(r, &gg, 1 + r.below(3)))
+                .collect();
+            let cut = r.below(32) as u64;
+            (gg, waves, cut)
+        },
+        |(gg, waves, cut): &(GenGraph, Vec<BTreeMap<String, Vec<i16>>>, u64)| {
+            let g = &gg.graph;
+            let budget = 200_000 * waves.len() as u64;
+            let mut whole = StreamSession::with_mode(g, WaveMode::Serialized);
+            for w in waves {
+                whole.admit(w).map_err(|e| e.to_string())?;
+            }
+            whole.run(budget);
+
+            let mut first = StreamSession::with_mode(g, WaveMode::Serialized);
+            for w in waves {
+                first.admit(w).map_err(|e| e.to_string())?;
+            }
+            first.run(*cut);
+            let bytes = first.snapshot().to_bytes();
+            let ck = StreamCheckpoint::from_bytes(&bytes).map_err(|e| format!("{e:?}"))?;
+            if ck.to_bytes() != bytes {
+                return Err(format!("cut {cut}: re-encoded image differs"));
+            }
+            let mut resumed = StreamSession::restore(g, &ck).map_err(|e| format!("{e:?}"))?;
+            if resumed.snapshot().to_bytes() != bytes {
+                return Err(format!("cut {cut}: restored session re-captures differently"));
+            }
+            resumed.run(budget);
+            for w in 0..whole.n_waves() {
+                if resumed.wave_outcome(w) != whole.wave_outcome(w) {
+                    return Err(format!(
+                        "wave {w} at cut {cut}: resumed {:?} != uninterrupted {:?}",
+                        resumed.wave_outcome(w),
+                        whole.wave_outcome(w)
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Restore legality: a checkpoint only restores onto the graph that
+/// produced it. Every cross-graph restore across the suite is refused
+/// with a typed error — never a panic, never a silently wrong session.
+#[test]
+fn ckpt_restore_refuses_every_other_suite_graph() {
+    let suite = opt_suite();
+    let images: Vec<(String, Graph, StreamCheckpoint)> = suite
+        .into_iter()
+        .map(|(name, g, cfg)| {
+            let mut s = StreamSession::with_mode(&g, WaveMode::Serialized);
+            s.admit(&cfg.inject).unwrap_or_else(|e| panic!("{name}: {e}"));
+            s.run(4);
+            let ck = s.snapshot();
+            (name, g, ck)
+        })
+        .collect();
+    let mut refused = 0usize;
+    for (name_i, _, ck) in &images {
+        for (name_j, g_j, _) in &images {
+            if g_j.fingerprint() == ck.fingerprint {
+                // The same graph (or a structural twin) is a legal
+                // restore target; legality is by fingerprint, not name.
+                assert!(
+                    StreamSession::restore(g_j, ck).is_ok(),
+                    "{name_i} -> {name_j}: same-fingerprint restore refused"
+                );
+            } else {
+                assert!(
+                    StreamSession::restore(g_j, ck).is_err(),
+                    "{name_i} -> {name_j}: cross-graph restore accepted"
+                );
+                refused += 1;
+            }
+        }
+    }
+    assert!(refused >= 100, "only {refused} cross-graph refusals exercised");
 }
