@@ -31,4 +31,6 @@ pub use batch::{
     run_batch_native, run_batch_reconfig, run_batch_sharded, run_batch_sharded_par,
     run_batch_sstream_par, run_batch_streamed, run_batch_xla, BatchEngine, LaneBatchStats,
 };
-pub use router::{BatchMode, Coordinator, Engine, Metrics, MetricsSnapshot, Request, Response};
+pub use router::{
+    metric, BatchMode, Coordinator, Engine, Metrics, MetricsSnapshot, Request, Response,
+};

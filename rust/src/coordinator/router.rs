@@ -14,11 +14,11 @@
 use super::batch::{run_batch, BatchEngine};
 use crate::bench_defs::{self, BenchId};
 use crate::fabric::{FabricPool, FabricTopology};
+use crate::obs::CounterSet;
 use crate::runtime::FabricRuntime;
 use crate::serve::{RoutePlan, SessionCache};
 use crate::sim::SimOutcome;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -60,41 +60,75 @@ pub struct Response {
     pub latency: Duration,
 }
 
-/// Aggregate counters (lock-free reads).
-#[derive(Debug, Default)]
-pub struct Metrics {
-    pub submitted: AtomicU64,
-    pub completed: AtomicU64,
-    pub verified: AtomicU64,
-    pub batches: AtomicU64,
-    pub fabric_cycles: AtomicU64,
-    pub total_latency_us: AtomicU64,
+/// Counter indices into the coordinator's [`CounterSet`] family —
+/// the one place the names and the order are declared.
+pub mod metric {
+    pub const SUBMITTED: usize = 0;
+    pub const COMPLETED: usize = 1;
+    pub const VERIFIED: usize = 2;
+    pub const BATCHES: usize = 3;
+    pub const FABRIC_CYCLES: usize = 4;
+    pub const TOTAL_LATENCY_US: usize = 5;
     /// Batches whose graph placed whole on one fabric instance.
-    pub placed: AtomicU64,
+    pub const PLACED: usize = 6;
     /// Batches whose graph exceeded one instance and ran sharded.
-    pub sharded: AtomicU64,
+    pub const SHARDED: usize = 7;
     /// Batches whose graph exceeded one instance on a single-instance
     /// pool and ran time-multiplexed (context swapping).
-    pub reconfig: AtomicU64,
+    pub const RECONFIG: usize = 8;
     /// Batches whose graph fit no partition of the pool's topology and
     /// fell back to the infinite-fabric simulation.
-    pub fallback: AtomicU64,
+    pub const FALLBACK: usize = 9;
     /// Waves pipelined through resident sessions (streamed mode only).
-    pub streamed_waves: AtomicU64,
+    pub const STREAMED_WAVES: usize = 10;
     /// Placed batches served by the lane-vectorized engine (native
-    /// run-to-completion mode; subset of `placed`).
-    pub lanes: AtomicU64,
+    /// run-to-completion mode; subset of `PLACED`).
+    pub const LANES: usize = 11;
     /// Items within lane batches re-run on the scalar engine because
     /// their lane did not quiesce (the lanes→placed fallback).
-    pub lane_scalar_reruns: AtomicU64,
+    pub const LANE_SCALAR_RERUNS: usize = 12;
     /// Batches whose warm state (built graph, compiled program, fabric
     /// route) came out of the shared session cache — the graph's
     /// build/compile/place cold-start work was skipped entirely.
-    pub cache_hits: AtomicU64,
+    pub const CACHE_HITS: usize = 13;
     /// Placed batches whose *raw* graph overflowed one fabric instance
     /// and only place because the optimizer shrank it (subset of
-    /// `placed`; see [`crate::serve::WarmState::opt_rescued_place`]).
-    pub opt_placed: AtomicU64,
+    /// `PLACED`; see [`crate::serve::WarmState::opt_rescued_place`]).
+    pub const OPT_PLACED: usize = 14;
+
+    pub const NAMES: [&str; 15] = [
+        "submitted",
+        "completed",
+        "verified",
+        "batches",
+        "fabric_cycles",
+        "total_latency_us",
+        "placed",
+        "sharded",
+        "reconfig",
+        "fallback",
+        "streamed_waves",
+        "lanes",
+        "lane_scalar_reruns",
+        "cache_hits",
+        "opt_placed",
+    ];
+}
+
+/// Aggregate counters (lock-free reads) — a thin view over one
+/// [`CounterSet`] family (`coordinator`), so the serving stack's
+/// observability registry sees exactly what [`Metrics::summary`] sees.
+#[derive(Debug)]
+pub struct Metrics {
+    counters: CounterSet,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            counters: CounterSet::new("coordinator", &metric::NAMES),
+        }
+    }
 }
 
 /// A coherent point-in-time copy of [`Metrics`]: plain `u64` fields,
@@ -129,24 +163,45 @@ impl MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Bump counter `idx` (see [`metric`]) by one.
+    pub fn incr(&self, idx: usize) {
+        self.counters.incr(idx);
+    }
+
+    /// Add `n` to counter `idx`.
+    pub fn add(&self, idx: usize, n: u64) {
+        self.counters.add(idx, n);
+    }
+
+    /// Read counter `idx` with a relaxed load.
+    pub fn get(&self, idx: usize) -> u64 {
+        self.counters.get(idx)
+    }
+
+    /// The underlying registry family, for export alongside the other
+    /// counter families ([`crate::obs::ObsArtifact`]).
+    pub fn counters(&self) -> &CounterSet {
+        &self.counters
+    }
+
     /// Snapshot every counter with relaxed loads.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
-            submitted: self.submitted.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            verified: self.verified.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            fabric_cycles: self.fabric_cycles.load(Ordering::Relaxed),
-            total_latency_us: self.total_latency_us.load(Ordering::Relaxed),
-            placed: self.placed.load(Ordering::Relaxed),
-            sharded: self.sharded.load(Ordering::Relaxed),
-            reconfig: self.reconfig.load(Ordering::Relaxed),
-            fallback: self.fallback.load(Ordering::Relaxed),
-            streamed_waves: self.streamed_waves.load(Ordering::Relaxed),
-            lanes: self.lanes.load(Ordering::Relaxed),
-            lane_scalar_reruns: self.lane_scalar_reruns.load(Ordering::Relaxed),
-            cache_hits: self.cache_hits.load(Ordering::Relaxed),
-            opt_placed: self.opt_placed.load(Ordering::Relaxed),
+            submitted: self.get(metric::SUBMITTED),
+            completed: self.get(metric::COMPLETED),
+            verified: self.get(metric::VERIFIED),
+            batches: self.get(metric::BATCHES),
+            fabric_cycles: self.get(metric::FABRIC_CYCLES),
+            total_latency_us: self.get(metric::TOTAL_LATENCY_US),
+            placed: self.get(metric::PLACED),
+            sharded: self.get(metric::SHARDED),
+            reconfig: self.get(metric::RECONFIG),
+            fallback: self.get(metric::FALLBACK),
+            streamed_waves: self.get(metric::STREAMED_WAVES),
+            lanes: self.get(metric::LANES),
+            lane_scalar_reruns: self.get(metric::LANE_SCALAR_RERUNS),
+            cache_hits: self.get(metric::CACHE_HITS),
+            opt_placed: self.get(metric::OPT_PLACED),
         }
     }
 
@@ -323,7 +378,7 @@ impl Coordinator {
                 // the dynamic-batching window.
                 match rx.recv() {
                     Ok(Msg::Job(j)) => {
-                        metrics_d.submitted.fetch_add(1, Ordering::Relaxed);
+                        metrics_d.incr(metric::SUBMITTED);
                         queues.entry(j.request.bench).or_default().push(j);
                     }
                     Ok(Msg::Shutdown) | Err(_) => running = false,
@@ -331,7 +386,7 @@ impl Coordinator {
                 loop {
                     match rx.try_recv() {
                         Ok(Msg::Job(j)) => {
-                            metrics_d.submitted.fetch_add(1, Ordering::Relaxed);
+                            metrics_d.incr(metric::SUBMITTED);
                             queues.entry(j.request.bench).or_default().push(j);
                         }
                         Ok(Msg::Shutdown) => {
@@ -422,7 +477,7 @@ fn run_jobs(
     // graph build.
     let (state, cache_hit) = cache.warm_keyed(bench.slug(), || bench_defs::build(bench));
     if cache_hit {
-        metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+        metrics.incr(metric::CACHE_HITS);
     }
     let g = state.graph.as_ref();
     let workloads: Vec<_> = jobs
@@ -433,9 +488,7 @@ fn run_jobs(
 
     let streamed = mode == BatchMode::Streamed;
     if streamed {
-        metrics
-            .streamed_waves
-            .fetch_add(cfgs.len() as u64, Ordering::Relaxed);
+        metrics.add(metric::STREAMED_WAVES, cfgs.len() as u64);
     }
     // Spatial sharding: a graph that places whole occupies one fabric
     // instance; one that exceeds a single instance is partitioned and
@@ -444,9 +497,9 @@ fn run_jobs(
     // channels.
     let outcomes = match &state.route {
         RoutePlan::Placed => {
-            metrics.placed.fetch_add(1, Ordering::Relaxed);
+            metrics.incr(metric::PLACED);
             if state.opt_rescued_place {
-                metrics.opt_placed.fetch_add(1, Ordering::Relaxed);
+                metrics.incr(metric::OPT_PLACED);
             }
             pool.route_healthy();
             if streamed {
@@ -463,17 +516,15 @@ fn run_jobs(
                     None => {
                         let (outs, stats) =
                             super::batch::run_batch_lanes_prog(g, &state.program, &cfgs);
-                        metrics.lanes.fetch_add(1, Ordering::Relaxed);
-                        metrics
-                            .lane_scalar_reruns
-                            .fetch_add(stats.scalar_reruns as u64, Ordering::Relaxed);
+                        metrics.incr(metric::LANES);
+                        metrics.add(metric::LANE_SCALAR_RERUNS, stats.scalar_reruns as u64);
                         outs
                     }
                 }
             }
         }
         RoutePlan::Sharded(plan) => {
-            metrics.sharded.fetch_add(1, Ordering::Relaxed);
+            metrics.incr(metric::SHARDED);
             // A sharded batch occupies one instance per shard.
             for _ in 0..plan.n_shards() {
                 pool.route_healthy();
@@ -481,12 +532,12 @@ fn run_jobs(
             super::batch::run_batch_sharded(plan, &cfgs, streamed)
         }
         RoutePlan::Reconfig(plan) => {
-            metrics.reconfig.fetch_add(1, Ordering::Relaxed);
+            metrics.incr(metric::RECONFIG);
             pool.route_healthy();
             super::batch::run_batch_reconfig(plan, pool.topology(), &cfgs, streamed)
         }
         RoutePlan::Fallback => {
-            metrics.fallback.fetch_add(1, Ordering::Relaxed);
+            metrics.incr(metric::FALLBACK);
             if streamed {
                 super::batch::run_batch_streamed(g, &cfgs)
             } else {
@@ -495,23 +546,19 @@ fn run_jobs(
         }
     };
 
-    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.incr(metric::BATCHES);
     for ((job, wl), outcome) in jobs.into_iter().zip(workloads).zip(outcomes) {
         let verified = wl
             .expect
             .iter()
             .all(|(port, want)| outcome.stream(port) == want.as_slice());
-        metrics.completed.fetch_add(1, Ordering::Relaxed);
+        metrics.incr(metric::COMPLETED);
         if verified {
-            metrics.verified.fetch_add(1, Ordering::Relaxed);
+            metrics.incr(metric::VERIFIED);
         }
-        metrics
-            .fabric_cycles
-            .fetch_add(outcome.cycles, Ordering::Relaxed);
+        metrics.add(metric::FABRIC_CYCLES, outcome.cycles);
         let latency = job.submitted.elapsed();
-        metrics
-            .total_latency_us
-            .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+        metrics.add(metric::TOTAL_LATENCY_US, latency.as_micros() as u64);
         let _ = job.reply.send(Response {
             request: job.request,
             outcome,
@@ -546,8 +593,8 @@ mod tests {
             let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert!(resp.verified, "{:?} failed verification", resp.request);
         }
-        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 18);
-        assert_eq!(c.metrics.verified.load(Ordering::Relaxed), 18);
+        assert_eq!(c.metrics.get(metric::COMPLETED), 18);
+        assert_eq!(c.metrics.get(metric::VERIFIED), 18);
         c.shutdown();
     }
 
@@ -561,15 +608,15 @@ mod tests {
                 let m = Arc::clone(&m);
                 s.spawn(move || {
                     for i in 0..per_thread {
-                        m.submitted.fetch_add(1, Ordering::Relaxed);
-                        m.completed.fetch_add(1, Ordering::Relaxed);
-                        m.total_latency_us.fetch_add(2, Ordering::Relaxed);
+                        m.incr(metric::SUBMITTED);
+                        m.incr(metric::COMPLETED);
+                        m.add(metric::TOTAL_LATENCY_US, 2);
                         if (t as u64 + i) % 2 == 0 {
-                            m.verified.fetch_add(1, Ordering::Relaxed);
+                            m.incr(metric::VERIFIED);
                         }
                         if i % 10 == 0 {
-                            m.batches.fetch_add(1, Ordering::Relaxed);
-                            m.cache_hits.fetch_add(1, Ordering::Relaxed);
+                            m.incr(metric::BATCHES);
+                            m.incr(metric::CACHE_HITS);
                         }
                     }
                 });
@@ -605,10 +652,10 @@ mod tests {
             let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert!(resp.verified, "{:?} failed on lane route", resp.request);
         }
-        assert!(c.metrics.lanes.load(Ordering::Relaxed) >= 1);
-        assert!(c.metrics.placed.load(Ordering::Relaxed) >= 1);
+        assert!(c.metrics.get(metric::LANES) >= 1);
+        assert!(c.metrics.get(metric::PLACED) >= 1);
         // Benchmark workloads quiesce — no scalar fallback expected.
-        assert_eq!(c.metrics.lane_scalar_reruns.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.get(metric::LANE_SCALAR_RERUNS), 0);
         assert!(c.metrics.summary().contains("lanes"));
         c.shutdown();
     }
@@ -631,8 +678,8 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv_timeout(Duration::from_secs(60)).unwrap().verified);
         }
-        assert_eq!(c.metrics.lanes.load(Ordering::Relaxed), 0);
-        assert!(c.metrics.streamed_waves.load(Ordering::Relaxed) >= 4);
+        assert_eq!(c.metrics.get(metric::LANES), 0);
+        assert!(c.metrics.get(metric::STREAMED_WAVES) >= 4);
         c.shutdown();
     }
 
@@ -653,8 +700,8 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv_timeout(Duration::from_secs(60)).unwrap().verified);
         }
-        let batches = c.metrics.batches.load(Ordering::Relaxed);
-        let hits = c.metrics.cache_hits.load(Ordering::Relaxed);
+        let batches = c.metrics.get(metric::BATCHES);
+        let hits = c.metrics.get(metric::CACHE_HITS);
         assert!(batches >= 4);
         assert_eq!(c.cache.misses(), 1, "one cold start for one benchmark");
         assert_eq!(hits, batches - 1, "every later batch is warm");
@@ -679,7 +726,7 @@ mod tests {
         }
         // 16 same-bench requests in ≤ a handful of batches (timing-
         // dependent, but far fewer than 16 if batching works at all).
-        let batches = c.metrics.batches.load(Ordering::Relaxed);
+        let batches = c.metrics.get(metric::BATCHES);
         assert!(batches <= 16);
         assert!(batches >= 1);
         c.shutdown();
@@ -688,11 +735,17 @@ mod tests {
     #[test]
     fn metrics_summary_renders() {
         let m = Metrics::default();
-        m.submitted.store(4, Ordering::Relaxed);
-        m.completed.store(4, Ordering::Relaxed);
-        m.opt_placed.store(2, Ordering::Relaxed);
+        m.add(metric::SUBMITTED, 4);
+        m.add(metric::COMPLETED, 4);
+        m.add(metric::OPT_PLACED, 2);
         assert!(m.summary().contains("requests 4/4"));
         assert!(m.summary().contains("opt-placed 2"));
+        // The registry view exposes the same numbers under one family.
+        let fam = m.counters().snapshot();
+        assert_eq!(fam.family, "coordinator");
+        assert_eq!(fam.get("submitted"), 4);
+        assert_eq!(fam.get("opt_placed"), 2);
+        assert_eq!(fam.vals.len(), metric::NAMES.len());
     }
 
     #[test]
@@ -721,8 +774,8 @@ mod tests {
             let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert!(resp.verified, "{:?} failed on sharded path", resp.request);
         }
-        assert!(c.metrics.sharded.load(Ordering::Relaxed) >= 1);
-        assert_eq!(c.metrics.placed.load(Ordering::Relaxed), 0);
+        assert!(c.metrics.get(metric::SHARDED) >= 1);
+        assert_eq!(c.metrics.get(metric::PLACED), 0);
         assert!(c
             .pool
             .summary()
@@ -750,10 +803,10 @@ mod tests {
             let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert!(resp.verified, "{:?} failed on reconfig path", resp.request);
         }
-        assert!(c.metrics.reconfig.load(Ordering::Relaxed) >= 1);
-        assert_eq!(c.metrics.sharded.load(Ordering::Relaxed), 0);
-        assert_eq!(c.metrics.placed.load(Ordering::Relaxed), 0);
-        assert_eq!(c.metrics.fallback.load(Ordering::Relaxed), 0);
+        assert!(c.metrics.get(metric::RECONFIG) >= 1);
+        assert_eq!(c.metrics.get(metric::SHARDED), 0);
+        assert_eq!(c.metrics.get(metric::PLACED), 0);
+        assert_eq!(c.metrics.get(metric::FALLBACK), 0);
         c.shutdown();
     }
 
@@ -782,10 +835,10 @@ mod tests {
             let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert!(resp.verified, "{:?} failed on fallback path", resp.request);
         }
-        assert!(c.metrics.fallback.load(Ordering::Relaxed) >= 1);
-        assert_eq!(c.metrics.placed.load(Ordering::Relaxed), 0);
-        assert_eq!(c.metrics.sharded.load(Ordering::Relaxed), 0);
-        assert_eq!(c.metrics.reconfig.load(Ordering::Relaxed), 0);
+        assert!(c.metrics.get(metric::FALLBACK) >= 1);
+        assert_eq!(c.metrics.get(metric::PLACED), 0);
+        assert_eq!(c.metrics.get(metric::SHARDED), 0);
+        assert_eq!(c.metrics.get(metric::RECONFIG), 0);
         c.shutdown();
     }
 
@@ -804,8 +857,8 @@ mod tests {
             let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert!(resp.verified, "{:?} failed streamed", resp.request);
         }
-        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 12);
-        assert_eq!(c.metrics.streamed_waves.load(Ordering::Relaxed), 12);
+        assert_eq!(c.metrics.get(metric::COMPLETED), 12);
+        assert_eq!(c.metrics.get(metric::STREAMED_WAVES), 12);
         assert!(c.metrics.summary().contains("streamed waves 12"));
         c.shutdown();
     }
@@ -829,8 +882,8 @@ mod tests {
             let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert!(resp.verified, "{:?} failed streamed+sharded", resp.request);
         }
-        assert!(c.metrics.sharded.load(Ordering::Relaxed) >= 1);
-        assert!(c.metrics.streamed_waves.load(Ordering::Relaxed) >= 5);
+        assert!(c.metrics.get(metric::SHARDED) >= 1);
+        assert!(c.metrics.get(metric::STREAMED_WAVES) >= 5);
         c.shutdown();
     }
 
@@ -850,11 +903,11 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv_timeout(Duration::from_secs(60)).unwrap().verified);
         }
-        assert_eq!(c.metrics.sharded.load(Ordering::Relaxed), 0);
-        assert!(c.metrics.placed.load(Ordering::Relaxed) >= 1);
+        assert_eq!(c.metrics.get(metric::SHARDED), 0);
+        assert!(c.metrics.get(metric::PLACED) >= 1);
         // The hand-built benchmarks place raw on the paper fabric, so
         // none of these placements needed the optimizer's rescue.
-        assert_eq!(c.metrics.opt_placed.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.get(metric::OPT_PLACED), 0);
         c.shutdown();
     }
 }

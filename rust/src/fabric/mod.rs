@@ -36,8 +36,8 @@ pub mod topology;
 pub use fault::{FabricHealth, FaultCounts, FaultEvent, FaultKind, FaultPlan};
 pub use partition::{partition, CutArc, PartitionPlan, Shard};
 pub use place::{place, place_healthy, PlaceError, Placement};
-pub use reconfig::{run_reconfig, run_reconfig_waves, ReconfigStats};
-pub use shard::{run_sharded, run_sharded_waves};
+pub use reconfig::{run_reconfig, run_reconfig_profiled, run_reconfig_waves, ReconfigStats};
+pub use shard::{run_sharded, run_sharded_profiled, run_sharded_waves};
 pub use topology::FabricTopology;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};

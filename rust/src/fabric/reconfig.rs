@@ -17,6 +17,7 @@
 use super::partition::PartitionPlan;
 use super::shard::{merge_outcomes, shard_configs};
 use super::topology::FabricTopology;
+use crate::obs::{EngineProfile, ProfileLevel};
 use crate::sim::{SimConfig, SimOutcome, TokenSim};
 
 /// What time-multiplexing cost on top of the pure dataflow rounds.
@@ -41,6 +42,7 @@ fn drive_contexts(
     cycle_budget: u64,
     active: &mut usize,
     swaps: &mut u64,
+    mut cut_traffic: Option<&mut [u64]>,
 ) -> u64 {
     let n = sims.len();
     let mut active_cycles = 0u64;
@@ -74,11 +76,15 @@ fn drive_contexts(
             }
         }
         // Flush this context's cut outputs into the inter-context buffers.
-        for (cut, &slot) in plan.cuts.iter().zip(&cut_slots) {
+        for (ci, (cut, &slot)) in plan.cuts.iter().zip(&cut_slots).enumerate() {
             if cut.from != *active {
                 continue;
             }
-            for v in sims[cut.from].take_stream(&cut.name) {
+            let vals = sims[cut.from].take_stream(&cut.name);
+            if let Some(t) = cut_traffic.as_deref_mut() {
+                t[ci] += vals.len() as u64;
+            }
+            for v in vals {
                 sims[cut.to].enqueue_at(slot, v);
             }
         }
@@ -131,7 +137,8 @@ pub fn run_reconfig(
 
     let mut active = 0usize;
     let mut swaps = 1u64; // the initial context load
-    let active_cycles = drive_contexts(&mut sims, plan, cfg.max_cycles, &mut active, &mut swaps);
+    let active_cycles =
+        drive_contexts(&mut sims, plan, cfg.max_cycles, &mut active, &mut swaps, None);
 
     let quiescent = sims.iter().all(|s| s.idle() && !s.consts_pending());
     let stats = ReconfigStats {
@@ -142,6 +149,64 @@ pub fn run_reconfig(
     let total_cycles = active_cycles + stats.reconfig_cycles;
     let outcome = merge_outcomes(sims, &cut_names, total_cycles, quiescent);
     (outcome, stats)
+}
+
+/// [`run_reconfig`] with profiling: per-context `TokenSim` profiles
+/// (labeled `ctx<i>`) plus one `reconfig` profile carrying the token
+/// traffic through each inter-context buffer — how much state crosses
+/// the fabric boundary per swap cycle.
+pub fn run_reconfig_profiled(
+    plan: &PartitionPlan,
+    topo: &FabricTopology,
+    cfg: &SimConfig,
+    level: ProfileLevel,
+) -> (SimOutcome, ReconfigStats, Vec<(String, EngineProfile)>) {
+    let cut_names = plan.cut_names();
+    let shard_cfgs = shard_configs(plan, cfg);
+    let mut sims: Vec<TokenSim> = plan
+        .shards
+        .iter()
+        .zip(&shard_cfgs)
+        .map(|(sh, c)| TokenSim::new(&sh.graph, c))
+        .collect();
+    for sim in sims.iter_mut() {
+        sim.enable_profiling(level);
+    }
+
+    let mut active = 0usize;
+    let mut swaps = 1u64; // the initial context load
+    let mut cut_traffic = vec![0u64; plan.cuts.len()];
+    let active_cycles = drive_contexts(
+        &mut sims,
+        plan,
+        cfg.max_cycles,
+        &mut active,
+        &mut swaps,
+        Some(&mut cut_traffic),
+    );
+
+    let quiescent = sims.iter().all(|s| s.idle() && !s.consts_pending());
+    let stats = ReconfigStats {
+        swaps,
+        reconfig_cycles: swaps * topo.reconfig_cycles,
+        active_cycles,
+    };
+    let mut profiles = Vec::new();
+    for (si, sim) in sims.iter_mut().enumerate() {
+        if let Some(p) = sim.take_profile() {
+            profiles.push((format!("ctx{si}"), p));
+        }
+    }
+    let mut fabric = EngineProfile::new("reconfig", level, 0, 0);
+    fabric.cycles = active_cycles;
+    for (ci, &t) in cut_traffic.iter().enumerate() {
+        fabric.cut(ci, t);
+    }
+    fabric.total_firings = profiles.iter().map(|(_, p)| p.total_firings).sum();
+    profiles.push(("buffers".to_string(), fabric));
+    let total_cycles = active_cycles + stats.reconfig_cycles;
+    let outcome = merge_outcomes(sims, &cut_names, total_cycles, quiescent);
+    (outcome, stats, profiles)
 }
 
 /// Streamed injection for the time-multiplexed executor: run every wave
@@ -174,7 +239,8 @@ pub fn run_reconfig_waves(
     for wave in waves {
         let swaps_before = swaps;
         super::shard::reset_and_route_wave(&mut sims, &cut_names, wave);
-        let spent = drive_contexts(&mut sims, plan, max_cycles_per_wave, &mut active, &mut swaps);
+        let spent =
+            drive_contexts(&mut sims, plan, max_cycles_per_wave, &mut active, &mut swaps, None);
         total_active += spent;
 
         let quiescent = sims.iter().all(|s| s.idle() && !s.consts_pending());
@@ -262,6 +328,28 @@ mod tests {
         // Per-wave reconfig charges sum to the cumulative charge.
         let charged: u64 = outs.iter().map(|o| o.cycles).sum();
         assert_eq!(charged, stats.active_cycles + stats.reconfig_cycles);
+    }
+
+    #[test]
+    fn profiled_reconfig_counts_buffer_traffic_without_perturbing() {
+        let g = bench_defs::build(BenchId::DotProd);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = partition(&g, &topo).unwrap();
+        let cfg = bench_defs::workload(BenchId::DotProd, 5, 17).sim_config();
+        let (plain, plain_stats) = run_reconfig(&plan, &topo, &cfg);
+        let (profiled, stats, profiles) =
+            run_reconfig_profiled(&plan, &topo, &cfg, crate::obs::ProfileLevel::Counters);
+        assert_eq!(profiled.outputs, plain.outputs);
+        assert_eq!(profiled.firings, plain.firings);
+        assert_eq!(profiled.cycles, plain.cycles);
+        assert_eq!(stats, plain_stats);
+        let (label, buffers) = profiles.last().unwrap();
+        assert_eq!(label, "buffers");
+        assert_eq!(buffers.engine, "reconfig");
+        assert_eq!(buffers.cut_traffic.len(), plan.cuts.len());
+        let crossed: u64 = buffers.cut_traffic.iter().sum();
+        assert!(crossed > 0, "tokens crossed the inter-context buffers");
+        assert_eq!(buffers.total_firings, plain.firings);
     }
 
     #[test]

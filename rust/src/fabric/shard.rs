@@ -17,6 +17,7 @@
 //! against whole-graph [`TokenSim`] on all six paper benchmarks.
 
 use super::partition::PartitionPlan;
+use crate::obs::{EngineProfile, ProfileLevel};
 use crate::sim::{SimConfig, SimOutcome, TokenSim};
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -77,6 +78,18 @@ pub(crate) fn merge_outcomes(
 /// Returns the rounds consumed. Shared by [`run_sharded`] and
 /// [`run_sharded_waves`] so the forwarding/stop rules cannot diverge.
 pub(crate) fn drive_lockstep(sims: &mut [TokenSim], plan: &PartitionPlan, budget: u64) -> u64 {
+    drive_lockstep_counted(sims, plan, budget, None)
+}
+
+/// [`drive_lockstep`] with an optional per-cut traffic accumulator:
+/// `cut_traffic[ci]` (indexed like `plan.cuts`) accrues every token
+/// forwarded over that cut. `None` keeps the unprofiled path free.
+pub(crate) fn drive_lockstep_counted(
+    sims: &mut [TokenSim],
+    plan: &PartitionPlan,
+    budget: u64,
+    mut cut_traffic: Option<&mut [u64]>,
+) -> u64 {
     // Resolve each cut's destination injection slot once; the per-round
     // forwarding below is then index-only (no per-token label lookup).
     let cut_slots: Vec<usize> = plan
@@ -100,9 +113,12 @@ pub(crate) fn drive_lockstep(sims: &mut [TokenSim], plan: &PartitionPlan, budget
             fired += sim.step();
         }
         let mut moved = 0usize;
-        for (cut, &slot) in plan.cuts.iter().zip(&cut_slots) {
+        for (ci, (cut, &slot)) in plan.cuts.iter().zip(&cut_slots).enumerate() {
             let vals = sims[cut.from].take_stream(&cut.name);
             moved += vals.len();
+            if let Some(t) = cut_traffic.as_deref_mut() {
+                t[ci] += vals.len() as u64;
+            }
             for v in vals {
                 sims[cut.to].enqueue_at(slot, v);
             }
@@ -190,6 +206,46 @@ pub fn run_sharded(plan: &PartitionPlan, cfg: &SimConfig) -> SimOutcome {
     let rounds = drive_lockstep(&mut sims, plan, cfg.max_cycles);
     let quiescent = sims.iter().all(|s| s.idle());
     merge_outcomes(sims, &cut_names, rounds, quiescent)
+}
+
+/// [`run_sharded`] with profiling: each shard's `TokenSim` profiles at
+/// `level` (shard-local node ids, labeled `shard<i>`), and one extra
+/// `sharded` profile carries the per-cut-arc token traffic — the
+/// inter-fabric bus pressure the placement tier wants to see.
+pub fn run_sharded_profiled(
+    plan: &PartitionPlan,
+    cfg: &SimConfig,
+    level: ProfileLevel,
+) -> (SimOutcome, Vec<(String, EngineProfile)>) {
+    let cut_names = plan.cut_names();
+    let shard_cfgs = shard_configs(plan, cfg);
+    let mut sims: Vec<TokenSim> = plan
+        .shards
+        .iter()
+        .zip(&shard_cfgs)
+        .map(|(sh, c)| TokenSim::new(&sh.graph, c))
+        .collect();
+    for sim in sims.iter_mut() {
+        sim.enable_profiling(level);
+    }
+    let mut cut_traffic = vec![0u64; plan.cuts.len()];
+    let rounds = drive_lockstep_counted(&mut sims, plan, cfg.max_cycles, Some(&mut cut_traffic));
+    let quiescent = sims.iter().all(|s| s.idle());
+    let mut profiles = Vec::new();
+    for (si, sim) in sims.iter_mut().enumerate() {
+        if let Some(p) = sim.take_profile() {
+            profiles.push((format!("shard{si}"), p));
+        }
+    }
+    let mut fabric = EngineProfile::new("sharded", level, 0, 0);
+    fabric.cycles = rounds;
+    for (ci, &t) in cut_traffic.iter().enumerate() {
+        fabric.cut(ci, t);
+    }
+    fabric.total_firings = profiles.iter().map(|(_, p)| p.total_firings).sum();
+    profiles.push(("cuts".to_string(), fabric));
+    let outcome = merge_outcomes(sims, &cut_names, rounds, quiescent);
+    (outcome, profiles)
 }
 
 /// Streamed injection over a resident shard rack: run every wave of
@@ -292,6 +348,32 @@ mod tests {
             assert_eq!(streamed[i].outputs, whole.outputs, "wave {i} vs whole");
             assert!(streamed[i].quiescent, "wave {i}");
         }
+    }
+
+    #[test]
+    fn profiled_sharded_run_counts_cut_traffic_without_perturbing() {
+        let g = bench_defs::build(BenchId::VectorSum);
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = partition(&g, &topo).unwrap();
+        let cfg = bench_defs::workload(BenchId::VectorSum, 6, 11).sim_config();
+        let plain = run_sharded(&plan, &cfg);
+        let (profiled, profiles) = run_sharded_profiled(&plan, &cfg, ProfileLevel::Counters);
+        assert_eq!(profiled.outputs, plain.outputs);
+        assert_eq!(profiled.firings, plain.firings);
+        assert_eq!(profiled.cycles, plain.cycles);
+        let (label, cuts) = profiles.last().unwrap();
+        assert_eq!(label, "cuts");
+        assert_eq!(cuts.engine, "sharded");
+        assert_eq!(cuts.cut_traffic.len(), plan.cuts.len());
+        let crossed: u64 = cuts.cut_traffic.iter().sum();
+        assert!(crossed > 0, "tokens crossed the cuts");
+        assert_eq!(cuts.total_firings, plain.firings);
+        let shard_total: u64 = profiles
+            .iter()
+            .filter(|(l, _)| l.starts_with("shard"))
+            .map(|(_, p)| p.total_firings)
+            .sum();
+        assert_eq!(shard_total, plain.firings);
     }
 
     #[test]

@@ -49,6 +49,11 @@
 //!   global injector, scoped workers) that the lane, shard, stream, and
 //!   serve tiers use to spread independent chunks/shards/batches across
 //!   cores with byte-identical results at any worker count.
+//! * [`obs`] — deterministic observability: typed trace spans in virtual
+//!   time (byte-identical across worker counts), per-node stall
+//!   attribution behind a zero-cost-when-off [`obs::ProfileLevel`], a
+//!   unified counter registry, Chrome-trace / `OBS_9.json` export, and
+//!   the chaos-path flight recorder.
 //! * [`serve`] — the multi-tenant service tier: warm-state session cache
 //!   keyed by [`dfg::Graph::fingerprint`], admission scheduler
 //!   (quotas, explicit shedding, weighted-fair picking, deadline-aware
@@ -68,6 +73,7 @@ pub mod dfg;
 pub mod estimate;
 pub mod fabric;
 pub mod frontend;
+pub mod obs;
 pub mod opt;
 pub mod par;
 pub mod report;

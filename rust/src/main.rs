@@ -10,9 +10,14 @@
 //! dataflow-accel bench [--quick] [--no-fuse] [--items 64] [--n 16] [--seed 7] [--out BENCH_7.json]
 //! dataflow-accel serve [--quick] [--seed 7] [--scale 24] [--n 8]
 //!                      [--arrival closed|open|burst] [--workers N] [--scale-workers]
-//!                      [--out SERVE_6.json]
+//!                      [--trace] [--trace-out OBS_9.json] [--out SERVE_6.json]
 //! dataflow-accel serve --chaos [--quick] [--seed 7] [--scale 16] [--n 8]
 //!                      [--out CHAOS_8.json]
+//! dataflow-accel trace --bench <slug|saxpy> [--items 8] [--n 8] [--seed 7]
+//!                      [--out OBS_9.json] [--chrome PATH]
+//! dataflow-accel trace --serve [--quick] [--seed 7] [--workers N] [--scale 8] [--n 8]
+//!                      [--out OBS_9.json] [--chrome PATH]
+//! dataflow-accel bench --trace-overhead [--quick] [--items 64] [--n 16] [--seed 7]
 //! dataflow-accel table1 [--fig8]
 //! dataflow-accel sweep [--bench all] [--requests 64] [--n 16] [--engine native|xla]
 //!                      [--workers 4] [--batch 8] [--stream]
@@ -39,6 +44,9 @@ fn main() {
             "scale-workers",
             "no-fuse",
             "chaos",
+            "trace",
+            "trace-overhead",
+            "serve",
         ],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -50,6 +58,7 @@ fn main() {
         "stream" => cmd_stream(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "table1" => {
             if args.has("fig8") {
                 print!("{}", report::fig8_csv());
@@ -61,7 +70,7 @@ fn main() {
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dataflow-accel <run|compile|opt|place|stream|bench|serve|table1|sweep|info> [options]\n\
+                "usage: dataflow-accel <run|compile|opt|place|stream|bench|serve|trace|table1|sweep|info> [options]\n\
                  opt: run the DFG optimizer pipeline over the benchmark graphs \n\
                  \x20 [bench]       show one benchmark's before/after graphs + pass report\n\
                  \x20 --level L     none | default | aggressive (default: default)\n\
@@ -93,6 +102,15 @@ fn main() {
                  \x20               lost and outputs match the fault-free baseline byte-for-byte\n\
                  \x20 --out PATH    write the JSON report (default SERVE_6.json; CHAOS_8.json\n\
                  \x20               with --chaos)\n\
+                 \x20 --trace       record the span trace (virtual ticks) during the run and\n\
+                 \x20               write it as OBS_9.json (override with --trace-out PATH)\n\
+                 trace: deterministic observability capture (OBS_9.json) \n\
+                 \x20 --bench B     profile the token/lane/stream engines over one benchmark;\n\
+                 \x20               refuses the artifact if any engine's profiled firing\n\
+                 \x20               totals disagree with its unprofiled run\n\
+                 \x20 --serve       run the service tier with the span trace attached\n\
+                 \x20 --chrome PATH also write Chrome trace_event JSON (chrome://tracing)\n\
+                 bench --trace-overhead: A/B the lane engine profiled vs not, print overhead\n\
                  sweep: --stream routes batches through resident streaming sessions\n\
                  benchmarks: {} saxpy (stream/bench only)",
                 BenchId::ALL.map(|b| b.slug()).join(" ")
@@ -357,6 +375,10 @@ fn cmd_stream(args: &Args) {
 }
 
 fn cmd_bench(args: &Args) {
+    if args.has("trace-overhead") {
+        cmd_bench_trace_overhead(args);
+        return;
+    }
     let quick = args.has("quick");
     let items = args.get_usize("items", if quick { 8 } else { 64 });
     let n = args.get_usize("n", if quick { 4 } else { 16 });
@@ -400,7 +422,9 @@ fn cmd_bench(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
+    use dataflow_accel::obs::{self, ObsArtifact, TraceBuf};
     use dataflow_accel::serve::{self, Arrival};
+    use std::sync::Arc;
     if args.has("chaos") {
         cmd_serve_chaos(args);
         return;
@@ -411,6 +435,8 @@ fn cmd_serve(args: &Args) {
     let n = args.get_usize("n", if quick { 4 } else { 8 });
     let workers = args.get_usize("workers", 1).max(1);
     let scale_workers = args.has("scale-workers");
+    let tracing = args.has("trace");
+    let trace_out = args.get_or("trace-out", "OBS_9.json");
     let out_path = args.get_or("out", "SERVE_6.json");
     let mut profile = serve::standard_profile(scale, n, seed);
     match args.get_or("arrival", "closed").as_str() {
@@ -454,9 +480,12 @@ fn cmd_serve(args: &Args) {
     let mut scaling: Vec<report::ScalePoint> = Vec::new();
     let mut baseline_digests = None;
     let mut last = None;
+    let mut trace_buf: Option<Arc<TraceBuf>> = None;
     for &w in &counts {
+        let tb = tracing.then(|| Arc::new(TraceBuf::new(TraceBuf::DEFAULT_CAPACITY)));
         let opts = serve::ServeOptions {
             workers: w,
+            trace: tb.clone(),
             ..serve::ServeOptions::default()
         };
         let outcome = serve::run_profile(&profile, &opts);
@@ -495,6 +524,7 @@ fn cmd_serve(args: &Args) {
         }
         scaling.push(report::ScalePoint::from_report(report));
         last = Some(outcome);
+        trace_buf = tb;
     }
 
     let outcome = last.expect("at least the 1-worker run");
@@ -507,6 +537,25 @@ fn cmd_serve(args: &Args) {
     let json = report::serve::to_json(report, seed, scale, n, quick, &scaling);
     std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
     println!("wrote {out_path}");
+    // The span trace of the final worker-count run. No wall-clock
+    // sidecar: the artifact is a pure function of (profile, workers'
+    // dispatch order), so the same command at any worker count writes a
+    // byte-identical file — the CI smoke job asserts exactly that.
+    if let Some(buf) = trace_buf {
+        let events = buf.drain_sorted();
+        print!("{}", report::demotion_ledger(&events));
+        let art = ObsArtifact {
+            source: "serve",
+            events: &events,
+            profiles: &[],
+            families: &[],
+            dropped: buf.dropped(),
+            wall_clock_ns: None,
+        };
+        std::fs::write(&trace_out, obs::obs_json(&art))
+            .unwrap_or_else(|e| panic!("cannot write `{trace_out}`: {e}"));
+        println!("wrote {trace_out} ({} spans)", events.len());
+    }
 }
 
 /// `serve --chaos`: the 10:1 fairness profile under a seeded fabric
@@ -558,6 +607,326 @@ fn cmd_serve_chaos(args: &Args) {
     let json = report::chaos::to_json(&gate, &plan, &faulted, seed, quick);
     std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
     println!("wrote {out_path}");
+}
+
+/// One benchmark's trace workload: the graph, per-item configs for the
+/// token/lane engines, and the same items as stream waves (mirrors the
+/// bench suite's batch construction, including the SAXPY pipeline).
+fn trace_inputs(
+    which: &str,
+    items: usize,
+    n: usize,
+    seed: u64,
+) -> (
+    dataflow_accel::dfg::Graph,
+    Vec<sim::SimConfig>,
+    Vec<sim::WaveInput>,
+) {
+    if which == "saxpy" {
+        let g = bench_defs::saxpy::build();
+        let pairs = bench_defs::saxpy::waves(items, n, seed);
+        let cfgs = pairs
+            .iter()
+            .map(|(w, _)| {
+                let mut c = sim::SimConfig::new();
+                for (p, s) in w {
+                    c = c.inject(p, s.clone());
+                }
+                c
+            })
+            .collect();
+        let waves = pairs.into_iter().map(|(w, _)| w).collect();
+        (g, cfgs, waves)
+    } else {
+        let bench = BenchId::from_slug(which)
+            .unwrap_or_else(|| panic!("unknown benchmark `{which}`"));
+        let g = bench_defs::build(bench);
+        let wls = bench_defs::wave_workloads(bench, items, n, seed);
+        let cfgs = wls.iter().map(|w| w.sim_config()).collect();
+        let waves = wls.into_iter().map(|w| w.inject).collect();
+        (g, cfgs, waves)
+    }
+}
+
+/// `trace`: deterministic observability capture (OBS_9.json).
+fn cmd_trace(args: &Args) {
+    if args.has("serve") {
+        cmd_trace_serve(args);
+        return;
+    }
+    match args.get("bench") {
+        Some(slug) => cmd_trace_bench(args, slug),
+        None => panic!("trace wants --bench <slug> or --serve"),
+    }
+}
+
+/// `trace --bench <slug>`: run the token, lane, and stream engines over
+/// one benchmark with profiling at Full, cross-check each engine's
+/// profiled firing total against an unprofiled run of the identical
+/// workload, and write OBS_9.json. Any disagreement means the profiler
+/// perturbed (or miscounted) execution, so the CLI refuses the
+/// artifact — a trace that lies is worse than none.
+fn cmd_trace_bench(args: &Args, which: &str) {
+    use dataflow_accel::obs::{
+        self, EngineProfile, ObsArtifact, ProfileLevel, SpanKind, TraceBuf, TraceEvent,
+    };
+    let n = args.get_usize("n", 8);
+    let seed = args.get_u64("seed", 7);
+    let items = args.get_usize("items", 8);
+    let out_path = args.get_or("out", "OBS_9.json");
+    let wall0 = std::time::Instant::now();
+    let (g, cfgs, waves) = trace_inputs(which, items, n, seed);
+    let budget = 1_000_000u64.saturating_mul(waves.len().max(1) as u64);
+    let buf = TraceBuf::new(TraceBuf::DEFAULT_CAPACITY);
+    let mut profiles: Vec<(String, EngineProfile)> = Vec::new();
+    let mut mismatches: Vec<String> = Vec::new();
+
+    // Token engine: one profiled TokenSim per item, merged.
+    let token_unprofiled: u64 = cfgs.iter().map(|c| sim::run_token(&g, c).firings).sum();
+    let mut token = EngineProfile::new("token", ProfileLevel::Full, g.n_nodes(), g.n_arcs());
+    for (i, cfg) in cfgs.iter().enumerate() {
+        let mut s = sim::TokenSim::new(&g, cfg);
+        s.enable_profiling(ProfileLevel::Full);
+        let (cycles, _) = s.run_in_place(cfg);
+        if let Some(p) = s.take_profile() {
+            token.merge(&p);
+        }
+        buf.record(TraceEvent {
+            kind: SpanKind::Execute,
+            tenant: TraceEvent::NO_TENANT,
+            seq: i as u64,
+            tick: i as u64,
+            cycles,
+            engine: "token",
+            detail: 0,
+        });
+    }
+    if token.total_firings != token_unprofiled {
+        mismatches.push(format!(
+            "token: profiled firing total {} != unprofiled {token_unprofiled}",
+            token.total_firings
+        ));
+    }
+    profiles.push(("token".to_string(), token));
+
+    // Lane engine: the whole batch through the compiled program.
+    let prog = sim::Program::compile(&g);
+    buf.record(TraceEvent {
+        kind: SpanKind::Compile,
+        tenant: TraceEvent::NO_TENANT,
+        seq: 0,
+        tick: 0,
+        cycles: 0,
+        engine: "lanes",
+        detail: prog.n_nodes() as u64,
+    });
+    let lanes_unprofiled: u64 = sim::run_lanes(&prog, &cfgs).iter().map(|o| o.firings).sum();
+    let (lane_outs, lanes) = sim::run_lanes_profiled(&prog, &cfgs, ProfileLevel::Full);
+    for (i, o) in lane_outs.iter().enumerate() {
+        buf.record(TraceEvent {
+            kind: SpanKind::Execute,
+            tenant: TraceEvent::NO_TENANT,
+            seq: i as u64,
+            tick: i as u64,
+            cycles: o.cycles,
+            engine: "lanes",
+            detail: 0,
+        });
+    }
+    if lanes.total_firings != lanes_unprofiled {
+        mismatches.push(format!(
+            "lanes: profiled firing total {} != unprofiled {lanes_unprofiled}",
+            lanes.total_firings
+        ));
+    }
+    profiles.push(("lanes".to_string(), lanes));
+
+    // Stream engine: the same items as waves through a resident session.
+    let mut plain = sim::StreamSession::new(&g);
+    for w in &waves {
+        plain.admit(w).expect("wave admission");
+    }
+    plain.run(budget);
+    let stream_unprofiled = plain.metrics().firings;
+    let mut sess = sim::StreamSession::new(&g);
+    sess.enable_profiling(ProfileLevel::Full);
+    for w in &waves {
+        sess.admit(w).expect("wave admission");
+    }
+    sess.run(budget);
+    let m = sess.metrics();
+    buf.record(TraceEvent {
+        kind: SpanKind::Execute,
+        tenant: TraceEvent::NO_TENANT,
+        seq: 0,
+        tick: 0,
+        cycles: m.rounds,
+        engine: "stream",
+        detail: u64::from(m.waves_completed),
+    });
+    let stream = sess.take_profile().expect("stream profiling enabled");
+    if stream.total_firings != stream_unprofiled {
+        mismatches.push(format!(
+            "stream: profiled firing total {} != unprofiled {stream_unprofiled}",
+            stream.total_firings
+        ));
+    }
+    profiles.push(("stream".to_string(), stream));
+
+    for (label, p) in &profiles {
+        print!("{}", report::hottest_nodes_table(label, p, 5));
+        print!("{}", report::stall_table(label, p, 5));
+    }
+    let events = buf.drain_sorted();
+    print!("{}", report::demotion_ledger(&events));
+    if !mismatches.is_empty() {
+        for msg in &mismatches {
+            eprintln!("trace: {msg}");
+        }
+        eprintln!("trace: refusing to write {out_path}");
+        std::process::exit(1);
+    }
+    let source = format!("bench:{which}");
+    let art = ObsArtifact {
+        source: &source,
+        events: &events,
+        profiles: &profiles,
+        families: &[],
+        dropped: buf.dropped(),
+        wall_clock_ns: Some(wall0.elapsed().as_nanos() as u64),
+    };
+    std::fs::write(&out_path, obs::obs_json(&art))
+        .unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
+    println!("wrote {out_path} ({} spans, 3 engine profiles)", events.len());
+    if let Some(chrome) = args.get("chrome") {
+        std::fs::write(chrome, obs::chrome_trace(&events))
+            .unwrap_or_else(|e| panic!("cannot write `{chrome}`: {e}"));
+        println!("wrote {chrome}");
+    }
+}
+
+/// `trace --serve`: one service-tier run with the span trace attached;
+/// the artifact's event stream is the same deterministic view the
+/// worker-count conformance properties compare.
+fn cmd_trace_serve(args: &Args) {
+    use dataflow_accel::obs::{self, ObsArtifact, SpanKind, TraceBuf};
+    use dataflow_accel::serve;
+    use std::sync::Arc;
+    let quick = args.has("quick");
+    let seed = args.get_u64("seed", 7);
+    let scale = args.get_usize("scale", if quick { 2 } else { 8 });
+    let n = args.get_usize("n", if quick { 4 } else { 8 });
+    let workers = args.get_usize("workers", 1).max(1);
+    let out_path = args.get_or("out", "OBS_9.json");
+    let profile = serve::standard_profile(scale, n, seed);
+    let buf = Arc::new(TraceBuf::new(TraceBuf::DEFAULT_CAPACITY));
+    let opts = serve::ServeOptions {
+        workers,
+        trace: Some(buf.clone()),
+        ..serve::ServeOptions::default()
+    };
+    let outcome = serve::run_profile(&profile, &opts);
+    let events = buf.drain_sorted();
+    print!("{}", report::serve_table(&outcome.report));
+    print!("{}", report::demotion_ledger(&events));
+    // Accounting gate: every completed request must have an Execute span.
+    let executes = events
+        .iter()
+        .filter(|e| matches!(e.kind, SpanKind::Execute))
+        .count() as u64;
+    if executes != outcome.report.global.completed {
+        eprintln!(
+            "trace: {executes} execute span(s) != {} completed request(s)",
+            outcome.report.global.completed
+        );
+        eprintln!("trace: refusing to write {out_path}");
+        std::process::exit(1);
+    }
+    // No wall-clock sidecar: the file is byte-identical at every
+    // worker count (see `serve --trace`).
+    let art = ObsArtifact {
+        source: "serve",
+        events: &events,
+        profiles: &[],
+        families: &[],
+        dropped: buf.dropped(),
+        wall_clock_ns: None,
+    };
+    std::fs::write(&out_path, obs::obs_json(&art))
+        .unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
+    println!(
+        "wrote {out_path} ({} spans at {workers} worker(s))",
+        events.len()
+    );
+    if let Some(chrome) = args.get("chrome") {
+        std::fs::write(chrome, obs::chrome_trace(&events))
+            .unwrap_or_else(|e| panic!("cannot write `{chrome}`: {e}"));
+        println!("wrote {chrome}");
+    }
+}
+
+/// `bench --trace-overhead`: A/B the lane hot path with profiling off
+/// (the production `run_lanes`, whose per-node profile branch is a
+/// single null check) against `ProfileLevel::Full`. Outputs and firing
+/// totals must be identical — `Off` changes no digests, `Full` changes
+/// no results, only adds counters — and the wall-time ratio is printed
+/// against the documented 2.5x bound (DESIGN.md §12). Output
+/// divergence is fatal; a slow machine exceeding the bound is flagged
+/// but not fatal (timing noise is not a correctness failure).
+fn cmd_bench_trace_overhead(args: &Args) {
+    use dataflow_accel::obs::ProfileLevel;
+    let quick = args.has("quick");
+    let items = args.get_usize("items", if quick { 8 } else { 64 });
+    let n = args.get_usize("n", if quick { 4 } else { 16 });
+    let seed = args.get_u64("seed", 7);
+    let mut names: Vec<String> = BenchId::ALL.iter().map(|b| b.slug().to_string()).collect();
+    names.push("saxpy".to_string());
+    println!("lane-engine profiling overhead (Off vs Full): {items} items of size {n}");
+    println!(
+        "{:<12} {:>12} {:>12} {:>8} {:>9}",
+        "benchmark", "off_ns", "full_ns", "ratio", "verdict"
+    );
+    let mut diverged = Vec::new();
+    for name in &names {
+        let (g, cfgs, _) = trace_inputs(name, items, n, seed);
+        let prog = sim::Program::compile(&g);
+        let reference = sim::run_lanes(&prog, &cfgs); // also warms caches
+        let t0 = std::time::Instant::now();
+        let off_outs = sim::run_lanes(&prog, &cfgs);
+        let off_ns = (t0.elapsed().as_nanos() as u64).max(1);
+        let t1 = std::time::Instant::now();
+        let (full_outs, prof) = sim::run_lanes_profiled(&prog, &cfgs, ProfileLevel::Full);
+        let full_ns = (t1.elapsed().as_nanos() as u64).max(1);
+        let firings: u64 = reference.iter().map(|o| o.firings).sum();
+        let same = reference.len() == full_outs.len()
+            && reference
+                .iter()
+                .zip(&full_outs)
+                .all(|(a, b)| a.outputs == b.outputs && a.firings == b.firings)
+            && reference
+                .iter()
+                .zip(&off_outs)
+                .all(|(a, b)| a.outputs == b.outputs)
+            && prof.total_firings == firings;
+        let ratio = full_ns as f64 / off_ns as f64;
+        let verdict = if !same {
+            diverged.push(name.clone());
+            "MISMATCH"
+        } else if ratio <= 2.5 {
+            "ok"
+        } else {
+            "over"
+        };
+        println!("{name:<12} {off_ns:>12} {full_ns:>12} {ratio:>7.2}x {verdict:>9}");
+    }
+    if !diverged.is_empty() {
+        eprintln!(
+            "bench: profiled lane run diverged from unprofiled: {}",
+            diverged.join(", ")
+        );
+        std::process::exit(1);
+    }
+    println!("documented bound: Full <= 2.5x Off on the lane hot path (DESIGN.md section 12)");
 }
 
 fn cmd_sweep(args: &Args) {

@@ -1,0 +1,239 @@
+//! Trace/profile exporters: Chrome `trace_event` JSON and the compact
+//! self-describing `OBS_9.json` artifact (schema `dataflow-accel-obs/v1`).
+//!
+//! Everything serialized from the record path is virtual (ticks, cycles,
+//! counters). Wall clock may be attached here — and only here — as an
+//! export-time sidecar field (`wall_clock_ns`), which the determinism
+//! checks deliberately ignore: they compare [`events_json`] output, which
+//! contains no wall-clock data by construction.
+
+use crate::obs::prof::EngineProfile;
+use crate::obs::registry::FamilySnapshot;
+use crate::obs::trace::TraceEvent;
+use std::fmt::Write as _;
+
+/// Everything one `trace` invocation wants to persist.
+pub struct ObsArtifact<'a> {
+    /// Where the trace came from ("bench:saxpy", "serve", "serve-chaos").
+    pub source: &'a str,
+    /// Canonical-order event stream (see `TraceBuf::drain_sorted`).
+    pub events: &'a [TraceEvent],
+    /// Labeled engine profiles ("token", "lanes", ...).
+    pub profiles: &'a [(String, EngineProfile)],
+    /// Counter-family snapshots from `obs::registry`.
+    pub families: &'a [FamilySnapshot],
+    /// Events lost to ring-buffer overflow (always present in the JSON).
+    pub dropped: u64,
+    /// Optional export-time wall-clock sidecar; never part of the
+    /// deterministic view.
+    pub wall_clock_ns: Option<u64>,
+}
+
+/// Serialize just the event stream — the **deterministic view**. The
+/// `obs_determinism_*` properties and the CI worker-count comparison both
+/// assert byte equality of this string.
+pub fn events_json(events: &[TraceEvent]) -> String {
+    let mut out = String::from("[\n");
+    for (i, e) in events.iter().enumerate() {
+        let comma = if i + 1 < events.len() { "," } else { "" };
+        writeln!(
+            out,
+            "    {{\"kind\": \"{}\", \"tenant\": {}, \"seq\": {}, \"tick\": {}, \
+             \"cycles\": {}, \"engine\": \"{}\", \"detail\": {}}}{comma}",
+            e.kind.name(),
+            e.tenant,
+            e.seq,
+            e.tick,
+            e.cycles,
+            e.engine,
+            e.detail
+        )
+        .unwrap();
+    }
+    out.push_str("  ]");
+    out
+}
+
+fn profile_json(out: &mut String, label: &str, p: &EngineProfile) {
+    writeln!(out, "      \"label\": \"{label}\",").unwrap();
+    writeln!(out, "      \"engine\": \"{}\",", p.engine).unwrap();
+    writeln!(out, "      \"level\": \"{:?}\",", p.level).unwrap();
+    writeln!(out, "      \"cycles\": {},", p.cycles).unwrap();
+    writeln!(out, "      \"total_firings\": {},", p.total_firings).unwrap();
+    let nodes: Vec<String> = p
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.firings > 0 || s.stall_total() > 0)
+        .map(|(i, s)| {
+            format!(
+                "{{\"node\": {i}, \"firings\": {}, \"input_starved\": {}, \
+                 \"output_blocked\": {}, \"gate_closed\": {}}}",
+                s.firings, s.input_starved, s.output_blocked, s.gate_closed
+            )
+        })
+        .collect();
+    writeln!(out, "      \"nodes\": [{}],", nodes.join(", ")).unwrap();
+    let occ: Vec<String> = p
+        .arc_occupancy
+        .iter()
+        .enumerate()
+        .filter(|(_, o)| **o > 0)
+        .map(|(i, o)| format!("[{i}, {o}]"))
+        .collect();
+    writeln!(out, "      \"arc_occupancy\": [{}],", occ.join(", ")).unwrap();
+    let ops: Vec<String> = p
+        .opcode_density
+        .iter()
+        .map(|(k, v)| format!("\"{k}\": {v}"))
+        .collect();
+    writeln!(out, "      \"opcode_density\": {{{}}},", ops.join(", ")).unwrap();
+    let cuts: Vec<String> = p.cut_traffic.iter().map(|t| t.to_string()).collect();
+    writeln!(out, "      \"cut_traffic\": [{}]", cuts.join(", ")).unwrap();
+}
+
+/// Serialize the full artifact (schema `dataflow-accel-obs/v1`).
+pub fn obs_json(a: &ObsArtifact) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"dataflow-accel-obs/v1\",\n");
+    writeln!(out, "  \"source\": \"{}\",", a.source).unwrap();
+    writeln!(out, "  \"dropped\": {},", a.dropped).unwrap();
+    match a.wall_clock_ns {
+        Some(ns) => writeln!(out, "  \"wall_clock_ns\": {ns},").unwrap(),
+        None => out.push_str("  \"wall_clock_ns\": null,\n"),
+    }
+    writeln!(out, "  \"span_count\": {},", a.events.len()).unwrap();
+    writeln!(out, "  \"events\": {},", events_json(a.events)).unwrap();
+    out.push_str("  \"profiles\": [\n");
+    for (i, (label, p)) in a.profiles.iter().enumerate() {
+        let comma = if i + 1 < a.profiles.len() { "," } else { "" };
+        out.push_str("    {\n");
+        profile_json(&mut out, label, p);
+        writeln!(out, "    }}{comma}").unwrap();
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"counters\": [\n");
+    for (i, f) in a.families.iter().enumerate() {
+        let comma = if i + 1 < a.families.len() { "," } else { "" };
+        let rows: Vec<String> = f.rows().map(|(n, v)| format!("\"{n}\": {v}")).collect();
+        writeln!(
+            out,
+            "    {{\"family\": \"{}\", \"values\": {{{}}}}}{comma}",
+            f.family,
+            rows.join(", ")
+        )
+        .unwrap();
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+/// Serialize events as Chrome `trace_event` JSON (load via
+/// `chrome://tracing` or <https://ui.perfetto.dev>). Virtual ticks map to
+/// microseconds, cycles to duration; tenants become processes and engines
+/// become threads.
+pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    let mut out = String::from("{\"traceEvents\": [\n");
+    for (i, e) in events.iter().enumerate() {
+        let comma = if i + 1 < events.len() { "," } else { "" };
+        // Complete events need dur >= 1 to be visible; instants stay "i".
+        let (ph, dur) = if e.cycles > 0 {
+            ("X", e.cycles)
+        } else {
+            ("i", 0)
+        };
+        let mut line = format!(
+            "  {{\"name\": \"{}\", \"ph\": \"{ph}\", \"ts\": {}, \"pid\": {}, \
+             \"tid\": \"{}\"",
+            e.kind.name(),
+            e.tick,
+            e.tenant,
+            e.engine
+        );
+        if ph == "X" {
+            write!(line, ", \"dur\": {dur}").unwrap();
+        } else {
+            line.push_str(", \"s\": \"t\"");
+        }
+        write!(
+            line,
+            ", \"args\": {{\"seq\": {}, \"detail\": {}}}}}{comma}",
+            e.seq, e.detail
+        )
+        .unwrap();
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out.push_str("]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::prof::ProfileLevel;
+    use crate::obs::trace::SpanKind;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                kind: SpanKind::Admit,
+                tenant: 0,
+                seq: 1,
+                tick: 0,
+                cycles: 0,
+                engine: "sched",
+                detail: 0,
+            },
+            TraceEvent {
+                kind: SpanKind::Execute,
+                tenant: 0,
+                seq: 1,
+                tick: 2,
+                cycles: 33,
+                engine: "lanes",
+                detail: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn events_json_is_pure_function_of_events() {
+        let evs = sample_events();
+        assert_eq!(events_json(&evs), events_json(&evs.clone()));
+        assert!(events_json(&evs).contains("\"kind\": \"execute\""));
+        assert!(!events_json(&evs).contains("wall"));
+    }
+
+    #[test]
+    fn obs_json_has_schema_dropped_and_span_count() {
+        let evs = sample_events();
+        let mut p = EngineProfile::new("lanes", ProfileLevel::Full, 2, 2);
+        p.fire_n(1, 3);
+        let art = ObsArtifact {
+            source: "bench:saxpy",
+            events: &evs,
+            profiles: &[("lanes".to_string(), p)],
+            families: &[],
+            dropped: 0,
+            wall_clock_ns: None,
+        };
+        let j = obs_json(&art);
+        assert!(j.contains("\"schema\": \"dataflow-accel-obs/v1\""));
+        assert!(j.contains("\"dropped\": 0"));
+        assert!(j.contains("\"span_count\": 2"));
+        assert!(j.contains("\"wall_clock_ns\": null"));
+        assert!(j.contains("\"total_firings\": 3"));
+    }
+
+    #[test]
+    fn chrome_trace_marks_spans_and_instants() {
+        let j = chrome_trace(&sample_events());
+        assert!(j.contains("\"ph\": \"X\""));
+        assert!(j.contains("\"ph\": \"i\""));
+        assert!(j.contains("\"dur\": 33"));
+        assert!(j.starts_with("{\"traceEvents\""));
+    }
+}

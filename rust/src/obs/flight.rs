@@ -1,0 +1,94 @@
+//! Flight recorder: the last N events per tenant, kept by the chaos serve
+//! path so a failed gate can dump an actionable timeline instead of a bare
+//! counter mismatch.
+//!
+//! Unlike [`crate::obs::TraceBuf`] this is a serial, single-owner
+//! structure (`&mut` recording, no locks) because the chaos path is
+//! contractually serial; it trades concurrency for a guaranteed-contiguous
+//! per-tenant tail.
+
+use crate::obs::trace::TraceEvent;
+use std::collections::VecDeque;
+
+/// Bounded per-tenant tail of [`TraceEvent`]s.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FlightRecorder {
+    cap: usize,
+    lanes: Vec<VecDeque<TraceEvent>>,
+}
+
+impl FlightRecorder {
+    /// Default per-tenant tail length.
+    pub const DEFAULT_TAIL: usize = 64;
+
+    pub fn new(n_tenants: usize, cap: usize) -> Self {
+        FlightRecorder {
+            cap: cap.max(1),
+            lanes: vec![VecDeque::new(); n_tenants],
+        }
+    }
+
+    /// Record one event into its tenant's lane, evicting the oldest when
+    /// the tail is full. Events with [`TraceEvent::NO_TENANT`] (or any
+    /// out-of-range tenant) are dropped — the recorder only answers
+    /// per-tenant questions.
+    pub fn record(&mut self, ev: TraceEvent) {
+        let Some(lane) = self.lanes.get_mut(ev.tenant as usize) else {
+            return;
+        };
+        if lane.len() >= self.cap {
+            lane.pop_front();
+        }
+        lane.push_back(ev);
+    }
+
+    /// The recorded tail for `tenant`, oldest first. Empty for unknown
+    /// tenants.
+    pub fn timeline(&self, tenant: u32) -> Vec<TraceEvent> {
+        self.lanes
+            .get(tenant as usize)
+            .map_or_else(Vec::new, |l| l.iter().copied().collect())
+    }
+
+    /// Total events currently held across all tenants.
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::SpanKind;
+
+    fn ev(tenant: u32, seq: u64) -> TraceEvent {
+        TraceEvent {
+            kind: SpanKind::Retry,
+            tenant,
+            seq,
+            tick: seq,
+            cycles: 0,
+            engine: "chaos",
+            detail: 1,
+        }
+    }
+
+    #[test]
+    fn keeps_only_the_tail() {
+        let mut fr = FlightRecorder::new(2, 3);
+        for seq in 0..5 {
+            fr.record(ev(0, seq));
+        }
+        fr.record(ev(1, 99));
+        fr.record(ev(TraceEvent::NO_TENANT, 0)); // silently ignored
+        let tl = fr.timeline(0);
+        assert_eq!(tl.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(fr.timeline(1).len(), 1);
+        assert!(fr.timeline(7).is_empty());
+        assert_eq!(fr.len(), 4);
+    }
+}

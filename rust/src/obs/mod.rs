@@ -1,0 +1,28 @@
+//! `obs` — deterministic observability for the whole execution stack.
+//!
+//! Four pieces (DESIGN.md §12):
+//!
+//! * [`trace`] — lock-striped bounded ring buffer of typed
+//!   [`SpanKind`] events, timestamped in virtual ticks + engine cycles
+//!   (never wall clock on the record path), so traces are byte-identical
+//!   across worker counts.
+//! * [`prof`] — per-node/per-arc profiling hooks inside `TokenSim`,
+//!   `LaneSim` and `StreamSession` behind a zero-cost-when-off
+//!   [`ProfileLevel`], with stall attribution
+//!   {input-starved, output-blocked, gate-closed}.
+//! * [`registry`] — one named-counter abstraction unifying the stack's
+//!   four ad-hoc counter families.
+//! * [`export`] + [`flight`] — Chrome `trace_event` / `OBS_9.json`
+//!   serialization and the chaos-path flight recorder.
+
+pub mod export;
+pub mod flight;
+pub mod prof;
+pub mod registry;
+pub mod trace;
+
+pub use export::{chrome_trace, events_json, obs_json, ObsArtifact};
+pub use flight::FlightRecorder;
+pub use prof::{EngineProfile, NodeStats, ProfileLevel, StallCause};
+pub use registry::{CounterSet, FamilySnapshot};
+pub use trace::{SpanKind, TraceBuf, TraceEvent};

@@ -1,0 +1,229 @@
+//! Per-node / per-arc profiling for the execution engines.
+//!
+//! Every engine (`TokenSim`, `LaneSim`, `StreamSession`) owns an
+//! `Option<Box<EngineProfile>>` that is `None` unless profiling was
+//! explicitly enabled — the hot path pays exactly one pointer-null branch
+//! when off, and zero allocations (pinned by `obs_determinism_off_*` and
+//! the `bench --trace-overhead` A/B).
+//!
+//! Stall attribution taxonomy (DESIGN.md §12): when a node is *attempted*
+//! by its engine's scheduler but refuses to fire, the refusal is charged to
+//! exactly one of three causes, checked in this order:
+//!
+//! 1. **input-starved** — some required input arc carries no token;
+//! 2. **output-blocked** — inputs ready, but an output arc still holds an
+//!    unconsumed token (back-pressure);
+//! 3. **gate-closed** — node-specific gating with tokens in place: a
+//!    `const` that already emitted its once-per-wave value, a `fifo` at
+//!    capacity, or a wave-tag mismatch holding a token for a later wave.
+
+use std::collections::BTreeMap;
+
+/// How much the engines record. `Off` is the default everywhere and is
+/// contractually free: no allocation, no counter traffic, digests
+/// unchanged.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ProfileLevel {
+    /// No profiling state is allocated at all.
+    #[default]
+    Off,
+    /// Per-node firing + stall counters only.
+    Counters,
+    /// `Counters` plus per-arc occupancy integrals and opcode densities.
+    Full,
+}
+
+/// One of the three stall-attribution buckets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallCause {
+    InputStarved,
+    OutputBlocked,
+    GateClosed,
+}
+
+/// Per-node counters: firings plus stall-cycles by cause.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NodeStats {
+    pub firings: u64,
+    pub input_starved: u64,
+    pub output_blocked: u64,
+    pub gate_closed: u64,
+}
+
+impl NodeStats {
+    pub fn stall_total(&self) -> u64 {
+        self.input_starved + self.output_blocked + self.gate_closed
+    }
+}
+
+/// Everything one engine run recorded. Built by
+/// `enable_profiling(level)` on the engine, harvested by `take_profile()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineProfile {
+    pub level: ProfileLevel,
+    /// Engine label ("token", "lanes", "stream", "sharded", "reconfig").
+    pub engine: &'static str,
+    /// Indexed by node id.
+    pub nodes: Vec<NodeStats>,
+    /// Rounds each arc held a token, indexed by arc id (`Full` only).
+    pub arc_occupancy: Vec<u64>,
+    /// Lane tier: mnemonic → lane-firings (mask-popcount sum, `Full` only).
+    pub opcode_density: BTreeMap<&'static str, u64>,
+    /// Tokens moved per cut arc (sharded/reconfig tiers), by cut index.
+    pub cut_traffic: Vec<u64>,
+    /// Engine cycles/rounds covered by this profile.
+    pub cycles: u64,
+    /// Sum of `nodes[i].firings` — must equal the engine's own firing
+    /// total; the `trace` CLI refuses to export when they disagree.
+    pub total_firings: u64,
+}
+
+impl EngineProfile {
+    pub fn new(engine: &'static str, level: ProfileLevel, n_nodes: usize, n_arcs: usize) -> Self {
+        let full = level >= ProfileLevel::Full;
+        EngineProfile {
+            level,
+            engine,
+            nodes: vec![NodeStats::default(); n_nodes],
+            arc_occupancy: if full { vec![0; n_arcs] } else { Vec::new() },
+            opcode_density: BTreeMap::new(),
+            cut_traffic: Vec::new(),
+            cycles: 0,
+            total_firings: 0,
+        }
+    }
+
+    /// Record one firing of node `ni`.
+    pub fn fire(&mut self, ni: usize) {
+        self.fire_n(ni, 1);
+    }
+
+    /// Record `n` simultaneous firings of node `ni` (lane masks).
+    pub fn fire_n(&mut self, ni: usize, n: u64) {
+        self.nodes[ni].firings += n;
+        self.total_firings += n;
+    }
+
+    /// Record one refused firing attempt of node `ni`.
+    pub fn stall(&mut self, ni: usize, cause: StallCause) {
+        let s = &mut self.nodes[ni];
+        match cause {
+            StallCause::InputStarved => s.input_starved += 1,
+            StallCause::OutputBlocked => s.output_blocked += 1,
+            StallCause::GateClosed => s.gate_closed += 1,
+        }
+    }
+
+    /// Add `n` rounds of occupancy to arc `arc` (`Full` only — caller
+    /// gates, this method just accumulates when the vec exists).
+    pub fn occupy(&mut self, arc: usize, n: u64) {
+        if let Some(o) = self.arc_occupancy.get_mut(arc) {
+            *o += n;
+        }
+    }
+
+    /// Add `lanes` lane-firings under opcode `mnemonic`.
+    pub fn opcode(&mut self, mnemonic: &'static str, lanes: u64) {
+        *self.opcode_density.entry(mnemonic).or_insert(0) += lanes;
+    }
+
+    /// Add `n` tokens moved over cut `ci` (vec grows on demand).
+    pub fn cut(&mut self, ci: usize, n: u64) {
+        if self.cut_traffic.len() <= ci {
+            self.cut_traffic.resize(ci + 1, 0);
+        }
+        self.cut_traffic[ci] += n;
+    }
+
+    /// Fold another profile into this one (sharded/lane-chunk merges).
+    pub fn merge(&mut self, other: &EngineProfile) {
+        if self.nodes.len() < other.nodes.len() {
+            self.nodes.resize(other.nodes.len(), NodeStats::default());
+        }
+        for (i, s) in other.nodes.iter().enumerate() {
+            let d = &mut self.nodes[i];
+            d.firings += s.firings;
+            d.input_starved += s.input_starved;
+            d.output_blocked += s.output_blocked;
+            d.gate_closed += s.gate_closed;
+        }
+        if self.arc_occupancy.len() < other.arc_occupancy.len() {
+            self.arc_occupancy.resize(other.arc_occupancy.len(), 0);
+        }
+        for (i, o) in other.arc_occupancy.iter().enumerate() {
+            self.arc_occupancy[i] += o;
+        }
+        for (k, v) in &other.opcode_density {
+            *self.opcode_density.entry(k).or_insert(0) += v;
+        }
+        for (i, t) in other.cut_traffic.iter().enumerate() {
+            self.cut(i, *t);
+        }
+        self.cycles = self.cycles.max(other.cycles);
+        self.total_firings += other.total_firings;
+    }
+
+    /// Node indices with the highest firing counts, descending; ties break
+    /// toward the lower node id so tables are deterministic.
+    pub fn hottest_nodes(&self, k: usize) -> Vec<(usize, NodeStats)> {
+        let mut rows: Vec<(usize, NodeStats)> = self.nodes.iter().copied().enumerate().collect();
+        rows.sort_by(|a, b| b.1.firings.cmp(&a.1.firings).then(a.0.cmp(&b.0)));
+        rows.truncate(k);
+        rows
+    }
+
+    /// Node indices with the highest total stall counts, descending.
+    pub fn worst_stalls(&self, k: usize) -> Vec<(usize, NodeStats)> {
+        let mut rows: Vec<(usize, NodeStats)> = self.nodes.iter().copied().enumerate().collect();
+        rows.sort_by(|a, b| b.1.stall_total().cmp(&a.1.stall_total()).then(a.0.cmp(&b.0)));
+        rows.truncate(k);
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_gates_full_only_state() {
+        assert!(ProfileLevel::Off < ProfileLevel::Counters);
+        assert!(ProfileLevel::Counters < ProfileLevel::Full);
+        assert_eq!(ProfileLevel::default(), ProfileLevel::Off);
+        let p = EngineProfile::new("token", ProfileLevel::Counters, 4, 9);
+        assert!(p.arc_occupancy.is_empty());
+        let p = EngineProfile::new("token", ProfileLevel::Full, 4, 9);
+        assert_eq!(p.arc_occupancy.len(), 9);
+    }
+
+    #[test]
+    fn fire_stall_and_merge_accumulate() {
+        let mut a = EngineProfile::new("lanes", ProfileLevel::Full, 3, 2);
+        a.fire_n(1, 5);
+        a.stall(0, StallCause::InputStarved);
+        a.stall(0, StallCause::OutputBlocked);
+        a.occupy(1, 4);
+        a.opcode("add", 5);
+        a.cut(0, 2);
+        a.cycles = 10;
+
+        let mut b = EngineProfile::new("lanes", ProfileLevel::Full, 3, 2);
+        b.fire_n(1, 3);
+        b.stall(0, StallCause::GateClosed);
+        b.occupy(1, 1);
+        b.opcode("add", 3);
+        b.cut(1, 7);
+        b.cycles = 12;
+
+        a.merge(&b);
+        assert_eq!(a.nodes[1].firings, 8);
+        assert_eq!(a.total_firings, 8);
+        assert_eq!(a.nodes[0].stall_total(), 3);
+        assert_eq!(a.arc_occupancy[1], 5);
+        assert_eq!(a.opcode_density["add"], 8);
+        assert_eq!(a.cut_traffic, vec![2, 7]);
+        assert_eq!(a.cycles, 12);
+        assert_eq!(a.hottest_nodes(1)[0].0, 1);
+        assert_eq!(a.worst_stalls(1)[0].0, 0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Unified counter registry: one named-counter abstraction behind every
+//! ad-hoc metrics family in the stack (`coordinator::Metrics`,
+//! `serve::stats::ChaosStats`, `par::ParStats`, ...).
+//!
+//! A [`CounterSet`] is a fixed family of `AtomicU64` counters addressed by
+//! compile-time index, with the index-to-name mapping carried alongside so
+//! any report can render a family without knowing who owns it. Callers keep
+//! their existing public snapshot shapes (`MetricsSnapshot`, `ParStats`,
+//! `ChaosStats`) as thin views built from [`CounterSet::snapshot`]; the
+//! duplicated per-struct atomic boilerplate lives here exactly once.
+//!
+//! Counters use `Ordering::Relaxed` throughout: every family in this stack
+//! is monotone event counting, never synchronization.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A named family of monotone atomic counters.
+///
+/// Indices are compile-time constants owned by the embedding module (e.g.
+/// `coordinator::metric::SUBMITTED`); `names[i]` is the export label of
+/// counter `i`.
+#[derive(Debug)]
+pub struct CounterSet {
+    family: &'static str,
+    names: &'static [&'static str],
+    vals: Box<[AtomicU64]>,
+}
+
+impl CounterSet {
+    /// New all-zero family. `names.len()` fixes the counter count for life.
+    pub fn new(family: &'static str, names: &'static [&'static str]) -> Self {
+        let vals: Box<[AtomicU64]> = (0..names.len()).map(|_| AtomicU64::new(0)).collect();
+        CounterSet {
+            family,
+            names,
+            vals,
+        }
+    }
+
+    pub fn family(&self) -> &'static str {
+        self.family
+    }
+
+    pub fn names(&self) -> &'static [&'static str] {
+        self.names
+    }
+
+    /// Add `n` to counter `idx`. Panics on out-of-range index (a programming
+    /// error: indices are compile-time constants).
+    pub fn add(&self, idx: usize, n: u64) {
+        self.vals[idx].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment counter `idx` by one.
+    pub fn incr(&self, idx: usize) {
+        self.add(idx, 1);
+    }
+
+    /// Current value of counter `idx`.
+    pub fn get(&self, idx: usize) -> u64 {
+        self.vals[idx].load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the whole family. Each counter is read
+    /// individually (no cross-counter atomicity — same contract the ad-hoc
+    /// snapshot structs always had).
+    pub fn snapshot(&self) -> FamilySnapshot {
+        FamilySnapshot {
+            family: self.family,
+            names: self.names,
+            vals: self.vals.iter().map(|v| v.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Immutable point-in-time view of one [`CounterSet`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FamilySnapshot {
+    pub family: &'static str,
+    pub names: &'static [&'static str],
+    pub vals: Vec<u64>,
+}
+
+impl FamilySnapshot {
+    /// Value by export label; 0 for unknown names (additive-schema friendly).
+    pub fn get(&self, name: &str) -> u64 {
+        self.names
+            .iter()
+            .position(|n| *n == name)
+            .map_or(0, |i| self.vals[i])
+    }
+
+    /// `(name, value)` rows in declaration order.
+    pub fn rows(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.names.iter().copied().zip(self.vals.iter().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NAMES: [&str; 3] = ["alpha", "beta", "gamma"];
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let c = CounterSet::new("test", &NAMES);
+        c.incr(0);
+        c.add(1, 41);
+        c.incr(1);
+        assert_eq!(c.get(0), 1);
+        assert_eq!(c.get(1), 42);
+        assert_eq!(c.get(2), 0);
+        let s = c.snapshot();
+        assert_eq!(s.family, "test");
+        assert_eq!(s.vals, vec![1, 42, 0]);
+        assert_eq!(s.get("beta"), 42);
+        assert_eq!(s.get("missing"), 0);
+        assert_eq!(
+            s.rows().collect::<Vec<_>>(),
+            vec![("alpha", 1), ("beta", 42), ("gamma", 0)]
+        );
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let c = CounterSet::new("t", &NAMES);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.incr(2);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(2), 4000);
+    }
+}

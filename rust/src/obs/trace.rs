@@ -1,0 +1,236 @@
+//! Deterministic event tracing: typed spans keyed by `(tenant, seq, engine)`
+//! and timestamped in **virtual ticks + per-engine cycles**, never wall
+//! clock. Two runs that make the same scheduling decisions therefore emit
+//! byte-identical traces regardless of worker count, machine, or load —
+//! pinned by the `obs_determinism_*` conformance properties.
+//!
+//! [`TraceBuf`] is a lock-striped bounded ring buffer. Recording NEVER
+//! blocks progress and NEVER errors: when a stripe is full the oldest event
+//! in that stripe is dropped and a global `dropped` counter is bumped, so
+//! exports can always say how much history they are missing (DESIGN.md §12).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Typed span/instant kinds, in request-lifecycle order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Request admitted to a tenant queue (tick = admission tick).
+    Admit,
+    /// Request drafted into a dispatch batch (tick = dispatch tick).
+    BatchForm,
+    /// Engine lattice decision for a batch (detail = batch size).
+    RouteSelect,
+    /// First placement of a graph onto the fabric (cold path).
+    Place,
+    /// First compile of a graph for an engine (cold path).
+    Compile,
+    /// One request executed (cycles = engine cycles for its batch).
+    Execute,
+    /// Chaos: session checkpoint/restore migration (detail = instance).
+    Migrate,
+    /// Chaos: batch retry after an injected fault (detail = backoff ticks).
+    Retry,
+    /// Chaos: batch demoted down the engine lattice (detail = step).
+    Demote,
+    /// Chaos: warm-route eviction after a slot fault (detail = instance).
+    Evict,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 10] = [
+        SpanKind::Admit,
+        SpanKind::BatchForm,
+        SpanKind::RouteSelect,
+        SpanKind::Place,
+        SpanKind::Compile,
+        SpanKind::Execute,
+        SpanKind::Migrate,
+        SpanKind::Retry,
+        SpanKind::Demote,
+        SpanKind::Evict,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::BatchForm => "batch_form",
+            SpanKind::RouteSelect => "route_select",
+            SpanKind::Place => "place",
+            SpanKind::Compile => "compile",
+            SpanKind::Execute => "execute",
+            SpanKind::Migrate => "migrate",
+            SpanKind::Retry => "retry",
+            SpanKind::Demote => "demote",
+            SpanKind::Evict => "evict",
+        }
+    }
+}
+
+/// One trace event. Every field is virtual (ticks, cycles, ids) — wall
+/// clock is banned from the record path by construction and only attached
+/// as an export-time sidecar (`obs::export`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub kind: SpanKind,
+    /// Tenant id, or `TraceEvent::NO_TENANT` for tenant-less events.
+    pub tenant: u32,
+    /// Request sequence number within the tenant (0 for batch-level events).
+    pub seq: u64,
+    /// Virtual scheduler tick at which the event happened.
+    pub tick: u64,
+    /// Engine cycles attributed to the event (0 for instants).
+    pub cycles: u64,
+    /// Engine label ("sched", "placed", "lanes", "stream", ...).
+    pub engine: &'static str,
+    /// Kind-specific payload (batch size, backoff, instance id, ...).
+    pub detail: u64,
+}
+
+impl TraceEvent {
+    pub const NO_TENANT: u32 = u32::MAX;
+
+    /// Total order used by [`TraceBuf::drain_sorted`]: every field
+    /// participates, so the sorted stream is a pure function of the event
+    /// multiset — stripe interleaving can never leak into exports.
+    fn sort_key(&self) -> (u64, u32, u64, SpanKind, &'static str, u64, u64) {
+        (
+            self.tick,
+            self.tenant,
+            self.seq,
+            self.kind,
+            self.engine,
+            self.cycles,
+            self.detail,
+        )
+    }
+}
+
+const STRIPES: usize = 8;
+
+/// Lock-striped bounded ring buffer of [`TraceEvent`]s.
+///
+/// Stripes are keyed by tenant so concurrent recorders for different
+/// tenants rarely contend. Capacity is split evenly across stripes; each
+/// stripe independently drops its oldest event on overflow.
+#[derive(Debug)]
+pub struct TraceBuf {
+    stripes: Vec<Mutex<VecDeque<TraceEvent>>>,
+    cap_per_stripe: usize,
+    dropped: AtomicU64,
+}
+
+impl TraceBuf {
+    /// Default total capacity (events) — plenty for a `--quick` serve run.
+    pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+    pub fn new(capacity: usize) -> Self {
+        let cap_per_stripe = capacity.div_ceil(STRIPES).max(1);
+        TraceBuf {
+            stripes: (0..STRIPES).map(|_| Mutex::new(VecDeque::new())).collect(),
+            cap_per_stripe,
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn stripe(&self, tenant: u32) -> &Mutex<VecDeque<TraceEvent>> {
+        &self.stripes[tenant as usize % STRIPES]
+    }
+
+    /// Record one event. Never blocks progress on a full buffer: the
+    /// stripe's oldest event is discarded and `dropped` incremented.
+    pub fn record(&self, ev: TraceEvent) {
+        let mut q = self.stripe(ev.tenant).lock().unwrap();
+        if q.len() >= self.cap_per_stripe {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(ev);
+    }
+
+    /// Events discarded to overflow so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain all stripes and return the events in the canonical total
+    /// order (see [`TraceEvent::sort_key`]). This is the only read path;
+    /// exports and conformance tests both go through it.
+    pub fn drain_sorted(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for s in &self.stripes {
+            out.append(&mut s.lock().unwrap().drain(..).collect());
+        }
+        out.sort_by(|a, b| a.sort_key().cmp(&b.sort_key()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(tenant: u32, seq: u64, tick: u64) -> TraceEvent {
+        TraceEvent {
+            kind: SpanKind::Execute,
+            tenant,
+            seq,
+            tick,
+            cycles: 7,
+            engine: "placed",
+            detail: 0,
+        }
+    }
+
+    #[test]
+    fn drain_is_sorted_regardless_of_record_order() {
+        let buf = TraceBuf::new(64);
+        buf.record(ev(3, 2, 9));
+        buf.record(ev(0, 5, 1));
+        buf.record(ev(1, 0, 9));
+        buf.record(ev(0, 4, 1));
+        let evs = buf.drain_sorted();
+        let keys: Vec<_> = evs.iter().map(|e| (e.tick, e.tenant, e.seq)).collect();
+        assert_eq!(keys, vec![(1, 0, 4), (1, 0, 5), (9, 1, 0), (9, 3, 2)]);
+        assert!(buf.is_empty());
+        assert_eq!(buf.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let buf = TraceBuf::new(STRIPES); // one event per stripe
+        buf.record(ev(0, 0, 0));
+        buf.record(ev(0, 1, 1)); // same stripe: evicts seq 0
+        assert_eq!(buf.dropped(), 1);
+        let evs = buf.drain_sorted();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].seq, 1);
+    }
+
+    #[test]
+    fn concurrent_recording_never_loses_under_capacity() {
+        let buf = TraceBuf::new(1 << 12);
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                let buf = &buf;
+                s.spawn(move || {
+                    for i in 0..100 {
+                        buf.record(ev(t, i, i));
+                    }
+                });
+            }
+        });
+        assert_eq!(buf.len(), 400);
+        assert_eq!(buf.dropped(), 0);
+    }
+}

@@ -24,6 +24,7 @@
 //!
 //! No new crates: `Mutex` + `Condvar` + atomics + `thread::scope` only.
 
+use crate::obs::CounterSet;
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -31,6 +32,18 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 type Task<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
+
+/// Counter indices into the executor's [`CounterSet`] family (`par`).
+pub mod metric {
+    /// Tasks executed to completion.
+    pub const EXECUTED: usize = 0;
+    /// Tasks obtained by stealing from another worker's deque.
+    pub const STEALS: usize = 1;
+    /// Total nanoseconds spent inside task bodies, summed over workers.
+    pub const BUSY_NS: usize = 2;
+
+    pub const NAMES: [&str; 3] = ["executed", "steals", "busy_ns"];
+}
 
 /// Cumulative executor counters, snapshotted via [`Executor::stats`].
 ///
@@ -188,9 +201,7 @@ impl<'scope, 'env, T: Send> Submitter<'scope, 'env, T> {
 /// quiesces before the call returns.
 pub struct Executor {
     workers: usize,
-    executed: AtomicU64,
-    steals: AtomicU64,
-    busy_ns: AtomicU64,
+    counters: CounterSet,
 }
 
 impl Executor {
@@ -198,9 +209,7 @@ impl Executor {
     pub fn new(workers: usize) -> Self {
         Executor {
             workers: workers.max(1),
-            executed: AtomicU64::new(0),
-            steals: AtomicU64::new(0),
-            busy_ns: AtomicU64::new(0),
+            counters: CounterSet::new("par", &metric::NAMES),
         }
     }
 
@@ -221,19 +230,26 @@ impl Executor {
         self.workers
     }
 
-    /// Snapshot of cumulative counters across all calls so far.
+    /// Snapshot of cumulative counters across all calls so far —
+    /// a thin view over the `par` registry family.
     pub fn stats(&self) -> ParStats {
         ParStats {
-            executed: self.executed.load(Ordering::Relaxed),
-            steals: self.steals.load(Ordering::Relaxed),
-            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            executed: self.counters.get(metric::EXECUTED),
+            steals: self.counters.get(metric::STEALS),
+            busy_ns: self.counters.get(metric::BUSY_NS),
         }
     }
 
+    /// The underlying registry family, for export alongside the other
+    /// counter families ([`crate::obs::ObsArtifact`]).
+    pub fn counters(&self) -> &CounterSet {
+        &self.counters
+    }
+
     fn absorb(&self, tally: &WorkerTally) {
-        self.executed.fetch_add(tally.executed, Ordering::Relaxed);
-        self.steals.fetch_add(tally.steals, Ordering::Relaxed);
-        self.busy_ns.fetch_add(tally.busy_ns, Ordering::Relaxed);
+        self.counters.add(metric::EXECUTED, tally.executed);
+        self.counters.add(metric::STEALS, tally.steals);
+        self.counters.add(metric::BUSY_NS, tally.busy_ns);
     }
 
     /// Run `f(0..n)` across the pool and return results in index order.
@@ -250,9 +266,9 @@ impl Executor {
             for i in 0..n {
                 let t0 = Instant::now();
                 out.push(f(i));
-                self.busy_ns
-                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                self.executed.fetch_add(1, Ordering::Relaxed);
+                self.counters
+                    .add(metric::BUSY_NS, t0.elapsed().as_nanos() as u64);
+                self.counters.incr(metric::EXECUTED);
             }
             return out;
         }
@@ -409,6 +425,12 @@ mod tests {
         let st = exec.stats();
         assert_eq!(st.executed, 32);
         assert!(st.busy_ns > 0);
+        // The registry view and the snapshot struct agree.
+        let fam = exec.counters().snapshot();
+        assert_eq!(fam.family, "par");
+        assert_eq!(fam.get("executed"), st.executed);
+        assert_eq!(fam.get("steals"), st.steals);
+        assert_eq!(fam.get("busy_ns"), st.busy_ns);
     }
 
     #[test]

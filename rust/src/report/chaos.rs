@@ -7,6 +7,7 @@
 //! re-assert it without re-running.
 
 use crate::fabric::FaultPlan;
+use crate::report::obs::format_event;
 use crate::serve::ChaosOutcome;
 use std::fmt::Write as _;
 
@@ -24,6 +25,11 @@ pub struct ChaosGate {
     /// the fault-free baseline's, and both runs completed the same
     /// request set.
     pub digest_match: bool,
+    /// When `digest_match` is false: the first `(tenant, seq)` — in
+    /// key order — whose digest differs (or exists on one side only),
+    /// so the verdict can dump that request's flight-recorder timeline
+    /// instead of a bare "digests diverged".
+    pub first_divergence: Option<(usize, usize)>,
 }
 
 impl ChaosGate {
@@ -32,11 +38,13 @@ impl ChaosGate {
     pub fn check(plan: &FaultPlan, faulted: &ChaosOutcome, baseline: &ChaosOutcome) -> Self {
         let c = plan.counts();
         let g = &faulted.report.global;
+        let first_divergence = first_divergence(faulted, baseline);
         ChaosGate {
             all_fault_kinds: c.slot >= 1 && c.bus >= 1 && c.outage >= 1,
             zero_lost: faulted.report.tenants.iter().all(|t| t.lost() == 0) && g.lost() == 0,
             accounting_exact: g.completed + g.shed() == g.submitted,
-            digest_match: faulted.output_digests == baseline.output_digests,
+            digest_match: first_divergence.is_none(),
+            first_divergence,
         }
     }
 
@@ -63,10 +71,32 @@ impl ChaosGate {
     }
 }
 
+/// First `(tenant, seq)` — in `BTreeMap` key order — whose output
+/// digest differs between the two runs, or which completed in one run
+/// but not the other. `None` when the maps are identical.
+fn first_divergence(faulted: &ChaosOutcome, baseline: &ChaosOutcome) -> Option<(usize, usize)> {
+    let f = &faulted.output_digests;
+    let b = &baseline.output_digests;
+    // Union of both key sets, sorted, so a request that completed in
+    // only one run still surfaces in true key order.
+    f.keys()
+        .chain(b.keys())
+        .copied()
+        .collect::<std::collections::BTreeSet<(usize, usize)>>()
+        .into_iter()
+        .find(|k| f.get(k) != b.get(k))
+}
+
 /// Serialize the chaos verdict (schema `dataflow-accel-chaos/v1`).
 /// Callers gate on [`ChaosGate::passed`] before writing this to disk;
 /// the serializer itself is total so tests can render failing gates.
-pub fn to_json(gate: &ChaosGate, plan: &FaultPlan, faulted: &ChaosOutcome, seed: u64, quick: bool) -> String {
+pub fn to_json(
+    gate: &ChaosGate,
+    plan: &FaultPlan,
+    faulted: &ChaosOutcome,
+    seed: u64,
+    quick: bool,
+) -> String {
     let counts = plan.counts();
     let g = &faulted.report.global;
     let c = &faulted.chaos;
@@ -119,6 +149,21 @@ pub fn chaos_summary(gate: &ChaosGate, faulted: &ChaosOutcome) -> String {
     for f in gate.failures() {
         writeln!(out, "  gate failure: {f}").unwrap();
     }
+    if let Some((tenant, seq)) = gate.first_divergence {
+        writeln!(
+            out,
+            "  first divergence: tenant {tenant} seq {seq} — flight-recorder tail for \
+             tenant {tenant}:"
+        )
+        .unwrap();
+        let tail = faulted.flight.timeline(tenant as u32);
+        if tail.is_empty() {
+            writeln!(out, "    (flight recorder empty for this tenant)").unwrap();
+        }
+        for ev in &tail {
+            writeln!(out, "    {}", format_event(ev)).unwrap();
+        }
+    }
     out
 }
 
@@ -168,5 +213,34 @@ mod tests {
         assert!(line.contains("diverge"), "{line}");
         let json = to_json(&wrong, &plan, &faulted, 17, true);
         assert!(json.contains("\"passed\": false"));
+    }
+
+    #[test]
+    fn digest_gate_failure_names_the_divergence_and_dumps_its_timeline() {
+        let (plan, mut faulted, baseline) = runs();
+        // Deliberately perturb one output digest: the gate must fail,
+        // name exactly this (tenant, seq), and dump that tenant's
+        // flight-recorder tail.
+        let (&key, &val) = faulted.output_digests.iter().next().unwrap();
+        faulted.output_digests.insert(key, val ^ 0xdead_beef);
+        let gate = ChaosGate::check(&plan, &faulted, &baseline);
+        assert!(!gate.passed());
+        assert!(!gate.digest_match);
+        assert_eq!(gate.first_divergence, Some(key));
+        let line = chaos_summary(&gate, &faulted);
+        assert!(line.contains("FAIL"), "{line}");
+        let (tenant, seq) = key;
+        assert!(
+            line.contains(&format!("first divergence: tenant {tenant} seq {seq}")),
+            "{line}"
+        );
+        // The flight recorder recorded this tenant's run, so the dump
+        // has at least one indented timeline line.
+        assert!(line.lines().any(|l| l.starts_with("    ")), "{line}");
+        // A request missing from one side entirely is also a divergence.
+        faulted.output_digests.remove(&key);
+        let missing = ChaosGate::check(&plan, &faulted, &baseline);
+        assert_eq!(missing.first_divergence, Some(key));
+        assert!(!missing.digest_match);
     }
 }

@@ -1,0 +1,171 @@
+//! Observability tables: top-K hottest nodes, worst stall attributions,
+//! the lattice-demotion ledger, and the single-source histogram bucket
+//! table (rendered from [`Histogram::buckets`], the same rows the JSON
+//! serializer uses, so labels can never drift).
+
+use crate::obs::prof::EngineProfile;
+use crate::obs::trace::{SpanKind, TraceEvent};
+use crate::serve::Histogram;
+use std::fmt::Write as _;
+
+/// Top-`k` nodes by firing count for one engine profile.
+pub fn hottest_nodes_table(label: &str, p: &EngineProfile, k: usize) -> String {
+    let mut out = String::new();
+    writeln!(out, "hottest nodes — {label} ({} total firings)", p.total_firings).unwrap();
+    writeln!(out, "{:>6} {:>12} {:>10}", "node", "firings", "share%").unwrap();
+    for (ni, s) in p.hottest_nodes(k) {
+        if s.firings == 0 {
+            break;
+        }
+        let share = 100.0 * s.firings as f64 / p.total_firings.max(1) as f64;
+        writeln!(out, "{ni:>6} {:>12} {share:>9.1}%", s.firings).unwrap();
+    }
+    out
+}
+
+/// Top-`k` nodes by total stall count, split by attribution cause.
+pub fn stall_table(label: &str, p: &EngineProfile, k: usize) -> String {
+    let mut out = String::new();
+    writeln!(out, "worst stall attributions — {label}").unwrap();
+    writeln!(
+        out,
+        "{:>6} {:>10} {:>14} {:>15} {:>12}",
+        "node", "stalls", "input-starved", "output-blocked", "gate-closed"
+    )
+    .unwrap();
+    for (ni, s) in p.worst_stalls(k) {
+        if s.stall_total() == 0 {
+            break;
+        }
+        writeln!(
+            out,
+            "{ni:>6} {:>10} {:>14} {:>15} {:>12}",
+            s.stall_total(),
+            s.input_starved,
+            s.output_blocked,
+            s.gate_closed
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// The lattice-demotion ledger: every Demote / Migrate / Retry / Evict
+/// event in tick order — what the recovery path actually did.
+pub fn demotion_ledger(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    out.push_str("lattice-demotion ledger\n");
+    let mut any = false;
+    for e in events {
+        if !matches!(
+            e.kind,
+            SpanKind::Demote | SpanKind::Migrate | SpanKind::Retry | SpanKind::Evict
+        ) {
+            continue;
+        }
+        any = true;
+        out.push_str(&format_event(e));
+        out.push('\n');
+    }
+    if !any {
+        out.push_str("  (no demotions, migrations, retries, or evictions)\n");
+    }
+    out
+}
+
+/// One event as a human-readable ledger/timeline line.
+pub fn format_event(e: &TraceEvent) -> String {
+    let tenant = if e.tenant == TraceEvent::NO_TENANT {
+        "-".to_string()
+    } else {
+        e.tenant.to_string()
+    };
+    format!(
+        "  [tick {:>6}] {:<12} tenant={tenant} seq={} engine={} cycles={} detail={}",
+        e.tick,
+        e.kind.name(),
+        e.seq,
+        e.engine,
+        e.cycles,
+        e.detail
+    )
+}
+
+/// Latency-bucket table from [`Histogram::buckets`] — the same rows the
+/// JSON export serializes, unit-tested to agree bound-for-bound.
+pub fn histogram_table(label: &str, h: &Histogram) -> String {
+    let mut out = String::new();
+    writeln!(out, "latency buckets — {label} ({} samples)", h.count()).unwrap();
+    if h.is_empty() {
+        out.push_str("  (empty)\n");
+        return out;
+    }
+    writeln!(out, "{:>20} {:>20} {:>10}", "lo_ns", "hi_ns", "count").unwrap();
+    for (lo, hi, c) in h.buckets() {
+        writeln!(out, "{lo:>20} {hi:>20} {c:>10}").unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::prof::{ProfileLevel, StallCause};
+
+    fn profile() -> EngineProfile {
+        let mut p = EngineProfile::new("token", ProfileLevel::Full, 4, 4);
+        p.fire_n(2, 10);
+        p.fire_n(0, 3);
+        p.stall(1, StallCause::OutputBlocked);
+        p.stall(1, StallCause::InputStarved);
+        p.stall(3, StallCause::GateClosed);
+        p
+    }
+
+    #[test]
+    fn hottest_and_stall_tables_rank_deterministically() {
+        let p = profile();
+        let hot = hottest_nodes_table("tok", &p, 2);
+        let first = hot.lines().nth(2).unwrap();
+        assert!(first.trim_start().starts_with('2'), "{hot}");
+        let stalls = stall_table("tok", &p, 4);
+        let first = stalls.lines().nth(2).unwrap();
+        assert!(first.trim_start().starts_with('1'), "{stalls}");
+    }
+
+    #[test]
+    fn ledger_filters_recovery_events_only() {
+        let mk = |kind| TraceEvent {
+            kind,
+            tenant: 1,
+            seq: 9,
+            tick: 5,
+            cycles: 0,
+            engine: "chaos",
+            detail: 2,
+        };
+        let evs = [mk(SpanKind::Execute), mk(SpanKind::Demote), mk(SpanKind::Retry)];
+        let ledger = demotion_ledger(&evs);
+        assert!(ledger.contains("demote"));
+        assert!(ledger.contains("retry"));
+        assert!(!ledger.contains("execute"));
+        let empty = demotion_ledger(&[mk(SpanKind::Execute)]);
+        assert!(empty.contains("no demotions"));
+    }
+
+    #[test]
+    fn histogram_table_rows_match_buckets_exactly() {
+        let mut h = Histogram::new();
+        for ns in [800u64, 1_200, 1_200, 40_000] {
+            h.record(ns);
+        }
+        let table = histogram_table("global", &h);
+        for (lo, hi, c) in h.buckets() {
+            let row = format!("{lo:>20} {hi:>20} {c:>10}");
+            assert!(table.contains(&row), "missing row {row:?} in:\n{table}");
+        }
+        // Exactly one table row per bucket row (plus 2 header lines).
+        assert_eq!(table.lines().count(), 2 + h.buckets().len());
+        assert!(histogram_table("empty", &Histogram::new()).contains("(empty)"));
+    }
+}

@@ -252,7 +252,17 @@ fn stats_json(out: &mut String, indent: &str, t: &TenantStats) {
     writeln!(out, "{indent}  \"max_ns\": {},", t.latency.max_ns()).unwrap();
     writeln!(out, "{indent}  \"p50_ns\": {},", t.latency.p50_ns()).unwrap();
     writeln!(out, "{indent}  \"p95_ns\": {},", t.latency.p95_ns()).unwrap();
-    writeln!(out, "{indent}  \"p99_ns\": {}", t.latency.p99_ns()).unwrap();
+    writeln!(out, "{indent}  \"p99_ns\": {},", t.latency.p99_ns()).unwrap();
+    // Bucket rows come from Histogram::buckets() — the same single
+    // source the table renderer (report::obs::histogram_table) reads,
+    // so JSON bounds and table labels cannot drift.
+    let buckets: Vec<String> = t
+        .latency
+        .buckets()
+        .iter()
+        .map(|(lo, hi, c)| format!("[{lo}, {hi}, {c}]"))
+        .collect();
+    writeln!(out, "{indent}  \"buckets\": [{}]", buckets.join(", ")).unwrap();
     writeln!(out, "{indent}}}").unwrap();
 }
 
@@ -382,6 +392,38 @@ mod tests {
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
         assert!(!json.contains("NaN") && !json.contains("inf"));
+    }
+
+    #[test]
+    fn json_bucket_bounds_are_monotone_and_match_the_table_renderer() {
+        // Satellite regression: bucket labels used to risk drifting
+        // between JSON and tables because each side could recompute
+        // them. Both now read Histogram::buckets(); assert the JSON
+        // rows are exactly those rows (monotone, disjoint) and that the
+        // table renderer prints the same bounds.
+        let r = tiny_report();
+        let json = to_json(&r, 11, 2, 3, true, &[]);
+        let rows = r.global.latency.buckets();
+        assert!(!rows.is_empty(), "profile completed requests");
+        let expected: Vec<String> = rows
+            .iter()
+            .map(|(lo, hi, c)| format!("[{lo}, {hi}, {c}]"))
+            .collect();
+        let expected = format!("\"buckets\": [{}]", expected.join(", "));
+        assert!(json.contains(&expected), "global buckets drifted:\n{json}");
+        let mut prev_hi = None;
+        for &(lo, hi, _) in &rows {
+            assert!(lo <= hi);
+            if let Some(p) = prev_hi {
+                assert!(lo > p, "bucket [{lo}, {hi}] not monotone after {p}");
+            }
+            prev_hi = Some(hi);
+        }
+        let table = crate::report::obs::histogram_table("global", &r.global.latency);
+        for &(lo, hi, c) in &rows {
+            let row = format!("{lo:>20} {hi:>20} {c:>10}");
+            assert!(table.contains(&row), "table missing {row:?}:\n{table}");
+        }
     }
 
     #[test]

@@ -50,16 +50,18 @@ use super::sched::{
     verify_outcomes, BatchResult, DispatchRec, EngineChoice, ExecutedBatch, Pending, ServeOptions,
 };
 use super::session::{route_graph, RoutePlan, SessionCache};
-use super::stats::{ChaosStats, ServeCollector, ServeReport};
+use super::stats::{chaos_metric, ChaosStats, ServeCollector, ServeReport};
 use crate::coordinator::batch::{
     run_batch_lanes_prog, run_batch_native, run_batch_reconfig, run_batch_sharded,
 };
 use crate::dfg::Graph;
 use crate::fabric::{FabricHealth, FabricPool, FaultKind, FaultPlan};
+use crate::obs::{CounterSet, FlightRecorder, SpanKind, TraceBuf, TraceEvent};
 use crate::opt::OptLevel;
 use crate::sim::stream::run_stream_prevalidated;
 use crate::sim::{SimOutcome, StreamCheckpoint, StreamSession, WaveInput, WaveMode};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Virtual-tick backoff schedule for a batch that finds the whole pool
@@ -88,6 +90,47 @@ pub struct ChaosOutcome {
     /// Fault and recovery counters (also embedded in
     /// `report.chaos`).
     pub chaos: ChaosStats,
+    /// The chaos run's full event stream in the canonical trace order
+    /// (virtual ticks only) — the chaos path always records, because a
+    /// chaos run's whole point is a reconstructible timeline.
+    pub events: Vec<TraceEvent>,
+    /// Flight recorder: the last-N per-tenant event tails, so a failed
+    /// digest gate can dump exactly what happened to the diverging
+    /// tenant ([`crate::report::chaos`]).
+    pub flight: FlightRecorder,
+}
+
+/// The chaos runner's observability context, threaded through the
+/// fault layer in place of the old bare `&mut ChaosStats`: the
+/// `"chaos"` counter family ([`chaos_metric`]), an internal event
+/// buffer, the per-tenant flight recorder, and an optional external
+/// sink mirror ([`ServeOptions::trace`]).
+struct ChaosRt {
+    counters: CounterSet,
+    buf: TraceBuf,
+    flight: FlightRecorder,
+    external: Option<Arc<TraceBuf>>,
+}
+
+impl ChaosRt {
+    fn new(n_tenants: usize, external: Option<Arc<TraceBuf>>) -> Self {
+        ChaosRt {
+            counters: CounterSet::new("chaos", &chaos_metric::NAMES),
+            buf: TraceBuf::new(TraceBuf::DEFAULT_CAPACITY),
+            flight: FlightRecorder::new(n_tenants, FlightRecorder::DEFAULT_TAIL),
+            external,
+        }
+    }
+
+    /// Record one event everywhere it is wanted: the run's own buffer,
+    /// the tenant's flight-recorder tail, and any external sink.
+    fn event(&mut self, ev: TraceEvent) {
+        self.buf.record(ev);
+        self.flight.record(ev);
+        if let Some(tr) = &self.external {
+            tr.record(ev);
+        }
+    }
 }
 
 /// Run `profile` to completion while replaying `plan` against the
@@ -114,29 +157,74 @@ pub fn run_profile_chaos(
     );
     let pool = FabricPool::new(opts.topo.clone(), opts.pool_size);
     let mut health: Vec<FabricHealth> = (0..pool.size()).map(|_| FabricHealth::default()).collect();
-    let mut chaos = ChaosStats::default();
+    let mut rt = ChaosRt::new(profile.tenants.len(), opts.trace.clone());
     let mut next_event = 0usize;
     let names: Vec<String> = profile.tenants.iter().map(|t| t.name.clone()).collect();
     let mut collector = ServeCollector::new(&names);
     let mut executed: Vec<ExecutedBatch> = Vec::new();
     let (ticks, dispatches) =
         drive_profile(profile, &opts.cfg, &mut collector, |tick, tenant, batch| {
-            apply_due_events(plan, tick, &mut next_event, &pool, &cache, &mut health, &mut chaos);
+            apply_due_events(plan, tick, &mut next_event, &pool, &cache, &mut health, &mut rt);
+            for p in &batch {
+                rt.event(TraceEvent {
+                    kind: SpanKind::Admit,
+                    tenant: tenant as u32,
+                    seq: p.req.seq as u64,
+                    tick: p.admitted_tick,
+                    cycles: 0,
+                    engine: "sched",
+                    detail: 0,
+                });
+                rt.event(TraceEvent {
+                    kind: SpanKind::BatchForm,
+                    tenant: tenant as u32,
+                    seq: p.req.seq as u64,
+                    tick,
+                    cycles: 0,
+                    engine: "sched",
+                    detail: batch.len() as u64,
+                });
+            }
             executed.push(exec_one_chaos(
-                &cache, &pool, &health, plan, tick, tenant, &batch, &mut chaos,
+                &cache, &pool, &health, plan, tick, tenant, &batch, &mut rt,
             ));
         });
     // Late events (after the last dispatch) still count as injected —
     // the seeded plan's guarantees are about the plan, not about how
     // fast the profile drained.
-    apply_due_events(plan, u64::MAX, &mut next_event, &pool, &cache, &mut health, &mut chaos);
+    apply_due_events(plan, u64::MAX, &mut next_event, &pool, &cache, &mut health, &mut rt);
     // Record phase: identical bookkeeping to `run_profile`, plus the
     // outputs-only digest map the gate compares.
     let mut digests = BTreeMap::new();
     let mut output_digests = BTreeMap::new();
     let mut busy_ns = 0u64;
     let mut tokens_out = 0u64;
+    let mut seen_hints: BTreeSet<&str> = BTreeSet::new();
     for eb in &executed {
+        let (seq0, _, _) = eb.items[0];
+        let cold = seen_hints.insert(eb.hint.as_str());
+        rt.event(TraceEvent {
+            kind: SpanKind::RouteSelect,
+            tenant: eb.tenant as u32,
+            seq: seq0 as u64,
+            tick: eb.tick,
+            cycles: 0,
+            engine: eb.result.engine,
+            detail: eb.items.len() as u64,
+        });
+        if cold {
+            for kind in [SpanKind::Place, SpanKind::Compile] {
+                rt.event(TraceEvent {
+                    kind,
+                    tenant: eb.tenant as u32,
+                    seq: seq0 as u64,
+                    tick: eb.tick,
+                    cycles: 0,
+                    engine: eb.result.engine,
+                    detail: 0,
+                });
+            }
+        }
         busy_ns += eb.exec_ns;
         collector.batch(eb.tenant, eb.result.engine, eb.items.len());
         collector.lane_scalar_reruns(eb.result.lane_scalar_reruns);
@@ -147,13 +235,24 @@ pub fn run_profile_chaos(
             .zip(&eb.result.verified)
         {
             let (seq, wait, latency) = *item;
+            rt.event(TraceEvent {
+                kind: SpanKind::Execute,
+                tenant: eb.tenant as u32,
+                seq: seq as u64,
+                tick: eb.tick,
+                cycles: out.cycles,
+                engine: eb.result.engine,
+                detail: 0,
+            });
             collector.completed(eb.tenant, *verified, latency, wait, out.cycles);
             tokens_out += out.outputs.values().map(|s| s.len() as u64).sum::<u64>();
             digests.insert((eb.tenant, seq), outcome_digest(out));
             output_digests.insert((eb.tenant, seq), output_digest(out));
         }
     }
-    chaos.route_invalidations = cache.invalidations();
+    rt.counters
+        .add(chaos_metric::ROUTE_INVALIDATIONS, cache.invalidations());
+    let chaos = ChaosStats::from_counters(&rt.counters);
     let mut report = collector.finish(&cache, ticks);
     report.workers = 1;
     report.wall_ns = wall0.elapsed().as_nanos() as u64;
@@ -166,6 +265,8 @@ pub fn run_profile_chaos(
         digests,
         output_digests,
         chaos,
+        events: rt.buf.drain_sorted(),
+        flight: rt.flight,
     }
 }
 
@@ -180,18 +281,19 @@ fn apply_due_events(
     pool: &FabricPool,
     cache: &SessionCache,
     health: &mut [FabricHealth],
-    chaos: &mut ChaosStats,
+    rt: &mut ChaosRt,
 ) {
     let events = plan.events();
     while *next < events.len() && events[*next].tick <= tick {
         let ev = events[*next];
         *next += 1;
-        match ev.kind {
-            FaultKind::SlotFail { .. } => chaos.slot_faults += 1,
-            FaultKind::BusFail { .. } => chaos.bus_faults += 1,
-            FaultKind::Outage => chaos.outages += 1,
-            FaultKind::Repair => chaos.repairs += 1,
-        }
+        let idx = match ev.kind {
+            FaultKind::SlotFail { .. } => chaos_metric::SLOT_FAULTS,
+            FaultKind::BusFail { .. } => chaos_metric::BUS_FAULTS,
+            FaultKind::Outage => chaos_metric::OUTAGES,
+            FaultKind::Repair => chaos_metric::REPAIRS,
+        };
+        rt.counters.incr(idx);
         if let Some(h) = health.get_mut(ev.instance) {
             h.apply(ev.kind);
             pool.set_down(ev.instance, h.down);
@@ -200,6 +302,17 @@ fn apply_due_events(
             // purge is wholesale (re-warming is cheap next to a wrong
             // answer).
             cache.invalidate_routes();
+            // Tenant-less pool-level instant: warm routes evicted
+            // because instance `detail` changed shape at `ev.tick`.
+            rt.event(TraceEvent {
+                kind: SpanKind::Evict,
+                tenant: TraceEvent::NO_TENANT,
+                seq: 0,
+                tick: ev.tick,
+                cycles: 0,
+                engine: "chaos",
+                detail: ev.instance as u64,
+            });
         }
     }
 }
@@ -217,11 +330,11 @@ fn exec_one_chaos(
     tick: u64,
     tenant: usize,
     batch: &[Pending],
-    chaos: &mut ChaosStats,
+    rt: &mut ChaosRt,
 ) -> ExecutedBatch {
     let reqs: Vec<ServeRequest> = batch.iter().map(|p| p.req.clone()).collect();
     let t0 = Instant::now();
-    let (result, extra_wait) = execute_batch_chaos(cache, pool, health, plan, tick, &reqs, chaos);
+    let (result, extra_wait) = execute_batch_chaos(cache, pool, health, plan, tick, &reqs, rt);
     let exec_ns = t0.elapsed().as_nanos() as u64;
     let items = batch
         .iter()
@@ -235,6 +348,8 @@ fn exec_one_chaos(
         .collect();
     ExecutedBatch {
         tenant,
+        tick,
+        hint: batch[0].hint.clone(),
         result,
         items,
         exec_ns,
@@ -253,10 +368,11 @@ fn execute_batch_chaos(
     plan: &FaultPlan,
     tick: u64,
     reqs: &[ServeRequest],
-    chaos: &mut ChaosStats,
+    rt: &mut ChaosRt,
 ) -> (BatchResult, u64) {
     assert!(!reqs.is_empty(), "empty batch");
     let hint = reqs[0].cache_hint();
+    let (tenant, seq0) = (reqs[0].tenant as u32, reqs[0].seq as u64);
     let (state, cache_hit) = cache.warm_keyed(&hint, || loadgen::build_graph(&reqs[0]));
     let items: Vec<WorkItem> = reqs.iter().map(loadgen::work_item).collect();
     let cfgs = batch_configs(&items);
@@ -272,7 +388,16 @@ fn execute_batch_chaos(
         None => {
             let mut found = None;
             for delta in RETRY_BACKOFF {
-                chaos.retries += 1;
+                rt.counters.incr(chaos_metric::RETRIES);
+                rt.event(TraceEvent {
+                    kind: SpanKind::Retry,
+                    tenant,
+                    seq: seq0,
+                    tick,
+                    cycles: 0,
+                    engine: "chaos",
+                    detail: delta,
+                });
                 if let Some(i) = (0..pool.size()).find(|&i| plan.healthy_at(tick + delta, i)) {
                     extra_wait = delta;
                     found = Some((i, FabricHealth::default()));
@@ -287,7 +412,16 @@ fn execute_batch_chaos(
     // complete — the zero-lost invariant outranks placement — so it
     // demotes to the lattice's bottom: the infinite-fabric engine.
     let Some((instance, inst_health)) = routed else {
-        chaos.demotions += 1;
+        rt.counters.incr(chaos_metric::DEMOTIONS);
+        rt.event(TraceEvent {
+            kind: SpanKind::Demote,
+            tenant,
+            seq: seq0,
+            tick,
+            cycles: 0,
+            engine: EngineChoice::Fallback.name(),
+            detail: 0,
+        });
         let outcomes = run_batch_native(g, &cfgs);
         let verified = verify_outcomes(g, &items, &cfgs, &outcomes);
         return (
@@ -310,7 +444,16 @@ fn execute_batch_chaos(
         let eff = inst_health.effective(pool.topology());
         let re = route_graph(g, &eff, pool.healthy_count().max(1));
         if re.name() != state.route.name() {
-            chaos.demotions += 1;
+            rt.counters.incr(chaos_metric::DEMOTIONS);
+            rt.event(TraceEvent {
+                kind: SpanKind::Demote,
+                tenant,
+                seq: seq0,
+                tick,
+                cycles: 0,
+                engine: re.name(),
+                detail: 1,
+            });
         }
         re
     } else {
@@ -336,7 +479,16 @@ fn execute_batch_chaos(
                     && e.tick <= horizon
             });
             if doomed {
-                run_streamed_migrated(g, &waves, budget, chaos)
+                rt.event(TraceEvent {
+                    kind: SpanKind::Migrate,
+                    tenant,
+                    seq: seq0,
+                    tick,
+                    cycles: 0,
+                    engine: "stream",
+                    detail: instance as u64,
+                });
+                run_streamed_migrated(g, &waves, budget, rt)
             } else {
                 run_stream_prevalidated(g, &waves, budget, WaveMode::Pipelined).0
             }
@@ -378,9 +530,9 @@ fn run_streamed_migrated(
     g: &Graph,
     waves: &[WaveInput],
     budget: u64,
-    chaos: &mut ChaosStats,
+    rt: &mut ChaosRt,
 ) -> Vec<SimOutcome> {
-    chaos.migrations += 1;
+    rt.counters.incr(chaos_metric::MIGRATIONS);
     // Admission mirrors `run_stream_prevalidated`: pipelined first,
     // and any wave the pipelined policy rejects demotes the whole
     // batch to a fresh serialized session (mixed admission would
@@ -402,7 +554,10 @@ fn run_streamed_migrated(
     let image = session.snapshot().to_bytes();
     drop(session); // the instance is gone; only the image survives
     let ck = StreamCheckpoint::from_bytes(&image).expect("self-produced checkpoint image decodes");
-    chaos.rescued_waves += ck.waves.iter().filter(|w| w.done.is_none()).count() as u64;
+    rt.counters.add(
+        chaos_metric::RESCUED_WAVES,
+        ck.waves.iter().filter(|w| w.done.is_none()).count() as u64,
+    );
     let mut resumed =
         StreamSession::restore(g, &ck).expect("checkpoint restores onto the same graph content");
     resumed.run(budget);
@@ -499,6 +654,20 @@ mod tests {
             "{:?}",
             faulted.report.global.engine_requests
         );
+        // The chaos run records its own timeline: the migration and the
+        // route eviction show up as events, and the tenant's
+        // flight-recorder tail holds the migration for gate dumps.
+        assert!(faulted.events.iter().any(|e| e.kind == SpanKind::Migrate));
+        assert!(faulted.events.iter().any(|e| e.kind == SpanKind::Evict));
+        let tl = faulted.flight.timeline(0);
+        assert!(tl.iter().any(|e| e.kind == SpanKind::Migrate), "{tl:?}");
+        assert!(tl.iter().any(|e| e.kind == SpanKind::Execute), "{tl:?}");
+        // The fault-free baseline records lifecycle events only.
+        assert!(base.events.iter().all(|e| !matches!(
+            e.kind,
+            SpanKind::Migrate | SpanKind::Retry | SpanKind::Demote | SpanKind::Evict
+        )));
+        assert!(!base.events.is_empty());
     }
 
     #[test]

@@ -70,4 +70,6 @@ pub use sched::{
     ServeCfg, ServeOptions,
 };
 pub use session::{route_graph, RoutePlan, SessionCache, WarmState, DEFAULT_STRIPES};
-pub use stats::{ChaosStats, Histogram, ServeCollector, ServeReport, ShedReason, TenantStats};
+pub use stats::{
+    chaos_metric, ChaosStats, Histogram, ServeCollector, ServeReport, ShedReason, TenantStats,
+};

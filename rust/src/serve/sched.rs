@@ -44,12 +44,14 @@ use crate::coordinator::batch::{
 };
 use crate::dfg::Graph;
 use crate::fabric::FabricTopology;
+use crate::obs::{SpanKind, TraceBuf, TraceEvent};
 use crate::opt::OptLevel;
 use crate::par::Executor;
 use crate::sim::stream::run_stream_prevalidated;
 use crate::sim::{run_token, SimConfig, SimOutcome, WaveInput, WaveMode};
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::fmt;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Scheduler knobs.
@@ -429,6 +431,13 @@ pub struct ServeOptions {
     /// at every worker count (DESIGN.md §10).
     pub workers: usize,
     pub cfg: ServeCfg,
+    /// Optional event sink ([`crate::obs::trace`]). When set,
+    /// [`run_profile`] records the request lifecycle — Admit,
+    /// BatchForm, RouteSelect, Place/Compile (cold path), Execute —
+    /// timestamped in virtual ticks and engine cycles only, so the
+    /// drained event stream is byte-identical at every worker count
+    /// (the `obs_determinism_*` conformance properties).
+    pub trace: Option<Arc<TraceBuf>>,
 }
 
 impl Default for ServeOptions {
@@ -443,6 +452,7 @@ impl Default for ServeOptions {
             cache_stripes: DEFAULT_STRIPES,
             workers: 1,
             cfg: ServeCfg::default(),
+            trace: None,
         }
     }
 }
@@ -519,6 +529,12 @@ pub fn output_digest(out: &SimOutcome) -> u64 {
 /// post-loop record phase needs (no scheduler state).
 pub(crate) struct ExecutedBatch {
     pub(crate) tenant: usize,
+    /// Dispatch tick (virtual time) — the trace timestamp for the
+    /// batch's RouteSelect/Execute events.
+    pub(crate) tick: u64,
+    /// The batch's shared cache hint, for cold-path (Place/Compile)
+    /// event attribution in dispatch order.
+    pub(crate) hint: String,
     pub(crate) result: BatchResult,
     /// Per item: (request seq, wait ticks at dispatch, wall latency in
     /// nanoseconds measured when execution finished).
@@ -550,9 +566,39 @@ pub(crate) fn exec_one(
         .collect();
     ExecutedBatch {
         tenant,
+        tick,
+        hint: batch[0].hint.clone(),
         result,
         items,
         exec_ns,
+    }
+}
+
+/// Record the scheduling half of a batch's lifecycle: one Admit per
+/// member (at its admission tick) and one BatchForm per member (at the
+/// dispatch tick, detail = batch size). Runs on the tick-loop thread
+/// in dispatch order in both serve modes, and writes virtual time
+/// only — never wall clock.
+fn trace_dispatch(trace: &TraceBuf, tick: u64, tenant: usize, batch: &[Pending]) {
+    for p in batch {
+        trace.record(TraceEvent {
+            kind: SpanKind::Admit,
+            tenant: tenant as u32,
+            seq: p.req.seq as u64,
+            tick: p.admitted_tick,
+            cycles: 0,
+            engine: "sched",
+            detail: 0,
+        });
+        trace.record(TraceEvent {
+            kind: SpanKind::BatchForm,
+            tenant: tenant as u32,
+            seq: p.req.seq as u64,
+            tick,
+            cycles: 0,
+            engine: "sched",
+            detail: batch.len() as u64,
+        });
     }
 }
 
@@ -650,6 +696,9 @@ pub fn run_profile(profile: &LoadProfile, opts: &ServeOptions) -> ProfileOutcome
         let mut executed = Vec::new();
         let (ticks, dispatches) =
             drive_profile(profile, &opts.cfg, &mut collector, |tick, tenant, batch| {
+                if let Some(tr) = &opts.trace {
+                    trace_dispatch(tr, tick, tenant, &batch);
+                }
                 executed.push(exec_one(&cache, tick, tenant, &batch));
             });
         (ticks, dispatches, executed)
@@ -657,6 +706,9 @@ pub fn run_profile(profile: &LoadProfile, opts: &ServeOptions) -> ProfileOutcome
         let cache_ref = &cache;
         let ((ticks, dispatches), executed) = exec.pipeline(|sub| {
             drive_profile(profile, &opts.cfg, &mut collector, |tick, tenant, batch| {
+                if let Some(tr) = &opts.trace {
+                    trace_dispatch(tr, tick, tenant, &batch);
+                }
                 sub.submit(move || exec_one(cache_ref, tick, tenant, &batch));
             })
         });
@@ -667,7 +719,50 @@ pub fn run_profile(profile: &LoadProfile, opts: &ServeOptions) -> ProfileOutcome
     let mut digests = BTreeMap::new();
     let mut busy_ns = 0u64;
     let mut tokens_out = 0u64;
+    let mut seen_hints: BTreeSet<&str> = BTreeSet::new();
     for eb in &executed {
+        if let Some(tr) = &opts.trace {
+            // The executor returns batches in submission (= dispatch)
+            // order, so cold-path attribution — the FIRST batch over a
+            // graph pays Place + Compile — is deterministic. Keying on
+            // the cache-hit flag instead would race under workers > 1.
+            let (seq0, _, _) = eb.items[0];
+            let cold = seen_hints.insert(eb.hint.as_str());
+            tr.record(TraceEvent {
+                kind: SpanKind::RouteSelect,
+                tenant: eb.tenant as u32,
+                seq: seq0 as u64,
+                tick: eb.tick,
+                cycles: 0,
+                engine: eb.result.engine,
+                detail: eb.items.len() as u64,
+            });
+            if cold {
+                for kind in [SpanKind::Place, SpanKind::Compile] {
+                    tr.record(TraceEvent {
+                        kind,
+                        tenant: eb.tenant as u32,
+                        seq: seq0 as u64,
+                        tick: eb.tick,
+                        cycles: 0,
+                        engine: eb.result.engine,
+                        detail: 0,
+                    });
+                }
+            }
+            for (item, out) in eb.items.iter().zip(&eb.result.outcomes) {
+                let (seq, _, _) = *item;
+                tr.record(TraceEvent {
+                    kind: SpanKind::Execute,
+                    tenant: eb.tenant as u32,
+                    seq: seq as u64,
+                    tick: eb.tick,
+                    cycles: out.cycles,
+                    engine: eb.result.engine,
+                    detail: 0,
+                });
+            }
+        }
         busy_ns += eb.exec_ns;
         collector.batch(eb.tenant, eb.result.engine, eb.items.len());
         collector.lane_scalar_reruns(eb.result.lane_scalar_reruns);
@@ -861,5 +956,42 @@ mod tests {
             );
         }
         assert!(cache.misses() > 0);
+    }
+
+    #[test]
+    fn traced_runs_emit_identical_events_across_worker_counts() {
+        let profile = loadgen::standard_profile(1, 3, 7);
+        let plain = run_profile(&profile, &ServeOptions::default());
+        let mut streams = Vec::new();
+        for workers in [1usize, 2] {
+            let trace = Arc::new(TraceBuf::new(TraceBuf::DEFAULT_CAPACITY));
+            let opts = ServeOptions {
+                workers,
+                trace: Some(Arc::clone(&trace)),
+                ..ServeOptions::default()
+            };
+            let out = run_profile(&profile, &opts);
+            // Tracing is an observer: per-request results are the same
+            // maps the untraced run produced.
+            assert_eq!(out.digests, plain.digests, "workers={workers}");
+            let evs = trace.drain_sorted();
+            assert!(!evs.is_empty());
+            for kind in [
+                SpanKind::Admit,
+                SpanKind::BatchForm,
+                SpanKind::RouteSelect,
+                SpanKind::Place,
+                SpanKind::Compile,
+                SpanKind::Execute,
+            ] {
+                assert!(
+                    evs.iter().any(|e| e.kind == kind),
+                    "missing {kind:?} (workers={workers})"
+                );
+            }
+            streams.push(crate::obs::events_json(&evs));
+        }
+        // The virtual-tick view is byte-identical across worker counts.
+        assert_eq!(streams[0], streams[1]);
     }
 }

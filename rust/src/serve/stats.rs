@@ -134,6 +134,26 @@ impl Histogram {
         self.quantile_ns(0.99)
     }
 
+    /// Non-empty buckets as `(lo_ns, hi_ns, count)` rows, ascending.
+    ///
+    /// This is the **single source of bucket labels**: both the JSON
+    /// serializer and the table renderer consume these rows, so bounds can
+    /// never drift between the two (they used to be recomputed ad hoc).
+    /// Bounds come from the same [`bucket_hi`] table [`Histogram::record`]
+    /// buckets with; `lo` is the previous bound + 1 (0 for the first).
+    pub fn buckets(&self) -> Vec<(u64, u64, u64)> {
+        let mut rows = Vec::new();
+        let mut lo = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let hi = bucket_hi(i);
+            if c > 0 {
+                rows.push((lo, hi, c));
+            }
+            lo = hi.saturating_add(1);
+        }
+        rows
+    }
+
     /// Fold `other` into `self` (used to build the global view).
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
@@ -174,10 +194,53 @@ pub struct ChaosStats {
     pub route_invalidations: u64,
 }
 
+/// Counter indices for the chaos family's [`crate::obs::CounterSet`]
+/// (`obs::registry`) — the chaos path increments these, and
+/// [`ChaosStats::from_counters`] builds the public report view.
+pub mod chaos_metric {
+    pub const SLOT_FAULTS: usize = 0;
+    pub const BUS_FAULTS: usize = 1;
+    pub const OUTAGES: usize = 2;
+    pub const REPAIRS: usize = 3;
+    pub const MIGRATIONS: usize = 4;
+    pub const RESCUED_WAVES: usize = 5;
+    pub const RETRIES: usize = 6;
+    pub const DEMOTIONS: usize = 7;
+    pub const ROUTE_INVALIDATIONS: usize = 8;
+
+    pub const NAMES: [&str; 9] = [
+        "slot_faults",
+        "bus_faults",
+        "outages",
+        "repairs",
+        "migrations",
+        "rescued_waves",
+        "retries",
+        "demotions",
+        "route_invalidations",
+    ];
+}
+
 impl ChaosStats {
     /// Fault events injected (repairs are recovery, not faults).
     pub fn faults_injected(&self) -> u64 {
         self.slot_faults + self.bus_faults + self.outages
+    }
+
+    /// Thin view over a `"chaos"` [`crate::obs::CounterSet`] indexed by
+    /// [`chaos_metric`].
+    pub fn from_counters(c: &crate::obs::CounterSet) -> ChaosStats {
+        ChaosStats {
+            slot_faults: c.get(chaos_metric::SLOT_FAULTS),
+            bus_faults: c.get(chaos_metric::BUS_FAULTS),
+            outages: c.get(chaos_metric::OUTAGES),
+            repairs: c.get(chaos_metric::REPAIRS),
+            migrations: c.get(chaos_metric::MIGRATIONS),
+            rescued_waves: c.get(chaos_metric::RESCUED_WAVES),
+            retries: c.get(chaos_metric::RETRIES),
+            demotions: c.get(chaos_metric::DEMOTIONS),
+            route_invalidations: c.get(chaos_metric::ROUTE_INVALIDATIONS),
+        }
     }
 }
 
@@ -511,6 +574,52 @@ mod tests {
         nonempty.merge(&Histogram::new());
         assert_eq!(nonempty.min_ns(), 1);
         assert_eq!(nonempty.p99_ns(), 1);
+    }
+
+    #[test]
+    fn bucket_rows_are_monotone_disjoint_and_complete() {
+        let mut h = Histogram::new();
+        for ns in [500u64, 900, 1_200, 5_000, 5_100, 2_000_000, u64::MAX / 2] {
+            h.record(ns);
+        }
+        let rows = h.buckets();
+        assert!(!rows.is_empty());
+        // Bounds ascend, ranges never overlap, every sample is counted.
+        let mut prev_hi = None;
+        let mut total = 0u64;
+        for &(lo, hi, c) in &rows {
+            assert!(lo <= hi, "bucket [{lo}, {hi}]");
+            assert!(c > 0, "buckets() must skip empty buckets");
+            if let Some(p) = prev_hi {
+                assert!(lo > p, "bucket [{lo}, {hi}] overlaps previous hi {p}");
+            }
+            prev_hi = Some(hi);
+            total += c;
+        }
+        assert_eq!(total, h.count());
+        // Rows come straight from the bucket_hi table record() used.
+        for &(_, hi, _) in &rows {
+            assert!((0..BUCKETS).any(|i| bucket_hi(i) == hi), "hi {hi}");
+        }
+        assert!(Histogram::new().buckets().is_empty());
+    }
+
+    #[test]
+    fn chaos_stats_is_a_view_over_the_chaos_counter_family() {
+        let c = crate::obs::CounterSet::new("chaos", &chaos_metric::NAMES);
+        c.add(chaos_metric::SLOT_FAULTS, 2);
+        c.incr(chaos_metric::MIGRATIONS);
+        c.add(chaos_metric::RETRIES, 5);
+        let s = ChaosStats::from_counters(&c);
+        assert_eq!(s.slot_faults, 2);
+        assert_eq!(s.migrations, 1);
+        assert_eq!(s.retries, 5);
+        assert_eq!(s.bus_faults, 0);
+        assert_eq!(s.faults_injected(), 2);
+        // Index constants and export names stay aligned.
+        let last = chaos_metric::NAMES[chaos_metric::ROUTE_INVALIDATIONS];
+        assert_eq!(last, "route_invalidations");
+        assert_eq!(c.snapshot().get("retries"), 5);
     }
 
     #[test]

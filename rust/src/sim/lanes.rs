@@ -53,6 +53,7 @@
 use super::compiled::{CNode, ExecUnit, FusedSrc, Program};
 use super::{SimConfig, SimOutcome};
 use crate::dfg::{Op, OpClass, Word};
+use crate::obs::{EngineProfile, ProfileLevel};
 use std::collections::{BTreeMap, VecDeque};
 
 /// Lanes per occupancy-mask word: one `u64` worth.
@@ -107,6 +108,9 @@ pub struct LaneSim<'p> {
     firings: u64,
     passes: u64,
     max_cycles: u64,
+    /// `None` unless profiling was enabled — the hot path pays one
+    /// pointer-null branch per fired node when off, nothing more.
+    prof: Option<Box<EngineProfile>>,
 }
 
 impl<'p> LaneSim<'p> {
@@ -163,7 +167,28 @@ impl<'p> LaneSim<'p> {
             // No lanes → no budget: `run` exits immediately. (This used
             // to be `.max().unwrap()`, panicking on empty batches.)
             max_cycles: cfgs.iter().map(|c| c.max_cycles).max().unwrap_or(0),
+            prof: None,
         }
+    }
+
+    /// Allocate profiling state at `level`. [`ProfileLevel::Off`]
+    /// deallocates instead, restoring the zero-cost path.
+    pub fn enable_profiling(&mut self, level: ProfileLevel) {
+        if level == ProfileLevel::Off {
+            self.prof = None;
+        } else {
+            self.prof = Some(Box::new(EngineProfile::new(
+                "lanes",
+                level,
+                self.p.n_nodes(),
+                self.p.n_arcs,
+            )));
+        }
+    }
+
+    /// Harvest the profile (if any), leaving the sim unprofiled.
+    pub fn take_profile(&mut self) -> Option<EngineProfile> {
+        self.prof.take().map(|p| *p)
     }
 
     /// One synchronous pass over all lanes. Returns total progress
@@ -237,6 +262,22 @@ impl<'p> LaneSim<'p> {
 
         self.firings += fired;
         self.passes += 1;
+        if let Some(prof) = self.prof.as_deref_mut() {
+            prof.cycles += 1;
+            if prof.level >= ProfileLevel::Full {
+                // Occupancy integral: tokens parked on each arc at the
+                // end of this pass, summed over active lanes.
+                for a in 0..self.p.n_arcs {
+                    let mut tokens = 0u64;
+                    for w in 0..words {
+                        tokens += (self.occ[a * words + w] & self.active[w]).count_ones() as u64;
+                    }
+                    if tokens > 0 {
+                        prof.occupy(a, tokens);
+                    }
+                }
+            }
+        }
         progress + fired
     }
 
@@ -523,6 +564,12 @@ impl<'p> LaneSim<'p> {
                 }
             }
         }
+        if fired > 0 {
+            if let Some(prof) = self.prof.as_deref_mut() {
+                prof.fire_n(ni, fired);
+                prof.opcode(cn.op.mnemonic(), fired);
+            }
+        }
         fired
     }
 
@@ -539,6 +586,7 @@ impl<'p> LaneSim<'p> {
         let o = c.out as usize;
         let chain_len = c.nodes.len() as u64;
         let mut fired = 0u64;
+        let mut tokens = 0u64;
         for w in 0..words {
             let so = o * words + w;
             let mut m = self.active[w] & !self.occ[so];
@@ -580,6 +628,18 @@ impl<'p> LaneSim<'p> {
             blend(self.row_mut(so), &cur, m);
             self.emit(so, m);
             fired += self.count_times(w, m, chain_len);
+            tokens += m.count_ones() as u64;
+        }
+        if tokens > 0 {
+            if let Some(prof) = self.prof.as_deref_mut() {
+                // Credit each member node with the token count, under its
+                // own mnemonic, so fused and unfused runs profile alike.
+                for &nid in &c.nodes {
+                    let mi = nid as usize;
+                    prof.fire_n(mi, tokens);
+                    prof.opcode(p.nodes[mi].op.mnemonic(), tokens);
+                }
+            }
         }
         fired
     }
@@ -765,6 +825,28 @@ pub fn run_lanes(p: &Program, cfgs: &[SimConfig]) -> Vec<SimOutcome> {
         outs.extend(sim.into_outcomes());
     }
     outs
+}
+
+/// [`run_lanes`] with profiling at `level`: per-chunk profiles fold into
+/// one via [`EngineProfile::merge`] (cycles = max over chunks, counters
+/// summed), so `total_firings` equals the batch's lane-firing total.
+pub fn run_lanes_profiled(
+    p: &Program,
+    cfgs: &[SimConfig],
+    level: ProfileLevel,
+) -> (Vec<SimOutcome>, EngineProfile) {
+    let mut merged = EngineProfile::new("lanes", level, p.n_nodes(), p.n_arcs);
+    let mut outs = Vec::with_capacity(cfgs.len());
+    for chunk in cfgs.chunks(MAX_LANES) {
+        let mut sim = LaneSim::new(p, chunk);
+        sim.enable_profiling(level);
+        sim.run();
+        if let Some(prof) = sim.take_profile() {
+            merged.merge(&prof);
+        }
+        outs.extend(sim.into_outcomes());
+    }
+    (outs, merged)
 }
 
 #[cfg(test)]
@@ -1021,6 +1103,56 @@ mod tests {
                 assert_eq!(simd, scalar, "op {op:?}, round {round}");
             }
         }
+    }
+
+    #[test]
+    fn profiling_observes_lanes_without_perturbing() {
+        // Profiled and plain runs must agree on every outcome, the
+        // profile's firing total must match the engine's own count, and
+        // opcode density must be identical fused vs unfused (members are
+        // credited under their own mnemonics).
+        let g = crate::bench_defs::saxpy::build();
+        let pf = Program::compile(&g);
+        let pu = Program::compile_unfused(&g);
+        let cfgs: Vec<SimConfig> = (0..70)
+            .map(|i| {
+                let (w, _) = crate::bench_defs::saxpy::wave(6, i as u64);
+                let mut cfg = SimConfig::new();
+                for (port, s) in &w {
+                    cfg = cfg.inject(port, s.clone());
+                }
+                cfg
+            })
+            .collect();
+        let plain = run_lanes(&pf, &cfgs);
+        let (profiled, prof) = run_lanes_profiled(&pf, &cfgs, ProfileLevel::Full);
+        for (i, (a, b)) in plain.iter().zip(&profiled).enumerate() {
+            assert_eq!(a.outputs, b.outputs, "lane {i}");
+            assert_eq!(a.firings, b.firings, "lane {i}");
+            assert_eq!(a.cycles, b.cycles, "lane {i}");
+            assert_eq!(a.quiescent, b.quiescent, "lane {i}");
+        }
+        let total: u64 = plain.iter().map(|o| o.firings).sum();
+        assert_eq!(prof.total_firings, total);
+        assert_eq!(prof.engine, "lanes");
+        assert_eq!(prof.opcode_density.values().sum::<u64>(), total);
+        assert!(prof.arc_occupancy.iter().any(|&o| o > 0));
+        let (_, prof_u) = run_lanes_profiled(&pu, &cfgs, ProfileLevel::Full);
+        assert_eq!(prof.opcode_density, prof_u.opcode_density);
+        assert_eq!(prof.total_firings, prof_u.total_firings);
+    }
+
+    #[test]
+    fn profiling_off_allocates_nothing_on_lanes() {
+        // The satellite-3 structural guarantee: `Off` leaves `prof` as
+        // `None`, so the hot path's only cost is the null branch.
+        let g = adder();
+        let p = Program::compile(&g);
+        let cfgs = vec![SimConfig::new().inject("a", vec![1]).inject("b", vec![2])];
+        let mut sim = LaneSim::new(&p, &cfgs);
+        sim.enable_profiling(ProfileLevel::Off);
+        sim.run();
+        assert!(sim.take_profile().is_none());
     }
 
     #[test]

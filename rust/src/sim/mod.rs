@@ -48,7 +48,7 @@ pub use ckpt::{CheckpointError, StreamCheckpoint, TokenCheckpoint, WaveCkpt};
 pub use compiled::{CNode, ExecUnit, FusedChain, FusedSrc, FusedStep, Program, NO_ARC};
 pub use dynamic::{run_dynamic, DynamicSim};
 pub use fsm::{run_fsm, FsmSim, HandshakeEvent, HandshakeKind};
-pub use lanes::{run_lanes, LaneSim, LANES, MAX_LANES};
+pub use lanes::{run_lanes, run_lanes_profiled, LaneSim, LANES, MAX_LANES};
 pub use stream::{
     overlap_safe, run_stream, run_stream_lanes, run_stream_session, StreamError, StreamMetrics,
     StreamSession, WaveInput, WaveMode,

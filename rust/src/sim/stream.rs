@@ -38,6 +38,7 @@
 use super::ckpt::{CheckpointError, StreamCheckpoint, WaveCkpt};
 use super::SimOutcome;
 use crate::dfg::{ArcId, Graph, Op, Word};
+use crate::obs::{EngineProfile, ProfileLevel, StallCause};
 use std::collections::{BTreeMap, VecDeque};
 
 /// One wave: injection streams per input-port label.
@@ -229,6 +230,10 @@ pub struct StreamSession<'g> {
     /// resumes the countdown instead of restarting it — serialized
     /// flush timing stays byte-identical across migration.
     stall: u32,
+    /// `None` unless profiling was enabled. Deliberately **excluded**
+    /// from [`Self::snapshot`]/[`Self::restore`] so the checkpoint
+    /// byte-identity contract (`ckpt_*` properties) is untouched.
+    prof: Option<Box<EngineProfile>>,
 }
 
 impl<'g> StreamSession<'g> {
@@ -285,11 +290,34 @@ impl<'g> StreamSession<'g> {
             staged: Vec::new(),
             next_done: 0,
             stall: 0,
+            prof: None,
         }
     }
 
     pub fn mode(&self) -> WaveMode {
         self.mode
+    }
+
+    /// Allocate profiling state at `level`. [`ProfileLevel::Off`]
+    /// deallocates instead, restoring the zero-cost path. The profile
+    /// never rides along in checkpoints; a migrated session restarts
+    /// unprofiled unless the new host re-enables it.
+    pub fn enable_profiling(&mut self, level: ProfileLevel) {
+        if level == ProfileLevel::Off {
+            self.prof = None;
+        } else {
+            self.prof = Some(Box::new(EngineProfile::new(
+                "stream",
+                level,
+                self.g.n_nodes(),
+                self.g.n_arcs(),
+            )));
+        }
+    }
+
+    /// Harvest the profile (if any), leaving the session unprofiled.
+    pub fn take_profile(&mut self) -> Option<EngineProfile> {
+        self.prof.take().map(|p| *p)
     }
 
     /// Waves admitted so far.
@@ -469,6 +497,16 @@ impl<'g> StreamSession<'g> {
         for ni in 0..self.g.n_nodes() {
             if self.try_fire(ni, &mut staged) {
                 fired += 1;
+                if let Some(p) = self.prof.as_deref_mut() {
+                    p.fire(ni);
+                }
+            } else if self.prof.is_some() {
+                // Attribution reads the same pre-fire state `try_fire`
+                // just rejected — nothing moved in between.
+                let cause = self.classify_stall(ni);
+                if let Some(p) = self.prof.as_deref_mut() {
+                    p.stall(ni, cause);
+                }
             }
         }
         for &(a, t) in &staged {
@@ -481,6 +519,16 @@ impl<'g> StreamSession<'g> {
         self.firings += fired;
         progress += fired;
         self.rounds += 1;
+        if let Some(p) = self.prof.as_deref_mut() {
+            p.cycles += 1;
+            if p.level >= ProfileLevel::Full {
+                for (i, t) in self.tokens.iter().enumerate() {
+                    if t.is_some() {
+                        p.occupy(i, 1);
+                    }
+                }
+            }
+        }
 
         // Completion sweep: waves finish in admission order.
         while self.next_done < self.waves.len() {
@@ -654,6 +702,85 @@ impl<'g> StreamSession<'g> {
                 self.waves[x.wave as usize].firings += 1;
                 staged.push((out, Tok { v: op.eval2(x.v, y.v), wave: x.wave }));
                 true
+            }
+        }
+    }
+
+    /// Attribute a refused firing attempt of `ni` to exactly one
+    /// [`StallCause`], mirroring [`Self::try_fire`]'s refusal order —
+    /// the first failing precondition is the cause. A wave-tag mismatch
+    /// holding a token back classifies as gate-closed (the tag gate
+    /// doing its job). Read-only: `tag_stalls` is bumped by `try_fire`
+    /// itself, never here.
+    fn classify_stall(&self, ni: usize) -> StallCause {
+        let node = &self.g.nodes[ni];
+        match node.op {
+            Op::Const(_) => {
+                if self.const_pending[ni].is_empty() {
+                    StallCause::GateClosed
+                } else {
+                    StallCause::OutputBlocked
+                }
+            }
+            Op::Copy | Op::Not => {
+                if !self.full(node.ins[0]) {
+                    StallCause::InputStarved
+                } else {
+                    StallCause::OutputBlocked
+                }
+            }
+            Op::NdMerge => {
+                if self.full(node.outs[0]) {
+                    StallCause::OutputBlocked
+                } else {
+                    StallCause::InputStarved
+                }
+            }
+            Op::DMerge => {
+                if self.full(node.outs[0]) {
+                    return StallCause::OutputBlocked;
+                }
+                let ctl = match self.tokens[node.ins[0].0 as usize] {
+                    Some(c) => c,
+                    None => return StallCause::InputStarved,
+                };
+                let sel = if ctl.v != 0 { node.ins[1] } else { node.ins[2] };
+                match self.tokens[sel.0 as usize] {
+                    None => StallCause::InputStarved,
+                    // A same-wave pairing would have fired; the
+                    // surviving case is the tag gate holding it back.
+                    Some(_) => StallCause::GateClosed,
+                }
+            }
+            Op::Branch => {
+                let ctl = match self.tokens[node.ins[0].0 as usize] {
+                    Some(c) => c,
+                    None => return StallCause::InputStarved,
+                };
+                match self.tokens[node.ins[1].0 as usize] {
+                    None => StallCause::InputStarved,
+                    Some(d) if d.wave != ctl.wave => StallCause::GateClosed,
+                    // Same-wave pair in place ⇒ the selected output arc
+                    // must have been full.
+                    Some(_) => StallCause::OutputBlocked,
+                }
+            }
+            Op::Fifo(k) => {
+                if self.full(node.ins[0]) && self.fifos[ni].len() >= k as usize {
+                    StallCause::GateClosed
+                } else if !self.fifos[ni].is_empty() && self.full(node.outs[0]) {
+                    StallCause::OutputBlocked
+                } else {
+                    StallCause::InputStarved
+                }
+            }
+            _ => {
+                let (a, b) = (node.ins[0], node.ins[1]);
+                match (self.tokens[a.0 as usize], self.tokens[b.0 as usize]) {
+                    (Some(x), Some(y)) if x.wave != y.wave => StallCause::GateClosed,
+                    (Some(_), Some(_)) => StallCause::OutputBlocked,
+                    _ => StallCause::InputStarved,
+                }
             }
         }
     }
@@ -1313,6 +1440,51 @@ mod tests {
         }
         assert_eq!(resumed.metrics().rounds, whole.metrics().rounds);
         assert_eq!(resumed.metrics().firings, whole.metrics().firings);
+    }
+
+    #[test]
+    fn profiling_observes_streams_and_stays_out_of_checkpoints() {
+        let g = deep_pipeline();
+        let waves: Vec<WaveInput> = (0..4)
+            .map(|w| {
+                BTreeMap::from([
+                    ("a".to_string(), vec![w as Word, w as Word + 1]),
+                    ("b".to_string(), vec![10, 20]),
+                    ("c".to_string(), vec![3, 3]),
+                ])
+            })
+            .collect();
+        let mut plain = StreamSession::new(&g);
+        let mut profiled = StreamSession::new(&g);
+        profiled.enable_profiling(crate::obs::ProfileLevel::Full);
+        for w in &waves {
+            plain.admit(w).unwrap();
+            profiled.admit(w).unwrap();
+        }
+        for _ in 0..3 {
+            plain.step();
+            profiled.step();
+        }
+        // The profile never leaks into the checkpoint image.
+        assert_eq!(profiled.snapshot().to_bytes(), plain.snapshot().to_bytes());
+        plain.run(100_000);
+        profiled.run(100_000);
+        for w in 0..waves.len() as u32 {
+            assert_eq!(profiled.wave_outputs(w), plain.wave_outputs(w), "wave {w}");
+        }
+        let (pm, m) = (profiled.metrics(), plain.metrics());
+        assert_eq!(pm.rounds, m.rounds);
+        assert_eq!(pm.firings, m.firings);
+        let prof = profiled.take_profile().expect("profile enabled");
+        assert_eq!(prof.engine, "stream");
+        assert_eq!(prof.total_firings, m.firings);
+        assert_eq!(prof.cycles, m.rounds);
+        assert!(prof.arc_occupancy.iter().any(|&o| o > 0));
+        assert!(prof.nodes.iter().any(|n| n.stall_total() > 0));
+        // Off deallocates: the satellite-3 structural guarantee.
+        let mut off = StreamSession::new(&g);
+        off.enable_profiling(crate::obs::ProfileLevel::Off);
+        assert!(off.take_profile().is_none());
     }
 
     #[test]

@@ -10,6 +10,7 @@
 use super::ckpt::{CheckpointError, TokenCheckpoint};
 use super::{SimConfig, SimOutcome};
 use crate::dfg::{ArcId, Graph, Op, OpClass, Word};
+use crate::obs::{EngineProfile, ProfileLevel, StallCause};
 use std::collections::{BTreeMap, VecDeque};
 
 /// An ALU/decider firing extracted from the fabric for external (XLA)
@@ -60,6 +61,12 @@ pub struct TokenSim<'g> {
     marked: Vec<bool>,
     worklist: Vec<u32>,
     scratch_list: Vec<u32>,
+    /// Profiling state (`obs::prof`): `None` unless
+    /// [`TokenSim::enable_profiling`] was called — the hot path pays one
+    /// null check and zero allocations when off. Deliberately excluded
+    /// from [`TokenSim::snapshot`]: checkpoints stay byte-identical
+    /// whether or not a run was profiled.
+    prof: Option<Box<EngineProfile>>,
 }
 
 impl<'g> TokenSim<'g> {
@@ -117,7 +124,29 @@ impl<'g> TokenSim<'g> {
             marked: vec![true; g.n_nodes()],
             worklist: (0..g.n_nodes() as u32).collect(),
             scratch_list: Vec::new(),
+            prof: None,
         }
+    }
+
+    /// Turn on `obs::prof` recording at `level`. [`ProfileLevel::Off`] is
+    /// an explicit no-op (no state allocated — the documented zero-cost
+    /// contract). Counters reset if called again.
+    pub fn enable_profiling(&mut self, level: ProfileLevel) {
+        self.prof = if level == ProfileLevel::Off {
+            None
+        } else {
+            Some(Box::new(EngineProfile::new(
+                "token",
+                level,
+                self.g.n_nodes(),
+                self.g.n_arcs(),
+            )))
+        };
+    }
+
+    /// Harvest the recorded profile (leaves the sim unprofiled).
+    pub fn take_profile(&mut self) -> Option<EngineProfile> {
+        self.prof.take().map(|p| *p)
     }
 
     #[inline]
@@ -353,6 +382,14 @@ impl<'g> TokenSim<'g> {
             }
             if self.try_fire(ni, &mut staged) {
                 fired += 1;
+                if let Some(p) = self.prof.as_deref_mut() {
+                    p.fire(ni);
+                }
+            } else if self.prof.is_some() {
+                let cause = self.classify_stall(ni);
+                if let Some(p) = self.prof.as_deref_mut() {
+                    p.stall(ni, cause);
+                }
             }
         }
         for i in 0..staged.len() {
@@ -370,7 +407,95 @@ impl<'g> TokenSim<'g> {
         self.scratch_list = list;
 
         self.firings += fired;
+        if let Some(p) = self.prof.as_deref_mut() {
+            p.cycles += 1;
+            if p.level >= ProfileLevel::Full {
+                // Per-arc occupancy integral: +1 for every arc holding a
+                // token at the end of the round.
+                for (i, t) in self.tokens.iter().enumerate() {
+                    if t.is_some() {
+                        p.occupy(i, 1);
+                    }
+                }
+            }
+        }
         fired
+    }
+
+    /// Attribute a refused firing attempt of node `ni` to one cause —
+    /// the taxonomy of DESIGN.md §12, mirroring [`TokenSim::try_fire`]'s
+    /// refusal conditions in their check order. Only called while
+    /// profiling, on round-start state.
+    fn classify_stall(&self, ni: usize) -> StallCause {
+        let node = &self.g.nodes[ni];
+        match node.op {
+            Op::Const(_) => {
+                if self.const_done[ni] {
+                    StallCause::GateClosed
+                } else {
+                    StallCause::OutputBlocked
+                }
+            }
+            Op::NdMerge => {
+                if self.full(node.outs[0]) {
+                    StallCause::OutputBlocked
+                } else {
+                    StallCause::InputStarved
+                }
+            }
+            Op::DMerge => {
+                if self.full(node.outs[0]) {
+                    return StallCause::OutputBlocked;
+                }
+                match self.peek(node.ins[0]) {
+                    None => StallCause::InputStarved,
+                    Some(ctl) => {
+                        let sel = if ctl != 0 { node.ins[1] } else { node.ins[2] };
+                        if self.full(sel) {
+                            StallCause::GateClosed
+                        } else {
+                            StallCause::InputStarved
+                        }
+                    }
+                }
+            }
+            Op::Branch => match self.peek(node.ins[0]) {
+                None => StallCause::InputStarved,
+                Some(ctl) => {
+                    if !self.full(node.ins[1]) {
+                        StallCause::InputStarved
+                    } else {
+                        let out = if ctl != 0 { node.outs[0] } else { node.outs[1] };
+                        if self.full(out) {
+                            StallCause::OutputBlocked
+                        } else {
+                            StallCause::GateClosed
+                        }
+                    }
+                }
+            },
+            Op::Fifo(k) => {
+                // Refused ⇒ could neither accept nor emit this round.
+                if self.full(node.ins[0]) && self.fifos[ni].len() >= k as usize {
+                    StallCause::GateClosed // queue at capacity
+                } else if self.full(node.outs[0]) && !self.fifos[ni].is_empty() {
+                    StallCause::OutputBlocked
+                } else {
+                    StallCause::InputStarved
+                }
+            }
+            // copy / not / ALU / decider: every input required, every
+            // output must be free.
+            _ => {
+                if node.ins.iter().any(|&a| !self.full(a)) {
+                    StallCause::InputStarved
+                } else if node.outs.iter().any(|&a| self.full(a)) {
+                    StallCause::OutputBlocked
+                } else {
+                    StallCause::GateClosed
+                }
+            }
+        }
     }
 
     /// Fire node `ni` if enabled; consume inputs now, stage outputs.
@@ -513,6 +638,15 @@ impl<'g> TokenSim<'g> {
 
     /// Run to quiescence or the cycle limit.
     pub fn run(mut self, cfg: &SimConfig) -> SimOutcome {
+        let (cycles, quiescent) = self.run_in_place(cfg);
+        self.into_outcome(cycles, quiescent)
+    }
+
+    /// [`TokenSim::run`] without consuming the sim: returns
+    /// `(cycles, quiescent)` and leaves outputs/firings in place for
+    /// [`TokenSim::into_outcome`]. The profiled path uses this so
+    /// [`TokenSim::take_profile`] can run after the drive loop.
+    pub fn run_in_place(&mut self, cfg: &SimConfig) -> (u64, bool) {
         let mut cycles = 0u64;
         let mut quiescent = false;
         while cycles < cfg.max_cycles {
@@ -528,12 +662,7 @@ impl<'g> TokenSim<'g> {
                 break;
             }
         }
-        SimOutcome {
-            outputs: self.collected,
-            cycles,
-            firings: self.firings,
-            quiescent,
-        }
+        (cycles, quiescent)
     }
 
     /// Current arc occupancy (for invariant checks in tests).
@@ -795,6 +924,49 @@ mod tests {
         let out = sim.run(&cfg);
         assert_eq!(out.stream("z"), &[42]);
         assert!(!out.quiescent, "extra `b` token is stranded");
+    }
+
+    #[test]
+    fn profiling_observes_without_perturbing() {
+        let g = crate::bench_defs::build(crate::bench_defs::BenchId::Fibonacci);
+        let cfg = SimConfig::new().inject("n", vec![9]);
+        let plain = run_token(&g, &cfg);
+
+        let mut sim = TokenSim::new(&g, &cfg);
+        sim.enable_profiling(ProfileLevel::Full);
+        let (cycles, quiescent) = sim.run_in_place(&cfg);
+        let prof = sim.take_profile().expect("profile enabled");
+        let out = sim.into_outcome(cycles, quiescent);
+        assert_eq!(out.outputs, plain.outputs);
+        assert_eq!(out.cycles, plain.cycles);
+        assert_eq!(out.firings, plain.firings);
+        assert_eq!(prof.total_firings, out.firings, "profile accounting");
+        assert_eq!(prof.engine, "token");
+        assert_eq!(prof.cycles, out.cycles);
+        assert!(prof.arc_occupancy.iter().any(|&o| o > 0), "Full occupancy");
+        // A loop graph necessarily stalls somewhere while tokens cycle.
+        assert!(prof.nodes.iter().any(|n| n.stall_total() > 0));
+    }
+
+    #[test]
+    fn profiling_off_is_a_no_op_and_stays_out_of_checkpoints() {
+        let g = adder();
+        let cfg = SimConfig::new().inject("a", vec![2]).inject("b", vec![3]);
+        let mut sim = TokenSim::new(&g, &cfg);
+        sim.enable_profiling(ProfileLevel::Off);
+        assert!(sim.take_profile().is_none(), "Off allocates nothing");
+
+        // Checkpoint bytes are identical with and without profiling.
+        let mut plain = TokenSim::new(&g, &cfg);
+        let mut profiled = TokenSim::new(&g, &cfg);
+        profiled.enable_profiling(ProfileLevel::Full);
+        plain.step();
+        profiled.step();
+        assert_eq!(
+            plain.snapshot().to_bytes(),
+            profiled.snapshot().to_bytes(),
+            "profiling leaks into the checkpoint image"
+        );
     }
 
     #[test]

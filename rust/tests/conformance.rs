@@ -1460,3 +1460,227 @@ fn ckpt_restore_refuses_every_other_suite_graph() {
     }
     assert!(refused >= 100, "only {refused} cross-graph refusals exercised");
 }
+
+// ---------------------------------------------------------------------------
+// Observability conformance (the `obs_determinism_` subset; CI runs it
+// standalone as `cargo test --release --test conformance obs_determinism`).
+// Two contracts (DESIGN.md §12): profiling is a read-only observer —
+// every engine run with `ProfileLevel::Full` reproduces its unprofiled
+// run exactly (outputs, cycles, firings) and the profiler's own firing
+// totals agree with the engine's; and the virtual-tick trace stream is
+// a pure function of the workload — byte-identical `events_json` at
+// every worker count, never containing wall-clock data.
+// ---------------------------------------------------------------------------
+
+/// Profiled == unprofiled on all 13 suite graphs for the token, lane,
+/// and stream engines, and `ProfileLevel::Off` is a strict no-op.
+#[test]
+fn obs_determinism_profiled_equals_unprofiled_on_suite_graphs() {
+    use dataflow_accel::obs::ProfileLevel;
+    use dataflow_accel::sim::{run_lanes_profiled, TokenSim};
+    for (name, g, cfg) in opt_suite() {
+        // Token engine.
+        let plain = run_token(&g, &cfg);
+        let mut sim = TokenSim::new(&g, &cfg);
+        sim.enable_profiling(ProfileLevel::Full);
+        let (cycles, quiescent) = sim.run_in_place(&cfg);
+        assert_eq!(cycles, plain.cycles, "{name}: token cycles perturbed");
+        assert_eq!(quiescent, plain.quiescent, "{name}: token quiescence");
+        assert_eq!(sim.firings(), plain.firings, "{name}: token firings");
+        let prof = sim.take_profile().expect("token profile");
+        assert_eq!(
+            prof.total_firings, plain.firings,
+            "{name}: token profiler miscounted"
+        );
+
+        // Lane engine: Full must not perturb, Off must be the identity.
+        let prog = Program::compile(&g);
+        let base = run_lanes(&prog, std::slice::from_ref(&cfg));
+        let (full, lp) = run_lanes_profiled(&prog, std::slice::from_ref(&cfg), ProfileLevel::Full);
+        assert_eq!(full, base, "{name}: lanes perturbed by Full profiling");
+        assert_eq!(
+            lp.total_firings, base[0].firings,
+            "{name}: lane profiler miscounted"
+        );
+        let (off, op) = run_lanes_profiled(&prog, std::slice::from_ref(&cfg), ProfileLevel::Off);
+        assert_eq!(off, base, "{name}: lanes perturbed by Off profiling");
+        assert_eq!(op.total_firings, 0, "{name}: Off profile must stay empty");
+
+        // Stream engine: a profiled serialized session reproduces the
+        // unprofiled session's wave outcomes.
+        let waves: Vec<WaveInput> = vec![cfg.inject.clone(), cfg.inject.clone()];
+        let budget = cfg.max_cycles * 2;
+        let mut unprofiled = StreamSession::with_mode(&g, WaveMode::Serialized);
+        let mut profiled = StreamSession::with_mode(&g, WaveMode::Serialized);
+        profiled.enable_profiling(ProfileLevel::Full);
+        for w in &waves {
+            unprofiled.admit(w).unwrap_or_else(|e| panic!("{name}: {e}"));
+            profiled.admit(w).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        unprofiled.run(budget);
+        profiled.run(budget);
+        for w in 0..unprofiled.n_waves() {
+            assert_eq!(
+                profiled.wave_outcome(w),
+                unprofiled.wave_outcome(w),
+                "{name} wave {w}: stream perturbed by profiling"
+            );
+        }
+        let sp = profiled.take_profile().expect("stream profile");
+        assert_eq!(
+            sp.total_firings,
+            unprofiled.metrics().firings,
+            "{name}: stream profiler miscounted"
+        );
+    }
+}
+
+/// Profiled == unprofiled through the sharded and time-multiplexed
+/// fabric executors on every suite graph the k=2 partitioner can
+/// split, with shard profile totals reconciling to the merged outcome.
+#[test]
+fn obs_determinism_fabric_profiles_match_unprofiled() {
+    use dataflow_accel::obs::ProfileLevel;
+    let mut covered = 0usize;
+    for (name, g, cfg) in opt_suite() {
+        let topo = FabricTopology::sized_for_shards(&g, 2);
+        let plan = match fabric::partition(&g, &topo) {
+            Ok(plan) => plan,
+            Err(_) => continue,
+        };
+        covered += 1;
+        let plain = fabric::run_sharded(&plan, &cfg);
+        let (profiled, profiles) = fabric::run_sharded_profiled(&plan, &cfg, ProfileLevel::Full);
+        assert_eq!(profiled, plain, "{name}: sharded perturbed by profiling");
+        let shard_total: u64 = profiles
+            .iter()
+            .filter(|(l, _)| l.starts_with("shard"))
+            .map(|(_, p)| p.total_firings)
+            .sum();
+        assert_eq!(shard_total, plain.firings, "{name}: shard totals");
+
+        let (r_plain, s_plain) = fabric::run_reconfig(&plan, &topo, &cfg);
+        let (r_prof, s_prof, _) =
+            fabric::run_reconfig_profiled(&plan, &topo, &cfg, ProfileLevel::Full);
+        assert_eq!(r_prof, r_plain, "{name}: reconfig perturbed by profiling");
+        assert_eq!(s_prof.swaps, s_plain.swaps, "{name}: reconfig swap count");
+    }
+    assert!(covered >= 8, "only {covered}/13 suite graphs partitioned");
+}
+
+/// The serve tier's virtual-tick trace stream is byte-identical across
+/// worker counts {1, 2, 4}, and attaching the trace changes no result
+/// digests (recording is observation, not participation).
+#[test]
+fn obs_determinism_serve_trace_identical_across_worker_counts() {
+    use dataflow_accel::obs::{events_json, SpanKind, TraceBuf};
+    use dataflow_accel::serve::{run_profile, standard_profile, ServeOptions};
+    use std::sync::Arc;
+    for seed in [7u64, 23] {
+        let profile = standard_profile(2, 4, seed);
+        let untraced = run_profile(&profile, &ServeOptions::default());
+        let mut streams: Vec<String> = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let buf = Arc::new(TraceBuf::new(TraceBuf::DEFAULT_CAPACITY));
+            let opts = ServeOptions {
+                workers,
+                trace: Some(buf.clone()),
+                ..ServeOptions::default()
+            };
+            let outcome = run_profile(&profile, &opts);
+            assert_eq!(
+                outcome.digests, untraced.digests,
+                "seed {seed}: tracing changed digests at {workers} workers"
+            );
+            let events = buf.drain_sorted();
+            assert_eq!(buf.dropped(), 0, "seed {seed}: ring overflowed");
+            let executes = events
+                .iter()
+                .filter(|e| matches!(e.kind, SpanKind::Execute))
+                .count() as u64;
+            assert_eq!(
+                executes, outcome.report.global.completed,
+                "seed {seed}: one Execute span per completed request"
+            );
+            streams.push(events_json(&events));
+        }
+        assert_eq!(
+            streams[0], streams[1],
+            "seed {seed}: trace differs between 1 and 2 workers"
+        );
+        assert_eq!(
+            streams[0], streams[2],
+            "seed {seed}: trace differs between 1 and 4 workers"
+        );
+        assert!(
+            !streams[0].contains("wall"),
+            "deterministic view must not carry wall-clock data"
+        );
+    }
+}
+
+/// Property: profiling is a read-only observer on seeded random DFGs —
+/// the lane and stream engines under `ProfileLevel::Full` reproduce
+/// their unprofiled runs, and the sharded executor agrees whenever the
+/// generated graph partitions.
+#[test]
+fn obs_determinism_prop_profiled_random_dfgs() {
+    use dataflow_accel::obs::ProfileLevel;
+    use dataflow_accel::sim::run_lanes_profiled;
+    check(
+        "profiled engines == unprofiled engines on random DFGs",
+        PropCfg::from_env(24, 0x0B5_C0DE),
+        |r: &mut Rng| {
+            let gg = random_dfg(r, true);
+            let n_items = 1 + r.below(5);
+            let wls: Vec<BTreeMap<String, Vec<i16>>> = (0..n_items)
+                .map(|_| random_workload(r, &gg, 1 + r.below(3)))
+                .collect();
+            (gg, wls)
+        },
+        |(gg, wls): &(GenGraph, Vec<BTreeMap<String, Vec<i16>>>)| {
+            let g = &gg.graph;
+            let cfgs: Vec<SimConfig> = wls.iter().map(|w| config_for(w, 200_000)).collect();
+            let prog = Program::compile(g);
+            let base = run_lanes(&prog, &cfgs);
+            let (full, prof) = run_lanes_profiled(&prog, &cfgs, ProfileLevel::Full);
+            if full != base {
+                return Err("lanes perturbed by Full profiling".into());
+            }
+            let firings: u64 = base.iter().map(|o| o.firings).sum();
+            if prof.total_firings != firings {
+                return Err(format!(
+                    "lane profiler counted {} firings, engine reports {firings}",
+                    prof.total_firings
+                ));
+            }
+
+            let mut unprofiled = StreamSession::with_mode(g, WaveMode::Serialized);
+            let mut profiled = StreamSession::with_mode(g, WaveMode::Serialized);
+            profiled.enable_profiling(ProfileLevel::Full);
+            for w in wls {
+                unprofiled.admit(w).map_err(|e| e.to_string())?;
+                profiled.admit(w).map_err(|e| e.to_string())?;
+            }
+            let budget = 200_000 * wls.len() as u64;
+            unprofiled.run(budget);
+            profiled.run(budget);
+            for w in 0..unprofiled.n_waves() {
+                if profiled.wave_outcome(w) != unprofiled.wave_outcome(w) {
+                    return Err(format!("stream wave {w} perturbed by profiling"));
+                }
+            }
+
+            let topo = FabricTopology::sized_for_shards(g, 2);
+            if let Ok(plan) = fabric::partition(g, &topo) {
+                let plain = fabric::run_sharded(&plan, &cfgs[0]);
+                let (prof_out, _) =
+                    fabric::run_sharded_profiled(&plan, &cfgs[0], ProfileLevel::Full);
+                if prof_out != plain {
+                    return Err("sharded perturbed by profiling".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
