@@ -67,10 +67,24 @@ impl FaultCounts {
     }
 }
 
-/// A deterministic schedule of fabric faults, sorted by tick.
+/// A deterministic schedule of fabric faults, sorted chronologically.
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
     events: Vec<FaultEvent>,
+}
+
+/// Canonical same-tick ordering: faults land before the technician's
+/// wholesale [`FaultKind::Repair`], so a Repair scheduled at the same
+/// tick as a fault on the same instance wins. Replay (`healthy_at`,
+/// `health_at`) and the live overlay both fold events in this order,
+/// so they can never disagree about a tick's net health.
+fn kind_rank(kind: FaultKind) -> u8 {
+    match kind {
+        FaultKind::SlotFail { .. } => 0,
+        FaultKind::BusFail { .. } => 1,
+        FaultKind::Outage => 2,
+        FaultKind::Repair => 3,
+    }
 }
 
 impl FaultPlan {
@@ -79,9 +93,13 @@ impl FaultPlan {
         FaultPlan { events: Vec::new() }
     }
 
-    /// A plan from explicit events (sorted by tick, stable).
+    /// A plan from explicit events, sorted into canonical chronological
+    /// order: by tick, then instance, then [`kind_rank`]. Replay used
+    /// to depend on push order for same-tick events — a Repair pushed
+    /// before the Outage it was meant to end folded in the wrong order
+    /// and left the instance dark.
     pub fn new(mut events: Vec<FaultEvent>) -> Self {
-        events.sort_by_key(|e| e.tick);
+        events.sort_by_key(|e| (e.tick, e.instance, kind_rank(e.kind)));
         FaultPlan { events }
     }
 
@@ -114,20 +132,31 @@ impl FaultPlan {
 
     /// Is `instance` up at the start of tick `tick` (after that tick's
     /// events apply)? Pure replay of the schedule — the bounded-retry
-    /// policy probes future ticks through this.
+    /// policy probes future ticks through this. Events fold in the
+    /// canonical chronological order established by [`FaultPlan::new`],
+    /// so a same-tick Repair ends the outage it overlaps.
     pub fn healthy_at(&self, tick: u64, instance: usize) -> bool {
-        let mut down = false;
+        !self.health_at(tick, instance).down
+    }
+
+    /// The full [`FabricHealth`] view of `instance` at the start of
+    /// tick `tick` (after that tick's events apply): a pure replay
+    /// folding **every** event kind — slot and bus quarantines, not
+    /// just outages — in canonical chronological order. The retry
+    /// probe routes against this, so an instance that comes back up
+    /// still degraded is rerouted through its effective topology
+    /// instead of being treated as whole.
+    pub fn health_at(&self, tick: u64, instance: usize) -> FabricHealth {
+        let mut health = FabricHealth::healthy();
         for e in &self.events {
-            if e.tick > tick || e.instance != instance {
-                continue;
+            if e.tick > tick {
+                break;
             }
-            match e.kind {
-                FaultKind::Outage => down = true,
-                FaultKind::Repair => down = false,
-                _ => {}
+            if e.instance == instance {
+                health.apply(e.kind);
             }
         }
-        !down
+        health
     }
 
     /// The canonical seeded chaos schedule for a pool of `instances`:
@@ -362,5 +391,100 @@ mod tests {
         assert!(!plan.healthy_at(5, 1));
         assert!(plan.healthy_at(6, 1));
         assert!(plan.healthy_at(3, 0), "other instances untouched");
+    }
+
+    #[test]
+    fn replay_folds_same_tick_events_chronologically_not_in_push_order() {
+        // Regression: a Repair pushed *before* the Outage it overlaps
+        // (here both land at tick 5 on instance 0 — the slot/bus pair's
+        // repair ticking inside a later-pushed outage window). The old
+        // tick-only stable sort preserved push order within the tick,
+        // so replay folded Repair → Outage and reported the instance
+        // dark forever; canonical order folds the fault first and the
+        // Repair wins the tick.
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                tick: 5,
+                instance: 0,
+                kind: FaultKind::Repair,
+            },
+            FaultEvent {
+                tick: 3,
+                instance: 0,
+                kind: FaultKind::Outage,
+            },
+        ]);
+        assert!(!plan.healthy_at(3, 0));
+        assert!(!plan.healthy_at(4, 0));
+        assert!(
+            plan.healthy_at(5, 0),
+            "same-tick Repair must end the outage window (pre-fix this replayed in push order and stayed down)"
+        );
+        assert!(plan.healthy_at(6, 0));
+        // The canonical order is observable in the sorted event list:
+        // within a tick, faults precede Repair.
+        let same_tick = FaultPlan::new(vec![
+            FaultEvent {
+                tick: 5,
+                instance: 0,
+                kind: FaultKind::Repair,
+            },
+            FaultEvent {
+                tick: 5,
+                instance: 0,
+                kind: FaultKind::Outage,
+            },
+        ]);
+        assert_eq!(same_tick.events()[0].kind, FaultKind::Outage);
+        assert_eq!(same_tick.events()[1].kind, FaultKind::Repair);
+        assert!(same_tick.healthy_at(5, 0), "Repair wins its own tick");
+    }
+
+    #[test]
+    fn health_at_carries_slot_and_bus_quarantine_not_just_outages() {
+        // A degraded-but-up instance: the outage is repaired, then a
+        // slot and a bus fault land after the wholesale repair. In that
+        // window `healthy_at` says "up", and `health_at` must still
+        // report the quarantine — the retry probe used to conjure
+        // `FabricHealth::default()` here and treat the instance as
+        // whole.
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                tick: 2,
+                instance: 0,
+                kind: FaultKind::Outage,
+            },
+            FaultEvent {
+                tick: 4,
+                instance: 0,
+                kind: FaultKind::Repair,
+            },
+            FaultEvent {
+                tick: 5,
+                instance: 0,
+                kind: FaultKind::SlotFail {
+                    class: OpClass::Alu2,
+                    count: 1 << 10,
+                },
+            },
+            FaultEvent {
+                tick: 5,
+                instance: 0,
+                kind: FaultKind::BusFail { channels: 7 },
+            },
+        ]);
+        assert!(plan.healthy_at(6, 0), "instance is up...");
+        let h = plan.health_at(6, 0);
+        assert!(!h.down);
+        assert!(h.is_degraded(), "...but not whole");
+        assert_eq!(h.lost_slots.get(&OpClass::Alu2), Some(&(1 << 10)));
+        assert_eq!(h.lost_channels, 7);
+        // Before the faults: whole. During the outage: down.
+        assert_eq!(plan.health_at(1, 0), FabricHealth::healthy());
+        assert!(plan.health_at(3, 0).down);
+        // Wholesale repair really was wholesale at tick 4.
+        assert_eq!(plan.health_at(4, 0), FabricHealth::healthy());
+        // Other instances never touched.
+        assert_eq!(plan.health_at(9, 1), FabricHealth::healthy());
     }
 }

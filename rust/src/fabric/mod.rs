@@ -77,8 +77,12 @@ impl FabricPool {
     }
 
     /// Quarantine (`down = true`) or re-admit (`down = false`) one
-    /// instance. Returns `false` when `instance` is out of range (the
-    /// pool is left untouched).
+    /// instance. The fault layer ([`crate::serve::chaos`]) uses this
+    /// for outages, and the elastic repartitioner
+    /// ([`crate::serve::elastic`]) for rolling drain windows — both
+    /// route around quarantined instances the same way. Returns
+    /// `false` when `instance` is out of range (the pool is left
+    /// untouched).
     pub fn set_down(&self, instance: usize, down: bool) -> bool {
         match self.down.get(instance) {
             Some(flag) => {

@@ -66,6 +66,28 @@ impl FabricTopology {
         m
     }
 
+    /// The smallest per-class slot table and channel pool covering
+    /// every graph in `graphs` *individually* (one batch occupies an
+    /// instance at a time, so the cover is a per-class max, not a
+    /// sum). [`FabricTopology::paper`] sizes the production fabric
+    /// with it; the elastic repartitioner
+    /// ([`crate::serve::elastic`]) sizes the slice of the fabric it
+    /// un-reserves for the hot tenants' graphs.
+    pub fn demand_cover<'a>(
+        graphs: impl IntoIterator<Item = &'a Graph>,
+    ) -> (BTreeMap<OpClass, usize>, usize) {
+        let mut slots: BTreeMap<OpClass, usize> = BTreeMap::new();
+        let mut channels = 0usize;
+        for g in graphs {
+            for (c, n) in Self::demand(g) {
+                let e = slots.entry(c).or_insert(0);
+                *e = (*e).max(n);
+            }
+            channels = channels.max(g.n_arcs());
+        }
+        (slots, channels)
+    }
+
     /// Whether `g` fits on a single instance (slots and channels).
     pub fn fits(&self, g: &Graph) -> bool {
         g.n_arcs() <= self.channels
@@ -95,16 +117,11 @@ impl FabricTopology {
     /// resource model so every paper benchmark places on one instance,
     /// with ~25% headroom per class and on the channel pool.
     pub fn paper() -> FabricTopology {
-        let mut slots: BTreeMap<OpClass, usize> = BTreeMap::new();
-        let mut channels = 0usize;
-        for b in crate::bench_defs::BenchId::ALL {
-            let g = crate::bench_defs::build(b);
-            for (c, n) in Self::demand(&g) {
-                let e = slots.entry(c).or_insert(0);
-                *e = (*e).max(n);
-            }
-            channels = channels.max(g.n_arcs());
-        }
+        let graphs: Vec<Graph> = crate::bench_defs::BenchId::ALL
+            .into_iter()
+            .map(crate::bench_defs::build)
+            .collect();
+        let (mut slots, mut channels) = Self::demand_cover(&graphs);
         for v in slots.values_mut() {
             *v += (*v + 3) / 4;
         }

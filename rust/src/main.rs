@@ -13,6 +13,8 @@
 //!                      [--trace] [--trace-out OBS_9.json] [--out SERVE_6.json]
 //! dataflow-accel serve --chaos [--quick] [--seed 7] [--scale 16] [--n 8]
 //!                      [--out CHAOS_8.json]
+//! dataflow-accel serve --elastic [--quick] [--seed 7] [--scale 16] [--n 8]
+//!                      [--out ELASTIC_10.json]
 //! dataflow-accel trace --bench <slug|saxpy> [--items 8] [--n 8] [--seed 7]
 //!                      [--out OBS_9.json] [--chrome PATH]
 //! dataflow-accel trace --serve [--quick] [--seed 7] [--workers N] [--scale 8] [--n 8]
@@ -44,6 +46,7 @@ fn main() {
             "scale-workers",
             "no-fuse",
             "chaos",
+            "elastic",
             "trace",
             "trace-overhead",
             "serve",
@@ -100,8 +103,13 @@ fn main() {
                  \x20 --chaos       run the 10:1 fairness profile under a seeded fabric fault\n\
                  \x20               schedule; refuse CHAOS_8.json unless zero requests were\n\
                  \x20               lost and outputs match the fault-free baseline byte-for-byte\n\
+                 \x20 --elastic     start the pool on a scarce fabric slice and repartition it\n\
+                 \x20               online from observed demand; refuse ELASTIC_10.json unless\n\
+                 \x20               a rolling repartition ran, a tenant was promoted, zero\n\
+                 \x20               requests were lost, and outputs match the static-allocation\n\
+                 \x20               baseline byte-for-byte\n\
                  \x20 --out PATH    write the JSON report (default SERVE_6.json; CHAOS_8.json\n\
-                 \x20               with --chaos)\n\
+                 \x20               with --chaos, ELASTIC_10.json with --elastic)\n\
                  \x20 --trace       record the span trace (virtual ticks) during the run and\n\
                  \x20               write it as OBS_9.json (override with --trace-out PATH)\n\
                  trace: deterministic observability capture (OBS_9.json) \n\
@@ -429,6 +437,10 @@ fn cmd_serve(args: &Args) {
         cmd_serve_chaos(args);
         return;
     }
+    if args.has("elastic") {
+        cmd_serve_elastic(args);
+        return;
+    }
     let quick = args.has("quick");
     let seed = args.get_u64("seed", 7);
     let scale = args.get_usize("scale", if quick { 4 } else { 24 });
@@ -605,6 +617,58 @@ fn cmd_serve_chaos(args: &Args) {
         std::process::exit(1);
     }
     let json = report::chaos::to_json(&gate, &plan, &faulted, seed, quick);
+    std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
+    println!("wrote {out_path}");
+}
+
+/// `serve --elastic`: the 10:1 fairness profile on a deliberately
+/// scarce fabric slice, reshaped online by the load-driven
+/// repartitioner and gated against a static-allocation baseline of the
+/// *same* runner. The gate refuses to write ELASTIC_10.json unless at
+/// least one rolling repartition ran, at least one tenant was promoted
+/// up the route lattice, nothing was lost, accounting is exact, and
+/// both the dispatch schedule and every completed request's output
+/// digest are byte-identical to the baseline's.
+fn cmd_serve_elastic(args: &Args) {
+    use dataflow_accel::serve;
+    let quick = args.has("quick");
+    let seed = args.get_u64("seed", 7);
+    let scale = args.get_usize("scale", if quick { 4 } else { 16 });
+    let n = args.get_usize("n", if quick { 4 } else { 8 });
+    let out_path = args.get_or("out", "ELASTIC_10.json");
+    let profile = serve::fairness_profile(scale, n, seed);
+    // Small batches keep the heavy tenant dispatching across several
+    // epoch boundaries, so the repartitioner reshapes live demand
+    // instead of waking up after the profile drained.
+    let opts = serve::ServeOptions {
+        cfg: serve::ServeCfg {
+            max_batch: 4,
+            ..serve::ServeCfg::default()
+        },
+        ..serve::ServeOptions::default()
+    };
+    let policy = serve::ElasticPolicy::scarce();
+    println!(
+        "elastic: seed {seed}, epoch {} tick(s), drain {} tick(s)/instance, \
+         hot >= {} req(s)/epoch, {} instance(s) starting at {} slot(s)/class + {} channel(s)",
+        policy.epoch_ticks,
+        policy.drain_ticks,
+        policy.hot_requests,
+        opts.pool_size,
+        policy.initial_slots,
+        policy.initial_channels
+    );
+    let baseline = serve::run_profile_elastic(&profile, &opts, &policy.static_allocation());
+    let elastic = serve::run_profile_elastic(&profile, &opts, &policy);
+    print!("{}", report::serve_table(&elastic.report));
+    let gate = report::ElasticGate::check(&elastic, &baseline);
+    print!("{}", report::elastic_summary(&gate, &elastic));
+    if !gate.passed() {
+        eprintln!("serve: elastic gate failed");
+        eprintln!("serve: refusing to write {out_path}");
+        std::process::exit(1);
+    }
+    let json = report::elastic::to_json(&gate, &policy, &elastic, seed, quick);
     std::fs::write(&out_path, &json).unwrap_or_else(|e| panic!("cannot write `{out_path}`: {e}"));
     println!("wrote {out_path}");
 }

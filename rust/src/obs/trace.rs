@@ -36,10 +36,16 @@ pub enum SpanKind {
     Demote,
     /// Chaos: warm-route eviction after a slot fault (detail = instance).
     Evict,
+    /// Elastic: one instance drained, retopologized, and readmitted
+    /// during a rolling repartition (detail = instance).
+    Repartition,
+    /// Elastic: a tenant promoted up the route lattice after a
+    /// repartition made its graph fit (detail = tenant's queue demand).
+    Promote,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 10] = [
+    pub const ALL: [SpanKind; 12] = [
         SpanKind::Admit,
         SpanKind::BatchForm,
         SpanKind::RouteSelect,
@@ -50,6 +56,8 @@ impl SpanKind {
         SpanKind::Retry,
         SpanKind::Demote,
         SpanKind::Evict,
+        SpanKind::Repartition,
+        SpanKind::Promote,
     ];
 
     pub fn name(self) -> &'static str {
@@ -64,6 +72,8 @@ impl SpanKind {
             SpanKind::Retry => "retry",
             SpanKind::Demote => "demote",
             SpanKind::Evict => "evict",
+            SpanKind::Repartition => "repartition",
+            SpanKind::Promote => "promote",
         }
     }
 }

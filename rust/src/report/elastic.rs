@@ -1,0 +1,293 @@
+//! The elastic-run verdict: `ELASTIC_10.json` (schema
+//! `dataflow-accel-elastic/v1`), written by `serve --elastic` **only**
+//! when the rolling-repartition gate holds. The CLI refuses to write
+//! the file otherwise, so the artifact's existence is itself the
+//! claim; the JSON carries the evidence (repartition counters, the
+//! policy, accounting, the digest-match verdict against the
+//! static-allocation baseline) so CI can re-assert it without
+//! re-running.
+
+use crate::report::obs::format_event;
+use crate::serve::{ElasticOutcome, ElasticPolicy};
+use std::fmt::Write as _;
+
+/// Everything the elastic gate checks, precomputed so the CLI and the
+/// JSON writer cannot disagree about what passed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElasticGate {
+    /// ≥ 1 rolling repartition actually executed (the epoch loop
+    /// changed the slot plan at least once).
+    pub repartitioned: bool,
+    /// ≥ 1 tenant promoted up the route lattice — the elastic run's
+    /// whole point is that hot tenants climb off the fallback engine.
+    pub promoted: bool,
+    /// No request vanished: `lost == 0` for every tenant.
+    pub zero_lost: bool,
+    /// `completed + shed == submitted` globally.
+    pub accounting_exact: bool,
+    /// The dispatch schedule is identical to the static baseline's —
+    /// repartitioning must never leak into scheduling decisions.
+    pub dispatch_match: bool,
+    /// Every completed request's output digest is byte-identical to
+    /// the static-allocation baseline's, and both runs completed the
+    /// same request set.
+    pub digest_match: bool,
+    /// When `digest_match` is false: the first `(tenant, seq)` — in
+    /// key order — whose digest differs (or exists on one side only),
+    /// so the verdict can dump that request's flight-recorder timeline
+    /// instead of a bare "digests diverged".
+    pub first_divergence: Option<(usize, usize)>,
+}
+
+impl ElasticGate {
+    /// Evaluate the gate over an elastic run and its static-allocation
+    /// baseline (same profile, same options,
+    /// [`ElasticPolicy::static_allocation`]).
+    pub fn check(elastic: &ElasticOutcome, baseline: &ElasticOutcome) -> Self {
+        let g = &elastic.report.global;
+        let first_divergence = first_divergence(elastic, baseline);
+        ElasticGate {
+            repartitioned: elastic.elastic.repartitions >= 1,
+            promoted: elastic.elastic.promotions >= 1,
+            zero_lost: elastic.report.tenants.iter().all(|t| t.lost() == 0) && g.lost() == 0,
+            accounting_exact: g.completed + g.shed() == g.submitted,
+            dispatch_match: elastic.dispatches == baseline.dispatches,
+            digest_match: first_divergence.is_none(),
+            first_divergence,
+        }
+    }
+
+    pub fn passed(&self) -> bool {
+        self.repartitioned
+            && self.promoted
+            && self.zero_lost
+            && self.accounting_exact
+            && self.dispatch_match
+            && self.digest_match
+    }
+
+    /// The gates that failed, for the CLI's refusal message.
+    pub fn failures(&self) -> Vec<&'static str> {
+        let mut v = Vec::new();
+        if !self.repartitioned {
+            v.push("no rolling repartition executed (demand never reshaped the slot plan)");
+        }
+        if !self.promoted {
+            v.push("no tenant promoted up the route lattice");
+        }
+        if !self.zero_lost {
+            v.push("requests were lost (neither completed nor shed)");
+        }
+        if !self.accounting_exact {
+            v.push("completed + shed != submitted");
+        }
+        if !self.dispatch_match {
+            v.push("dispatch schedule diverges from the static-allocation baseline");
+        }
+        if !self.digest_match {
+            v.push("output digests diverge from the static-allocation baseline");
+        }
+        v
+    }
+}
+
+/// First `(tenant, seq)` — in `BTreeMap` key order — whose output
+/// digest differs between the two runs, or which completed in one run
+/// but not the other. `None` when the maps are identical.
+fn first_divergence(elastic: &ElasticOutcome, baseline: &ElasticOutcome) -> Option<(usize, usize)> {
+    let e = &elastic.output_digests;
+    let b = &baseline.output_digests;
+    // Union of both key sets, sorted, so a request that completed in
+    // only one run still surfaces in true key order.
+    e.keys()
+        .chain(b.keys())
+        .copied()
+        .collect::<std::collections::BTreeSet<(usize, usize)>>()
+        .into_iter()
+        .find(|k| e.get(k) != b.get(k))
+}
+
+/// Serialize the elastic verdict (schema `dataflow-accel-elastic/v1`).
+/// Callers gate on [`ElasticGate::passed`] before writing this to
+/// disk; the serializer itself is total so tests can render failing
+/// gates.
+pub fn to_json(
+    gate: &ElasticGate,
+    policy: &ElasticPolicy,
+    elastic: &ElasticOutcome,
+    seed: u64,
+    quick: bool,
+) -> String {
+    let g = &elastic.report.global;
+    let e = &elastic.elastic;
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"dataflow-accel-elastic/v1\",\n");
+    writeln!(out, "  \"seed\": {seed},").unwrap();
+    writeln!(out, "  \"quick\": {quick},").unwrap();
+    writeln!(out, "  \"passed\": {},", gate.passed()).unwrap();
+    writeln!(out, "  \"digest_match\": {},", gate.digest_match).unwrap();
+    writeln!(out, "  \"dispatch_match\": {},", gate.dispatch_match).unwrap();
+    writeln!(out, "  \"submitted\": {},", g.submitted).unwrap();
+    writeln!(out, "  \"completed\": {},", g.completed).unwrap();
+    writeln!(out, "  \"shed\": {},", g.shed()).unwrap();
+    writeln!(out, "  \"lost\": {},", g.lost()).unwrap();
+    writeln!(out, "  \"verified\": {},", g.verified).unwrap();
+    writeln!(out, "  \"ticks\": {},", elastic.report.ticks).unwrap();
+    out.push_str("  \"policy\": {\n");
+    writeln!(out, "    \"initial_slots\": {},", policy.initial_slots).unwrap();
+    writeln!(out, "    \"initial_channels\": {},", policy.initial_channels).unwrap();
+    writeln!(out, "    \"epoch_ticks\": {},", policy.epoch_ticks).unwrap();
+    writeln!(out, "    \"drain_ticks\": {},", policy.drain_ticks).unwrap();
+    writeln!(out, "    \"hot_requests\": {}", policy.hot_requests).unwrap();
+    out.push_str("  },\n");
+    out.push_str("  \"repartition\": {\n");
+    writeln!(out, "    \"epochs\": {},", e.epochs).unwrap();
+    writeln!(out, "    \"repartitions\": {},", e.repartitions).unwrap();
+    writeln!(out, "    \"drains\": {},", e.drains).unwrap();
+    writeln!(out, "    \"restores\": {},", e.restores).unwrap();
+    writeln!(out, "    \"migrated_waves\": {},", e.migrated_waves).unwrap();
+    writeln!(out, "    \"delayed_waves\": {},", e.delayed_waves).unwrap();
+    writeln!(out, "    \"promotions\": {},", e.promotions).unwrap();
+    writeln!(out, "    \"targeted_invalidations\": {}", e.targeted_invalidations).unwrap();
+    out.push_str("  },\n");
+    let promoted: Vec<String> = elastic
+        .promoted_tenants
+        .iter()
+        .map(|t| t.to_string())
+        .collect();
+    writeln!(out, "  \"promoted_tenants\": [{}],", promoted.join(", ")).unwrap();
+    writeln!(out, "  \"requests_digested\": {}", elastic.output_digests.len()).unwrap();
+    out.push_str("}\n");
+    out
+}
+
+/// The human verdict line the CLI prints alongside the table.
+pub fn elastic_summary(gate: &ElasticGate, elastic: &ElasticOutcome) -> String {
+    let e = &elastic.elastic;
+    let mut out = String::new();
+    writeln!(
+        out,
+        "elastic gate: {} | {} epoch(s), {} repartition(s), {} promotion(s), \
+         {} request(s) digest-checked against the static-allocation baseline",
+        if gate.passed() { "PASS" } else { "FAIL" },
+        e.epochs,
+        e.repartitions,
+        e.promotions,
+        elastic.output_digests.len()
+    )
+    .unwrap();
+    for f in gate.failures() {
+        writeln!(out, "  gate failure: {f}").unwrap();
+    }
+    if let Some((tenant, seq)) = gate.first_divergence {
+        writeln!(
+            out,
+            "  first divergence: tenant {tenant} seq {seq} — flight-recorder tail for \
+             tenant {tenant}:"
+        )
+        .unwrap();
+        let tail = elastic.flight.timeline(tenant as u32);
+        if tail.is_empty() {
+            writeln!(out, "    (flight recorder empty for this tenant)").unwrap();
+        }
+        for ev in &tail {
+            writeln!(out, "    {}", format_event(ev)).unwrap();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{fairness_profile, run_profile_elastic, ServeOptions};
+
+    fn runs() -> (ElasticPolicy, ElasticOutcome, ElasticOutcome) {
+        // Small batches keep the heavy tenant dispatching past the
+        // first epoch boundary (default max_batch would drain the whole
+        // profile before tick 4 and the epoch loop would never fire).
+        let p = fairness_profile(2, 5, 17);
+        let opts = ServeOptions {
+            cfg: crate::serve::ServeCfg {
+                max_batch: 4,
+                ..Default::default()
+            },
+            ..ServeOptions::default()
+        };
+        let policy = ElasticPolicy::scarce();
+        let baseline = run_profile_elastic(&p, &opts, &policy.static_allocation());
+        let elastic = run_profile_elastic(&p, &opts, &policy);
+        (policy, elastic, baseline)
+    }
+
+    #[test]
+    fn gate_passes_on_the_fairness_profile_and_json_carries_the_verdict() {
+        let (policy, elastic, baseline) = runs();
+        let gate = ElasticGate::check(&elastic, &baseline);
+        assert!(gate.passed(), "{:?}", gate.failures());
+        let json = to_json(&gate, &policy, &elastic, 17, true);
+        assert!(json.contains("\"schema\": \"dataflow-accel-elastic/v1\""));
+        assert!(json.contains("\"passed\": true"));
+        assert!(json.contains("\"digest_match\": true"));
+        assert!(json.contains("\"dispatch_match\": true"));
+        assert!(json.contains("\"lost\": 0"));
+        assert!(!json.contains("\"repartitions\": 0"));
+        assert!(!json.contains("\"promotions\": 0"));
+        assert!(!json.contains("\"promoted_tenants\": []"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        let line = elastic_summary(&gate, &elastic);
+        assert!(line.contains("PASS"), "{line}");
+    }
+
+    #[test]
+    fn gate_fails_loudly_when_nothing_repartitions_or_digests_break() {
+        let (_, elastic, baseline) = runs();
+        // The static baseline gated against itself never repartitions:
+        // the whole elastic story is missing, and the gate says which
+        // halves.
+        let inert = ElasticGate::check(&baseline, &baseline);
+        assert!(!inert.passed());
+        assert!(!inert.repartitioned);
+        assert!(!inert.promoted);
+        assert!(inert.digest_match, "self-comparison cannot diverge");
+        // ...and a doctored digest verdict fails the gate loudly.
+        let mut wrong = ElasticGate::check(&elastic, &baseline);
+        wrong.digest_match = false;
+        assert!(!wrong.passed());
+        let line = elastic_summary(&wrong, &elastic);
+        assert!(line.contains("FAIL"), "{line}");
+        assert!(line.contains("diverge"), "{line}");
+        let json = to_json(&wrong, &ElasticPolicy::scarce(), &elastic, 17, true);
+        assert!(json.contains("\"passed\": false"));
+    }
+
+    #[test]
+    fn digest_gate_failure_names_the_divergence_and_dumps_its_timeline() {
+        let (_, mut elastic, baseline) = runs();
+        // Deliberately perturb one output digest: the gate must fail,
+        // name exactly this (tenant, seq), and dump that tenant's
+        // flight-recorder tail.
+        let (&key, &val) = elastic.output_digests.iter().next().unwrap();
+        elastic.output_digests.insert(key, val ^ 0xdead_beef);
+        let gate = ElasticGate::check(&elastic, &baseline);
+        assert!(!gate.passed());
+        assert!(!gate.digest_match);
+        assert_eq!(gate.first_divergence, Some(key));
+        let line = elastic_summary(&gate, &elastic);
+        assert!(line.contains("FAIL"), "{line}");
+        let (tenant, seq) = key;
+        assert!(
+            line.contains(&format!("first divergence: tenant {tenant} seq {seq}")),
+            "{line}"
+        );
+        // The flight recorder recorded this tenant's run, so the dump
+        // has at least one indented timeline line.
+        assert!(line.lines().any(|l| l.starts_with("    ")), "{line}");
+        // A request missing from one side entirely is also a divergence.
+        elastic.output_digests.remove(&key);
+        let missing = ElasticGate::check(&elastic, &baseline);
+        assert_eq!(missing.first_divergence, Some(key));
+        assert!(!missing.digest_match);
+    }
+}

@@ -10,17 +10,22 @@
 //! tier's per-tenant summary ([`serve::serve_table`]) and the
 //! SERVE_*.json trajectory. [`chaos`] renders the fault-injection
 //! gate's verdict (CHAOS_*.json, written only when the
-//! zero-lost-requests gate passes). [`obs`] renders the observability
+//! zero-lost-requests gate passes). [`elastic`] renders the
+//! rolling-repartition gate's verdict (ELASTIC_*.json, written only
+//! when the elastic run promotes a tenant with zero lost requests and
+//! baseline-identical digests). [`obs`] renders the observability
 //! tables: hottest nodes, worst stall attributions, the
 //! lattice-demotion ledger, and the single-source latency-bucket table.
 
 pub mod chaos;
+pub mod elastic;
 pub mod obs;
 pub mod opt;
 pub mod perf;
 pub mod serve;
 
 pub use chaos::{chaos_summary, ChaosGate};
+pub use elastic::{elastic_summary, ElasticGate};
 pub use obs::{demotion_ledger, histogram_table, hottest_nodes_table, stall_table};
 pub use serve::{scaling_table, serve_table, ScalePoint};
 

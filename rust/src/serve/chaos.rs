@@ -379,9 +379,11 @@ fn execute_batch_chaos(
     let g = state.graph.as_ref();
 
     // Route to an instance still in rotation. With the whole pool dark,
-    // probe the plan's own timeline — a repair is wholesale
-    // (`FabricHealth::apply` resets to healthy), so an instance found
-    // healthy at a future probe tick serves at full base capacity.
+    // probe the plan's own timeline. An instance found *up* at a future
+    // probe tick is not necessarily *whole* — slot/bus quarantine can
+    // survive the tick that ended its outage — so the probe replays
+    // the full health view ([`FaultPlan::health_at`]) and routes
+    // against it, exactly as the live overlay would at that tick.
     let mut extra_wait = 0u64;
     let routed: Option<(usize, FabricHealth)> = match pool.route_healthy() {
         Some(i) => Some((i, health[i].clone())),
@@ -398,9 +400,12 @@ fn execute_batch_chaos(
                     engine: "chaos",
                     detail: delta,
                 });
-                if let Some(i) = (0..pool.size()).find(|&i| plan.healthy_at(tick + delta, i)) {
+                let probe = (0..pool.size())
+                    .map(|i| (i, plan.health_at(tick + delta, i)))
+                    .find(|(_, h)| !h.down);
+                if let Some((i, h)) = probe {
                     extra_wait = delta;
-                    found = Some((i, FabricHealth::default()));
+                    found = Some((i, h));
                     break;
                 }
             }
@@ -554,10 +559,8 @@ fn run_streamed_migrated(
     let image = session.snapshot().to_bytes();
     drop(session); // the instance is gone; only the image survives
     let ck = StreamCheckpoint::from_bytes(&image).expect("self-produced checkpoint image decodes");
-    rt.counters.add(
-        chaos_metric::RESCUED_WAVES,
-        ck.waves.iter().filter(|w| w.done.is_none()).count() as u64,
-    );
+    rt.counters
+        .add(chaos_metric::RESCUED_WAVES, ck.waves_in_flight() as u64);
     let mut resumed =
         StreamSession::restore(g, &ck).expect("checkpoint restores onto the same graph content");
     resumed.run(budget);
@@ -698,6 +701,81 @@ mod tests {
         let base = run_profile_chaos(&p, &o, &FaultPlan::empty());
         let faulted = run_profile_chaos(&p, &o, &plan);
         assert!(faulted.chaos.retries > 0, "{:?}", faulted.chaos);
+        assert_eq!(faulted.report.global.lost(), 0);
+        let g = &faulted.report.global;
+        assert_eq!(g.completed + g.shed(), g.submitted);
+        assert_eq!(faulted.output_digests, base.output_digests);
+    }
+
+    #[test]
+    fn probe_found_instance_keeps_its_quarantine_and_is_not_treated_as_whole() {
+        // Regression for the retry probe conjuring
+        // `FabricHealth::default()`: pool of 1, dark from tick 1, whose
+        // repair at tick 3 is followed by a slot quarantine at tick 4 —
+        // exactly the tick the T+3 probe lands on. The probed instance
+        // is up but NOT whole; the batch must re-route against its
+        // degraded effective topology (a demotion), not serve on the
+        // full base capacity the old probe assumed. Pre-fix this
+        // records zero demotions and the assertion fails.
+        let p = LoadProfile {
+            tenants: vec![TenantSpec {
+                name: "heavy".to_string(),
+                weight: 1,
+                quota: 64,
+                window: 8,
+                mix: vec![WorkKind::Saxpy],
+                requests: 8,
+            }],
+            arrival: Arrival::Closed,
+            n: 6,
+            seed: 3,
+        };
+        let o = ServeOptions {
+            pool_size: 1,
+            cfg: crate::serve::ServeCfg {
+                max_batch: 8,
+                ..Default::default()
+            },
+            ..opts()
+        };
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                tick: 1,
+                instance: 0,
+                kind: FaultKind::Outage,
+            },
+            FaultEvent {
+                tick: 3,
+                instance: 0,
+                kind: FaultKind::Repair,
+            },
+            FaultEvent {
+                tick: 4,
+                instance: 0,
+                kind: FaultKind::SlotFail {
+                    class: crate::dfg::OpClass::Alu2,
+                    count: 1 << 10,
+                },
+            },
+            FaultEvent {
+                tick: 9,
+                instance: 0,
+                kind: FaultKind::Repair,
+            },
+        ]);
+        // The T+1 probe (tick 2) misses — still in outage; the T+3
+        // probe (tick 4) finds the instance up and quarantined.
+        assert!(!plan.healthy_at(2, 0));
+        assert!(plan.healthy_at(4, 0));
+        assert!(plan.health_at(4, 0).is_degraded());
+        let base = run_profile_chaos(&p, &o, &FaultPlan::empty());
+        let faulted = run_profile_chaos(&p, &o, &plan);
+        assert!(faulted.chaos.retries > 0, "{:?}", faulted.chaos);
+        assert!(
+            faulted.chaos.demotions > 0,
+            "probe treated a degraded-but-up instance as whole: {:?}",
+            faulted.chaos
+        );
         assert_eq!(faulted.report.global.lost(), 0);
         let g = &faulted.report.global;
         assert_eq!(g.completed + g.shed(), g.submitted);

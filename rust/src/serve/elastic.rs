@@ -1,0 +1,854 @@
+//! Elastic serving: load-driven online repartitioning of the fabric
+//! pool, with a rolling drain that never loses a request.
+//!
+//! The static serve tier hands every instance its whole topology up
+//! front and never revisits the split. This runner starts from a
+//! deliberately conservative partition instead — each instance exposes
+//! only [`ElasticPolicy::initial_slots`] operator slots per class and
+//! [`ElasticPolicy::initial_channels`] bus channels; the rest of the
+//! fabric is held in reserve, modeled as a [`FabricHealth`]-style
+//! overlay exactly like the fault layer's quarantine views — and then
+//! reshapes that partition **online** from observed demand:
+//!
+//! 1. **Epoch loop.** Every [`ElasticPolicy::epoch_ticks`] virtual
+//!    ticks the runner snapshots per-tenant demand (requests
+//!    dispatched this epoch, plus the per-class operator/channel
+//!    demand of each tenant's graphs, via
+//!    [`FabricTopology::demand_cover`]) and recomputes the per-class
+//!    slot floors the hot tenants need. Demand is read from the
+//!    deterministic dispatch stream only — never from execution
+//!    results — so the elastic run's schedule is byte-identical to a
+//!    static-allocation run of the same profile.
+//! 2. **Rolling repartition.** When the wanted reserve differs from
+//!    the current one, instances are retopologized **one at a time**:
+//!    instance `i` leaves the routing rotation for the drain window
+//!    `(E + i·drain, E + (i+1)·drain]`, is drained, carries the new
+//!    effective view, and is readmitted. A streamed batch whose
+//!    residency overlaps its instance's drain window is checkpointed
+//!    ([`StreamSession::snapshot`] → bytes → restore, the chaos tier's
+//!    migration wire format) and finishes on the readmitted instance;
+//!    [`StreamSession::run`] budgets *cumulative* rounds, so the
+//!    drained session produces byte-identical outcomes. Batches the
+//!    drain forces to wait are charged explicitly
+//!    ([`ElasticStats::delayed_waves`] + queue-wait ticks).
+//! 3. **Promotion.** After a repartition, every memoized route is
+//!    recomputed against the new effective topology. A tenant whose
+//!    graph now fits higher up the placed → sharded → reconfig →
+//!    fallback lattice is *promoted*: its warm cache entry is dropped
+//!    with a **targeted** invalidation
+//!    ([`SessionCache::invalidate_hint`] — never the wholesale purge
+//!    the fault layer uses) and the next batch serves on the better
+//!    engine.
+//!
+//! The gate ([`crate::report::elastic`], `serve --elastic`): zero lost
+//! requests, exact accounting, at least one rolling repartition and
+//! one promotion, and per-request [`output_digest`]s byte-identical to
+//! the static-allocation baseline — this same runner with
+//! [`ElasticPolicy::static_allocation`] (epoch loop off, same initial
+//! reserve). DESIGN.md §13 states the policy and the determinism
+//! argument.
+
+use super::loadgen::{self, LoadProfile, ServeRequest, WorkItem};
+use super::sched::{
+    batch_configs, choose_engine_routed, drive_profile, outcome_digest, output_digest,
+    verify_outcomes, BatchResult, DispatchRec, EngineChoice, ExecutedBatch, Pending, ServeOptions,
+};
+use super::session::{route_graph, RoutePlan, SessionCache};
+use super::stats::{elastic_metric, ElasticStats, ServeCollector, ServeReport};
+use crate::coordinator::batch::{
+    run_batch_lanes_prog, run_batch_native, run_batch_reconfig, run_batch_sharded,
+};
+use crate::dfg::{Graph, OpClass};
+use crate::fabric::{FabricHealth, FabricPool, FabricTopology};
+use crate::obs::{CounterSet, FlightRecorder, SpanKind, TraceBuf, TraceEvent};
+use crate::opt::OptLevel;
+use crate::sim::stream::run_stream_prevalidated;
+use crate::sim::{SimOutcome, StreamCheckpoint, StreamSession, WaveInput, WaveMode};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The repartitioner's knobs. Everything is in virtual ticks and
+/// request counts, so a policy plus a profile seed fully determines
+/// the elastic schedule.
+#[derive(Debug, Clone)]
+pub struct ElasticPolicy {
+    /// Operator slots per class each instance exposes at start (the
+    /// rest of the base topology is held in reserve).
+    pub initial_slots: usize,
+    /// Bus channels each instance exposes at start.
+    pub initial_channels: usize,
+    /// Demand-evaluation period in virtual ticks. `0` disables the
+    /// epoch loop entirely — the static-allocation baseline.
+    pub epoch_ticks: u64,
+    /// Rolling-drain window per instance, in ticks: during a
+    /// repartition instance `i` is out of rotation for
+    /// `(E + i·drain_ticks, E + (i+1)·drain_ticks]`.
+    pub drain_ticks: u64,
+    /// Requests a tenant must have dispatched within one epoch to
+    /// count as *hot* (and have its graphs' demand un-reserved).
+    pub hot_requests: u64,
+}
+
+impl ElasticPolicy {
+    /// The CLI preset: start with *nothing* un-reserved, so every
+    /// tenant opens on the fallback engine and the first epoch's
+    /// repartition has something to promote.
+    pub fn scarce() -> Self {
+        ElasticPolicy {
+            initial_slots: 0,
+            initial_channels: 0,
+            epoch_ticks: 4,
+            drain_ticks: 1,
+            hot_requests: 4,
+        }
+    }
+
+    /// A policy exposing the whole base topology from tick one —
+    /// elastic machinery armed but with nothing to do; routes match
+    /// the static serve tier's exactly.
+    pub fn unreserved() -> Self {
+        ElasticPolicy {
+            initial_slots: usize::MAX,
+            initial_channels: usize::MAX,
+            epoch_ticks: 0,
+            drain_ticks: 1,
+            hot_requests: 1,
+        }
+    }
+
+    /// This policy with the epoch loop disabled: the same initial
+    /// reserve, never revisited. The digest gate's baseline.
+    pub fn static_allocation(&self) -> Self {
+        ElasticPolicy {
+            epoch_ticks: 0,
+            ..self.clone()
+        }
+    }
+}
+
+/// What one elastic run produced — the chaos outcome's shape, with the
+/// repartition counters in place of the fault census.
+#[derive(Debug)]
+pub struct ElasticOutcome {
+    pub report: ServeReport,
+    /// The deterministic dispatch sequence — identical to the static
+    /// baseline's, because the epoch loop never touches scheduling.
+    pub dispatches: Vec<DispatchRec>,
+    /// `(tenant, request seq)` → [`outcome_digest`]. Informational:
+    /// promotions legitimately change cycle counters.
+    pub digests: BTreeMap<(usize, usize), u64>,
+    /// `(tenant, request seq)` → [`output_digest`]. The gate: must
+    /// equal the static-allocation baseline's exactly.
+    pub output_digests: BTreeMap<(usize, usize), u64>,
+    /// Repartition/promotion counters (also in `report.elastic`).
+    pub elastic: ElasticStats,
+    /// Tenants promoted up the route lattice at least once, sorted.
+    pub promoted_tenants: Vec<usize>,
+    /// The run's full event stream in canonical trace order.
+    pub events: Vec<TraceEvent>,
+    /// Per-tenant event tails for gate-failure dumps.
+    pub flight: FlightRecorder,
+}
+
+/// Observability context for the elastic runner — the `"elastic"`
+/// counter family plus the same buffer/flight/external fanout the
+/// chaos runner threads through its fault layer.
+struct ElasticRt {
+    counters: CounterSet,
+    buf: TraceBuf,
+    flight: FlightRecorder,
+    external: Option<Arc<TraceBuf>>,
+}
+
+impl ElasticRt {
+    fn new(n_tenants: usize, external: Option<Arc<TraceBuf>>) -> Self {
+        ElasticRt {
+            counters: CounterSet::new("elastic", &elastic_metric::NAMES),
+            buf: TraceBuf::new(TraceBuf::DEFAULT_CAPACITY),
+            flight: FlightRecorder::new(n_tenants, FlightRecorder::DEFAULT_TAIL),
+            external,
+        }
+    }
+
+    fn event(&mut self, ev: TraceEvent) {
+        self.buf.record(ev);
+        self.flight.record(ev);
+        if let Some(tr) = &self.external {
+            tr.record(ev);
+        }
+    }
+}
+
+/// One memoized elastic route: the graph it was computed for, the
+/// tenant that first dispatched it (promotion attribution), and the
+/// current route against the *elastic* effective topology — which the
+/// session cache, keyed to the immutable base topology, cannot carry.
+struct RouteEntry {
+    tenant: usize,
+    graph: Arc<Graph>,
+    route: RoutePlan,
+}
+
+/// Lattice height, for promotion detection: strictly higher is a
+/// strictly better residency.
+fn rank(route: &RoutePlan) -> u8 {
+    match route {
+        RoutePlan::Fallback => 0,
+        RoutePlan::Reconfig(_) => 1,
+        RoutePlan::Sharded(_) => 2,
+        RoutePlan::Placed => 3,
+    }
+}
+
+/// The reserve overlay keeping `floors[class].max(min_slots)` slots
+/// per class and `channels` channels effective, quarantining the rest
+/// of `base` — the elastic analogue of a fault-layer health view,
+/// consumed by the same [`FabricHealth::effective`] projection.
+fn reserve_overlay(
+    base: &FabricTopology,
+    floors: &BTreeMap<OpClass, usize>,
+    min_slots: usize,
+    channels: usize,
+) -> FabricHealth {
+    let mut h = FabricHealth::healthy();
+    for (&class, &have) in &base.slots {
+        let keep = floors.get(&class).copied().unwrap_or(0).max(min_slots).min(have);
+        if have > keep {
+            h.lost_slots.insert(class, have - keep);
+        }
+    }
+    h.lost_channels = base.channels.saturating_sub(channels);
+    h
+}
+
+/// The repartitioner's whole mutable state, owned by the dispatch sink.
+struct ElasticState {
+    policy: ElasticPolicy,
+    base: FabricTopology,
+    /// The current reserve, uniform across instances.
+    overlay: FabricHealth,
+    /// Requests dispatched per tenant in the current epoch window.
+    demand: Vec<u64>,
+    /// Per cache hint: the elastic route memo (see [`RouteEntry`]).
+    memo: BTreeMap<String, RouteEntry>,
+    /// Next epoch boundary (0 = epoch loop disabled).
+    next_epoch: u64,
+    /// Per instance: the last rolling-drain window `(from, until]` —
+    /// `until == from` means no drain has been scheduled yet.
+    drain_from: Vec<u64>,
+    drain_until: Vec<u64>,
+    promoted: BTreeSet<usize>,
+}
+
+impl ElasticState {
+    fn new(policy: &ElasticPolicy, base: FabricTopology, n_tenants: usize, pool: usize) -> Self {
+        let overlay = reserve_overlay(
+            &base,
+            &BTreeMap::new(),
+            policy.initial_slots,
+            policy.initial_channels,
+        );
+        ElasticState {
+            next_epoch: policy.epoch_ticks,
+            policy: policy.clone(),
+            base,
+            overlay,
+            demand: vec![0; n_tenants],
+            memo: BTreeMap::new(),
+            drain_from: vec![0; pool],
+            drain_until: vec![0; pool],
+            promoted: BTreeSet::new(),
+        }
+    }
+
+    /// Is instance `i` out of rotation at `tick` (mid-drain)?
+    fn draining(&self, i: usize, tick: u64) -> bool {
+        self.drain_from[i] < tick && tick <= self.drain_until[i]
+    }
+
+    /// The reserve this epoch's demand wants: the demand cover of
+    /// every hot tenant's memoized graphs un-reserved, everything
+    /// else back behind the initial floor.
+    fn wanted_overlay(&self) -> FabricHealth {
+        let hot_graphs: Vec<&Graph> = self
+            .memo
+            .values()
+            .filter(|e| self.demand[e.tenant] >= self.policy.hot_requests)
+            .map(|e| e.graph.as_ref())
+            .collect();
+        let (floors, channels) = FabricTopology::demand_cover(hot_graphs);
+        reserve_overlay(
+            &self.base,
+            &floors,
+            self.policy.initial_slots,
+            channels.max(self.policy.initial_channels),
+        )
+    }
+}
+
+/// Run `profile` to completion under `policy`. With
+/// `policy.epoch_ticks == 0` this is the static-allocation baseline:
+/// the initial reserve applies for the whole run and the epoch loop
+/// never fires. Serial dispatch only, like the chaos runner — the
+/// worker-invariance story is proven separately (DESIGN.md §10), and
+/// composing it with repartitioning would blur what a digest mismatch
+/// indicts.
+pub fn run_profile_elastic(
+    profile: &LoadProfile,
+    opts: &ServeOptions,
+    policy: &ElasticPolicy,
+) -> ElasticOutcome {
+    let wall0 = Instant::now();
+    let cache = SessionCache::with_stripes(
+        opts.topo.clone(),
+        opts.pool_size,
+        opts.cache_cap,
+        OptLevel::Default,
+        opts.cache_stripes,
+    );
+    let pool = FabricPool::new(opts.topo.clone(), opts.pool_size);
+    let mut el = ElasticState::new(policy, opts.topo.clone(), profile.tenants.len(), pool.size());
+    let mut rt = ElasticRt::new(profile.tenants.len(), opts.trace.clone());
+    let names: Vec<String> = profile.tenants.iter().map(|t| t.name.clone()).collect();
+    let mut collector = ServeCollector::new(&names);
+    let mut executed: Vec<ExecutedBatch> = Vec::new();
+    let (ticks, dispatches) =
+        drive_profile(profile, &opts.cfg, &mut collector, |tick, tenant, batch| {
+            if el.policy.epoch_ticks > 0 {
+                process_epochs(&mut el, tick, &pool, &cache, &mut rt);
+            }
+            el.demand[tenant] += batch.len() as u64;
+            for p in &batch {
+                rt.event(TraceEvent {
+                    kind: SpanKind::Admit,
+                    tenant: tenant as u32,
+                    seq: p.req.seq as u64,
+                    tick: p.admitted_tick,
+                    cycles: 0,
+                    engine: "sched",
+                    detail: 0,
+                });
+                rt.event(TraceEvent {
+                    kind: SpanKind::BatchForm,
+                    tenant: tenant as u32,
+                    seq: p.req.seq as u64,
+                    tick,
+                    cycles: 0,
+                    engine: "sched",
+                    detail: batch.len() as u64,
+                });
+            }
+            executed.push(exec_one_elastic(
+                &cache, &pool, &mut el, tick, tenant, &batch, &mut rt,
+            ));
+        });
+    // Record phase: identical bookkeeping to the chaos runner, plus
+    // the outputs-only digest map the gate compares.
+    let mut digests = BTreeMap::new();
+    let mut output_digests = BTreeMap::new();
+    let mut busy_ns = 0u64;
+    let mut tokens_out = 0u64;
+    let mut seen_hints: BTreeSet<&str> = BTreeSet::new();
+    for eb in &executed {
+        let (seq0, _, _) = eb.items[0];
+        let cold = seen_hints.insert(eb.hint.as_str());
+        rt.event(TraceEvent {
+            kind: SpanKind::RouteSelect,
+            tenant: eb.tenant as u32,
+            seq: seq0 as u64,
+            tick: eb.tick,
+            cycles: 0,
+            engine: eb.result.engine,
+            detail: eb.items.len() as u64,
+        });
+        if cold {
+            for kind in [SpanKind::Place, SpanKind::Compile] {
+                rt.event(TraceEvent {
+                    kind,
+                    tenant: eb.tenant as u32,
+                    seq: seq0 as u64,
+                    tick: eb.tick,
+                    cycles: 0,
+                    engine: eb.result.engine,
+                    detail: 0,
+                });
+            }
+        }
+        busy_ns += eb.exec_ns;
+        collector.batch(eb.tenant, eb.result.engine, eb.items.len());
+        collector.lane_scalar_reruns(eb.result.lane_scalar_reruns);
+        for ((item, out), verified) in eb
+            .items
+            .iter()
+            .zip(&eb.result.outcomes)
+            .zip(&eb.result.verified)
+        {
+            let (seq, wait, latency) = *item;
+            rt.event(TraceEvent {
+                kind: SpanKind::Execute,
+                tenant: eb.tenant as u32,
+                seq: seq as u64,
+                tick: eb.tick,
+                cycles: out.cycles,
+                engine: eb.result.engine,
+                detail: 0,
+            });
+            collector.completed(eb.tenant, *verified, latency, wait, out.cycles);
+            tokens_out += out.outputs.values().map(|s| s.len() as u64).sum::<u64>();
+            digests.insert((eb.tenant, seq), outcome_digest(out));
+            output_digests.insert((eb.tenant, seq), output_digest(out));
+        }
+    }
+    let elastic = ElasticStats::from_counters(&rt.counters);
+    let mut report = collector.finish(&cache, ticks);
+    report.workers = 1;
+    report.wall_ns = wall0.elapsed().as_nanos() as u64;
+    report.busy_ns = busy_ns;
+    report.tokens_out = tokens_out;
+    report.elastic = Some(elastic);
+    ElasticOutcome {
+        report,
+        dispatches,
+        digests,
+        output_digests,
+        elastic,
+        promoted_tenants: el.promoted.iter().copied().collect(),
+        events: rt.buf.drain_sorted(),
+        flight: rt.flight,
+    }
+}
+
+/// Fold every epoch boundary `<= tick` that has not fired yet: demand
+/// snapshot, reserve recomputation, and — when the wanted reserve
+/// differs — the rolling repartition plus promotion sweep. Boundaries
+/// are processed lazily at dispatch time (the sink only runs when a
+/// batch dispatches), but always *at the boundary's own tick values*,
+/// so the schedule of drains and promotions is a pure function of the
+/// dispatch stream, exactly like the chaos runner's event cursor.
+fn process_epochs(
+    el: &mut ElasticState,
+    tick: u64,
+    pool: &FabricPool,
+    cache: &SessionCache,
+    rt: &mut ElasticRt,
+) {
+    while el.next_epoch <= tick {
+        let e = el.next_epoch;
+        el.next_epoch += el.policy.epoch_ticks;
+        rt.counters.incr(elastic_metric::EPOCHS);
+        let want = el.wanted_overlay();
+        if want != el.overlay {
+            rt.counters.incr(elastic_metric::REPARTITIONS);
+            // Rolling drain: one instance at a time leaves the
+            // rotation, swaps to the new effective view, and is
+            // readmitted one drain window later.
+            for i in 0..pool.size() {
+                let from = e + i as u64 * el.policy.drain_ticks;
+                el.drain_from[i] = from;
+                el.drain_until[i] = from + el.policy.drain_ticks;
+                rt.counters.incr(elastic_metric::DRAINS);
+                rt.counters.incr(elastic_metric::RESTORES);
+                rt.event(TraceEvent {
+                    kind: SpanKind::Repartition,
+                    tenant: TraceEvent::NO_TENANT,
+                    seq: 0,
+                    tick: el.drain_until[i],
+                    cycles: 0,
+                    engine: "elastic",
+                    detail: i as u64,
+                });
+            }
+            el.overlay = want;
+            // Promotion sweep: every memoized route is recomputed
+            // against the retopologized fabric. Climbing the lattice
+            // is a promotion — the tenant's warm entry is dropped with
+            // a *targeted* invalidation so only it pays a re-warm;
+            // descending (a cooled tenant's reserve reclaimed) just
+            // updates the memo.
+            let eff = el.overlay.effective(&el.base);
+            for (hint, entry) in el.memo.iter_mut() {
+                let re = route_graph(entry.graph.as_ref(), &eff, pool.size());
+                if rank(&re) > rank(&entry.route) {
+                    rt.counters.incr(elastic_metric::PROMOTIONS);
+                    el.promoted.insert(entry.tenant);
+                    rt.event(TraceEvent {
+                        kind: SpanKind::Promote,
+                        tenant: entry.tenant as u32,
+                        seq: 0,
+                        tick: e,
+                        cycles: 0,
+                        engine: re.name(),
+                        detail: el.demand[entry.tenant],
+                    });
+                    if cache.invalidate_hint(hint) {
+                        rt.counters.incr(elastic_metric::TARGETED_INVALIDATIONS);
+                    }
+                }
+                entry.route = re;
+            }
+        }
+        el.demand.fill(0);
+    }
+}
+
+/// [`super::sched::exec_one`] with the elastic layer underneath:
+/// routes around draining instances, serves on the memoized elastic
+/// route, drains resident stream sessions through the checkpoint wire
+/// format, and charges drain stalls to the batch's queue-wait ticks.
+#[allow(clippy::too_many_arguments)]
+fn exec_one_elastic(
+    cache: &SessionCache,
+    pool: &FabricPool,
+    el: &mut ElasticState,
+    tick: u64,
+    tenant: usize,
+    batch: &[Pending],
+    rt: &mut ElasticRt,
+) -> ExecutedBatch {
+    let reqs: Vec<ServeRequest> = batch.iter().map(|p| p.req.clone()).collect();
+    let t0 = Instant::now();
+    let (result, extra_wait) = execute_batch_elastic(cache, pool, el, tick, &reqs, rt);
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+    let items = batch
+        .iter()
+        .map(|p| {
+            (
+                p.req.seq,
+                tick.saturating_sub(p.admitted_tick) + extra_wait,
+                p.submitted.elapsed().as_nanos() as u64,
+            )
+        })
+        .collect();
+    ExecutedBatch {
+        tenant,
+        tick,
+        hint: batch[0].hint.clone(),
+        result,
+        items,
+        exec_ns,
+    }
+}
+
+/// Execute one same-graph batch under the elastic overlay. Returns the
+/// batch result plus the virtual-tick drain delay (0 when no drain
+/// interfered). Routes come from the elastic memo — the session
+/// cache's routes are computed against the immutable base topology,
+/// so the memo is what tracks the repartitioned world; the cache still
+/// supplies the warm graph/program state.
+fn execute_batch_elastic(
+    cache: &SessionCache,
+    pool: &FabricPool,
+    el: &mut ElasticState,
+    tick: u64,
+    reqs: &[ServeRequest],
+    rt: &mut ElasticRt,
+) -> (BatchResult, u64) {
+    assert!(!reqs.is_empty(), "empty batch");
+    let hint = reqs[0].cache_hint();
+    let (tenant, seq0) = (reqs[0].tenant, reqs[0].seq as u64);
+    let (state, cache_hit) = cache.warm_keyed(&hint, || loadgen::build_graph(&reqs[0]));
+    let items: Vec<WorkItem> = reqs.iter().map(loadgen::work_item).collect();
+    let cfgs = batch_configs(&items);
+    let g = state.graph.as_ref();
+
+    // Memoize the elastic route on first sight of this graph, against
+    // the *current* effective topology.
+    let eff = el.overlay.effective(&el.base);
+    let route = el
+        .memo
+        .entry(hint)
+        .or_insert_with(|| RouteEntry {
+            tenant,
+            graph: Arc::clone(&state.graph),
+            route: route_graph(g, &eff, pool.size()),
+        })
+        .route
+        .clone();
+
+    // Quarantine/readmit instances according to the rolling drain
+    // schedule, then route around whatever is mid-drain. With the
+    // whole pool draining at once (pool of 1), the batch waits for the
+    // earliest readmission — charged explicitly, like a chaos retry.
+    for i in 0..pool.size() {
+        pool.set_down(i, el.draining(i, tick));
+    }
+    let mut extra_wait = 0u64;
+    let instance = match pool.route_healthy() {
+        Some(i) => i,
+        None => {
+            let i = (0..pool.size())
+                .min_by_key(|&i| el.drain_until[i])
+                .expect("pool has at least one instance");
+            extra_wait = (el.drain_until[i] + 1).saturating_sub(tick);
+            rt.counters
+                .add(elastic_metric::DELAYED_WAVES, reqs.len() as u64);
+            i
+        }
+    };
+
+    let engine = choose_engine_routed(&route, state.overlap_safe, reqs.len());
+    let waves_resident = cfgs.len() >= 2;
+    let mut lane_scalar_reruns = 0u64;
+    let outcomes: Vec<SimOutcome> = match (engine, &route) {
+        (EngineChoice::Streamed, _) => {
+            let waves: Vec<WaveInput> = items.iter().map(|it| it.inject.clone()).collect();
+            let budget: u64 = cfgs.iter().map(|c| c.max_cycles).sum();
+            // The batch is resident on `instance` over (T, T + waves].
+            // A drain window opening inside that residency lands
+            // mid-wave: checkpoint, hold through the drain, restore on
+            // the readmitted instance.
+            let horizon = tick + reqs.len() as u64;
+            let drains_mid = el.drain_until[instance] > el.drain_from[instance]
+                && el.drain_from[instance] >= tick
+                && el.drain_from[instance] < horizon;
+            if drains_mid {
+                rt.event(TraceEvent {
+                    kind: SpanKind::Migrate,
+                    tenant: tenant as u32,
+                    seq: seq0,
+                    tick,
+                    cycles: 0,
+                    engine: "stream",
+                    detail: instance as u64,
+                });
+                rt.counters
+                    .add(elastic_metric::DELAYED_WAVES, reqs.len() as u64);
+                extra_wait = extra_wait.max(el.policy.drain_ticks);
+                run_streamed_drained(g, &waves, budget, rt)
+            } else {
+                run_stream_prevalidated(g, &waves, budget, WaveMode::Pipelined).0
+            }
+        }
+        (EngineChoice::Lanes, _) => {
+            let (outs, stats) = run_batch_lanes_prog(g, &state.program, &cfgs);
+            lane_scalar_reruns = stats.scalar_reruns as u64;
+            outs
+        }
+        (EngineChoice::Sharded, RoutePlan::Sharded(p)) => {
+            run_batch_sharded(p, &cfgs, waves_resident)
+        }
+        (EngineChoice::Reconfig, RoutePlan::Reconfig(p)) => {
+            run_batch_reconfig(p, pool.topology(), &cfgs, waves_resident)
+        }
+        (EngineChoice::Fallback, _) => run_batch_native(g, &cfgs),
+        _ => unreachable!("engine choice always follows the memoized route"),
+    };
+    let verified = verify_outcomes(g, &items, &cfgs, &outcomes);
+    (
+        BatchResult {
+            engine: engine.name(),
+            cache_hit,
+            lane_scalar_reruns,
+            outcomes,
+            verified,
+        },
+        extra_wait,
+    )
+}
+
+/// Drain a streamed batch through the checkpoint wire format: run the
+/// prefix on the instance being drained, snapshot, serialize to bytes,
+/// decode, restore on the readmitted instance, finish. Identical
+/// machinery to the chaos tier's outage migration
+/// ([`super::chaos`]) — [`StreamSession::run`] budgets *cumulative*
+/// rounds, so the drained session produces byte-identical per-wave
+/// outcomes to an undrained run.
+fn run_streamed_drained(
+    g: &Graph,
+    waves: &[WaveInput],
+    budget: u64,
+    rt: &mut ElasticRt,
+) -> Vec<SimOutcome> {
+    // Admission mirrors `run_stream_prevalidated`: pipelined first,
+    // whole-batch demotion to a fresh serialized session if any wave
+    // is rejected (mixed admission would reorder waves).
+    let mut session = StreamSession::with_mode(g, WaveMode::Pipelined);
+    if waves.iter().any(|w| session.admit(w).is_err()) {
+        session = StreamSession::with_mode(g, WaveMode::Serialized);
+        for w in waves {
+            session.admit(w).expect("serialized admission is total");
+        }
+    }
+    // A couple of prefix rounds so the drain genuinely lands with
+    // tokens in flight; `run` caps cumulative rounds, so the restored
+    // session still observes the one true budget.
+    session.run(budget.clamp(1, 2));
+    let image = session.snapshot().to_bytes();
+    drop(session); // the old partition is gone; only the image survives
+    let ck = StreamCheckpoint::from_bytes(&image).expect("self-produced checkpoint image decodes");
+    rt.counters
+        .add(elastic_metric::MIGRATED_WAVES, ck.waves_in_flight() as u64);
+    let mut resumed =
+        StreamSession::restore(g, &ck).expect("checkpoint restores onto the same graph content");
+    resumed.run(budget);
+    (0..resumed.n_waves()).map(|w| resumed.wave_outcome(w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{build, BenchId};
+    use crate::serve::loadgen::{LoadProfile, TenantSpec, WorkKind};
+    use crate::serve::{run_profile, Arrival, ServeCfg};
+
+    fn opts() -> ServeOptions {
+        ServeOptions::default()
+    }
+
+    #[test]
+    fn unreserved_static_policy_matches_the_plain_serial_runner() {
+        // With the whole base topology exposed and the epoch loop off,
+        // the elastic runner IS run_profile's serial path: same
+        // dispatch schedule, same full digests (counters included),
+        // all-zero elastic counters.
+        let p = loadgen::fairness_profile(2, 6, 11);
+        let base = run_profile(&p, &opts());
+        let el = run_profile_elastic(&p, &opts(), &ElasticPolicy::unreserved());
+        assert_eq!(el.dispatches, base.dispatches);
+        assert_eq!(el.digests, base.digests);
+        assert_eq!(el.elastic, ElasticStats::default());
+        assert_eq!(el.report.global.lost(), 0);
+        assert!(el.promoted_tenants.is_empty());
+        assert_eq!(
+            el.report.elastic,
+            Some(ElasticStats::default()),
+            "an elastic run always reports its counters, even all-zero"
+        );
+    }
+
+    #[test]
+    fn scarce_start_promotes_the_hot_tenant_with_baseline_outputs() {
+        // Pool of 1, everything reserved at start: every batch opens on
+        // the fallback engine. The heavy all-SAXPY tenant (weight 4,
+        // window 8, max_batch 4) dispatches 12 requests by the first
+        // epoch boundary (tick 4) — hot — so the boundary un-reserves
+        // the SAXPY demand cover, promotes the tenant fallback→placed
+        // with a targeted invalidation, and starts the rolling drain of
+        // instance 0 over (4, 5]. The promoted batch dispatched at tick
+        // 4 itself goes streamed with that drain inside its residency,
+        // so it is checkpoint-drained and restored. The light tenant
+        // never crosses the hot threshold and stays where it started.
+        let p = LoadProfile {
+            tenants: vec![
+                TenantSpec {
+                    name: "heavy".to_string(),
+                    weight: 4,
+                    quota: 64,
+                    window: 8,
+                    mix: vec![WorkKind::Saxpy],
+                    requests: 24,
+                },
+                TenantSpec {
+                    name: "light".to_string(),
+                    weight: 1,
+                    quota: 16,
+                    window: 2,
+                    mix: vec![WorkKind::Bench(BenchId::Fibonacci)],
+                    requests: 6,
+                },
+            ],
+            arrival: Arrival::Closed,
+            n: 6,
+            seed: 3,
+        };
+        let o = ServeOptions {
+            pool_size: 1,
+            cfg: ServeCfg {
+                max_batch: 4,
+                ..Default::default()
+            },
+            ..opts()
+        };
+        let policy = ElasticPolicy {
+            initial_slots: 0,
+            initial_channels: 0,
+            epoch_ticks: 4,
+            drain_ticks: 1,
+            hot_requests: 6,
+        };
+        let stat = run_profile_elastic(&p, &o, &policy.static_allocation());
+        let el = run_profile_elastic(&p, &o, &policy);
+        // The static baseline never repartitions anything.
+        assert_eq!(stat.elastic, ElasticStats::default());
+        assert!(stat.promoted_tenants.is_empty());
+        // The elastic run did the whole dance...
+        assert!(el.elastic.epochs >= 2, "{:?}", el.elastic);
+        assert!(el.elastic.repartitions >= 1, "{:?}", el.elastic);
+        assert!(el.elastic.promotions >= 1, "{:?}", el.elastic);
+        assert_eq!(el.elastic.drains, el.elastic.restores);
+        assert!(el.elastic.drains >= 1, "{:?}", el.elastic);
+        assert!(el.elastic.migrated_waves >= 1, "{:?}", el.elastic);
+        assert!(el.elastic.delayed_waves >= 1, "{:?}", el.elastic);
+        assert!(el.elastic.targeted_invalidations >= 1, "{:?}", el.elastic);
+        assert_eq!(el.promoted_tenants, vec![0], "only the hot tenant promotes");
+        // ...and none of it is visible in the results: same dispatch
+        // schedule, zero lost, exact accounting, byte-identical output
+        // digests against the static-allocation baseline.
+        assert_eq!(el.dispatches, stat.dispatches);
+        assert_eq!(el.report.global.lost(), 0);
+        let g = &el.report.global;
+        assert_eq!(g.completed + g.shed(), g.submitted);
+        assert_eq!(el.output_digests, stat.output_digests);
+        // The promoted tenant genuinely served on a better engine.
+        assert!(
+            el.report.global.engine_requests.contains_key("streamed")
+                || el.report.global.engine_requests.contains_key("lanes"),
+            "{:?}",
+            el.report.global.engine_requests
+        );
+        assert!(
+            stat.report.global.engine_requests.keys().all(|&e| e == "fallback"),
+            "{:?}",
+            stat.report.global.engine_requests
+        );
+        // The timeline carries the repartition story.
+        assert!(el.events.iter().any(|e| e.kind == SpanKind::Repartition));
+        assert!(el.events.iter().any(|e| e.kind == SpanKind::Promote));
+        assert!(el.events.iter().any(|e| e.kind == SpanKind::Migrate));
+        assert!(stat.events.iter().all(|e| !matches!(
+            e.kind,
+            SpanKind::Repartition | SpanKind::Promote | SpanKind::Migrate
+        )));
+    }
+
+    #[test]
+    fn wanted_overlay_tracks_hot_demand_and_reclaims_when_cold() {
+        // Pure policy check, no execution: a hot tenant's graph demand
+        // is un-reserved; a cold epoch reclaims back to the initial
+        // floor.
+        let base = FabricTopology::serving();
+        let policy = ElasticPolicy {
+            initial_slots: 0,
+            initial_channels: 0,
+            epoch_ticks: 4,
+            drain_ticks: 1,
+            hot_requests: 4,
+        };
+        let mut el = ElasticState::new(&policy, base.clone(), 1, 1);
+        let initial = el.overlay.clone();
+        // Everything reserved at start: zero effective capacity.
+        assert_eq!(el.overlay.effective(&base).total_slots(), 0);
+        assert_eq!(el.overlay.effective(&base).channels, 0);
+        let g = Arc::new(build(BenchId::DotProd));
+        el.memo.insert(
+            "bench:dot-product".to_string(),
+            RouteEntry {
+                tenant: 0,
+                graph: Arc::clone(&g),
+                route: RoutePlan::Fallback,
+            },
+        );
+        // Cold tenant: the wanted reserve is the initial one.
+        el.demand[0] = policy.hot_requests - 1;
+        assert_eq!(el.wanted_overlay(), initial);
+        // Hot tenant: the effective topology now covers its graph.
+        el.demand[0] = policy.hot_requests;
+        let want = el.wanted_overlay();
+        assert_ne!(want, initial);
+        assert!(want.effective(&base).fits(&g), "hot demand un-reserved");
+        // And back: demand cools, the reserve reclaims.
+        el.demand[0] = 0;
+        assert_eq!(el.wanted_overlay(), initial);
+    }
+}

@@ -52,14 +52,28 @@
 //! schedule. The gate: zero lost requests and byte-identical output
 //! digests against the fault-free baseline (`CHAOS_8.json`).
 //! DESIGN.md §11 states the fault model.
+//!
+//! **Elastic repartitioning (PR 10).** [`elastic`] starts the pool on
+//! a deliberately scarce slice of the fabric and reshapes it online:
+//! an epoch loop snapshots per-tenant demand from the dispatch stream,
+//! recomputes per-class slot floors, executes a *rolling* repartition
+//! (one instance at a time drained via [`crate::sim::StreamCheckpoint`],
+//! retopologized through a [`crate::fabric::FabricHealth`]-style
+//! reserve overlay, restored, readmitted), and promotes hot tenants
+//! whose graphs now fit up the route lattice with *targeted* session
+//! invalidation. The gate: zero lost requests and byte-identical
+//! output digests against the static-allocation baseline
+//! (`ELASTIC_10.json`). DESIGN.md §13 states the policy.
 
 pub mod chaos;
+pub mod elastic;
 pub mod loadgen;
 pub mod sched;
 pub mod session;
 pub mod stats;
 
 pub use chaos::{run_profile_chaos, ChaosOutcome};
+pub use elastic::{run_profile_elastic, ElasticOutcome, ElasticPolicy};
 pub use loadgen::{
     burst_series, fairness_profile, standard_profile, tenant_trace, Arrival, LoadProfile,
     ServeRequest, TenantSpec, WorkKind,
@@ -71,5 +85,6 @@ pub use sched::{
 };
 pub use session::{route_graph, RoutePlan, SessionCache, WarmState, DEFAULT_STRIPES};
 pub use stats::{
-    chaos_metric, ChaosStats, Histogram, ServeCollector, ServeReport, ShedReason, TenantStats,
+    chaos_metric, elastic_metric, ChaosStats, ElasticStats, Histogram, ServeCollector,
+    ServeReport, ShedReason, TenantStats,
 };

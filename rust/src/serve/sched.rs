@@ -76,6 +76,20 @@ impl Default for ServeCfg {
     }
 }
 
+/// Clamp a [`ServeCfg`] into the scheduler's legal domain, mirroring
+/// the tenant-spec clamps (`weight.max(1)`, `quota.max(1)`): a
+/// zero-capacity queue would shed everything, a zero `max_batch` used
+/// to slip through `dispatchable`'s `run >= max_batch` with `run = 1`
+/// and silently serve singletons, and a near-`u64::MAX` deadline could
+/// overflow the `admitted_tick + deadline_ticks` due test. Degenerate
+/// configs now mean what they look like: the smallest sane value.
+fn sanitize_cfg(mut cfg: ServeCfg) -> ServeCfg {
+    cfg.queue_cap = cfg.queue_cap.max(1);
+    cfg.max_batch = cfg.max_batch.max(1);
+    cfg.deadline_ticks = cfg.deadline_ticks.min(u64::MAX / 2);
+    cfg
+}
+
 /// The admission verdict — always explicit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Admission {
@@ -133,7 +147,7 @@ impl Scheduler {
             quotas: tenants.iter().map(|t| t.quota.max(1)).collect(),
             queues: tenants.iter().map(|_| VecDeque::new()).collect(),
             queued_total: 0,
-            cfg,
+            cfg: sanitize_cfg(cfg),
         }
     }
 
@@ -189,7 +203,7 @@ impl Scheduler {
         while run < cap && q[run].hint == head.hint {
             run += 1;
         }
-        let due = tick >= head.admitted_tick + self.cfg.deadline_ticks;
+        let due = tick >= head.admitted_tick.saturating_add(self.cfg.deadline_ticks);
         if run >= self.cfg.max_batch || due || drain {
             Some(run)
         } else {
@@ -884,6 +898,38 @@ mod tests {
         assert!(batch.iter().all(|p| p.hint == "bench:fibonacci"));
         // The max request remains; drain forces it out regardless.
         let (_, batch) = s.next_batch(4, true).expect("drain");
+        assert_eq!(batch.len(), 1);
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn degenerate_cfg_is_clamped_at_construction() {
+        // Regression: `ServeCfg { max_batch: 0 }` used to slip through
+        // `dispatchable` — `run >= max_batch` holds for `run = 1` — and
+        // dispatch singleton batches from a config that nominally
+        // forbids batching at all. The scheduler now clamps the config
+        // to its smallest sane values at construction, so a zero
+        // max_batch means "batches of 1", explicitly.
+        let tenants = [tenant("a", 1, 16)];
+        let cfg = ServeCfg {
+            queue_cap: 0,
+            max_batch: 0,
+            deadline_ticks: u64::MAX,
+        };
+        let mut s = Scheduler::new(&tenants, cfg);
+        let k = WorkKind::Bench(BenchId::Fibonacci);
+        // queue_cap clamped to 1: the first request admits...
+        assert_eq!(s.admit(1, req(0, 0, k)), Ok(Admission::Admitted));
+        // ...and the second sheds explicitly instead of both shedding.
+        assert_eq!(
+            s.admit(1, req(0, 1, k)),
+            Ok(Admission::Shed(ShedReason::QueueFull))
+        );
+        // max_batch clamped to 1: a run of 1 IS a full batch, so it
+        // dispatches immediately — the u64::MAX deadline (clamped, and
+        // overflow-safe either way) never forces or blocks anything.
+        let (t, batch) = s.next_batch(1, false).expect("full batch of 1");
+        assert_eq!(t, 0);
         assert_eq!(batch.len(), 1);
         assert!(s.idle());
     }

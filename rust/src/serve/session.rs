@@ -278,6 +278,32 @@ impl SessionCache {
         purged
     }
 
+    /// Drop the single warm entry (and hint) behind `hint`, leaving
+    /// every other tenant's warm state untouched — the *targeted*
+    /// counterpart of [`SessionCache::invalidate_routes`]. The elastic
+    /// repartitioner uses this when a promotion changes exactly one
+    /// tenant's route: purging the whole cache would charge every
+    /// unaffected tenant a rebuild for one tenant's promotion.
+    ///
+    /// Lock order mirrors [`SessionCache::warm_keyed`]: the hint entry
+    /// is read and removed under its stripe lock, which is released
+    /// before the segment lock is taken — never both at once. Returns
+    /// `true` when a warm entry was actually purged (a dangling or
+    /// unknown hint returns `false`).
+    pub fn invalidate_hint(&self, hint: &str) -> bool {
+        let hi = self.hint_stripe(hint);
+        let key = self.hints[hi].lock().unwrap().remove(hint);
+        let Some(key) = key else {
+            return false;
+        };
+        let mut seg = self.segments[self.segment_of(key)].lock().unwrap();
+        let purged = seg.by_fp.remove(&key).is_some();
+        if let Some(i) = seg.lru.iter().position(|&k| k == key) {
+            seg.lru.remove(i);
+        }
+        purged
+    }
+
     /// Distinct graphs currently warm (summed over segments).
     pub fn len(&self) -> usize {
         self.segments
@@ -622,6 +648,32 @@ mod tests {
         });
         assert!(rebuilt && !hit);
         assert_eq!(again.fingerprint, warm.fingerprint);
+    }
+
+    #[test]
+    fn targeted_invalidation_purges_one_hint_and_spares_the_rest() {
+        let c = cache(8);
+        let (fib, _) = c.warm_keyed("bench:fibonacci", || bench_defs::build(BenchId::Fibonacci));
+        let (max, _) = c.warm_keyed("bench:max", || bench_defs::build(BenchId::Max));
+        assert_eq!(c.len(), 2);
+        assert!(c.invalidate_hint("bench:fibonacci"));
+        assert_eq!(c.len(), 1, "only the named tenant's entry is purged");
+        // The spared tenant still hits warm...
+        let (max2, hit) = c.warm_keyed("bench:max", || unreachable!("max must stay warm"));
+        assert!(hit);
+        assert!(Arc::ptr_eq(&max, &max2));
+        // ...while the invalidated one rebuilds from cold.
+        let mut rebuilt = false;
+        let (fib2, hit) = c.warm_keyed("bench:fibonacci", || {
+            rebuilt = true;
+            bench_defs::build(BenchId::Fibonacci)
+        });
+        assert!(rebuilt && !hit);
+        assert_eq!(fib2.fingerprint, fib.fingerprint);
+        // Unknown and already-purged hints are no-ops.
+        assert!(!c.invalidate_hint("bench:nope"));
+        // Targeted purges are not whole-cache invalidations.
+        assert_eq!(c.invalidations(), 0);
     }
 
     #[test]

@@ -244,6 +244,76 @@ impl ChaosStats {
     }
 }
 
+/// Rolling-repartition counters for one elastic run
+/// ([`crate::serve::elastic`]). All zeros when the epoch loop never
+/// fired (static allocation).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ElasticStats {
+    /// Repartition epochs evaluated (demand snapshots taken).
+    pub epochs: u64,
+    /// Epochs whose demand snapshot changed the slot plan and triggered
+    /// a rolling repartition.
+    pub repartitions: u64,
+    /// Instances drained (checkpoint taken) during rolling repartitions.
+    pub drains: u64,
+    /// Instances restored and readmitted after retopologizing.
+    pub restores: u64,
+    /// Waves alive inside a drain checkpoint — resident work carried
+    /// across the repartition instead of being lost.
+    pub migrated_waves: u64,
+    /// Batches whose dispatch landed on an instance mid-drain and were
+    /// charged the drain window as extra queue wait.
+    pub delayed_waves: u64,
+    /// Tenants promoted up the route lattice (fallback/sharded →
+    /// placed) after a repartition made their graphs fit.
+    pub promotions: u64,
+    /// Warm routes invalidated *individually* for promoted tenants —
+    /// targeted, never the wholesale purge the chaos path uses.
+    pub targeted_invalidations: u64,
+}
+
+/// Counter indices for the elastic family's [`crate::obs::CounterSet`]
+/// — the repartitioner increments these, and
+/// [`ElasticStats::from_counters`] builds the public report view.
+pub mod elastic_metric {
+    pub const EPOCHS: usize = 0;
+    pub const REPARTITIONS: usize = 1;
+    pub const DRAINS: usize = 2;
+    pub const RESTORES: usize = 3;
+    pub const MIGRATED_WAVES: usize = 4;
+    pub const DELAYED_WAVES: usize = 5;
+    pub const PROMOTIONS: usize = 6;
+    pub const TARGETED_INVALIDATIONS: usize = 7;
+
+    pub const NAMES: [&str; 8] = [
+        "epochs",
+        "repartitions",
+        "drains",
+        "restores",
+        "migrated_waves",
+        "delayed_waves",
+        "promotions",
+        "targeted_invalidations",
+    ];
+}
+
+impl ElasticStats {
+    /// Thin view over an `"elastic"` [`crate::obs::CounterSet`] indexed
+    /// by [`elastic_metric`].
+    pub fn from_counters(c: &crate::obs::CounterSet) -> ElasticStats {
+        ElasticStats {
+            epochs: c.get(elastic_metric::EPOCHS),
+            repartitions: c.get(elastic_metric::REPARTITIONS),
+            drains: c.get(elastic_metric::DRAINS),
+            restores: c.get(elastic_metric::RESTORES),
+            migrated_waves: c.get(elastic_metric::MIGRATED_WAVES),
+            delayed_waves: c.get(elastic_metric::DELAYED_WAVES),
+            promotions: c.get(elastic_metric::PROMOTIONS),
+            targeted_invalidations: c.get(elastic_metric::TARGETED_INVALIDATIONS),
+        }
+    }
+}
+
 /// Why a request was shed at admission (always explicit — the
 /// scheduler never silently drops).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -332,6 +402,10 @@ pub struct ServeReport {
     /// Fault-injection counters when the profile ran under a chaos
     /// schedule ([`crate::serve::chaos`]); `None` on fault-free runs.
     pub chaos: Option<ChaosStats>,
+    /// Rolling-repartition counters when the profile ran under the
+    /// elastic epoch loop ([`crate::serve::elastic`]); `None` on
+    /// statically-allocated runs.
+    pub elastic: Option<ElasticStats>,
 }
 
 impl ServeReport {
@@ -454,6 +528,7 @@ impl ServeCollector {
             steals: 0,
             tokens_out: 0,
             chaos: None,
+            elastic: None,
         }
     }
 }
@@ -620,6 +695,30 @@ mod tests {
         let last = chaos_metric::NAMES[chaos_metric::ROUTE_INVALIDATIONS];
         assert_eq!(last, "route_invalidations");
         assert_eq!(c.snapshot().get("retries"), 5);
+    }
+
+    #[test]
+    fn elastic_stats_is_a_view_over_the_elastic_counter_family() {
+        let c = crate::obs::CounterSet::new("elastic", &elastic_metric::NAMES);
+        c.add(elastic_metric::EPOCHS, 4);
+        c.incr(elastic_metric::REPARTITIONS);
+        c.add(elastic_metric::DRAINS, 2);
+        c.add(elastic_metric::RESTORES, 2);
+        c.add(elastic_metric::PROMOTIONS, 1);
+        c.add(elastic_metric::TARGETED_INVALIDATIONS, 1);
+        let s = ElasticStats::from_counters(&c);
+        assert_eq!(s.epochs, 4);
+        assert_eq!(s.repartitions, 1);
+        assert_eq!(s.drains, 2);
+        assert_eq!(s.restores, 2);
+        assert_eq!(s.promotions, 1);
+        assert_eq!(s.targeted_invalidations, 1);
+        assert_eq!(s.migrated_waves, 0);
+        assert_eq!(s.delayed_waves, 0);
+        // Index constants and export names stay aligned.
+        let last = elastic_metric::NAMES[elastic_metric::TARGETED_INVALIDATIONS];
+        assert_eq!(last, "targeted_invalidations");
+        assert_eq!(c.snapshot().get("epochs"), 4);
     }
 
     #[test]

@@ -127,6 +127,16 @@ pub struct StreamCheckpoint {
     pub stall: u32,
 }
 
+impl StreamCheckpoint {
+    /// Waves captured mid-flight — admitted but not yet done. This is
+    /// what a migration (chaos) or a rolling drain (elastic) actually
+    /// moves: finished waves ride along as recorded outputs, in-flight
+    /// waves resume token-for-token on the restored session.
+    pub fn waves_in_flight(&self) -> usize {
+        self.waves.iter().filter(|w| w.done.is_none()).count()
+    }
+}
+
 /// A [`TokenSim`](super::TokenSim) captured between steps.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TokenCheckpoint {

@@ -13,11 +13,12 @@
 //!   (migration, retry or lattice demotion) with output digests
 //!   byte-identical to the fault-free baseline.
 
-use dataflow_accel::fabric::FaultPlan;
+use dataflow_accel::dfg::OpClass;
+use dataflow_accel::fabric::{FaultEvent, FaultKind, FaultPlan};
 use dataflow_accel::report::ChaosGate;
 use dataflow_accel::serve::{
     burst_series, fairness_profile, run_profile, run_profile_chaos, tenant_trace, Arrival,
-    ServeOptions, ServeReport,
+    ServeCfg, ServeOptions, ServeReport,
 };
 
 fn assert_exact(label: &str, report: &ServeReport) {
@@ -106,6 +107,78 @@ fn chaos_accounting_and_digests_hold_across_arrival_modes() {
             "chaos {mode}: outputs diverged from the fault-free baseline"
         );
     }
+}
+
+/// Hand-built plan (PR 10 regression): slot and bus quarantines whose
+/// **repair overlaps a whole-instance outage window**, on a pool of
+/// ONE instance — there is nowhere to migrate, so every batch due
+/// inside the window must park on the retry schedule and drain after
+/// the repair. The window closes with a same-tick fault + wholesale
+/// `Repair` pair: the chronological replay fixed in this PR folds the
+/// co-scheduled faults first and the technician's repair last, so the
+/// tick-5 view is fully healthy. The pre-fix fold (push-order ties,
+/// outage-only probe) left the probe blind to the overlapping slot and
+/// bus state and re-dispatched into a degraded instance.
+#[test]
+fn repairs_overlapping_an_outage_window_on_one_instance_lose_nothing() {
+    let profile = fairness_profile(2, 5, 0x0B5E);
+    // Small batches spread the heavy tenant's dispatches across enough
+    // ticks that the outage window (3..5) actually catches traffic.
+    let opts = ServeOptions {
+        pool_size: 1,
+        cfg: ServeCfg { max_batch: 4, ..ServeCfg::default() },
+        ..ServeOptions::default()
+    };
+    let plan = FaultPlan::new(vec![
+        // Degrade in layers: slots, then buses, then the instance dark.
+        FaultEvent {
+            tick: 1,
+            instance: 0,
+            kind: FaultKind::SlotFail { class: OpClass::Alu2, count: 64 },
+        },
+        FaultEvent {
+            tick: 2,
+            instance: 0,
+            kind: FaultKind::BusFail { channels: 64 },
+        },
+        FaultEvent { tick: 3, instance: 0, kind: FaultKind::Outage },
+        // The window closes on a same-tick pile-up: two more faults and
+        // the wholesale repair, all at tick 5. Canonical order replays
+        // the faults first, the repair last.
+        FaultEvent {
+            tick: 5,
+            instance: 0,
+            kind: FaultKind::SlotFail { class: OpClass::Alu1, count: 64 },
+        },
+        FaultEvent {
+            tick: 5,
+            instance: 0,
+            kind: FaultKind::BusFail { channels: 64 },
+        },
+        FaultEvent { tick: 5, instance: 0, kind: FaultKind::Repair },
+    ]);
+    // The pure replay agrees with the schedule: degraded-but-up before
+    // the outage, dark inside it, fully healthy once the repair lands.
+    assert!(plan.healthy_at(2, 0));
+    assert!(plan.health_at(2, 0).is_degraded());
+    assert!(!plan.healthy_at(3, 0));
+    assert!(!plan.healthy_at(4, 0));
+    assert!(
+        plan.healthy_at(5, 0) && !plan.health_at(5, 0).is_degraded(),
+        "same-tick Repair must fold after the co-scheduled faults"
+    );
+    let c = plan.counts();
+    assert!(c.slot == 2 && c.bus == 2 && c.outage == 1 && c.repair == 1, "census: {c:?}");
+
+    let baseline = run_profile_chaos(&profile, &opts, &FaultPlan::empty());
+    let faulted = run_profile_chaos(&profile, &opts, &plan);
+    assert_exact("overlap-repair", &faulted.report);
+    assert_eq!(faulted.chaos.faults_injected(), 5, "every scheduled fault applied");
+    assert_eq!(faulted.chaos.repairs, 1);
+    assert_eq!(
+        faulted.output_digests, baseline.output_digests,
+        "outputs diverged from the fault-free baseline"
+    );
 }
 
 /// End-to-end chaos gate, exactly as `serve --chaos` evaluates it:

@@ -1684,3 +1684,105 @@ fn obs_determinism_prop_profiled_random_dfgs() {
         },
     );
 }
+
+/// Property (PR 10): elastic repartitioning is *invisible* in results —
+/// on seeded fairness profiles, the scarce-start elastic run serves the
+/// same dispatch schedule and byte-identical per-request outputs as its
+/// static-allocation twin, loses nothing, and accounts exactly. This is
+/// the `serve --elastic` gate as a seed-swept property (CI runs the
+/// `elastic_` prefix as a fixed-seed smoke subset).
+#[test]
+fn elastic_prop_digests_match_static_baseline_on_seeded_profiles() {
+    use dataflow_accel::serve::{
+        fairness_profile, run_profile_elastic, ElasticPolicy, ServeCfg, ServeOptions,
+    };
+    check(
+        "elastic(scarce) == elastic(static) on fairness profiles",
+        PropCfg::from_env(12, 0xE1A5_71C0),
+        |r: &mut Rng| {
+            let scale = 1 + r.below(3);
+            let n = 4 + r.below(4);
+            let seed = r.next_u64();
+            (scale, n, seed)
+        },
+        |&(scale, n, seed): &(usize, usize, u64)| {
+            let profile = fairness_profile(scale, n, seed);
+            // Small batches spread dispatches across epoch boundaries;
+            // default max_batch drains small profiles in one tick.
+            let opts = ServeOptions {
+                cfg: ServeCfg {
+                    max_batch: 4,
+                    ..ServeCfg::default()
+                },
+                ..ServeOptions::default()
+            };
+            let policy = ElasticPolicy::scarce();
+            let baseline = run_profile_elastic(&profile, &opts, &policy.static_allocation());
+            let elastic = run_profile_elastic(&profile, &opts, &policy);
+            if elastic.dispatches != baseline.dispatches {
+                return Err(format!(
+                    "seed {seed:#x}: dispatch schedule diverged under repartitioning"
+                ));
+            }
+            if elastic.output_digests != baseline.output_digests {
+                return Err(format!(
+                    "seed {seed:#x}: outputs diverged from the static baseline"
+                ));
+            }
+            let g = &elastic.report.global;
+            if g.lost() != 0 {
+                return Err(format!("seed {seed:#x}: lost {} request(s)", g.lost()));
+            }
+            if g.completed + g.shed() != g.submitted {
+                return Err(format!(
+                    "seed {seed:#x}: accounting {} + {} != {}",
+                    g.completed,
+                    g.shed(),
+                    g.submitted
+                ));
+            }
+            if baseline.elastic != Default::default() {
+                return Err(format!(
+                    "seed {seed:#x}: static twin ran the epoch loop: {:?}",
+                    baseline.elastic
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property (PR 10): with `epoch_ticks == 0` the elastic runner *is*
+/// the plain serial runner — same dispatches, same full per-request
+/// digests, zero elastic counters — and an unreserved overlay never
+/// delays a wave. Dispatch schedules never read execution results, so
+/// overlay bookkeeping cannot leak into what was served.
+#[test]
+fn elastic_unreserved_static_policy_is_the_identity_on_seeded_profiles() {
+    use dataflow_accel::serve::{
+        fairness_profile, run_profile, run_profile_elastic, ElasticPolicy, ServeOptions,
+    };
+    for seed in [3u64, 0xE1A5, 0xDEC0_DE10] {
+        let profile = fairness_profile(2, 5, seed);
+        let opts = ServeOptions::default();
+        let plain = run_profile(&profile, &opts);
+        let elastic = run_profile_elastic(&profile, &opts, &ElasticPolicy::unreserved());
+        assert_eq!(
+            elastic.dispatches, plain.dispatches,
+            "seed {seed:#x}: dispatch schedule diverged"
+        );
+        assert_eq!(
+            elastic.digests, plain.digests,
+            "seed {seed:#x}: outcome digests diverged from the plain runner"
+        );
+        assert_eq!(
+            elastic.elastic,
+            Default::default(),
+            "seed {seed:#x}: identity policy moved the fabric"
+        );
+        assert!(
+            elastic.promoted_tenants.is_empty(),
+            "seed {seed:#x}: identity policy promoted a tenant"
+        );
+    }
+}
